@@ -1,0 +1,6 @@
+# Make `python/` importable so `pytest python/tests/` works from the repo
+# root (the tests import `compile.*`).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,89 @@
+//! Count-sketch vs low-rank (Table 1 of the paper, made concrete):
+//! approximate the same signed, power-law auxiliary matrix with matched
+//! parameter budgets and compare reconstruction error and update cost.
+//!
+//! Run: `cargo run --release --example sketch_vs_lowrank`
+
+use csopt::optim::lowrank::{L2Rank1, Rank1Factors};
+use csopt::sketch::CountSketch;
+use csopt::util::rng::{Rng, Zipf};
+use csopt::util::timer::Timer;
+
+fn main() {
+    let (n, d) = (4096usize, 32usize);
+    let (v, w) = (3usize, (n + d) / 3); // budget-match the rank-1's n+d params
+    let mut rng = Rng::new(3);
+    let zipf = Zipf::new(n, 1.1);
+
+    let mut truth = vec![0.0f32; n * d];
+    let mut cs = CountSketch::new(v, w, d, 7);
+    let mut nmf = Rank1Factors::new(n, d);
+    let mut l2 = L2Rank1::new(n, d);
+    let gamma = 0.9f32;
+
+    let (mut t_cs, mut t_nmf, mut t_l2) = (0.0, 0.0, 0.0);
+    let steps = 120;
+    let k = 64;
+    for _t in 0..steps {
+        let mut ids = std::collections::HashSet::new();
+        while ids.len() < k {
+            ids.insert(zipf.sample(&mut rng) as u64);
+        }
+        let ids: Vec<u64> = ids.into_iter().collect();
+        let g: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // truth: momentum update on touched rows
+        for (ti, &id) in ids.iter().enumerate() {
+            let row = &mut truth[id as usize * d..(id as usize + 1) * d];
+            for i in 0..d {
+                row[i] = gamma * row[i] + g[ti * d + i];
+            }
+        }
+        // count-sketch (linear rewrite)
+        let timer = Timer::start();
+        let mut est = vec![0.0f32; k * d];
+        cs.query(&ids, &mut est);
+        let delta: Vec<f32> = est
+            .iter()
+            .zip(&g)
+            .map(|(m, gi)| (gamma - 1.0) * m + gi)
+            .collect();
+        cs.update(&ids, &delta);
+        t_cs += timer.secs();
+        // NMF factors
+        let timer = Timer::start();
+        nmf.track(&ids, &g, gamma);
+        t_nmf += timer.secs();
+        // ℓ2 rank-1 (the "extremely slow" baseline — full truncation)
+        let timer = Timer::start();
+        l2.apply(&ids, &g, gamma);
+        t_l2 += timer.secs();
+    }
+
+    let err = |est: &dyn Fn(u64, &mut [f32])| -> f64 {
+        let mut buf = vec![0.0f32; d];
+        let mut sum = 0.0f64;
+        for id in 0..n as u64 {
+            est(id, &mut buf);
+            let row = &truth[id as usize * d..(id as usize + 1) * d];
+            sum += buf.iter().zip(row).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>();
+        }
+        sum.sqrt()
+    };
+    let cs_err = err(&|id, buf| {
+        let mut out = vec![0.0f32; d];
+        cs.query(&[id], &mut out);
+        buf.copy_from_slice(&out);
+    });
+    let nmf_err = err(&|id, buf| nmf.estimate_row(id, buf));
+    let l2_err = err(&|id, buf| l2.estimate_row(id, buf));
+    let norm = truth.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+
+    println!("signed momentum matrix [{n}, {d}], ‖truth‖ = {norm:.1}");
+    println!("matched budgets: CS [{v},{w},{d}] vs rank-1 ({n}+{d} params)\n");
+    println!("{:<14} {:>12} {:>14}", "method", "ℓ2 error", "update time");
+    println!("{:<14} {:>12.2} {:>12.1} ms", "count-sketch", cs_err, t_cs * 1e3);
+    println!("{:<14} {:>12.2} {:>12.1} ms", "NMF rank-1", nmf_err, t_nmf * 1e3);
+    println!("{:<14} {:>12.2} {:>12.1} ms", "ℓ2 rank-1", l2_err, t_l2 * 1e3);
+    println!("\npaper's Table-1 trade-offs: CS handles signed data + sparse updates;");
+    println!("NMF cannot represent signs; exact rank-1 is orders of magnitude slower.");
+}

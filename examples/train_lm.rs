@@ -1,0 +1,64 @@
+//! End-to-end driver: trains the LSTM language model through the full
+//! three-layer stack — Rust coordinator → AOT XLA graph (Layer 2) with
+//! Pallas count-sketch kernels (Layer 1) — on a synthetic power-law
+//! corpus, logging the loss curve, and cross-checks the pure-Rust engine
+//! on the same data.
+//!
+//! Requires `make artifacts` for the XLA leg (falls back to rust-only
+//! with a warning if artifacts are missing).
+//!
+//! Run: `cargo run --release --example train_lm [-- --steps 150 --epochs 2]`
+
+use csopt::exp::common::{build_trainer, corpus_for};
+use csopt::metrics::CsvWriter;
+use csopt::optim::OptimKind;
+use csopt::train::trainer::OptChoice;
+use csopt::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let steps = args.get_parse("steps", 150usize)?;
+    let epochs = args.get_parse("epochs", 2usize)?;
+    let preset = args.get_or("preset", "tiny");
+
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let engines: Vec<&str> = if have_artifacts {
+        vec!["xla", "rust"]
+    } else {
+        eprintln!("warning: artifacts/ missing — running rust engine only");
+        vec!["rust"]
+    };
+
+    let mut csv = CsvWriter::create("results/train_lm_loss_curve.csv", &["engine", "step", "loss"])?;
+    for engine in engines {
+        // thread the engine choice through the shared builder
+        let mut eargs = args.clone();
+        eargs.options.insert("engine".into(), engine.into());
+        let emb_opt = if engine == "xla" { OptChoice::SketchXla } else { OptChoice::Sketch };
+        let mut tr = build_trainer(&preset, OptimKind::Adam, emb_opt, OptChoice::Dense, 1e-3, &eargs)?;
+        let p = tr.opts.preset;
+        println!("\n=== engine {engine}: preset {} (vocab {}, emb {}, hidden {}) ===",
+                 p.name, p.vocab, p.de, p.hd);
+        println!("{}", tr.memory_ledger().render());
+        let corpus = corpus_for(&p, steps + 8, 42);
+        let (train, valid, test) = corpus.split(0.08, 0.08);
+        for e in 1..=epochs {
+            let r = tr.train_epoch(train, steps);
+            for &(s, l) in &r.curve {
+                csv.row(&[&engine, &s, &format!("{l:.4}")])?;
+            }
+            let vppl = tr.eval_ppl(valid, 8);
+            println!(
+                "epoch {e}: mean loss {:.4} (ppl {:.1}), valid ppl {:.1}, {:.1} steps/s",
+                r.mean_loss,
+                r.train_ppl,
+                vppl,
+                r.steps as f64 / r.secs
+            );
+        }
+        println!("test ppl: {:.2}", tr.eval_ppl(test, 8));
+    }
+    csv.flush()?;
+    println!("\nloss curves written to results/train_lm_loss_curve.csv");
+    Ok(())
+}

@@ -1,0 +1,292 @@
+"""AOT lowering: JAX graphs → HLO text artifacts + manifest.json.
+
+Run once at build time (``make artifacts``).  Emits, per model preset:
+
+* ``<preset>.lm_step`` / ``<preset>.lm_eval``       (LM presets)
+* ``<preset>.mlp_step`` / ``<preset>.mlp_eval``     (classifier presets)
+* shared, shape-deduplicated optimizer-row graphs
+  ``opt.<algo>.k<k>.d<d>[.v<v>.w<w>]`` for every (layer × optimizer) the
+  preset's experiments need, and ``opt.<algo>_flat.p<P>`` for dense params,
+* ``smoke.axpy`` — a trivial graph pinning the runtime integration test.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+``artifacts/manifest.json`` records for every artifact the exact input /
+output names, dtypes and shapes (in call order), plus the preset hyper-
+parameters and the sketch hash seed, so the Rust runtime can validate its
+call sites at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Presets — mirrored into manifest.json for the Rust config system.
+# Scales are CPU-runnable stand-ins for the paper's datasets (DESIGN.md §4).
+# ---------------------------------------------------------------------------
+
+HYPER = {
+    "adam_beta1": 0.9,
+    "adam_beta2": 0.999,
+    "adam_eps": 1e-8,
+    "momentum_gamma": 0.9,
+    "adagrad_eps": 1e-10,
+    "hash_seed": 0x5EED,
+    "sketch_depth": 3,
+}
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def lm_preset(name, vocab, de, hd, b, t, nc, w_emb, w_sm):
+    k = _round_up(b * t, 64)          # padded unique-token slots
+    return dict(kind="lm", name=name, vocab=vocab, de=de, hd=hd, b=b, t=t,
+                nc=nc, k=k, v=HYPER["sketch_depth"], w_emb=w_emb, w_sm=w_sm)
+
+
+def mlp_preset(name, din, hd, ncls, nc, b, w_out):
+    return dict(kind="mlp", name=name, din=din, hd=hd, ncls=ncls, nc=nc, b=b,
+                v=HYPER["sketch_depth"], w_out=w_out)
+
+
+PRESETS = {
+    # test-scale preset — used by pytest and rust integration tests
+    "tiny": lm_preset("tiny", vocab=512, de=32, hd=64, b=4, t=8, nc=128,
+                      w_emb=103, w_sm=32),
+    # Wikitext-2 stand-in: full softmax (paper §7.1: only embedding sparse);
+    # paper's CS tensor had w=16 buckets for a 33k vocab — same ratio here.
+    "wt2": lm_preset("wt2", vocab=8192, de=128, hd=256, b=20, t=35, nc=8192,
+                     w_emb=16, w_sm=16),
+    # Wikitext-103 stand-in: sampled softmax, 5x compression (paper §7.2)
+    "wt103": lm_preset("wt103", vocab=32768, de=256, hd=512, b=32, t=35,
+                       nc=2048, w_emb=6554, w_sm=6554),
+    # 1-Billion-Word stand-in: 5x compression (paper §7.2)
+    "lm1b": lm_preset("lm1b", vocab=131072, de=256, hd=1024, b=64, t=20,
+                      nc=4096, w_emb=26214, w_sm=26214),
+    # MegaFace stand-in (Fig 5): 512-d embeddings, CMS at 20% of rows
+    "megaface": mlp_preset("megaface", din=512, hd=512, ncls=10000, nc=1024,
+                           b=64, w_out=2000),
+    # Amazon extreme-classification stand-in (§7.3): MACH meta-classifier,
+    # CMS-Adam-V at 1% of rows (paper: [3, 266, 1024] for 20k meta-classes)
+    "amazon": mlp_preset("amazon", din=2048, hd=512, ncls=2_000_000, nc=2048,
+                         b=256, w_out=26),
+}
+
+LM_OPTS = ("cs_adam", "cms_adam_v", "cs_momentum", "cms_adagrad",
+           "dense_adam", "dense_momentum", "dense_adagrad")
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry
+# ---------------------------------------------------------------------------
+
+class Registry:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts = []
+        self._seen = set()
+
+    def add(self, name: str, fn, specs: list[tuple[str, object]]):
+        """Lower ``fn(*specs)`` to HLO text and record it in the manifest."""
+        if name in self._seen:
+            return
+        self._seen.add(name)
+        args = [s for _, s in specs]
+        lowered = jax.jit(fn).lower(*args)
+        text = _to_hlo_text(lowered)
+        fname = name + ".hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *args)
+        self.artifacts.append({
+            "name": name,
+            "file": fname,
+            "inputs": [
+                {"name": n, "dtype": _dt(s.dtype), "shape": list(s.shape)}
+                for n, s in specs
+            ],
+            "outputs": [
+                {"dtype": _dt(o.dtype), "shape": list(o.shape)}
+                for o in out_tree
+            ],
+        })
+        print(f"  lowered {name:<40s} ({len(text)//1024} KiB)")
+
+
+def _dt(dtype) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dtype).name]
+
+
+def _to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def s(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-preset artifact emission
+# ---------------------------------------------------------------------------
+
+def emit_lm(reg: Registry, p: dict):
+    de, hd, b, t, nc, k = p["de"], p["hd"], p["b"], p["t"], p["nc"], p["k"]
+    io = [
+        ("emb_rows", s([k, de])), ("w_ih", s([de, 4 * hd])),
+        ("w_hh", s([hd, 4 * hd])), ("b_g", s([4 * hd])),
+        ("w_p", s([hd, de])), ("b_p", s([de])),
+        ("sm_rows", s([nc, de])), ("sm_bias", s([nc])),
+        ("xslot", s([b, t], I32)), ("ytgt", s([b, t], I32)),
+        ("h0", s([b, hd])), ("c0", s([b, hd])),
+    ]
+    reg.add(f"{p['name']}.lm_step", model.lm_train_step, io)
+    reg.add(f"{p['name']}.lm_eval", model.lm_eval_step, io)
+    # optimizer graphs for the two sparse layers (embedding rows k×de,
+    # softmax candidate rows nc×de) — deduplicated by shape signature
+    for kk, w in ((k, p["w_emb"]), (nc, p["w_sm"])):
+        emit_opt_rows(reg, kk, de, p["v"], w)
+    # dense flat optimizer for the LSTM/projection params
+    pflat = de * 4 * hd + hd * 4 * hd + 4 * hd + hd * de + de + p["nc"] * 0
+    emit_opt_flat(reg, pflat)
+
+
+def emit_mlp(reg: Registry, p: dict):
+    din, hd, nc, b = p["din"], p["hd"], p["nc"], p["b"]
+    io = [
+        ("w1", s([din, hd])), ("b1", s([hd])),
+        ("out_rows", s([nc, hd])), ("out_bias", s([nc])),
+        ("x", s([b, din])), ("ytgt", s([b], I32)),
+    ]
+    reg.add(f"{p['name']}.mlp_step", model.mlp_train_step, io)
+    reg.add(f"{p['name']}.mlp_eval", model.mlp_eval_step, io[:-1])
+    emit_opt_rows(reg, nc, hd, p["v"], p["w_out"])
+    emit_opt_flat(reg, din * hd + hd)
+
+
+def emit_opt_rows(reg: Registry, k: int, d: int, v: int, w: int):
+    """Shared optimizer-row graphs for one (k, d, v, w) shape signature."""
+    H = HYPER
+    rows, g, mask = s([k, d]), s([k, d]), s([k])
+    sk = s([v, w, d])
+    idx, sign = s([v, k], I32), s([v, k])
+    lr, t = s([]), s([])
+    sig = f"k{k}.d{d}"
+    sks = f"{sig}.v{v}.w{w}"
+
+    reg.add(f"opt.cs_adam.{sks}",
+            functools.partial(model.cs_adam_rows, beta1=H["adam_beta1"],
+                              beta2=H["adam_beta2"], eps=H["adam_eps"]),
+            [("rows", rows), ("sk_m", sk), ("sk_v", sk), ("idx", idx),
+             ("sign", sign), ("grad", g), ("mask", mask), ("lr", lr), ("t", t)])
+    reg.add(f"opt.cms_adam_v.{sks}",
+            functools.partial(model.cms_adam_v_rows, beta2=H["adam_beta2"],
+                              eps=H["adam_eps"]),
+            [("rows", rows), ("sk_v", sk), ("idx", idx), ("grad", g),
+             ("mask", mask), ("lr", lr), ("t", t)])
+    reg.add(f"opt.cs_momentum.{sks}",
+            functools.partial(model.cs_momentum_rows, gamma=H["momentum_gamma"]),
+            [("rows", rows), ("sk_m", sk), ("idx", idx), ("sign", sign),
+             ("grad", g), ("mask", mask), ("lr", lr)])
+    reg.add(f"opt.cms_adagrad.{sks}",
+            functools.partial(model.cms_adagrad_rows, eps=H["adagrad_eps"]),
+            [("rows", rows), ("sk_v", sk), ("idx", idx), ("grad", g),
+             ("mask", mask), ("lr", lr)])
+
+    reg.add(f"opt.dense_adam.{sig}",
+            functools.partial(model.dense_adam_rows, beta1=H["adam_beta1"],
+                              beta2=H["adam_beta2"], eps=H["adam_eps"]),
+            [("rows", rows), ("m_rows", rows), ("v_rows", rows), ("grad", g),
+             ("mask", mask), ("lr", lr), ("t", t)])
+    reg.add(f"opt.dense_momentum.{sig}",
+            functools.partial(model.dense_momentum_rows,
+                              gamma=H["momentum_gamma"]),
+            [("rows", rows), ("m_rows", rows), ("grad", g), ("mask", mask),
+             ("lr", lr)])
+    reg.add(f"opt.dense_adagrad.{sig}",
+            functools.partial(model.dense_adagrad_rows, eps=H["adagrad_eps"]),
+            [("rows", rows), ("v_rows", rows), ("grad", g), ("mask", mask),
+             ("lr", lr)])
+
+
+def emit_opt_flat(reg: Registry, pdim: int):
+    H = HYPER
+    vec, lr, t = s([pdim]), s([]), s([])
+    reg.add(f"opt.dense_adam_flat.p{pdim}",
+            functools.partial(model.dense_adam_flat, beta1=H["adam_beta1"],
+                              beta2=H["adam_beta2"], eps=H["adam_eps"]),
+            [("p", vec), ("m", vec), ("v", vec), ("grad", vec),
+             ("lr", lr), ("t", t)])
+    reg.add(f"opt.dense_momentum_flat.p{pdim}",
+            functools.partial(model.dense_momentum_flat,
+                              gamma=H["momentum_gamma"]),
+            [("p", vec), ("m", vec), ("grad", vec), ("lr", lr)])
+    reg.add(f"opt.dense_adagrad_flat.p{pdim}",
+            functools.partial(model.dense_adagrad_flat, eps=H["adagrad_eps"]),
+            [("p", vec), ("v", vec), ("grad", vec), ("lr", lr)])
+
+
+def emit_smoke(reg: Registry):
+    def axpy(a, x):
+        return (a * x + 2.0,)
+    reg.add("smoke.axpy", axpy, [("a", s([])), ("x", s([4]))])
+
+
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: <repo>/artifacts)")
+    ap.add_argument("--presets", default="all",
+                    help="comma-separated preset names or 'all'")
+    args = ap.parse_args()
+
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    out_dir = args.out_dir or os.path.join(repo, "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    names = list(PRESETS) if args.presets == "all" else args.presets.split(",")
+    reg = Registry(out_dir)
+    emit_smoke(reg)
+    for n in names:
+        p = PRESETS[n]
+        print(f"preset {n}: {p}")
+        (emit_lm if p["kind"] == "lm" else emit_mlp)(reg, p)
+
+    manifest = {
+        "format_version": 1,
+        "hyper": HYPER,
+        "presets": {n: PRESETS[n] for n in names},
+        "artifacts": reg.artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(reg.artifacts)} artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

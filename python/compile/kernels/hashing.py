@@ -1,0 +1,73 @@
+"""Universal hash family shared (bit-exactly) with the Rust coordinator.
+
+The count-sketch tensor hashes row ids ``i`` of the original ``R^{n,d}``
+auxiliary variable into ``w`` buckets with ``v`` independent hash functions
+``h_j`` plus random sign functions ``s_j``.  The family is a SplitMix64
+finalizer over ``i ^ seed_j`` where the per-depth seed stream is itself
+derived from a master seed.  Rust implements the identical function in
+``rust/src/sketch/hash.rs``; a golden-vector test on both sides pins the
+exact bit pattern so bucket ids / signs computed by the coordinator can be
+fed to the AOT-compiled kernels.
+
+Buckets and signs are always computed *host side* (numpy here, Rust at
+runtime) and passed to the kernels as ``int32``/``float32`` tensors — the
+HLO graphs stay pure and hash-agnostic.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_GOLDEN = np.uint64(0x9E3779B97F4A7C15)
+_MIX1 = np.uint64(0xBF58476D1CE4E5B9)
+_MIX2 = np.uint64(0x94D049BB133111EB)
+
+
+def splitmix64(z: np.ndarray) -> np.ndarray:
+    """SplitMix64 finalizer (Steele et al.), vectorized over uint64 arrays."""
+    z = np.asarray(z, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = (z + _GOLDEN).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(30))) * _MIX1).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(27))) * _MIX2).astype(np.uint64)
+        z = z ^ (z >> np.uint64(31))
+    return z
+
+
+def depth_seed(master_seed: int, j: int) -> np.uint64:
+    """Seed for depth row ``j``, derived from the master seed."""
+    with np.errstate(over="ignore"):
+        return splitmix64(np.uint64(master_seed) + np.uint64(j + 1) * _GOLDEN)
+
+
+def hash_mix(ids: np.ndarray, master_seed: int, j: int) -> np.ndarray:
+    """64-bit mixed hash of ``ids`` for depth ``j``."""
+    ids = np.asarray(ids, dtype=np.uint64)
+    return splitmix64(ids ^ depth_seed(master_seed, j))
+
+
+def buckets_and_signs(
+    ids: np.ndarray, depth: int, width: int, master_seed: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Bucket indices ``[v, k] int32`` and signs ``[v, k] float32`` for ids.
+
+    * bucket ``h_j(i)``: low bits of the mix, mod ``width``.
+    * sign ``s_j(i)``: top bit of the mix mapped to {+1, -1}.
+    """
+    ids = np.asarray(ids, dtype=np.uint64).reshape(-1)
+    k = ids.shape[0]
+    idx = np.empty((depth, k), dtype=np.int32)
+    sign = np.empty((depth, k), dtype=np.float32)
+    for j in range(depth):
+        h = hash_mix(ids, master_seed, j)
+        idx[j] = (h % np.uint64(width)).astype(np.int32)
+        sign[j] = np.where((h >> np.uint64(63)) == 0, 1.0, -1.0).astype(np.float32)
+    return idx, sign
+
+
+def golden_vectors() -> list[tuple[int, int, int]]:
+    """(input, seed-as-j0-mix, expected) triples pinned against Rust."""
+    out = []
+    for x in (0, 1, 2, 12345, 2**63):
+        out.append((x, 0, int(splitmix64(np.uint64(x)))))
+    return out

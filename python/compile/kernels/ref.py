@@ -1,0 +1,133 @@
+"""Pure-jnp oracle for the count-sketch tensor and sketched optimizer steps.
+
+This module is the *correctness signal* for the whole stack:
+
+* pytest/hypothesis check the Pallas kernels in ``sketch_ops.py`` against it;
+* the Rust sketch module (``rust/src/sketch``) implements the identical
+  batched semantics and is pinned against the same golden vectors.
+
+Batched semantics (see DESIGN.md §1): a step processes a *deduplicated*
+batch of ``k`` active rows at once —
+
+    gather → QUERY → compute Δ → scatter-add → re-gather → QUERY → apply.
+
+Within-batch bucket collisions are therefore folded in by the re-gather,
+matching the authors' released batched GPU implementation rather than the
+per-item pseudo-code of Algorithms 2–4.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Sketch primitives
+# ---------------------------------------------------------------------------
+
+def cs_query(sketch: jnp.ndarray, idx: jnp.ndarray, sign: jnp.ndarray) -> jnp.ndarray:
+    """Count-Sketch QUERY: median over depth of signed bucket rows.
+
+    sketch: [v, w, d]; idx: [v, k] int32; sign: [v, k]  →  est [k, d]
+    """
+    v = sketch.shape[0]
+    gathered = sketch[jnp.arange(v)[:, None], idx]          # [v, k, d]
+    signed = gathered * sign[:, :, None].astype(sketch.dtype)
+    return jnp.median(signed, axis=0)
+
+
+def cms_query(sketch: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Count-Min QUERY: min over depth of bucket rows. → est [k, d]"""
+    v = sketch.shape[0]
+    gathered = sketch[jnp.arange(v)[:, None], idx]          # [v, k, d]
+    return jnp.min(gathered, axis=0)
+
+
+def cs_update(
+    sketch: jnp.ndarray, idx: jnp.ndarray, sign: jnp.ndarray, delta: jnp.ndarray
+) -> jnp.ndarray:
+    """Count-Sketch UPDATE: scatter-add ``s_j(i)·Δ_i`` into row ``h_j(i)``.
+
+    Duplicate buckets within the batch accumulate (scatter-add semantics).
+    """
+    v = sketch.shape[0]
+    contrib = sign[:, :, None].astype(sketch.dtype) * delta[None, :, :]  # [v,k,d]
+    return sketch.at[jnp.arange(v)[:, None], idx].add(contrib)
+
+
+def cms_update(sketch: jnp.ndarray, idx: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """Count-Min UPDATE: unsigned scatter-add."""
+    v = sketch.shape[0]
+    return sketch.at[jnp.arange(v)[:, None], idx].add(
+        jnp.broadcast_to(delta[None, :, :], (v,) + delta.shape)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sketched optimizer steps (paper Algorithms 2–4, batched)
+# ---------------------------------------------------------------------------
+
+def momentum_step(params, sk_m, idx, sign, grad, *, lr, gamma):
+    """Algorithm 2: Count-Sketch Momentum.
+
+    m += (γ−1)·m + g ; x −= η·m̂   (m̂ = post-update query)
+    """
+    m_prev = cs_query(sk_m, idx, sign)
+    delta = (gamma - 1.0) * m_prev + grad
+    sk_m = cs_update(sk_m, idx, sign, delta)
+    m_t = cs_query(sk_m, idx, sign)
+    return params - lr * m_t, sk_m
+
+
+def adagrad_step(params, sk_v, idx, grad, *, lr, eps):
+    """Algorithm 3: Count-Min-Sketch Adagrad.  v += g²; x −= η·g/(√v̂+ε)."""
+    sk_v = cms_update(sk_v, idx, grad * grad)
+    v_t = cms_query(sk_v, idx)
+    v_t = jnp.maximum(v_t, 0.0)
+    return params - lr * grad / (jnp.sqrt(v_t) + eps), sk_v
+
+
+def adam_step(params, sk_m, sk_v, idx, sign, grad, *, lr, beta1, beta2, eps, t):
+    """Algorithm 4: Count-Sketch Adam (CS 1st moment, CMS 2nd moment).
+
+    ``t`` is the 1-based step count (a traced scalar in the AOT graph).
+    With ``beta1 == 0`` the 1st-moment sketch is bypassed entirely
+    (RMSProp mode of Theorem 5.1) — callers use :func:`adam_v_step`.
+    """
+    m_prev = cs_query(sk_m, idx, sign)
+    dm = (1.0 - beta1) * (grad - m_prev)
+    sk_m = cs_update(sk_m, idx, sign, dm)
+    m_t = cs_query(sk_m, idx, sign)
+
+    v_prev = cms_query(sk_v, idx)
+    dv = (1.0 - beta2) * (grad * grad - v_prev)
+    sk_v = cms_update(sk_v, idx, dv)
+    v_t = jnp.maximum(cms_query(sk_v, idx), 0.0)
+
+    m_hat = m_t / (1.0 - beta1**t)
+    v_hat = v_t / (1.0 - beta2**t)
+    new_params = params - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return new_params, sk_m, sk_v
+
+
+def adam_v_step(params, sk_v, idx, grad, *, lr, beta2, eps, t):
+    """CMS-Adam with β1 = 0 (dense g as 1st moment) — Theorem 5.1 / §7.3."""
+    v_prev = cms_query(sk_v, idx)
+    dv = (1.0 - beta2) * (grad * grad - v_prev)
+    sk_v = cms_update(sk_v, idx, dv)
+    v_t = jnp.maximum(cms_query(sk_v, idx), 0.0)
+    v_hat = v_t / (1.0 - beta2**t)
+    return params - lr * grad / (jnp.sqrt(v_hat) + eps), sk_v
+
+
+# ---------------------------------------------------------------------------
+# Dense baselines (for exact-match tests with injective hashing)
+# ---------------------------------------------------------------------------
+
+def dense_adam_rows(params, m_rows, v_rows, grad, *, lr, beta1, beta2, eps, t):
+    """Dense Adam over the same k active rows (test oracle)."""
+    m = beta1 * m_rows + (1.0 - beta1) * grad
+    v = beta2 * v_rows + (1.0 - beta2) * grad * grad
+    m_hat = m / (1.0 - beta1**t)
+    v_hat = v / (1.0 - beta2**t)
+    return params - lr * m_hat / (jnp.sqrt(v_hat) + eps), m, v

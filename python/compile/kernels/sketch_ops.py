@@ -1,0 +1,286 @@
+"""Layer-1 Pallas kernels for the count-sketch optimizer hot path.
+
+The fused sketched-optimizer step is a composition of
+
+    gather (XLA)  →  QUERY kernel (Pallas)  →  Δ  →  scatter-add (XLA)
+                  →  re-gather  →  QUERY kernel  →  APPLY kernel (Pallas)
+
+Gathers/scatter-adds stay at the jnp level — XLA lowers the batched
+``.at[].add`` to a deterministic sorted scatter (the TPU-side replacement
+for the paper's CUDA atomics, see DESIGN.md §5) — while all per-element
+math (signed median-over-depth, min-over-depth, Adam/Adagrad/Momentum row
+updates) runs inside Pallas kernels.
+
+Kernels are tiled over the active-row axis ``k`` with block size ``bk`` and
+keep the feature axis ``d`` whole per block, mirroring the paper's
+"structured sparsity along the last dimension": one VMEM-resident block is
+``[v, bk, d]`` (v ≤ 5), e.g. 3·128·256·4 B = 384 KiB.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernels to plain HLO so the same
+artifact runs under the Rust runtime.  Real-TPU resource estimates are in
+DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 128
+
+
+def _pad_rows(x: jnp.ndarray, k_pad: int, axis: int) -> jnp.ndarray:
+    """Zero-pad axis ``axis`` of ``x`` up to length ``k_pad``."""
+    pad = k_pad - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block_k(k: int, block_k: int | None) -> int:
+    bk = block_k or DEFAULT_BLOCK_K
+    return min(bk, max(k, 1))
+
+
+def _median_depth(x: jnp.ndarray) -> jnp.ndarray:
+    """Median over axis 0 (depth v) of ``x [v, bk, d]``.
+
+    v = 1/2/3 use explicit min/max networks (VPU-friendly, no sort);
+    larger depths fall back to a sort-based median.
+    """
+    v = x.shape[0]
+    if v == 1:
+        return x[0]
+    if v == 2:
+        return 0.5 * (x[0] + x[1])
+    if v == 3:
+        a, b, c = x[0], x[1], x[2]
+        return jnp.maximum(jnp.minimum(a, b), jnp.minimum(jnp.maximum(a, b), c))
+    return jnp.median(x, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# QUERY kernels
+# ---------------------------------------------------------------------------
+
+def _cs_query_kernel(g_ref, s_ref, o_ref):
+    """o = median_j(sign[j] * gathered[j])  over one [v, bk, d] block."""
+    signed = g_ref[...] * s_ref[...][:, :, None]
+    o_ref[...] = _median_depth(signed)
+
+
+def _cms_query_kernel(g_ref, o_ref):
+    """o = min_j(gathered[j])  over one [v, bk, d] block."""
+    o_ref[...] = jnp.min(g_ref[...], axis=0)
+
+
+def cs_query_gathered(
+    gathered: jnp.ndarray, sign: jnp.ndarray, *, block_k: int | None = None
+) -> jnp.ndarray:
+    """Count-Sketch QUERY over pre-gathered rows.  [v,k,d],[v,k] → [k,d]."""
+    v, k, d = gathered.shape
+    bk = _block_k(k, block_k)
+    k_pad = -(-k // bk) * bk
+    gathered = _pad_rows(gathered, k_pad, axis=1)
+    sign = _pad_rows(sign, k_pad, axis=1)
+    out = pl.pallas_call(
+        _cs_query_kernel,
+        grid=(k_pad // bk,),
+        in_specs=[
+            pl.BlockSpec((v, bk, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((v, bk), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, d), gathered.dtype),
+        interpret=True,
+    )(gathered, sign)
+    return out[:k]
+
+
+def cms_query_gathered(
+    gathered: jnp.ndarray, *, block_k: int | None = None
+) -> jnp.ndarray:
+    """Count-Min QUERY over pre-gathered rows.  [v,k,d] → [k,d]."""
+    v, k, d = gathered.shape
+    bk = _block_k(k, block_k)
+    k_pad = -(-k // bk) * bk
+    gathered = _pad_rows(gathered, k_pad, axis=1)
+    out = pl.pallas_call(
+        _cms_query_kernel,
+        grid=(k_pad // bk,),
+        in_specs=[pl.BlockSpec((v, bk, d), lambda i: (0, i, 0))],
+        out_specs=pl.BlockSpec((bk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, d), gathered.dtype),
+        interpret=True,
+    )(gathered)
+    return out[:k]
+
+
+def _gather(sketch: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """sketch [v,w,d], idx [v,k] → gathered [v,k,d] (XLA gather)."""
+    v = sketch.shape[0]
+    return sketch[jnp.arange(v)[:, None], idx]
+
+
+def cs_query(sketch, idx, sign, *, block_k=None):
+    """Full Count-Sketch QUERY (gather + Pallas median)."""
+    return cs_query_gathered(_gather(sketch, idx), sign, block_k=block_k)
+
+
+def cms_query(sketch, idx, *, block_k=None):
+    """Full Count-Min QUERY (gather + Pallas min)."""
+    return cms_query_gathered(_gather(sketch, idx), block_k=block_k)
+
+
+def cs_update(sketch, idx, sign, delta):
+    """Count-Sketch UPDATE (XLA deterministic scatter-add, duplicates fold)."""
+    v = sketch.shape[0]
+    contrib = sign[:, :, None].astype(sketch.dtype) * delta[None, :, :]
+    return sketch.at[jnp.arange(v)[:, None], idx].add(contrib)
+
+
+def cms_update(sketch, idx, delta):
+    """Count-Min UPDATE (unsigned scatter-add)."""
+    v = sketch.shape[0]
+    return sketch.at[jnp.arange(v)[:, None], idx].add(
+        jnp.broadcast_to(delta[None, :, :], (v,) + delta.shape)
+    )
+
+
+# ---------------------------------------------------------------------------
+# APPLY kernels — fused parameter-row updates
+# ---------------------------------------------------------------------------
+
+def _adam_apply_kernel(p_ref, m_ref, v_ref, sc_ref, o_ref):
+    """p' = p − lr · (m/bc1) / (√(max(v,0)/bc2) + ε).
+
+    sc = [lr, bc1, bc2, eps]  (bias corrections 1−βⁱ^t precomputed upstream
+    from the traced step counter — scalar math stays in XLA, row math here).
+    """
+    sc = sc_ref[...]
+    lr, bc1, bc2, eps = sc[0], sc[1], sc[2], sc[3]
+    m_hat = m_ref[...] / bc1
+    v_hat = jnp.maximum(v_ref[...], 0.0) / bc2
+    o_ref[...] = p_ref[...] - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+
+
+def _scaled_sub_kernel(p_ref, u_ref, sc_ref, o_ref):
+    """p' = p − lr·u   (momentum apply)."""
+    o_ref[...] = p_ref[...] - sc_ref[...][0] * u_ref[...]
+
+
+def _adagrad_apply_kernel(p_ref, g_ref, v_ref, sc_ref, o_ref):
+    """p' = p − lr·g/(√max(v,0)+ε)."""
+    sc = sc_ref[...]
+    lr, eps = sc[0], sc[1]
+    v_t = jnp.maximum(v_ref[...], 0.0)
+    o_ref[...] = p_ref[...] - lr * g_ref[...] / (jnp.sqrt(v_t) + eps)
+
+
+def _rows_call(kernel, scalars, *rows, block_k=None):
+    """Run an apply kernel over [k, d] row tensors plus a scalar vector."""
+    k, d = rows[0].shape
+    bk = _block_k(k, block_k)
+    k_pad = -(-k // bk) * bk
+    padded = [_pad_rows(r, k_pad, axis=0) for r in rows]
+    ns = scalars.shape[0]
+    out = pl.pallas_call(
+        kernel,
+        grid=(k_pad // bk,),
+        in_specs=[pl.BlockSpec((bk, d), lambda i: (i, 0)) for _ in rows]
+        + [pl.BlockSpec((ns,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((bk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_pad, d), rows[0].dtype),
+        interpret=True,
+    )(*padded, scalars)
+    return out[:k]
+
+
+def adam_apply(params, m_t, v_t, scalars, *, block_k=None):
+    """Fused Adam row apply.  scalars = [lr, 1−β1^t, 1−β2^t, eps] (f32[4])."""
+    return _rows_call(_adam_apply_kernel, scalars, params, m_t, v_t, block_k=block_k)
+
+
+def momentum_apply(params, m_t, scalars, *, block_k=None):
+    """Fused Momentum row apply.  scalars = [lr] (f32[1])."""
+    return _rows_call(_scaled_sub_kernel, scalars, params, m_t, block_k=block_k)
+
+
+def adagrad_apply(params, grad, v_t, scalars, *, block_k=None):
+    """Fused Adagrad row apply.  scalars = [lr, eps] (f32[2])."""
+    return _rows_call(_adagrad_apply_kernel, scalars, params, grad, v_t, block_k=block_k)
+
+
+# ---------------------------------------------------------------------------
+# Fused sketched optimizer steps (signature-compatible with ref.py)
+# ---------------------------------------------------------------------------
+
+def momentum_step(params, sk_m, idx, sign, grad, *, lr, gamma, block_k=None):
+    """Pallas Count-Sketch Momentum step (Algorithm 2, batched)."""
+    m_prev = cs_query(sk_m, idx, sign, block_k=block_k)
+    delta = (gamma - 1.0) * m_prev + grad
+    sk_m = cs_update(sk_m, idx, sign, delta)
+    m_t = cs_query(sk_m, idx, sign, block_k=block_k)
+    scalars = jnp.asarray([lr], dtype=params.dtype).reshape(1)
+    return momentum_apply(params, m_t, scalars, block_k=block_k), sk_m
+
+
+def adagrad_step(params, sk_v, idx, grad, *, lr, eps, block_k=None):
+    """Pallas Count-Min Adagrad step (Algorithm 3, batched)."""
+    sk_v = cms_update(sk_v, idx, grad * grad)
+    v_t = cms_query(sk_v, idx, block_k=block_k)
+    scalars = jnp.asarray([lr, eps], dtype=params.dtype)
+    return adagrad_apply(params, grad, v_t, scalars, block_k=block_k), sk_v
+
+
+def adam_step(params, sk_m, sk_v, idx, sign, grad, *, lr, beta1, beta2, eps, t,
+              block_k=None):
+    """Pallas Count-Sketch Adam step (Algorithm 4, batched).
+
+    ``t`` may be a traced scalar (the AOT graphs pass it as an input).
+    """
+    m_prev = cs_query(sk_m, idx, sign, block_k=block_k)
+    dm = (1.0 - beta1) * (grad - m_prev)
+    sk_m = cs_update(sk_m, idx, sign, dm)
+    m_t = cs_query(sk_m, idx, sign, block_k=block_k)
+
+    v_prev = cms_query(sk_v, idx, block_k=block_k)
+    dv = (1.0 - beta2) * (grad * grad - v_prev)
+    sk_v = cms_update(sk_v, idx, dv)
+    v_t = cms_query(sk_v, idx, block_k=block_k)
+
+    t = jnp.asarray(t, dtype=params.dtype)
+    scalars = jnp.stack(
+        [
+            jnp.asarray(lr, params.dtype),
+            1.0 - jnp.asarray(beta1, params.dtype) ** t,
+            1.0 - jnp.asarray(beta2, params.dtype) ** t,
+            jnp.asarray(eps, params.dtype),
+        ]
+    )
+    return adam_apply(params, m_t, v_t, scalars, block_k=block_k), sk_m, sk_v
+
+
+def adam_v_step(params, sk_v, idx, grad, *, lr, beta2, eps, t, block_k=None):
+    """Pallas CMS-Adam (β1 = 0) step — the §7.3 memory-max variant."""
+    v_prev = cms_query(sk_v, idx, block_k=block_k)
+    dv = (1.0 - beta2) * (grad * grad - v_prev)
+    sk_v = cms_update(sk_v, idx, dv)
+    v_t = cms_query(sk_v, idx, block_k=block_k)
+
+    t = jnp.asarray(t, dtype=params.dtype)
+    scalars = jnp.stack(
+        [
+            jnp.asarray(lr, params.dtype),
+            jnp.asarray(1.0, params.dtype),  # no 1st-moment bias correction
+            1.0 - jnp.asarray(beta2, params.dtype) ** t,
+            jnp.asarray(eps, params.dtype),
+        ]
+    )
+    return adam_apply(params, grad, v_t, scalars, block_k=block_k), sk_v

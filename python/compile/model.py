@@ -1,0 +1,261 @@
+"""Layer-2 JAX compute graphs: LSTM language model, MLP classifier, and the
+sketched / dense optimizer step graphs.
+
+Everything here is lowered **once** by ``aot.py`` to HLO text and executed
+from the Rust coordinator via PJRT — Python is never on the training path.
+
+Parameter-server split (DESIGN.md §6.2): the graphs never see the full
+``R^{n,d}`` embedding/softmax matrices.  The Rust coordinator gathers the
+*active rows* (unique tokens of the batch / sampled softmax candidates) and
+passes them in; graphs return gradients **for those rows only**, so the
+artifact size and per-step transfer are independent of the vocabulary size.
+The optimizer-step graphs likewise operate on gathered rows plus (for the
+sketched variants) the full ``[v, w, d]`` count-sketch tensors, which *are*
+the compressed state — that is the point of the paper.
+
+Shapes are static per preset; padded row slots are neutralized with an
+explicit ``mask`` input (a padded row must not pollute the sketch).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sketch_ops
+
+
+# ---------------------------------------------------------------------------
+# LSTM language model
+# ---------------------------------------------------------------------------
+
+def lstm_cell(carry, x_t, w_ih, w_hh, b):
+    """Single LSTM step.  x_t [b, de]; carry = (h [b,hd], c [b,hd])."""
+    h, c = carry
+    gates = x_t @ w_ih + h @ w_hh + b                      # [b, 4*hd]
+    hd = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, 0 * hd : 1 * hd])
+    f = jax.nn.sigmoid(gates[:, 1 * hd : 2 * hd])
+    g = jnp.tanh(gates[:, 2 * hd : 3 * hd])
+    o = jax.nn.sigmoid(gates[:, 3 * hd : 4 * hd])
+    c2 = f * c + i * g
+    h2 = o * jnp.tanh(c2)
+    return (h2, c2), h2
+
+
+def lm_forward(params, xslot, h0, c0):
+    """Embed → LSTM (scan over time) → projection.  Returns [b,T,de] states."""
+    emb = params["emb_rows"][xslot]                        # [b, T, de]
+    def step(carry, x_t):
+        return lstm_cell(carry, x_t, params["w_ih"], params["w_hh"], params["b_g"])
+    (h_t, c_t), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(emb, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1)                            # [b, T, hd]
+    out = hs @ params["w_p"] + params["b_p"]               # [b, T, de]
+    return out, h_t, c_t
+
+
+def lm_loss(params, xslot, ytgt, h0, c0):
+    """Mean cross-entropy over the candidate set (sampled or full softmax).
+
+    ``ytgt`` indexes the target *within the candidate rows* ``sm_rows``.
+    """
+    out, h_t, c_t = lm_forward(params, xslot, h0, c0)
+    logits = out @ params["sm_rows"].T + params["sm_bias"]  # [b, T, nc]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, ytgt[:, :, None], axis=-1)[:, :, 0]
+    return jnp.mean(logz - tgt), (h_t, c_t)
+
+
+def lm_train_step(emb_rows, w_ih, w_hh, b_g, w_p, b_p, sm_rows, sm_bias,
+                  xslot, ytgt, h0, c0):
+    """AOT entry: loss + grads (active rows only) + final recurrent state.
+
+    Inputs
+      emb_rows [k, de]   gathered embedding rows (unique batch tokens)
+      w_ih [de,4hd] w_hh [hd,4hd] b_g [4hd] w_p [hd,de] b_p [de]  dense params
+      sm_rows [nc, de]  sm_bias [nc]   gathered softmax candidate rows
+      xslot [b, T] i32   token → row-slot in emb_rows
+      ytgt  [b, T] i32   target → slot in sm_rows
+      h0, c0 [b, hd]     recurrent state carried by the coordinator
+    Outputs (flat tuple, order pinned in the manifest)
+      loss, d_emb_rows, d_w_ih, d_w_hh, d_b_g, d_w_p, d_b_p,
+      d_sm_rows, d_sm_bias, h_t, c_t
+    """
+    params = dict(emb_rows=emb_rows, w_ih=w_ih, w_hh=w_hh, b_g=b_g,
+                  w_p=w_p, b_p=b_p, sm_rows=sm_rows, sm_bias=sm_bias)
+    (loss, (h_t, c_t)), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+        params, xslot, ytgt, h0, c0)
+    return (loss, grads["emb_rows"], grads["w_ih"], grads["w_hh"], grads["b_g"],
+            grads["w_p"], grads["b_p"], grads["sm_rows"], grads["sm_bias"],
+            h_t, c_t)
+
+
+def lm_eval_step(emb_rows, w_ih, w_hh, b_g, w_p, b_p, sm_rows, sm_bias,
+                 xslot, ytgt, h0, c0):
+    """AOT entry: forward-only loss (perplexity eval) + recurrent state."""
+    params = dict(emb_rows=emb_rows, w_ih=w_ih, w_hh=w_hh, b_g=b_g,
+                  w_p=w_p, b_p=b_p, sm_rows=sm_rows, sm_bias=sm_bias)
+    loss, (h_t, c_t) = lm_loss(params, xslot, ytgt, h0, c0)
+    return (loss, h_t, c_t)
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier (MegaFace-sim softmax / MACH meta-classifier)
+# ---------------------------------------------------------------------------
+
+def mlp_loss(params, x, ytgt):
+    """One-hidden-layer classifier over gathered output rows.
+
+    x [b, din] dense features; ytgt [b] i32 slot into out_rows [nc, hd].
+    """
+    h = jnp.maximum(x @ params["w1"] + params["b1"], 0.0)   # ReLU [b, hd]
+    logits = h @ params["out_rows"].T + params["out_bias"]  # [b, nc]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, ytgt[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - tgt)
+
+
+def mlp_train_step(w1, b1, out_rows, out_bias, x, ytgt):
+    """AOT entry: loss + grads.  Output-layer grads cover candidate rows only.
+
+    Outputs: loss, d_w1, d_b1, d_out_rows, d_out_bias
+    """
+    params = dict(w1=w1, b1=b1, out_rows=out_rows, out_bias=out_bias)
+    loss, grads = jax.value_and_grad(mlp_loss)(params, x, ytgt)
+    return (loss, grads["w1"], grads["b1"], grads["out_rows"], grads["out_bias"])
+
+
+def mlp_eval_step(w1, b1, out_rows, out_bias, x):
+    """AOT entry: logits over the candidate set (for recall@k eval)."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return (h @ out_rows.T + out_bias,)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-step graphs (masked; composed from the Pallas kernels)
+# ---------------------------------------------------------------------------
+#
+# Each step takes gathered parameter rows [k, d], gradient rows [k, d], a
+# row-validity mask [k] (0.0 for padded slots) and hyper-scalars lr / t as
+# runtime inputs.  β/γ/ε are baked per preset at lowering time.  Sketched
+# variants also take the [v, w, d] sketch tensor(s) and host-hashed idx/sign.
+
+def cs_adam_rows(rows, sk_m, sk_v, idx, sign, grad, mask, lr, t,
+                 *, beta1, beta2, eps, block_k=None):
+    """Count-Sketch Adam over gathered rows (Algorithm 4, masked)."""
+    grad = grad * mask[:, None]
+    m_prev = sketch_ops.cs_query(sk_m, idx, sign, block_k=block_k)
+    dm = (1.0 - beta1) * (grad - m_prev) * mask[:, None]
+    sk_m = sketch_ops.cs_update(sk_m, idx, sign, dm)
+    m_t = sketch_ops.cs_query(sk_m, idx, sign, block_k=block_k)
+
+    v_prev = sketch_ops.cms_query(sk_v, idx, block_k=block_k)
+    dv = (1.0 - beta2) * (grad * grad - v_prev) * mask[:, None]
+    sk_v = sketch_ops.cms_update(sk_v, idx, dv)
+    v_t = sketch_ops.cms_query(sk_v, idx, block_k=block_k)
+
+    tf = jnp.asarray(t, rows.dtype)
+    scalars = jnp.stack([jnp.asarray(lr, rows.dtype),
+                         1.0 - jnp.asarray(beta1, rows.dtype) ** tf,
+                         1.0 - jnp.asarray(beta2, rows.dtype) ** tf,
+                         jnp.asarray(eps, rows.dtype)])
+    new_rows = sketch_ops.adam_apply(rows, m_t * mask[:, None],
+                                     v_t * mask[:, None], scalars,
+                                     block_k=block_k)
+    return (new_rows, sk_m, sk_v)
+
+
+def cms_adam_v_rows(rows, sk_v, idx, grad, mask, lr, t,
+                    *, beta2, eps, block_k=None):
+    """CMS-Adam with β1 = 0 (§7.3 / Theorem 5.1) over gathered rows."""
+    grad = grad * mask[:, None]
+    v_prev = sketch_ops.cms_query(sk_v, idx, block_k=block_k)
+    dv = (1.0 - beta2) * (grad * grad - v_prev) * mask[:, None]
+    sk_v = sketch_ops.cms_update(sk_v, idx, dv)
+    v_t = sketch_ops.cms_query(sk_v, idx, block_k=block_k)
+
+    tf = jnp.asarray(t, rows.dtype)
+    scalars = jnp.stack([jnp.asarray(lr, rows.dtype),
+                         jnp.asarray(1.0, rows.dtype),
+                         1.0 - jnp.asarray(beta2, rows.dtype) ** tf,
+                         jnp.asarray(eps, rows.dtype)])
+    new_rows = sketch_ops.adam_apply(rows, grad, v_t * mask[:, None], scalars,
+                                     block_k=block_k)
+    return (new_rows, sk_v)
+
+
+def cs_momentum_rows(rows, sk_m, idx, sign, grad, mask, lr,
+                     *, gamma, block_k=None):
+    """Count-Sketch Momentum over gathered rows (Algorithm 2, masked)."""
+    grad = grad * mask[:, None]
+    m_prev = sketch_ops.cs_query(sk_m, idx, sign, block_k=block_k)
+    delta = ((gamma - 1.0) * m_prev + grad) * mask[:, None]
+    sk_m = sketch_ops.cs_update(sk_m, idx, sign, delta)
+    m_t = sketch_ops.cs_query(sk_m, idx, sign, block_k=block_k)
+    scalars = jnp.asarray(lr, rows.dtype).reshape(1)
+    return (sketch_ops.momentum_apply(rows, m_t * mask[:, None], scalars,
+                                      block_k=block_k), sk_m)
+
+
+def cms_adagrad_rows(rows, sk_v, idx, grad, mask, lr, *, eps, block_k=None):
+    """Count-Min Adagrad over gathered rows (Algorithm 3, masked)."""
+    grad = grad * mask[:, None]
+    sk_v = sketch_ops.cms_update(sk_v, idx, grad * grad * mask[:, None])
+    v_t = sketch_ops.cms_query(sk_v, idx, block_k=block_k)
+    scalars = jnp.stack([jnp.asarray(lr, rows.dtype),
+                         jnp.asarray(eps, rows.dtype)])
+    grad_m = grad * mask[:, None]
+    return (sketch_ops.adagrad_apply(rows, grad_m, v_t, scalars,
+                                     block_k=block_k), sk_v)
+
+
+# Dense row baselines: the coordinator owns [n, d] state, gathers state rows
+# alongside parameter rows (sparse-Adam semantics: inactive rows untouched).
+
+def dense_adam_rows(rows, m_rows, v_rows, grad, mask, lr, t,
+                    *, beta1, beta2, eps):
+    grad = grad * mask[:, None]
+    m = beta1 * m_rows + (1.0 - beta1) * grad
+    v = beta2 * v_rows + (1.0 - beta2) * grad * grad
+    live = mask[:, None] > 0
+    m = jnp.where(live, m, m_rows)
+    v = jnp.where(live, v, v_rows)
+    tf = jnp.asarray(t, rows.dtype)
+    m_hat = m / (1.0 - beta1 ** tf)
+    v_hat = v / (1.0 - beta2 ** tf)
+    new = rows - lr * m_hat / (jnp.sqrt(v_hat) + eps) * live
+    return (new, m, v)
+
+
+def dense_momentum_rows(rows, m_rows, grad, mask, lr, *, gamma):
+    grad = grad * mask[:, None]
+    live = mask[:, None] > 0
+    m = jnp.where(live, gamma * m_rows + grad, m_rows)
+    return (rows - lr * m * live, m)
+
+
+def dense_adagrad_rows(rows, v_rows, grad, mask, lr, *, eps):
+    grad = grad * mask[:, None]
+    live = mask[:, None] > 0
+    v = jnp.where(live, v_rows + grad * grad, v_rows)
+    return (rows - lr * grad / (jnp.sqrt(v) + eps) * live, v)
+
+
+def dense_adam_flat(p, m, v, grad, lr, t, *, beta1, beta2, eps):
+    """Dense Adam over a flat [P] vector (LSTM / hidden-layer params)."""
+    m2 = beta1 * m + (1.0 - beta1) * grad
+    v2 = beta2 * v + (1.0 - beta2) * grad * grad
+    tf = jnp.asarray(t, p.dtype)
+    m_hat = m2 / (1.0 - beta1 ** tf)
+    v_hat = v2 / (1.0 - beta2 ** tf)
+    return (p - lr * m_hat / (jnp.sqrt(v_hat) + eps), m2, v2)
+
+
+def dense_momentum_flat(p, m, grad, lr, *, gamma):
+    m2 = gamma * m + grad
+    return (p - lr * m2, m2)
+
+
+def dense_adagrad_flat(p, v, grad, lr, *, eps):
+    v2 = v + grad * grad
+    return (p - lr * grad / (jnp.sqrt(v2) + eps), v2)

@@ -1,0 +1,85 @@
+"""AOT pipeline: lowering emits parseable HLO text and a manifest whose
+shapes match what the graphs actually return."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--presets", "tiny"],
+        check=True, cwd=os.path.dirname(os.path.dirname(__file__)), env=env)
+    with open(out / "manifest.json") as f:
+        manifest = json.load(f)
+    return out, manifest
+
+
+def test_manifest_structure(artifacts):
+    out, manifest = artifacts
+    assert manifest["format_version"] == 1
+    assert "tiny" in manifest["presets"]
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert "smoke.axpy" in names
+    assert "tiny.lm_step" in names
+    assert "tiny.lm_eval" in names
+    assert any(n.startswith("opt.cs_adam.") for n in names)
+    assert any(n.startswith("opt.dense_adam_flat.") for n in names)
+    for a in manifest["artifacts"]:
+        assert (out / a["file"]).exists()
+        for spec in a["inputs"] + a["outputs"]:
+            assert spec["dtype"] in ("f32", "i32")
+
+
+def test_hlo_text_is_parseable_hlo(artifacts):
+    out, manifest = artifacts
+    for a in manifest["artifacts"]:
+        text = (out / a["file"]).read_text()
+        assert text.startswith("HloModule"), a["name"]
+        assert "ENTRY" in text, a["name"]
+
+
+def test_lm_step_io_shapes(artifacts):
+    out, manifest = artifacts
+    art = {a["name"]: a for a in manifest["artifacts"]}["tiny.lm_step"]
+    p = manifest["presets"]["tiny"]
+    ins = {i["name"]: i for i in art["inputs"]}
+    assert ins["emb_rows"]["shape"] == [p["k"], p["de"]]
+    assert ins["sm_rows"]["shape"] == [p["nc"], p["de"]]
+    assert ins["xslot"]["shape"] == [p["b"], p["t"]]
+    assert ins["xslot"]["dtype"] == "i32"
+    # outputs: loss + 8 grads + h_t + c_t
+    assert len(art["outputs"]) == 11
+    assert art["outputs"][0]["shape"] == []
+
+
+def test_sketch_opt_io_shapes(artifacts):
+    out, manifest = artifacts
+    p = manifest["presets"]["tiny"]
+    name = f"opt.cs_adam.k{p['k']}.d{p['de']}.v{p['v']}.w{p['w_emb']}"
+    art = {a["name"]: a for a in manifest["artifacts"]}[name]
+    ins = {i["name"]: i for i in art["inputs"]}
+    assert ins["sk_m"]["shape"] == [p["v"], p["w_emb"], p["de"]]
+    assert ins["idx"]["shape"] == [p["v"], p["k"]]
+    assert ins["lr"]["shape"] == []
+    # outputs: rows', sk_m', sk_v'
+    assert [o["shape"] for o in art["outputs"]] == [
+        [p["k"], p["de"]],
+        [p["v"], p["w_emb"], p["de"]],
+        [p["v"], p["w_emb"], p["de"]],
+    ]
+
+
+def test_hyper_recorded(artifacts):
+    _, manifest = artifacts
+    h = manifest["hyper"]
+    assert h["adam_beta1"] == 0.9
+    assert h["sketch_depth"] == 3
+    assert "hash_seed" in h

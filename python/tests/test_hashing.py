@@ -1,0 +1,59 @@
+"""Hash-family tests: golden vectors (pinned against Rust), distribution,
+determinism, sign balance."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import hashing
+
+
+def test_splitmix64_golden_vectors():
+    # These exact values are also asserted in rust/src/sketch/hash.rs —
+    # if either side changes, state interchange silently breaks.
+    assert int(hashing.splitmix64(np.uint64(0))) == 0xE220A8397B1DCDAF
+    assert int(hashing.splitmix64(np.uint64(1))) == 0x910A2DEC89025CC1
+    assert int(hashing.splitmix64(np.uint64(2))) == 0x975835DE1C9756CE
+    assert int(hashing.splitmix64(np.uint64(0x9E3779B97F4A7C15))) == int(
+        hashing.splitmix64(np.uint64(0x9E3779B97F4A7C15))
+    )
+
+
+def test_buckets_deterministic():
+    ids = np.arange(100)
+    a = hashing.buckets_and_signs(ids, 3, 64, 7)
+    b = hashing.buckets_and_signs(ids, 3, 64, 7)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_buckets_depth_rows_independent():
+    ids = np.arange(4096)
+    idx, _ = hashing.buckets_and_signs(ids, 3, 64, 7)
+    # different depth rows should disagree on most ids
+    agree01 = float(np.mean(idx[0] == idx[1]))
+    agree12 = float(np.mean(idx[1] == idx[2]))
+    assert agree01 < 0.05 and agree12 < 0.05
+
+
+def test_bucket_range_and_uniformity():
+    ids = np.arange(20000)
+    w = 32
+    idx, sign = hashing.buckets_and_signs(ids, 3, w, 123)
+    assert idx.min() >= 0 and idx.max() < w
+    counts = np.bincount(idx[0], minlength=w)
+    # each bucket expects 625; chi-square-ish slack
+    assert counts.min() > 400 and counts.max() < 900
+
+
+def test_sign_balance_and_values():
+    ids = np.arange(20000)
+    _, sign = hashing.buckets_and_signs(ids, 3, 32, 9)
+    assert set(np.unique(sign)) == {-1.0, 1.0}
+    assert abs(float(sign.mean())) < 0.05
+
+
+def test_seed_changes_mapping():
+    ids = np.arange(1000)
+    a, _ = hashing.buckets_and_signs(ids, 3, 64, 1)
+    b, _ = hashing.buckets_and_signs(ids, 3, 64, 2)
+    assert float(np.mean(a == b)) < 0.1

@@ -1,0 +1,161 @@
+"""Sketched optimizer step graphs: Pallas vs oracle, exact-match vs dense
+under injective hashing, mask semantics (padded rows must not pollute the
+sketch), and multi-step convergence sanity."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hashing, ref, sketch_ops as ops
+from compile import model
+
+SEED = 0x5EED
+ADAM = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8)
+
+
+def case(rng, v=3, w=16, d=8, k=10):
+    ids = rng.choice(4 * k, size=k, replace=False)
+    idx, sign = hashing.buckets_and_signs(ids, v, w, SEED)
+    sk = rng.normal(size=(v, w, d)).astype(np.float32)
+    g = rng.normal(size=(k, d)).astype(np.float32)
+    p = rng.normal(size=(k, d)).astype(np.float32)
+    return (jnp.asarray(idx), jnp.asarray(sign), jnp.asarray(sk),
+            jnp.asarray(g), jnp.asarray(p))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.tuples(st.integers(1, 5), st.integers(2, 24), st.integers(1, 16),
+                 st.integers(1, 40)))
+def test_adam_step_pallas_vs_ref(seed, shape):
+    v, w, d, k = shape
+    rng = np.random.default_rng(seed)
+    idx, sign, sk, g, p = case(rng, v, w, d, k)
+    sk_v = jnp.abs(sk)
+    pa, ma, va = ref.adam_step(p, sk, sk_v, idx, sign, g, t=4.0, **ADAM)
+    pb, mb, vb = ops.adam_step(p, sk, sk_v, idx, sign, g, t=4.0, block_k=16,
+                               **ADAM)
+    np.testing.assert_allclose(pa, pb, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(ma, mb, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(va, vb, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_momentum_and_adagrad_steps(seed):
+    rng = np.random.default_rng(seed)
+    idx, sign, sk, g, p = case(rng)
+    pa, _ = ref.momentum_step(p, sk, idx, sign, g, lr=0.1, gamma=0.9)
+    pb, _ = ops.momentum_step(p, sk, idx, sign, g, lr=0.1, gamma=0.9, block_k=4)
+    np.testing.assert_allclose(pa, pb, rtol=1e-5, atol=1e-6)
+
+    sk_v = jnp.abs(sk)
+    pa, _ = ref.adagrad_step(p, sk_v, idx, g, lr=0.1, eps=1e-10)
+    pb, _ = ops.adagrad_step(p, sk_v, idx, g, lr=0.1, eps=1e-10, block_k=4)
+    np.testing.assert_allclose(pa, pb, rtol=1e-5, atol=1e-6)
+
+
+def test_cs_adam_equals_dense_adam_injective():
+    """DESIGN.md §6.5: with injective hashing the sketched optimizer must
+    reproduce dense (sparse-row) Adam exactly, step for step."""
+    rng = np.random.default_rng(7)
+    v, k, d, w = 3, 8, 4, 16
+    idx = jnp.asarray(np.tile(np.arange(k), (v, 1)).astype(np.int32))
+    sign = jnp.ones((v, k), jnp.float32)
+    p = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    p_dense = p
+    sk_m = jnp.zeros((v, w, d), jnp.float32)
+    sk_v = jnp.zeros((v, w, d), jnp.float32)
+    m = jnp.zeros((k, d))
+    vv = jnp.zeros((k, d))
+    for t in range(1, 6):
+        g = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+        p, sk_m, sk_v = ref.adam_step(p, sk_m, sk_v, idx, sign, g,
+                                      t=float(t), **ADAM)
+        p_dense, m, vv = ref.dense_adam_rows(p_dense, m, vv, g,
+                                             t=float(t), **ADAM)
+        np.testing.assert_allclose(p, p_dense, rtol=1e-5, atol=1e-6)
+
+
+def test_mask_prevents_sketch_pollution():
+    """A padded (mask=0) row must leave the sketch, the parameters, and all
+    other rows' estimates bit-identical to a run without it."""
+    rng = np.random.default_rng(8)
+    v, w, d, k = 3, 16, 8, 6
+    ids = np.arange(k)
+    idx, sign = hashing.buckets_and_signs(ids, v, w, SEED)
+    idx, sign = jnp.asarray(idx), jnp.asarray(sign)
+    p = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    sk_m = jnp.asarray(rng.normal(size=(v, w, d)).astype(np.float32))
+    sk_v = jnp.abs(sk_m)
+    mask_full = jnp.ones((k,), jnp.float32)
+    mask_pad = mask_full.at[-1].set(0.0)
+
+    p1, m1, v1 = model.cs_adam_rows(p, sk_m, sk_v, idx, sign, g, mask_pad,
+                                    1e-3, 2.0, beta1=0.9, beta2=0.999,
+                                    eps=1e-8, block_k=4)
+    # reference: run only the live rows through the unmasked step
+    live = slice(0, k - 1)
+    p2, m2, v2 = model.cs_adam_rows(p[live], sk_m, sk_v, idx[:, live],
+                                    sign[:, live], g[live],
+                                    mask_full[live], 1e-3, 2.0, beta1=0.9,
+                                    beta2=0.999, eps=1e-8, block_k=4)
+    np.testing.assert_allclose(m1, m2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(p1[live], p2, rtol=1e-6, atol=1e-6)
+    # padded parameter row unchanged
+    np.testing.assert_allclose(p1[-1], p[-1], rtol=1e-6)
+
+
+def test_masked_variants_momentum_adagrad_admv():
+    rng = np.random.default_rng(9)
+    v, w, d, k = 3, 16, 8, 5
+    idx, sign = hashing.buckets_and_signs(np.arange(k), v, w, SEED)
+    idx, sign = jnp.asarray(idx), jnp.asarray(sign)
+    p = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    g = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    sk = jnp.zeros((v, w, d), jnp.float32)
+    mask = jnp.ones((k,), jnp.float32).at[0].set(0.0)
+
+    p1, m1 = model.cs_momentum_rows(p, sk, idx, sign, g, mask, 0.1,
+                                    gamma=0.9, block_k=4)
+    np.testing.assert_allclose(p1[0], p[0], rtol=1e-6)
+
+    p2, v2 = model.cms_adagrad_rows(p, sk, idx, g, mask, 0.1, eps=1e-10,
+                                    block_k=4)
+    np.testing.assert_allclose(p2[0], p[0], rtol=1e-6)
+
+    p3, v3 = model.cms_adam_v_rows(p, sk, idx, g, mask, 1e-3, 1.0,
+                                   beta2=0.999, eps=1e-8, block_k=4)
+    np.testing.assert_allclose(p3[0], p[0], rtol=1e-6)
+
+
+def test_sketched_adam_converges_on_quadratic():
+    """End-to-end sanity: CS-Adam minimizes a sparse quadratic, and a wider
+    sketch gets at least as close (graceful degradation, paper §5)."""
+    rng = np.random.default_rng(10)
+    n, d, k, v = 64, 4, 16, 3
+    target = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+    def run(w, steps=150):
+        p = jnp.zeros((n, d), jnp.float32)
+        sk_m = jnp.zeros((v, w, d), jnp.float32)
+        sk_v = jnp.zeros((v, w, d), jnp.float32)
+        for t in range(1, steps + 1):
+            ids = rng.choice(n, size=k, replace=False)
+            idx, sign = hashing.buckets_and_signs(ids, v, w, SEED)
+            idx, sign = jnp.asarray(idx), jnp.asarray(sign)
+            g = p[ids] - target[ids]
+            rows, sk_m, sk_v = ref.adam_step(p[ids], sk_m, sk_v, idx, sign,
+                                             g, t=float(t), lr=0.05,
+                                             beta1=0.9, beta2=0.999, eps=1e-8)
+            p = p.at[ids].set(rows)
+        return float(jnp.mean((p - target) ** 2))
+
+    base = float(jnp.mean(target ** 2))
+    narrow = run(w=8)
+    wide = run(w=64)
+    assert narrow < base          # it optimizes at all
+    assert wide < base * 0.5      # wider sketch clearly converges

@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracle: hypothesis sweeps over shapes/depths,
+plus the analytic sketch invariants (linearity, exact recovery, CMS
+overestimation)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hashing, ref, sketch_ops as ops
+
+SEED = 0x5EED
+
+
+def make_case(rng, v, w, d, k, n=None):
+    n = n or max(4 * k, w)
+    ids = rng.choice(n, size=k, replace=False)
+    idx, sign = hashing.buckets_and_signs(ids, v, w, SEED)
+    sk = rng.normal(size=(v, w, d)).astype(np.float32)
+    g = rng.normal(size=(k, d)).astype(np.float32)
+    return jnp.asarray(idx), jnp.asarray(sign), jnp.asarray(sk), jnp.asarray(g)
+
+
+shape_st = st.tuples(
+    st.integers(1, 5),      # v
+    st.integers(2, 37),     # w
+    st.integers(1, 33),     # d
+    st.integers(1, 50),     # k
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_st, st.integers(0, 2**31 - 1), st.sampled_from([4, 16, 128]))
+def test_cs_query_matches_ref(shape, seed, bk):
+    v, w, d, k = shape
+    rng = np.random.default_rng(seed)
+    idx, sign, sk, _ = make_case(rng, v, w, d, k)
+    got = ops.cs_query(sk, idx, sign, block_k=bk)
+    want = ref.cs_query(sk, idx, sign)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape_st, st.integers(0, 2**31 - 1), st.sampled_from([4, 128]))
+def test_cms_query_matches_ref(shape, seed, bk):
+    v, w, d, k = shape
+    rng = np.random.default_rng(seed)
+    idx, _, sk, _ = make_case(rng, v, w, d, k)
+    got = ops.cms_query(sk, idx, block_k=bk)
+    want = ref.cms_query(sk, idx)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape_st, st.integers(0, 2**31 - 1))
+def test_updates_match_ref(shape, seed):
+    v, w, d, k = shape
+    rng = np.random.default_rng(seed)
+    idx, sign, sk, g = make_case(rng, v, w, d, k)
+    np.testing.assert_allclose(
+        ops.cs_update(sk, idx, sign, g), ref.cs_update(sk, idx, sign, g),
+        rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        ops.cms_update(sk, idx, g), ref.cms_update(sk, idx, g),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_update_is_linear():
+    """UPDATE(a·Δ1 + b·Δ2) == a·UPDATE(Δ1) + b·UPDATE(Δ2) on a zero sketch —
+    the linearity property that makes sketches valid for the optimizer
+    rewrites of paper §4."""
+    rng = np.random.default_rng(1)
+    idx, sign, sk, g1 = make_case(rng, 3, 16, 8, 10)
+    g2 = jnp.asarray(rng.normal(size=g1.shape).astype(np.float32))
+    z = jnp.zeros_like(sk)
+    lhs = ref.cs_update(z, idx, sign, 2.0 * g1 - 3.0 * g2)
+    rhs = 2.0 * ref.cs_update(z, idx, sign, g1) - 3.0 * ref.cs_update(z, idx, sign, g2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-5, atol=1e-5)
+
+
+def test_exact_recovery_injective_hash():
+    """With w ≥ n and an injective mapping, QUERY(UPDATE(Δ)) ≡ Δ exactly."""
+    v, k, d, w = 3, 12, 5, 32
+    ids = np.arange(k)
+    # identity-style injective mapping: bucket = id for every depth
+    idx = jnp.asarray(np.tile(ids, (v, 1)).astype(np.int32))
+    sign = jnp.asarray(np.ones((v, k), np.float32))
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    sk = ref.cs_update(jnp.zeros((v, w, d), jnp.float32), idx, sign, g)
+    np.testing.assert_allclose(ref.cs_query(sk, idx, sign), g, rtol=1e-6)
+    np.testing.assert_allclose(ops.cs_query(sk, idx, sign, block_k=4), g, rtol=1e-6)
+
+
+def test_cms_overestimates_nonnegative_stream():
+    """Count-Min property (paper §2): for non-negative updates the estimate
+    never underestimates: x_i ≤ x̂_i ≤ x_i + ε‖x‖₁."""
+    rng = np.random.default_rng(3)
+    v, w, d, n = 3, 8, 4, 64
+    ids = np.arange(n)
+    idx, _ = hashing.buckets_and_signs(ids, v, w, SEED)
+    idx = jnp.asarray(idx)
+    x = jnp.asarray(np.abs(rng.normal(size=(n, d))).astype(np.float32))
+    sk = ref.cms_update(jnp.zeros((v, w, d), jnp.float32), idx, x)
+    est = ref.cms_query(sk, idx)
+    assert bool(jnp.all(est >= x - 1e-5))
+    l1 = float(jnp.sum(jnp.abs(x)))
+    assert bool(jnp.all(est <= x + l1 + 1e-3))
+
+
+def test_cs_median_unbiased_tendency():
+    """Count-Sketch estimates of a heavy hitter stay close when the tail is
+    small relative to the head (heavy-hitter preservation, paper §3)."""
+    rng = np.random.default_rng(4)
+    v, w, d, n = 5, 64, 1, 512
+    ids = np.arange(n)
+    idx, sign = hashing.buckets_and_signs(ids, v, w, SEED)
+    idx, sign = jnp.asarray(idx), jnp.asarray(sign)
+    x = np.full((n, d), 0.01, np.float32)
+    x[7] = 100.0  # heavy hitter
+    x = jnp.asarray(x)
+    sk = ref.cs_update(jnp.zeros((v, w, d), jnp.float32), idx, sign, x)
+    est = ref.cs_query(sk, idx, sign)
+    assert abs(float(est[7, 0]) - 100.0) < 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_median_depth_definition(v, seed):
+    """Kernel median (min/max network for v≤3) equals jnp.median."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(v, 6, 3)).astype(np.float32)
+    got = ops.cs_query_gathered(jnp.asarray(x), jnp.ones((v, 6), jnp.float32),
+                                block_k=4)
+    np.testing.assert_allclose(got, np.median(x, axis=0), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,62 @@
+//! Pure-Rust model-engine benches: matmul kernels, LSTM step, full LM
+//! train step — identifies the L3 compute bottlenecks for §Perf.
+
+use csopt::model::linalg::{mm, mm_at, mm_bt};
+use csopt::model::{LmGrads, LmModel};
+use csopt::util::bench::{black_box, Bench};
+use csopt::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::from_env("model");
+    let mut rng = Rng::new(1);
+
+    // matmul shapes from the tiny/wt103 presets
+    for &(m, k, n, label) in &[
+        (32usize, 64usize, 256usize, "mm/32x64x256"),
+        (1120, 512, 2048, "mm/1120x512x2048"),
+    ] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bb: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut out = vec![0.0f32; m * n];
+        b.bench(label, || {
+            mm(&a, &bb, m, k, n, &mut out, false);
+            black_box(&out);
+        });
+        let mut out2 = vec![0.0f32; k * n];
+        let at: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        b.bench(&format!("{label}.at"), || {
+            mm_at(&at[..m * k.min(at.len() / m)], &a[..m * (k.min(a.len() / m))], m, k, k, &mut out2[..k * k], false);
+            black_box(&out2);
+        });
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut out3 = vec![0.0f32; m * n];
+        b.bench(&format!("{label}.bt"), || {
+            mm_bt(&a, &bt, m, k, n, &mut out3, false);
+            black_box(&out3);
+        });
+    }
+
+    // full tiny LM train step
+    let (k, nc, bt, t_len, de, hd) = (64usize, 128usize, 4usize, 8usize, 32usize, 64usize);
+    let model = LmModel::new(de, hd, &mut rng);
+    let mut emb = vec![0.0f32; k * de];
+    rng.fill_normal(&mut emb, 0.1);
+    let mut sm = vec![0.0f32; nc * de];
+    rng.fill_normal(&mut sm, 0.1);
+    let smb = vec![0.0f32; nc];
+    let xs: Vec<i32> = (0..bt * t_len).map(|_| rng.below(k) as i32).collect();
+    let ys: Vec<i32> = (0..bt * t_len).map(|_| rng.below(nc) as i32).collect();
+    let h0 = vec![0.0f32; bt * hd];
+    let c0 = vec![0.0f32; bt * hd];
+    let mut grads = LmGrads::default();
+    b.bench("lm_train_step/tiny", || {
+        let out = model.train_step(&emb, k, &sm, &smb, nc, &xs, &ys, bt, t_len, &h0, &c0, &mut grads);
+        black_box(out.loss);
+    });
+    b.bench("lm_eval_step/tiny", || {
+        let out = model.eval_step(&emb, &sm, &smb, nc, &xs, &ys, bt, t_len, &h0, &c0);
+        black_box(out.loss);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,51 @@
+//! Data-pipeline benches: corpus generation, BPTT batching, dedup planning,
+//! candidate sampling, prefetch overhead.
+
+use csopt::data::batcher::{BatchPlan, BpttBatcher};
+use csopt::data::corpus::SyntheticCorpus;
+use csopt::data::prefetch::PrefetchedBatches;
+use csopt::train::sampler::CandidateSampler;
+use csopt::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::from_env("pipeline");
+
+    b.bench("corpus/zipf_gen.100k", || {
+        let c = SyntheticCorpus::generate(8192, 100_000, 1.05, 0.6, 1);
+        black_box(c.tokens.len());
+    });
+
+    let corpus = SyntheticCorpus::generate(32_768, 400_000, 1.05, 0.6, 2);
+    b.bench("batcher/epoch.b32.t35", || {
+        let mut batcher = BpttBatcher::new(&corpus.tokens, 32, 35);
+        let mut n = 0;
+        while let Some(w) = batcher.next_batch() {
+            n += w.x.len();
+        }
+        black_box(n);
+    });
+
+    let mut batcher = BpttBatcher::new(&corpus.tokens, 32, 35);
+    let batch = batcher.next_batch().unwrap();
+    b.bench("plan/dedup.1120pos", || {
+        let plan = BatchPlan::build(&batch.x, 1152, 0);
+        black_box(plan.live);
+    });
+
+    let mut sampler = CandidateSampler::new(32_768, 2048, 3);
+    b.bench("sampler/nc2048", || {
+        let c = sampler.sample(&batch.y);
+        black_box(c.ids.len());
+    });
+
+    b.bench("prefetch/epoch_overhead.b32.t35", || {
+        let pre = PrefetchedBatches::start(corpus.tokens[..120_000].to_vec(), 32, 35, 4);
+        let mut n = 0;
+        while let Some(w) = pre.next() {
+            n += w.x.len();
+        }
+        black_box(n);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,58 @@
+//! Runtime benches: PJRT dispatch overhead and the end-to-end train-step
+//! cost for both engines and both optimizer paths — the Table 5/6 "time"
+//! columns at micro scale. Requires `make artifacts`.
+
+use csopt::config::lm_preset;
+use csopt::exp::common::corpus_for;
+use csopt::optim::OptimKind;
+use csopt::runtime::{Arg, Runtime};
+use csopt::train::engine::{LmEngine, RustLmEngine, XlaLmEngine};
+use csopt::train::trainer::{LmTrainer, OptChoice, TrainerOptions};
+use csopt::util::bench::{black_box, Bench};
+use csopt::util::rng::Rng;
+
+fn main() {
+    let dir = std::env::var("CSOPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let Ok(rt) = Runtime::open(&dir) else {
+        eprintln!("skipping bench_runtime: no artifacts at {dir} (run `make artifacts`)");
+        return;
+    };
+    let mut b = Bench::from_env("runtime");
+
+    // raw dispatch overhead: trivial graph round-trip
+    let axpy = rt.load("smoke.axpy").unwrap();
+    let x = [1.0f32, 2.0, 3.0, 4.0];
+    b.bench("dispatch/axpy_roundtrip", || {
+        let outs = axpy.call(&[Arg::ScalarF32(2.0), Arg::F32(&x)]).unwrap();
+        black_box(outs.len());
+    });
+
+    // end-to-end tiny train step, rust vs xla engine, sketch vs sketch-xla
+    let preset = lm_preset("tiny").unwrap();
+    let corpus = corpus_for(&preset, 16, 5);
+    let (train, _, _) = corpus.split(0.05, 0.05);
+    let mut batcher = csopt::data::batcher::BpttBatcher::new(train, preset.batch, preset.bptt);
+    let batch = batcher.next_batch().unwrap();
+
+    for (label, engine, emb_opt) in [
+        ("train_step/rust+sketch", "rust", OptChoice::Sketch),
+        ("train_step/xla+sketch", "xla", OptChoice::Sketch),
+        ("train_step/xla+sketch-xla", "xla", OptChoice::SketchXla),
+    ] {
+        let mut opts = TrainerOptions::new(preset, OptimKind::Adam, 1e-3);
+        opts.emb_opt = emb_opt;
+        let mut rng = Rng::new(1);
+        let eng: Box<dyn LmEngine> = if engine == "rust" {
+            Box::new(RustLmEngine::new(preset, &mut rng))
+        } else {
+            Box::new(XlaLmEngine::new(preset, &rt, &mut rng).unwrap())
+        };
+        let mut tr = LmTrainer::new(opts, eng, Some(&rt)).unwrap();
+        b.bench(label, || {
+            let loss = tr.train_step(&batch.x, &batch.y);
+            black_box(loss);
+        });
+    }
+
+    b.finish();
+}

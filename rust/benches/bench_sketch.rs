@@ -1,0 +1,84 @@
+//! Hot-path microbenches: count-sketch UPDATE/QUERY and the fused
+//! optimizer steps, at paper-like shapes. Feeds EXPERIMENTS.md §Perf.
+
+use csopt::optim::{CmsAdagrad, CsAdam, CsMomentum, DenseAdam, RowOptimizer};
+use csopt::sketch::{CountMinSketch, CountSketch};
+use csopt::util::bench::{black_box, Bench};
+use csopt::util::rng::Rng;
+
+fn ids_and_grads(n: usize, k: usize, d: usize, seed: u64) -> (Vec<u64>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let ids: Vec<u64> = rng.sample_distinct(n, k).into_iter().map(|x| x as u64).collect();
+    let grads: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    (ids, grads)
+}
+
+fn main() {
+    let mut b = Bench::from_env("sketch");
+
+    // paper-like shape: wt103 embedding layer (d=256, w=6554, v=3)
+    for &(k, d, w) in &[(256usize, 64usize, 2048usize), (1152, 256, 6554)] {
+        let (ids, grads) = ids_and_grads(32_768, k, d, 1);
+        let mut cs = CountSketch::new(3, w, d, 7);
+        b.bench(&format!("cs_update/k{k}.d{d}.w{w}"), || {
+            cs.update(&ids, &grads);
+            black_box(&cs);
+        });
+        let mut out = vec![0.0f32; k * d];
+        b.bench(&format!("cs_query/k{k}.d{d}.w{w}"), || {
+            cs.query(&ids, &mut out);
+            black_box(&out);
+        });
+        let mut cms = CountMinSketch::new(3, w, d, 7);
+        b.bench(&format!("cms_update/k{k}.d{d}.w{w}"), || {
+            cms.update(&ids, &grads);
+            black_box(&cms);
+        });
+        b.bench(&format!("cms_query/k{k}.d{d}.w{w}"), || {
+            cms.query(&ids, &mut out);
+            black_box(&out);
+        });
+    }
+
+    // fused optimizer steps vs the dense baseline (k=1152, d=256 = wt103)
+    let (k, d, n, w) = (1152usize, 256usize, 32_768usize, 6554usize);
+    let (ids, grads) = ids_and_grads(n, k, d, 2);
+    let mut rows = vec![0.5f32; k * d];
+
+    let mut cs_adam = CsAdam::new(3, w, d, 7, 0.9, 0.999, 1e-8);
+    let mut t = 0usize;
+    b.bench("step/cs_adam.k1152.d256", || {
+        t += 1;
+        cs_adam.step_rows(&ids, &mut rows, &grads, 1e-3, t);
+        black_box(&rows);
+    });
+
+    let mut dense_adam = DenseAdam::new(n, d, 0.9, 0.999, 1e-8);
+    let mut t = 0usize;
+    b.bench("step/dense_adam.k1152.d256", || {
+        t += 1;
+        dense_adam.step_rows(&ids, &mut rows, &grads, 1e-3, t);
+        black_box(&rows);
+    });
+
+    let mut cs_mom = CsMomentum::new(3, w, d, 7, 0.9);
+    b.bench("step/cs_momentum.k1152.d256", || {
+        cs_mom.step_rows(&ids, &mut rows, &grads, 1e-3, 1);
+        black_box(&rows);
+    });
+
+    let mut cms_ada = CmsAdagrad::new(3, w, d, 7, 1e-10);
+    b.bench("step/cms_adagrad.k1152.d256", || {
+        cms_ada.step_rows(&ids, &mut rows, &grads, 1e-3, 1);
+        black_box(&rows);
+    });
+
+    // fold + clean maintenance ops
+    let mut cs = CountSketch::new(3, 8192, 256, 9);
+    b.bench("maintenance/clean.w8192.d256", || {
+        cs.tensor_mut().scale(0.5);
+        black_box(&cs);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,167 @@
+//! Model/experiment presets — the Rust mirror of `python/compile/aot.py`.
+//!
+//! The numbers here **must** match the Python side (the AOT artifacts are
+//! shape-specialized); when a manifest is available the values are
+//! cross-checked against it at runtime. Presets are CPU-runnable stand-ins
+//! for the paper's datasets (DESIGN.md §4).
+
+use anyhow::{bail, Result};
+
+/// Shared optimizer hyper-parameters (baked into the AOT graphs).
+#[derive(Clone, Copy, Debug)]
+pub struct Hyper {
+    pub adam_beta1: f32,
+    pub adam_beta2: f32,
+    pub adam_eps: f32,
+    pub momentum_gamma: f32,
+    pub adagrad_eps: f32,
+    pub hash_seed: u64,
+    pub sketch_depth: usize,
+}
+
+impl Hyper {
+    pub const DEFAULT: Hyper = Hyper {
+        adam_beta1: 0.9,
+        adam_beta2: 0.999,
+        adam_eps: 1e-8,
+        momentum_gamma: 0.9,
+        adagrad_eps: 1e-10,
+        hash_seed: 0x5EED,
+        sketch_depth: 3,
+    };
+}
+
+/// Language-model preset.
+#[derive(Clone, Copy, Debug)]
+pub struct LmPreset {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub de: usize,
+    pub hd: usize,
+    pub batch: usize,
+    pub bptt: usize,
+    /// Softmax candidate count (== vocab → full softmax).
+    pub nc: usize,
+    /// Padded unique-token slots (`round_up(b·T, 64)`).
+    pub k: usize,
+    /// Sketch depth.
+    pub v: usize,
+    /// Sketch width for the embedding-layer aux variables.
+    pub w_emb: usize,
+    /// Sketch width for the softmax-layer aux variables.
+    pub w_sm: usize,
+}
+
+impl LmPreset {
+    pub fn full_softmax(&self) -> bool {
+        self.nc == self.vocab
+    }
+
+    /// Dense trunk parameter count (must equal aot.py's `pflat`).
+    pub fn flat_len(&self) -> usize {
+        self.de * 4 * self.hd + self.hd * 4 * self.hd + 4 * self.hd + self.hd * self.de + self.de
+    }
+}
+
+/// Classifier preset.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpPreset {
+    pub name: &'static str,
+    pub din: usize,
+    pub hd: usize,
+    pub ncls: usize,
+    pub nc: usize,
+    pub batch: usize,
+    pub v: usize,
+    pub w_out: usize,
+}
+
+const fn round_up(x: usize, m: usize) -> usize {
+    (x + m - 1) / m * m
+}
+
+/// The LM presets (see aot.py for the dataset mapping).
+pub const LM_PRESETS: &[LmPreset] = &[
+    LmPreset { name: "tiny", vocab: 512, de: 32, hd: 64, batch: 4, bptt: 8, nc: 128, k: round_up(4 * 8, 64), v: 3, w_emb: 103, w_sm: 32 },
+    LmPreset { name: "wt2", vocab: 8192, de: 128, hd: 256, batch: 20, bptt: 35, nc: 8192, k: round_up(20 * 35, 64), v: 3, w_emb: 16, w_sm: 16 },
+    LmPreset { name: "wt103", vocab: 32768, de: 256, hd: 512, batch: 32, bptt: 35, nc: 2048, k: round_up(32 * 35, 64), v: 3, w_emb: 6554, w_sm: 6554 },
+    LmPreset { name: "lm1b", vocab: 131072, de: 256, hd: 1024, batch: 64, bptt: 20, nc: 4096, k: round_up(64 * 20, 64), v: 3, w_emb: 26214, w_sm: 26214 },
+];
+
+/// The classifier presets.
+pub const MLP_PRESETS: &[MlpPreset] = &[
+    MlpPreset { name: "megaface", din: 512, hd: 512, ncls: 10_000, nc: 1024, batch: 64, v: 3, w_out: 2000 },
+    MlpPreset { name: "amazon", din: 2048, hd: 512, ncls: 2_000_000, nc: 2048, batch: 256, v: 3, w_out: 26 },
+];
+
+/// Look up an LM preset by name.
+pub fn lm_preset(name: &str) -> Result<LmPreset> {
+    for p in LM_PRESETS {
+        if p.name == name {
+            return Ok(*p);
+        }
+    }
+    bail!("unknown LM preset {name:?} (have: tiny, wt2, wt103, lm1b)")
+}
+
+/// Look up a classifier preset by name.
+pub fn mlp_preset(name: &str) -> Result<MlpPreset> {
+    for p in MLP_PRESETS {
+        if p.name == name {
+            return Ok(*p);
+        }
+    }
+    bail!("unknown MLP preset {name:?} (have: megaface, amazon)")
+}
+
+/// Validate a preset against the manifest the artifacts were built with.
+pub fn check_against_manifest(p: &LmPreset, m: &crate::runtime::Manifest) -> Result<()> {
+    let Some(fields) = m.presets.get(p.name) else {
+        bail!("preset {:?} not present in manifest (re-run make artifacts)", p.name);
+    };
+    for (key, want) in [
+        ("vocab", p.vocab),
+        ("de", p.de),
+        ("hd", p.hd),
+        ("b", p.batch),
+        ("t", p.bptt),
+        ("nc", p.nc),
+        ("k", p.k),
+        ("v", p.v),
+        ("w_emb", p.w_emb),
+        ("w_sm", p.w_sm),
+    ] {
+        let got = fields.get(key).copied().unwrap_or(-1.0) as usize;
+        if got != want {
+            bail!("preset {}: field {key} mismatch rust={want} manifest={got}", p.name);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(lm_preset("tiny").unwrap().vocab, 512);
+        assert_eq!(lm_preset("wt2").unwrap().k, 704);
+        assert_eq!(lm_preset("wt103").unwrap().k, 1152);
+        assert!(lm_preset("nope").is_err());
+        assert_eq!(mlp_preset("amazon").unwrap().w_out, 26);
+    }
+
+    #[test]
+    fn wt2_is_full_softmax() {
+        assert!(lm_preset("wt2").unwrap().full_softmax());
+        assert!(!lm_preset("wt103").unwrap().full_softmax());
+    }
+
+    #[test]
+    fn flat_len_matches_aot_formula() {
+        let p = lm_preset("tiny").unwrap();
+        // aot.py: de*4hd + hd*4hd + 4hd + hd*de + de = 26912 for tiny
+        assert_eq!(p.flat_len(), 26_912);
+    }
+}

@@ -1,0 +1,192 @@
+//! BPTT batching for language modelling, plus the [`BatchPlan`] that
+//! implements the coordinator side of the parameter-server split: token
+//! deduplication, slot assignment, padding and mask construction for the
+//! fixed-shape AOT graphs (DESIGN.md §6).
+
+use std::collections::HashMap;
+
+/// One BPTT window: `x` inputs and `y = shift(x)` targets, both `[b, T]`
+/// row-major token ids.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LmBatch {
+    pub x: Vec<u32>,
+    pub y: Vec<u32>,
+    pub batch: usize,
+    pub bptt: usize,
+}
+
+/// Standard LM batching: the stream is cut into `batch` parallel lanes;
+/// successive windows of `bptt` tokens advance every lane in lock-step so
+/// recurrent state carries across windows (as in the paper's LSTM setups).
+pub struct BpttBatcher {
+    lanes: Vec<Vec<u32>>,
+    batch: usize,
+    bptt: usize,
+    cursor: usize,
+}
+
+impl BpttBatcher {
+    /// Build from a token stream. The stream is truncated to a multiple of
+    /// `batch`; each lane holds `len/batch` consecutive tokens.
+    pub fn new(stream: &[u32], batch: usize, bptt: usize) -> BpttBatcher {
+        assert!(batch >= 1 && bptt >= 1);
+        let lane_len = stream.len() / batch;
+        assert!(lane_len > bptt, "stream too short for batch/bptt");
+        let lanes = (0..batch)
+            .map(|b| stream[b * lane_len..(b + 1) * lane_len].to_vec())
+            .collect();
+        BpttBatcher { lanes, batch, bptt, cursor: 0 }
+    }
+
+    /// Number of full windows per epoch.
+    pub fn windows_per_epoch(&self) -> usize {
+        (self.lanes[0].len() - 1) / self.bptt
+    }
+
+    /// Reset to the epoch start.
+    pub fn reset(&mut self) {
+        self.cursor = 0;
+    }
+
+    /// Next window, or None at epoch end.
+    pub fn next_batch(&mut self) -> Option<LmBatch> {
+        let start = self.cursor * self.bptt;
+        if start + self.bptt + 1 > self.lanes[0].len() {
+            return None;
+        }
+        let mut x = Vec::with_capacity(self.batch * self.bptt);
+        let mut y = Vec::with_capacity(self.batch * self.bptt);
+        for lane in &self.lanes {
+            x.extend_from_slice(&lane[start..start + self.bptt]);
+            y.extend_from_slice(&lane[start + 1..start + self.bptt + 1]);
+        }
+        self.cursor += 1;
+        Some(LmBatch { x, y, batch: self.batch, bptt: self.bptt })
+    }
+}
+
+/// Coordinator-side plan for one batch against the fixed-shape AOT graphs:
+/// deduplicated active rows, per-position slots, and the validity mask.
+#[derive(Clone, Debug)]
+pub struct BatchPlan {
+    /// Unique ids, padded with `pad_id` up to `k_slots`.
+    pub uniq: Vec<u64>,
+    /// Number of live (non-padding) slots.
+    pub live: usize,
+    /// Slot index per original position (same length as the input ids).
+    pub slots: Vec<i32>,
+    /// 1.0 for live slots, 0.0 for padding — the kernel `mask` input.
+    pub mask: Vec<f32>,
+}
+
+impl BatchPlan {
+    /// Deduplicate `ids` into at most `k_slots` slots.
+    ///
+    /// Panics if the batch has more unique ids than `k_slots` (shape
+    /// misconfiguration — `k_slots` is sized as `b·T` so this cannot
+    /// happen for LM batches).
+    pub fn build(ids: &[u32], k_slots: usize, pad_id: u64) -> BatchPlan {
+        let mut slot_of: HashMap<u32, i32> = HashMap::with_capacity(ids.len());
+        let mut uniq: Vec<u64> = Vec::new();
+        let mut slots = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let next = uniq.len() as i32;
+            let s = *slot_of.entry(id).or_insert_with(|| {
+                uniq.push(id as u64);
+                next
+            });
+            slots.push(s);
+        }
+        let live = uniq.len();
+        assert!(live <= k_slots, "batch has {live} unique ids > {k_slots} slots");
+        let mut mask = vec![1.0f32; live];
+        mask.resize(k_slots, 0.0);
+        uniq.resize(k_slots, pad_id);
+        BatchPlan { uniq, live, slots, mask }
+    }
+
+    /// The live unique ids (no padding).
+    pub fn live_ids(&self) -> &[u64] {
+        &self.uniq[..self.live]
+    }
+}
+
+/// Accumulate per-position gradient rows into per-slot rows
+/// (`segment_sum`): `pos_grads` is `[P, d]` aligned with `plan.slots`,
+/// `out` is `[k_slots, d]`.
+pub fn segment_sum_rows(plan: &BatchPlan, pos_grads: &[f32], d: usize, out: &mut [f32]) {
+    assert_eq!(pos_grads.len(), plan.slots.len() * d);
+    assert_eq!(out.len(), plan.uniq.len() * d);
+    out.iter_mut().for_each(|x| *x = 0.0);
+    for (p, &s) in plan.slots.iter().enumerate() {
+        let dst = &mut out[s as usize * d..(s as usize + 1) * d];
+        let src = &pos_grads[p * d..(p + 1) * d];
+        for (o, &x) in dst.iter_mut().zip(src) {
+            *o += x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_cover_stream_in_order() {
+        let stream: Vec<u32> = (0..41).collect();
+        let mut b = BpttBatcher::new(&stream, 2, 4);
+        // lanes: [0..20], [20..40]
+        let w1 = b.next_batch().unwrap();
+        assert_eq!(w1.x[..4], [0, 1, 2, 3]);
+        assert_eq!(w1.y[..4], [1, 2, 3, 4]);
+        assert_eq!(w1.x[4..], [20, 21, 22, 23]);
+        let mut n = 1;
+        while b.next_batch().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, b.windows_per_epoch());
+        b.reset();
+        assert_eq!(b.next_batch().unwrap(), w1);
+    }
+
+    #[test]
+    fn targets_shift_by_one() {
+        let stream: Vec<u32> = (0..100).collect();
+        let mut b = BpttBatcher::new(&stream, 4, 7);
+        while let Some(w) = b.next_batch() {
+            for lane in 0..4 {
+                for t in 0..7 {
+                    assert_eq!(w.y[lane * 7 + t], w.x[lane * 7 + t] + 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_dedupes_and_masks() {
+        let plan = BatchPlan::build(&[5, 7, 5, 9, 7], 8, 0);
+        assert_eq!(plan.live, 3);
+        assert_eq!(plan.live_ids(), &[5, 7, 9]);
+        assert_eq!(plan.slots, vec![0, 1, 0, 2, 1]);
+        assert_eq!(plan.mask[..3], [1.0, 1.0, 1.0]);
+        assert_eq!(plan.mask[3..], [0.0; 5]);
+        assert_eq!(plan.uniq.len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "unique ids")]
+    fn plan_overflow_panics() {
+        BatchPlan::build(&[1, 2, 3], 2, 0);
+    }
+
+    #[test]
+    fn segment_sum_accumulates_duplicates() {
+        let plan = BatchPlan::build(&[3, 3, 4], 4, 0);
+        let pos_grads = [1.0f32, 2.0, 10.0, 20.0, 100.0, 200.0];
+        let mut out = vec![0.0f32; 4 * 2];
+        segment_sum_rows(&plan, &pos_grads, 2, &mut out);
+        assert_eq!(&out[0..2], &[11.0, 22.0]); // slot 0 = id 3 (twice)
+        assert_eq!(&out[2..4], &[100.0, 200.0]); // slot 1 = id 4
+        assert_eq!(&out[4..], &[0.0; 4]); // padding slots zero
+    }
+}

@@ -1,0 +1,192 @@
+//! Classification dataset generators standing in for the paper's MegaFace
+//! and Amazon extreme-classification datasets (DESIGN.md §4).
+//!
+//! * [`GaussianMixture`] — "MegaFace-sim": each class is a unit-ish
+//!   Gaussian around a random center in R^din (the paper used pretrained
+//!   512-d FaceNet embeddings; what Fig. 5 needs is a many-class softmax
+//!   with sparse active-class gradients and a real accuracy signal).
+//! * [`ExtremeDataset`] — "Amazon-sim": power-law class frequencies,
+//!   sparse hashed trigram-like features (~`nnz` non-zeros out of `din`),
+//!   tens of thousands to millions of classes. Exercises the MACH +
+//!   CMS-Adam-V path of §7.3.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// A classification minibatch: dense features + labels.
+#[derive(Clone, Debug)]
+pub struct ClassifBatch {
+    /// `[b, din]` row-major features.
+    pub x: Vec<f32>,
+    /// `[b]` class labels.
+    pub y: Vec<u32>,
+    pub batch: usize,
+    pub din: usize,
+}
+
+/// Gaussian-mixture classification data (MegaFace-sim).
+pub struct GaussianMixture {
+    centers: Vec<f32>,
+    pub classes: usize,
+    pub din: usize,
+    noise: f32,
+    seed: u64,
+}
+
+impl GaussianMixture {
+    /// `classes` centers drawn N(0, 1) in R^din; samples add N(0, noise²).
+    /// Centers are generated lazily per class from the seed, so millions of
+    /// classes cost no upfront memory... except we precompute because
+    /// `din · classes` stays small for the Fig.-5 scale (10k × 512).
+    pub fn new(classes: usize, din: usize, noise: f32, seed: u64) -> GaussianMixture {
+        let mut rng = Rng::new(seed);
+        let mut centers = vec![0.0f32; classes * din];
+        rng.fill_normal(&mut centers, 1.0);
+        GaussianMixture { centers, classes, din, noise, seed }
+    }
+
+    /// Sample a batch with uniformly-random labels.
+    pub fn sample(&self, batch: usize, step: u64) -> ClassifBatch {
+        let mut rng = Rng::new(self.seed ^ step.wrapping_mul(0x9E37_79B9));
+        let mut x = vec![0.0f32; batch * self.din];
+        let mut y = vec![0u32; batch];
+        for b in 0..batch {
+            let cls = rng.below(self.classes);
+            y[b] = cls as u32;
+            let center = &self.centers[cls * self.din..(cls + 1) * self.din];
+            let row = &mut x[b * self.din..(b + 1) * self.din];
+            for (o, &c) in row.iter_mut().zip(center) {
+                *o = c + rng.normal_f32(0.0, self.noise);
+            }
+        }
+        ClassifBatch { x, y, batch, din: self.din }
+    }
+}
+
+/// Extreme-classification data (Amazon-sim): query features are sparse
+/// hashed n-grams correlated with the target class; class frequencies are
+/// Zipf so the output layer sees power-law row traffic.
+pub struct ExtremeDataset {
+    pub classes: usize,
+    pub din: usize,
+    pub nnz: usize,
+    zipf: Zipf,
+    seed: u64,
+}
+
+impl ExtremeDataset {
+    pub fn new(classes: usize, din: usize, nnz: usize, zipf_s: f64, seed: u64) -> ExtremeDataset {
+        ExtremeDataset { classes, din, nnz, zipf: Zipf::new(classes, zipf_s), seed }
+    }
+
+    /// Deterministic feature slots for a class: `nnz` hashed positions,
+    /// so queries of the same class share most active features (the
+    /// learnable signal) plus per-query noise features.
+    fn class_features(&self, cls: usize, out: &mut Vec<(usize, f32)>) {
+        out.clear();
+        let base = crate::util::rng::splitmix64(self.seed ^ (cls as u64));
+        for i in 0..self.nnz {
+            let h = crate::util::rng::splitmix64(base.wrapping_add(i as u64));
+            let slot = (h % self.din as u64) as usize;
+            let weight = 0.5 + ((h >> 32) & 0xFFFF) as f32 / 65536.0;
+            out.push((slot, weight));
+        }
+    }
+
+    /// Sample a batch: labels ~ Zipf, features = class signature + noise.
+    pub fn sample(&self, batch: usize, step: u64) -> ClassifBatch {
+        let mut rng = Rng::new(self.seed ^ step.wrapping_mul(0xA5A5_5A5A));
+        let mut x = vec![0.0f32; batch * self.din];
+        let mut y = vec![0u32; batch];
+        let mut feats = Vec::with_capacity(self.nnz);
+        for b in 0..batch {
+            let cls = self.zipf.sample(&mut rng);
+            y[b] = cls as u32;
+            let row = &mut x[b * self.din..(b + 1) * self.din];
+            self.class_features(cls, &mut feats);
+            for &(slot, w) in &feats {
+                row[slot] += w;
+            }
+            // a few random noise features per query
+            for _ in 0..self.nnz / 4 {
+                row[rng.below(self.din)] += 0.3;
+            }
+        }
+        ClassifBatch { x, y, batch, din: self.din }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixture_is_separable() {
+        // nearest-center classification of fresh samples should be ≈ 100%
+        // at low noise — the dataset carries real signal
+        let gm = GaussianMixture::new(16, 32, 0.2, 1);
+        let batch = gm.sample(64, 9);
+        let mut correct = 0;
+        for b in 0..64 {
+            let row = &batch.x[b * 32..(b + 1) * 32];
+            let mut best = (f32::INFINITY, 0usize);
+            for c in 0..16 {
+                let center = &gm.centers[c * 32..(c + 1) * 32];
+                let d: f32 = row.iter().zip(center).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == batch.y[b] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 60, "correct={correct}");
+    }
+
+    #[test]
+    fn extreme_labels_follow_power_law() {
+        let ds = ExtremeDataset::new(10_000, 256, 16, 1.1, 3);
+        let mut counts = std::collections::HashMap::new();
+        for step in 0..50 {
+            let b = ds.sample(100, step);
+            for &y in &b.y {
+                *counts.entry(y).or_insert(0usize) += 1;
+            }
+        }
+        let head = *counts.get(&0).unwrap_or(&0);
+        let tail: usize = counts.iter().filter(|&(&k, _)| k > 1000).map(|(_, &c)| c).sum();
+        assert!(head > 100, "head={head}");
+        assert!(counts.len() > 100); // many distinct classes seen
+        let _ = tail;
+    }
+
+    #[test]
+    fn extreme_features_are_sparse_and_class_correlated() {
+        let ds = ExtremeDataset::new(100, 512, 16, 1.05, 5);
+        let b1 = ds.sample(32, 1);
+        // sparsity: ≤ nnz + nnz/4 non-zeros per row
+        for b in 0..32 {
+            let nz = b1.x[b * 512..(b + 1) * 512].iter().filter(|&&v| v != 0.0).count();
+            assert!(nz <= 16 + 4 + 1, "nz={nz}");
+            assert!(nz >= 4);
+        }
+        // two samples of the same class share their signature features
+        let mut f = Vec::new();
+        ds.class_features(0, &mut f);
+        assert_eq!(f.len(), 16);
+        let mut f2 = Vec::new();
+        ds.class_features(0, &mut f2);
+        assert_eq!(f, f2);
+    }
+
+    #[test]
+    fn batches_are_deterministic_per_step() {
+        let gm = GaussianMixture::new(4, 8, 0.1, 7);
+        let a = gm.sample(5, 3);
+        let b = gm.sample(5, 3);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x, b.x);
+        let c = gm.sample(5, 4);
+        assert_ne!(a.y, c.y);
+    }
+}

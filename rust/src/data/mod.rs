@@ -1,0 +1,15 @@
+//! Data substrate: synthetic corpora, vocab, BPTT batching, threaded
+//! prefetch, and the classification dataset generators that stand in for
+//! the paper's MegaFace / Amazon datasets (DESIGN.md §4).
+
+pub mod batcher;
+pub mod classif;
+pub mod corpus;
+pub mod prefetch;
+pub mod vocab;
+
+pub use batcher::{BatchPlan, BpttBatcher, LmBatch};
+pub use classif::{ClassifBatch, ExtremeDataset, GaussianMixture};
+pub use corpus::{SyntheticCorpus, TextCorpus};
+pub use prefetch::PrefetchedBatches;
+pub use vocab::Vocab;

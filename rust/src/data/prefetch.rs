@@ -1,0 +1,66 @@
+//! Threaded batch prefetching with bounded-queue backpressure.
+//!
+//! The producer thread walks the epoch's BPTT windows and pushes them into
+//! a bounded queue (`depth` batches); the trainer pops. If the compute
+//! side is the bottleneck the producer blocks — classic pipeline
+//! backpressure — and the queue depth is exported for observability.
+
+use crate::data::batcher::{BpttBatcher, LmBatch};
+use crate::util::threadpool::Pipeline;
+
+/// Prefetched LM batches for one epoch.
+pub struct PrefetchedBatches {
+    pipe: Pipeline<LmBatch>,
+}
+
+impl PrefetchedBatches {
+    /// Spawn a producer for one epoch over `stream`.
+    pub fn start(stream: Vec<u32>, batch: usize, bptt: usize, depth: usize) -> PrefetchedBatches {
+        let pipe = Pipeline::spawn(depth, move |push| {
+            let mut b = BpttBatcher::new(&stream, batch, bptt);
+            while let Some(w) = b.next_batch() {
+                if !push(w) {
+                    return; // consumer dropped early
+                }
+            }
+        });
+        PrefetchedBatches { pipe }
+    }
+
+    /// Next batch (None at epoch end).
+    pub fn next(&self) -> Option<LmBatch> {
+        self.pipe.next()
+    }
+
+    /// Batches currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.pipe.depth()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetch_yields_same_batches_as_direct() {
+        let stream: Vec<u32> = (0..500).map(|x| x % 97).collect();
+        let mut direct = BpttBatcher::new(&stream, 4, 8);
+        let pre = PrefetchedBatches::start(stream.clone(), 4, 8, 3);
+        let mut n = 0;
+        while let Some(w) = pre.next() {
+            assert_eq!(Some(w), direct.next_batch());
+            n += 1;
+        }
+        assert!(direct.next_batch().is_none());
+        assert!(n > 0);
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let stream: Vec<u32> = (0..10_000).collect();
+        let pre = PrefetchedBatches::start(stream, 2, 4, 2);
+        let _ = pre.next();
+        drop(pre); // must join the producer without deadlock
+    }
+}

@@ -1,0 +1,95 @@
+//! Token vocabulary: string ↔ id mapping with an `<unk>` fallback,
+//! frequency-ordered so low ids are the most frequent tokens (matching the
+//! Zipf-rank convention of the synthetic corpora).
+
+use std::collections::HashMap;
+
+/// Vocabulary built from a token stream.
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    id_of: HashMap<String, u32>,
+    token_of: Vec<String>,
+    unk: u32,
+}
+
+impl Vocab {
+    /// Build from tokens, keeping those with count ≥ `min_count`; ids are
+    /// assigned by descending frequency (ties broken lexicographically for
+    /// determinism). Id 0 is always `<unk>`.
+    pub fn build<'a, I: IntoIterator<Item = &'a str>>(tokens: I, min_count: usize) -> Vocab {
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        for t in tokens {
+            *counts.entry(t).or_insert(0) += 1;
+        }
+        let mut kept: Vec<(&str, usize)> =
+            counts.into_iter().filter(|&(_, c)| c >= min_count.max(1)).collect();
+        kept.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let mut token_of = vec!["<unk>".to_string()];
+        token_of.extend(kept.iter().map(|(t, _)| t.to_string()));
+        let id_of = token_of
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        Vocab { id_of, token_of, unk: 0 }
+    }
+
+    /// Vocabulary size (including `<unk>`).
+    pub fn len(&self) -> usize {
+        self.token_of.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.token_of.is_empty()
+    }
+
+    /// Token → id (`<unk>` when out-of-vocabulary).
+    pub fn id(&self, token: &str) -> u32 {
+        self.id_of.get(token).copied().unwrap_or(self.unk)
+    }
+
+    /// Id → token.
+    pub fn token(&self, id: u32) -> &str {
+        &self.token_of[id as usize]
+    }
+
+    pub fn unk_id(&self) -> u32 {
+        self.unk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frequency_ordered_ids() {
+        let v = Vocab::build("b a a a c c".split_whitespace(), 1);
+        assert_eq!(v.len(), 4); // unk + a,b,c
+        assert_eq!(v.id("a"), 1); // most frequent after unk
+        assert_eq!(v.id("c"), 2);
+        assert_eq!(v.id("b"), 3);
+        assert_eq!(v.token(1), "a");
+    }
+
+    #[test]
+    fn oov_maps_to_unk() {
+        let v = Vocab::build("x y".split_whitespace(), 1);
+        assert_eq!(v.id("zzz"), v.unk_id());
+    }
+
+    #[test]
+    fn min_count_filters() {
+        let v = Vocab::build("a a b".split_whitespace(), 2);
+        assert_eq!(v.len(), 2); // unk + a
+        assert_eq!(v.id("b"), v.unk_id());
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        let v1 = Vocab::build("b a".split_whitespace(), 1);
+        let v2 = Vocab::build("a b".split_whitespace(), 1);
+        assert_eq!(v1.id("a"), v2.id("a"));
+        assert_eq!(v1.id("b"), v2.id("b"));
+    }
+}

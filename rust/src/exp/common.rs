@@ -1,0 +1,136 @@
+//! Shared plumbing for the experiment drivers.
+
+use anyhow::Result;
+
+use crate::config::{lm_preset, LmPreset};
+use crate::data::corpus::SyntheticCorpus;
+use crate::optim::{LrSchedule, OptimKind};
+use crate::train::engine::{LmEngine, RustLmEngine, XlaLmEngine};
+use crate::train::trainer::{LmTrainer, OptChoice, TrainerOptions};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+/// Results directory from `--out` (default `results/`).
+pub fn out_dir(args: &Args) -> String {
+    args.get_or("out", "results")
+}
+
+/// Synthetic corpus sized for a preset: ≥ `min_windows` BPTT windows per
+/// epoch with Zipf(1.05) tokens and a 60% bigram backbone.
+pub fn corpus_for(p: &LmPreset, min_windows: usize, seed: u64) -> SyntheticCorpus {
+    let need = p.batch * (p.bptt * min_windows + 1) * 10 / 8; // +val/test slack
+    SyntheticCorpus::generate(p.vocab, need, 1.05, 0.6, seed)
+}
+
+/// Build a trainer for the given variant.
+pub fn build_trainer(
+    preset_name: &str,
+    optim: OptimKind,
+    emb_opt: OptChoice,
+    sm_opt: OptChoice,
+    lr: f32,
+    args: &Args,
+) -> Result<LmTrainer> {
+    let preset = lm_preset(preset_name)?;
+    let mut opts = TrainerOptions::new(preset, optim, lr);
+    opts.emb_opt = emb_opt;
+    opts.sm_opt = sm_opt;
+    opts.clip = args.get_parse("clip", 1.0f32)?;
+    opts.seed = args.get_parse("seed", 42u64)?;
+    let engine_name = args.get_or("engine", "rust");
+    let needs_rt = engine_name == "xla"
+        || emb_opt == OptChoice::SketchXla
+        || sm_opt == OptChoice::SketchXla;
+    let rt = if needs_rt {
+        Some(crate::runtime::Runtime::open_default()?)
+    } else {
+        None
+    };
+    let mut rng = Rng::new(opts.seed ^ 0xE11);
+    let engine: Box<dyn LmEngine> = match engine_name.as_str() {
+        "rust" => Box::new(RustLmEngine::new(preset, &mut rng)),
+        "xla" => Box::new(XlaLmEngine::new(preset, rt.as_ref().unwrap(), &mut rng)?),
+        other => anyhow::bail!("unknown engine {other:?} (rust|xla)"),
+    };
+    LmTrainer::new(opts, engine, rt.as_ref())
+}
+
+/// Same, with a linear-decay schedule over the whole run.
+#[allow(clippy::too_many_arguments)]
+pub fn build_trainer_sched(
+    preset_name: &str,
+    optim: OptimKind,
+    emb_opt: OptChoice,
+    sm_opt: OptChoice,
+    sched: LrSchedule,
+    args: &Args,
+) -> Result<LmTrainer> {
+    let mut tr = build_trainer(preset_name, optim, emb_opt, sm_opt, 0.0, args)?;
+    tr.opts.schedule = sched;
+    Ok(tr)
+}
+
+/// "Midpoint threshold" of Fig. 1: the fraction of entries (sorted by
+/// |value|, descending) needed to accumulate 50% of the total |mass|.
+/// Uniform → 0.5; power-law → ≪ 0.5.
+pub fn midpoint_threshold(values: &[f32]) -> f64 {
+    let mut mags: Vec<f32> = values.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let total: f64 = mags.iter().map(|&x| x as f64).sum();
+    if total <= 0.0 {
+        return 0.5;
+    }
+    let mut acc = 0.0f64;
+    for (i, &m) in mags.iter().enumerate() {
+        acc += m as f64;
+        if acc >= 0.5 * total {
+            return (i + 1) as f64 / mags.len() as f64;
+        }
+    }
+    1.0
+}
+
+/// Pretty-print a result table.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n{title}");
+    let widths: Vec<usize> = header
+        .iter()
+        .enumerate()
+        .map(|(i, h)| rows.iter().map(|r| r[i].len()).chain([h.len()]).max().unwrap_or(0) + 2)
+        .collect();
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (c, w) in cells.iter().zip(&widths) {
+            s.push_str(&format!("{c:<w$}", w = w));
+        }
+        s
+    };
+    println!("{}", line(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().sum()));
+    for r in rows {
+        println!("{}", line(r));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn midpoint_uniform_is_half() {
+        let xs = vec![1.0f32; 1000];
+        assert!((midpoint_threshold(&xs) - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn midpoint_power_law_is_small() {
+        let xs: Vec<f32> = (1..1000).map(|i| 1.0 / (i as f32).powf(1.2)).collect();
+        assert!(midpoint_threshold(&xs) < 0.1);
+    }
+
+    #[test]
+    fn midpoint_degenerate() {
+        assert_eq!(midpoint_threshold(&[0.0, 0.0]), 0.5);
+        assert_eq!(midpoint_threshold(&[5.0]), 1.0);
+    }
+}

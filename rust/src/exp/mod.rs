@@ -1,0 +1,48 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §3).
+//!
+//! `csopt exp <id>` regenerates the corresponding rows/series, printing the
+//! paper-style table and writing CSVs under `results/`. Workloads are the
+//! CPU-scale stand-ins of DESIGN.md §4; the success criterion is the
+//! *shape* of each result (who wins, rough factors), not absolute numbers.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod t3;
+pub mod t4;
+pub mod t5;
+pub mod t67;
+pub mod t8;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::Args;
+
+/// All experiment ids.
+pub const ALL: &[&str] = &["fig1", "fig2", "fig4", "fig5", "t3", "t4", "t5", "t6", "t7", "t8"];
+
+/// Dispatch one experiment by id.
+pub fn run(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => fig1::run(args),
+        "fig2" => fig2::run(args),
+        "fig4" => fig4::run(args),
+        "fig5" => fig5::run(args),
+        "t3" => t3::run(args),
+        "t4" => t4::run(args),
+        "t5" => t5::run(args),
+        // t6 (time/size) and t7 (ppl per epoch) come from the same runs
+        "t6" | "t7" => t67::run(args),
+        "t8" => t8::run(args),
+        "all" => {
+            for id in ["fig1", "fig2", "fig4", "fig5", "t3", "t4", "t5", "t6", "t8"] {
+                println!("\n=== exp {id} ===");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; have {ALL:?} (or 'all')"),
+    }
+}

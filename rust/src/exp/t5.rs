@@ -1,0 +1,85 @@
+//! Table 5 — Wikitext-103(-sim) with **Adagrad** (sampled softmax, both
+//! sparse layers compressed at 5×): wall time, optimizer memory and test
+//! perplexity.
+//!
+//! Paper: time 6.4/6.6/6.7 h · size 10,625/10,089/10,077 MB ·
+//! ppl 57.63 (Adagrad) / 56.07 (CS) / 58.27 (LR-NMF).
+
+use anyhow::Result;
+
+use crate::exp::common::{build_trainer_sched, corpus_for, out_dir, print_table};
+use crate::metrics::CsvWriter;
+use crate::optim::{LrSchedule, OptimKind};
+use crate::train::trainer::OptChoice;
+use crate::util::cli::Args;
+use crate::util::timer::Timer;
+
+pub fn run(args: &Args) -> Result<()> {
+    let epochs = args.get_parse("epochs", 2usize)?;
+    let steps = args.get_parse("steps", 40usize)?;
+    let preset = args.get_or("preset", "wt103");
+    // paper: lr 0.4 decayed linearly with gradient clip 0.1 over 25 full
+    // epochs; at our few-hundred-step scale the equivalent stable setting
+    // is a lower peak lr with the same 0.1 clip.
+    let lr0 = args.get_parse("lr", 0.1f32)?;
+    let mut args = args.clone();
+    args.options.entry("clip".to_string()).or_insert_with(|| "0.1".to_string());
+    let args = &args;
+
+    let mut results = Vec::new();
+    let dir = out_dir(args);
+    let mut csv = CsvWriter::create(
+        format!("{dir}/t5_adagrad.csv"),
+        &["variant", "secs_per_epoch", "opt_MB", "total_MB", "test_ppl"],
+    )?;
+    for (label, choice) in [
+        ("adagrad", OptChoice::Dense),
+        ("cs", OptChoice::Sketch),
+        ("lr-nmf", OptChoice::LowRank),
+    ] {
+        let sched = LrSchedule::linear(lr0, epochs * steps);
+        let mut tr = build_trainer_sched(&preset, OptimKind::Adagrad, choice, choice, sched, args)?;
+        let p = tr.opts.preset;
+        let corpus = corpus_for(&p, steps + 6, 0xE5);
+        let (train, _, test) = corpus.split(0.05, 0.08);
+        let timer = Timer::start();
+        for _ in 0..epochs {
+            tr.train_epoch(train, steps);
+        }
+        let secs = timer.secs() / epochs as f64;
+        let ppl = tr.eval_ppl(test, 6);
+        let ledger = tr.memory_ledger();
+        let opt_mb = ledger.total_mb("optimizer");
+        let total_mb = ledger.total_mb("");
+        csv.row(&[
+            &label,
+            &format!("{secs:.2}"),
+            &format!("{opt_mb:.1}"),
+            &format!("{total_mb:.1}"),
+            &format!("{ppl:.2}"),
+        ])?;
+        results.push((label.to_string(), secs, opt_mb, total_mb, ppl));
+    }
+    csv.flush()?;
+
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(l, s, o, t, p)| {
+            vec![
+                l.clone(),
+                format!("{s:.2}"),
+                format!("{o:.1}"),
+                format!("{t:.1}"),
+                format!("{p:.2}"),
+            ]
+        })
+        .collect();
+    print_table(
+        "Table 5 (wt103-sim): Adagrad time / memory / perplexity",
+        &["variant", "s/epoch", "opt_MB", "total_MB", "test_ppl"],
+        &rows,
+    );
+    println!("  paper shape: CS ≲ dense ppl at ~5% of aux memory; LR-NMF worse ppl");
+    println!("  wrote {dir}/t5_adagrad.csv");
+    Ok(())
+}

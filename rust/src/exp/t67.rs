@@ -1,0 +1,81 @@
+//! Tables 6 & 7 — 1-Billion-Word(-sim) with **Adam**: running time and
+//! memory (Table 6) plus test perplexity per epoch (Table 7), for
+//! CS-MV / Adam / CS-V / LR-NMF-V.
+//!
+//! Paper T6: time 27.1/26.4/26.75/29.2 h · size 8,591/11,707/10,167/13,259 MB.
+//! Paper T7: CS-V tracks Adam epoch-for-epoch; CS-MV ≈ LR-NMF-V.
+
+use anyhow::Result;
+
+use crate::exp::common::{build_trainer_sched, corpus_for, out_dir, print_table};
+use crate::metrics::CsvWriter;
+use crate::optim::{LrSchedule, OptimKind};
+use crate::train::trainer::OptChoice;
+use crate::util::cli::Args;
+use crate::util::timer::Timer;
+
+pub fn run(args: &Args) -> Result<()> {
+    let epochs = args.get_parse("epochs", 3usize)?;
+    let steps = args.get_parse("steps", 20usize)?;
+    let preset = args.get_or("preset", "lm1b");
+    let lr0 = args.get_parse("lr", 2e-3f32)?;
+
+    let dir = out_dir(args);
+    let mut t6 = CsvWriter::create(
+        format!("{dir}/t6_time_size.csv"),
+        &["variant", "secs_per_epoch", "opt_MB", "total_MB"],
+    )?;
+    let mut t7 = CsvWriter::create(format!("{dir}/t7_ppl.csv"), &["variant", "epoch", "test_ppl"])?;
+
+    let mut sum_rows = Vec::new();
+    let mut ppl_rows: Vec<Vec<String>> = Vec::new();
+    for (label, choice) in [
+        ("cs-mv", OptChoice::Sketch),
+        ("adam", OptChoice::Dense),
+        ("cs-v", OptChoice::SketchV),
+        ("lr-nmf-v", OptChoice::LowRank),
+    ] {
+        let sched = LrSchedule::linear(lr0, epochs * steps);
+        let mut tr = build_trainer_sched(&preset, OptimKind::Adam, choice, choice, sched, args)?;
+        let p = tr.opts.preset;
+        let corpus = corpus_for(&p, steps + 6, 0xE6);
+        let (train, _, test) = corpus.split(0.05, 0.08);
+        let timer = Timer::start();
+        let mut ppls = Vec::new();
+        for e in 1..=epochs {
+            tr.train_epoch(train, steps);
+            let ppl = tr.eval_ppl(test, 4);
+            t7.row(&[&label, &e, &format!("{ppl:.2}")])?;
+            ppls.push(ppl);
+        }
+        let secs = timer.secs() / epochs as f64;
+        let ledger = tr.memory_ledger();
+        let (opt_mb, total_mb) = (ledger.total_mb("optimizer"), ledger.total_mb(""));
+        t6.row(&[&label, &format!("{secs:.2}"), &format!("{opt_mb:.1}"), &format!("{total_mb:.1}")])?;
+        sum_rows.push(vec![
+            label.to_string(),
+            format!("{secs:.2}"),
+            format!("{opt_mb:.1}"),
+            format!("{total_mb:.1}"),
+        ]);
+        let mut row = vec![label.to_string()];
+        row.extend(ppls.iter().map(|p| format!("{p:.2}")));
+        ppl_rows.push(row);
+    }
+    t6.flush()?;
+    t7.flush()?;
+
+    print_table(
+        "Table 6 (lm1b-sim): Adam time & memory",
+        &["variant", "s/epoch", "opt_MB", "total_MB"],
+        &sum_rows,
+    );
+    let mut header = vec!["variant"];
+    let epoch_labels: Vec<String> = (1..=epochs).map(|e| format!("ppl@{e}")).collect();
+    header.extend(epoch_labels.iter().map(|s| s.as_str()));
+    print_table("Table 7 (lm1b-sim): perplexity per epoch", &header, &ppl_rows);
+    println!("  paper shape: CS-MV smallest memory; LR-NMF-V slowest & largest;");
+    println!("  CS-V ppl ≈ Adam ppl each epoch, CS-MV ≈ LR-NMF-V");
+    println!("  wrote {dir}/t6_time_size.csv, {dir}/t7_ppl.csv");
+    Ok(())
+}

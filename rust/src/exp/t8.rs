@@ -1,0 +1,144 @@
+//! Table 8 — extreme classification (Amazon-sim) with a MACH ensemble:
+//! CMS-Adam-V (β₁ = 0, 2nd moment at ~1% size) frees enough memory to
+//! grow the batch 3.5×, cutting epoch time at equal-or-better recall@100.
+//!
+//! Paper: Adam b=750, 5.32 h/epoch, R@100 0.4704 ·
+//!        CS-V b=2600, 3.3 h/epoch, R@100 0.4789.
+//!
+//! On this CPU testbed the epoch-time win comes from the same mechanism
+//! at smaller scale: per-step costs that do not scale with batch size
+//! (full-output-layer optimizer update + step overhead) are paid fewer
+//! times per epoch, and the CMS update itself touches ~1% of the state.
+
+use anyhow::Result;
+
+use crate::config::Hyper;
+use crate::data::classif::ExtremeDataset;
+use crate::exp::common::{out_dir, print_table};
+use crate::mach::{MachEnsemble, MachOptions};
+use crate::metrics::CsvWriter;
+use crate::optim::{CmsAdamV, DenseAdam, RowOptimizer};
+use crate::util::cli::Args;
+use crate::util::timer::Timer;
+
+struct Row {
+    label: String,
+    batch: usize,
+    secs_per_epoch: f64,
+    recall: f64,
+    opt_mb: f64,
+    param_mb: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_variant(
+    label: &str,
+    mk: impl FnMut(usize) -> Box<dyn RowOptimizer>,
+    ds: &ExtremeDataset,
+    b_meta: usize,
+    hd: usize,
+    batch: usize,
+    samples_per_epoch: usize,
+    epochs: usize,
+    recall_queries: usize,
+) -> Result<Row> {
+    let opts = MachOptions {
+        r: 4,
+        b_meta,
+        din: ds.din,
+        hd,
+        seed: 9,
+        // linear lr scaling with batch size (Goyal et al.), as the paper
+        // does when growing the batch 8× on LM1B
+        lr: 2e-3 * (batch as f32 / 192.0),
+        hyper: Hyper::DEFAULT,
+    };
+    let mut ens = MachEnsemble::new(opts, mk)?;
+    let steps = (samples_per_epoch / batch).max(1);
+    let timer = Timer::start();
+    for e in 0..epochs {
+        for s in 0..steps {
+            let b = ds.sample(batch, (e * steps + s) as u64 + 1);
+            ens.train_batch(&b.x, &b.y, batch);
+        }
+    }
+    let secs_per_epoch = timer.secs() / epochs as f64;
+    let recall = ens.recall_at_k(ds, recall_queries, 1000, 100, 3);
+    Ok(Row {
+        label: label.to_string(),
+        batch,
+        secs_per_epoch,
+        recall,
+        opt_mb: ens.optimizer_bytes() as f64 / (1 << 20) as f64,
+        param_mb: ens.param_bytes() as f64 / (1 << 20) as f64,
+    })
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let classes = args.get_parse("classes", 200_000usize)?;
+    let b_meta = args.get_parse("b-meta", 1024usize)?;
+    let hd = args.get_parse("hd", 256usize)?;
+    let din = args.get_parse("din", 1024usize)?;
+    let samples = args.get_parse("samples", 24_576usize)?;
+    let epochs = args.get_parse("epochs", 1usize)?;
+    let recall_queries = args.get_parse("recall-queries", 100usize)?;
+    let base_batch = args.get_parse("batch", 192usize)?;
+    let big_batch = (base_batch as f64 * 3.5) as usize; // paper's 750 → 2600
+
+    let ds = ExtremeDataset::new(classes, din, 24, 1.1, 5);
+    let h = Hyper::DEFAULT;
+    // CMS 2nd moment at ~1% of [b_meta, hd] per member (paper: [3,266,1024]
+    // vs [20000,1024])
+    let w = (b_meta / 100 / 3).max(4) * 4;
+
+    let dense = run_variant(
+        "adam",
+        |_| Box::new(DenseAdam::new(b_meta, hd, h.adam_beta1, h.adam_beta2, h.adam_eps)),
+        &ds, b_meta, hd, base_batch, samples, epochs, recall_queries,
+    )?;
+    let cs = run_variant(
+        "cs-v",
+        |i| Box::new(CmsAdamV::new(3, w, hd, 0x5EED ^ i as u64, h.adam_beta2, h.adam_eps)),
+        &ds, b_meta, hd, big_batch, samples, epochs, recall_queries,
+    )?;
+
+    let dir = out_dir(args);
+    let mut csv = CsvWriter::create(
+        format!("{dir}/t8_mach.csv"),
+        &["variant", "batch", "secs_per_epoch", "recall_at_100", "opt_MB", "param_MB"],
+    )?;
+    let mut rows = Vec::new();
+    for r in [&dense, &cs] {
+        csv.row(&[
+            &r.label,
+            &r.batch,
+            &format!("{:.2}", r.secs_per_epoch),
+            &format!("{:.4}", r.recall),
+            &format!("{:.2}", r.opt_mb),
+            &format!("{:.2}", r.param_mb),
+        ])?;
+        rows.push(vec![
+            r.label.clone(),
+            r.batch.to_string(),
+            format!("{:.2}", r.secs_per_epoch),
+            format!("{:.4}", r.recall),
+            format!("{:.2}", r.opt_mb),
+        ]);
+    }
+    csv.flush()?;
+    print_table(
+        "Table 8 (amazon-sim): MACH ensemble, Adam vs CS-V",
+        &["variant", "batch", "s/epoch", "recall@100", "opt_MB"],
+        &rows,
+    );
+    let speedup = dense.secs_per_epoch / cs.secs_per_epoch;
+    println!(
+        "  CS-V: {:.1}× larger batch, {:.2}× faster epoch, Δrecall {:+.4}",
+        cs.batch as f64 / dense.batch as f64,
+        speedup,
+        cs.recall - dense.recall
+    );
+    println!("  paper shape: 3.5× batch → ~1.6× faster epoch at equal recall");
+    println!("  wrote {dir}/t8_mach.csv");
+    Ok(())
+}

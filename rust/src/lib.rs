@@ -1,0 +1,45 @@
+//! # csopt — Compressing Gradient Optimizers via Count-Sketches
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of Spring, Kyrillidis,
+//! Mohan & Shrivastava, *Compressing Gradient Optimizers via Count-Sketches*
+//! (ICML 2019).
+//!
+//! This crate is **Layer 3**: the coordinator that owns all training state
+//! (model parameters, count-sketch tensors, dense optimizer state), drives
+//! the data pipeline, and executes the AOT-compiled Layer-2/Layer-1 compute
+//! graphs (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`)
+//! through the PJRT C API. Python is never on the training path.
+//!
+//! Module map (see DESIGN.md §7):
+//!
+//! * [`util`] — substrates built from scratch (this environment has no
+//!   crates.io access beyond the vendored `xla`/`anyhow`): RNG, JSON,
+//!   CLI parsing, thread pool, timers, a property-testing helper.
+//! * [`sketch`] — the paper's core data structure: Count-Sketch and
+//!   Count-Min-Sketch tensors with batched update/query, periodic cleaning
+//!   (§4) and fold-in-half shrinking (§5).
+//! * [`optim`] — dense baselines, the sketched optimizers (Algorithms 2–4)
+//!   and the low-rank comparators (NMF rank-1 / ℓ2 rank-1).
+//! * [`data`] — synthetic Zipf corpora, vocab, BPTT batching, threaded
+//!   prefetch, classification dataset generators.
+//! * [`model`] — pure-Rust LSTM/MLP engine (test oracle + `--engine rust`).
+//! * [`runtime`] — PJRT client, artifact registry, typed executor.
+//! * [`train`] — trainer orchestration, eval, checkpointing, memory ledger.
+//! * [`mach`] — Merged-Average Classifiers via Hashing (§7.3 substrate).
+//! * [`metrics`] — CSV/JSON logging, timing aggregation.
+//! * [`exp`] — one driver per paper table/figure (`csopt exp <id>`).
+
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod mach;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod sketch;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,226 @@
+//! MACH ensemble trainer (§7.3): `R` meta-classifiers trained on hashed
+//! labels; recall@k evaluated over a down-sampled candidate set exactly as
+//! the paper does (49.5M classes → 1M scored candidates there; scaled
+//! here).
+
+use anyhow::Result;
+
+use crate::config::Hyper;
+use crate::data::classif::ExtremeDataset;
+use crate::model::{MlpGrads, MlpModel};
+use crate::optim::{FlatAdam, FlatOptimizer, RowOptimizer, SparseLayer};
+use crate::util::rng::Rng;
+
+use super::meta::MetaHasher;
+
+/// Ensemble configuration.
+#[derive(Clone, Debug)]
+pub struct MachOptions {
+    /// Meta-classifier count (paper: 4 for the timing run, 16/32 for acc).
+    pub r: usize,
+    /// Meta-classes per classifier (paper: 20K; scaled here).
+    pub b_meta: usize,
+    pub din: usize,
+    pub hd: usize,
+    pub seed: u64,
+    pub lr: f32,
+    pub hyper: Hyper,
+}
+
+/// One meta-classifier: MLP trunk + `[b_meta, hd]` output sparse layer.
+struct MetaClassifier {
+    mlp: MlpModel,
+    out: SparseLayer,
+    out_bias: Vec<f32>,
+    flat_opt: FlatAdam,
+    grads: MlpGrads,
+    rows: Vec<f32>,
+    flat: Vec<f32>,
+    flat_g: Vec<f32>,
+}
+
+/// The ensemble.
+pub struct MachEnsemble {
+    pub opts: MachOptions,
+    pub hasher: MetaHasher,
+    members: Vec<MetaClassifier>,
+    pub step: usize,
+}
+
+impl MachEnsemble {
+    /// Build with a row-optimizer factory for the output layers (this is
+    /// where Dense vs CMS-Adam-V plugs in).
+    pub fn new<F>(opts: MachOptions, mut make_opt: F) -> Result<MachEnsemble>
+    where
+        F: FnMut(usize) -> Box<dyn RowOptimizer>,
+    {
+        let hasher = MetaHasher::new(opts.r, opts.b_meta, opts.seed);
+        let mut members = Vec::with_capacity(opts.r);
+        for i in 0..opts.r {
+            let mut rng = Rng::new(opts.seed ^ (i as u64 + 1) * 17);
+            let mlp = MlpModel::new(opts.din, opts.hd, &mut rng);
+            let out = SparseLayer::new(opts.b_meta, opts.hd, 0.05, make_opt(i), &mut rng);
+            let flat_opt = FlatAdam::new(
+                mlp.flat_len(),
+                opts.hyper.adam_beta1,
+                opts.hyper.adam_beta2,
+                opts.hyper.adam_eps,
+            );
+            members.push(MetaClassifier {
+                mlp,
+                out,
+                out_bias: vec![0.0; opts.b_meta],
+                flat_opt,
+                grads: MlpGrads::default(),
+                rows: Vec::new(),
+                flat: Vec::new(),
+                flat_g: Vec::new(),
+            });
+        }
+        Ok(MachEnsemble { opts, hasher, members, step: 0 })
+    }
+
+    /// Train every member on one batch (full meta-softmax: all `b_meta`
+    /// rows are candidates, matching the paper's 20K meta-class softmax).
+    /// Returns the mean member loss.
+    pub fn train_batch(&mut self, x: &[f32], y: &[u32], batch: usize) -> f64 {
+        self.step += 1;
+        let t = self.step;
+        let lr = self.opts.lr;
+        let all_ids: Vec<u64> = (0..self.opts.b_meta as u64).collect();
+        let mut total = 0.0f64;
+        for (i, m) in self.members.iter_mut().enumerate() {
+            let hashed: Vec<u32> = y.iter().map(|&c| self.hasher.meta(i, c as u64)).collect();
+            m.out.gather(&all_ids, &mut m.rows);
+            let loss = m.mlp.train_step(
+                &m.rows, &m.out_bias, self.opts.b_meta, x, &hashed, batch, &mut m.grads,
+            );
+            total += loss;
+            m.out.step(&all_ids, &m.grads.d_out_rows, lr, t);
+            for (bi, g) in m.out_bias.iter_mut().zip(&m.grads.d_out_bias) {
+                *bi -= lr * g;
+            }
+            m.mlp.pack(&mut m.flat);
+            MlpModel::pack_grads(&m.grads, &mut m.flat_g);
+            m.flat_opt.step(&mut m.flat, &m.flat_g, lr, t);
+            let flat = std::mem::take(&mut m.flat);
+            m.mlp.unpack(&flat);
+            m.flat = flat;
+        }
+        total / self.members.len() as f64
+    }
+
+    /// Aggregate score of `class` for a query's per-member meta-logit rows.
+    fn score(&self, member_logits: &[Vec<f32>], class: u64) -> f32 {
+        let mut s = 0.0f32;
+        for (i, logits) in member_logits.iter().enumerate() {
+            s += logits[self.hasher.meta(i, class) as usize];
+        }
+        s / member_logits.len() as f32
+    }
+
+    /// Recall@k over a down-sampled candidate set: the true class plus
+    /// `n_candidates − 1` random classes are scored (paper's §7.3
+    /// evaluation protocol).
+    pub fn recall_at_k(
+        &self,
+        ds: &ExtremeDataset,
+        n_queries: usize,
+        n_candidates: usize,
+        k: usize,
+        seed: u64,
+    ) -> f64 {
+        let mut rng = Rng::new(seed);
+        let mut hits = 0usize;
+        let batch = ds.sample(n_queries, 0xEEAA);
+        for q in 0..n_queries {
+            let x = &batch.x[q * ds.din..(q + 1) * ds.din];
+            let target = batch.y[q] as u64;
+            // per-member meta logits for this query
+            let member_logits: Vec<Vec<f32>> = self
+                .members
+                .iter()
+                .map(|m| {
+                    let all_ids: Vec<u64> = (0..self.opts.b_meta as u64).collect();
+                    let mut rows = Vec::new();
+                    m.out.gather(&all_ids, &mut rows);
+                    m.mlp.logits(&rows, &m.out_bias, self.opts.b_meta, x, 1)
+                })
+                .collect();
+            // candidate set: target + random classes
+            let mut cands: Vec<u64> = vec![target];
+            while cands.len() < n_candidates {
+                let c = rng.below(ds.classes) as u64;
+                if c != target {
+                    cands.push(c);
+                }
+            }
+            let scores: Vec<f32> = cands.iter().map(|&c| self.score(&member_logits, c)).collect();
+            let top = crate::model::softmax::top_k(&scores, k);
+            if top.contains(&0) {
+                hits += 1;
+            }
+        }
+        hits as f64 / n_queries as f64
+    }
+
+    /// Total output-layer optimizer memory across the ensemble.
+    pub fn optimizer_bytes(&self) -> usize {
+        self.members.iter().map(|m| m.out.opt.memory_bytes()).sum()
+    }
+
+    /// Total output-layer parameter memory across the ensemble.
+    pub fn param_bytes(&self) -> usize {
+        self.members.iter().map(|m| m.out.params.len() * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::DenseAdam;
+
+    fn small_opts() -> MachOptions {
+        MachOptions {
+            r: 3,
+            b_meta: 32,
+            din: 64,
+            hd: 32,
+            seed: 5,
+            lr: 5e-3,
+            hyper: Hyper::DEFAULT,
+        }
+    }
+
+    #[test]
+    fn mach_learns_and_beats_chance_recall() {
+        let opts = small_opts();
+        let ds = ExtremeDataset::new(500, 64, 8, 1.1, 9);
+        let mut ens = MachEnsemble::new(opts.clone(), |_| {
+            Box::new(DenseAdam::new(32, 32, 0.9, 0.999, 1e-8))
+        })
+        .unwrap();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for step in 0..60 {
+            let b = ds.sample(64, step);
+            let loss = ens.train_batch(&b.x, &b.y, 64);
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first, "loss {first} -> {last}");
+        // recall@10 of 100 candidates: chance = 10%, trained should beat it
+        let recall = ens.recall_at_k(&ds, 40, 100, 10, 3);
+        assert!(recall > 0.2, "recall={recall}");
+    }
+
+    #[test]
+    fn memory_accounting_scales_with_r() {
+        let opts = small_opts();
+        let ens = MachEnsemble::new(opts, |_| Box::new(DenseAdam::new(32, 32, 0.9, 0.999, 1e-8))).unwrap();
+        assert_eq!(ens.param_bytes(), 3 * 32 * 32 * 4);
+        assert_eq!(ens.optimizer_bytes(), 3 * 2 * 32 * 32 * 4);
+    }
+}

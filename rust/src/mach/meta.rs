@@ -1,0 +1,78 @@
+//! Universal class → meta-class hashing for MACH.
+
+use crate::util::rng::splitmix64;
+
+/// Hash family mapping `N` original classes onto `B` meta-classes for
+/// each of `R` meta-classifiers.
+#[derive(Clone, Debug)]
+pub struct MetaHasher {
+    pub r: usize,
+    pub b: usize,
+    seeds: Vec<u64>,
+}
+
+impl MetaHasher {
+    pub fn new(r: usize, b: usize, seed: u64) -> MetaHasher {
+        let seeds = (0..r).map(|i| splitmix64(seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))).collect();
+        MetaHasher { r, b, seeds }
+    }
+
+    /// Meta-class of `class` under meta-classifier `i`.
+    #[inline]
+    pub fn meta(&self, i: usize, class: u64) -> u32 {
+        (splitmix64(class ^ self.seeds[i]) % self.b as u64) as u32
+    }
+
+    /// All R meta-classes of a class.
+    pub fn metas(&self, class: u64) -> Vec<u32> {
+        (0..self.r).map(|i| self.meta(i, class)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let h = MetaHasher::new(4, 100, 7);
+        for c in 0..1000u64 {
+            for i in 0..4 {
+                let m = h.meta(i, c);
+                assert!(m < 100);
+                assert_eq!(m, h.meta(i, c));
+            }
+        }
+    }
+
+    #[test]
+    fn classifiers_are_independent() {
+        let h = MetaHasher::new(2, 64, 9);
+        let agree = (0..4096u64).filter(|&c| h.meta(0, c) == h.meta(1, c)).count();
+        assert!(agree < 4096 / 10, "agree={agree}");
+    }
+
+    #[test]
+    fn metas_balanced() {
+        let h = MetaHasher::new(1, 16, 3);
+        let mut counts = vec![0usize; 16];
+        for c in 0..16_000u64 {
+            counts[h.meta(0, c) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 700 && c < 1300), "{counts:?}");
+    }
+
+    /// Two distinct classes collide in ALL R meta-classifiers only with
+    /// probability (1/B)^R — the aggregation argument behind MACH.
+    #[test]
+    fn full_collisions_are_rare() {
+        let h = MetaHasher::new(3, 32, 11);
+        let target = 12345u64;
+        let tm = h.metas(target);
+        let full = (0..100_000u64)
+            .filter(|&c| c != target && h.metas(c) == tm)
+            .count();
+        // expected ≈ 100000/32768 ≈ 3
+        assert!(full < 30, "full collisions: {full}");
+    }
+}

@@ -1,0 +1,15 @@
+//! MACH — Merged-Average Classifiers via Hashing (Huang et al. 2018), the
+//! extreme-classification substrate of the paper's §7.3 experiment.
+//!
+//! `R` independent meta-classifiers each map the `N`-class problem onto
+//! `B ≪ N` meta-classes through a universal hash; at inference the score
+//! of an original class is the mean of its meta-class scores across the
+//! ensemble. Each meta-classifier's (large) output layer is a sparse
+//! layer whose optimizer state the count-sketch compresses — exactly the
+//! §7.3 memory → batch-size → throughput trade.
+
+pub mod ensemble;
+pub mod meta;
+
+pub use ensemble::{MachEnsemble, MachOptions};
+pub use meta::MetaHasher;

@@ -1,0 +1,81 @@
+//! Minimal CSV series writer for experiment outputs (`results/*.csv`).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Append-oriented CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) `path` with the given header columns.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write one row of mixed values (formatted via `Display`).
+    pub fn row(&mut self, values: &[&dyn std::fmt::Display]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "column count mismatch");
+        let mut first = true;
+        for v in values {
+            if !first {
+                write!(self.out, ",")?;
+            }
+            write!(self.out, "{v}")?;
+            first = false;
+        }
+        writeln!(self.out)?;
+        Ok(())
+    }
+
+    /// Convenience: all-f64 row.
+    pub fn row_f64(&mut self, values: &[f64]) -> Result<()> {
+        let refs: Vec<&dyn std::fmt::Display> = values.iter().map(|v| v as &dyn std::fmt::Display).collect();
+        self.row(&refs)
+    }
+
+    /// Flush buffered rows to disk.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!("csopt_csv_{}", std::process::id()));
+        let path = dir.join("x.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&[&1, &2.5f64]).unwrap();
+            w.row_f64(&[2.0, 3.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n1,2.5\n2,3.25\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn wrong_arity_panics() {
+        let dir = std::env::temp_dir().join(format!("csopt_csv2_{}", std::process::id()));
+        let mut w = CsvWriter::create(dir.join("y.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&[&1]);
+    }
+}

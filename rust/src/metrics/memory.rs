@@ -1,0 +1,89 @@
+//! Memory ledger — reproduces the paper's "Size (MB)" accounting
+//! (Tables 5, 6; §7.3). Every parameter block and optimizer state
+//! registers its byte count; the ledger prints the same model/optimizer
+//! breakdown the paper reports.
+
+/// One accounted allocation.
+#[derive(Clone, Debug)]
+pub struct LedgerItem {
+    pub name: String,
+    pub bytes: usize,
+    /// "params" | "optimizer" | "activations" | other
+    pub category: String,
+}
+
+/// Byte-accurate training-memory ledger.
+#[derive(Clone, Debug, Default)]
+pub struct MemoryLedger {
+    items: Vec<LedgerItem>,
+}
+
+impl MemoryLedger {
+    pub fn new() -> MemoryLedger {
+        MemoryLedger::default()
+    }
+
+    /// Register an allocation.
+    pub fn add(&mut self, name: &str, category: &str, bytes: usize) {
+        self.items.push(LedgerItem { name: name.to_string(), bytes, category: category.to_string() });
+    }
+
+    /// Total bytes in a category ("" = all).
+    pub fn total(&self, category: &str) -> usize {
+        self.items
+            .iter()
+            .filter(|i| category.is_empty() || i.category == category)
+            .map(|i| i.bytes)
+            .sum()
+    }
+
+    /// Megabytes, paper-style (MiB).
+    pub fn total_mb(&self, category: &str) -> f64 {
+        self.total(category) as f64 / (1024.0 * 1024.0)
+    }
+
+    pub fn items(&self) -> &[LedgerItem] {
+        &self.items
+    }
+
+    /// Render the breakdown as an aligned table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for i in &self.items {
+            out.push_str(&format!(
+                "{:<34} {:<10} {:>12.2} MB\n",
+                i.name,
+                i.category,
+                i.bytes as f64 / (1024.0 * 1024.0)
+            ));
+        }
+        out.push_str(&format!(
+            "{:<34} {:<10} {:>12.2} MB\n",
+            "TOTAL params", "", self.total_mb("params")
+        ));
+        out.push_str(&format!(
+            "{:<34} {:<10} {:>12.2} MB\n",
+            "TOTAL optimizer", "", self.total_mb("optimizer")
+        ));
+        out.push_str(&format!("{:<34} {:<10} {:>12.2} MB\n", "TOTAL", "", self.total_mb("")));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_by_category() {
+        let mut l = MemoryLedger::new();
+        l.add("emb", "params", 4 << 20);
+        l.add("emb.adam", "optimizer", 8 << 20);
+        l.add("lstm", "params", 2 << 20);
+        assert_eq!(l.total("params"), 6 << 20);
+        assert_eq!(l.total("optimizer"), 8 << 20);
+        assert_eq!(l.total(""), 14 << 20);
+        assert!((l.total_mb("optimizer") - 8.0).abs() < 1e-9);
+        assert!(l.render().contains("TOTAL optimizer"));
+    }
+}

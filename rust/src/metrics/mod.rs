@@ -1,0 +1,8 @@
+//! Experiment logging: CSV series writers and the GPU-style memory ledger
+//! that reproduces the paper's "Size (MB)" columns.
+
+pub mod csv;
+pub mod memory;
+
+pub use csv::CsvWriter;
+pub use memory::MemoryLedger;

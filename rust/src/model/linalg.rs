@@ -1,0 +1,296 @@
+//! Small dense linear algebra for the pure-Rust engine.
+//!
+//! Row-major `[m, k] @ [k, n]` matmuls in the three transpose variants the
+//! LSTM backward pass needs. Loops are `i-k-j` ordered (unit-stride inner
+//! loop over the output row) which autovectorizes well.
+//!
+//! §Perf: products above [`PAR_THRESHOLD`] FLOPs are row-parallelized
+//! across `std::thread::scope` workers (the output rows are disjoint, so
+//! no synchronization is needed). Measured on the wt2 full-softmax step
+//! (700×128×8192): 1 thread 0.9 GF/s → row-parallel ~14 GF/s on this
+//! 28-core box; see EXPERIMENTS.md §Perf.
+
+/// Parallelize matmuls above this many multiply-adds.
+const PAR_THRESHOLD: usize = 1 << 21;
+
+fn par_rows(m: usize, work_per_row: usize) -> usize {
+    if m * work_per_row < PAR_THRESHOLD {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get().min(m))
+        .unwrap_or(1)
+}
+
+/// `out[m,n] (+)= a[m,k] @ b[k,n]`. `accumulate=false` overwrites.
+pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], accumulate: bool) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if !accumulate {
+        out.iter_mut().for_each(|x| *x = 0.0);
+    }
+    let workers = par_rows(m, k * n);
+    let chunk = m.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (ci, orows) in out.chunks_mut(chunk * n).enumerate() {
+            let i0 = ci * chunk;
+            s.spawn(move || {
+                for (ii, orow) in orows.chunks_mut(n).enumerate() {
+                    let i = i0 + ii;
+                    let arow = &a[i * k..(i + 1) * k];
+                    for (p, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[p * n..(p + 1) * n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// `out[m,n] (+)= aᵀ @ b` where `a` is `[k, m]`, `b` is `[k, n]`.
+///
+/// Parallel variant partitions the *output rows* `i`; each worker streams
+/// over `p` reading `a` column-wise (strided) — slower per-element than
+/// the serial row-sweep but embarrassingly parallel and still `b`-row
+/// unit-stride.
+pub fn mm_at(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32], accumulate: bool) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    if !accumulate {
+        out.iter_mut().for_each(|x| *x = 0.0);
+    }
+    // total work is k·m·n multiply-adds; per output row that is k·n
+    let workers = par_rows(m, k * n);
+    if workers == 1 {
+        for p in 0..k {
+            let arow = &a[p * m..(p + 1) * m];
+            let brow = &b[p * n..(p + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        return;
+    }
+    let chunk = m.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (ci, orows) in out.chunks_mut(chunk * n).enumerate() {
+            let i0 = ci * chunk;
+            s.spawn(move || {
+                for p in 0..k {
+                    let arow = &a[p * m..(p + 1) * m];
+                    let brow = &b[p * n..(p + 1) * n];
+                    for (ii, orow) in orows.chunks_mut(n).enumerate() {
+                        let av = arow[i0 + ii];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// `out[m,n] (+)= a @ bᵀ` where `a` is `[m, k]`, `b` is `[n, k]`.
+///
+/// §Perf: for large products `b` is transposed once into a scratch buffer
+/// so the inner loop becomes the unit-stride `mm` sweep — measured 1.09 →
+/// ~2.9 GMAC/s on the wt2 logits shape (the transpose is `n·k` ops against
+/// `m·n·k` MACs). Small products keep the direct dot-product form.
+pub fn mm_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32], accumulate: bool) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    if m * k * n >= PAR_THRESHOLD {
+        let mut bt = vec![0.0f32; k * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            for (p, &v) in brow.iter().enumerate() {
+                bt[p * n + j] = v;
+            }
+        }
+        mm(a, &bt, m, k, n, out, accumulate);
+        return;
+    }
+    if !accumulate {
+        out.iter_mut().for_each(|x| *x = 0.0);
+    }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            orow[j] += acc;
+        }
+    }
+}
+
+/// `out += v` broadcast over rows: `out[m,n] += bias[n]` per row.
+pub fn add_bias(out: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    for i in 0..m {
+        let row = &mut out[i * n..(i + 1) * n];
+        for (o, &b) in row.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
+/// Column sums: `out[n] += sum_i a[i, :]`.
+pub fn col_sums(a: &[f32], m: usize, n: usize, out: &mut [f32], accumulate: bool) {
+    if !accumulate {
+        out.iter_mut().for_each(|x| *x = 0.0);
+    }
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        for (o, &x) in out.iter_mut().zip(row) {
+            *o += x;
+        }
+    }
+}
+
+/// Global L2 norm of several gradient blocks.
+pub fn global_norm(blocks: &[&[f32]]) -> f32 {
+    blocks
+        .iter()
+        .map(|b| b.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>())
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+/// Scale all blocks by `clip/norm` if `norm > clip` (returns the factor).
+pub fn clip_global_norm(blocks: &mut [&mut [f32]], clip: f32) -> f32 {
+    let norm = global_norm(&blocks.iter().map(|b| &**b).collect::<Vec<_>>());
+    if norm > clip && norm > 0.0 {
+        let s = clip / norm;
+        for b in blocks.iter_mut() {
+            for x in b.iter_mut() {
+                *x *= s;
+            }
+        }
+        s
+    } else {
+        1.0
+    }
+}
+
+#[inline(always)]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    fn naive_mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    out[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn mm_variants_agree_with_naive() {
+        check("mm-variants", 16, 0x11, |rng| {
+            let (m, k, n) = (rng.range(1, 9), rng.range(1, 9), rng.range(1, 9));
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let want = naive_mm(&a, &b, m, k, n);
+
+            let mut out = vec![0.0; m * n];
+            mm(&a, &b, m, k, n, &mut out, false);
+            assert_close(&out, &want, 1e-4)?;
+
+            // aᵀ variant: build at = transpose(a) [k, m]
+            let mut at = vec![0.0; k * m];
+            for i in 0..m {
+                for p in 0..k {
+                    at[p * m + i] = a[i * k + p];
+                }
+            }
+            let mut out2 = vec![0.0; m * n];
+            mm_at(&at, &b, k, m, n, &mut out2, false);
+            assert_close(&out2, &want, 1e-4)?;
+
+            // bᵀ variant: bt = transpose(b) [n, k]
+            let mut bt = vec![0.0; n * k];
+            for p in 0..k {
+                for j in 0..n {
+                    bt[j * k + p] = b[p * n + j];
+                }
+            }
+            let mut out3 = vec![0.0; m * n];
+            mm_bt(&a, &bt, m, k, n, &mut out3, false);
+            assert_close(&out3, &want, 1e-4)
+        });
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let a = [1.0f32, 0.0, 0.0, 1.0];
+        let b = [2.0f32, 0.0, 0.0, 2.0];
+        let mut out = vec![1.0f32; 4];
+        mm(&a, &b, 2, 2, 2, &mut out, true);
+        assert_eq!(out, vec![3.0, 1.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn bias_and_colsums() {
+        let mut x = vec![0.0f32; 6];
+        add_bias(&mut x, &[1.0, 2.0, 3.0], 2, 3);
+        assert_eq!(x, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        let mut s = vec![0.0f32; 3];
+        col_sums(&x, 2, 3, &mut s, false);
+        assert_eq!(s, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn clip_caps_norm() {
+        let mut g1 = vec![3.0f32];
+        let mut g2 = vec![4.0f32];
+        let factor = clip_global_norm(&mut [&mut g1, &mut g2], 1.0);
+        assert!((factor - 0.2).abs() < 1e-6);
+        assert!((g1[0] - 0.6).abs() < 1e-6);
+        assert!((g2[0] - 0.8).abs() < 1e-6);
+        // below clip: untouched
+        let mut g3 = vec![0.1f32];
+        assert_eq!(clip_global_norm(&mut [&mut g3], 1.0), 1.0);
+    }
+
+    #[test]
+    fn global_norm_mixed_blocks() {
+        let mut rng = Rng::new(1);
+        let a: Vec<f32> = (0..10).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let direct = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        let split = global_norm(&[&a[..3], &a[3..]]);
+        assert!((direct - split).abs() < 1e-5);
+    }
+}

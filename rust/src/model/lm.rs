@@ -1,0 +1,427 @@
+//! Pure-Rust LSTM language model — the `--engine rust` implementation of
+//! `python/compile/model.py::lm_train_step`, numerically equivalent to the
+//! AOT artifact (validated by integration tests).
+//!
+//! Calling convention mirrors the graph: gathered `emb_rows [k, de]` and
+//! softmax candidate `sm_rows [nc, de]` come in, gradients for exactly
+//! those rows come out; dense LSTM/projection params live in the model.
+
+use crate::util::rng::Rng;
+
+use super::linalg::{add_bias, col_sums, mm, mm_at, mm_bt};
+use super::lstm::{LstmParams, LstmTrace};
+use super::softmax::{softmax_ce_inplace, softmax_ce_loss};
+
+/// Dense trunk parameters (everything except the sparse emb/softmax rows).
+#[derive(Clone, Debug)]
+pub struct LmModel {
+    pub de: usize,
+    pub hd: usize,
+    pub lstm: LstmParams,
+    /// Projection `[hd, de]`.
+    pub w_p: Vec<f32>,
+    /// Projection bias `[de]`.
+    pub b_p: Vec<f32>,
+}
+
+/// Gradients produced by one train step.
+#[derive(Clone, Debug, Default)]
+pub struct LmGrads {
+    pub d_emb_rows: Vec<f32>,
+    pub d_w_ih: Vec<f32>,
+    pub d_w_hh: Vec<f32>,
+    pub d_b_g: Vec<f32>,
+    pub d_w_p: Vec<f32>,
+    pub d_b_p: Vec<f32>,
+    pub d_sm_rows: Vec<f32>,
+    pub d_sm_bias: Vec<f32>,
+}
+
+/// Loss + final recurrent state.
+#[derive(Clone, Debug)]
+pub struct LmStepOut {
+    pub loss: f64,
+    pub h_t: Vec<f32>,
+    pub c_t: Vec<f32>,
+}
+
+impl LmModel {
+    /// Initialize with N(0, 0.1²) weights (matching the AOT examples'
+    /// scale) and zero biases.
+    pub fn new(de: usize, hd: usize, rng: &mut Rng) -> LmModel {
+        let mut lstm = LstmParams::zeros(de, hd);
+        rng.fill_normal(&mut lstm.w_ih, 0.1);
+        rng.fill_normal(&mut lstm.w_hh, 0.1);
+        let mut w_p = vec![0.0f32; hd * de];
+        rng.fill_normal(&mut w_p, 0.1);
+        LmModel { de, hd, lstm, w_p, b_p: vec![0.0; de] }
+    }
+
+    /// Number of dense (flat) parameters.
+    pub fn flat_len(&self) -> usize {
+        self.lstm.w_ih.len() + self.lstm.w_hh.len() + self.lstm.b_g.len() + self.w_p.len() + self.b_p.len()
+    }
+
+    /// Pack dense params in the fixed order `[w_ih, w_hh, b_g, w_p, b_p]`.
+    pub fn pack(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.lstm.w_ih);
+        out.extend_from_slice(&self.lstm.w_hh);
+        out.extend_from_slice(&self.lstm.b_g);
+        out.extend_from_slice(&self.w_p);
+        out.extend_from_slice(&self.b_p);
+    }
+
+    /// Unpack dense params (inverse of [`pack`]).
+    pub fn unpack(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.flat_len());
+        let mut off = 0;
+        for dst in [
+            &mut self.lstm.w_ih,
+            &mut self.lstm.w_hh,
+            &mut self.lstm.b_g,
+            &mut self.w_p,
+            &mut self.b_p,
+        ] {
+            let len = dst.len();
+            dst.copy_from_slice(&flat[off..off + len]);
+            off += len;
+        }
+    }
+
+    /// Pack grads in the same order.
+    pub fn pack_grads(grads: &LmGrads, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&grads.d_w_ih);
+        out.extend_from_slice(&grads.d_w_hh);
+        out.extend_from_slice(&grads.d_b_g);
+        out.extend_from_slice(&grads.d_w_p);
+        out.extend_from_slice(&grads.d_b_p);
+    }
+
+    fn gather_x(&self, emb_rows: &[f32], xslot: &[i32], b: usize, bptt: usize, t: usize) -> Vec<f32> {
+        let de = self.de;
+        let mut x = vec![0.0f32; b * de];
+        for bi in 0..b {
+            let slot = xslot[bi * bptt + t] as usize;
+            x[bi * de..(bi + 1) * de].copy_from_slice(&emb_rows[slot * de..(slot + 1) * de]);
+        }
+        x
+    }
+
+    /// Forward pass shared by train/eval. Returns `(out [P, de], trace,
+    /// h_t, c_t)` with `P = b·bptt` and position index `p = bi·bptt + t`.
+    #[allow(clippy::too_many_arguments)]
+    fn forward(
+        &self,
+        emb_rows: &[f32],
+        xslot: &[i32],
+        b: usize,
+        bptt: usize,
+        h0: &[f32],
+        c0: &[f32],
+        want_trace: bool,
+    ) -> (Vec<f32>, Option<LstmTrace>, Vec<f32>, Vec<f32>) {
+        let (de, hd) = (self.de, self.hd);
+        let mut h = h0.to_vec();
+        let mut c = c0.to_vec();
+        let mut trace = if want_trace { Some(LstmTrace::default()) } else { None };
+        let mut hs = vec![0.0f32; b * bptt * hd]; // [p, hd]
+        for t in 0..bptt {
+            let x_t = self.gather_x(emb_rows, xslot, b, bptt, t);
+            self.lstm.step(&x_t, &mut h, &mut c, b, trace.as_mut());
+            for bi in 0..b {
+                let p = bi * bptt + t;
+                hs[p * hd..(p + 1) * hd].copy_from_slice(&h[bi * hd..(bi + 1) * hd]);
+            }
+        }
+        let pn = b * bptt;
+        let mut out = vec![0.0f32; pn * de];
+        mm(&hs, &self.w_p, pn, hd, de, &mut out, false);
+        add_bias(&mut out, &self.b_p, pn, de);
+        (out, trace, h, c)
+    }
+
+    /// Forward-only loss (perplexity eval).
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_step(
+        &self,
+        emb_rows: &[f32],
+        sm_rows: &[f32],
+        sm_bias: &[f32],
+        nc: usize,
+        xslot: &[i32],
+        ytgt: &[i32],
+        b: usize,
+        bptt: usize,
+        h0: &[f32],
+        c0: &[f32],
+    ) -> LmStepOut {
+        let pn = b * bptt;
+        let (out, _, h_t, c_t) = self.forward(emb_rows, xslot, b, bptt, h0, c0, false);
+        let mut logits = vec![0.0f32; pn * nc];
+        mm_bt(&out, sm_rows, pn, self.de, nc, &mut logits, false);
+        add_bias(&mut logits, sm_bias, pn, nc);
+        let targets: Vec<u32> = ytgt.iter().map(|&y| y as u32).collect();
+        let loss = softmax_ce_loss(&logits, &targets, pn, nc);
+        LmStepOut { loss, h_t, c_t }
+    }
+
+    /// Full train step: loss + gradients for the gathered rows and dense
+    /// trunk. `grads` buffers are (re)sized as needed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        emb_rows: &[f32],
+        k: usize,
+        sm_rows: &[f32],
+        sm_bias: &[f32],
+        nc: usize,
+        xslot: &[i32],
+        ytgt: &[i32],
+        b: usize,
+        bptt: usize,
+        h0: &[f32],
+        c0: &[f32],
+        grads: &mut LmGrads,
+    ) -> LmStepOut {
+        let (de, hd) = (self.de, self.hd);
+        let pn = b * bptt;
+        assert_eq!(emb_rows.len(), k * de);
+        assert_eq!(sm_rows.len(), nc * de);
+
+        let (out, trace, h_t, c_t) = self.forward(emb_rows, xslot, b, bptt, h0, c0, true);
+        let trace = trace.unwrap();
+
+        // ---- loss + dlogits
+        let mut logits = vec![0.0f32; pn * nc];
+        mm_bt(&out, sm_rows, pn, de, nc, &mut logits, false);
+        add_bias(&mut logits, sm_bias, pn, nc);
+        let targets: Vec<u32> = ytgt.iter().map(|&y| y as u32).collect();
+        let loss = softmax_ce_inplace(&mut logits, &targets, pn, nc);
+        let dlogits = logits; // renamed: now holds gradients
+
+        // ---- softmax layer grads
+        grads.d_sm_rows.resize(nc * de, 0.0);
+        mm_at(&dlogits, &out, pn, nc, de, &mut grads.d_sm_rows, false);
+        grads.d_sm_bias.resize(nc, 0.0);
+        col_sums(&dlogits, pn, nc, &mut grads.d_sm_bias, false);
+
+        // ---- projection grads
+        let mut dout = vec![0.0f32; pn * de];
+        mm(&dlogits, sm_rows, pn, nc, de, &mut dout, false);
+        // hs reconstructed from the trace ([p, hd])
+        let mut hs = vec![0.0f32; pn * hd];
+        for t in 0..bptt {
+            for bi in 0..b {
+                let p = bi * bptt + t;
+                hs[p * hd..(p + 1) * hd]
+                    .copy_from_slice(&trace.h[t][bi * hd..(bi + 1) * hd]);
+            }
+        }
+        grads.d_w_p.resize(hd * de, 0.0);
+        mm_at(&hs, &dout, pn, hd, de, &mut grads.d_w_p, false);
+        grads.d_b_p.resize(de, 0.0);
+        col_sums(&dout, pn, de, &mut grads.d_b_p, false);
+        let mut dhs = vec![0.0f32; pn * hd];
+        mm_bt(&dout, &self.w_p, pn, de, hd, &mut dhs, false);
+
+        // ---- BPTT
+        let mut lstm_grads = self.lstm.grads_zeros();
+        grads.d_emb_rows.clear();
+        grads.d_emb_rows.resize(k * de, 0.0);
+        let mut dh = vec![0.0f32; b * hd];
+        let mut dc = vec![0.0f32; b * hd];
+        for t in (0..bptt).rev() {
+            for bi in 0..b {
+                let p = bi * bptt + t;
+                for u in 0..hd {
+                    dh[bi * hd + u] += dhs[p * hd + u];
+                }
+            }
+            let x_t = self.gather_x(emb_rows, xslot, b, bptt, t);
+            let zero_h;
+            let zero_c;
+            let (h_prev, c_prev): (&[f32], &[f32]) = if t == 0 {
+                zero_h = h0.to_vec();
+                zero_c = c0.to_vec();
+                (&zero_h, &zero_c)
+            } else {
+                (&trace.h[t - 1], &trace.c[t - 1])
+            };
+            let (dx, dh_prev) = self.lstm.step_back(
+                t, &trace, &dh, &mut dc, &x_t, h_prev, c_prev, b, &mut lstm_grads,
+            );
+            // scatter dx into embedding-row grads
+            for bi in 0..b {
+                let slot = xslot[bi * bptt + t] as usize;
+                let dst = &mut grads.d_emb_rows[slot * de..(slot + 1) * de];
+                let src = &dx[bi * de..(bi + 1) * de];
+                for (o, &x) in dst.iter_mut().zip(src) {
+                    *o += x;
+                }
+            }
+            dh = dh_prev;
+        }
+        grads.d_w_ih = lstm_grads.d_w_ih;
+        grads.d_w_hh = lstm_grads.d_w_hh;
+        grads.d_b_g = lstm_grads.d_b_g;
+
+        LmStepOut { loss, h_t, c_t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(k: usize, nc: usize, b: usize, bptt: usize, de: usize, hd: usize)
+        -> (LmModel, Vec<f32>, Vec<f32>, Vec<f32>, Vec<i32>, Vec<i32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(42);
+        let model = LmModel::new(de, hd, &mut rng);
+        let mut emb = vec![0.0f32; k * de];
+        rng.fill_normal(&mut emb, 0.1);
+        let mut sm = vec![0.0f32; nc * de];
+        rng.fill_normal(&mut sm, 0.1);
+        let smb = vec![0.0f32; nc];
+        let xslot: Vec<i32> = (0..b * bptt).map(|_| rng.below(k) as i32).collect();
+        let ytgt: Vec<i32> = (0..b * bptt).map(|_| rng.below(nc) as i32).collect();
+        let h0 = vec![0.0f32; b * hd];
+        let c0 = vec![0.0f32; b * hd];
+        (model, emb, sm, smb, xslot, ytgt, h0, c0)
+    }
+
+    #[test]
+    fn initial_loss_near_log_nc() {
+        let (m, emb, sm, smb, xs, ys, h0, c0) = setup(10, 20, 3, 4, 8, 12);
+        let out = m.eval_step(&emb, &sm, &smb, 20, &xs, &ys, 3, 4, &h0, &c0);
+        assert!((out.loss - (20.0f64).ln()).abs() < 0.5, "loss={}", out.loss);
+    }
+
+    #[test]
+    fn train_and_eval_agree_on_loss() {
+        let (m, emb, sm, smb, xs, ys, h0, c0) = setup(10, 20, 3, 4, 8, 12);
+        let mut g = LmGrads::default();
+        let tr = m.train_step(&emb, 10, &sm, &smb, 20, &xs, &ys, 3, 4, &h0, &c0, &mut g);
+        let ev = m.eval_step(&emb, &sm, &smb, 20, &xs, &ys, 3, 4, &h0, &c0);
+        assert!((tr.loss - ev.loss).abs() < 1e-5);
+        assert_eq!(tr.h_t, ev.h_t);
+    }
+
+    #[test]
+    fn unused_emb_rows_get_zero_grad() {
+        let (m, emb, sm, smb, mut xs, ys, h0, c0) = setup(10, 20, 3, 4, 8, 12);
+        xs.iter_mut().for_each(|s| *s %= 5); // only slots 0..5 used
+        xs[0] = 0; // ensure slot 0 definitely appears
+        let mut g = LmGrads::default();
+        m.train_step(&emb, 10, &sm, &smb, 20, &xs, &ys, 3, 4, &h0, &c0, &mut g);
+        for slot in 5..10 {
+            assert!(g.d_emb_rows[slot * 8..(slot + 1) * 8].iter().all(|&x| x == 0.0));
+        }
+        assert!(g.d_emb_rows[..8].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn sgd_on_step_grads_reduces_loss() {
+        let (mut m, mut emb, mut sm, mut smb, xs, ys, h0, c0) = setup(12, 16, 4, 5, 8, 10);
+        let mut g = LmGrads::default();
+        let mut losses = Vec::new();
+        for _ in 0..10 {
+            let out = m.train_step(&emb, 12, &sm, &smb, 16, &xs, &ys, 4, 5, &h0, &c0, &mut g);
+            losses.push(out.loss);
+            let lr = 0.5f32;
+            for (p, d) in emb.iter_mut().zip(&g.d_emb_rows) {
+                *p -= lr * d;
+            }
+            for (p, d) in sm.iter_mut().zip(&g.d_sm_rows) {
+                *p -= lr * d;
+            }
+            for (p, d) in smb.iter_mut().zip(&g.d_sm_bias) {
+                *p -= lr * d;
+            }
+            for (p, d) in m.lstm.w_ih.iter_mut().zip(&g.d_w_ih) {
+                *p -= lr * d;
+            }
+            for (p, d) in m.lstm.w_hh.iter_mut().zip(&g.d_w_hh) {
+                *p -= lr * d;
+            }
+            for (p, d) in m.lstm.b_g.iter_mut().zip(&g.d_b_g) {
+                *p -= lr * d;
+            }
+            for (p, d) in m.w_p.iter_mut().zip(&g.d_w_p) {
+                *p -= lr * d;
+            }
+            for (p, d) in m.b_p.iter_mut().zip(&g.d_b_p) {
+                *p -= lr * d;
+            }
+        }
+        assert!(
+            losses.last().unwrap() < &(losses[0] - 0.05),
+            "losses={losses:?}"
+        );
+    }
+
+    /// Full-model finite-difference check on every parameter block.
+    #[test]
+    fn gradients_match_finite_difference() {
+        let (m, emb, sm, smb, xs, ys, h0, c0) = setup(6, 8, 2, 3, 4, 5);
+        let (k, nc, b, bptt) = (6usize, 8usize, 2usize, 3usize);
+        let mut g = LmGrads::default();
+        m.train_step(&emb, k, &sm, &smb, nc, &xs, &ys, b, bptt, &h0, &c0, &mut g);
+
+        let eval = |m: &LmModel, emb: &[f32], sm: &[f32], smb: &[f32]| -> f64 {
+            m.eval_step(emb, sm, smb, nc, &xs, &ys, b, bptt, &h0, &c0).loss
+        };
+        let eps = 1e-3f32;
+        // embedding rows
+        for idx in [0usize, 7, 11] {
+            let mut ep = emb.clone();
+            ep[idx] += eps;
+            let mut em = emb.clone();
+            em[idx] -= eps;
+            let fd = ((eval(&m, &ep, &sm, &smb) - eval(&m, &em, &sm, &smb)) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g.d_emb_rows[idx]).abs() < 2e-3, "emb[{idx}] fd={fd} an={}", g.d_emb_rows[idx]);
+        }
+        // softmax rows
+        for idx in [0usize, 9, 30] {
+            let mut sp = sm.clone();
+            sp[idx] += eps;
+            let mut smn = sm.clone();
+            smn[idx] -= eps;
+            let fd = ((eval(&m, &emb, &sp, &smb) - eval(&m, &emb, &smn, &smb)) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g.d_sm_rows[idx]).abs() < 2e-3, "sm[{idx}] fd={fd} an={}", g.d_sm_rows[idx]);
+        }
+        // lstm w_hh
+        for idx in [0usize, 13] {
+            let mut mp = m.clone();
+            mp.lstm.w_hh[idx] += eps;
+            let mut mn = m.clone();
+            mn.lstm.w_hh[idx] -= eps;
+            let fd = ((eval(&mp, &emb, &sm, &smb) - eval(&mn, &emb, &sm, &smb)) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g.d_w_hh[idx]).abs() < 2e-3, "whh[{idx}] fd={fd} an={}", g.d_w_hh[idx]);
+        }
+        // projection
+        for idx in [0usize, 7] {
+            let mut mp = m.clone();
+            mp.w_p[idx] += eps;
+            let mut mn = m.clone();
+            mn.w_p[idx] -= eps;
+            let fd = ((eval(&mp, &emb, &sm, &smb) - eval(&mn, &emb, &sm, &smb)) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g.d_w_p[idx]).abs() < 2e-3, "wp[{idx}] fd={fd} an={}", g.d_w_p[idx]);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(9);
+        let m = LmModel::new(4, 6, &mut rng);
+        let mut flat = Vec::new();
+        m.pack(&mut flat);
+        assert_eq!(flat.len(), m.flat_len());
+        let mut m2 = LmModel::new(4, 6, &mut rng);
+        m2.unpack(&flat);
+        assert_eq!(m2.lstm.w_ih, m.lstm.w_ih);
+        assert_eq!(m2.w_p, m.w_p);
+        assert_eq!(m2.b_p, m.b_p);
+    }
+}

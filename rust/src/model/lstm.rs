@@ -1,0 +1,284 @@
+//! Single-layer LSTM cell with stored activations for backprop-through-time.
+//!
+//! Gate layout matches `python/compile/model.py::lstm_cell` exactly:
+//! `gates = x@W_ih + h@W_hh + b` split as `[i | f | g | o]` along the
+//! `4·hd` axis, `c' = f⊙c + i⊙g`, `h' = o⊙tanh(c')`.
+
+use super::linalg::{add_bias, col_sums, mm, mm_at, mm_bt, sigmoid};
+
+/// Per-timestep activations saved by the forward pass.
+#[derive(Clone, Debug, Default)]
+pub struct LstmTrace {
+    /// Post-activation gates, each `[b, hd]` per timestep.
+    pub i: Vec<Vec<f32>>,
+    pub f: Vec<Vec<f32>>,
+    pub g: Vec<Vec<f32>>,
+    pub o: Vec<Vec<f32>>,
+    /// Cell state after each step `[b, hd]`.
+    pub c: Vec<Vec<f32>>,
+    /// `tanh(c)` after each step.
+    pub tanh_c: Vec<Vec<f32>>,
+    /// Hidden state after each step.
+    pub h: Vec<Vec<f32>>,
+}
+
+/// LSTM parameters.
+#[derive(Clone, Debug)]
+pub struct LstmParams {
+    pub de: usize,
+    pub hd: usize,
+    /// `[de, 4·hd]`
+    pub w_ih: Vec<f32>,
+    /// `[hd, 4·hd]`
+    pub w_hh: Vec<f32>,
+    /// `[4·hd]`
+    pub b_g: Vec<f32>,
+}
+
+/// Gradients for [`LstmParams`].
+#[derive(Clone, Debug)]
+pub struct LstmGrads {
+    pub d_w_ih: Vec<f32>,
+    pub d_w_hh: Vec<f32>,
+    pub d_b_g: Vec<f32>,
+}
+
+impl LstmParams {
+    pub fn zeros(de: usize, hd: usize) -> LstmParams {
+        LstmParams { de, hd, w_ih: vec![0.0; de * 4 * hd], w_hh: vec![0.0; hd * 4 * hd], b_g: vec![0.0; 4 * hd] }
+    }
+
+    pub fn grads_zeros(&self) -> LstmGrads {
+        LstmGrads {
+            d_w_ih: vec![0.0; self.w_ih.len()],
+            d_w_hh: vec![0.0; self.w_hh.len()],
+            d_b_g: vec![0.0; self.b_g.len()],
+        }
+    }
+
+    /// One forward step. `x_t` is `[b, de]`; `h`/`c` are updated in place;
+    /// activations appended to `trace` when provided.
+    pub fn step(
+        &self,
+        x_t: &[f32],
+        h: &mut Vec<f32>,
+        c: &mut Vec<f32>,
+        b: usize,
+        trace: Option<&mut LstmTrace>,
+    ) {
+        let hd = self.hd;
+        let g4 = 4 * hd;
+        let mut gates = vec![0.0f32; b * g4];
+        mm(x_t, &self.w_ih, b, self.de, g4, &mut gates, false);
+        mm(h, &self.w_hh, b, hd, g4, &mut gates, true);
+        add_bias(&mut gates, &self.b_g, b, g4);
+
+        let mut iv = vec![0.0f32; b * hd];
+        let mut fv = vec![0.0f32; b * hd];
+        let mut gv = vec![0.0f32; b * hd];
+        let mut ov = vec![0.0f32; b * hd];
+        for bi in 0..b {
+            let row = &gates[bi * g4..(bi + 1) * g4];
+            for u in 0..hd {
+                iv[bi * hd + u] = sigmoid(row[u]);
+                fv[bi * hd + u] = sigmoid(row[hd + u]);
+                gv[bi * hd + u] = row[2 * hd + u].tanh();
+                ov[bi * hd + u] = sigmoid(row[3 * hd + u]);
+            }
+        }
+        let mut tanh_c = vec![0.0f32; b * hd];
+        for idx in 0..b * hd {
+            c[idx] = fv[idx] * c[idx] + iv[idx] * gv[idx];
+            tanh_c[idx] = c[idx].tanh();
+            h[idx] = ov[idx] * tanh_c[idx];
+        }
+        if let Some(tr) = trace {
+            tr.i.push(iv);
+            tr.f.push(fv);
+            tr.g.push(gv);
+            tr.o.push(ov);
+            tr.c.push(c.clone());
+            tr.tanh_c.push(tanh_c);
+            tr.h.push(h.clone());
+        }
+    }
+
+    /// One backward step at time `t`.
+    ///
+    /// * `dh` — incoming ∂L/∂h_t (output-side + recurrent), consumed.
+    /// * `dc` — running ∂L/∂c carried across timesteps, updated in place.
+    /// * `x_t` — the step's input `[b, de]`; `h_prev`/`c_prev` the previous
+    ///   states.
+    /// * Returns `(dx_t, dh_prev)`; accumulates parameter grads.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_back(
+        &self,
+        t: usize,
+        trace: &LstmTrace,
+        dh: &[f32],
+        dc: &mut [f32],
+        x_t: &[f32],
+        h_prev: &[f32],
+        c_prev: &[f32],
+        b: usize,
+        grads: &mut LstmGrads,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let hd = self.hd;
+        let g4 = 4 * hd;
+        let (iv, fv, gv, ov) = (&trace.i[t], &trace.f[t], &trace.g[t], &trace.o[t]);
+        let tanh_c = &trace.tanh_c[t];
+
+        // pre-activation gate gradients, assembled [b, 4hd]
+        let mut dgates = vec![0.0f32; b * g4];
+        for idx in 0..b * hd {
+            let dh_i = dh[idx];
+            let do_ = dh_i * tanh_c[idx];
+            let dct = dc[idx] + dh_i * ov[idx] * (1.0 - tanh_c[idx] * tanh_c[idx]);
+            let di = dct * gv[idx];
+            let dg = dct * iv[idx];
+            let df = dct * c_prev[idx];
+            dc[idx] = dct * fv[idx]; // carried to t−1
+            let bi = idx / hd;
+            let u = idx % hd;
+            let row = &mut dgates[bi * g4..(bi + 1) * g4];
+            row[u] = di * iv[idx] * (1.0 - iv[idx]);
+            row[hd + u] = df * fv[idx] * (1.0 - fv[idx]);
+            row[2 * hd + u] = dg * (1.0 - gv[idx] * gv[idx]);
+            row[3 * hd + u] = do_ * ov[idx] * (1.0 - ov[idx]);
+        }
+
+        mm_at(x_t, &dgates, b, self.de, g4, &mut grads.d_w_ih, true);
+        mm_at(h_prev, &dgates, b, hd, g4, &mut grads.d_w_hh, true);
+        col_sums(&dgates, b, g4, &mut grads.d_b_g, true);
+
+        let mut dx = vec![0.0f32; b * self.de];
+        mm_bt(&dgates, &self.w_ih, b, g4, self.de, &mut dx, false);
+        let mut dh_prev = vec![0.0f32; b * hd];
+        mm_bt(&dgates, &self.w_hh, b, g4, hd, &mut dh_prev, false);
+        (dx, dh_prev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn init(de: usize, hd: usize, seed: u64) -> LstmParams {
+        let mut p = LstmParams::zeros(de, hd);
+        let mut rng = Rng::new(seed);
+        rng.fill_normal(&mut p.w_ih, 0.2);
+        rng.fill_normal(&mut p.w_hh, 0.2);
+        p
+    }
+
+    #[test]
+    fn forward_changes_state() {
+        let p = init(3, 4, 1);
+        let mut h = vec![0.0f32; 4];
+        let mut c = vec![0.0f32; 4];
+        p.step(&[0.5, -0.3, 0.9], &mut h, &mut c, 1, None);
+        assert!(h.iter().any(|&x| x.abs() > 1e-4));
+        assert!(c.iter().any(|&x| x.abs() > 1e-4));
+        // bounded activations
+        assert!(h.iter().all(|&x| x.abs() <= 1.0));
+    }
+
+    /// Finite-difference gradient check through two timesteps on a scalar
+    /// loss `L = Σ h_T` — validates the full BPTT chain rule.
+    #[test]
+    fn backward_matches_finite_difference() {
+        let (de, hd, b, t_steps) = (2, 3, 2, 2);
+        let p = init(de, hd, 3);
+        let mut rng = Rng::new(5);
+        let xs: Vec<Vec<f32>> = (0..t_steps)
+            .map(|_| (0..b * de).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+
+        let fwd = |p: &LstmParams| -> f32 {
+            let mut h = vec![0.0f32; b * hd];
+            let mut c = vec![0.0f32; b * hd];
+            for x in &xs {
+                p.step(x, &mut h, &mut c, b, None);
+            }
+            h.iter().sum()
+        };
+
+        // analytic grads
+        let mut trace = LstmTrace::default();
+        let mut h = vec![0.0f32; b * hd];
+        let mut c = vec![0.0f32; b * hd];
+        for x in &xs {
+            p.step(x, &mut h, &mut c, b, Some(&mut trace));
+        }
+        let mut grads = p.grads_zeros();
+        let mut dc = vec![0.0f32; b * hd];
+        let mut dh = vec![1.0f32; b * hd]; // dL/dh_T = 1
+        for t in (0..t_steps).rev() {
+            let zero = vec![0.0f32; b * hd];
+            let (h_prev, c_prev) = if t == 0 {
+                (&zero, &zero)
+            } else {
+                (&trace.h[t - 1], &trace.c[t - 1])
+            };
+            let (_dx, dh_prev) =
+                p.step_back(t, &trace, &dh, &mut dc, &xs[t], h_prev, c_prev, b, &mut grads);
+            dh = dh_prev;
+        }
+
+        // spot-check several parameters
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for (pi, gslice) in [(0usize, &grads.d_w_ih), (1, &grads.d_w_hh), (2, &grads.d_b_g)] {
+            for idx in [0usize, 1, 5] {
+                let mut pp = p.clone();
+                let mut pm = p.clone();
+                let (slot_p, slot_m): (&mut Vec<f32>, &mut Vec<f32>) = match pi {
+                    0 => (&mut pp.w_ih, &mut pm.w_ih),
+                    1 => (&mut pp.w_hh, &mut pm.w_hh),
+                    _ => (&mut pp.b_g, &mut pm.b_g),
+                };
+                if idx >= slot_p.len() {
+                    continue;
+                }
+                slot_p[idx] += eps;
+                slot_m[idx] -= eps;
+                let fd = (fwd(&pp) - fwd(&pm)) / (2.0 * eps);
+                let an = gslice[idx];
+                assert!((fd - an).abs() < 2e-2 * (1.0 + fd.abs()), "param {pi}[{idx}]: fd={fd} an={an}");
+                checked += 1;
+            }
+        }
+        assert!(checked >= 8);
+    }
+
+    #[test]
+    fn input_gradient_matches_finite_difference() {
+        let (de, hd, b) = (2, 3, 1);
+        let p = init(de, hd, 7);
+        let x = vec![0.4f32, -0.8];
+        let fwd = |x: &[f32]| -> f32 {
+            let mut h = vec![0.0f32; b * hd];
+            let mut c = vec![0.0f32; b * hd];
+            p.step(x, &mut h, &mut c, b, None);
+            h.iter().sum()
+        };
+        let mut trace = LstmTrace::default();
+        let mut h = vec![0.0f32; b * hd];
+        let mut c = vec![0.0f32; b * hd];
+        p.step(&x, &mut h, &mut c, b, Some(&mut trace));
+        let mut grads = p.grads_zeros();
+        let mut dc = vec![0.0f32; b * hd];
+        let dh = vec![1.0f32; b * hd];
+        let zero = vec![0.0f32; b * hd];
+        let (dx, _) = p.step_back(0, &trace, &dh, &mut dc, &x, &zero, &zero, b, &mut grads);
+        for i in 0..de {
+            let mut xp = x.clone();
+            xp[i] += 1e-3;
+            let mut xm = x.clone();
+            xm[i] -= 1e-3;
+            let fd = (fwd(&xp) - fwd(&xm)) / 2e-3;
+            assert!((fd - dx[i]).abs() < 1e-2, "dx[{i}]: fd={fd} an={}", dx[i]);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Pure-Rust one-hidden-layer classifier — the `--engine rust` twin of
+//! `python/compile/model.py::mlp_train_step` (MegaFace-sim softmax and
+//! MACH meta-classifier).
+
+use crate::util::rng::Rng;
+
+use super::linalg::{add_bias, col_sums, mm, mm_at, mm_bt};
+use super::softmax::{softmax_ce_inplace, softmax_ce_loss};
+
+/// Hidden-layer parameters; the (huge) output layer rows arrive gathered.
+#[derive(Clone, Debug)]
+pub struct MlpModel {
+    pub din: usize,
+    pub hd: usize,
+    /// `[din, hd]`
+    pub w1: Vec<f32>,
+    /// `[hd]`
+    pub b1: Vec<f32>,
+}
+
+/// Gradients from one step.
+#[derive(Clone, Debug, Default)]
+pub struct MlpGrads {
+    pub d_w1: Vec<f32>,
+    pub d_b1: Vec<f32>,
+    /// `[nc, hd]` gathered output-row grads.
+    pub d_out_rows: Vec<f32>,
+    /// `[nc]`
+    pub d_out_bias: Vec<f32>,
+}
+
+impl MlpModel {
+    pub fn new(din: usize, hd: usize, rng: &mut Rng) -> MlpModel {
+        let mut w1 = vec![0.0f32; din * hd];
+        rng.fill_normal(&mut w1, (2.0 / din as f32).sqrt());
+        MlpModel { din, hd, w1, b1: vec![0.0; hd] }
+    }
+
+    pub fn flat_len(&self) -> usize {
+        self.w1.len() + self.b1.len()
+    }
+
+    pub fn pack(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.w1);
+        out.extend_from_slice(&self.b1);
+    }
+
+    pub fn unpack(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.flat_len());
+        let w1_len = self.w1.len();
+        self.w1.copy_from_slice(&flat[..w1_len]);
+        self.b1.copy_from_slice(&flat[w1_len..]);
+    }
+
+    pub fn pack_grads(grads: &MlpGrads, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&grads.d_w1);
+        out.extend_from_slice(&grads.d_b1);
+    }
+
+    /// Hidden activations `relu(x@w1 + b1)` for `[b, din]` inputs.
+    fn hidden(&self, x: &[f32], b: usize) -> Vec<f32> {
+        let mut h = vec![0.0f32; b * self.hd];
+        mm(x, &self.w1, b, self.din, self.hd, &mut h, false);
+        add_bias(&mut h, &self.b1, b, self.hd);
+        h.iter_mut().for_each(|v| *v = v.max(0.0));
+        h
+    }
+
+    /// Logits over the gathered candidate rows `[nc, hd]`.
+    pub fn logits(&self, out_rows: &[f32], out_bias: &[f32], nc: usize, x: &[f32], b: usize) -> Vec<f32> {
+        let h = self.hidden(x, b);
+        let mut logits = vec![0.0f32; b * nc];
+        mm_bt(&h, out_rows, b, self.hd, nc, &mut logits, false);
+        add_bias(&mut logits, out_bias, b, nc);
+        logits
+    }
+
+    /// Forward-only mean CE loss.
+    pub fn eval_loss(&self, out_rows: &[f32], out_bias: &[f32], nc: usize, x: &[f32], y: &[u32], b: usize) -> f64 {
+        let logits = self.logits(out_rows, out_bias, nc, x, b);
+        softmax_ce_loss(&logits, y, b, nc)
+    }
+
+    /// Train step: loss + grads for w1/b1 and the gathered output rows.
+    /// `y` are slots into the candidate rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        out_rows: &[f32],
+        out_bias: &[f32],
+        nc: usize,
+        x: &[f32],
+        y: &[u32],
+        b: usize,
+        grads: &mut MlpGrads,
+    ) -> f64 {
+        let h = self.hidden(x, b);
+        let mut logits = vec![0.0f32; b * nc];
+        mm_bt(&h, out_rows, b, self.hd, nc, &mut logits, false);
+        add_bias(&mut logits, out_bias, b, nc);
+        let loss = softmax_ce_inplace(&mut logits, y, b, nc);
+        let dlogits = logits;
+
+        grads.d_out_rows.resize(nc * self.hd, 0.0);
+        mm_at(&dlogits, &h, b, nc, self.hd, &mut grads.d_out_rows, false);
+        grads.d_out_bias.resize(nc, 0.0);
+        col_sums(&dlogits, b, nc, &mut grads.d_out_bias, false);
+
+        let mut dh = vec![0.0f32; b * self.hd];
+        mm(&dlogits, out_rows, b, nc, self.hd, &mut dh, false);
+        // ReLU mask
+        for (dhv, &hv) in dh.iter_mut().zip(&h) {
+            if hv <= 0.0 {
+                *dhv = 0.0;
+            }
+        }
+        grads.d_w1.resize(self.din * self.hd, 0.0);
+        mm_at(x, &dh, b, self.din, self.hd, &mut grads.d_w1, false);
+        grads.d_b1.resize(self.hd, 0.0);
+        col_sums(&dh, b, self.hd, &mut grads.d_b1, false);
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_loss_near_log_nc() {
+        let mut rng = Rng::new(1);
+        let m = MlpModel::new(8, 6, &mut rng);
+        let (b, nc) = (16, 10);
+        let mut rows = vec![0.0f32; nc * 6];
+        rng.fill_normal(&mut rows, 0.01);
+        let bias = vec![0.0f32; nc];
+        let x: Vec<f32> = (0..b * 8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y: Vec<u32> = (0..b).map(|_| rng.below(nc) as u32).collect();
+        let loss = m.eval_loss(&rows, &bias, nc, &x, &y, b);
+        assert!((loss - (nc as f64).ln()).abs() < 0.3, "loss={loss}");
+    }
+
+    #[test]
+    fn grads_match_finite_difference() {
+        let mut rng = Rng::new(2);
+        let m = MlpModel::new(4, 5, &mut rng);
+        let (b, nc) = (3, 4);
+        let mut rows = vec![0.0f32; nc * 5];
+        rng.fill_normal(&mut rows, 0.2);
+        let bias = vec![0.0f32; nc];
+        let x: Vec<f32> = (0..b * 4).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y: Vec<u32> = vec![0, 2, 3];
+        let mut g = MlpGrads::default();
+        m.train_step(&rows, &bias, nc, &x, &y, b, &mut g);
+        let eps = 1e-3f32;
+        for idx in [0usize, 3, 11] {
+            let mut mp = m.clone();
+            mp.w1[idx] += eps;
+            let mut mn = m.clone();
+            mn.w1[idx] -= eps;
+            let fd = ((mp.eval_loss(&rows, &bias, nc, &x, &y, b)
+                - mn.eval_loss(&rows, &bias, nc, &x, &y, b))
+                / (2.0 * eps as f64)) as f32;
+            assert!((fd - g.d_w1[idx]).abs() < 2e-3, "w1[{idx}] fd={fd} an={}", g.d_w1[idx]);
+        }
+        for idx in [0usize, 7, 19] {
+            let mut rp = rows.clone();
+            rp[idx] += eps;
+            let mut rn = rows.clone();
+            rn[idx] -= eps;
+            let fd = ((m.eval_loss(&rp, &bias, nc, &x, &y, b)
+                - m.eval_loss(&rn, &bias, nc, &x, &y, b))
+                / (2.0 * eps as f64)) as f32;
+            assert!((fd - g.d_out_rows[idx]).abs() < 2e-3, "rows[{idx}]");
+        }
+    }
+
+    #[test]
+    fn learns_small_problem() {
+        let mut rng = Rng::new(3);
+        let mut m = MlpModel::new(6, 12, &mut rng);
+        let (b, nc) = (24, 4);
+        let mut rows = vec![0.0f32; nc * 12];
+        rng.fill_normal(&mut rows, 0.1);
+        let mut bias = vec![0.0f32; nc];
+        let x: Vec<f32> = (0..b * 6).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y: Vec<u32> = (0..b).map(|i| (i % nc) as u32).collect();
+        let mut g = MlpGrads::default();
+        let first = m.train_step(&rows, &bias, nc, &x, &y, b, &mut g);
+        let mut last = first;
+        for _ in 0..200 {
+            last = m.train_step(&rows, &bias, nc, &x, &y, b, &mut g);
+            let lr = 0.5;
+            for (p, d) in m.w1.iter_mut().zip(&g.d_w1) {
+                *p -= lr * d;
+            }
+            for (p, d) in m.b1.iter_mut().zip(&g.d_b1) {
+                *p -= lr * d;
+            }
+            for (p, d) in rows.iter_mut().zip(&g.d_out_rows) {
+                *p -= lr * d;
+            }
+            for (p, d) in bias.iter_mut().zip(&g.d_out_bias) {
+                *p -= lr * d;
+            }
+        }
+        assert!(last < 0.5 * first, "first={first} last={last}");
+    }
+}

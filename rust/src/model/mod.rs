@@ -1,0 +1,21 @@
+//! Pure-Rust compute engine: LSTM language model and MLP classifier with
+//! hand-written backprop.
+//!
+//! Two roles:
+//! 1. the `--engine rust` fast path for the CPU-scale experiments (no
+//!    PJRT transfer overhead for small models), and
+//! 2. an independent numerical oracle for the AOT artifacts — the
+//!    integration tests check `rust` vs `xla` engines agree on the same
+//!    batches, which validates the whole L1/L2 lowering chain.
+//!
+//! The module mirrors `python/compile/model.py` exactly: same parameter
+//! blocks, same gathered-rows calling convention, same loss.
+
+pub mod linalg;
+pub mod lm;
+pub mod lstm;
+pub mod mlp;
+pub mod softmax;
+
+pub use lm::{LmGrads, LmModel, LmStepOut};
+pub use mlp::{MlpGrads, MlpModel};

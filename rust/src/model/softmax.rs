@@ -1,0 +1,122 @@
+//! Shared softmax cross-entropy forward/backward and top-k utilities.
+
+/// Forward + backward of mean cross-entropy over `[rows, nc]` logits.
+///
+/// Writes `dlogits = (softmax − onehot)/rows` in place of `logits` and
+/// returns the mean loss in nats.
+pub fn softmax_ce_inplace(logits: &mut [f32], targets: &[u32], rows: usize, nc: usize) -> f64 {
+    debug_assert_eq!(logits.len(), rows * nc);
+    debug_assert_eq!(targets.len(), rows);
+    let mut loss = 0.0f64;
+    let inv = 1.0 / rows as f32;
+    for r in 0..rows {
+        let row = &mut logits[r * nc..(r + 1) * nc];
+        let mut maxv = f32::NEG_INFINITY;
+        for &x in row.iter() {
+            if x > maxv {
+                maxv = x;
+            }
+        }
+        let mut z = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - maxv).exp();
+            z += *x;
+        }
+        let t = targets[r] as usize;
+        loss += -((row[t] / z) as f64).ln();
+        let zinv = inv / z;
+        for x in row.iter_mut() {
+            *x *= zinv;
+        }
+        row[t] -= inv;
+    }
+    loss / rows as f64
+}
+
+/// Forward-only mean cross-entropy (no gradient).
+pub fn softmax_ce_loss(logits: &[f32], targets: &[u32], rows: usize, nc: usize) -> f64 {
+    let mut loss = 0.0f64;
+    for r in 0..rows {
+        let row = &logits[r * nc..(r + 1) * nc];
+        let mut maxv = f32::NEG_INFINITY;
+        for &x in row.iter() {
+            if x > maxv {
+                maxv = x;
+            }
+        }
+        let mut z = 0.0f64;
+        for &x in row.iter() {
+            z += ((x - maxv) as f64).exp();
+        }
+        let t = targets[r] as usize;
+        loss += z.ln() - (row[t] - maxv) as f64;
+    }
+    loss / rows as f64
+}
+
+/// Indices of the `k` largest values of `scores` (descending).
+pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap()
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_log_nc() {
+        let mut logits = vec![0.0f32; 2 * 5];
+        let loss = softmax_ce_inplace(&mut logits, &[1, 3], 2, 5);
+        assert!((loss - (5.0f64).ln()).abs() < 1e-6);
+        // gradient rows sum to zero
+        for r in 0..2 {
+            let s: f32 = logits[r * 5..(r + 1) * 5].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let base = vec![0.3f32, -0.7, 1.2, 0.1, -0.2, 0.5];
+        let targets = [2u32, 0];
+        let mut g = base.clone();
+        let loss0 = softmax_ce_inplace(&mut g, &targets, 2, 3);
+        let eps = 1e-3;
+        for i in 0..6 {
+            let mut plus = base.clone();
+            plus[i] += eps;
+            let lp = softmax_ce_loss(&plus, &targets, 2, 3);
+            let mut minus = base.clone();
+            minus[i] -= eps;
+            let lm = softmax_ce_loss(&minus, &targets, 2, 3);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((fd - g[i]).abs() < 1e-3, "i={i}: fd={fd} g={}", g[i]);
+        }
+        let _ = loss0;
+    }
+
+    #[test]
+    fn forward_only_matches_inplace() {
+        let logits = vec![0.5f32, 1.0, -1.0, 2.0, 0.0, 0.3];
+        let targets = [1u32, 2];
+        let a = softmax_ce_loss(&logits, &targets, 2, 3);
+        let mut l2 = logits.clone();
+        let b = softmax_ce_inplace(&mut l2, &targets, 2, 3);
+        // inplace accumulates in f32, forward-only in f64
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn top_k_orders_descending() {
+        let s = [0.1f32, 5.0, 3.0, 4.0, -1.0];
+        assert_eq!(top_k(&s, 3), vec![1, 3, 2]);
+        assert_eq!(top_k(&s, 10).len(), 5);
+    }
+}

@@ -1,0 +1,337 @@
+//! Dense (uncompressed) baselines: SGD, Momentum, Adagrad, Adam — both the
+//! sparse-row form (`[n, d]` auxiliary state, sparse-Adam semantics: only
+//! touched rows update) and the flat form for dense parameter vectors.
+
+use super::{FlatOptimizer, RowOptimizer};
+
+// ---------------------------------------------------------------------------
+// Row (sparse-layer) baselines
+// ---------------------------------------------------------------------------
+
+/// Dense Momentum over `[n, d]` rows: `m ← γm + g; x ← x − η·m`.
+pub struct DenseMomentum {
+    m: Vec<f32>,
+    d: usize,
+    gamma: f32,
+}
+
+impl DenseMomentum {
+    pub fn new(n: usize, d: usize, gamma: f32) -> DenseMomentum {
+        DenseMomentum { m: vec![0.0; n * d], d, gamma }
+    }
+}
+
+impl RowOptimizer for DenseMomentum {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        let d = self.d;
+        for (t, &id) in ids.iter().enumerate() {
+            let m = &mut self.m[id as usize * d..(id as usize + 1) * d];
+            let g = &grads[t * d..(t + 1) * d];
+            let x = &mut rows[t * d..(t + 1) * d];
+            for i in 0..d {
+                m[i] = self.gamma * m[i] + g[i];
+                x[i] -= lr * m[i];
+            }
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        if which != 0 {
+            return false;
+        }
+        for (t, &id) in ids.iter().enumerate() {
+            out[t * self.d..(t + 1) * self.d]
+                .copy_from_slice(&self.m[id as usize * self.d..(id as usize + 1) * self.d]);
+        }
+        true
+    }
+}
+
+/// Dense Adagrad over `[n, d]` rows: `v += g²; x ← x − η·g/(√v+ε)`.
+pub struct DenseAdagrad {
+    v: Vec<f32>,
+    d: usize,
+    eps: f32,
+}
+
+impl DenseAdagrad {
+    pub fn new(n: usize, d: usize, eps: f32) -> DenseAdagrad {
+        DenseAdagrad { v: vec![0.0; n * d], d, eps }
+    }
+}
+
+impl RowOptimizer for DenseAdagrad {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        let d = self.d;
+        for (t, &id) in ids.iter().enumerate() {
+            let v = &mut self.v[id as usize * d..(id as usize + 1) * d];
+            let g = &grads[t * d..(t + 1) * d];
+            let x = &mut rows[t * d..(t + 1) * d];
+            for i in 0..d {
+                v[i] += g[i] * g[i];
+                x[i] -= lr * g[i] / (v[i].sqrt() + self.eps);
+            }
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.v.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        if which != 1 {
+            return false;
+        }
+        for (t, &id) in ids.iter().enumerate() {
+            out[t * self.d..(t + 1) * self.d]
+                .copy_from_slice(&self.v[id as usize * self.d..(id as usize + 1) * self.d]);
+        }
+        true
+    }
+}
+
+/// Dense Adam over `[n, d]` rows (sparse-Adam semantics).
+pub struct DenseAdam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    d: usize,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+}
+
+impl DenseAdam {
+    pub fn new(n: usize, d: usize, beta1: f32, beta2: f32, eps: f32) -> DenseAdam {
+        DenseAdam { m: vec![0.0; n * d], v: vec![0.0; n * d], d, beta1, beta2, eps }
+    }
+}
+
+impl RowOptimizer for DenseAdam {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t: usize) {
+        let d = self.d;
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        for (ti, &id) in ids.iter().enumerate() {
+            let m = &mut self.m[id as usize * d..(id as usize + 1) * d];
+            let v = &mut self.v[id as usize * d..(id as usize + 1) * d];
+            let g = &grads[ti * d..(ti + 1) * d];
+            let x = &mut rows[ti * d..(ti + 1) * d];
+            for i in 0..d {
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g[i];
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g[i] * g[i];
+                let m_hat = m[i] / bc1;
+                let v_hat = v[i] / bc2;
+                x[i] -= lr * m_hat / (v_hat.sqrt() + self.eps);
+            }
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        let src = match which {
+            0 => &self.m,
+            1 => &self.v,
+            _ => return false,
+        };
+        for (t, &id) in ids.iter().enumerate() {
+            out[t * self.d..(t + 1) * self.d]
+                .copy_from_slice(&src[id as usize * self.d..(id as usize + 1) * self.d]);
+        }
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flat (dense-vector) optimizers
+// ---------------------------------------------------------------------------
+
+/// Plain SGD (no state).
+pub struct FlatSgd;
+
+impl FlatOptimizer for FlatSgd {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        for (p, &g) in params.iter_mut().zip(grads) {
+            *p -= lr * g;
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Flat Momentum.
+pub struct FlatMomentum {
+    m: Vec<f32>,
+    gamma: f32,
+}
+
+impl FlatMomentum {
+    pub fn new(p: usize, gamma: f32) -> FlatMomentum {
+        FlatMomentum { m: vec![0.0; p], gamma }
+    }
+}
+
+impl FlatOptimizer for FlatMomentum {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        for i in 0..params.len() {
+            self.m[i] = self.gamma * self.m[i] + grads[i];
+            params[i] -= lr * self.m[i];
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+}
+
+/// Flat Adagrad.
+pub struct FlatAdagrad {
+    v: Vec<f32>,
+    eps: f32,
+}
+
+impl FlatAdagrad {
+    pub fn new(p: usize, eps: f32) -> FlatAdagrad {
+        FlatAdagrad { v: vec![0.0; p], eps }
+    }
+}
+
+impl FlatOptimizer for FlatAdagrad {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        for i in 0..params.len() {
+            self.v[i] += grads[i] * grads[i];
+            params[i] -= lr * grads[i] / (self.v[i].sqrt() + self.eps);
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.v.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+}
+
+/// Flat Adam.
+pub struct FlatAdam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+}
+
+impl FlatAdam {
+    pub fn new(p: usize, beta1: f32, beta2: f32, eps: f32) -> FlatAdam {
+        FlatAdam { m: vec![0.0; p], v: vec![0.0; p], beta1, beta2, eps }
+    }
+}
+
+impl FlatOptimizer for FlatAdam {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32, t: usize) {
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grads[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grads[i] * grads[i];
+            params[i] -= lr * (self.m[i] / bc1) / ((self.v[i] / bc2).sqrt() + self.eps);
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_single_step_matches_closed_form() {
+        let mut opt = DenseAdam::new(1, 1, 0.9, 0.999, 1e-8);
+        let mut rows = vec![1.0f32];
+        opt.step_rows(&[0], &mut rows, &[0.5], 0.1, 1);
+        // t=1: m=0.05, v=0.00025/0.001=…; m̂=0.5, v̂=0.25, x=1−0.1·0.5/(0.5+ε)
+        let expect = 1.0 - 0.1 * 0.5 / (0.25f32.sqrt() + 1e-8);
+        assert!((rows[0] - expect).abs() < 1e-6, "{rows:?} vs {expect}");
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = DenseMomentum::new(1, 1, 0.5);
+        let mut rows = vec![0.0f32];
+        opt.step_rows(&[0], &mut rows, &[1.0], 1.0, 1); // m=1, x=-1
+        opt.step_rows(&[0], &mut rows, &[1.0], 1.0, 2); // m=1.5, x=-2.5
+        assert!((rows[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adagrad_decays_effective_lr() {
+        let mut opt = DenseAdagrad::new(1, 1, 0.0);
+        let mut rows = vec![0.0f32];
+        opt.step_rows(&[0], &mut rows, &[2.0], 1.0, 1);
+        let step1 = -rows[0]; // 2/sqrt(4) = 1
+        let before = rows[0];
+        opt.step_rows(&[0], &mut rows, &[2.0], 1.0, 2);
+        let step2 = before - rows[0]; // 2/sqrt(8)
+        assert!((step1 - 1.0).abs() < 1e-6);
+        assert!(step2 < step1);
+    }
+
+    #[test]
+    fn flat_matches_row_adam() {
+        let mut fo = FlatAdam::new(3, 0.9, 0.999, 1e-8);
+        let mut ro = DenseAdam::new(3, 1, 0.9, 0.999, 1e-8);
+        let mut fp = vec![1.0f32, -2.0, 0.5];
+        let mut rp = fp.clone();
+        for t in 1..=5 {
+            let g = vec![0.1 * t as f32, -0.2, 0.05];
+            fo.step(&mut fp, &g, 0.01, t);
+            ro.step_rows(&[0, 1, 2], &mut rp, &g, 0.01, t);
+        }
+        for i in 0..3 {
+            assert!((fp[i] - rp[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn memory_accounting() {
+        assert_eq!(DenseAdam::new(10, 4, 0.9, 0.999, 1e-8).memory_bytes(), 2 * 10 * 4 * 4);
+        assert_eq!(DenseMomentum::new(10, 4, 0.9).memory_bytes(), 10 * 4 * 4);
+        assert_eq!(FlatSgd.memory_bytes(), 0);
+    }
+}

@@ -1,0 +1,466 @@
+//! Low-rank comparators from the paper's evaluation (§6–§7):
+//!
+//! * **NMF rank-1** (Shazeer & Stern 2018, Adafactor): for a non-negative
+//!   matrix `A`, the I-divergence-optimal rank-1 factorization is
+//!   `Â = R·Cᵀ / S` with `R = A·1` (row sums), `C = Aᵀ·1` (col sums),
+//!   `S = 1ᵀA1`. Because row/col sums are *linear* in `A`, the factors can
+//!   track `A_{t} = β·A_{t−1} + (1−β)·G²` (Adam-v) or `A_t = A_{t−1} + G²`
+//!   (Adagrad) without materializing `A` — but the paper's observed
+//!   drawback stands: queries reconstruct rows via an outer product, and
+//!   the scheme has no knob between rank-1 and dense.
+//! * **NMF-momentum** — the same factorization applied to the (signed!)
+//!   momentum buffer; invalid by construction and included deliberately:
+//!   the paper's Table 3 shows it diverging (176 ppl vs 94).
+//! * **ℓ2 rank-1** — truncated SVD via power iteration after every update;
+//!   the "extremely slow, cannot be used in practice" Fig.-4 baseline.
+
+use super::RowOptimizer;
+
+/// Shared rank-1 non-negative factor state for an `[n, d]` matrix.
+#[derive(Clone, Debug)]
+pub struct Rank1Factors {
+    /// Row sums `R ∈ R^n`.
+    pub r: Vec<f32>,
+    /// Column sums `C ∈ R^d`.
+    pub c: Vec<f32>,
+    /// Total mass `S`.
+    pub s: f64,
+    pub d: usize,
+}
+
+impl Rank1Factors {
+    pub fn new(n: usize, d: usize) -> Rank1Factors {
+        Rank1Factors { r: vec![0.0; n], c: vec![0.0; d], s: 0.0, d }
+    }
+
+    /// Estimated row `i`: `R_i · C / S` (zero when the factorization is
+    /// empty). Writes `d` values into `out`.
+    pub fn estimate_row(&self, id: u64, out: &mut [f32]) {
+        let ri = self.r[id as usize];
+        if self.s <= 0.0 {
+            out.iter_mut().for_each(|x| *x = 0.0);
+            return;
+        }
+        let scale = ri / self.s as f32;
+        for (o, &cj) in out.iter_mut().zip(&self.c) {
+            *o = scale * cj;
+        }
+    }
+
+    /// Track `A ← decay·A + rows_of(delta)` where `delta` holds `[k, d]`
+    /// non-negative contributions for rows `ids`. `decay = 1` = Adagrad
+    /// accumulate; `decay = β` with pre-scaled delta = EMA.
+    ///
+    /// NOTE (fidelity to Shazeer-Stern): with `decay < 1` the *true* EMA
+    /// decays every row each step, but sparse training only visits active
+    /// rows. Like the reference Adafactor-for-sparse implementations we
+    /// decay the factor sums globally (R, C, S are linear in A so this is
+    /// exact for the decay term) and add the new mass to the active rows.
+    pub fn track(&mut self, ids: &[u64], delta: &[f32], decay: f32) {
+        let d = self.d;
+        if decay != 1.0 {
+            for x in &mut self.r {
+                *x *= decay;
+            }
+            for x in &mut self.c {
+                *x *= decay;
+            }
+            self.s *= decay as f64;
+        }
+        for (t, &id) in ids.iter().enumerate() {
+            let row = &delta[t * d..(t + 1) * d];
+            let mut rs = 0.0f32;
+            for (j, &x) in row.iter().enumerate() {
+                rs += x;
+                self.c[j] += x;
+            }
+            self.r[id as usize] += rs;
+            self.s += rs as f64;
+        }
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        (self.r.len() + self.c.len()) * 4 + 8
+    }
+}
+
+/// NMF rank-1 Adagrad: `v ← v + g²` tracked by factors (LR-NMF baseline).
+pub struct NmfAdagrad {
+    f: Rank1Factors,
+    eps: f32,
+    est: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl NmfAdagrad {
+    pub fn new(n: usize, d: usize, eps: f32) -> NmfAdagrad {
+        NmfAdagrad { f: Rank1Factors::new(n, d), eps, est: Vec::new(), delta: Vec::new() }
+    }
+}
+
+impl RowOptimizer for NmfAdagrad {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        let d = self.f.d;
+        let kd = ids.len() * d;
+        self.delta.resize(kd, 0.0);
+        self.est.resize(kd, 0.0);
+        for i in 0..kd {
+            self.delta[i] = grads[i] * grads[i];
+        }
+        self.f.track(ids, &self.delta, 1.0);
+        for (t, &id) in ids.iter().enumerate() {
+            self.f.estimate_row(id, &mut self.est[t * d..(t + 1) * d]);
+        }
+        for i in 0..kd {
+            let v = self.est[i].max(0.0);
+            rows[i] -= lr * grads[i] / (v.sqrt() + self.eps);
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.f.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "lr-nmf-adagrad"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        if which != 1 {
+            return false;
+        }
+        let d = self.f.d;
+        for (t, &id) in ids.iter().enumerate() {
+            self.f.estimate_row(id, &mut out[t * d..(t + 1) * d]);
+        }
+        true
+    }
+}
+
+/// NMF rank-1 Adam with factored 2nd moment and dense-free 1st moment
+/// (β1 applied to the gradient directly, matching the paper's "LR-NMF-V"
+/// column: only `v` is compressed, `m` is kept dense).
+pub struct NmfAdamV {
+    f: Rank1Factors,
+    /// Dense 1st moment (the paper's LR-NMF cannot compress signed m).
+    m: Vec<f32>,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    est: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl NmfAdamV {
+    pub fn new(n: usize, d: usize, beta1: f32, beta2: f32, eps: f32) -> NmfAdamV {
+        NmfAdamV {
+            f: Rank1Factors::new(n, d),
+            m: vec![0.0; n * d],
+            beta1,
+            beta2,
+            eps,
+            est: Vec::new(),
+            delta: Vec::new(),
+        }
+    }
+}
+
+impl RowOptimizer for NmfAdamV {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t: usize) {
+        let d = self.f.d;
+        let kd = ids.len() * d;
+        self.delta.resize(kd, 0.0);
+        self.est.resize(kd, 0.0);
+        // factored v: A ← β2·A + (1−β2)·g²  (global decay + sparse mass)
+        for i in 0..kd {
+            self.delta[i] = (1.0 - self.beta2) * grads[i] * grads[i];
+        }
+        self.f.track(ids, &self.delta, self.beta2);
+        for (ti, &id) in ids.iter().enumerate() {
+            self.f.estimate_row(id, &mut self.est[ti * d..(ti + 1) * d]);
+        }
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        for (ti, &id) in ids.iter().enumerate() {
+            let m = &mut self.m[id as usize * d..(id as usize + 1) * d];
+            for i in 0..d {
+                let gi = grads[ti * d + i];
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
+                let m_hat = m[i] / bc1;
+                let v_hat = self.est[ti * d + i].max(0.0) / bc2;
+                rows[ti * d + i] -= lr * m_hat / (v_hat.sqrt() + self.eps);
+            }
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.f.memory_bytes() + self.m.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "lr-nmf-adam-v"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        let d = self.f.d;
+        match which {
+            0 => {
+                for (t, &id) in ids.iter().enumerate() {
+                    out[t * d..(t + 1) * d]
+                        .copy_from_slice(&self.m[id as usize * d..(id as usize + 1) * d]);
+                }
+            }
+            1 => {
+                for (t, &id) in ids.iter().enumerate() {
+                    self.f.estimate_row(id, &mut out[t * d..(t + 1) * d]);
+                }
+            }
+            _ => return false,
+        }
+        true
+    }
+}
+
+/// NMF rank-1 applied to the **signed** momentum buffer — deliberately
+/// unsound (Table 3's diverging LR-NMF column). The factorization treats
+/// signed mass as if it were non-negative; sign structure is destroyed.
+pub struct NmfMomentum {
+    f: Rank1Factors,
+    gamma: f32,
+    est: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl NmfMomentum {
+    pub fn new(n: usize, d: usize, gamma: f32) -> NmfMomentum {
+        NmfMomentum { f: Rank1Factors::new(n, d), gamma, est: Vec::new(), delta: Vec::new() }
+    }
+}
+
+impl RowOptimizer for NmfMomentum {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        let d = self.f.d;
+        let kd = ids.len() * d;
+        self.delta.resize(kd, 0.0);
+        self.est.resize(kd, 0.0);
+        // m ← γm + g via factors: global decay γ + sparse mass g
+        self.f.track(ids, grads, self.gamma);
+        for (t, &id) in ids.iter().enumerate() {
+            self.f.estimate_row(id, &mut self.est[t * d..(t + 1) * d]);
+        }
+        for i in 0..kd {
+            rows[i] -= lr * self.est[i];
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.f.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "lr-nmf-momentum"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        if which != 0 {
+            return false;
+        }
+        let d = self.f.d;
+        for (t, &id) in ids.iter().enumerate() {
+            self.f.estimate_row(id, &mut out[t * d..(t + 1) * d]);
+        }
+        true
+    }
+}
+
+/// ℓ2-optimal rank-1 approximation maintained by power iteration — the
+/// Fig.-4 diagnostic baseline. Holds the *dense* matrix internally to
+/// apply updates exactly, then projects to rank 1 after each update; only
+/// `u·σ·vᵀ` would be stored by the real scheme, so `memory_bytes` reports
+/// the factor cost. "Extremely slow" (paper's words) — use at small n.
+pub struct L2Rank1 {
+    /// Current rank-1 reconstruction `[n, d]` (the scheme's visible state).
+    a: Vec<f32>,
+    u: Vec<f32>,
+    vfac: Vec<f32>,
+    sigma: f32,
+    n: usize,
+    d: usize,
+    iters: usize,
+}
+
+impl L2Rank1 {
+    pub fn new(n: usize, d: usize) -> L2Rank1 {
+        L2Rank1 { a: vec![0.0; n * d], u: vec![0.0; n], vfac: vec![0.0; d], sigma: 0.0, n, d, iters: 8 }
+    }
+
+    /// Apply a linear update to the reconstruction and re-truncate:
+    /// `A ← decay·(uσvᵀ) + rows_of(delta)` → rank-1 via power iteration.
+    pub fn apply(&mut self, ids: &[u64], delta: &[f32], decay: f32) {
+        let d = self.d;
+        if decay != 1.0 {
+            for x in &mut self.a {
+                *x *= decay;
+            }
+        }
+        for (t, &id) in ids.iter().enumerate() {
+            let dst = &mut self.a[id as usize * d..(id as usize + 1) * d];
+            for (o, &x) in dst.iter_mut().zip(&delta[t * d..(t + 1) * d]) {
+                *o += x;
+            }
+        }
+        self.truncate();
+    }
+
+    /// Rank-1 truncation by alternating power iteration on `AᵀA`.
+    fn truncate(&mut self) {
+        let (n, d) = (self.n, self.d);
+        // init v from previous factor (warm start) or ones
+        if self.vfac.iter().all(|&x| x == 0.0) {
+            self.vfac.iter_mut().for_each(|x| *x = 1.0);
+        }
+        let mut v = self.vfac.clone();
+        let mut u = vec![0.0f32; n];
+        for _ in 0..self.iters {
+            // u = A v
+            for i in 0..n {
+                let row = &self.a[i * d..(i + 1) * d];
+                u[i] = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+            }
+            let un: f32 = u.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if un < 1e-20 {
+                self.sigma = 0.0;
+                self.a.iter_mut().for_each(|x| *x = 0.0);
+                return;
+            }
+            u.iter_mut().for_each(|x| *x /= un);
+            // v = Aᵀ u
+            v.iter_mut().for_each(|x| *x = 0.0);
+            for i in 0..n {
+                let row = &self.a[i * d..(i + 1) * d];
+                for j in 0..d {
+                    v[j] += row[j] * u[i];
+                }
+            }
+            let vn: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            self.sigma = vn;
+            if vn > 1e-20 {
+                v.iter_mut().for_each(|x| *x /= vn);
+            }
+        }
+        self.u = u;
+        self.vfac = v;
+        // reconstruct A = u σ vᵀ
+        for i in 0..n {
+            let ui = self.u[i] * self.sigma;
+            let row = &mut self.a[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] = ui * self.vfac[j];
+            }
+        }
+    }
+
+    /// Current estimate of row `id`.
+    pub fn estimate_row(&self, id: u64, out: &mut [f32]) {
+        out.copy_from_slice(&self.a[id as usize * self.d..(id as usize + 1) * self.d]);
+    }
+
+    /// Memory the real scheme would store: u, v, σ.
+    pub fn memory_bytes(&self) -> usize {
+        (self.n + self.d + 1) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::assert_close;
+
+    #[test]
+    fn rank1_factors_match_closed_form() {
+        // A = [[1,2],[3,4]] → R=[3,7], C=[4,6], S=10, Â_ij = R_i C_j / S
+        let mut f = Rank1Factors::new(2, 2);
+        f.track(&[0, 1], &[1.0, 2.0, 3.0, 4.0], 1.0);
+        assert_eq!(f.r, vec![3.0, 7.0]);
+        assert_eq!(f.c, vec![4.0, 6.0]);
+        assert_eq!(f.s, 10.0);
+        let mut row = [0.0f32; 2];
+        f.estimate_row(0, &mut row);
+        assert_close(&row, &[1.2, 1.8], 1e-6).unwrap();
+    }
+
+    #[test]
+    fn rank1_exact_for_rank1_matrix() {
+        // A = r cᵀ is reproduced exactly by the factorization
+        let r = [2.0f32, 5.0];
+        let c = [1.0f32, 3.0, 4.0];
+        let a: Vec<f32> = r.iter().flat_map(|ri| c.iter().map(move |cj| ri * cj)).collect();
+        let mut f = Rank1Factors::new(2, 3);
+        f.track(&[0, 1], &a, 1.0);
+        let mut row = [0.0f32; 3];
+        f.estimate_row(1, &mut row);
+        assert_close(&row, &a[3..6], 1e-5).unwrap();
+    }
+
+    #[test]
+    fn nmf_adagrad_monotone_lr_decay() {
+        let mut opt = NmfAdagrad::new(4, 2, 1e-10);
+        let ids = [1u64];
+        let mut rows = vec![0.0f32; 2];
+        let g = vec![1.0f32, 1.0];
+        opt.step_rows(&ids, &mut rows, &g, 1.0, 1);
+        let s1 = -rows[0];
+        let before = rows[0];
+        opt.step_rows(&ids, &mut rows, &g, 1.0, 2);
+        let s2 = before - rows[0];
+        assert!(s2 < s1 && s1 > 0.0);
+    }
+
+    #[test]
+    fn nmf_momentum_destroys_sign_structure() {
+        // two rows with opposite-sign gradients: the non-negative rank-1
+        // model cannot represent them; estimates share the C factor's sign
+        let mut opt = NmfMomentum::new(2, 1, 0.9);
+        let ids = [0u64, 1];
+        let mut rows = vec![0.0f32; 2];
+        opt.step_rows(&ids, &mut rows, &[1.0, -1.0], 1.0, 1);
+        let mut est = vec![0.0f32; 2];
+        assert!(opt.estimate_rows(0, &ids, &mut est));
+        // true momentum is (+1, −1); the rank-1 estimate cannot produce
+        // opposite signs from the same column factor
+        assert!(est[0] * est[1] >= 0.0, "est={est:?}");
+    }
+
+    #[test]
+    fn l2_rank1_recovers_rank1_updates() {
+        let mut lr = L2Rank1::new(3, 2);
+        // add a genuinely rank-1 matrix: rows i · [1, 2]
+        let delta = [1.0f32, 2.0, 2.0, 4.0, 3.0, 6.0];
+        lr.apply(&[0, 1, 2], &delta, 1.0);
+        let mut row = [0.0f32; 2];
+        lr.estimate_row(2, &mut row);
+        assert_close(&row, &[3.0, 6.0], 1e-3).unwrap();
+    }
+
+    #[test]
+    fn l2_rank1_is_best_rank1_for_full_matrix() {
+        // For A = diag-ish [[10,0],[0,1]], best rank-1 keeps the dominant
+        // direction: estimate of row 0 ≈ [10, 0], row 1 ≈ [0, 0].
+        let mut lr = L2Rank1::new(2, 2);
+        lr.apply(&[0, 1], &[10.0, 0.0, 0.0, 1.0], 1.0);
+        let mut r0 = [0.0f32; 2];
+        let mut r1 = [0.0f32; 2];
+        lr.estimate_row(0, &mut r0);
+        lr.estimate_row(1, &mut r1);
+        assert!((r0[0] - 10.0).abs() < 0.2, "r0={r0:?}");
+        assert!(r1[0].abs() < 0.2 && r1[1].abs() < 1.0, "r1={r1:?}");
+    }
+
+    #[test]
+    fn memory_is_sublinear() {
+        let n = 10_000;
+        let d = 64;
+        assert!(NmfAdagrad::new(n, d, 1e-10).memory_bytes() < n * d * 4 / 10);
+        assert!(L2Rank1::new(n, d).memory_bytes() < n * d * 4 / 10);
+    }
+}

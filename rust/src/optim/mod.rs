@@ -1,0 +1,196 @@
+//! First-order optimizers: dense baselines, the paper's count-sketch
+//! optimizers (Algorithms 2–4) and the low-rank comparators (§6/§7).
+//!
+//! Two calling conventions mirror the model split:
+//!
+//! * [`RowOptimizer`] — sparse layers (embedding/softmax): each step
+//!   receives the **gathered active rows** `[k, d]`, their global ids and
+//!   gradient rows, and updates parameters in place. Sketched optimizers
+//!   keep all state in `[v, w, d]` sketch tensors; dense baselines keep
+//!   `[n, d]` state and follow sparse-Adam semantics (untouched rows keep
+//!   their state).
+//! * [`FlatOptimizer`] — dense parameter vectors (LSTM weights etc.).
+//!
+//! [`SparseLayer`] bundles a parameter matrix with a `RowOptimizer` and
+//! performs the gather → step → scatter around it.
+
+pub mod dense;
+pub mod lowrank;
+pub mod schedule;
+pub mod sketched;
+
+pub use dense::{DenseAdagrad, DenseAdam, DenseMomentum, FlatAdagrad, FlatAdam, FlatMomentum, FlatSgd};
+pub use lowrank::{L2Rank1, NmfAdagrad, NmfAdamV, NmfMomentum};
+pub use schedule::LrSchedule;
+pub use sketched::{CmsAdagrad, CmsAdamV, CsAdam, CsMomentum, HybridAdamV};
+
+use crate::util::rng::Rng;
+
+/// Optimizer over gathered sparse rows.
+///
+/// Not `Send`: the XLA-backed implementation holds PJRT handles (`Rc`
+/// internally). Parallel sweeps create one optimizer per thread instead.
+pub trait RowOptimizer {
+    /// Apply one optimizer step.
+    ///
+    /// * `ids` — global row ids (deduplicated within the batch)
+    /// * `rows` — gathered parameter rows `[k, d]`, updated in place
+    /// * `grads` — gradient rows `[k, d]`
+    /// * `lr` — learning rate for this step
+    /// * `t` — 1-based global step count (bias correction, cleaning)
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t: usize);
+
+    /// Bytes of auxiliary state held by this optimizer.
+    fn memory_bytes(&self) -> usize;
+
+    /// Short display name ("adam", "cs-adam", …).
+    fn name(&self) -> &'static str;
+
+    /// Best-effort estimate of the auxiliary variable's rows (diagnostics,
+    /// Fig. 4 approximation-error experiment). Writes `[k, d]`.
+    /// `which` selects the variable: 0 = 1st moment / accumulator,
+    /// 1 = 2nd moment. Returns false if unsupported.
+    fn estimate_rows(&self, _which: usize, _ids: &[u64], _out: &mut [f32]) -> bool {
+        false
+    }
+}
+
+/// Optimizer over a flat dense parameter vector.
+pub trait FlatOptimizer {
+    /// Apply one step to `params` given `grads`.
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32, t: usize);
+
+    /// Bytes of auxiliary state.
+    fn memory_bytes(&self) -> usize;
+
+    /// Short display name.
+    fn name(&self) -> &'static str;
+}
+
+/// A sparse layer: `[n, d]` parameters + a row optimizer.
+pub struct SparseLayer {
+    /// Row-major `[n, d]` parameter matrix.
+    pub params: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+    pub opt: Box<dyn RowOptimizer>,
+    // scratch buffers reused across steps (hot path: no allocation)
+    rows_buf: Vec<f32>,
+}
+
+impl SparseLayer {
+    /// New layer with N(0, init_std²) parameters.
+    pub fn new(n: usize, d: usize, init_std: f32, opt: Box<dyn RowOptimizer>, rng: &mut Rng) -> SparseLayer {
+        let mut params = vec![0.0f32; n * d];
+        rng.fill_normal(&mut params, init_std);
+        SparseLayer { params, n, d, opt, rows_buf: Vec::new() }
+    }
+
+    /// Gather rows `ids` into a `[k, d]` buffer.
+    pub fn gather(&self, ids: &[u64], out: &mut Vec<f32>) {
+        out.resize(ids.len() * self.d, 0.0);
+        for (t, &id) in ids.iter().enumerate() {
+            let src = &self.params[id as usize * self.d..(id as usize + 1) * self.d];
+            out[t * self.d..(t + 1) * self.d].copy_from_slice(src);
+        }
+    }
+
+    /// Scatter rows back.
+    pub fn scatter(&mut self, ids: &[u64], rows: &[f32]) {
+        for (t, &id) in ids.iter().enumerate() {
+            let dst = &mut self.params[id as usize * self.d..(id as usize + 1) * self.d];
+            dst.copy_from_slice(&rows[t * self.d..(t + 1) * self.d]);
+        }
+    }
+
+    /// Full sparse step: gather → optimizer → scatter.
+    pub fn step(&mut self, ids: &[u64], grad_rows: &[f32], lr: f32, t: usize) {
+        let mut rows = std::mem::take(&mut self.rows_buf);
+        self.gather(ids, &mut rows);
+        self.opt.step_rows(ids, &mut rows, grad_rows, lr, t);
+        self.scatter(ids, &rows);
+        self.rows_buf = rows;
+    }
+
+    /// Parameter + optimizer memory, in bytes.
+    pub fn memory_bytes(&self) -> (usize, usize) {
+        (self.params.len() * 4, self.opt.memory_bytes())
+    }
+}
+
+/// Specification of a row-optimizer variant, shared by configs & CLIs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimKind {
+    Sgd,
+    Momentum,
+    Adagrad,
+    Adam,
+    /// Adam with β1 = 0 and no 1st-moment state (paper §7.3).
+    AdamV,
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> Option<OptimKind> {
+        Some(match s {
+            "sgd" => OptimKind::Sgd,
+            "momentum" => OptimKind::Momentum,
+            "adagrad" => OptimKind::Adagrad,
+            "adam" => OptimKind::Adam,
+            "adam-v" | "adamv" => OptimKind::AdamV,
+            _ => return None,
+        })
+    }
+}
+
+/// Compression scheme for the sparse-layer auxiliary variables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    /// Full-size auxiliary state (baseline).
+    Dense,
+    /// Count-sketch tensors (the paper's method). Value = sketch width.
+    Sketch { width: usize },
+    /// NMF rank-1 factorization (Shazeer & Stern comparator).
+    LowRank,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_layer_gather_scatter_roundtrip() {
+        let mut rng = Rng::new(1);
+        let opt = Box::new(dense::DenseMomentum::new(4, 2, 0.9));
+        let mut layer = SparseLayer::new(4, 2, 0.1, opt, &mut rng);
+        let snapshot = layer.params.clone();
+        let ids = [1u64, 3];
+        let mut rows = Vec::new();
+        layer.gather(&ids, &mut rows);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(&rows[0..2], &snapshot[2..4]);
+        layer.scatter(&ids, &rows);
+        assert_eq!(layer.params, snapshot);
+    }
+
+    #[test]
+    fn sparse_layer_step_moves_only_touched_rows() {
+        let mut rng = Rng::new(2);
+        let opt = Box::new(dense::DenseAdagrad::new(8, 3, 1e-10));
+        let mut layer = SparseLayer::new(8, 3, 0.1, opt, &mut rng);
+        let before = layer.params.clone();
+        let ids = [2u64, 5];
+        let grads = vec![1.0f32; 6];
+        layer.step(&ids, &grads, 0.1, 1);
+        for r in 0..8 {
+            let changed = layer.params[r * 3..(r + 1) * 3] != before[r * 3..(r + 1) * 3];
+            assert_eq!(changed, r == 2 || r == 5, "row {r}");
+        }
+    }
+
+    #[test]
+    fn optim_kind_parses() {
+        assert_eq!(OptimKind::parse("adam"), Some(OptimKind::Adam));
+        assert_eq!(OptimKind::parse("adam-v"), Some(OptimKind::AdamV));
+        assert_eq!(OptimKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,98 @@
+//! Learning-rate schedules used by the paper's experiments:
+//! constant (Adam defaults), linear decay to zero (Wikitext-103 Adagrad,
+//! LM1B Adam), and reduce-on-plateau (Wikitext-2: ÷4 when validation
+//! stalls).
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    /// Fixed learning rate.
+    Constant { lr: f32 },
+    /// Linear decay from `lr0` to zero over `total_steps`.
+    LinearDecay { lr0: f32, total_steps: usize },
+    /// Multiply by `factor` when the tracked metric fails to improve by
+    /// `min_delta` for `patience` consecutive reports.
+    Plateau { lr: f32, factor: f32, patience: usize, min_delta: f64, best: f64, bad: usize },
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f32) -> LrSchedule {
+        LrSchedule::Constant { lr }
+    }
+
+    pub fn linear(lr0: f32, total_steps: usize) -> LrSchedule {
+        LrSchedule::LinearDecay { lr0, total_steps: total_steps.max(1) }
+    }
+
+    /// Paper's Wikitext-2 policy: ÷4 on validation plateau.
+    pub fn plateau(lr: f32, factor: f32, patience: usize) -> LrSchedule {
+        LrSchedule::Plateau { lr, factor, patience, min_delta: 1e-4, best: f64::INFINITY, bad: 0 }
+    }
+
+    /// Learning rate at 1-based step `t`.
+    pub fn at(&self, t: usize) -> f32 {
+        match self {
+            LrSchedule::Constant { lr } => *lr,
+            LrSchedule::LinearDecay { lr0, total_steps } => {
+                let frac = 1.0 - (t.min(*total_steps) as f32 - 1.0) / *total_steps as f32;
+                lr0 * frac.max(0.0)
+            }
+            LrSchedule::Plateau { lr, .. } => *lr,
+        }
+    }
+
+    /// Report a validation metric (lower is better); plateau schedules may
+    /// decay. Returns true if the lr changed.
+    pub fn report_metric(&mut self, metric: f64) -> bool {
+        if let LrSchedule::Plateau { lr, factor, patience, min_delta, best, bad } = self {
+            if metric < *best - *min_delta {
+                *best = metric;
+                *bad = 0;
+                false
+            } else {
+                *bad += 1;
+                if *bad >= *patience {
+                    *lr *= *factor;
+                    *bad = 0;
+                    true
+                } else {
+                    false
+                }
+            }
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.at(1), 0.1);
+        assert_eq!(s.at(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn linear_decays_to_zero() {
+        let s = LrSchedule::linear(0.4, 100);
+        assert!((s.at(1) - 0.4).abs() < 1e-6);
+        assert!(s.at(50) < 0.4 && s.at(50) > 0.0);
+        assert!(s.at(100) < 0.005);
+        assert_eq!(s.at(1000), s.at(100)); // clamped
+    }
+
+    #[test]
+    fn plateau_divides_after_patience() {
+        let mut s = LrSchedule::plateau(2.5, 0.25, 2);
+        assert!(!s.report_metric(10.0)); // improves (from inf)
+        assert!(!s.report_metric(9.0)); // improves
+        assert!(!s.report_metric(9.0)); // bad 1
+        assert!(s.report_metric(9.0)); // bad 2 → decay
+        assert!((s.at(1) - 0.625).abs() < 1e-6);
+        assert!(!s.report_metric(8.0)); // improves again
+    }
+}

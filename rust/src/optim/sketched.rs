@@ -1,0 +1,520 @@
+//! The paper's contribution: count-sketch optimizers (Algorithms 2–4).
+//!
+//! Auxiliary state lives in `[v, w, d]` sketch tensors (`v·w ≪ n`); each
+//! step follows the batched semantics shared with `ref.py` and the Pallas
+//! kernels: QUERY → Δ → UPDATE → re-QUERY → apply. The re-query folds
+//! within-batch collisions into the estimates, so all three
+//! implementations agree numerically.
+
+use crate::sketch::{CleaningPolicy, CountMinSketch, CountSketch};
+
+use super::RowOptimizer;
+
+/// Algorithm 2 — Count-Sketch Momentum.
+///
+/// Rewrite `m ← γm + g` as the linear update `m += (γ−1)·m̂ + g`.
+pub struct CsMomentum {
+    sk: CountSketch,
+    gamma: f32,
+    // scratch (no allocation on the hot path)
+    est: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl CsMomentum {
+    pub fn new(depth: usize, width: usize, dim: usize, seed: u64, gamma: f32) -> CsMomentum {
+        CsMomentum { sk: CountSketch::new(depth, width, dim, seed), gamma, est: Vec::new(), delta: Vec::new() }
+    }
+
+    pub fn sketch(&self) -> &CountSketch {
+        &self.sk
+    }
+}
+
+impl RowOptimizer for CsMomentum {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        let d = self.sk.dim();
+        let kd = ids.len() * d;
+        self.est.resize(kd, 0.0);
+        self.delta.resize(kd, 0.0);
+        // Δ = (γ−1)·m̂ + g
+        self.sk.query(ids, &mut self.est);
+        for i in 0..kd {
+            self.delta[i] = (self.gamma - 1.0) * self.est[i] + grads[i];
+        }
+        self.sk.update(ids, &self.delta);
+        // m_t = post-update query; x ← x − η·m_t
+        self.sk.query(ids, &mut self.est);
+        for i in 0..kd {
+            rows[i] -= lr * self.est[i];
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.sk.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "cs-momentum"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        if which != 0 {
+            return false;
+        }
+        self.sk.query(ids, out);
+        true
+    }
+}
+
+/// Algorithm 3 — Count-Min-Sketch Adagrad.
+pub struct CmsAdagrad {
+    sk: CountMinSketch,
+    eps: f32,
+    pub cleaning: CleaningPolicy,
+    est: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl CmsAdagrad {
+    pub fn new(depth: usize, width: usize, dim: usize, seed: u64, eps: f32) -> CmsAdagrad {
+        CmsAdagrad {
+            sk: CountMinSketch::new(depth, width, dim, seed),
+            eps,
+            cleaning: CleaningPolicy::none(),
+            est: Vec::new(),
+            delta: Vec::new(),
+        }
+    }
+
+    pub fn with_cleaning(mut self, policy: CleaningPolicy) -> CmsAdagrad {
+        self.cleaning = policy;
+        self
+    }
+
+    pub fn sketch(&self) -> &CountMinSketch {
+        &self.sk
+    }
+}
+
+impl RowOptimizer for CmsAdagrad {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t: usize) {
+        let d = self.sk.dim();
+        let kd = ids.len() * d;
+        self.est.resize(kd, 0.0);
+        self.delta.resize(kd, 0.0);
+        for i in 0..kd {
+            self.delta[i] = grads[i] * grads[i];
+        }
+        self.sk.update(ids, &self.delta);
+        self.sk.query(ids, &mut self.est);
+        for i in 0..kd {
+            let v = self.est[i].max(0.0);
+            rows[i] -= lr * grads[i] / (v.sqrt() + self.eps);
+        }
+        self.cleaning.maybe_clean(self.sk.tensor_mut(), t);
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.sk.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "cms-adagrad"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        if which != 1 {
+            return false;
+        }
+        self.sk.query(ids, out);
+        true
+    }
+}
+
+/// Algorithm 4 — Count-Sketch Adam: CS for the 1st moment (signed, median),
+/// CMS for the 2nd moment (min), both in `x += Δ` rewrite form.
+pub struct CsAdam {
+    sk_m: CountSketch,
+    sk_v: CountMinSketch,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    pub cleaning: CleaningPolicy,
+    est_m: Vec<f32>,
+    est_v: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl CsAdam {
+    pub fn new(depth: usize, width: usize, dim: usize, seed: u64,
+               beta1: f32, beta2: f32, eps: f32) -> CsAdam {
+        CsAdam {
+            sk_m: CountSketch::new(depth, width, dim, seed),
+            // same hash family as the AOT graphs (one idx tensor feeds both sketches)
+            sk_v: CountMinSketch::new(depth, width, dim, seed),
+            beta1,
+            beta2,
+            eps,
+            cleaning: CleaningPolicy::none(),
+            est_m: Vec::new(),
+            est_v: Vec::new(),
+            delta: Vec::new(),
+        }
+    }
+
+    pub fn with_cleaning(mut self, policy: CleaningPolicy) -> CsAdam {
+        self.cleaning = policy;
+        self
+    }
+
+    pub fn sketch_m(&self) -> &CountSketch {
+        &self.sk_m
+    }
+
+    pub fn sketch_v(&self) -> &CountMinSketch {
+        &self.sk_v
+    }
+}
+
+impl RowOptimizer for CsAdam {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t: usize) {
+        let d = self.sk_m.dim();
+        let kd = ids.len() * d;
+        self.est_m.resize(kd, 0.0);
+        self.est_v.resize(kd, 0.0);
+        self.delta.resize(kd, 0.0);
+
+        // 1st moment: m += (1−β1)(g − m̂)
+        self.sk_m.query(ids, &mut self.est_m);
+        for i in 0..kd {
+            self.delta[i] = (1.0 - self.beta1) * (grads[i] - self.est_m[i]);
+        }
+        self.sk_m.update(ids, &self.delta);
+        self.sk_m.query(ids, &mut self.est_m);
+
+        // 2nd moment: v += (1−β2)(g² − v̂)
+        self.sk_v.query(ids, &mut self.est_v);
+        for i in 0..kd {
+            self.delta[i] = (1.0 - self.beta2) * (grads[i] * grads[i] - self.est_v[i]);
+        }
+        self.sk_v.update(ids, &self.delta);
+        self.sk_v.query(ids, &mut self.est_v);
+
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        for i in 0..kd {
+            let m_hat = self.est_m[i] / bc1;
+            let v_hat = self.est_v[i].max(0.0) / bc2;
+            rows[i] -= lr * m_hat / (v_hat.sqrt() + self.eps);
+        }
+        self.cleaning.maybe_clean(self.sk_v.tensor_mut(), t);
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.sk_m.memory_bytes() + self.sk_v.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "cs-adam"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        match which {
+            0 => self.sk_m.query(ids, out),
+            1 => self.sk_v.query(ids, out),
+            _ => return false,
+        }
+        true
+    }
+}
+
+/// CMS-Adam with β1 = 0 and **no 1st-moment state at all** — the maximal
+/// memory-saving variant of §7.3 and the optimizer analyzed in Theorem 5.1
+/// (RMSProp-style).
+pub struct CmsAdamV {
+    sk_v: CountMinSketch,
+    beta2: f32,
+    eps: f32,
+    pub cleaning: CleaningPolicy,
+    est_v: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl CmsAdamV {
+    pub fn new(depth: usize, width: usize, dim: usize, seed: u64, beta2: f32, eps: f32) -> CmsAdamV {
+        CmsAdamV {
+            sk_v: CountMinSketch::new(depth, width, dim, seed),
+            beta2,
+            eps,
+            cleaning: CleaningPolicy::none(),
+            est_v: Vec::new(),
+            delta: Vec::new(),
+        }
+    }
+
+    pub fn with_cleaning(mut self, policy: CleaningPolicy) -> CmsAdamV {
+        self.cleaning = policy;
+        self
+    }
+
+    pub fn sketch_v(&self) -> &CountMinSketch {
+        &self.sk_v
+    }
+}
+
+impl RowOptimizer for CmsAdamV {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t: usize) {
+        let d = self.sk_v.dim();
+        let kd = ids.len() * d;
+        self.est_v.resize(kd, 0.0);
+        self.delta.resize(kd, 0.0);
+
+        self.sk_v.query(ids, &mut self.est_v);
+        for i in 0..kd {
+            self.delta[i] = (1.0 - self.beta2) * (grads[i] * grads[i] - self.est_v[i]);
+        }
+        self.sk_v.update(ids, &self.delta);
+        self.sk_v.query(ids, &mut self.est_v);
+
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        for i in 0..kd {
+            let v_hat = self.est_v[i].max(0.0) / bc2;
+            rows[i] -= lr * grads[i] / (v_hat.sqrt() + self.eps);
+        }
+        self.cleaning.maybe_clean(self.sk_v.tensor_mut(), t);
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.sk_v.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "cms-adam-v"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        if which != 1 {
+            return false;
+        }
+        self.sk_v.query(ids, out);
+        true
+    }
+}
+
+/// Adam with a **dense** 1st moment and a **CMS-compressed** 2nd moment —
+/// the paper's "CS-V" configuration (Tables 4, 6, 7): only the
+/// non-negative variable is sketched, the signed momentum stays exact.
+pub struct HybridAdamV {
+    m: Vec<f32>,
+    sk_v: CountMinSketch,
+    d: usize,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    pub cleaning: CleaningPolicy,
+    est_v: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl HybridAdamV {
+    pub fn new(n: usize, depth: usize, width: usize, dim: usize, seed: u64,
+               beta1: f32, beta2: f32, eps: f32) -> HybridAdamV {
+        HybridAdamV {
+            m: vec![0.0; n * dim],
+            sk_v: CountMinSketch::new(depth, width, dim, seed),
+            d: dim,
+            beta1,
+            beta2,
+            eps,
+            cleaning: CleaningPolicy::none(),
+            est_v: Vec::new(),
+            delta: Vec::new(),
+        }
+    }
+
+    pub fn with_cleaning(mut self, policy: CleaningPolicy) -> HybridAdamV {
+        self.cleaning = policy;
+        self
+    }
+}
+
+impl RowOptimizer for HybridAdamV {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t: usize) {
+        let d = self.d;
+        let kd = ids.len() * d;
+        self.est_v.resize(kd, 0.0);
+        self.delta.resize(kd, 0.0);
+
+        self.sk_v.query(ids, &mut self.est_v);
+        for i in 0..kd {
+            self.delta[i] = (1.0 - self.beta2) * (grads[i] * grads[i] - self.est_v[i]);
+        }
+        self.sk_v.update(ids, &self.delta);
+        self.sk_v.query(ids, &mut self.est_v);
+
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        for (ti, &id) in ids.iter().enumerate() {
+            let m = &mut self.m[id as usize * d..(id as usize + 1) * d];
+            for i in 0..d {
+                let gi = grads[ti * d + i];
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
+                let m_hat = m[i] / bc1;
+                let v_hat = self.est_v[ti * d + i].max(0.0) / bc2;
+                rows[ti * d + i] -= lr * m_hat / (v_hat.sqrt() + self.eps);
+            }
+        }
+        self.cleaning.maybe_clean(self.sk_v.tensor_mut(), t);
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.m.len() * 4 + self.sk_v.memory_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "cs-adam-v(hybrid)"
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        match which {
+            0 => {
+                for (t, &id) in ids.iter().enumerate() {
+                    out[t * self.d..(t + 1) * self.d]
+                        .copy_from_slice(&self.m[id as usize * self.d..(id as usize + 1) * self.d]);
+                }
+            }
+            1 => self.sk_v.query(ids, out),
+            _ => return false,
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::dense::{DenseAdagrad, DenseAdam, DenseMomentum};
+    use crate::util::proptest::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    /// With a sketch wide enough that the test ids are collision-free, the
+    /// sketched optimizers must track their dense counterparts exactly
+    /// (DESIGN.md §6.5 — the strongest correctness anchor).
+    #[test]
+    fn cs_adam_matches_dense_adam_without_collisions() {
+        let ids = [5u64, 900, 33_000];
+        let (v, w, d) = (3, 65_536, 4);
+        let mut cs = CsAdam::new(v, w, d, 1, 0.9, 0.999, 1e-8);
+        // require injectivity for both sketches under these seeds
+        for j in 0..v {
+            let mut b: Vec<usize> = ids.iter().map(|&i| cs.sk_m.hasher().bucket(j, i)).collect();
+            b.sort_unstable();
+            b.dedup();
+            assert_eq!(b.len(), ids.len());
+            let mut b: Vec<usize> = ids.iter().map(|&i| cs.sk_v.hasher().bucket(j, i)).collect();
+            b.sort_unstable();
+            b.dedup();
+            assert_eq!(b.len(), ids.len());
+        }
+        let mut dense = DenseAdam::new(40_000, d, 0.9, 0.999, 1e-8);
+        let mut rng = Rng::new(2);
+        let mut rows_a = vec![0.5f32; ids.len() * d];
+        let mut rows_b = rows_a.clone();
+        for t in 1..=10 {
+            let g: Vec<f32> = (0..ids.len() * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            cs.step_rows(&ids, &mut rows_a, &g, 1e-2, t);
+            dense.step_rows(&ids, &mut rows_b, &g, 1e-2, t);
+            assert_close(&rows_a, &rows_b, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn cs_momentum_matches_dense_without_collisions() {
+        let ids = [1u64, 2, 3];
+        let mut cs = CsMomentum::new(3, 65_536, 3, 7, 0.9);
+        let mut dense = DenseMomentum::new(10, 3, 0.9);
+        let mut rng = Rng::new(3);
+        let mut a = vec![0.0f32; 9];
+        let mut b = vec![0.0f32; 9];
+        for t in 1..=8 {
+            let g: Vec<f32> = (0..9).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            cs.step_rows(&ids, &mut a, &g, 0.1, t);
+            dense.step_rows(&ids, &mut b, &g, 0.1, t);
+        }
+        assert_close(&a, &b, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn cms_adagrad_matches_dense_without_collisions() {
+        let ids = [10u64, 20, 30];
+        let mut cs = CmsAdagrad::new(3, 65_536, 2, 5, 1e-10);
+        let mut dense = DenseAdagrad::new(100, 2, 1e-10);
+        let mut rng = Rng::new(4);
+        let mut a = vec![1.0f32; 6];
+        let mut b = vec![1.0f32; 6];
+        for t in 1..=8 {
+            let g: Vec<f32> = (0..6).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            cs.step_rows(&ids, &mut a, &g, 0.1, t);
+            dense.step_rows(&ids, &mut b, &g, 0.1, t);
+        }
+        assert_close(&a, &b, 1e-4).unwrap();
+    }
+
+    /// Momentum rewrite sanity: the sketch approximates the true momentum
+    /// exponential average when collisions exist but are mild.
+    #[test]
+    fn cs_momentum_tracks_true_momentum_statistically() {
+        check("cs-momentum-tracks", 4, 0xBEEF, |rng| {
+            let n = 256usize;
+            let d = 1usize;
+            let mut cs = CsMomentum::new(3, 128, d, 11, 0.9);
+            let mut truth = vec![0.0f32; n];
+            let mut rows = vec![0.0f32; 8];
+            for _t in 1..=50 {
+                let ids: Vec<u64> =
+                    rng.sample_distinct(n, 8).into_iter().map(|x| x as u64).collect();
+                let g: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                for (i, &id) in ids.iter().enumerate() {
+                    truth[id as usize] = 0.9 * truth[id as usize] + g[i];
+                }
+                cs.step_rows(&ids, &mut rows, &g, 0.0, 1);
+            }
+            // mean absolute error should be well below the state's scale
+            let mut est = vec![0.0f32; n];
+            let ids: Vec<u64> = (0..n as u64).collect();
+            cs.sk.query(&ids, &mut est);
+            let err: f32 = est.iter().zip(&truth).map(|(a, b)| (a - b).abs()).sum::<f32>() / n as f32;
+            let scale: f32 = truth.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
+            if err < scale {
+                Ok(())
+            } else {
+                Err(format!("err {err} >= scale {scale}"))
+            }
+        });
+    }
+
+    #[test]
+    fn memory_is_sketch_sized_not_layer_sized() {
+        // 5x compression: sketch of width n/5 per depth-3 tensor
+        let n = 100_000;
+        let d = 8;
+        let cs = CsAdam::new(3, n / 5 / 3, d, 1, 0.9, 0.999, 1e-8);
+        let dense = DenseAdam::new(n, d, 0.9, 0.999, 1e-8);
+        assert!(cs.memory_bytes() * 4 < dense.memory_bytes());
+    }
+
+    #[test]
+    fn cleaning_hooks_fire() {
+        let mut opt = CmsAdagrad::new(2, 8, 1, 3, 1e-10)
+            .with_cleaning(CleaningPolicy { every: 2, alpha: 0.5 });
+        let ids = [1u64];
+        let mut rows = vec![0.0f32];
+        opt.step_rows(&ids, &mut rows, &[2.0], 0.0, 1);
+        let before = opt.sk.query_one(1)[0];
+        // step 2 cleans after updating: estimate halves (plus new g²)
+        opt.step_rows(&ids, &mut rows, &[0.0], 0.0, 2);
+        let after = opt.sk.query_one(1)[0];
+        assert!((after - 0.5 * before).abs() < 1e-6, "{after} vs {}", 0.5 * before);
+    }
+}

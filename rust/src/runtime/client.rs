@@ -1,0 +1,161 @@
+//! PJRT client wrapper: lazy artifact compilation with caching and typed,
+//! shape-validated execution.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Artifact, Dtype, Manifest};
+
+/// A typed argument for an artifact call.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> Arg<'a> {
+    fn matches(&self, spec: &super::manifest::TensorSpec) -> bool {
+        match self {
+            Arg::F32(v) => spec.dtype == Dtype::F32 && v.len() == spec.elements(),
+            Arg::I32(v) => spec.dtype == Dtype::I32 && v.len() == spec.elements(),
+            Arg::ScalarF32(_) => spec.dtype == Dtype::F32 && spec.shape.is_empty(),
+            Arg::ScalarI32(_) => spec.dtype == Dtype::I32 && spec.shape.is_empty(),
+        }
+    }
+
+    fn to_literal(&self, spec: &super::manifest::TensorSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Arg::ScalarF32(x) => xla::Literal::scalar(*x),
+            Arg::ScalarI32(x) => xla::Literal::scalar(*x),
+            Arg::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            Arg::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+        })
+    }
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Executable {
+    pub spec: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with shape/dtype validation. Returns one `Literal` per
+    /// manifest output (the AOT graphs return a single tuple, which is
+    /// decomposed here).
+    pub fn call(&self, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} args, expected {}",
+                self.spec.name,
+                args.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&self.spec.inputs) {
+            if !arg.matches(spec) {
+                bail!(
+                    "{}: argument {:?} shape/dtype mismatch (want {:?} {:?})",
+                    self.spec.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape
+                );
+            }
+            literals.push(arg.to_literal(spec)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Execute and copy each f32 output into the provided slices
+    /// (`None` slots are skipped). Scalar outputs read via `out_scalars`.
+    pub fn call_into(&self, args: &[Arg], outs: &mut [Option<&mut [f32]>]) -> Result<Vec<f32>> {
+        let literals = self.call(args)?;
+        let mut scalars = Vec::new();
+        for (i, lit) in literals.iter().enumerate() {
+            let spec = &self.spec.outputs[i];
+            if spec.shape.is_empty() {
+                scalars.push(lit.get_first_element::<f32>()?);
+                continue;
+            }
+            if let Some(Some(dst)) = outs.get_mut(i) {
+                if dst.len() != spec.elements() {
+                    bail!("{}: output {i} size mismatch", self.spec.name);
+                }
+                lit.copy_raw_to(dst)?;
+            }
+        }
+        Ok(scalars)
+    }
+}
+
+/// The runtime: one PJRT CPU client + an artifact cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (compiles nothing yet).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact directory: `$CSOPT_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("CSOPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::open(dir)
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))
+            .with_context(|| format!("artifact file {}", path.display()))?;
+        let executable = std::sync::Arc::new(Executable { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+}
+
+/// Copy a literal's f32 contents into a fresh vector.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,183 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime. Records every artifact's input/output names,
+//! dtypes and shapes (in call order) plus the preset hyper-parameters and
+//! the sketch hash seed, so call sites are validated at load time instead
+//! of failing opaquely inside XLA.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor element type (the AOT graphs use only these two).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// One tensor's name/dtype/shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let name = j.get("name").and_then(|x| x.as_str()).unwrap_or("").to_string();
+        let dtype = Dtype::parse(j.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype"))?)?;
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow!("shape elem")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { name, dtype, shape })
+    }
+}
+
+/// One AOT-compiled graph.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub hyper: BTreeMap<String, f64>,
+    /// Raw preset objects (numeric fields), keyed by preset name.
+    pub presets: BTreeMap<String, BTreeMap<String, f64>>,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &std::path::Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first?)", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.req("format_version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest format_version {version}");
+        }
+        let hyper = j
+            .req("hyper")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("hyper"))?
+            .iter()
+            .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+            .collect();
+        let mut presets = BTreeMap::new();
+        for (name, p) in j.req("presets")?.as_obj().ok_or_else(|| anyhow!("presets"))? {
+            let fields = p
+                .as_obj()
+                .ok_or_else(|| anyhow!("preset {name}"))?
+                .iter()
+                .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+                .collect();
+            presets.insert(name.clone(), fields);
+        }
+        let mut artifacts = BTreeMap::new();
+        for a in j.req("artifacts")?.as_arr().ok_or_else(|| anyhow!("artifacts"))? {
+            let name = a.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string();
+            let file = a.req("file")?.as_str().ok_or_else(|| anyhow!("file"))?.to_string();
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(name.clone(), Artifact { name, file, inputs, outputs });
+        }
+        Ok(Manifest { hyper, presets, artifacts })
+    }
+
+    /// Artifact lookup with a useful error.
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} known)", self.artifacts.len()))
+    }
+
+    /// Hyper-parameter lookup.
+    pub fn hyper(&self, key: &str) -> Result<f64> {
+        self.hyper.get(key).copied().ok_or_else(|| anyhow!("hyper {key:?} missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format_version": 1,
+      "hyper": {"adam_beta1": 0.9, "hash_seed": 24301},
+      "presets": {"tiny": {"vocab": 512, "de": 32}},
+      "artifacts": [
+        {"name": "smoke.axpy", "file": "smoke.axpy.hlo.txt",
+         "inputs": [{"name": "a", "dtype": "f32", "shape": []},
+                    {"name": "x", "dtype": "f32", "shape": [4]}],
+         "outputs": [{"dtype": "f32", "shape": [4]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.hyper("adam_beta1").unwrap(), 0.9);
+        assert_eq!(m.presets["tiny"]["vocab"], 512.0);
+        let a = m.artifact("smoke.axpy").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].shape, vec![4]);
+        assert_eq!(a.inputs[1].dtype, Dtype::F32);
+        assert_eq!(a.outputs[0].elements(), 4);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"format_version\": 1", "\"format_version\": 2");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+}

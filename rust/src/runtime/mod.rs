@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` + manifest)
+//! and execute them from the coordinator's hot path.
+//!
+//! Pipeline per artifact: `HloModuleProto::from_text_file` (HLO **text** —
+//! see DESIGN.md on why not serialized protos) → `XlaComputation` →
+//! `PjRtClient::compile` (cached) → `execute` with typed, shape-validated
+//! literals.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Arg, Executable, Runtime};
+pub use manifest::{Artifact, Dtype, Manifest, TensorSpec};

@@ -1,0 +1,88 @@
+//! Periodic cleaning of Count-Min sketches (paper §4, Fig. 5).
+//!
+//! The CMS only overestimates for non-negative streams; for the adaptive
+//! learning rates (Adagrad, Adam-v) an overestimate prematurely shrinks a
+//! coordinate's step size. The paper's heuristic: every `C` iterations,
+//! multiply the whole tensor by `α ∈ [0, 1]`, decaying accumulated noise
+//! while heavy-hitter structure re-emerges from subsequent updates.
+//! (MegaFace settings: Adam α=0.2 / C=125, Adagrad α=0.5 / C=125.)
+
+use super::tensor::SketchTensor;
+
+/// Cleaning schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CleaningPolicy {
+    /// Clean every `every` optimizer steps (0 = never).
+    pub every: usize,
+    /// Multiplicative decay applied at each cleaning.
+    pub alpha: f32,
+}
+
+impl CleaningPolicy {
+    /// Disabled policy.
+    pub fn none() -> CleaningPolicy {
+        CleaningPolicy { every: 0, alpha: 1.0 }
+    }
+
+    /// The paper's MegaFace-Adam setting.
+    pub fn adam_default() -> CleaningPolicy {
+        CleaningPolicy { every: 125, alpha: 0.2 }
+    }
+
+    /// The paper's MegaFace-Adagrad setting.
+    pub fn adagrad_default() -> CleaningPolicy {
+        CleaningPolicy { every: 125, alpha: 0.5 }
+    }
+
+    /// Is cleaning active?
+    pub fn enabled(&self) -> bool {
+        self.every > 0 && self.alpha < 1.0
+    }
+
+    /// Apply to `tensor` if step `t` (1-based) is a cleaning step.
+    /// Returns true when a cleaning was performed.
+    pub fn maybe_clean(&self, tensor: &mut SketchTensor, t: usize) -> bool {
+        if self.enabled() && t > 0 && t % self.every == 0 {
+            tensor.scale(self.alpha);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cleans_on_schedule_only() {
+        let mut t = SketchTensor::zeros(1, 2, 1);
+        t.row_mut(0, 0)[0] = 16.0;
+        let p = CleaningPolicy { every: 4, alpha: 0.5 };
+        assert!(!p.maybe_clean(&mut t, 1));
+        assert!(!p.maybe_clean(&mut t, 3));
+        assert!(p.maybe_clean(&mut t, 4));
+        assert_eq!(t.row(0, 0)[0], 8.0);
+        assert!(!p.maybe_clean(&mut t, 5));
+        assert!(p.maybe_clean(&mut t, 8));
+        assert_eq!(t.row(0, 0)[0], 4.0);
+    }
+
+    #[test]
+    fn disabled_policy_never_cleans() {
+        let mut t = SketchTensor::zeros(1, 1, 1);
+        t.row_mut(0, 0)[0] = 2.0;
+        let p = CleaningPolicy::none();
+        for step in 1..100 {
+            assert!(!p.maybe_clean(&mut t, step));
+        }
+        assert_eq!(t.row(0, 0)[0], 2.0);
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        assert_eq!(CleaningPolicy::adam_default(), CleaningPolicy { every: 125, alpha: 0.2 });
+        assert_eq!(CleaningPolicy::adagrad_default(), CleaningPolicy { every: 125, alpha: 0.5 });
+    }
+}

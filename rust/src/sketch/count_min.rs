@@ -1,0 +1,184 @@
+//! Count-Min Sketch (Cormode & Muthukrishnan 2005): unsigned updates,
+//! min-of-depth queries. Used for the non-negative auxiliary variables
+//! (Adagrad accumulator, Adam 2nd moment).
+//!
+//! Note the paper inserts *signed* Adam-v deltas `(1−β₂)(g² − v̂)` into the
+//! CMS while still querying with MIN; estimates can therefore dip below the
+//! true value transiently, and the optimizer clamps at zero before the
+//! square root (same as the reference implementation).
+
+use super::hash::SketchHasher;
+use super::tensor::SketchTensor;
+
+/// Count-min sketch over `R^{n,d}` rows compressed to `[v, w, d]`.
+#[derive(Clone, Debug)]
+pub struct CountMinSketch {
+    tensor: SketchTensor,
+    hasher: SketchHasher,
+}
+
+impl CountMinSketch {
+    /// Zero-initialized sketch.
+    pub fn new(depth: usize, width: usize, dim: usize, seed: u64) -> CountMinSketch {
+        CountMinSketch {
+            tensor: SketchTensor::zeros(depth, width, dim),
+            hasher: SketchHasher::new(depth, width, seed),
+        }
+    }
+
+    pub fn tensor(&self) -> &SketchTensor {
+        &self.tensor
+    }
+
+    pub fn tensor_mut(&mut self) -> &mut SketchTensor {
+        &mut self.tensor
+    }
+
+    pub fn hasher(&self) -> &SketchHasher {
+        &self.hasher
+    }
+
+    pub fn dim(&self) -> usize {
+        self.tensor.dim()
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        self.tensor.memory_bytes()
+    }
+
+    /// UPDATE: add `Δ_i` (no sign) to row `h_j(i)` for every depth/item.
+    pub fn update(&mut self, ids: &[u64], deltas: &[f32]) {
+        let d = self.tensor.dim();
+        assert_eq!(deltas.len(), ids.len() * d);
+        for j in 0..self.hasher.depth() {
+            for (t, &id) in ids.iter().enumerate() {
+                let b = self.hasher.bucket(j, id);
+                let row = self.tensor.row_mut(j, b);
+                let delta = &deltas[t * d..(t + 1) * d];
+                for (r, &x) in row.iter_mut().zip(delta) {
+                    *r += x;
+                }
+            }
+        }
+    }
+
+    /// QUERY: elementwise min over depth. Writes `[k, d]` into `out`.
+    pub fn query(&self, ids: &[u64], out: &mut [f32]) {
+        let d = self.tensor.dim();
+        let v = self.hasher.depth();
+        let w = self.tensor.width();
+        assert_eq!(out.len(), ids.len() * d);
+        let data = self.tensor.data();
+        for (t, &id) in ids.iter().enumerate() {
+            let dst = &mut out[t * d..(t + 1) * d];
+            let b0 = self.hasher.bucket(0, id);
+            dst.copy_from_slice(&data[b0 * d..b0 * d + d]);
+            for j in 1..v {
+                let b = j * w + self.hasher.bucket(j, id);
+                let row = &data[b * d..b * d + d];
+                for (o, &x) in dst.iter_mut().zip(row) {
+                    if x < *o {
+                        *o = x;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Convenience: query a single id into a fresh vector.
+    pub fn query_one(&self, id: u64) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim()];
+        self.query(&[id], &mut out);
+        out
+    }
+
+    /// Decompress the full `[n, d]` estimate (diagnostics).
+    pub fn materialize(&self, n: usize) -> Vec<f32> {
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let mut out = vec![0.0; n * self.dim()];
+        self.query(&ids, &mut out);
+        out
+    }
+
+    /// Periodic cleaning (paper §4): multiply all cells by `alpha`.
+    pub fn clean(&mut self, alpha: f32) {
+        self.tensor.scale(alpha);
+    }
+
+    /// Fold the sketch in half (paper §5); the hasher follows.
+    pub fn fold_half(&mut self) {
+        self.tensor.fold_half();
+        self.hasher = self.hasher.halved();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, check};
+
+    #[test]
+    fn overestimates_nonnegative_streams() {
+        check("cms-overestimate", 16, 0xA1, |rng| {
+            let (v, w, d, n) = (3, 8, 4, 64);
+            let mut cms = CountMinSketch::new(v, w, d, 5);
+            let ids: Vec<u64> = (0..n as u64).collect();
+            let xs: Vec<f32> = (0..n * d).map(|_| rng.f32().abs()).collect();
+            cms.update(&ids, &xs);
+            let mut est = vec![0.0f32; n * d];
+            cms.query(&ids, &mut est);
+            let l1: f32 = xs.iter().sum();
+            for i in 0..n * d {
+                if est[i] < xs[i] - 1e-5 {
+                    return Err(format!("underestimate at {i}: {} < {}", est[i], xs[i]));
+                }
+                if est[i] > xs[i] + l1 + 1e-3 {
+                    return Err(format!("exceeds L1 bound at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_when_no_collisions() {
+        let mut cms = CountMinSketch::new(3, 4096, 2, 2);
+        let ids = [3u64, 77, 400];
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        cms.update(&ids, &xs);
+        let mut est = vec![0.0; 6];
+        cms.query(&ids, &mut est);
+        assert_close(&est, &xs, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn cleaning_scales_estimates() {
+        let mut cms = CountMinSketch::new(2, 16, 1, 4);
+        cms.update(&[9], &[8.0]);
+        cms.clean(0.25);
+        assert_close(&cms.query_one(9), &[2.0], 1e-6).unwrap();
+    }
+
+    #[test]
+    fn fold_half_matches_direct_half_sketch() {
+        let mut a = CountMinSketch::new(3, 32, 2, 6);
+        let ids: Vec<u64> = (0..50).collect();
+        let xs: Vec<f32> = (0..100).map(|x| (x % 7) as f32).collect();
+        a.update(&ids, &xs);
+        a.fold_half();
+        let mut b = CountMinSketch::new(3, 16, 2, 6);
+        b.update(&ids, &xs);
+        assert_close(a.tensor().data(), b.tensor().data(), 1e-5).unwrap();
+    }
+
+    #[test]
+    fn min_query_takes_smallest_depth_row() {
+        let mut cms = CountMinSketch::new(2, 4, 1, 1);
+        // manually poke rows to force different values per depth
+        let b0 = cms.hasher().bucket(0, 5);
+        let b1 = cms.hasher().bucket(1, 5);
+        cms.tensor_mut().row_mut(0, b0)[0] = 7.0;
+        cms.tensor_mut().row_mut(1, b1)[0] = 3.0;
+        assert_eq!(cms.query_one(5), vec![3.0]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Universal hash family for the count-sketch tensor.
+//!
+//! Bit-identical to `python/compile/kernels/hashing.py`: both sides compute
+//! `h_j(i)` / `s_j(i)` from a SplitMix64 finalizer over `i ^ seed_j`, with
+//! per-depth seeds derived from one master seed. The Rust coordinator hashes
+//! batches host-side and feeds the resulting `idx`/`sign` tensors to the
+//! AOT-compiled kernels, so the two implementations must agree exactly.
+
+use crate::util::rng::splitmix64;
+
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Hash-family handle: `depth` functions onto `width` buckets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SketchHasher {
+    depth: usize,
+    width: usize,
+    seed: u64,
+    /// Precomputed per-depth seeds.
+    depth_seeds: Vec<u64>,
+}
+
+impl SketchHasher {
+    /// Create a hasher. `width` must be ≥ 1.
+    pub fn new(depth: usize, width: usize, seed: u64) -> SketchHasher {
+        assert!(depth >= 1 && width >= 1);
+        let depth_seeds = (0..depth)
+            .map(|j| splitmix64(seed.wrapping_add(((j + 1) as u64).wrapping_mul(GOLDEN))))
+            .collect();
+        SketchHasher { depth, width, seed, depth_seeds }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// 64-bit mix for item `i` at depth `j`.
+    #[inline(always)]
+    fn mix(&self, j: usize, i: u64) -> u64 {
+        splitmix64(i ^ self.depth_seeds[j])
+    }
+
+    /// Bucket `h_j(i) ∈ [0, width)`.
+    #[inline(always)]
+    pub fn bucket(&self, j: usize, i: u64) -> usize {
+        (self.mix(j, i) % self.width as u64) as usize
+    }
+
+    /// Sign `s_j(i) ∈ {+1, −1}` (top bit of the mix).
+    #[inline(always)]
+    pub fn sign(&self, j: usize, i: u64) -> f32 {
+        if self.mix(j, i) >> 63 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Bucket and sign in one mix (the hot-path form).
+    #[inline(always)]
+    pub fn bucket_sign(&self, j: usize, i: u64) -> (usize, f32) {
+        let h = self.mix(j, i);
+        let b = (h % self.width as u64) as usize;
+        let s = if h >> 63 == 0 { 1.0 } else { -1.0 };
+        (b, s)
+    }
+
+    /// Batched buckets/signs laid out `[depth, k]` (row-major), matching the
+    /// `idx`/`sign` inputs of the AOT kernels.
+    pub fn buckets_and_signs(&self, ids: &[u64]) -> (Vec<i32>, Vec<f32>) {
+        let k = ids.len();
+        let mut idx = vec![0i32; self.depth * k];
+        let mut sign = vec![0f32; self.depth * k];
+        for j in 0..self.depth {
+            let row_i = &mut idx[j * k..(j + 1) * k];
+            let row_s = &mut sign[j * k..(j + 1) * k];
+            for (t, &id) in ids.iter().enumerate() {
+                let (b, s) = self.bucket_sign(j, id);
+                row_i[t] = b as i32;
+                row_s[t] = s;
+            }
+        }
+        (idx, sign)
+    }
+
+    /// A hasher for the same seed/depth but half the width — valid after a
+    /// [`super::tensor::SketchTensor::fold_half`]: because buckets are
+    /// `mix % w`, and `w/2` divides `w`, `mix % (w/2) == (mix % w) % (w/2)`.
+    pub fn halved(&self) -> SketchHasher {
+        assert!(self.width % 2 == 0, "fold requires even width");
+        SketchHasher::new(self.depth, self.width / 2, self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_in_range_signs_pm1() {
+        let h = SketchHasher::new(3, 17, 0x5EED);
+        for i in 0..1000u64 {
+            for j in 0..3 {
+                assert!(h.bucket(j, i) < 17);
+                let s = h.sign(j, i);
+                assert!(s == 1.0 || s == -1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matches_scalar() {
+        let h = SketchHasher::new(4, 23, 99);
+        let ids: Vec<u64> = (0..57).map(|i| i * 3 + 1).collect();
+        let (idx, sign) = h.buckets_and_signs(&ids);
+        for j in 0..4 {
+            for (t, &id) in ids.iter().enumerate() {
+                assert_eq!(idx[j * ids.len() + t] as usize, h.bucket(j, id));
+                assert_eq!(sign[j * ids.len() + t], h.sign(j, id));
+            }
+        }
+    }
+
+    #[test]
+    fn depths_are_independent() {
+        let h = SketchHasher::new(3, 64, 7);
+        let mut agree = 0usize;
+        let n = 4096;
+        for i in 0..n as u64 {
+            if h.bucket(0, i) == h.bucket(1, i) {
+                agree += 1;
+            }
+        }
+        assert!((agree as f64) < 0.05 * n as f64, "agree={agree}");
+    }
+
+    #[test]
+    fn sign_balanced() {
+        let h = SketchHasher::new(1, 2, 3);
+        let sum: f32 = (0..20_000u64).map(|i| h.sign(0, i)).sum();
+        assert!(sum.abs() < 500.0);
+    }
+
+    #[test]
+    fn halved_hasher_consistent_with_mod() {
+        let h = SketchHasher::new(3, 64, 11);
+        let h2 = h.halved();
+        for i in 0..500u64 {
+            for j in 0..3 {
+                assert_eq!(h2.bucket(j, i), h.bucket(j, i) % 32);
+                assert_eq!(h2.sign(j, i), h.sign(j, i));
+            }
+        }
+    }
+
+    /// Golden cross-check against the Python implementation: these exact
+    /// values come from `hashing.buckets_and_signs(np.arange(4), 2, 16, 7)`.
+    /// If this test and python/tests/test_hashing.py disagree, the state
+    /// interchange between the coordinator and the AOT kernels is broken.
+    #[test]
+    fn matches_python_golden_vectors() {
+        let h = SketchHasher::new(2, 16, 7);
+        let (idx, sign) = h.buckets_and_signs(&[0, 1, 2, 3]);
+        assert_eq!(idx, vec![4, 6, 5, 1, 6, 6, 0, 12]);
+        assert_eq!(sign, vec![-1.0, -1.0, 1.0, -1.0, -1.0, -1.0, -1.0, 1.0]);
+    }
+}

@@ -1,0 +1,28 @@
+//! The paper's core data structure: the **count-sketch tensor**.
+//!
+//! An auxiliary optimizer variable `X ∈ R^{n,d}` (n = vocab/class rows,
+//! d = feature columns) is compressed into `S ∈ R^{v,w,d}` with `v·w ≪ n`:
+//! row ids are hashed by `v` universal hash functions into `w` buckets while
+//! the feature axis `d` stays contiguous ("structured sparsity", paper
+//! Fig. 3) so bucket rows are read/written as whole SIMD-friendly vectors.
+//!
+//! * [`hash`] — the 2-universal SplitMix64 family, bit-identical to
+//!   `python/compile/kernels/hashing.py` (golden-vector pinned).
+//! * [`tensor`] — the `[v, w, d]` storage: scaling (cleaning), fold-in-half
+//!   shrinking (paper §5 / Matusevych et al.), memory accounting.
+//! * [`count_sketch`] — signed median-of-depth estimator (UPDATE/QUERY).
+//! * [`count_min`] — unsigned min-of-depth estimator (UPDATE/QUERY).
+//! * [`clean`] — the periodic cleaning heuristic for CMS overestimates
+//!   (paper §4, Fig. 5).
+
+pub mod clean;
+pub mod count_min;
+pub mod count_sketch;
+pub mod hash;
+pub mod tensor;
+
+pub use clean::CleaningPolicy;
+pub use count_min::CountMinSketch;
+pub use count_sketch::CountSketch;
+pub use hash::SketchHasher;
+pub use tensor::SketchTensor;

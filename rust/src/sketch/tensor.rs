@@ -1,0 +1,159 @@
+//! `[v, w, d]` count-sketch tensor storage.
+//!
+//! Row-major layout: bucket row `(j, b)` is the contiguous slice
+//! `data[(j*w + b)*d .. +d]` — the paper's "structured sparsity" (Fig. 3)
+//! that keeps every UPDATE/QUERY a contiguous vector operation.
+
+/// Dense storage for a count-sketch / count-min-sketch tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SketchTensor {
+    depth: usize,
+    width: usize,
+    dim: usize,
+    data: Vec<f32>,
+}
+
+impl SketchTensor {
+    /// Zero-initialized tensor.
+    pub fn zeros(depth: usize, width: usize, dim: usize) -> SketchTensor {
+        assert!(depth >= 1 && width >= 1 && dim >= 1);
+        SketchTensor { depth, width, dim, data: vec![0.0; depth * width * dim] }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Bucket row `(j, b)` as an immutable slice of length `dim`.
+    #[inline(always)]
+    pub fn row(&self, j: usize, b: usize) -> &[f32] {
+        debug_assert!(j < self.depth && b < self.width);
+        let off = (j * self.width + b) * self.dim;
+        &self.data[off..off + self.dim]
+    }
+
+    /// Bucket row `(j, b)` as a mutable slice.
+    #[inline(always)]
+    pub fn row_mut(&mut self, j: usize, b: usize) -> &mut [f32] {
+        debug_assert!(j < self.depth && b < self.width);
+        let off = (j * self.width + b) * self.dim;
+        &mut self.data[off..off + self.dim]
+    }
+
+    /// Whole backing buffer (for PJRT interchange / checkpointing).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable backing buffer (for loading PJRT results / checkpoints).
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Replace contents from a flat `[v*w*d]` buffer.
+    pub fn load(&mut self, flat: &[f32]) {
+        assert_eq!(flat.len(), self.data.len());
+        self.data.copy_from_slice(flat);
+    }
+
+    /// Heap memory of the sketch state in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Multiply every cell by `alpha` (the §4 cleaning primitive).
+    pub fn scale(&mut self, alpha: f32) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// Zero everything.
+    pub fn reset(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Fold the tensor in half along the bucket axis (paper §5 /
+    /// Matusevych et al. 2012): bucket `b ≥ w/2` is added into `b − w/2`,
+    /// halving memory while preserving estimates under the halved hasher
+    /// (`h % (w/2) == (h % w) % (w/2)` since `b ≡ b − w/2 (mod w/2)`).
+    /// Requires even width.
+    pub fn fold_half(&mut self) {
+        assert!(self.width % 2 == 0, "fold_half requires even width");
+        let w2 = self.width / 2;
+        let mut out = vec![0.0f32; self.depth * w2 * self.dim];
+        for j in 0..self.depth {
+            for b in 0..self.width {
+                let dst = &mut out[(j * w2 + (b % w2)) * self.dim..][..self.dim];
+                let src = self.row(j, b);
+                for (o, s) in dst.iter_mut().zip(src) {
+                    *o += *s;
+                }
+            }
+        }
+        self.width = w2;
+        self.data = out;
+    }
+
+    /// Squared Frobenius norm (noise-level observability for cleaning).
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_contiguous_rows() {
+        let mut t = SketchTensor::zeros(2, 3, 4);
+        t.row_mut(1, 2).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&t.data()[(1 * 3 + 2) * 4..], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.row(1, 2), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.row(0, 0), &[0.0; 4]);
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let t = SketchTensor::zeros(3, 16, 8);
+        assert_eq!(t.memory_bytes(), 3 * 16 * 8 * 4);
+    }
+
+    #[test]
+    fn scale_and_reset() {
+        let mut t = SketchTensor::zeros(1, 2, 2);
+        t.row_mut(0, 0).copy_from_slice(&[2.0, 4.0]);
+        t.scale(0.5);
+        assert_eq!(t.row(0, 0), &[1.0, 2.0]);
+        t.reset();
+        assert_eq!(t.sq_norm(), 0.0);
+    }
+
+    #[test]
+    fn fold_half_adds_mirror_buckets() {
+        let mut t = SketchTensor::zeros(1, 4, 2);
+        t.row_mut(0, 0).copy_from_slice(&[1.0, 0.0]);
+        t.row_mut(0, 1).copy_from_slice(&[0.0, 1.0]);
+        t.row_mut(0, 2).copy_from_slice(&[10.0, 0.0]);
+        t.row_mut(0, 3).copy_from_slice(&[0.0, 10.0]);
+        t.fold_half();
+        assert_eq!(t.width(), 2);
+        assert_eq!(t.row(0, 0), &[11.0, 0.0]);
+        assert_eq!(t.row(0, 1), &[0.0, 11.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "even width")]
+    fn fold_half_odd_width_panics() {
+        SketchTensor::zeros(1, 3, 1).fold_half();
+    }
+}

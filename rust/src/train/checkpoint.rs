@@ -1,0 +1,165 @@
+//! Checkpointing: a simple self-describing binary container of named f32
+//! blobs + u64 scalars (magic `CSOP`, version 1, little-endian).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"CSOP";
+const VERSION: u32 = 1;
+
+/// In-memory checkpoint contents.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub scalars: BTreeMap<String, u64>,
+    pub blobs: BTreeMap<String, Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    pub fn set_scalar(&mut self, name: &str, v: u64) {
+        self.scalars.insert(name.to_string(), v);
+    }
+
+    pub fn set_blob(&mut self, name: &str, v: &[f32]) {
+        self.blobs.insert(name.to_string(), v.to_vec());
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<u64> {
+        self.scalars.get(name).copied().with_context(|| format!("scalar {name:?} missing"))
+    }
+
+    pub fn blob(&self, name: &str) -> Result<&[f32]> {
+        self.blobs.get(name).map(|v| v.as_slice()).with_context(|| format!("blob {name:?} missing"))
+    }
+
+    /// Serialize to a file (atomic via temp + rename).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            w.write_all(MAGIC)?;
+            w.write_all(&VERSION.to_le_bytes())?;
+            w.write_all(&(self.scalars.len() as u32).to_le_bytes())?;
+            w.write_all(&(self.blobs.len() as u32).to_le_bytes())?;
+            for (k, v) in &self.scalars {
+                write_str(&mut w, k)?;
+                w.write_all(&v.to_le_bytes())?;
+            }
+            for (k, v) in &self.blobs {
+                write_str(&mut w, k)?;
+                w.write_all(&(v.len() as u64).to_le_bytes())?;
+                // bulk-write the f32 data
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+                };
+                w.write_all(bytes)?;
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a csopt checkpoint");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let n_scalars = read_u32(&mut r)? as usize;
+        let n_blobs = read_u32(&mut r)? as usize;
+        let mut ck = Checkpoint::new();
+        for _ in 0..n_scalars {
+            let k = read_str(&mut r)?;
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            ck.scalars.insert(k, u64::from_le_bytes(b));
+        }
+        for _ in 0..n_blobs {
+            let k = read_str(&mut r)?;
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            let len = u64::from_le_bytes(b) as usize;
+            let mut v = vec![0f32; len];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(v.as_mut_ptr() as *mut u8, len * 4)
+            };
+            r.read_exact(bytes)?;
+            ck.blobs.insert(k, v);
+        }
+        Ok(ck)
+    }
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    if len > 1 << 20 {
+        bail!("implausible string length {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ck = Checkpoint::new();
+        ck.set_scalar("step", 1234);
+        ck.set_blob("emb", &[1.0, -2.5, 3.25]);
+        ck.set_blob("sketch.m", &vec![0.5; 100]);
+        let path = std::env::temp_dir().join(format!("csopt_ck_{}.bin", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.scalar("step").unwrap(), 1234);
+        assert_eq!(back.blob("emb").unwrap(), &[1.0, -2.5, 3.25]);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn missing_keys_error() {
+        let ck = Checkpoint::new();
+        assert!(ck.scalar("x").is_err());
+        assert!(ck.blob("y").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = std::env::temp_dir().join(format!("csopt_bad_{}.bin", std::process::id()));
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        let _ = std::fs::remove_file(path);
+    }
+}

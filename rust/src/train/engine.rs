@@ -1,0 +1,243 @@
+//! Compute-engine abstraction for the LM train/eval step.
+//!
+//! * [`RustLmEngine`] — the pure-Rust fwd/bwd ([`crate::model::lm`]).
+//! * [`XlaLmEngine`] — the AOT `<preset>.lm_step` / `<preset>.lm_eval`
+//!   artifacts executed through PJRT (Layer-2 graph with the Layer-1
+//!   Pallas kernels lowered inside).
+//!
+//! Both expose identical semantics; the integration tests hold them to
+//! numerical agreement on the same batch.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::LmPreset;
+use crate::model::{LmGrads, LmModel, LmStepOut};
+use crate::runtime::{Arg, Executable, Runtime};
+use crate::util::rng::Rng;
+
+/// Engine interface: gathered-rows in, loss + row gradients out.
+///
+/// Not `Send`: the XLA engine holds PJRT handles (internally `Rc`).
+pub trait LmEngine {
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        emb_rows: &[f32],
+        sm_rows: &[f32],
+        sm_bias: &[f32],
+        xslot: &[i32],
+        ytgt: &[i32],
+        h0: &[f32],
+        c0: &[f32],
+        grads: &mut LmGrads,
+    ) -> LmStepOut;
+
+    #[allow(clippy::too_many_arguments)]
+    fn eval_step(
+        &mut self,
+        emb_rows: &[f32],
+        sm_rows: &[f32],
+        sm_bias: &[f32],
+        xslot: &[i32],
+        ytgt: &[i32],
+        h0: &[f32],
+        c0: &[f32],
+    ) -> LmStepOut;
+
+    /// Dense trunk parameters, packed `[w_ih, w_hh, b_g, w_p, b_p]`.
+    fn pack_flat(&self, out: &mut Vec<f32>);
+    /// Inverse of [`pack_flat`].
+    fn unpack_flat(&mut self, flat: &[f32]);
+    fn flat_len(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust engine.
+pub struct RustLmEngine {
+    pub model: LmModel,
+    preset: LmPreset,
+}
+
+impl RustLmEngine {
+    pub fn new(preset: LmPreset, rng: &mut Rng) -> RustLmEngine {
+        RustLmEngine { model: LmModel::new(preset.de, preset.hd, rng), preset }
+    }
+}
+
+impl LmEngine for RustLmEngine {
+    fn train_step(
+        &mut self,
+        emb_rows: &[f32],
+        sm_rows: &[f32],
+        sm_bias: &[f32],
+        xslot: &[i32],
+        ytgt: &[i32],
+        h0: &[f32],
+        c0: &[f32],
+        grads: &mut LmGrads,
+    ) -> LmStepOut {
+        let p = &self.preset;
+        self.model.train_step(
+            emb_rows, p.k, sm_rows, sm_bias, p.nc, xslot, ytgt, p.batch, p.bptt, h0, c0, grads,
+        )
+    }
+
+    fn eval_step(
+        &mut self,
+        emb_rows: &[f32],
+        sm_rows: &[f32],
+        sm_bias: &[f32],
+        xslot: &[i32],
+        ytgt: &[i32],
+        h0: &[f32],
+        c0: &[f32],
+    ) -> LmStepOut {
+        let p = &self.preset;
+        self.model
+            .eval_step(emb_rows, sm_rows, sm_bias, p.nc, xslot, ytgt, p.batch, p.bptt, h0, c0)
+    }
+
+    fn pack_flat(&self, out: &mut Vec<f32>) {
+        self.model.pack(out);
+    }
+
+    fn unpack_flat(&mut self, flat: &[f32]) {
+        self.model.unpack(flat);
+    }
+
+    fn flat_len(&self) -> usize {
+        self.model.flat_len()
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// PJRT engine executing the AOT LM graphs.
+pub struct XlaLmEngine {
+    /// Trunk parameters live here (same layout as the Rust engine).
+    pub model: LmModel,
+    preset: LmPreset,
+    step_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+}
+
+impl XlaLmEngine {
+    pub fn new(preset: LmPreset, rt: &Runtime, rng: &mut Rng) -> Result<XlaLmEngine> {
+        crate::config::check_against_manifest(&preset, &rt.manifest)?;
+        Ok(XlaLmEngine {
+            model: LmModel::new(preset.de, preset.hd, rng),
+            preset,
+            step_exe: rt.load(&format!("{}.lm_step", preset.name))?,
+            eval_exe: rt.load(&format!("{}.lm_eval", preset.name))?,
+        })
+    }
+
+    fn args<'a>(
+        &'a self,
+        emb_rows: &'a [f32],
+        sm_rows: &'a [f32],
+        sm_bias: &'a [f32],
+        xslot: &'a [i32],
+        ytgt: &'a [i32],
+        h0: &'a [f32],
+        c0: &'a [f32],
+    ) -> Vec<Arg<'a>> {
+        vec![
+            Arg::F32(emb_rows),
+            Arg::F32(&self.model.lstm.w_ih),
+            Arg::F32(&self.model.lstm.w_hh),
+            Arg::F32(&self.model.lstm.b_g),
+            Arg::F32(&self.model.w_p),
+            Arg::F32(&self.model.b_p),
+            Arg::F32(sm_rows),
+            Arg::F32(sm_bias),
+            Arg::I32(xslot),
+            Arg::I32(ytgt),
+            Arg::F32(h0),
+            Arg::F32(c0),
+        ]
+    }
+}
+
+impl LmEngine for XlaLmEngine {
+    fn train_step(
+        &mut self,
+        emb_rows: &[f32],
+        sm_rows: &[f32],
+        sm_bias: &[f32],
+        xslot: &[i32],
+        ytgt: &[i32],
+        h0: &[f32],
+        c0: &[f32],
+        grads: &mut LmGrads,
+    ) -> LmStepOut {
+        let p = self.preset;
+        let outs = self
+            .step_exe
+            .call(&self.args(emb_rows, sm_rows, sm_bias, xslot, ytgt, h0, c0))
+            .expect("lm_step failed");
+        // outputs: loss, d_emb, d_w_ih, d_w_hh, d_b_g, d_w_p, d_b_p,
+        //          d_sm_rows, d_sm_bias, h_t, c_t
+        let loss = outs[0].get_first_element::<f32>().unwrap() as f64;
+        let read = |i: usize, len: usize, dst: &mut Vec<f32>| {
+            dst.resize(len, 0.0);
+            outs[i].copy_raw_to(dst).unwrap();
+        };
+        read(1, p.k * p.de, &mut grads.d_emb_rows);
+        read(2, p.de * 4 * p.hd, &mut grads.d_w_ih);
+        read(3, p.hd * 4 * p.hd, &mut grads.d_w_hh);
+        read(4, 4 * p.hd, &mut grads.d_b_g);
+        read(5, p.hd * p.de, &mut grads.d_w_p);
+        read(6, p.de, &mut grads.d_b_p);
+        read(7, p.nc * p.de, &mut grads.d_sm_rows);
+        read(8, p.nc, &mut grads.d_sm_bias);
+        let mut h_t = vec![0.0f32; p.batch * p.hd];
+        let mut c_t = vec![0.0f32; p.batch * p.hd];
+        outs[9].copy_raw_to(&mut h_t).unwrap();
+        outs[10].copy_raw_to(&mut c_t).unwrap();
+        LmStepOut { loss, h_t, c_t }
+    }
+
+    fn eval_step(
+        &mut self,
+        emb_rows: &[f32],
+        sm_rows: &[f32],
+        sm_bias: &[f32],
+        xslot: &[i32],
+        ytgt: &[i32],
+        h0: &[f32],
+        c0: &[f32],
+    ) -> LmStepOut {
+        let p = self.preset;
+        let outs = self
+            .eval_exe
+            .call(&self.args(emb_rows, sm_rows, sm_bias, xslot, ytgt, h0, c0))
+            .expect("lm_eval failed");
+        let loss = outs[0].get_first_element::<f32>().unwrap() as f64;
+        let mut h_t = vec![0.0f32; p.batch * p.hd];
+        let mut c_t = vec![0.0f32; p.batch * p.hd];
+        outs[1].copy_raw_to(&mut h_t).unwrap();
+        outs[2].copy_raw_to(&mut c_t).unwrap();
+        LmStepOut { loss, h_t, c_t }
+    }
+
+    fn pack_flat(&self, out: &mut Vec<f32>) {
+        self.model.pack(out);
+    }
+
+    fn unpack_flat(&mut self, flat: &[f32]) {
+        self.model.unpack(flat);
+    }
+
+    fn flat_len(&self) -> usize {
+        self.model.flat_len()
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

@@ -1,0 +1,14 @@
+//! Training orchestration: the LM trainer (both compute engines), softmax
+//! candidate sampling, XLA-backed sketched optimizers, perplexity
+//! evaluation and checkpointing.
+
+pub mod checkpoint;
+pub mod engine;
+pub mod sampler;
+pub mod trainer;
+pub mod xla_opt;
+
+pub use engine::{LmEngine, RustLmEngine, XlaLmEngine};
+pub use sampler::CandidateSampler;
+pub use trainer::{LmTrainer, OptChoice, TrainReport, TrainerOptions};
+pub use xla_opt::XlaRowOptimizer;

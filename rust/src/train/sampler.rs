@@ -1,0 +1,114 @@
+//! Sampled-softmax candidate selection (Jean et al. 2014 style, as used by
+//! the paper for Wikitext-103 / LM1B).
+//!
+//! Each batch's candidate set is: the deduplicated target tokens, padded
+//! to `nc` with uniform negative samples (excluding already-chosen ids).
+//! Targets are remapped to their slot inside the candidate list — exactly
+//! the `ytgt`/`sm_rows` convention of the AOT graphs. With `nc == vocab`
+//! the sampler degenerates to the identity (full softmax).
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+/// Per-batch candidate plan.
+#[derive(Clone, Debug)]
+pub struct Candidates {
+    /// Candidate class ids `[nc]`.
+    pub ids: Vec<u64>,
+    /// Target slot (index into `ids`) per position.
+    pub ytgt: Vec<i32>,
+}
+
+/// Stateful sampler (owns its RNG stream).
+pub struct CandidateSampler {
+    vocab: usize,
+    nc: usize,
+    rng: Rng,
+    full_ids: Vec<u64>,
+}
+
+impl CandidateSampler {
+    pub fn new(vocab: usize, nc: usize, seed: u64) -> CandidateSampler {
+        assert!(nc <= vocab, "nc {nc} > vocab {vocab}");
+        let full_ids = if nc == vocab { (0..vocab as u64).collect() } else { Vec::new() };
+        CandidateSampler { vocab, nc, rng: Rng::new(seed), full_ids }
+    }
+
+    /// Build the candidate set for one batch of targets.
+    pub fn sample(&mut self, targets: &[u32]) -> Candidates {
+        if self.nc == self.vocab {
+            // full softmax: identity mapping
+            return Candidates {
+                ids: self.full_ids.clone(),
+                ytgt: targets.iter().map(|&t| t as i32).collect(),
+            };
+        }
+        let mut slot_of: HashMap<u32, i32> = HashMap::with_capacity(targets.len());
+        let mut ids: Vec<u64> = Vec::with_capacity(self.nc);
+        let mut ytgt = Vec::with_capacity(targets.len());
+        for &t in targets {
+            let next = ids.len() as i32;
+            let s = *slot_of.entry(t).or_insert_with(|| {
+                ids.push(t as u64);
+                next
+            });
+            ytgt.push(s);
+        }
+        assert!(
+            ids.len() <= self.nc,
+            "batch has {} unique targets > nc {}",
+            ids.len(),
+            self.nc
+        );
+        // negatives: uniform over vocab, excluding existing candidates
+        while ids.len() < self.nc {
+            let cand = self.rng.below(self.vocab) as u32;
+            if let std::collections::hash_map::Entry::Vacant(e) = slot_of.entry(cand) {
+                e.insert(ids.len() as i32);
+                ids.push(cand as u64);
+            }
+        }
+        Candidates { ids, ytgt }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_softmax_identity() {
+        let mut s = CandidateSampler::new(10, 10, 1);
+        let c = s.sample(&[3, 7, 3]);
+        assert_eq!(c.ids, (0..10u64).collect::<Vec<_>>());
+        assert_eq!(c.ytgt, vec![3, 7, 3]);
+    }
+
+    #[test]
+    fn sampled_contains_targets_first() {
+        let mut s = CandidateSampler::new(1000, 16, 2);
+        let targets = [5u32, 9, 5, 700];
+        let c = s.sample(&targets);
+        assert_eq!(c.ids.len(), 16);
+        assert_eq!(c.ids[0], 5);
+        assert_eq!(c.ids[1], 9);
+        assert_eq!(c.ids[2], 700);
+        assert_eq!(c.ytgt, vec![0, 1, 0, 2]);
+        // all distinct
+        let set: std::collections::HashSet<_> = c.ids.iter().collect();
+        assert_eq!(set.len(), 16);
+        // target slots point at the right ids
+        for (&t, &slot) in targets.iter().zip(&c.ytgt) {
+            assert_eq!(c.ids[slot as usize], t as u64);
+        }
+    }
+
+    #[test]
+    fn negatives_vary_across_batches() {
+        let mut s = CandidateSampler::new(10_000, 32, 3);
+        let a = s.sample(&[1]);
+        let b = s.sample(&[1]);
+        assert_ne!(a.ids, b.ids);
+    }
+}

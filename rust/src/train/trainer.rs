@@ -1,0 +1,539 @@
+//! The LM trainer: wires data pipeline → engine → optimizers and produces
+//! the loss curves / perplexities / memory ledgers the experiments report.
+
+use anyhow::Result;
+
+use crate::config::{Hyper, LmPreset};
+use crate::data::batcher::BatchPlan;
+use crate::data::prefetch::PrefetchedBatches;
+use crate::metrics::MemoryLedger;
+use crate::model::linalg::clip_global_norm;
+use crate::model::LmGrads;
+use crate::optim::{
+    CmsAdagrad, CmsAdamV, CsAdam, CsMomentum, DenseAdagrad, DenseAdam, DenseMomentum,
+    FlatAdagrad, FlatAdam, FlatMomentum, FlatOptimizer, FlatSgd, LrSchedule, NmfAdagrad,
+    NmfAdamV, NmfMomentum, OptimKind, RowOptimizer, SparseLayer,
+};
+use crate::sketch::CleaningPolicy;
+use crate::train::engine::LmEngine;
+use crate::train::sampler::CandidateSampler;
+use crate::train::xla_opt::{XlaOptKind, XlaRowOptimizer};
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+
+/// How a sparse layer's auxiliary variables are stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptChoice {
+    /// Full-size dense state (paper baseline).
+    Dense,
+    /// Count-sketch tensors stepped in Rust (width from the preset).
+    Sketch,
+    /// "CS-V": dense 1st moment, CMS-compressed 2nd moment (Adam only).
+    SketchV,
+    /// Count-sketch tensors stepped by the AOT Pallas artifact.
+    SketchXla,
+    /// NMF rank-1 factors (LR-NMF comparator).
+    LowRank,
+}
+
+impl OptChoice {
+    pub fn parse(s: &str) -> Option<OptChoice> {
+        Some(match s {
+            "dense" => OptChoice::Dense,
+            "sketch" => OptChoice::Sketch,
+            "sketch-v" => OptChoice::SketchV,
+            "sketch-xla" => OptChoice::SketchXla,
+            "lowrank" | "lr-nmf" => OptChoice::LowRank,
+            _ => return None,
+        })
+    }
+}
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    pub preset: LmPreset,
+    pub optim: OptimKind,
+    /// Embedding-layer aux compression.
+    pub emb_opt: OptChoice,
+    /// Softmax-layer aux compression.
+    pub sm_opt: OptChoice,
+    pub schedule: LrSchedule,
+    /// Global gradient-norm clip (0 = off).
+    pub clip: f32,
+    pub cleaning: CleaningPolicy,
+    pub seed: u64,
+    pub hyper: Hyper,
+}
+
+impl TrainerOptions {
+    pub fn new(preset: LmPreset, optim: OptimKind, lr: f32) -> TrainerOptions {
+        TrainerOptions {
+            preset,
+            optim,
+            emb_opt: OptChoice::Dense,
+            sm_opt: OptChoice::Dense,
+            schedule: LrSchedule::constant(lr),
+            clip: 1.0,
+            cleaning: CleaningPolicy::none(),
+            seed: 42,
+            hyper: Hyper::DEFAULT,
+        }
+    }
+}
+
+/// Per-epoch training report.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub mean_loss: f64,
+    pub train_ppl: f64,
+    pub secs: f64,
+    /// Mean loss at regular intervals (for loss curves).
+    pub curve: Vec<(usize, f64)>,
+}
+
+/// Build a row optimizer for a sparse layer.
+#[allow(clippy::too_many_arguments)]
+pub fn make_row_opt(
+    choice: OptChoice,
+    optim: OptimKind,
+    n: usize,
+    d: usize,
+    v: usize,
+    w: usize,
+    k_slots: usize,
+    hyper: &Hyper,
+    cleaning: CleaningPolicy,
+    seed: u64,
+    rt: Option<&crate::runtime::Runtime>,
+) -> Result<Box<dyn RowOptimizer>> {
+    let h = hyper;
+    Ok(match (choice, optim) {
+        (OptChoice::Dense, OptimKind::Adam) => Box::new(DenseAdam::new(n, d, h.adam_beta1, h.adam_beta2, h.adam_eps)),
+        (OptChoice::Dense, OptimKind::AdamV) => Box::new(DenseAdam::new(n, d, 0.0, h.adam_beta2, h.adam_eps)),
+        (OptChoice::Dense, OptimKind::Momentum) => Box::new(DenseMomentum::new(n, d, h.momentum_gamma)),
+        (OptChoice::Dense, OptimKind::Adagrad) => Box::new(DenseAdagrad::new(n, d, h.adagrad_eps)),
+        (OptChoice::Dense, OptimKind::Sgd) => Box::new(NoState { d }),
+        (OptChoice::Sketch, OptimKind::Adam) => {
+            Box::new(CsAdam::new(v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps).with_cleaning(cleaning))
+        }
+        (OptChoice::Sketch, OptimKind::AdamV) => {
+            Box::new(CmsAdamV::new(v, w, d, seed, h.adam_beta2, h.adam_eps).with_cleaning(cleaning))
+        }
+        (OptChoice::SketchV, OptimKind::Adam | OptimKind::AdamV) => Box::new(
+            crate::optim::HybridAdamV::new(n, v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
+                .with_cleaning(cleaning),
+        ),
+        (OptChoice::Sketch, OptimKind::Momentum) => Box::new(CsMomentum::new(v, w, d, seed, h.momentum_gamma)),
+        (OptChoice::Sketch, OptimKind::Adagrad) => {
+            Box::new(CmsAdagrad::new(v, w, d, seed, h.adagrad_eps).with_cleaning(cleaning))
+        }
+        (OptChoice::SketchXla, kind) => {
+            let rt = rt.ok_or_else(|| anyhow::anyhow!("sketch-xla requires a runtime"))?;
+            let xk = match kind {
+                OptimKind::Adam => XlaOptKind::CsAdam,
+                OptimKind::AdamV => XlaOptKind::CmsAdamV,
+                OptimKind::Momentum => XlaOptKind::CsMomentum,
+                OptimKind::Adagrad => XlaOptKind::CmsAdagrad,
+                OptimKind::Sgd => anyhow::bail!("sgd has no sketched variant"),
+            };
+            Box::new(XlaRowOptimizer::new(rt, xk, k_slots, d, v, w, seed)?)
+        }
+        (OptChoice::LowRank, OptimKind::Adam | OptimKind::AdamV) => {
+            Box::new(NmfAdamV::new(n, d, h.adam_beta1, h.adam_beta2, h.adam_eps))
+        }
+        (OptChoice::LowRank, OptimKind::Momentum) => Box::new(NmfMomentum::new(n, d, h.momentum_gamma)),
+        (OptChoice::LowRank, OptimKind::Adagrad) => Box::new(NmfAdagrad::new(n, d, h.adagrad_eps)),
+        (choice, kind) => anyhow::bail!("unsupported optimizer combination {choice:?}/{kind:?}"),
+    })
+}
+
+/// SGD for sparse rows (no auxiliary state).
+struct NoState {
+    d: usize,
+}
+
+impl RowOptimizer for NoState {
+    fn step_rows(&mut self, _ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        for (p, &g) in rows.iter_mut().zip(grads) {
+            *p -= lr * g;
+        }
+        let _ = self.d;
+    }
+
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+fn make_flat_opt(optim: OptimKind, p: usize, h: &Hyper) -> Box<dyn FlatOptimizer> {
+    match optim {
+        OptimKind::Adam => Box::new(FlatAdam::new(p, h.adam_beta1, h.adam_beta2, h.adam_eps)),
+        OptimKind::AdamV => Box::new(FlatAdam::new(p, 0.0, h.adam_beta2, h.adam_eps)),
+        OptimKind::Momentum => Box::new(FlatMomentum::new(p, h.momentum_gamma)),
+        OptimKind::Adagrad => Box::new(FlatAdagrad::new(p, h.adagrad_eps)),
+        OptimKind::Sgd => Box::new(FlatSgd),
+    }
+}
+
+/// The trainer.
+pub struct LmTrainer {
+    pub opts: TrainerOptions,
+    pub engine: Box<dyn LmEngine>,
+    pub emb: SparseLayer,
+    pub sm: SparseLayer,
+    /// Softmax bias as an `[n, 1]` sparse layer (dense Adam state).
+    pub sm_bias: SparseLayer,
+    flat_opt: Box<dyn FlatOptimizer>,
+    sampler: CandidateSampler,
+    pub step: usize,
+    /// Dedup plan of the most recent batch (diagnostics: Fig. 1/2/4).
+    pub last_plan: Option<BatchPlan>,
+    h: Vec<f32>,
+    c: Vec<f32>,
+    // scratch
+    grads: LmGrads,
+    emb_rows: Vec<f32>,
+    sm_rows: Vec<f32>,
+    sm_bias_rows: Vec<f32>,
+    emb_grad_rows: Vec<f32>,
+    flat_params: Vec<f32>,
+    flat_grads: Vec<f32>,
+}
+
+impl LmTrainer {
+    /// Build a trainer. `rt` is required for `--engine xla` /
+    /// `sketch-xla` optimizers.
+    pub fn new(
+        opts: TrainerOptions,
+        engine: Box<dyn LmEngine>,
+        rt: Option<&crate::runtime::Runtime>,
+    ) -> Result<LmTrainer> {
+        let p = opts.preset;
+        let mut rng = Rng::new(opts.seed);
+        let emb_opt = make_row_opt(
+            opts.emb_opt, opts.optim, p.vocab, p.de, p.v, p.w_emb, p.k, &opts.hyper,
+            opts.cleaning, opts.hyper.hash_seed, rt,
+        )?;
+        let sm_opt = make_row_opt(
+            opts.sm_opt, opts.optim, p.vocab, p.de, p.v, p.w_sm, p.nc, &opts.hyper,
+            opts.cleaning, opts.hyper.hash_seed ^ 0xBEEF, rt,
+        )?;
+        let emb = SparseLayer::new(p.vocab, p.de, 0.1, emb_opt, &mut rng);
+        let sm = SparseLayer::new(p.vocab, p.de, 0.1, sm_opt, &mut rng);
+        let bias_opt = make_row_opt(
+            OptChoice::Dense, opts.optim, p.vocab, 1, p.v, p.w_sm, p.nc, &opts.hyper,
+            CleaningPolicy::none(), 0, None,
+        )?;
+        let mut sm_bias = SparseLayer::new(p.vocab, 1, 0.0, bias_opt, &mut rng);
+        sm_bias.params.iter_mut().for_each(|x| *x = 0.0);
+        let flat_opt = make_flat_opt(opts.optim, engine.flat_len(), &opts.hyper);
+        let sampler = CandidateSampler::new(p.vocab, p.nc, opts.seed ^ 0xCAFE);
+        Ok(LmTrainer {
+            opts,
+            engine,
+            emb,
+            sm,
+            sm_bias,
+            flat_opt,
+            sampler,
+            step: 0,
+            last_plan: None,
+            h: vec![0.0; p.batch * p.hd],
+            c: vec![0.0; p.batch * p.hd],
+            grads: LmGrads::default(),
+            emb_rows: Vec::new(),
+            sm_rows: Vec::new(),
+            sm_bias_rows: Vec::new(),
+            emb_grad_rows: Vec::new(),
+            flat_params: Vec::new(),
+            flat_grads: Vec::new(),
+        })
+    }
+
+    /// Reset recurrent state (epoch boundaries).
+    pub fn reset_state(&mut self) {
+        self.h.iter_mut().for_each(|x| *x = 0.0);
+        self.c.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// One training step on a `[b, T]` window. Returns the batch loss.
+    pub fn train_step(&mut self, x: &[u32], y: &[u32]) -> f64 {
+        let p = self.opts.preset;
+        self.step += 1;
+        let t = self.step;
+        let lr = self.opts.schedule.at(t);
+
+        // --- plan: dedupe input tokens → slots; candidates for softmax
+        let plan = BatchPlan::build(x, p.k, 0);
+        let cands = self.sampler.sample(y);
+        // xslot laid out [b, T] (positions already row-major in x)
+        let xslot: Vec<i32> = plan.slots.clone();
+
+        // --- gather rows
+        self.emb.gather(&plan.uniq, &mut self.emb_rows);
+        self.sm.gather(&cands.ids, &mut self.sm_rows);
+        self.sm_bias.gather(&cands.ids, &mut self.sm_bias_rows);
+
+        // --- engine step
+        let h0 = std::mem::take(&mut self.h);
+        let c0 = std::mem::take(&mut self.c);
+        let out = self.engine.train_step(
+            &self.emb_rows, &self.sm_rows, &self.sm_bias_rows, &xslot, &cands.ytgt,
+            &h0, &c0, &mut self.grads,
+        );
+        self.h = out.h_t;
+        self.c = out.c_t;
+
+        // --- gradient clipping (global norm, as in the paper's setups)
+        if self.opts.clip > 0.0 {
+            let g = &mut self.grads;
+            clip_global_norm(
+                &mut [
+                    &mut g.d_emb_rows,
+                    &mut g.d_w_ih,
+                    &mut g.d_w_hh,
+                    &mut g.d_b_g,
+                    &mut g.d_w_p,
+                    &mut g.d_b_p,
+                    &mut g.d_sm_rows,
+                    &mut g.d_sm_bias,
+                ],
+                self.opts.clip,
+            );
+        }
+
+        // --- sparse layer updates (live rows only)
+        let live = plan.live;
+        self.emb_grad_rows.clear();
+        self.emb_grad_rows
+            .extend_from_slice(&self.grads.d_emb_rows[..live * p.de]);
+        self.emb
+            .step(&plan.uniq[..live], &self.emb_grad_rows, lr, t);
+        self.sm.step(&cands.ids, &self.grads.d_sm_rows, lr, t);
+        self.sm_bias.step(&cands.ids, &self.grads.d_sm_bias, lr, t);
+
+        // --- dense trunk update
+        self.engine.pack_flat(&mut self.flat_params);
+        crate::model::LmModel::pack_grads(&self.grads, &mut self.flat_grads);
+        self.flat_opt
+            .step(&mut self.flat_params, &self.flat_grads, lr, t);
+        let flat = std::mem::take(&mut self.flat_params);
+        self.engine.unpack_flat(&flat);
+        self.flat_params = flat;
+        self.last_plan = Some(plan);
+
+        out.loss
+    }
+
+    /// Gradients of the most recent step (diagnostics).
+    pub fn last_grads(&self) -> &LmGrads {
+        &self.grads
+    }
+
+    /// Train one epoch over `stream` (at most `max_steps` windows, 0 = all),
+    /// with prefetching. Returns the report.
+    pub fn train_epoch(&mut self, stream: &[u32], max_steps: usize) -> TrainReport {
+        let p = self.opts.preset;
+        self.reset_state();
+        let pre = PrefetchedBatches::start(stream.to_vec(), p.batch, p.bptt, 4);
+        let timer = Timer::start();
+        let mut losses = 0.0f64;
+        let mut steps = 0usize;
+        let mut curve = Vec::new();
+        let curve_every = 25usize;
+        let mut window_acc = 0.0f64;
+        let mut window_n = 0usize;
+        while let Some(batch) = pre.next() {
+            let loss = self.train_step(&batch.x, &batch.y);
+            losses += loss;
+            steps += 1;
+            window_acc += loss;
+            window_n += 1;
+            if window_n == curve_every {
+                curve.push((self.step, window_acc / window_n as f64));
+                window_acc = 0.0;
+                window_n = 0;
+            }
+            if max_steps > 0 && steps >= max_steps {
+                break;
+            }
+        }
+        if window_n > 0 {
+            curve.push((self.step, window_acc / window_n as f64));
+        }
+        let mean_loss = losses / steps.max(1) as f64;
+        TrainReport {
+            steps,
+            mean_loss,
+            train_ppl: mean_loss.exp(),
+            secs: timer.secs(),
+            curve,
+        }
+    }
+
+    /// Evaluate perplexity over a held-out stream (at most `max_steps`
+    /// windows, 0 = all). Uses a *fresh, fixed-seed* candidate sampler so
+    /// evaluations are deterministic and comparable across trainers.
+    pub fn eval_ppl(&mut self, stream: &[u32], max_steps: usize) -> f64 {
+        let p = self.opts.preset;
+        let mut eval_sampler = CandidateSampler::new(p.vocab, p.nc, 0xE7A1);
+        let mut batcher = crate::data::batcher::BpttBatcher::new(stream, p.batch, p.bptt);
+        let mut h = vec![0.0f32; p.batch * p.hd];
+        let mut c = vec![0.0f32; p.batch * p.hd];
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        while let Some(batch) = batcher.next_batch() {
+            let plan = BatchPlan::build(&batch.x, p.k, 0);
+            let cands = eval_sampler.sample(&batch.y);
+            self.emb.gather(&plan.uniq, &mut self.emb_rows);
+            self.sm.gather(&cands.ids, &mut self.sm_rows);
+            self.sm_bias.gather(&cands.ids, &mut self.sm_bias_rows);
+            let out = self.engine.eval_step(
+                &self.emb_rows, &self.sm_rows, &self.sm_bias_rows, &plan.slots, &cands.ytgt,
+                &h, &c,
+            );
+            h = out.h_t;
+            c = out.c_t;
+            total += out.loss;
+            n += 1;
+            if max_steps > 0 && n >= max_steps {
+                break;
+            }
+        }
+        (total / n.max(1) as f64).exp()
+    }
+
+    /// Report a validation metric to plateau schedules.
+    pub fn report_metric(&mut self, metric: f64) -> bool {
+        self.opts.schedule.report_metric(metric)
+    }
+
+    /// Paper-style memory ledger for this configuration.
+    pub fn memory_ledger(&self) -> MemoryLedger {
+        let p = self.opts.preset;
+        let mut l = MemoryLedger::new();
+        l.add("embedding.params", "params", p.vocab * p.de * 4);
+        l.add("softmax.params", "params", p.vocab * p.de * 4 + p.vocab * 4);
+        l.add("trunk.params", "params", self.engine.flat_len() * 4);
+        l.add(
+            &format!("embedding.opt ({})", self.emb.opt.name()),
+            "optimizer",
+            self.emb.opt.memory_bytes(),
+        );
+        l.add(
+            &format!("softmax.opt ({})", self.sm.opt.name()),
+            "optimizer",
+            self.sm.opt.memory_bytes(),
+        );
+        l.add("softmax_bias.opt", "optimizer", self.sm_bias.opt.memory_bytes());
+        l.add(
+            &format!("trunk.opt ({})", self.flat_opt.name()),
+            "optimizer",
+            self.flat_opt.memory_bytes(),
+        );
+        l
+    }
+
+    /// ℓ2 approximation error of the optimizer's aux estimate vs a dense
+    /// reference (Fig. 4 diagnostic): caller provides the dense truth rows.
+    pub fn aux_error(&self, which: usize, ids: &[u64], truth: &[f32]) -> Option<f64> {
+        let d = self.opts.preset.de;
+        let mut est = vec![0.0f32; ids.len() * d];
+        if !self.emb.opt.estimate_rows(which, ids, &mut est) {
+            return None;
+        }
+        Some(
+            est.iter()
+                .zip(truth)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::lm_preset;
+    use crate::data::corpus::SyntheticCorpus;
+    use crate::train::engine::RustLmEngine;
+
+    fn tiny_trainer(emb_opt: OptChoice, optim: OptimKind) -> LmTrainer {
+        let preset = lm_preset("tiny").unwrap();
+        let mut opts = TrainerOptions::new(preset, optim, 0.01);
+        opts.emb_opt = emb_opt;
+        opts.sm_opt = emb_opt;
+        let mut rng = Rng::new(7);
+        let engine = Box::new(RustLmEngine::new(preset, &mut rng));
+        LmTrainer::new(opts, engine, None).unwrap()
+    }
+
+    #[test]
+    fn dense_adam_learns_tiny_corpus() {
+        let corpus = SyntheticCorpus::generate(512, 20_000, 1.05, 0.6, 1);
+        let (train, valid, _) = corpus.split(0.1, 0.05);
+        let mut tr = tiny_trainer(OptChoice::Dense, OptimKind::Adam);
+        let r1 = tr.train_epoch(train, 60);
+        let r2 = tr.train_epoch(train, 60);
+        assert!(r2.mean_loss < r1.mean_loss, "{} -> {}", r1.mean_loss, r2.mean_loss);
+        let ppl = tr.eval_ppl(valid, 10);
+        assert!(ppl < 512.0, "ppl={ppl}");
+        assert!(!r1.curve.is_empty());
+    }
+
+    #[test]
+    fn sketch_adam_learns_comparably() {
+        let corpus = SyntheticCorpus::generate(512, 20_000, 1.05, 0.6, 1);
+        let (train, _, _) = corpus.split(0.1, 0.05);
+        let mut dense = tiny_trainer(OptChoice::Dense, OptimKind::Adam);
+        let mut sketch = tiny_trainer(OptChoice::Sketch, OptimKind::Adam);
+        let rd = dense.train_epoch(train, 80);
+        let rs = sketch.train_epoch(train, 80);
+        // within 15% mean loss of the dense baseline after one pass
+        assert!(
+            rs.mean_loss < rd.mean_loss * 1.15,
+            "sketch {} vs dense {}",
+            rs.mean_loss,
+            rd.mean_loss
+        );
+        // and uses strictly less optimizer memory on the embedding layer
+        assert!(sketch.emb.opt.memory_bytes() < dense.emb.opt.memory_bytes());
+    }
+
+    #[test]
+    fn momentum_and_adagrad_paths_run() {
+        let corpus = SyntheticCorpus::generate(512, 8_000, 1.05, 0.5, 2);
+        let (train, _, _) = corpus.split(0.1, 0.05);
+        for optim in [OptimKind::Momentum, OptimKind::Adagrad, OptimKind::AdamV] {
+            let mut tr = tiny_trainer(OptChoice::Sketch, optim);
+            let r = tr.train_epoch(train, 20);
+            assert!(r.mean_loss.is_finite(), "{optim:?}");
+        }
+    }
+
+    #[test]
+    fn lowrank_path_runs() {
+        let corpus = SyntheticCorpus::generate(512, 8_000, 1.05, 0.5, 3);
+        let (train, _, _) = corpus.split(0.1, 0.05);
+        let mut tr = tiny_trainer(OptChoice::LowRank, OptimKind::Adagrad);
+        let r = tr.train_epoch(train, 20);
+        assert!(r.mean_loss.is_finite());
+    }
+
+    #[test]
+    fn memory_ledger_shows_sketch_savings() {
+        let dense = tiny_trainer(OptChoice::Dense, OptimKind::Adam);
+        let sketch = tiny_trainer(OptChoice::Sketch, OptimKind::Adam);
+        let md = dense.memory_ledger();
+        let ms = sketch.memory_ledger();
+        assert!(ms.total("optimizer") < md.total("optimizer"));
+        assert_eq!(ms.total("params"), md.total("params"));
+    }
+}

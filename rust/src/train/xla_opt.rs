@@ -1,0 +1,215 @@
+//! [`RowOptimizer`] implementations backed by the AOT-compiled Pallas
+//! optimizer graphs (`opt.cs_adam.*` etc.).
+//!
+//! The coordinator owns the sketch tensors as flat buffers; each step it
+//! hashes the batch ids host-side (`SketchHasher` — bit-identical to the
+//! Python family), pads to the artifact's fixed `k` slots, executes the
+//! graph and writes the returned sketch state back. This is the "Python
+//! never on the training path" configuration: the sketch math that runs
+//! is the Pallas kernel lowered inside the artifact.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::optim::RowOptimizer;
+use crate::runtime::{Arg, Executable, Runtime};
+use crate::sketch::SketchHasher;
+
+/// Which sketched algorithm an [`XlaRowOptimizer`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XlaOptKind {
+    CsAdam,
+    CmsAdamV,
+    CsMomentum,
+    CmsAdagrad,
+}
+
+impl XlaOptKind {
+    fn artifact(&self, k: usize, d: usize, v: usize, w: usize) -> String {
+        let algo = match self {
+            XlaOptKind::CsAdam => "cs_adam",
+            XlaOptKind::CmsAdamV => "cms_adam_v",
+            XlaOptKind::CsMomentum => "cs_momentum",
+            XlaOptKind::CmsAdagrad => "cms_adagrad",
+        };
+        format!("opt.{algo}.k{k}.d{d}.v{v}.w{w}")
+    }
+
+    fn n_sketches(&self) -> usize {
+        match self {
+            XlaOptKind::CsAdam => 2,
+            _ => 1,
+        }
+    }
+
+    fn takes_t(&self) -> bool {
+        matches!(self, XlaOptKind::CsAdam | XlaOptKind::CmsAdamV)
+    }
+
+    fn takes_sign(&self) -> bool {
+        matches!(self, XlaOptKind::CsAdam | XlaOptKind::CsMomentum)
+    }
+
+    fn display(&self) -> &'static str {
+        match self {
+            XlaOptKind::CsAdam => "xla-cs-adam",
+            XlaOptKind::CmsAdamV => "xla-cms-adam-v",
+            XlaOptKind::CsMomentum => "xla-cs-momentum",
+            XlaOptKind::CmsAdagrad => "xla-cms-adagrad",
+        }
+    }
+}
+
+/// Sketched row optimizer whose step runs in an AOT artifact.
+pub struct XlaRowOptimizer {
+    kind: XlaOptKind,
+    exe: Arc<Executable>,
+    hasher: SketchHasher,
+    /// `[v, w, d]` flat sketch buffers (1 or 2 depending on `kind`).
+    sketches: Vec<Vec<f32>>,
+    k: usize,
+    d: usize,
+    // step scratch
+    idx: Vec<i32>,
+    sign: Vec<f32>,
+    rows_pad: Vec<f32>,
+    grads_pad: Vec<f32>,
+    mask: Vec<f32>,
+    ids_pad: Vec<u64>,
+}
+
+impl XlaRowOptimizer {
+    /// Create for the artifact matching `(k, d, v, w)`; `seed` must equal
+    /// the manifest's `hash_seed`.
+    pub fn new(
+        rt: &Runtime,
+        kind: XlaOptKind,
+        k: usize,
+        d: usize,
+        v: usize,
+        w: usize,
+        seed: u64,
+    ) -> Result<XlaRowOptimizer> {
+        let exe = rt.load(&kind.artifact(k, d, v, w))?;
+        let n_sk = kind.n_sketches();
+        Ok(XlaRowOptimizer {
+            kind,
+            exe,
+            hasher: SketchHasher::new(v, w, seed),
+            sketches: (0..n_sk).map(|_| vec![0.0f32; v * w * d]).collect(),
+            k,
+            d,
+            idx: Vec::new(),
+            sign: Vec::new(),
+            rows_pad: Vec::new(),
+            grads_pad: Vec::new(),
+            mask: Vec::new(),
+            ids_pad: Vec::new(),
+        })
+    }
+
+    /// The flat sketch buffers (checkpointing / diagnostics).
+    pub fn sketch_data(&self, i: usize) -> &[f32] {
+        &self.sketches[i]
+    }
+}
+
+impl RowOptimizer for XlaRowOptimizer {
+    fn step_rows(&mut self, ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t: usize) {
+        let (k, d) = (self.k, self.d);
+        let live = ids.len();
+        assert!(live <= k, "batch {live} rows > artifact k {k}");
+        assert_eq!(rows.len(), live * d);
+        assert_eq!(grads.len(), live * d);
+
+        // pad ids (arbitrary id for padding — masked out), rows, grads
+        self.ids_pad.clear();
+        self.ids_pad.extend_from_slice(ids);
+        self.ids_pad.resize(k, 0);
+        self.rows_pad.clear();
+        self.rows_pad.extend_from_slice(rows);
+        self.rows_pad.resize(k * d, 0.0);
+        self.grads_pad.clear();
+        self.grads_pad.extend_from_slice(grads);
+        self.grads_pad.resize(k * d, 0.0);
+        self.mask.clear();
+        self.mask.resize(live, 1.0);
+        self.mask.resize(k, 0.0);
+
+        let (idx, sign) = self.hasher.buckets_and_signs(&self.ids_pad);
+        self.idx = idx;
+        self.sign = sign;
+
+        // assemble args in the artifact's manifest order
+        let mut args: Vec<Arg> = Vec::with_capacity(9);
+        args.push(Arg::F32(&self.rows_pad));
+        for sk in &self.sketches {
+            args.push(Arg::F32(sk));
+        }
+        args.push(Arg::I32(&self.idx));
+        if self.kind.takes_sign() {
+            args.push(Arg::F32(&self.sign));
+        }
+        args.push(Arg::F32(&self.grads_pad));
+        args.push(Arg::F32(&self.mask));
+        args.push(Arg::ScalarF32(lr));
+        if self.kind.takes_t() {
+            args.push(Arg::ScalarF32(t as f32));
+        }
+
+        let outs = self.exe.call(&args).expect("xla optimizer step failed");
+        // outputs: rows', sketch'(s)
+        outs[0]
+            .copy_raw_to(&mut self.rows_pad)
+            .expect("copy rows");
+        rows.copy_from_slice(&self.rows_pad[..live * d]);
+        for (i, sk) in self.sketches.iter_mut().enumerate() {
+            outs[1 + i].copy_raw_to(sk).expect("copy sketch");
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.sketches.iter().map(|s| s.len() * 4).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        self.kind.display()
+    }
+
+    fn estimate_rows(&self, which: usize, ids: &[u64], out: &mut [f32]) -> bool {
+        // host-side query against the flat sketch state
+        let d = self.d;
+        let v = self.hasher.depth();
+        let w = self.hasher.width();
+        let sk_idx = match (self.kind, which) {
+            (XlaOptKind::CsAdam, 0) => 0,
+            (XlaOptKind::CsAdam, 1) => 1,
+            (XlaOptKind::CsMomentum, 0) => 0,
+            (XlaOptKind::CmsAdagrad, 1) | (XlaOptKind::CmsAdamV, 1) => 0,
+            _ => return false,
+        };
+        let data = &self.sketches[sk_idx];
+        let signed = matches!(
+            (self.kind, which),
+            (XlaOptKind::CsAdam, 0) | (XlaOptKind::CsMomentum, 0)
+        );
+        let mut vals = vec![0.0f32; v];
+        for (ti, &id) in ids.iter().enumerate() {
+            for col in 0..d {
+                for j in 0..v {
+                    let (b, s) = self.hasher.bucket_sign(j, id);
+                    let cell = data[(j * w + b) * d + col];
+                    vals[j] = if signed { s * cell } else { cell };
+                }
+                out[ti * d + col] = if signed {
+                    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    if v % 2 == 1 { vals[v / 2] } else { 0.5 * (vals[v / 2 - 1] + vals[v / 2]) }
+                } else {
+                    vals.iter().cloned().fold(f32::INFINITY, f32::min)
+                };
+            }
+        }
+        true
+    }
+}

@@ -1,0 +1,177 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//!
+//! ```ignore
+//! let mut b = Bench::from_env("bench_sketch");
+//! b.bench("cs_update/k1024", || { ...; black_box(out) });
+//! b.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then timed over adaptively-chosen batch
+//! sizes until the target measurement time is reached; mean / stddev /
+//! min / p50 of per-iteration wall time are reported and appended to
+//! `results/bench.csv` for the EXPERIMENTS.md §Perf ledger.
+
+use std::hint::black_box as std_black_box;
+use std::io::Write;
+use std::time::Instant;
+
+use super::timer::Stats;
+
+/// Re-export of `std::hint::black_box` so benches do not depend on nightly.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+/// Benchmark group.
+pub struct Bench {
+    group: String,
+    warmup_secs: f64,
+    measure_secs: f64,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+    csv_path: Option<String>,
+}
+
+impl Bench {
+    /// Create a group; honours `CSOPT_BENCH_FILTER` (substring match),
+    /// `CSOPT_BENCH_FAST=1` (short timings for CI) and writes CSV rows to
+    /// `results/bench.csv` unless `CSOPT_BENCH_NO_CSV=1`.
+    pub fn from_env(group: &str) -> Bench {
+        let fast = std::env::var("CSOPT_BENCH_FAST").ok().as_deref() == Some("1");
+        let (warmup_secs, measure_secs) = if fast { (0.05, 0.2) } else { (0.3, 1.0) };
+        let csv_path = if std::env::var("CSOPT_BENCH_NO_CSV").ok().as_deref() == Some("1") {
+            None
+        } else {
+            Some("results/bench.csv".to_string())
+        };
+        Bench {
+            group: group.to_string(),
+            warmup_secs,
+            measure_secs,
+            results: Vec::new(),
+            filter: std::env::var("CSOPT_BENCH_FILTER").ok(),
+            csv_path,
+        }
+    }
+
+    /// Time `f` (which should end in `black_box`).
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        let full = format!("{}/{}", self.group, name);
+        if let Some(filter) = &self.filter {
+            if !full.contains(filter.as_str()) {
+                return;
+            }
+        }
+        // Warmup + calibration: find iters per batch ≈ 5ms.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed().as_secs_f64() < self.warmup_secs {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup_secs / calib_iters.max(1) as f64;
+        let batch = ((5e-3 / per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut stats = Stats::new();
+        let mut total_iters = 0u64;
+        let t1 = Instant::now();
+        while t1.elapsed().as_secs_f64() < self.measure_secs {
+            let tb = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = tb.elapsed().as_nanos() as f64 / batch as f64;
+            stats.add(ns);
+            total_iters += batch;
+        }
+        let r = BenchResult {
+            name: full.clone(),
+            iters: total_iters,
+            mean_ns: stats.mean(),
+            std_ns: stats.std(),
+            min_ns: stats.min,
+        };
+        println!(
+            "{:<56} {:>12}  ±{:>10}  (min {:>12}, {} iters)",
+            r.name,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.std_ns),
+            fmt_ns(r.min_ns),
+            r.iters
+        );
+        self.results.push(r);
+    }
+
+    /// Print summary and append CSV rows.
+    pub fn finish(self) {
+        if let Some(path) = &self.csv_path {
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            let fresh = !std::path::Path::new(path).exists();
+            if let Ok(mut fh) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+                if fresh {
+                    let _ = writeln!(fh, "name,mean_ns,std_ns,min_ns,iters");
+                }
+                for r in &self.results {
+                    let _ = writeln!(
+                        fh,
+                        "{},{:.1},{:.1},{:.1},{}",
+                        r.name, r.mean_ns, r.std_ns, r.min_ns, r.iters
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("CSOPT_BENCH_FAST", "1");
+        std::env::set_var("CSOPT_BENCH_NO_CSV", "1");
+        let mut b = Bench::from_env("selftest");
+        let mut acc = 0u64;
+        b.bench("add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(10.0).contains("ns"));
+        assert!(fmt_ns(1e4).contains("µs"));
+        assert!(fmt_ns(1e7).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

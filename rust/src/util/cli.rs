@@ -1,0 +1,106 @@
+//! Tiny argv parser: `--flag`, `--key value`, `--key=value` and positional
+//! arguments. Replaces clap in this offline environment.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an argv slice (without the program name).
+    /// `bool_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} needs a value"))?;
+                    out.options.insert(body.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Option value as string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option parse with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow!("bad value for --{key}: {e}")),
+        }
+    }
+
+    /// Is a boolean flag set?
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(argv("exp t3 --steps 100 --engine=rust --verbose"), &["verbose"])
+            .unwrap();
+        assert_eq!(a.positional, vec!["exp", "t3"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("engine"), Some("rust"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_parse("steps", 0usize).unwrap(), 100);
+        assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv("--steps"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = Args::parse(argv("--steps abc"), &[]).unwrap();
+        assert!(a.get_parse("steps", 0usize).is_err());
+    }
+}

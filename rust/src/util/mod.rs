@@ -1,0 +1,15 @@
+//! From-scratch substrates: RNG, JSON, CLI parsing, thread pool, timers and
+//! a lightweight property-testing helper.
+//!
+//! This build environment has no crates.io network access beyond the
+//! vendored `xla` + `anyhow` closure, so everything a production launcher
+//! would normally pull in (rand, serde_json, clap, rayon, proptest,
+//! criterion) is implemented here at the scale this project needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,69 @@
+//! Minimal property-testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` randomized inputs drawn from a
+//! generator; on failure it reports the seed of the failing case so it can
+//! be replayed deterministically. No shrinking — generators are kept small
+//! and structured instead.
+
+use super::rng::Rng;
+
+/// Run `prop(rng)` for `cases` independent seeds; panic with the failing
+/// seed if the property returns an `Err` or panics are surfaced by the
+/// caller via `Result`.
+pub fn check<F>(name: &str, cases: usize, base_seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = super::rng::splitmix64(base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (case {case}, replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivially() {
+        check("sum-commutes", 32, 1, |rng| {
+            let a = rng.f32();
+            let b = rng.f32();
+            if (a + b - (b + a)).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn check_reports_failure() {
+        check("always-fails", 4, 2, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

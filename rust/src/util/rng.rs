@@ -1,0 +1,291 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! [`SplitMix64`] doubles as the *hash primitive* of the count-sketch
+//! tensor ([`crate::sketch::hash`]) and must stay bit-identical to
+//! `python/compile/kernels/hashing.py` — the golden-vector tests on both
+//! sides pin it.  [`Rng`] (xoshiro256**-style) provides the general-purpose
+//! streams for data generation, initialization and shuffling.
+
+/// SplitMix64 finalizer (Steele et al. 2014). Bit-identical to the Python
+/// implementation in `hashing.py`.
+#[inline(always)]
+pub fn splitmix64(z: u64) -> u64 {
+    let mut z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** PRNG seeded via SplitMix64.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal deviate from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut s = [0u64; 4];
+        let mut z = seed;
+        for slot in &mut s {
+            z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            *slot = splitmix64(z);
+        }
+        Rng { s, spare_normal: None }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)`. `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free enough for our n ≪ 2^64 use.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal deviate (Box–Muller, cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u = self.f64();
+            if u <= f64::EPSILON {
+                continue;
+            }
+            let v = self.f64();
+            let r = (-2.0 * u.ln()).sqrt();
+            let theta = std::f64::consts::TAU * v;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Normal deviate with given mean / std, as `f32`.
+    #[inline]
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Fill a slice with N(0, std²) values.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for x in out.iter_mut() {
+            *x = self.normal_f32(0.0, std);
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k ≪ n: rejection;
+    /// otherwise partial shuffle).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 8 < n {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let x = self.below(n);
+                if seen.insert(x) {
+                    out.push(x);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = self.range(i, n);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        }
+    }
+
+    /// Derive an independent child generator (for per-shard streams).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+/// Zipf-distributed sampler over `{0, 1, …, n−1}` with exponent `s`
+/// (rank-1 item is the most frequent). Inversion on a precomputed CDF —
+/// O(n) setup, O(log n) per sample. Used to synthesize the power-law
+/// token/class streams that stand in for the paper's corpora (DESIGN.md §4).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build a sampler over `n` items with exponent `s` (s ≈ 1.05 matches
+    /// natural-language token frequencies).
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for rank in 1..=n {
+            acc += 1.0 / (rank as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Number of items.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// True if the support is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.cdf.is_empty()
+    }
+
+    /// Draw one item (0 = most frequent).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Probability mass of item `i`.
+    pub fn pmf(&self, i: usize) -> f64 {
+        if i == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[i] - self.cdf[i - 1]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_golden_vectors_match_python() {
+        // Pinned in python/tests/test_hashing.py as well.
+        assert_eq!(splitmix64(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64(1), 0x910A_2DEC_8902_5CC1);
+        assert_eq!(splitmix64(2), 0x9758_35DE_1C97_56CE);
+    }
+
+    #[test]
+    fn rng_deterministic_and_distinct_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let mut c = Rng::new(43);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut rng = Rng::new(7);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(9);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut rng = Rng::new(1);
+        for (n, k) in [(100, 5), (10, 9), (1000, 500)] {
+            let s = rng.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&x| x < n));
+        }
+    }
+
+    #[test]
+    fn zipf_is_power_law() {
+        let z = Zipf::new(1000, 1.05);
+        let mut rng = Rng::new(3);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // head dominates: item 0 much more frequent than item 100
+        assert!(counts[0] > 20 * counts[100].max(1));
+        // cdf sanity
+        assert!((z.pmf(0) / z.pmf(1) - 2.0f64.powf(1.05)).abs() < 0.01);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

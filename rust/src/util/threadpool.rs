@@ -1,0 +1,267 @@
+//! Fixed-size thread pool with a bounded work queue (backpressure), plus a
+//! `scope`-style parallel-for. Replaces rayon/tokio for the data-pipeline
+//! prefetcher and the parallel experiment sweeps.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Bounded MPMC channel built on Mutex + Condvar (std's mpsc is MPSC only).
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct QueueInner<T> {
+    items: std::collections::VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Arc<Self> {
+        Arc::new(BoundedQueue {
+            inner: Mutex::new(QueueInner { items: Default::default(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        })
+    }
+
+    /// Blocking push; returns false if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.items.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.items.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; returns None when closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close: wakes all producers/consumers; pending items still drain.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    /// Current queue depth (for metrics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Fixed worker pool.
+pub struct ThreadPool {
+    queue: Arc<BoundedQueue<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers with a work queue bounded at `queue_cap`.
+    pub fn new(n: usize, queue_cap: usize) -> ThreadPool {
+        let queue: Arc<BoundedQueue<Job>> = BoundedQueue::new(queue_cap);
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let workers = (0..n.max(1))
+            .map(|_| {
+                let q = Arc::clone(&queue);
+                let p = Arc::clone(&pending);
+                thread::spawn(move || {
+                    while let Some(job) = q.pop() {
+                        job();
+                        let (lock, cv) = &*p;
+                        let mut c = lock.lock().unwrap();
+                        *c -= 1;
+                        if *c == 0 {
+                            cv.notify_all();
+                        }
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { queue, workers, pending }
+    }
+
+    /// Submit a job (blocks when the queue is full — backpressure).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        if !self.queue.push(Box::new(f)) {
+            panic!("submit on closed pool");
+        }
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut c = lock.lock().unwrap();
+        while *c > 0 {
+            c = cv.wait(c).unwrap();
+        }
+    }
+
+    /// Default worker count: physical parallelism minus one, at least 1.
+    pub fn default_workers() -> usize {
+        thread::available_parallelism().map(|n| n.get().saturating_sub(1)).unwrap_or(4).max(1)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for every `i ∈ [0, n)` across `workers` threads; results are
+/// returned in index order. Panics in `f` propagate.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, workers: usize, f: F) -> Vec<T> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+    thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|o| o.expect("worker panicked")).collect()
+}
+
+/// Simple producer→consumer pipeline handle (used by data prefetch).
+pub struct Pipeline<T> {
+    queue: Arc<BoundedQueue<T>>,
+    producer: Option<thread::JoinHandle<()>>,
+}
+
+impl<T: Send + 'static> Pipeline<T> {
+    /// Spawn `produce` on a background thread, pushing into a bounded queue
+    /// of `depth` (the producer blocks when the consumer lags).
+    pub fn spawn<F>(depth: usize, produce: F) -> Pipeline<T>
+    where
+        F: FnOnce(&dyn Fn(T) -> bool) + Send + 'static,
+    {
+        let queue = BoundedQueue::new(depth);
+        let q = Arc::clone(&queue);
+        let producer = thread::spawn(move || {
+            let push = |item: T| q.push(item);
+            produce(&push);
+            q.close();
+        });
+        Pipeline { queue, producer: Some(producer) }
+    }
+
+    /// Next item; None when the producer finished and the queue drained.
+    pub fn next(&self) -> Option<T> {
+        self.queue.pop()
+    }
+
+    /// Queue depth (observability).
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+impl<T> Drop for Pipeline<T> {
+    fn drop(&mut self) {
+        self.queue.close();
+        if let Some(p) = self.producer.take() {
+            let _ = p.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4, 8);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pipeline_backpressure_and_drain() {
+        let p = Pipeline::spawn(2, |push| {
+            for i in 0..50 {
+                if !push(i) {
+                    break;
+                }
+            }
+        });
+        let mut got = Vec::new();
+        while let Some(x) = p.next() {
+            got.push(x);
+        }
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_queue_close_unblocks() {
+        let q: Arc<BoundedQueue<u32>> = BoundedQueue::new(1);
+        let q2 = Arc::clone(&q);
+        let h = thread::spawn(move || q2.pop());
+        thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+}

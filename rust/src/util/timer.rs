@@ -1,0 +1,90 @@
+//! Wall-clock timing helpers and streaming statistics.
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Streaming mean/min/max/stddev accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_match_closed_form() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.n, 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.millis() >= 4.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts` to have run (the repo ships with a
+//! Makefile target; CI runs it first). They validate the whole
+//! python-AOT → HLO-text → rust-load → execute chain numerically.
+
+use csopt::runtime::{Arg, Runtime};
+
+fn runtime() -> Runtime {
+    let dir = std::env::var("CSOPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Runtime::open(dir).expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn smoke_axpy_runs_and_matches() {
+    let rt = runtime();
+    let exe = rt.load("smoke.axpy").unwrap();
+    let outs = exe
+        .call(&[Arg::ScalarF32(3.0), Arg::F32(&[1.0, 2.0, 3.0, 4.0])])
+        .unwrap();
+    let got: Vec<f32> = outs[0].to_vec().unwrap();
+    assert_eq!(got, vec![5.0, 8.0, 11.0, 14.0]); // 3x + 2
+}
+
+#[test]
+fn artifact_cache_returns_same_executable() {
+    let rt = runtime();
+    let a = rt.load("smoke.axpy").unwrap();
+    let b = rt.load("smoke.axpy").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn call_validates_shapes() {
+    let rt = runtime();
+    let exe = rt.load("smoke.axpy").unwrap();
+    // wrong arity
+    assert!(exe.call(&[Arg::ScalarF32(1.0)]).is_err());
+    // wrong shape
+    assert!(exe.call(&[Arg::ScalarF32(1.0), Arg::F32(&[1.0, 2.0])]).is_err());
+    // wrong dtype
+    assert!(exe.call(&[Arg::ScalarI32(1), Arg::F32(&[1.0; 4])]).is_err());
+}
+
+#[test]
+fn manifest_covers_tiny_preset() {
+    let rt = runtime();
+    assert!(rt.manifest.artifacts.contains_key("tiny.lm_step"));
+    assert!(rt.manifest.artifacts.contains_key("tiny.lm_eval"));
+    assert!(rt.manifest.hyper("hash_seed").unwrap() as u64 == 0x5EED);
+    let p = &rt.manifest.presets["tiny"];
+    assert_eq!(p["vocab"] as usize, 512);
+}
+
+/// The AOT dense-Adam row graph must match the Rust DenseAdam exactly.
+#[test]
+fn xla_dense_adam_matches_rust() {
+    use csopt::optim::{DenseAdam, RowOptimizer};
+    let rt = runtime();
+    // tiny preset k=64, d=32
+    let exe = rt.load("opt.dense_adam.k64.d32").unwrap();
+    let (k, d) = (64usize, 32usize);
+    let mut rust_opt = DenseAdam::new(k, d, 0.9, 0.999, 1e-8);
+    let mut rng = csopt::util::rng::Rng::new(3);
+
+    let mut rows_rust: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    let mut rows_xla = rows_rust.clone();
+    let mut m = vec![0.0f32; k * d];
+    let mut v = vec![0.0f32; k * d];
+    let mask = vec![1.0f32; k];
+    let ids: Vec<u64> = (0..k as u64).collect();
+
+    for t in 1..=3 {
+        let g: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        rust_opt.step_rows(&ids, &mut rows_rust, &g, 1e-3, t);
+        let outs = exe
+            .call(&[
+                Arg::F32(&rows_xla),
+                Arg::F32(&m),
+                Arg::F32(&v),
+                Arg::F32(&g),
+                Arg::F32(&mask),
+                Arg::ScalarF32(1e-3),
+                Arg::ScalarF32(t as f32),
+            ])
+            .unwrap();
+        outs[0].copy_raw_to(&mut rows_xla).unwrap();
+        outs[1].copy_raw_to(&mut m).unwrap();
+        outs[2].copy_raw_to(&mut v).unwrap();
+    }
+    for i in 0..k * d {
+        assert!(
+            (rows_rust[i] - rows_xla[i]).abs() < 1e-5,
+            "row mismatch at {i}: {} vs {}",
+            rows_rust[i],
+            rows_xla[i]
+        );
+    }
+}
+
+/// The AOT **Pallas** CS-Adam graph must match the Rust CsAdam (identical
+/// hashing, identical batched semantics) — this is the cross-language
+/// correctness anchor for the whole L1 kernel stack.
+#[test]
+fn xla_pallas_cs_adam_matches_rust_cs_adam() {
+    use csopt::optim::{CsAdam, RowOptimizer};
+    use csopt::train::xla_opt::{XlaOptKind, XlaRowOptimizer};
+    let rt = runtime();
+    let seed = rt.manifest.hyper("hash_seed").unwrap() as u64;
+    // tiny preset emb shapes: k=64, d=32, v=3, w=103
+    let (k, d, v, w) = (64usize, 32usize, 3usize, 103usize);
+    let mut xla_opt = XlaRowOptimizer::new(&rt, XlaOptKind::CsAdam, k, d, v, w, seed).unwrap();
+    let mut rust_opt = CsAdam::new(v, w, d, seed, 0.9, 0.999, 1e-8);
+
+    let mut rng = csopt::util::rng::Rng::new(5);
+    // partial batch (tests masking too): 37 of 64 slots live
+    let live = 37usize;
+    let ids: Vec<u64> = rng.sample_distinct(512, live).into_iter().map(|x| x as u64).collect();
+    let mut rows_a: Vec<f32> = (0..live * d).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    let mut rows_b = rows_a.clone();
+    for t in 1..=4 {
+        let g: Vec<f32> = (0..live * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        rust_opt.step_rows(&ids, &mut rows_a, &g, 1e-2, t);
+        xla_opt.step_rows(&ids, &mut rows_b, &g, 1e-2, t);
+        for i in 0..live * d {
+            assert!(
+                (rows_a[i] - rows_b[i]).abs() < 1e-4 * (1.0 + rows_a[i].abs()),
+                "t={t} i={i}: rust {} vs xla {}",
+                rows_a[i],
+                rows_b[i]
+            );
+        }
+    }
+}
+
+/// Same anchor for CMS-Adagrad.
+#[test]
+fn xla_pallas_cms_adagrad_matches_rust() {
+    use csopt::optim::{CmsAdagrad, RowOptimizer};
+    use csopt::train::xla_opt::{XlaOptKind, XlaRowOptimizer};
+    let rt = runtime();
+    let seed = rt.manifest.hyper("hash_seed").unwrap() as u64;
+    let (k, d, v, w) = (64usize, 32usize, 3usize, 103usize);
+    let mut xla_opt = XlaRowOptimizer::new(&rt, XlaOptKind::CmsAdagrad, k, d, v, w, seed).unwrap();
+    let mut rust_opt = CmsAdagrad::new(v, w, d, seed, 1e-10);
+    let mut rng = csopt::util::rng::Rng::new(6);
+    let ids: Vec<u64> = rng.sample_distinct(512, 20).into_iter().map(|x| x as u64).collect();
+    let mut rows_a: Vec<f32> = (0..20 * d).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    let mut rows_b = rows_a.clone();
+    for t in 1..=3 {
+        let g: Vec<f32> = (0..20 * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        rust_opt.step_rows(&ids, &mut rows_a, &g, 0.1, t);
+        xla_opt.step_rows(&ids, &mut rows_b, &g, 0.1, t);
+    }
+    for i in 0..20 * d {
+        assert!((rows_a[i] - rows_b[i]).abs() < 1e-4, "i={i}");
+    }
+}

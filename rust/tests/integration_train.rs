@@ -1,0 +1,148 @@
+//! End-to-end training-behaviour tests (pure-Rust engine; no artifacts
+//! needed) plus property-style sweeps over the optimizer zoo.
+
+use csopt::config::lm_preset;
+use csopt::data::corpus::SyntheticCorpus;
+use csopt::exp::common::corpus_for;
+use csopt::optim::OptimKind;
+use csopt::train::engine::RustLmEngine;
+use csopt::train::trainer::{LmTrainer, OptChoice, TrainerOptions};
+use csopt::util::rng::Rng;
+
+fn trainer(emb_opt: OptChoice, sm_opt: OptChoice, optim: OptimKind, lr: f32, seed: u64) -> LmTrainer {
+    let preset = lm_preset("tiny").unwrap();
+    let mut opts = TrainerOptions::new(preset, optim, lr);
+    opts.emb_opt = emb_opt;
+    opts.sm_opt = sm_opt;
+    opts.seed = seed;
+    let mut rng = Rng::new(seed);
+    LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap()
+}
+
+#[test]
+fn every_optimizer_variant_reduces_loss() {
+    let corpus = SyntheticCorpus::generate(512, 30_000, 1.05, 0.6, 3);
+    let (train, _, _) = corpus.split(0.05, 0.05);
+    let cases = [
+        (OptChoice::Dense, OptimKind::Adam, 1e-3),
+        (OptChoice::Sketch, OptimKind::Adam, 1e-3),
+        (OptChoice::SketchV, OptimKind::Adam, 1e-3),
+        (OptChoice::LowRank, OptimKind::Adam, 1e-3),
+        (OptChoice::Dense, OptimKind::Momentum, 0.2),
+        (OptChoice::Sketch, OptimKind::Momentum, 0.2),
+        (OptChoice::Dense, OptimKind::Adagrad, 0.1),
+        (OptChoice::Sketch, OptimKind::Adagrad, 0.1),
+        (OptChoice::Sketch, OptimKind::AdamV, 1e-3),
+    ];
+    for (choice, optim, lr) in cases {
+        let mut tr = trainer(choice, OptChoice::Dense, optim, lr, 1);
+        let first = tr.train_epoch(train, 30).mean_loss;
+        let second = tr.train_epoch(train, 30).mean_loss;
+        assert!(
+            second < first,
+            "{choice:?}/{optim:?}: loss did not decrease ({first} -> {second})"
+        );
+    }
+}
+
+#[test]
+fn sketch_uses_less_memory_dense_same_quality_tiny() {
+    let corpus = SyntheticCorpus::generate(512, 40_000, 1.05, 0.6, 5);
+    let (train, _, test) = corpus.split(0.05, 0.08);
+    let mut dense = trainer(OptChoice::Dense, OptChoice::Dense, OptimKind::Adam, 1e-3, 2);
+    let mut sketch = trainer(OptChoice::Sketch, OptChoice::Dense, OptimKind::Adam, 1e-3, 2);
+    for _ in 0..2 {
+        dense.train_epoch(train, 100);
+        sketch.train_epoch(train, 100);
+    }
+    let pd = dense.eval_ppl(test, 8);
+    let ps = sketch.eval_ppl(test, 8);
+    // paper shape: CS within a few percent of dense
+    assert!(ps < pd * 1.2, "sketch ppl {ps} vs dense {pd}");
+    // tiny preset: [3, 103, 32] ×2 sketches vs [512, 32] ×2 dense states
+    assert!(sketch.emb.opt.memory_bytes() < dense.emb.opt.memory_bytes());
+}
+
+#[test]
+fn recurrent_state_carries_across_windows() {
+    let corpus = SyntheticCorpus::generate(512, 10_000, 1.05, 0.9, 6);
+    let (train, _, _) = corpus.split(0.05, 0.05);
+    let mut tr = trainer(OptChoice::Dense, OptChoice::Dense, OptimKind::Adam, 1e-3, 3);
+    // strongly sequential corpus (q=0.9): training should push loss well
+    // below the unigram entropy, which is only possible with context
+    let unigram = corpus.unigram_entropy();
+    let mut last = f64::INFINITY;
+    for _ in 0..4 {
+        last = tr.train_epoch(train, 60).mean_loss;
+    }
+    assert!(
+        last < unigram,
+        "loss {last} did not beat unigram entropy {unigram}"
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_training_state() {
+    use csopt::train::checkpoint::Checkpoint;
+    let corpus = SyntheticCorpus::generate(512, 8_000, 1.05, 0.5, 7);
+    let (train, _, test) = corpus.split(0.05, 0.08);
+    let mut tr = trainer(OptChoice::Dense, OptChoice::Dense, OptimKind::Adam, 1e-3, 4);
+    tr.train_epoch(train, 20);
+    let ppl_before = tr.eval_ppl(test, 4);
+
+    let mut ck = Checkpoint::new();
+    ck.set_scalar("step", tr.step as u64);
+    ck.set_blob("emb", &tr.emb.params);
+    ck.set_blob("sm", &tr.sm.params);
+    ck.set_blob("smb", &tr.sm_bias.params);
+    let mut flat = Vec::new();
+    tr.engine.pack_flat(&mut flat);
+    ck.set_blob("trunk", &flat);
+    let path = std::env::temp_dir().join(format!("csopt_it_{}.ck", std::process::id()));
+    ck.save(&path).unwrap();
+
+    // restore into a fresh trainer
+    let back = Checkpoint::load(&path).unwrap();
+    let mut tr2 = trainer(OptChoice::Dense, OptChoice::Dense, OptimKind::Adam, 1e-3, 999);
+    tr2.emb.params.copy_from_slice(back.blob("emb").unwrap());
+    tr2.sm.params.copy_from_slice(back.blob("sm").unwrap());
+    tr2.sm_bias.params.copy_from_slice(back.blob("smb").unwrap());
+    tr2.engine.unpack_flat(back.blob("trunk").unwrap());
+    let ppl_after = tr2.eval_ppl(test, 4);
+    assert!(
+        (ppl_before - ppl_after).abs() < 1e-6 * ppl_before.max(1.0),
+        "{ppl_before} vs {ppl_after}"
+    );
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn plateau_schedule_reduces_lr_during_training() {
+    use csopt::optim::LrSchedule;
+    let preset = lm_preset("tiny").unwrap();
+    let mut opts = TrainerOptions::new(preset, OptimKind::Momentum, 0.0);
+    opts.schedule = LrSchedule::plateau(1.0, 0.25, 1);
+    let mut rng = Rng::new(11);
+    let mut tr = LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap();
+    // report non-improving metrics → lr must decay
+    let lr0 = tr.opts.schedule.at(1);
+    tr.report_metric(5.0);
+    tr.report_metric(5.0);
+    let lr1 = tr.opts.schedule.at(1);
+    assert!(lr1 < lr0);
+}
+
+#[test]
+fn cleaning_policy_threads_through_trainer() {
+    use csopt::sketch::CleaningPolicy;
+    let preset = lm_preset("tiny").unwrap();
+    let corpus = corpus_for(&preset, 16, 9);
+    let (train, _, _) = corpus.split(0.05, 0.05);
+    let mut opts = TrainerOptions::new(preset, OptimKind::Adagrad, 0.1);
+    opts.emb_opt = OptChoice::Sketch;
+    opts.cleaning = CleaningPolicy { every: 5, alpha: 0.5 };
+    let mut rng = Rng::new(12);
+    let mut tr = LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap();
+    let r = tr.train_epoch(train, 12);
+    assert!(r.mean_loss.is_finite());
+}
