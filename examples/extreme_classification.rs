@@ -4,31 +4,28 @@
 //!
 //! Run: `cargo run --release --example extreme_classification`
 
-use csopt::config::Hyper;
 use csopt::data::classif::ExtremeDataset;
 use csopt::mach::{MachEnsemble, MachOptions};
-use csopt::optim::{CmsAdamV, DenseAdam};
+use csopt::optim::OptimSpec;
 use csopt::util::timer::Timer;
 
 fn main() -> anyhow::Result<()> {
     let classes = 100_000usize;
     let (din, hd, b_meta) = (512usize, 128usize, 512usize);
     let ds = ExtremeDataset::new(classes, din, 16, 1.1, 5);
-    let h = Hyper::DEFAULT;
     let samples = 8_192usize;
 
     println!("Amazon-sim: {classes} classes → MACH r=4, {b_meta} meta-classes each");
 
     for (label, batch, sketched) in [("adam  (dense v)", 128usize, false), ("cs-v  (CMS v, 3.5× batch)", 448, true)] {
-        let opts = MachOptions { r: 4, b_meta, din, hd, seed: 9, lr: 2e-3, hyper: h };
         let w = (b_meta / 64).max(4);
-        let mut ens = MachEnsemble::new(opts, |i| {
-            if sketched {
-                Box::new(CmsAdamV::new(3, w, hd, 0x5EED ^ i as u64, h.adam_beta2, h.adam_eps))
-            } else {
-                Box::new(DenseAdam::new(b_meta, hd, h.adam_beta1, h.adam_beta2, h.adam_eps))
-            }
-        })?;
+        let out_opt = if sketched {
+            OptimSpec::parse(&format!("cs-adam-v@v=3,w={w}"))?
+        } else {
+            OptimSpec::parse("adam")?
+        };
+        let opts = MachOptions { r: 4, b_meta, din, hd, seed: 9, lr: 2e-3, out_opt };
+        let mut ens = MachEnsemble::new(opts)?;
         let steps = samples / batch;
         let timer = Timer::start();
         let mut loss = 0.0;

@@ -4,17 +4,37 @@
 //! feeds it a sparse power-law gradient stream, and compares memory and
 //! estimate quality against dense Adam.
 //!
+//! Every optimizer is built from an `OptimSpec` string — the same strings
+//! the CLI (`csopt train --optim …`) and the experiment drivers use:
+//!
+//! | spec string            | meaning                                         |
+//! |------------------------|-------------------------------------------------|
+//! | `adam`                 | dense Adam baseline (also `momentum`, `adagrad`, `adam-v`, `sgd`) |
+//! | `cs-adam`              | both Adam moments in count-sketches (Alg. 2/4)  |
+//! | `cs-adam@v=3,w=4096`   | … with explicit sketch depth/width              |
+//! | `cs-momentum`          | signed momentum buffer in a count-sketch        |
+//! | `cs-adagrad@clean=0.5/1000` | count-min accumulator, cleaned every 1000 steps |
+//! | `cs-adam-v`            | Adam-V: β₁=0, CMS 2nd moment only               |
+//! | `csv-adam`             | CS-V: dense 1st moment + CMS 2nd moment         |
+//! | `xla-cs-adam`          | sketch stepped by the AOT Pallas artifact       |
+//! | `nmf-adagrad`          | NMF rank-1 comparator (also `nmf-momentum`, `nmf-adam[-v]`) |
+//!
 //! Run: `cargo run --release --example quickstart`
 
-use csopt::optim::{CsAdam, DenseAdam, RowOptimizer};
+use csopt::optim::{OptimSpec, RowOptimizer, RowShape};
 use csopt::util::rng::{Rng, Zipf};
+
+fn build(spec: &str, shape: &RowShape) -> Box<dyn RowOptimizer> {
+    OptimSpec::parse(spec).unwrap().build_row(shape, None).unwrap()
+}
 
 fn main() {
     let (n, d) = (50_000usize, 64usize); // 50k rows × 64 dims
     let (v, w) = (3usize, n / 15); // 5× compression: 3·(n/15) = n/5 cells
+    let shape = RowShape::new(n, d);
 
-    let mut dense = DenseAdam::new(n, d, 0.9, 0.999, 1e-8);
-    let mut sketched = CsAdam::new(v, w, d, 0x5EED, 0.9, 0.999, 1e-8);
+    let mut dense = build("adam", &shape);
+    let mut sketched = build(&format!("cs-adam@v={v},w={w}"), &shape);
     println!(
         "aux memory: dense {:.1} MB, count-sketch {:.1} MB ({:.1}× smaller)",
         dense.memory_bytes() as f64 / 1e6,

@@ -11,8 +11,7 @@
 
 use csopt::exp::common::{build_trainer, corpus_for};
 use csopt::metrics::CsvWriter;
-use csopt::optim::OptimKind;
-use csopt::train::trainer::OptChoice;
+use csopt::optim::OptimSpec;
 use csopt::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -34,8 +33,8 @@ fn main() -> anyhow::Result<()> {
         // thread the engine choice through the shared builder
         let mut eargs = args.clone();
         eargs.options.insert("engine".into(), engine.into());
-        let emb_opt = if engine == "xla" { OptChoice::SketchXla } else { OptChoice::Sketch };
-        let mut tr = build_trainer(&preset, OptimKind::Adam, emb_opt, OptChoice::Dense, 1e-3, &eargs)?;
+        let emb = OptimSpec::parse(if engine == "xla" { "xla-cs-adam" } else { "cs-adam" })?;
+        let mut tr = build_trainer(&preset, emb, OptimSpec::parse("adam")?, 1e-3, &eargs)?;
         let p = tr.opts.preset;
         println!("\n=== engine {engine}: preset {} (vocab {}, emb {}, hidden {}) ===",
                  p.name, p.vocab, p.de, p.hd);

@@ -4,10 +4,10 @@
 
 use csopt::config::lm_preset;
 use csopt::exp::common::corpus_for;
-use csopt::optim::OptimKind;
+use csopt::optim::OptimSpec;
 use csopt::runtime::{Arg, Runtime};
 use csopt::train::engine::{LmEngine, RustLmEngine, XlaLmEngine};
-use csopt::train::trainer::{LmTrainer, OptChoice, TrainerOptions};
+use csopt::train::trainer::{LmTrainer, TrainerOptions};
 use csopt::util::bench::{black_box, Bench};
 use csopt::util::rng::Rng;
 
@@ -34,13 +34,14 @@ fn main() {
     let mut batcher = csopt::data::batcher::BpttBatcher::new(train, preset.batch, preset.bptt);
     let batch = batcher.next_batch().unwrap();
 
-    for (label, engine, emb_opt) in [
-        ("train_step/rust+sketch", "rust", OptChoice::Sketch),
-        ("train_step/xla+sketch", "xla", OptChoice::Sketch),
-        ("train_step/xla+sketch-xla", "xla", OptChoice::SketchXla),
+    for (label, engine, emb) in [
+        ("train_step/rust+sketch", "rust", "cs-adam"),
+        ("train_step/xla+sketch", "xla", "cs-adam"),
+        ("train_step/xla+sketch-xla", "xla", "xla-cs-adam"),
     ] {
-        let mut opts = TrainerOptions::new(preset, OptimKind::Adam, 1e-3);
-        opts.emb_opt = emb_opt;
+        let emb = OptimSpec::parse(emb).unwrap();
+        let mut opts = TrainerOptions::new(preset, emb, 1e-3);
+        opts.sm = emb.as_dense();
         let mut rng = Rng::new(1);
         let eng: Box<dyn LmEngine> = if engine == "rust" {
             Box::new(RustLmEngine::new(preset, &mut rng))

@@ -1,7 +1,7 @@
 //! Hot-path microbenches: count-sketch UPDATE/QUERY and the fused
 //! optimizer steps, at paper-like shapes. Feeds EXPERIMENTS.md §Perf.
 
-use csopt::optim::{CmsAdagrad, CsAdam, CsMomentum, DenseAdam, RowOptimizer};
+use csopt::optim::{OptimSpec, RowOptimizer, RowShape};
 use csopt::sketch::{CountMinSketch, CountSketch};
 use csopt::util::bench::{black_box, Bench};
 use csopt::util::rng::Rng;
@@ -40,12 +40,17 @@ fn main() {
         });
     }
 
-    // fused optimizer steps vs the dense baseline (k=1152, d=256 = wt103)
+    // fused optimizer steps vs the dense baseline (k=1152, d=256 = wt103),
+    // all built through the unified OptimSpec API
     let (k, d, n, w) = (1152usize, 256usize, 32_768usize, 6554usize);
     let (ids, grads) = ids_and_grads(n, k, d, 2);
     let mut rows = vec![0.5f32; k * d];
+    let shape = RowShape::new(n, d).with_sketch(3, w);
+    let build = |s: &str| -> Box<dyn RowOptimizer> {
+        OptimSpec::parse(s).unwrap().build_row(&shape, None).unwrap()
+    };
 
-    let mut cs_adam = CsAdam::new(3, w, d, 7, 0.9, 0.999, 1e-8);
+    let mut cs_adam = build("cs-adam@seed=7");
     let mut t = 0usize;
     b.bench("step/cs_adam.k1152.d256", || {
         t += 1;
@@ -53,7 +58,7 @@ fn main() {
         black_box(&rows);
     });
 
-    let mut dense_adam = DenseAdam::new(n, d, 0.9, 0.999, 1e-8);
+    let mut dense_adam = build("adam");
     let mut t = 0usize;
     b.bench("step/dense_adam.k1152.d256", || {
         t += 1;
@@ -61,13 +66,13 @@ fn main() {
         black_box(&rows);
     });
 
-    let mut cs_mom = CsMomentum::new(3, w, d, 7, 0.9);
+    let mut cs_mom = build("cs-momentum@seed=7");
     b.bench("step/cs_momentum.k1152.d256", || {
         cs_mom.step_rows(&ids, &mut rows, &grads, 1e-3, 1);
         black_box(&rows);
     });
 
-    let mut cms_ada = CmsAdagrad::new(3, w, d, 7, 1e-10);
+    let mut cms_ada = build("cs-adagrad@seed=7");
     b.bench("step/cms_adagrad.k1152.d256", || {
         cms_ada.step_rows(&ids, &mut rows, &grads, 1e-3, 1);
         black_box(&rows);

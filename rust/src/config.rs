@@ -8,7 +8,7 @@
 use anyhow::{bail, Result};
 
 /// Shared optimizer hyper-parameters (baked into the AOT graphs).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Hyper {
     pub adam_beta1: f32,
     pub adam_beta2: f32,

@@ -4,9 +4,9 @@ use anyhow::Result;
 
 use crate::config::{lm_preset, LmPreset};
 use crate::data::corpus::SyntheticCorpus;
-use crate::optim::{LrSchedule, OptimKind};
+use crate::optim::{LrSchedule, OptimSpec};
 use crate::train::engine::{LmEngine, RustLmEngine, XlaLmEngine};
-use crate::train::trainer::{LmTrainer, OptChoice, TrainerOptions};
+use crate::train::trainer::{LmTrainer, TrainerOptions};
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
 
@@ -22,25 +22,22 @@ pub fn corpus_for(p: &LmPreset, min_windows: usize, seed: u64) -> SyntheticCorpu
     SyntheticCorpus::generate(p.vocab, need, 1.05, 0.6, seed)
 }
 
-/// Build a trainer for the given variant.
+/// Build a trainer for the given per-layer optimizer specs (see
+/// [`OptimSpec::parse`] for the string grammar the drivers use).
 pub fn build_trainer(
     preset_name: &str,
-    optim: OptimKind,
-    emb_opt: OptChoice,
-    sm_opt: OptChoice,
+    emb: OptimSpec,
+    sm: OptimSpec,
     lr: f32,
     args: &Args,
 ) -> Result<LmTrainer> {
     let preset = lm_preset(preset_name)?;
-    let mut opts = TrainerOptions::new(preset, optim, lr);
-    opts.emb_opt = emb_opt;
-    opts.sm_opt = sm_opt;
+    let mut opts = TrainerOptions::new(preset, emb, lr);
+    opts.sm = sm;
     opts.clip = args.get_parse("clip", 1.0f32)?;
     opts.seed = args.get_parse("seed", 42u64)?;
     let engine_name = args.get_or("engine", "rust");
-    let needs_rt = engine_name == "xla"
-        || emb_opt == OptChoice::SketchXla
-        || sm_opt == OptChoice::SketchXla;
+    let needs_rt = engine_name == "xla" || emb.requires_runtime() || sm.requires_runtime();
     let rt = if needs_rt {
         Some(crate::runtime::Runtime::open_default()?)
     } else {
@@ -55,19 +52,23 @@ pub fn build_trainer(
     LmTrainer::new(opts, engine, rt.as_ref())
 }
 
-/// Same, with a linear-decay schedule over the whole run.
-#[allow(clippy::too_many_arguments)]
+/// Same, with a schedule instead of a constant lr.
 pub fn build_trainer_sched(
     preset_name: &str,
-    optim: OptimKind,
-    emb_opt: OptChoice,
-    sm_opt: OptChoice,
+    emb: OptimSpec,
+    sm: OptimSpec,
     sched: LrSchedule,
     args: &Args,
 ) -> Result<LmTrainer> {
-    let mut tr = build_trainer(preset_name, optim, emb_opt, sm_opt, 0.0, args)?;
+    let mut tr = build_trainer(preset_name, emb, sm, 0.0, args)?;
     tr.opts.schedule = sched;
     Ok(tr)
+}
+
+/// Parse a spec string, panicking with a clear message on failure —
+/// for the experiment drivers' hard-coded variant tables.
+pub fn spec(s: &str) -> OptimSpec {
+    OptimSpec::parse(s).unwrap_or_else(|e| panic!("bad optimizer spec {s:?}: {e:#}"))
 }
 
 /// "Midpoint threshold" of Fig. 1: the fraction of entries (sorted by

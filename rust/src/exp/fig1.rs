@@ -8,16 +8,14 @@
 use anyhow::Result;
 
 use crate::data::prefetch::PrefetchedBatches;
-use crate::exp::common::{build_trainer, corpus_for, midpoint_threshold, out_dir};
+use crate::exp::common::{build_trainer, corpus_for, midpoint_threshold, out_dir, spec};
 use crate::metrics::CsvWriter;
-use crate::optim::OptimKind;
-use crate::train::trainer::OptChoice;
 use crate::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<()> {
     let steps = args.get_parse("steps", 300usize)?;
     let preset = args.get_or("preset", "tiny");
-    let mut tr = build_trainer(&preset, OptimKind::Adam, OptChoice::Dense, OptChoice::Dense, 1e-3, args)?;
+    let mut tr = build_trainer(&preset, spec("adam"), spec("adam"), 1e-3, args)?;
     let p = tr.opts.preset;
     let corpus = corpus_for(&p, steps + 8, 1);
     let (train, _, _) = corpus.split(0.05, 0.05);

@@ -6,17 +6,15 @@
 use anyhow::Result;
 
 use crate::data::prefetch::PrefetchedBatches;
-use crate::exp::common::{build_trainer, corpus_for, out_dir};
+use crate::exp::common::{build_trainer, corpus_for, out_dir, spec};
 use crate::metrics::CsvWriter;
-use crate::optim::OptimKind;
-use crate::train::trainer::OptChoice;
 use crate::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<()> {
     let steps_per_epoch = args.get_parse("steps", 100usize)?;
     let epochs = [1usize, 4, 8]; // scaled stand-ins for the paper's 5/20/40
     let preset = args.get_or("preset", "tiny");
-    let mut tr = build_trainer(&preset, OptimKind::Adam, OptChoice::Dense, OptChoice::Dense, 1e-3, args)?;
+    let mut tr = build_trainer(&preset, spec("adam"), spec("adam"), 1e-3, args)?;
     let p = tr.opts.preset;
     let corpus = corpus_for(&p, steps_per_epoch + 8, 2);
     let (train, _, _) = corpus.split(0.05, 0.05);

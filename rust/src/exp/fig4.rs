@@ -13,12 +13,10 @@
 use anyhow::Result;
 
 use crate::data::prefetch::PrefetchedBatches;
-use crate::exp::common::{build_trainer, corpus_for, out_dir};
+use crate::exp::common::{build_trainer, corpus_for, out_dir, spec};
 use crate::metrics::CsvWriter;
 use crate::optim::lowrank::{L2Rank1, Rank1Factors};
-use crate::optim::OptimKind;
 use crate::sketch::{CountMinSketch, CountSketch};
-use crate::train::trainer::OptChoice;
 use crate::util::cli::Args;
 
 fn l2_err(a: &[f32], b: &[f32]) -> f64 {
@@ -28,7 +26,7 @@ fn l2_err(a: &[f32], b: &[f32]) -> f64 {
 pub fn run(args: &Args) -> Result<()> {
     let steps = args.get_parse("steps", 400usize)?;
     let preset = args.get_or("preset", "tiny");
-    let mut tr = build_trainer(&preset, OptimKind::Adam, OptChoice::Dense, OptChoice::Dense, 1e-3, args)?;
+    let mut tr = build_trainer(&preset, spec("adam"), spec("adam"), 1e-3, args)?;
     let p = tr.opts.preset;
     let (n, d) = (p.vocab, p.de);
     let corpus = corpus_for(&p, steps + 8, 3);
@@ -36,8 +34,8 @@ pub fn run(args: &Args) -> Result<()> {
 
     // budget-matched approximators (sketch [3, w, d] with 3·w ≈ n/10)
     let w = (n / 30).max(4);
-    let gamma = tr.opts.hyper.momentum_gamma;
-    let beta2 = tr.opts.hyper.adam_beta2;
+    let gamma = tr.opts.emb.hyper.momentum_gamma;
+    let beta2 = tr.opts.emb.hyper.adam_beta2;
     // momentum trackers
     let mut m_truth = vec![0.0f32; n * d];
     let mut m_cs = CountSketch::new(3, w, d, 0x5EED);

@@ -8,14 +8,10 @@
 use anyhow::Result;
 
 use crate::data::classif::GaussianMixture;
-use crate::exp::common::{out_dir, print_table};
+use crate::exp::common::{out_dir, print_table, spec};
 use crate::metrics::CsvWriter;
 use crate::model::{MlpGrads, MlpModel};
-use crate::optim::{
-    CmsAdagrad, DenseAdagrad, DenseAdam, FlatAdam, FlatOptimizer, HybridAdamV, RowOptimizer,
-    SparseLayer,
-};
-use crate::sketch::CleaningPolicy;
+use crate::optim::{FlatAdam, FlatOptimizer, RowShape, SparseLayer};
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
 
@@ -25,11 +21,9 @@ struct RunResult {
     curve: Vec<(usize, f64, f64, f64)>, // (step, loss, acc, v_err)
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_variant(
     label: &str,
-    mk_opt: impl FnOnce() -> Box<dyn RowOptimizer>,
-    adam: bool,
+    optim_spec: &str,
     gm: &GaussianMixture,
     steps: usize,
     batch: usize,
@@ -37,9 +31,12 @@ fn run_variant(
     lr: f32,
 ) -> RunResult {
     let ncls = gm.classes;
+    let opt = spec(optim_spec)
+        .build_row(&RowShape::new(ncls, hd), None)
+        .unwrap_or_else(|e| panic!("{optim_spec}: {e:#}"));
     let mut rng = Rng::new(11);
     let mut mlp = MlpModel::new(gm.din, hd, &mut rng);
-    let mut out = SparseLayer::new(ncls, hd, 0.05, mk_opt(), &mut rng);
+    let mut out = SparseLayer::new(ncls, hd, 0.05, opt, &mut rng);
     let mut out_bias = vec![0.0f32; ncls];
     // dense reference tracking the true 2nd moment for the ℓ2-error series
     let mut v_truth = vec![0.0f32; ncls * hd];
@@ -101,7 +98,6 @@ fn run_variant(
             };
             curve.push((t, loss, acc, v_err));
         }
-        let _ = adam;
     }
     RunResult {
         label: label.to_string(),
@@ -121,38 +117,30 @@ pub fn run(args: &Args) -> Result<()> {
     let v = 3usize;
     let w = (ncls / 5 / v).max(4);
 
+    // spec strings: CMS at 20% of dense size; the paper's cleaning settings
+    // (α=0.2/C=125 for Adam, α=0.5/C=125 for Adagrad) ride in `clean=`
     let variants: Vec<RunResult> = vec![
-        run_variant("adam-dense", || Box::new(DenseAdam::new(ncls, hd, 0.9, 0.999, 1e-8)), true, &gm, steps, batch, hd, 1e-3),
+        run_variant("adam-dense", "adam", &gm, steps, batch, hd, 1e-3),
         run_variant(
             "adam-cms-noclean",
-            || Box::new(HybridAdamV::new(ncls, v, w, hd, 1, 0.9, 0.999, 1e-8)),
-            true, &gm, steps, batch, hd, 1e-3,
+            &format!("csv-adam@v={v},w={w},seed=1"),
+            &gm, steps, batch, hd, 1e-3,
         ),
         run_variant(
             "adam-cms-clean",
-            || {
-                Box::new(
-                    HybridAdamV::new(ncls, v, w, hd, 1, 0.9, 0.999, 1e-8)
-                        .with_cleaning(CleaningPolicy::adam_default()),
-                )
-            },
-            true, &gm, steps, batch, hd, 1e-3,
+            &format!("csv-adam@v={v},w={w},clean=0.2/125,seed=1"),
+            &gm, steps, batch, hd, 1e-3,
         ),
-        run_variant("adagrad-dense", || Box::new(DenseAdagrad::new(ncls, hd, 1e-10)), false, &gm, steps, batch, hd, 0.05),
+        run_variant("adagrad-dense", "adagrad", &gm, steps, batch, hd, 0.05),
         run_variant(
             "adagrad-cms-noclean",
-            || Box::new(CmsAdagrad::new(v, w, hd, 1, 1e-10)),
-            false, &gm, steps, batch, hd, 0.05,
+            &format!("cs-adagrad@v={v},w={w},seed=1"),
+            &gm, steps, batch, hd, 0.05,
         ),
         run_variant(
             "adagrad-cms-clean",
-            || {
-                Box::new(
-                    CmsAdagrad::new(v, w, hd, 1, 1e-10)
-                        .with_cleaning(CleaningPolicy::adagrad_default()),
-                )
-            },
-            false, &gm, steps, batch, hd, 0.05,
+            &format!("cs-adagrad@v={v},w={w},clean=0.5/125,seed=1"),
+            &gm, steps, batch, hd, 0.05,
         ),
     ];
 

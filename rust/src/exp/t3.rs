@@ -9,10 +9,8 @@
 
 use anyhow::Result;
 
-use crate::exp::common::{build_trainer, corpus_for, out_dir, print_table};
+use crate::exp::common::{build_trainer, corpus_for, out_dir, print_table, spec};
 use crate::metrics::CsvWriter;
-use crate::optim::OptimKind;
-use crate::train::trainer::OptChoice;
 use crate::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<()> {
@@ -24,12 +22,12 @@ pub fn run(args: &Args) -> Result<()> {
     let mut results = Vec::new();
     let dir = out_dir(args);
     let mut csv = CsvWriter::create(format!("{dir}/t3_momentum_ppl.csv"), &["variant", "epoch", "test_ppl"])?;
-    for (label, emb_opt) in [
-        ("momentum", OptChoice::Dense),
-        ("cs", OptChoice::Sketch),
-        ("lr-nmf", OptChoice::LowRank),
+    for (label, emb) in [
+        ("momentum", "momentum"),
+        ("cs", "cs-momentum"),
+        ("lr-nmf", "nmf-momentum"),
     ] {
-        let mut tr = build_trainer(&preset, OptimKind::Momentum, emb_opt, OptChoice::Dense, lr, args)?;
+        let mut tr = build_trainer(&preset, spec(emb), spec("momentum"), lr, args)?;
         let p = tr.opts.preset;
         let corpus = corpus_for(&p, steps + 8, 0xE3);
         let (train, valid, test) = corpus.split(0.08, 0.08);

@@ -7,10 +7,8 @@
 
 use anyhow::Result;
 
-use crate::exp::common::{build_trainer, corpus_for, out_dir, print_table};
+use crate::exp::common::{build_trainer, corpus_for, out_dir, print_table, spec};
 use crate::metrics::CsvWriter;
-use crate::optim::OptimKind;
-use crate::train::trainer::OptChoice;
 use crate::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<()> {
@@ -22,13 +20,13 @@ pub fn run(args: &Args) -> Result<()> {
     let mut results = Vec::new();
     let dir = out_dir(args);
     let mut csv = CsvWriter::create(format!("{dir}/t4_adam_ppl.csv"), &["variant", "epoch", "test_ppl"])?;
-    for (label, emb_opt) in [
-        ("cs-mv", OptChoice::Sketch),
-        ("adam", OptChoice::Dense),
-        ("cs-v", OptChoice::SketchV),
-        ("lr-nmf-v", OptChoice::LowRank),
+    for (label, emb) in [
+        ("cs-mv", "cs-adam"),
+        ("adam", "adam"),
+        ("cs-v", "csv-adam"),
+        ("lr-nmf-v", "nmf-adam"),
     ] {
-        let mut tr = build_trainer(&preset, OptimKind::Adam, emb_opt, OptChoice::Dense, lr, args)?;
+        let mut tr = build_trainer(&preset, spec(emb), spec("adam"), lr, args)?;
         let p = tr.opts.preset;
         let corpus = corpus_for(&p, steps + 8, 0xE4);
         let (train, valid, test) = corpus.split(0.08, 0.08);

@@ -7,10 +7,9 @@
 
 use anyhow::Result;
 
-use crate::exp::common::{build_trainer_sched, corpus_for, out_dir, print_table};
+use crate::exp::common::{build_trainer_sched, corpus_for, out_dir, print_table, spec};
 use crate::metrics::CsvWriter;
-use crate::optim::{LrSchedule, OptimKind};
-use crate::train::trainer::OptChoice;
+use crate::optim::LrSchedule;
 use crate::util::cli::Args;
 use crate::util::timer::Timer;
 
@@ -32,13 +31,13 @@ pub fn run(args: &Args) -> Result<()> {
         format!("{dir}/t5_adagrad.csv"),
         &["variant", "secs_per_epoch", "opt_MB", "total_MB", "test_ppl"],
     )?;
-    for (label, choice) in [
-        ("adagrad", OptChoice::Dense),
-        ("cs", OptChoice::Sketch),
-        ("lr-nmf", OptChoice::LowRank),
+    for (label, variant) in [
+        ("adagrad", "adagrad"),
+        ("cs", "cs-adagrad"),
+        ("lr-nmf", "nmf-adagrad"),
     ] {
         let sched = LrSchedule::linear(lr0, epochs * steps);
-        let mut tr = build_trainer_sched(&preset, OptimKind::Adagrad, choice, choice, sched, args)?;
+        let mut tr = build_trainer_sched(&preset, spec(variant), spec(variant), sched, args)?;
         let p = tr.opts.preset;
         let corpus = corpus_for(&p, steps + 6, 0xE5);
         let (train, _, test) = corpus.split(0.05, 0.08);

@@ -7,10 +7,9 @@
 
 use anyhow::Result;
 
-use crate::exp::common::{build_trainer_sched, corpus_for, out_dir, print_table};
+use crate::exp::common::{build_trainer_sched, corpus_for, out_dir, print_table, spec};
 use crate::metrics::CsvWriter;
-use crate::optim::{LrSchedule, OptimKind};
-use crate::train::trainer::OptChoice;
+use crate::optim::LrSchedule;
 use crate::util::cli::Args;
 use crate::util::timer::Timer;
 
@@ -29,14 +28,14 @@ pub fn run(args: &Args) -> Result<()> {
 
     let mut sum_rows = Vec::new();
     let mut ppl_rows: Vec<Vec<String>> = Vec::new();
-    for (label, choice) in [
-        ("cs-mv", OptChoice::Sketch),
-        ("adam", OptChoice::Dense),
-        ("cs-v", OptChoice::SketchV),
-        ("lr-nmf-v", OptChoice::LowRank),
+    for (label, variant) in [
+        ("cs-mv", "cs-adam"),
+        ("adam", "adam"),
+        ("cs-v", "csv-adam"),
+        ("lr-nmf-v", "nmf-adam"),
     ] {
         let sched = LrSchedule::linear(lr0, epochs * steps);
-        let mut tr = build_trainer_sched(&preset, OptimKind::Adam, choice, choice, sched, args)?;
+        let mut tr = build_trainer_sched(&preset, spec(variant), spec(variant), sched, args)?;
         let p = tr.opts.preset;
         let corpus = corpus_for(&p, steps + 6, 0xE6);
         let (train, _, test) = corpus.split(0.05, 0.08);

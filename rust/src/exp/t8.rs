@@ -12,12 +12,11 @@
 
 use anyhow::Result;
 
-use crate::config::Hyper;
 use crate::data::classif::ExtremeDataset;
-use crate::exp::common::{out_dir, print_table};
+use crate::exp::common::{out_dir, print_table, spec};
 use crate::mach::{MachEnsemble, MachOptions};
 use crate::metrics::CsvWriter;
-use crate::optim::{CmsAdamV, DenseAdam, RowOptimizer};
+use crate::optim::OptimSpec;
 use crate::util::cli::Args;
 use crate::util::timer::Timer;
 
@@ -33,7 +32,7 @@ struct Row {
 #[allow(clippy::too_many_arguments)]
 fn run_variant(
     label: &str,
-    mk: impl FnMut(usize) -> Box<dyn RowOptimizer>,
+    out_opt: OptimSpec,
     ds: &ExtremeDataset,
     b_meta: usize,
     hd: usize,
@@ -51,9 +50,9 @@ fn run_variant(
         // linear lr scaling with batch size (Goyal et al.), as the paper
         // does when growing the batch 8× on LM1B
         lr: 2e-3 * (batch as f32 / 192.0),
-        hyper: Hyper::DEFAULT,
+        out_opt,
     };
-    let mut ens = MachEnsemble::new(opts, mk)?;
+    let mut ens = MachEnsemble::new(opts)?;
     let steps = (samples_per_epoch / batch).max(1);
     let timer = Timer::start();
     for e in 0..epochs {
@@ -86,19 +85,18 @@ pub fn run(args: &Args) -> Result<()> {
     let big_batch = (base_batch as f64 * 3.5) as usize; // paper's 750 → 2600
 
     let ds = ExtremeDataset::new(classes, din, 24, 1.1, 5);
-    let h = Hyper::DEFAULT;
     // CMS 2nd moment at ~1% of [b_meta, hd] per member (paper: [3,266,1024]
     // vs [20000,1024])
     let w = (b_meta / 100 / 3).max(4) * 4;
 
     let dense = run_variant(
         "adam",
-        |_| Box::new(DenseAdam::new(b_meta, hd, h.adam_beta1, h.adam_beta2, h.adam_eps)),
+        spec("adam"),
         &ds, b_meta, hd, base_batch, samples, epochs, recall_queries,
     )?;
     let cs = run_variant(
         "cs-v",
-        |i| Box::new(CmsAdamV::new(3, w, hd, 0x5EED ^ i as u64, h.adam_beta2, h.adam_eps)),
+        spec(&format!("cs-adam-v@v=3,w={w}")),
         &ds, b_meta, hd, big_batch, samples, epochs, recall_queries,
     )?;
 

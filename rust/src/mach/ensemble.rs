@@ -5,10 +5,9 @@
 
 use anyhow::Result;
 
-use crate::config::Hyper;
 use crate::data::classif::ExtremeDataset;
 use crate::model::{MlpGrads, MlpModel};
-use crate::optim::{FlatAdam, FlatOptimizer, RowOptimizer, SparseLayer};
+use crate::optim::{FlatOptimizer, OptimSpec, RowShape, Rule, SparseLayer};
 use crate::util::rng::Rng;
 
 use super::meta::MetaHasher;
@@ -24,7 +23,11 @@ pub struct MachOptions {
     pub hd: usize,
     pub seed: u64,
     pub lr: f32,
-    pub hyper: Hyper,
+    /// Output-layer optimizer spec — this is where Dense Adam vs
+    /// CMS-Adam-V plugs in. Its `hyper` is the single hyper source for
+    /// the whole member (the dense-Adam trunk reuses it); each member
+    /// hashes with `spec seed ⊕ member`.
+    pub out_opt: OptimSpec,
 }
 
 /// One meta-classifier: MLP trunk + `[b_meta, hd]` output sparse layer.
@@ -32,7 +35,7 @@ struct MetaClassifier {
     mlp: MlpModel,
     out: SparseLayer,
     out_bias: Vec<f32>,
-    flat_opt: FlatAdam,
+    flat_opt: Box<dyn FlatOptimizer>,
     grads: MlpGrads,
     rows: Vec<f32>,
     flat: Vec<f32>,
@@ -48,24 +51,24 @@ pub struct MachEnsemble {
 }
 
 impl MachEnsemble {
-    /// Build with a row-optimizer factory for the output layers (this is
-    /// where Dense vs CMS-Adam-V plugs in).
-    pub fn new<F>(opts: MachOptions, mut make_opt: F) -> Result<MachEnsemble>
-    where
-        F: FnMut(usize) -> Box<dyn RowOptimizer>,
-    {
+    /// Build `r` members, each with an output-layer optimizer from
+    /// `opts.out_opt` (decorrelated per-member hash seeds).
+    pub fn new(opts: MachOptions) -> Result<MachEnsemble> {
         let hasher = MetaHasher::new(opts.r, opts.b_meta, opts.seed);
+        let out_shape = RowShape::new(opts.b_meta, opts.hd);
+        let base_seed = opts.out_opt.seed.unwrap_or(opts.out_opt.hyper.hash_seed);
         let mut members = Vec::with_capacity(opts.r);
         for i in 0..opts.r {
             let mut rng = Rng::new(opts.seed ^ (i as u64 + 1) * 17);
             let mlp = MlpModel::new(opts.din, opts.hd, &mut rng);
-            let out = SparseLayer::new(opts.b_meta, opts.hd, 0.05, make_opt(i), &mut rng);
-            let flat_opt = FlatAdam::new(
-                mlp.flat_len(),
-                opts.hyper.adam_beta1,
-                opts.hyper.adam_beta2,
-                opts.hyper.adam_eps,
-            );
+            let member_opt = opts
+                .out_opt
+                .with_seed(base_seed ^ i as u64)
+                .build_row(&out_shape, None)?;
+            let out = SparseLayer::new(opts.b_meta, opts.hd, 0.05, member_opt, &mut rng);
+            let flat_opt = OptimSpec::dense(Rule::Adam)
+                .with_hyper(opts.out_opt.hyper)
+                .build_flat(mlp.flat_len());
             members.push(MetaClassifier {
                 mlp,
                 out,
@@ -178,7 +181,6 @@ impl MachEnsemble {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::DenseAdam;
 
     fn small_opts() -> MachOptions {
         MachOptions {
@@ -188,7 +190,7 @@ mod tests {
             hd: 32,
             seed: 5,
             lr: 5e-3,
-            hyper: Hyper::DEFAULT,
+            out_opt: OptimSpec::dense(Rule::Adam),
         }
     }
 
@@ -196,10 +198,7 @@ mod tests {
     fn mach_learns_and_beats_chance_recall() {
         let opts = small_opts();
         let ds = ExtremeDataset::new(500, 64, 8, 1.1, 9);
-        let mut ens = MachEnsemble::new(opts.clone(), |_| {
-            Box::new(DenseAdam::new(32, 32, 0.9, 0.999, 1e-8))
-        })
-        .unwrap();
+        let mut ens = MachEnsemble::new(opts.clone()).unwrap();
         let mut first = 0.0;
         let mut last = 0.0;
         for step in 0..60 {
@@ -218,9 +217,17 @@ mod tests {
 
     #[test]
     fn memory_accounting_scales_with_r() {
-        let opts = small_opts();
-        let ens = MachEnsemble::new(opts, |_| Box::new(DenseAdam::new(32, 32, 0.9, 0.999, 1e-8))).unwrap();
+        let ens = MachEnsemble::new(small_opts()).unwrap();
         assert_eq!(ens.param_bytes(), 3 * 32 * 32 * 4);
         assert_eq!(ens.optimizer_bytes(), 3 * 2 * 32 * 32 * 4);
+    }
+
+    #[test]
+    fn sketched_output_layer_shrinks_optimizer_state() {
+        let mut opts = small_opts();
+        opts.out_opt = OptimSpec::parse("cs-adam-v@v=3,w=4").unwrap();
+        let ens = MachEnsemble::new(opts).unwrap();
+        // CMS 2nd moment only: 3 members × [3, 4, 32] floats
+        assert_eq!(ens.optimizer_bytes(), 3 * 3 * 4 * 32 * 4);
     }
 }

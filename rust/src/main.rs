@@ -2,22 +2,24 @@
 //!
 //! Subcommands:
 //!
-//! * `train`   — train an LM preset with a chosen optimizer/compression
+//! * `train`   — train an LM preset with a chosen optimizer spec
 //! * `exp <id>` — regenerate a paper table/figure (fig1 fig2 fig4 fig5
 //!   t3 t4 t5 t6 t7 t8, or `all`)
 //! * `sketch-demo` — quick count-sketch accuracy demonstration
 //! * `runtime-info` — PJRT platform + artifact inventory
 //!
-//! Common flags: `--engine rust|xla`, `--emb-opt dense|sketch|sketch-v|`
-//! `sketch-xla|lowrank`, `--sm-opt …`, `--preset tiny|wt2|wt103|lm1b`,
-//! `--steps N`, `--epochs N`, `--lr X`, `--seed N`, `--out DIR`.
+//! Optimizer selection is a single `--optim` spec string (see
+//! `csopt::optim::spec` for the grammar), e.g. `--optim cs-adam@w=4096`;
+//! `--sm-optim` overrides the softmax layer (default: dense state with
+//! the same rule). The pre-spec triplet `--optim <rule>` +
+//! `--emb-opt`/`--sm-opt <compression>` still works as a back-compat
+//! alias.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use csopt::exp;
-use csopt::optim::OptimKind;
+use csopt::optim::{OptimSpec, Rule};
 use csopt::sketch::CountSketch;
-use csopt::train::trainer::OptChoice;
 use csopt::util::cli::Args;
 use csopt::util::rng::Rng;
 
@@ -25,13 +27,25 @@ const USAGE: &str = "\
 csopt — Compressing Gradient Optimizers via Count-Sketches (ICML 2019)
 
 USAGE:
-  csopt train [--preset tiny|wt2|wt103|lm1b] [--optim adam|momentum|adagrad|adam-v]
-              [--emb-opt dense|sketch|sketch-v|sketch-xla|lowrank] [--sm-opt ...]
+  csopt train [--preset tiny|wt2|wt103|lm1b] [--optim SPEC] [--sm-optim SPEC]
               [--engine rust|xla] [--epochs N] [--steps N] [--lr X]
               [--checkpoint PATH]
   csopt exp <fig1|fig2|fig4|fig5|t3|t4|t5|t6|t7|t8|all> [--steps N] [--epochs N]
   csopt sketch-demo [--width W] [--depth V] [--items N]
   csopt runtime-info
+
+OPTIMIZER SPECS ([comp-]rule[@k=v,...]; rules: sgd momentum adagrad adam adam-v):
+  dense-<rule> | sgd                             dense auxiliary state
+  cs-adam | cs-momentum | cs-adagrad | cs-adam-v count-sketch state (the paper)
+  csv-adam[-v]                                   dense 1st + CMS 2nd moment
+  xla-cs-*                                       sketch stepped by AOT artifact
+  nmf-*                                          NMF rank-1 comparator
+  params: v=depth w=width clean=alpha/every seed=N b1= b2= eps= gamma=
+  example: --optim cs-adam@v=3,w=4096,clean=0.5/1000
+  NOTE --optim with a BARE rule keeps its pre-spec CLI meaning: sketched
+  embedding state + dense softmax (`--optim adam` == `--optim cs-adam`);
+  use `dense-<rule>` for the dense baseline. Bare rules also combine with
+  the legacy --emb-opt/--sm-opt <compression> flags.
 ";
 
 fn main() {
@@ -66,27 +80,58 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     }
 }
 
+/// Resolve the `--optim`/`--sm-optim` specs, honouring the legacy
+/// `--optim <rule>` + `--emb-opt`/`--sm-opt <compression>` triplet.
+fn optim_specs(args: &Args) -> Result<(OptimSpec, OptimSpec)> {
+    if args.get("emb-opt").is_some() || args.get("sm-opt").is_some() {
+        if args.get("sm-optim").is_some() {
+            bail!(
+                "--sm-optim cannot be combined with the legacy --emb-opt/--sm-opt \
+                 flags — use the spec flags only (--optim SPEC --sm-optim SPEC)"
+            );
+        }
+        let optim = args.get_or("optim", "adam");
+        let rule = Rule::parse(&optim).ok_or_else(|| {
+            anyhow!(
+                "legacy --emb-opt/--sm-opt combine with a plain --optim rule \
+                 (sgd|momentum|adagrad|adam|adam-v), got {optim:?}; or drop them and \
+                 use a full spec like --optim cs-adam@w=4096"
+            )
+        })?;
+        let emb = OptimSpec::from_legacy(rule, &args.get_or("emb-opt", "sketch"))?;
+        let sm = OptimSpec::from_legacy(rule, &args.get_or("sm-opt", "dense"))?;
+        return Ok((emb, sm));
+    }
+    let optim = args.get_or("optim", "cs-adam");
+    // A bare-rule HEAD keeps its pre-spec meaning (with or without @params):
+    // the old --emb-opt default was "sketch", so `--optim adam` and
+    // `--optim adam@b2=0.99` still sketch the embedding aux state (sgd has
+    // none to sketch). Use `dense-<rule>` for the dense baseline.
+    let head = optim.split_once('@').map_or(optim.as_str(), |(h, _)| h);
+    let emb = match Rule::parse(head) {
+        Some(rule) if rule != Rule::Sgd => OptimSpec::parse(&format!("cs-{optim}"))?,
+        _ => OptimSpec::parse(&optim)?,
+    };
+    let sm = match args.get("sm-optim") {
+        Some(s) => OptimSpec::parse(s)?,
+        None => emb.as_dense(),
+    };
+    Ok((emb, sm))
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let preset = args.get_or("preset", "tiny");
-    let optim = OptimKind::parse(&args.get_or("optim", "adam"))
-        .ok_or_else(|| anyhow::anyhow!("bad --optim"))?;
-    let emb_opt = OptChoice::parse(&args.get_or("emb-opt", "sketch"))
-        .ok_or_else(|| anyhow::anyhow!("bad --emb-opt"))?;
-    let sm_opt = OptChoice::parse(&args.get_or("sm-opt", "dense"))
-        .ok_or_else(|| anyhow::anyhow!("bad --sm-opt"))?;
+    let (emb, sm) = optim_specs(args)?;
     let lr = args.get_parse("lr", 1e-3f32)?;
     let epochs = args.get_parse("epochs", 2usize)?;
     let steps = args.get_parse("steps", 200usize)?;
 
-    let mut tr = exp::common::build_trainer(&preset, optim, emb_opt, sm_opt, lr, args)?;
+    let mut tr = exp::common::build_trainer(&preset, emb, sm, lr, args)?;
     let p = tr.opts.preset;
     println!(
-        "training preset={} engine={} optim={:?} emb-opt={:?} sm-opt={:?}",
+        "training preset={} engine={} emb-optim={emb} sm-optim={sm}",
         p.name,
         tr.engine.name(),
-        optim,
-        emb_opt,
-        sm_opt
     );
     println!("{}", tr.memory_ledger().render());
 

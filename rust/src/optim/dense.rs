@@ -8,6 +8,28 @@ use super::{FlatOptimizer, RowOptimizer};
 // Row (sparse-layer) baselines
 // ---------------------------------------------------------------------------
 
+/// SGD over sparse rows — the stateless baseline (`x ← x − η·g`).
+///
+/// Row granularity is irrelevant without auxiliary state, so the update
+/// is elementwise over the gathered `[k, d]` buffer.
+pub struct SparseSgd;
+
+impl RowOptimizer for SparseSgd {
+    fn step_rows(&mut self, _ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
+        for (p, &g) in rows.iter_mut().zip(grads) {
+            *p -= lr * g;
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
 /// Dense Momentum over `[n, d]` rows: `m ← γm + g; x ← x − η·m`.
 pub struct DenseMomentum {
     m: Vec<f32>,
@@ -333,5 +355,14 @@ mod tests {
         assert_eq!(DenseAdam::new(10, 4, 0.9, 0.999, 1e-8).memory_bytes(), 2 * 10 * 4 * 4);
         assert_eq!(DenseMomentum::new(10, 4, 0.9).memory_bytes(), 10 * 4 * 4);
         assert_eq!(FlatSgd.memory_bytes(), 0);
+        assert_eq!(SparseSgd.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn sparse_sgd_is_plain_descent() {
+        let mut opt = SparseSgd;
+        let mut rows = vec![1.0f32, -1.0];
+        opt.step_rows(&[3, 9], &mut rows, &[0.5, -0.5], 0.1, 1);
+        assert_eq!(rows, vec![0.95, -0.95]);
     }
 }

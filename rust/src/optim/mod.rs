@@ -1,7 +1,36 @@
 //! First-order optimizers: dense baselines, the paper's count-sketch
-//! optimizers (Algorithms 2–4) and the low-rank comparators (§6/§7).
+//! optimizers (Algorithms 2–4) and the low-rank comparators (§6/§7),
+//! unified behind the [`OptimSpec`] construction API.
 //!
-//! Two calling conventions mirror the model split:
+//! # Choosing an optimizer: the spec grammar
+//!
+//! All construction goes through [`OptimSpec`] — one typed value (with a
+//! round-trip string form) that owns the full cross-product of base rule
+//! × state compression × sketch geometry × cleaning × hypers:
+//!
+//! ```text
+//! <head>[@v=..,w=..,clean=α/C,seed=..,b1=..,b2=..,eps=..,gamma=..]
+//! ```
+//!
+//! | head | auxiliary state | implementation |
+//! |---|---|---|
+//! | `sgd` `momentum` `adagrad` `adam` `adam-v` | dense `[n, d]` | [`SparseSgd`], [`DenseMomentum`], [`DenseAdagrad`], [`DenseAdam`] |
+//! | `cs-momentum` `cs-adam` | signed count-sketch `[v, w, d]` | [`CsMomentum`], [`CsAdam`] |
+//! | `cs-adagrad` `cs-adam-v` | count-min `[v, w, d]` | [`CmsAdagrad`], [`CmsAdamV`] |
+//! | `csv-adam` `csv-adam-v` | dense 1st moment + CMS 2nd moment | [`HybridAdamV`] |
+//! | `xla-cs-*` | sketches stepped by the AOT Pallas artifact | `XlaRowOptimizer` |
+//! | `nmf-momentum` `nmf-adagrad` `nmf-adam[-v]` | NMF rank-1 factors | [`NmfMomentum`], [`NmfAdagrad`], [`NmfAdamV`] |
+//!
+//! `OptimSpec::parse("cs-adam@w=4096")` → [`OptimSpec::build_row`] /
+//! [`OptimSpec::build_flat`] produce ready optimizers; invalid
+//! combinations (`cs-sgd`, `csv-momentum`, cleaning on dense state,
+//! `xla-cs-*` without a runtime) return actionable errors. New variants
+//! plug in by extending [`Rule`]/[`Comp`] and the two `build_*` matches —
+//! no trainer, CLI or experiment edits required.
+//!
+//! # Calling conventions
+//!
+//! Two traits mirror the model split:
 //!
 //! * [`RowOptimizer`] — sparse layers (embedding/softmax): each step
 //!   receives the **gathered active rows** `[k, d]`, their global ids and
@@ -18,11 +47,16 @@ pub mod dense;
 pub mod lowrank;
 pub mod schedule;
 pub mod sketched;
+pub mod spec;
 
-pub use dense::{DenseAdagrad, DenseAdam, DenseMomentum, FlatAdagrad, FlatAdam, FlatMomentum, FlatSgd};
+pub use dense::{
+    DenseAdagrad, DenseAdam, DenseMomentum, FlatAdagrad, FlatAdam, FlatMomentum, FlatSgd,
+    SparseSgd,
+};
 pub use lowrank::{L2Rank1, NmfAdagrad, NmfAdamV, NmfMomentum};
 pub use schedule::LrSchedule;
 pub use sketched::{CmsAdagrad, CmsAdamV, CsAdam, CsMomentum, HybridAdamV};
+pub use spec::{Comp, OptimSpec, RowShape, Rule};
 
 use crate::util::rng::Rng;
 
@@ -118,41 +152,6 @@ impl SparseLayer {
     }
 }
 
-/// Specification of a row-optimizer variant, shared by configs & CLIs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum OptimKind {
-    Sgd,
-    Momentum,
-    Adagrad,
-    Adam,
-    /// Adam with β1 = 0 and no 1st-moment state (paper §7.3).
-    AdamV,
-}
-
-impl OptimKind {
-    pub fn parse(s: &str) -> Option<OptimKind> {
-        Some(match s {
-            "sgd" => OptimKind::Sgd,
-            "momentum" => OptimKind::Momentum,
-            "adagrad" => OptimKind::Adagrad,
-            "adam" => OptimKind::Adam,
-            "adam-v" | "adamv" => OptimKind::AdamV,
-            _ => return None,
-        })
-    }
-}
-
-/// Compression scheme for the sparse-layer auxiliary variables.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Compression {
-    /// Full-size auxiliary state (baseline).
-    Dense,
-    /// Count-sketch tensors (the paper's method). Value = sketch width.
-    Sketch { width: usize },
-    /// NMF rank-1 factorization (Shazeer & Stern comparator).
-    LowRank,
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,9 +187,9 @@ mod tests {
     }
 
     #[test]
-    fn optim_kind_parses() {
-        assert_eq!(OptimKind::parse("adam"), Some(OptimKind::Adam));
-        assert_eq!(OptimKind::parse("adam-v"), Some(OptimKind::AdamV));
-        assert_eq!(OptimKind::parse("nope"), None);
+    fn rule_parses() {
+        assert_eq!(Rule::parse("adam"), Some(Rule::Adam));
+        assert_eq!(Rule::parse("adam-v"), Some(Rule::AdamV));
+        assert_eq!(Rule::parse("nope"), None);
     }
 }

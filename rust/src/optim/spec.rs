@@ -1,0 +1,849 @@
+//! `OptimSpec` — the single typed specification for "which optimizer,
+//! compressed how".
+//!
+//! Every optimizer construction site (trainer, CLI, experiment drivers,
+//! MACH ensemble, examples, benches) goes through this type instead of
+//! pattern-matching `(rule, compression)` pairs by hand. A spec is the
+//! cross-product of a base update [`Rule`], a state [`Comp`]ression, the
+//! sketch geometry, a [`CleaningPolicy`], a hash seed and [`Hyper`]
+//! overrides, with a human-readable round-trip string form shared by the
+//! CLI and config layer:
+//!
+//! ```text
+//! spec    := head [ "@" param ("," param)* ]
+//! head    := [prefix] rule
+//! rule    := "sgd" | "momentum" | "adagrad" | "adam" | "adam-v"
+//! prefix  := ""        dense (full-size) auxiliary state
+//!          | "cs-"     count-sketch / count-min state (the paper's method)
+//!          | "csv-"    dense 1st moment + CMS 2nd moment ("CS-V", §7.3)
+//!          | "xla-cs-" sketched state stepped by the AOT Pallas artifact
+//!          | "nmf-"    NMF rank-1 factors (Shazeer & Stern comparator)
+//! param   := "v=" depth | "w=" width | "clean=" alpha "/" every
+//!          | "seed=" u64 | "b1=" f32 | "b2=" f32 | "eps=" f32 | "gamma=" f32
+//! ```
+//!
+//! `parse` ∘ `Display` is the identity on canonical strings
+//! (`OptimSpec::parse(s).unwrap().to_string() == s`); `Display` emits
+//! parameters in the fixed order above and omits defaults, so
+//! `"cs-adam@v=3,w=4096,clean=0.5/1000"` is canonical. Aliases accepted
+//! by `parse` (`cms-`, `cs-v-`, `lr-nmf-`, `dense-`, `adamv`) normalize
+//! to the canonical head. `eps` maps to the eps of the rule it modifies
+//! (`adagrad_eps` for adagrad, `adam_eps` otherwise); hyper fields not
+//! reachable from the rule are not part of the string form. `v=`/`w=`/
+//! `seed=` describe sketch geometry/hashing and are rejected on dense and
+//! rank-1 heads, where they would be silent no-ops.
+//!
+//! Invalid combinations fail with actionable messages — at `parse` time
+//! for CLI/config ergonomics and again in [`OptimSpec::build_row`] for
+//! programmatic construction. See [`OptimSpec::validate`] for the rules.
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::Hyper;
+use crate::sketch::CleaningPolicy;
+
+use super::dense::{
+    DenseAdagrad, DenseAdam, DenseMomentum, FlatAdagrad, FlatAdam, FlatMomentum, FlatSgd,
+    SparseSgd,
+};
+use super::lowrank::{NmfAdagrad, NmfAdamV, NmfMomentum};
+use super::sketched::{CmsAdagrad, CmsAdamV, CsAdam, CsMomentum, HybridAdamV};
+use super::{FlatOptimizer, RowOptimizer};
+
+/// Base first-order update rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    Sgd,
+    Momentum,
+    Adagrad,
+    Adam,
+    /// Adam with β₁ = 0 and no 1st-moment state (paper §7.3).
+    AdamV,
+}
+
+impl Rule {
+    /// Every rule, in canonical order.
+    pub const ALL: [Rule; 5] = [Rule::Sgd, Rule::Momentum, Rule::Adagrad, Rule::Adam, Rule::AdamV];
+
+    /// Canonical spec-string token.
+    pub fn token(self) -> &'static str {
+        match self {
+            Rule::Sgd => "sgd",
+            Rule::Momentum => "momentum",
+            Rule::Adagrad => "adagrad",
+            Rule::Adam => "adam",
+            Rule::AdamV => "adam-v",
+        }
+    }
+
+    /// Parse a rule token (accepts the `adamv` alias).
+    pub fn parse(s: &str) -> Option<Rule> {
+        Some(match s {
+            "sgd" => Rule::Sgd,
+            "momentum" => Rule::Momentum,
+            "adagrad" => Rule::Adagrad,
+            "adam" => Rule::Adam,
+            "adam-v" | "adamv" => Rule::AdamV,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
+/// How the auxiliary variables are stored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Comp {
+    /// Full-size `[n, d]` state (baseline).
+    Dense,
+    /// Count-sketch / count-min `[v, w, d]` tensors (the paper's method).
+    Sketch,
+    /// "CS-V": dense 1st moment + CMS-compressed 2nd moment (adam family).
+    SketchV,
+    /// Sketched state stepped by the AOT Pallas artifact (needs a runtime).
+    SketchXla,
+    /// NMF rank-1 factorization (low-rank comparator).
+    LowRank,
+}
+
+impl Comp {
+    /// Every compression, in canonical order.
+    pub const ALL: [Comp; 5] =
+        [Comp::Dense, Comp::Sketch, Comp::SketchV, Comp::SketchXla, Comp::LowRank];
+
+    /// Canonical head prefix (`""` for dense).
+    pub fn prefix(self) -> &'static str {
+        match self {
+            Comp::Dense => "",
+            Comp::Sketch => "cs-",
+            Comp::SketchV => "csv-",
+            Comp::SketchXla => "xla-cs-",
+            Comp::LowRank => "nmf-",
+        }
+    }
+
+    /// Legacy CLI token (`--emb-opt`/`--sm-opt` back-compat).
+    pub fn legacy_token(self) -> &'static str {
+        match self {
+            Comp::Dense => "dense",
+            Comp::Sketch => "sketch",
+            Comp::SketchV => "sketch-v",
+            Comp::SketchXla => "sketch-xla",
+            Comp::LowRank => "lowrank",
+        }
+    }
+}
+
+/// Shape of the sparse layer a row optimizer is built for, plus the
+/// preset-level sketch defaults a spec may override.
+#[derive(Clone, Copy, Debug)]
+pub struct RowShape {
+    /// Row count of the parameter matrix.
+    pub n: usize,
+    /// Feature dimension (columns per row).
+    pub d: usize,
+    /// Padded active-row slots per step (XLA artifacts are `k`-specialized).
+    pub k: usize,
+    /// Default sketch depth when the spec has no `v=` override.
+    pub v: usize,
+    /// Default sketch width when the spec has no `w=` override.
+    pub w: usize,
+}
+
+impl RowShape {
+    /// Shape with default sketch geometry: depth 3 and a 5× compression
+    /// width (`v·w = n/5`), the quickstart setting.
+    pub fn new(n: usize, d: usize) -> RowShape {
+        let v = Hyper::DEFAULT.sketch_depth;
+        RowShape { n, d, k: n, v, w: (n / (5 * v)).max(4) }
+    }
+
+    /// Override the default sketch geometry.
+    pub fn with_sketch(mut self, v: usize, w: usize) -> RowShape {
+        self.v = v;
+        self.w = w;
+        self
+    }
+
+    /// Override the padded active-row slot count.
+    pub fn with_slots(mut self, k: usize) -> RowShape {
+        self.k = k;
+        self
+    }
+}
+
+/// A full optimizer specification. See the module docs for the grammar.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OptimSpec {
+    pub rule: Rule,
+    pub comp: Comp,
+    /// Sketch depth override (`v=`); falls back to [`RowShape::v`].
+    pub v: Option<usize>,
+    /// Sketch width override (`w=`); falls back to [`RowShape::w`].
+    pub w: Option<usize>,
+    /// CMS cleaning schedule (`clean=α/C`), [`CleaningPolicy::none`] off.
+    pub cleaning: CleaningPolicy,
+    /// Hash-seed override (`seed=`); falls back to `hyper.hash_seed`.
+    pub seed: Option<u64>,
+    /// Rule hyper-parameters (`b1=`, `b2=`, `eps=`, `gamma=`).
+    pub hyper: Hyper,
+}
+
+impl OptimSpec {
+    /// A spec with default geometry, no cleaning and default hypers.
+    pub fn new(rule: Rule, comp: Comp) -> OptimSpec {
+        OptimSpec {
+            rule,
+            comp,
+            v: None,
+            w: None,
+            cleaning: CleaningPolicy::none(),
+            seed: None,
+            hyper: Hyper::DEFAULT,
+        }
+    }
+
+    /// Dense (uncompressed) spec for `rule`.
+    pub fn dense(rule: Rule) -> OptimSpec {
+        OptimSpec::new(rule, Comp::Dense)
+    }
+
+    /// Count-sketch spec for `rule`.
+    pub fn sketch(rule: Rule) -> OptimSpec {
+        OptimSpec::new(rule, Comp::Sketch)
+    }
+
+    // --- builder-style overrides -----------------------------------------
+
+    pub fn with_depth(mut self, v: usize) -> OptimSpec {
+        self.v = Some(v);
+        self
+    }
+
+    pub fn with_width(mut self, w: usize) -> OptimSpec {
+        self.w = Some(w);
+        self
+    }
+
+    pub fn with_cleaning(mut self, cleaning: CleaningPolicy) -> OptimSpec {
+        self.cleaning = cleaning;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> OptimSpec {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn with_hyper(mut self, hyper: Hyper) -> OptimSpec {
+        self.hyper = hyper;
+        self
+    }
+
+    /// Set the seed only if the spec does not already carry one.
+    pub fn or_seed(mut self, seed: u64) -> OptimSpec {
+        self.seed.get_or_insert(seed);
+        self
+    }
+
+    /// The dense counterpart: same rule and hypers, no compression state.
+    pub fn as_dense(&self) -> OptimSpec {
+        OptimSpec { comp: Comp::Dense, v: None, w: None, cleaning: CleaningPolicy::none(), seed: None, ..*self }
+    }
+
+    /// Does building this spec need a PJRT [`Runtime`](crate::runtime::Runtime)?
+    pub fn requires_runtime(&self) -> bool {
+        self.comp == Comp::SketchXla
+    }
+
+    /// Canonical head string (`"cs-adam"`, `"adagrad"`, …).
+    pub fn head(&self) -> String {
+        format!("{}{}", self.comp.prefix(), self.rule.token())
+    }
+
+    /// Every valid `(rule, compression)` pair, with default parameters.
+    pub fn valid_grid() -> Vec<OptimSpec> {
+        let mut grid = Vec::new();
+        for comp in Comp::ALL {
+            for rule in Rule::ALL {
+                let spec = OptimSpec::new(rule, comp);
+                if spec.validate().is_ok() {
+                    grid.push(spec);
+                }
+            }
+        }
+        grid
+    }
+
+    /// Check the `(rule, compression, geometry, cleaning)` combination.
+    ///
+    /// Documented error cases (each message says what to use instead):
+    /// * any compression × `sgd` — sgd keeps no auxiliary state;
+    /// * `csv-` × non-adam rule — CS-V compresses only the 2nd moment;
+    /// * `v=`/`w=` on dense or rank-1 state (no sketch geometry there),
+    ///   degenerate geometry (`v=0`/`w=0`), or a cleaning factor outside
+    ///   `0 ≤ α < 1`;
+    /// * `clean=` on dense/low-rank state, on the signed `cs-momentum`
+    ///   sketch, or on the (cleaning-less) `xla-cs-*` artifacts.
+    pub fn validate(&self) -> Result<()> {
+        let head = self.head();
+        if self.rule == Rule::Sgd && self.comp != Comp::Dense {
+            bail!(
+                "`{head}`: sgd keeps no auxiliary state, so there is nothing to \
+                 compress — use plain `sgd`"
+            );
+        }
+        if matches!(self.comp, Comp::Dense | Comp::LowRank) && (self.v.is_some() || self.w.is_some())
+        {
+            bail!(
+                "`{head}`: v=/w= describe sketch geometry, which {} state does not \
+                 have — drop them or use a `cs-`/`csv-` spec",
+                if self.comp == Comp::Dense { "dense" } else { "rank-1" }
+            );
+        }
+        if self.v == Some(0) {
+            bail!("`{head}`: sketch depth v=0 is invalid — use v ≥ 1 (the paper uses 3)");
+        }
+        if self.w == Some(0) {
+            bail!("`{head}`: sketch width w=0 is invalid — use w ≥ 1");
+        }
+        if self.cleaning.every > 0 && !(0.0..1.0).contains(&self.cleaning.alpha) {
+            bail!(
+                "`{head}`: clean=α/C needs 0 ≤ α < 1 (got α={}); α=1 would be a no-op",
+                self.cleaning.alpha
+            );
+        }
+        if self.comp == Comp::SketchV && !matches!(self.rule, Rule::Adam | Rule::AdamV) {
+            bail!(
+                "`{head}`: csv-* keeps a dense 1st moment and a CMS 2nd moment, which \
+                 only the adam family has — use `csv-adam`/`csv-adam-v`, or `cs-{}` to \
+                 sketch {}'s state directly",
+                self.rule,
+                self.rule
+            );
+        }
+        if self.cleaning.enabled() {
+            match (self.comp, self.rule) {
+                (Comp::Dense | Comp::LowRank, _) => bail!(
+                    "`{head}`: clean= only applies to sketched state — drop it or use \
+                     a `cs-`/`csv-` spec"
+                ),
+                (Comp::Sketch, Rule::Momentum) => bail!(
+                    "`{head}`: cleaning corrects CMS overestimates of non-negative \
+                     state; cs-momentum keeps a signed count-sketch, which needs no \
+                     cleaning — drop clean="
+                ),
+                (Comp::SketchXla, _) => bail!(
+                    "`{head}`: the AOT xla-cs-* artifacts do not support cleaning — \
+                     drop clean= or use the pure-Rust `cs-{}` path",
+                    self.rule
+                ),
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a spec string. Errors are actionable (they name the grammar
+    /// and the valid alternatives). The result is already validated.
+    pub fn parse(s: &str) -> Result<OptimSpec> {
+        let (head, params) = match s.split_once('@') {
+            Some((h, p)) => (h, Some(p)),
+            None => (s, None),
+        };
+        // longest prefix first so `cs-v-`/`csv-` win over `cs-`
+        const PREFIXES: [(&str, Comp); 9] = [
+            ("xla-cms-", Comp::SketchXla),
+            ("xla-cs-", Comp::SketchXla),
+            ("lr-nmf-", Comp::LowRank),
+            ("cs-v-", Comp::SketchV),
+            ("csv-", Comp::SketchV),
+            ("cms-", Comp::Sketch),
+            ("cs-", Comp::Sketch),
+            ("nmf-", Comp::LowRank),
+            ("dense-", Comp::Dense),
+        ];
+        let mut parsed = None;
+        for (prefix, comp) in PREFIXES {
+            if let Some(rest) = head.strip_prefix(prefix) {
+                if let Some(rule) = Rule::parse(rest) {
+                    parsed = Some((rule, comp));
+                    break;
+                }
+            }
+        }
+        if parsed.is_none() {
+            parsed = Rule::parse(head).map(|rule| (rule, Comp::Dense));
+        }
+        let Some((rule, comp)) = parsed else {
+            bail!(
+                "unknown optimizer spec head {head:?}: expected [<comp>-]<rule> with \
+                 comp ∈ {{cs, csv, xla-cs, nmf}} and rule ∈ {{sgd, momentum, adagrad, \
+                 adam, adam-v}}, e.g. `cs-adam@v=3,w=4096,clean=0.5/1000`"
+            );
+        };
+        let mut spec = OptimSpec::new(rule, comp);
+        if let Some(params) = params {
+            for kv in params.split(',') {
+                let Some((key, val)) = kv.split_once('=') else {
+                    bail!("spec parameter {kv:?} is not of the form key=value");
+                };
+                match key {
+                    "v" => spec.v = Some(parse_val(key, val)?),
+                    "w" => spec.w = Some(parse_val(key, val)?),
+                    "seed" => spec.seed = Some(parse_val(key, val)?),
+                    "clean" => {
+                        let Some((alpha, every)) = val.split_once('/') else {
+                            bail!("clean= wants alpha/every (e.g. clean=0.5/1000), got {val:?}");
+                        };
+                        let cleaning = CleaningPolicy {
+                            alpha: parse_val("clean(alpha)", alpha)?,
+                            every: parse_val("clean(every)", every)?,
+                        };
+                        if cleaning.every == 0 {
+                            bail!(
+                                "clean=α/C needs a period C ≥ 1 (got C=0); omit clean= \
+                                 entirely to disable cleaning"
+                            );
+                        }
+                        spec.cleaning = cleaning;
+                    }
+                    "b1" | "b2" | "eps" | "gamma" => {
+                        if !hyper_key_applies(rule, key) {
+                            bail!(
+                                "{key}= does not apply to {rule}: valid hyper keys are \
+                                 b1/b2/eps (adam family), eps (adagrad), gamma (momentum)"
+                            );
+                        }
+                        match key {
+                            "b1" => spec.hyper.adam_beta1 = parse_val(key, val)?,
+                            "b2" => spec.hyper.adam_beta2 = parse_val(key, val)?,
+                            "gamma" => spec.hyper.momentum_gamma = parse_val(key, val)?,
+                            _ if rule == Rule::Adagrad => {
+                                spec.hyper.adagrad_eps = parse_val(key, val)?
+                            }
+                            _ => spec.hyper.adam_eps = parse_val(key, val)?,
+                        }
+                    }
+                    _ => bail!(
+                        "unknown spec parameter {key:?} (valid: v, w, clean=α/C, seed, \
+                         b1, b2, eps, gamma)"
+                    ),
+                }
+            }
+        }
+        // grammar-level nicety: a user-written seed= on state that never
+        // hashes is a silent no-op, so reject it here. (Programmatic
+        // `with_seed`/`or_seed` stay permissive — the trainer seeds both
+        // layer specs uniformly without caring about their compression.)
+        if spec.seed.is_some() && matches!(comp, Comp::Dense | Comp::LowRank) {
+            bail!(
+                "`{}`: seed= only affects sketch hashing, which {} state does not \
+                 do — drop it or use a `cs-`/`csv-` spec",
+                spec.head(),
+                if comp == Comp::Dense { "dense" } else { "rank-1" }
+            );
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Build a spec from the legacy CLI pair: a plain rule plus an
+    /// `--emb-opt`/`--sm-opt` compression token (see
+    /// [`Comp::legacy_token`]; `lr-nmf` is accepted for `lowrank`).
+    pub fn from_legacy(rule: Rule, comp_token: &str) -> Result<OptimSpec> {
+        let comp = Comp::ALL
+            .into_iter()
+            .find(|c| c.legacy_token() == comp_token)
+            .or_else(|| (comp_token == "lr-nmf").then_some(Comp::LowRank))
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown compression {comp_token:?} (have: dense, sketch, sketch-v, \
+                     sketch-xla, lowrank)"
+                )
+            })?;
+        let spec = OptimSpec::new(rule, comp);
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Build a row optimizer for a sparse layer of the given shape.
+    ///
+    /// `rt` is only consulted for `xla-cs-*` specs; passing `None` there
+    /// returns the documented "needs a PJRT runtime" error.
+    pub fn build_row(
+        &self,
+        shape: &RowShape,
+        rt: Option<&crate::runtime::Runtime>,
+    ) -> Result<Box<dyn RowOptimizer>> {
+        self.validate()?;
+        let h = &self.hyper;
+        let (n, d) = (shape.n, shape.d);
+        let v = self.v.unwrap_or(shape.v);
+        let w = self.w.unwrap_or(shape.w);
+        let seed = self.seed.unwrap_or(h.hash_seed);
+        Ok(match (self.comp, self.rule) {
+            (Comp::Dense, Rule::Sgd) => Box::new(SparseSgd),
+            (Comp::Dense, Rule::Momentum) => Box::new(DenseMomentum::new(n, d, h.momentum_gamma)),
+            (Comp::Dense, Rule::Adagrad) => Box::new(DenseAdagrad::new(n, d, h.adagrad_eps)),
+            (Comp::Dense, Rule::Adam) => {
+                Box::new(DenseAdam::new(n, d, h.adam_beta1, h.adam_beta2, h.adam_eps))
+            }
+            (Comp::Dense, Rule::AdamV) => {
+                Box::new(DenseAdam::new(n, d, 0.0, h.adam_beta2, h.adam_eps))
+            }
+            (Comp::Sketch, Rule::Momentum) => {
+                Box::new(CsMomentum::new(v, w, d, seed, h.momentum_gamma))
+            }
+            (Comp::Sketch, Rule::Adagrad) => {
+                Box::new(CmsAdagrad::new(v, w, d, seed, h.adagrad_eps).with_cleaning(self.cleaning))
+            }
+            (Comp::Sketch, Rule::Adam) => Box::new(
+                CsAdam::new(v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
+                    .with_cleaning(self.cleaning),
+            ),
+            (Comp::Sketch, Rule::AdamV) => Box::new(
+                CmsAdamV::new(v, w, d, seed, h.adam_beta2, h.adam_eps)
+                    .with_cleaning(self.cleaning),
+            ),
+            (Comp::SketchV, Rule::Adam | Rule::AdamV) => Box::new(
+                HybridAdamV::new(n, v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
+                    .with_cleaning(self.cleaning),
+            ),
+            (Comp::SketchXla, rule) => {
+                let Some(rt) = rt else {
+                    bail!(
+                        "`{}` needs a PJRT runtime with AOT artifacts: open one with \
+                         Runtime::open_default() (after `make artifacts`) and pass it to \
+                         build_row, or use `cs-{rule}` for the pure-Rust sketch path",
+                        self
+                    );
+                };
+                use crate::train::xla_opt::{XlaOptKind, XlaRowOptimizer};
+                let kind = match rule {
+                    Rule::Momentum => XlaOptKind::CsMomentum,
+                    Rule::Adagrad => XlaOptKind::CmsAdagrad,
+                    Rule::Adam => XlaOptKind::CsAdam,
+                    Rule::AdamV => XlaOptKind::CmsAdamV,
+                    Rule::Sgd => unreachable!("rejected by validate()"),
+                };
+                Box::new(XlaRowOptimizer::new(rt, kind, shape.k, d, v, w, seed)?)
+            }
+            (Comp::LowRank, Rule::Momentum) => Box::new(NmfMomentum::new(n, d, h.momentum_gamma)),
+            (Comp::LowRank, Rule::Adagrad) => Box::new(NmfAdagrad::new(n, d, h.adagrad_eps)),
+            (Comp::LowRank, Rule::Adam | Rule::AdamV) => {
+                Box::new(NmfAdamV::new(n, d, h.adam_beta1, h.adam_beta2, h.adam_eps))
+            }
+            (comp, rule) => unreachable!("validate() admitted {comp:?}/{rule:?}"),
+        })
+    }
+
+    /// Build a flat optimizer for a dense parameter vector of `len`
+    /// elements. Compression never applies to the (small, dense) trunk
+    /// state, so only the rule and hypers are consulted.
+    pub fn build_flat(&self, len: usize) -> Box<dyn FlatOptimizer> {
+        let h = &self.hyper;
+        match self.rule {
+            Rule::Sgd => Box::new(FlatSgd),
+            Rule::Momentum => Box::new(FlatMomentum::new(len, h.momentum_gamma)),
+            Rule::Adagrad => Box::new(FlatAdagrad::new(len, h.adagrad_eps)),
+            Rule::Adam => Box::new(FlatAdam::new(len, h.adam_beta1, h.adam_beta2, h.adam_eps)),
+            Rule::AdamV => Box::new(FlatAdam::new(len, 0.0, h.adam_beta2, h.adam_eps)),
+        }
+    }
+}
+
+fn parse_val<T: std::str::FromStr>(key: &str, val: &str) -> Result<T>
+where
+    T::Err: fmt::Display,
+{
+    val.parse::<T>()
+        .map_err(|e| anyhow!("bad value {val:?} for spec parameter {key}: {e}"))
+}
+
+/// Which hyper keys each rule actually consults (a key that does not is a
+/// silent no-op, so `parse` rejects it — same policy as `v=`/`w=`/`seed=`
+/// on dense heads).
+fn hyper_key_applies(rule: Rule, key: &str) -> bool {
+    match key {
+        "b1" | "b2" => matches!(rule, Rule::Adam | Rule::AdamV),
+        "eps" => matches!(rule, Rule::Adam | Rule::AdamV | Rule::Adagrad),
+        "gamma" => rule == Rule::Momentum,
+        _ => true,
+    }
+}
+
+impl fmt::Display for OptimSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.head())?;
+        let defaults = Hyper::DEFAULT;
+        let mut params: Vec<String> = Vec::new();
+        if let Some(v) = self.v {
+            params.push(format!("v={v}"));
+        }
+        if let Some(w) = self.w {
+            params.push(format!("w={w}"));
+        }
+        if self.cleaning.enabled() {
+            params.push(format!("clean={}/{}", self.cleaning.alpha, self.cleaning.every));
+        }
+        if let Some(seed) = self.seed {
+            params.push(format!("seed={seed}"));
+        }
+        // only rule-applicable hyper keys are emitted, mirroring `parse`,
+        // so Display output is always re-parseable
+        if hyper_key_applies(self.rule, "b1") && self.hyper.adam_beta1 != defaults.adam_beta1 {
+            params.push(format!("b1={}", self.hyper.adam_beta1));
+        }
+        if hyper_key_applies(self.rule, "b2") && self.hyper.adam_beta2 != defaults.adam_beta2 {
+            params.push(format!("b2={}", self.hyper.adam_beta2));
+        }
+        let (eps, eps_default) = if self.rule == Rule::Adagrad {
+            (self.hyper.adagrad_eps, defaults.adagrad_eps)
+        } else {
+            (self.hyper.adam_eps, defaults.adam_eps)
+        };
+        if hyper_key_applies(self.rule, "eps") && eps != eps_default {
+            params.push(format!("eps={eps}"));
+        }
+        if hyper_key_applies(self.rule, "gamma") && self.hyper.momentum_gamma != defaults.momentum_gamma
+        {
+            params.push(format!("gamma={}", self.hyper.momentum_gamma));
+        }
+        if !params.is_empty() {
+            write!(f, "@{}", params.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn canonical_strings_round_trip() {
+        for s in [
+            "sgd",
+            "adam",
+            "adam-v",
+            "momentum",
+            "adagrad",
+            "cs-adam",
+            "cs-adam-v",
+            "cs-momentum",
+            "cs-adagrad",
+            "csv-adam",
+            "csv-adam-v",
+            "xla-cs-adam",
+            "xla-cs-adagrad",
+            "nmf-momentum",
+            "nmf-adam-v",
+            "cs-adam@v=3,w=4096,clean=0.5/1000",
+            "cs-adagrad@w=26,clean=0.5/125,seed=24141",
+            "csv-adam@v=4,w=64,b1=0.95,b2=0.99,eps=0.001",
+            "cs-momentum@seed=7,gamma=0.85",
+            "adagrad@eps=0.005",
+        ] {
+            let spec = OptimSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e:#}"));
+            assert_eq!(spec.to_string(), s, "canonical round trip of {s:?}");
+        }
+    }
+
+    #[test]
+    fn aliases_normalize_to_canonical_heads() {
+        for (alias, canonical) in [
+            ("cms-adagrad", "cs-adagrad"),
+            ("cms-adam-v", "cs-adam-v"),
+            ("cs-v-adam", "csv-adam"),
+            ("lr-nmf-momentum", "nmf-momentum"),
+            ("xla-cms-adagrad", "xla-cs-adagrad"),
+            ("dense-adam", "adam"),
+            ("adamv", "adam-v"),
+            ("cs-adamv", "cs-adam-v"),
+        ] {
+            assert_eq!(OptimSpec::parse(alias).unwrap().to_string(), canonical);
+        }
+    }
+
+    #[test]
+    fn parse_display_round_trip_property_over_variant_grid() {
+        let grid = OptimSpec::valid_grid();
+        assert_eq!(grid.len(), 19, "5 dense + 4 cs + 2 csv + 4 xla + 4 nmf");
+        check("optimspec-roundtrip", 200, 0x5EC5, |rng| {
+            let mut spec = grid[rng.below(grid.len())];
+            // geometry overrides only exist for sketched state
+            let sketchy =
+                matches!(spec.comp, Comp::Sketch | Comp::SketchV | Comp::SketchXla);
+            if sketchy && rng.f32() < 0.5 {
+                spec = spec.with_depth(1 + rng.below(5));
+            }
+            if sketchy && rng.f32() < 0.5 {
+                spec = spec.with_width(4 + rng.below(8192));
+            }
+            if sketchy && rng.f32() < 0.5 {
+                spec = spec.with_seed(rng.next_u64());
+            }
+            // cleaning only where validate() admits it
+            let cleanable = matches!(
+                (spec.comp, spec.rule),
+                (Comp::Sketch, Rule::Adagrad | Rule::Adam | Rule::AdamV)
+                    | (Comp::SketchV, Rule::Adam | Rule::AdamV)
+            );
+            if cleanable && rng.f32() < 0.5 {
+                spec = spec.with_cleaning(CleaningPolicy {
+                    alpha: 0.01 + 0.98 * rng.f32(),
+                    every: 1 + rng.below(10_000),
+                });
+            }
+            // hyper overrides: only the keys the rule consults are
+            // representable in the string form
+            let mut h = spec.hyper;
+            let adam_family = matches!(spec.rule, Rule::Adam | Rule::AdamV);
+            if adam_family && rng.f32() < 0.3 {
+                h.adam_beta1 = rng.f32();
+            }
+            if adam_family && rng.f32() < 0.3 {
+                h.adam_beta2 = rng.f32();
+            }
+            if rng.f32() < 0.3 {
+                if spec.rule == Rule::Adagrad {
+                    h.adagrad_eps = rng.f32();
+                } else if adam_family {
+                    h.adam_eps = rng.f32();
+                }
+            }
+            if spec.rule == Rule::Momentum && rng.f32() < 0.3 {
+                h.momentum_gamma = rng.f32();
+            }
+            spec = spec.with_hyper(h);
+
+            let s = spec.to_string();
+            let back = OptimSpec::parse(&s).map_err(|e| format!("parse({s:?}): {e:#}"))?;
+            if back != spec {
+                return Err(format!("{s:?} parsed back as {back:?}, want {spec:?}"));
+            }
+            let redisplayed = back.to_string();
+            if redisplayed != s {
+                return Err(format!("display not stable: {s:?} vs {redisplayed:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_rule_comp_pair_builds_or_reports_documented_error() {
+        let shape = RowShape::new(64, 8);
+        for comp in Comp::ALL {
+            for rule in Rule::ALL {
+                let spec = OptimSpec::new(rule, comp);
+                let built = spec.build_row(&shape, None);
+                match (comp, rule) {
+                    // sgd never has compressible state
+                    (Comp::Sketch | Comp::SketchV | Comp::SketchXla | Comp::LowRank, Rule::Sgd) => {
+                        let e = built.unwrap_err().to_string();
+                        assert!(e.contains("nothing to compress"), "{comp:?}/{rule:?}: {e}");
+                    }
+                    // CS-V is adam-family only
+                    (Comp::SketchV, Rule::Momentum | Rule::Adagrad) => {
+                        let e = built.unwrap_err().to_string();
+                        assert!(e.contains("adam family"), "{comp:?}/{rule:?}: {e}");
+                    }
+                    // valid but runtime-backed: documented error without one
+                    (Comp::SketchXla, _) => {
+                        let e = built.unwrap_err().to_string();
+                        assert!(e.contains("PJRT runtime"), "{comp:?}/{rule:?}: {e}");
+                    }
+                    // everything else must build a working optimizer
+                    _ => {
+                        let mut opt = built
+                            .unwrap_or_else(|e| panic!("{comp:?}/{rule:?} failed: {e:#}"));
+                        let ids = [1u64, 5];
+                        let mut rows = vec![0.5f32; 2 * shape.d];
+                        let grads = vec![0.1f32; 2 * shape.d];
+                        let before = rows.clone();
+                        opt.step_rows(&ids, &mut rows, &grads, 0.1, 1);
+                        assert_ne!(rows, before, "{comp:?}/{rule:?} step was a no-op");
+                        assert!(rows.iter().all(|x| x.is_finite()));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_cleaning_combinations_are_rejected() {
+        let clean = CleaningPolicy { every: 100, alpha: 0.5 };
+        for head in ["adam", "nmf-adam", "cs-momentum", "xla-cs-adam"] {
+            let spec = OptimSpec::parse(head).unwrap().with_cleaning(clean);
+            assert!(spec.validate().is_err(), "{head} with cleaning should be invalid");
+            assert!(OptimSpec::parse(&format!("{head}@clean=0.5/100")).is_err());
+        }
+        assert!(OptimSpec::parse("cs-adagrad@clean=0.5/100").is_ok());
+    }
+
+    #[test]
+    fn parse_errors_are_actionable() {
+        for (input, needle) in [
+            ("cs-sgd", "nothing to compress"),
+            ("csv-momentum", "adam family"),
+            ("frobnicate", "unknown optimizer spec head"),
+            ("cs-adam@q=3", "unknown spec parameter"),
+            ("cs-adam@w", "key=value"),
+            ("cs-adam@w=abc", "bad value"),
+            ("cs-adam@clean=0.5", "alpha/every"),
+            ("cs-adam@v=0", "v=0 is invalid"),
+            ("cs-adam@w=0", "w=0 is invalid"),
+            ("cs-adagrad@clean=1.5/100", "0 ≤ α < 1"),
+            ("cs-adagrad@clean=0.5/0", "C ≥ 1"),
+            ("adam@w=64", "sketch geometry"),
+            ("nmf-adam@v=2", "sketch geometry"),
+            ("adam@seed=7", "sketch hashing"),
+            ("adam@gamma=0.5", "does not apply"),
+            ("cs-momentum@b2=0.9", "does not apply"),
+        ] {
+            let e = OptimSpec::parse(input).unwrap_err().to_string();
+            assert!(e.contains(needle), "{input:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn legacy_pairs_map_onto_specs() {
+        let spec = OptimSpec::from_legacy(Rule::Adam, "sketch").unwrap();
+        assert_eq!(spec, OptimSpec::sketch(Rule::Adam));
+        assert_eq!(spec.to_string(), "cs-adam");
+        assert_eq!(
+            OptimSpec::from_legacy(Rule::AdamV, "sketch-v").unwrap().to_string(),
+            "csv-adam-v"
+        );
+        assert!(OptimSpec::from_legacy(Rule::Sgd, "sketch").is_err());
+        assert!(OptimSpec::from_legacy(Rule::Adam, "zip").is_err());
+    }
+
+    #[test]
+    fn build_flat_covers_every_rule() {
+        for rule in Rule::ALL {
+            let mut opt = OptimSpec::dense(rule).build_flat(4);
+            let mut params = vec![1.0f32; 4];
+            opt.step(&mut params, &[0.5; 4], 0.1, 1);
+            assert!(params.iter().all(|x| x.is_finite() && *x < 1.0), "{rule:?}");
+        }
+    }
+
+    #[test]
+    fn as_dense_and_seed_helpers() {
+        let spec = OptimSpec::parse("cs-adam@w=128,seed=9").unwrap();
+        assert_eq!(spec.as_dense().to_string(), "adam");
+        assert_eq!(spec.or_seed(3).seed, Some(9));
+        assert_eq!(OptimSpec::parse("cs-adam").unwrap().or_seed(3).seed, Some(3));
+        assert!(!spec.requires_runtime());
+        assert!(OptimSpec::parse("xla-cs-adam").unwrap().requires_runtime());
+    }
+}

@@ -10,5 +10,5 @@ pub mod xla_opt;
 
 pub use engine::{LmEngine, RustLmEngine, XlaLmEngine};
 pub use sampler::CandidateSampler;
-pub use trainer::{LmTrainer, OptChoice, TrainReport, TrainerOptions};
+pub use trainer::{LmTrainer, TrainReport, TrainerOptions};
 pub use xla_opt::XlaRowOptimizer;

@@ -3,81 +3,45 @@
 
 use anyhow::Result;
 
-use crate::config::{Hyper, LmPreset};
+use crate::config::LmPreset;
 use crate::data::batcher::BatchPlan;
 use crate::data::prefetch::PrefetchedBatches;
 use crate::metrics::MemoryLedger;
 use crate::model::linalg::clip_global_norm;
 use crate::model::LmGrads;
-use crate::optim::{
-    CmsAdagrad, CmsAdamV, CsAdam, CsMomentum, DenseAdagrad, DenseAdam, DenseMomentum,
-    FlatAdagrad, FlatAdam, FlatMomentum, FlatOptimizer, FlatSgd, LrSchedule, NmfAdagrad,
-    NmfAdamV, NmfMomentum, OptimKind, RowOptimizer, SparseLayer,
-};
-use crate::sketch::CleaningPolicy;
+use crate::optim::{FlatOptimizer, LrSchedule, OptimSpec, RowShape, SparseLayer};
 use crate::train::engine::LmEngine;
 use crate::train::sampler::CandidateSampler;
-use crate::train::xla_opt::{XlaOptKind, XlaRowOptimizer};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
-/// How a sparse layer's auxiliary variables are stored.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum OptChoice {
-    /// Full-size dense state (paper baseline).
-    Dense,
-    /// Count-sketch tensors stepped in Rust (width from the preset).
-    Sketch,
-    /// "CS-V": dense 1st moment, CMS-compressed 2nd moment (Adam only).
-    SketchV,
-    /// Count-sketch tensors stepped by the AOT Pallas artifact.
-    SketchXla,
-    /// NMF rank-1 factors (LR-NMF comparator).
-    LowRank,
-}
-
-impl OptChoice {
-    pub fn parse(s: &str) -> Option<OptChoice> {
-        Some(match s {
-            "dense" => OptChoice::Dense,
-            "sketch" => OptChoice::Sketch,
-            "sketch-v" => OptChoice::SketchV,
-            "sketch-xla" => OptChoice::SketchXla,
-            "lowrank" | "lr-nmf" => OptChoice::LowRank,
-            _ => return None,
-        })
-    }
-}
-
-/// Trainer configuration.
+/// Trainer configuration. Per-layer optimizer selection is a pair of
+/// [`OptimSpec`]s — rule, compression, sketch geometry, cleaning and
+/// hyper-parameters all live inside the specs.
 #[derive(Clone, Debug)]
 pub struct TrainerOptions {
     pub preset: LmPreset,
-    pub optim: OptimKind,
-    /// Embedding-layer aux compression.
-    pub emb_opt: OptChoice,
-    /// Softmax-layer aux compression.
-    pub sm_opt: OptChoice,
+    /// Embedding-layer optimizer spec.
+    pub emb: OptimSpec,
+    /// Softmax-layer optimizer spec. The dense trunk and the softmax bias
+    /// follow the embedding spec's rule (dense state, as in the paper).
+    pub sm: OptimSpec,
     pub schedule: LrSchedule,
     /// Global gradient-norm clip (0 = off).
     pub clip: f32,
-    pub cleaning: CleaningPolicy,
     pub seed: u64,
-    pub hyper: Hyper,
 }
 
 impl TrainerOptions {
-    pub fn new(preset: LmPreset, optim: OptimKind, lr: f32) -> TrainerOptions {
+    /// Options applying `spec` to both sparse layers with a constant lr.
+    pub fn new(preset: LmPreset, spec: OptimSpec, lr: f32) -> TrainerOptions {
         TrainerOptions {
             preset,
-            optim,
-            emb_opt: OptChoice::Dense,
-            sm_opt: OptChoice::Dense,
+            emb: spec,
+            sm: spec,
             schedule: LrSchedule::constant(lr),
             clip: 1.0,
-            cleaning: CleaningPolicy::none(),
             seed: 42,
-            hyper: Hyper::DEFAULT,
         }
     }
 }
@@ -91,94 +55,6 @@ pub struct TrainReport {
     pub secs: f64,
     /// Mean loss at regular intervals (for loss curves).
     pub curve: Vec<(usize, f64)>,
-}
-
-/// Build a row optimizer for a sparse layer.
-#[allow(clippy::too_many_arguments)]
-pub fn make_row_opt(
-    choice: OptChoice,
-    optim: OptimKind,
-    n: usize,
-    d: usize,
-    v: usize,
-    w: usize,
-    k_slots: usize,
-    hyper: &Hyper,
-    cleaning: CleaningPolicy,
-    seed: u64,
-    rt: Option<&crate::runtime::Runtime>,
-) -> Result<Box<dyn RowOptimizer>> {
-    let h = hyper;
-    Ok(match (choice, optim) {
-        (OptChoice::Dense, OptimKind::Adam) => Box::new(DenseAdam::new(n, d, h.adam_beta1, h.adam_beta2, h.adam_eps)),
-        (OptChoice::Dense, OptimKind::AdamV) => Box::new(DenseAdam::new(n, d, 0.0, h.adam_beta2, h.adam_eps)),
-        (OptChoice::Dense, OptimKind::Momentum) => Box::new(DenseMomentum::new(n, d, h.momentum_gamma)),
-        (OptChoice::Dense, OptimKind::Adagrad) => Box::new(DenseAdagrad::new(n, d, h.adagrad_eps)),
-        (OptChoice::Dense, OptimKind::Sgd) => Box::new(NoState { d }),
-        (OptChoice::Sketch, OptimKind::Adam) => {
-            Box::new(CsAdam::new(v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps).with_cleaning(cleaning))
-        }
-        (OptChoice::Sketch, OptimKind::AdamV) => {
-            Box::new(CmsAdamV::new(v, w, d, seed, h.adam_beta2, h.adam_eps).with_cleaning(cleaning))
-        }
-        (OptChoice::SketchV, OptimKind::Adam | OptimKind::AdamV) => Box::new(
-            crate::optim::HybridAdamV::new(n, v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
-                .with_cleaning(cleaning),
-        ),
-        (OptChoice::Sketch, OptimKind::Momentum) => Box::new(CsMomentum::new(v, w, d, seed, h.momentum_gamma)),
-        (OptChoice::Sketch, OptimKind::Adagrad) => {
-            Box::new(CmsAdagrad::new(v, w, d, seed, h.adagrad_eps).with_cleaning(cleaning))
-        }
-        (OptChoice::SketchXla, kind) => {
-            let rt = rt.ok_or_else(|| anyhow::anyhow!("sketch-xla requires a runtime"))?;
-            let xk = match kind {
-                OptimKind::Adam => XlaOptKind::CsAdam,
-                OptimKind::AdamV => XlaOptKind::CmsAdamV,
-                OptimKind::Momentum => XlaOptKind::CsMomentum,
-                OptimKind::Adagrad => XlaOptKind::CmsAdagrad,
-                OptimKind::Sgd => anyhow::bail!("sgd has no sketched variant"),
-            };
-            Box::new(XlaRowOptimizer::new(rt, xk, k_slots, d, v, w, seed)?)
-        }
-        (OptChoice::LowRank, OptimKind::Adam | OptimKind::AdamV) => {
-            Box::new(NmfAdamV::new(n, d, h.adam_beta1, h.adam_beta2, h.adam_eps))
-        }
-        (OptChoice::LowRank, OptimKind::Momentum) => Box::new(NmfMomentum::new(n, d, h.momentum_gamma)),
-        (OptChoice::LowRank, OptimKind::Adagrad) => Box::new(NmfAdagrad::new(n, d, h.adagrad_eps)),
-        (choice, kind) => anyhow::bail!("unsupported optimizer combination {choice:?}/{kind:?}"),
-    })
-}
-
-/// SGD for sparse rows (no auxiliary state).
-struct NoState {
-    d: usize,
-}
-
-impl RowOptimizer for NoState {
-    fn step_rows(&mut self, _ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t: usize) {
-        for (p, &g) in rows.iter_mut().zip(grads) {
-            *p -= lr * g;
-        }
-        let _ = self.d;
-    }
-
-    fn memory_bytes(&self) -> usize {
-        0
-    }
-
-    fn name(&self) -> &'static str {
-        "sgd"
-    }
-}
-
-fn make_flat_opt(optim: OptimKind, p: usize, h: &Hyper) -> Box<dyn FlatOptimizer> {
-    match optim {
-        OptimKind::Adam => Box::new(FlatAdam::new(p, h.adam_beta1, h.adam_beta2, h.adam_eps)),
-        OptimKind::AdamV => Box::new(FlatAdam::new(p, 0.0, h.adam_beta2, h.adam_eps)),
-        OptimKind::Momentum => Box::new(FlatMomentum::new(p, h.momentum_gamma)),
-        OptimKind::Adagrad => Box::new(FlatAdagrad::new(p, h.adagrad_eps)),
-        OptimKind::Sgd => Box::new(FlatSgd),
-    }
 }
 
 /// The trainer.
@@ -208,7 +84,7 @@ pub struct LmTrainer {
 
 impl LmTrainer {
     /// Build a trainer. `rt` is required for `--engine xla` /
-    /// `sketch-xla` optimizers.
+    /// `xla-cs-*` optimizers.
     pub fn new(
         opts: TrainerOptions,
         engine: Box<dyn LmEngine>,
@@ -216,23 +92,18 @@ impl LmTrainer {
     ) -> Result<LmTrainer> {
         let p = opts.preset;
         let mut rng = Rng::new(opts.seed);
-        let emb_opt = make_row_opt(
-            opts.emb_opt, opts.optim, p.vocab, p.de, p.v, p.w_emb, p.k, &opts.hyper,
-            opts.cleaning, opts.hyper.hash_seed, rt,
-        )?;
-        let sm_opt = make_row_opt(
-            opts.sm_opt, opts.optim, p.vocab, p.de, p.v, p.w_sm, p.nc, &opts.hyper,
-            opts.cleaning, opts.hyper.hash_seed ^ 0xBEEF, rt,
-        )?;
+        // preset geometry (spec v=/w=/seed= overrides win when present);
+        // the two layers hash with decorrelated default seeds
+        let emb_shape = RowShape::new(p.vocab, p.de).with_sketch(p.v, p.w_emb).with_slots(p.k);
+        let sm_shape = RowShape::new(p.vocab, p.de).with_sketch(p.v, p.w_sm).with_slots(p.nc);
+        let emb_opt = opts.emb.or_seed(opts.emb.hyper.hash_seed).build_row(&emb_shape, rt)?;
+        let sm_opt = opts.sm.or_seed(opts.sm.hyper.hash_seed ^ 0xBEEF).build_row(&sm_shape, rt)?;
         let emb = SparseLayer::new(p.vocab, p.de, 0.1, emb_opt, &mut rng);
         let sm = SparseLayer::new(p.vocab, p.de, 0.1, sm_opt, &mut rng);
-        let bias_opt = make_row_opt(
-            OptChoice::Dense, opts.optim, p.vocab, 1, p.v, p.w_sm, p.nc, &opts.hyper,
-            CleaningPolicy::none(), 0, None,
-        )?;
+        let bias_opt = opts.emb.as_dense().build_row(&RowShape::new(p.vocab, 1), None)?;
         let mut sm_bias = SparseLayer::new(p.vocab, 1, 0.0, bias_opt, &mut rng);
         sm_bias.params.iter_mut().for_each(|x| *x = 0.0);
-        let flat_opt = make_flat_opt(opts.optim, engine.flat_len(), &opts.hyper);
+        let flat_opt = opts.emb.build_flat(engine.flat_len());
         let sampler = CandidateSampler::new(p.vocab, p.nc, opts.seed ^ 0xCAFE);
         Ok(LmTrainer {
             opts,
@@ -465,11 +336,9 @@ mod tests {
     use crate::data::corpus::SyntheticCorpus;
     use crate::train::engine::RustLmEngine;
 
-    fn tiny_trainer(emb_opt: OptChoice, optim: OptimKind) -> LmTrainer {
+    fn tiny_trainer(spec: &str) -> LmTrainer {
         let preset = lm_preset("tiny").unwrap();
-        let mut opts = TrainerOptions::new(preset, optim, 0.01);
-        opts.emb_opt = emb_opt;
-        opts.sm_opt = emb_opt;
+        let opts = TrainerOptions::new(preset, OptimSpec::parse(spec).unwrap(), 0.01);
         let mut rng = Rng::new(7);
         let engine = Box::new(RustLmEngine::new(preset, &mut rng));
         LmTrainer::new(opts, engine, None).unwrap()
@@ -479,7 +348,7 @@ mod tests {
     fn dense_adam_learns_tiny_corpus() {
         let corpus = SyntheticCorpus::generate(512, 20_000, 1.05, 0.6, 1);
         let (train, valid, _) = corpus.split(0.1, 0.05);
-        let mut tr = tiny_trainer(OptChoice::Dense, OptimKind::Adam);
+        let mut tr = tiny_trainer("adam");
         let r1 = tr.train_epoch(train, 60);
         let r2 = tr.train_epoch(train, 60);
         assert!(r2.mean_loss < r1.mean_loss, "{} -> {}", r1.mean_loss, r2.mean_loss);
@@ -492,8 +361,8 @@ mod tests {
     fn sketch_adam_learns_comparably() {
         let corpus = SyntheticCorpus::generate(512, 20_000, 1.05, 0.6, 1);
         let (train, _, _) = corpus.split(0.1, 0.05);
-        let mut dense = tiny_trainer(OptChoice::Dense, OptimKind::Adam);
-        let mut sketch = tiny_trainer(OptChoice::Sketch, OptimKind::Adam);
+        let mut dense = tiny_trainer("adam");
+        let mut sketch = tiny_trainer("cs-adam");
         let rd = dense.train_epoch(train, 80);
         let rs = sketch.train_epoch(train, 80);
         // within 15% mean loss of the dense baseline after one pass
@@ -511,10 +380,10 @@ mod tests {
     fn momentum_and_adagrad_paths_run() {
         let corpus = SyntheticCorpus::generate(512, 8_000, 1.05, 0.5, 2);
         let (train, _, _) = corpus.split(0.1, 0.05);
-        for optim in [OptimKind::Momentum, OptimKind::Adagrad, OptimKind::AdamV] {
-            let mut tr = tiny_trainer(OptChoice::Sketch, optim);
+        for spec in ["cs-momentum", "cs-adagrad", "cs-adam-v"] {
+            let mut tr = tiny_trainer(spec);
             let r = tr.train_epoch(train, 20);
-            assert!(r.mean_loss.is_finite(), "{optim:?}");
+            assert!(r.mean_loss.is_finite(), "{spec}");
         }
     }
 
@@ -522,18 +391,28 @@ mod tests {
     fn lowrank_path_runs() {
         let corpus = SyntheticCorpus::generate(512, 8_000, 1.05, 0.5, 3);
         let (train, _, _) = corpus.split(0.1, 0.05);
-        let mut tr = tiny_trainer(OptChoice::LowRank, OptimKind::Adagrad);
+        let mut tr = tiny_trainer("nmf-adagrad");
         let r = tr.train_epoch(train, 20);
         assert!(r.mean_loss.is_finite());
     }
 
     #[test]
     fn memory_ledger_shows_sketch_savings() {
-        let dense = tiny_trainer(OptChoice::Dense, OptimKind::Adam);
-        let sketch = tiny_trainer(OptChoice::Sketch, OptimKind::Adam);
+        let dense = tiny_trainer("adam");
+        let sketch = tiny_trainer("cs-adam");
         let md = dense.memory_ledger();
         let ms = sketch.memory_ledger();
         assert!(ms.total("optimizer") < md.total("optimizer"));
         assert_eq!(ms.total("params"), md.total("params"));
+    }
+
+    #[test]
+    fn spec_geometry_overrides_preset_defaults() {
+        // tiny preset default emb width is 103; a w= override must shrink
+        // the sketch state accordingly (2 sketches × v·w·d floats)
+        let small = tiny_trainer("cs-adam@w=8");
+        assert_eq!(small.emb.opt.memory_bytes(), 2 * 3 * 8 * 32 * 4);
+        let preset_default = tiny_trainer("cs-adam");
+        assert_eq!(preset_default.emb.opt.memory_bytes(), 2 * 3 * 103 * 32 * 4);
     }
 }

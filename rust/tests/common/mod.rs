@@ -1,0 +1,22 @@
+//! Shared helpers for the integration suites.
+
+/// Open the artifact runtime, or return `None` when the XLA leg is
+/// legitimately absent in this environment — the vendored stub `xla`
+/// crate, or no `make artifacts` output (missing `manifest.json`). Any
+/// *other* `Runtime::open` failure (manifest parse regression, real
+/// backend breakage) panics so the signal is not lost behind a skip.
+pub fn runtime_or_skip() -> Option<csopt::runtime::Runtime> {
+    let dir = std::env::var("CSOPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match csopt::runtime::Runtime::open(dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("vendored stub") || msg.contains("manifest.json"),
+                "Runtime::open failed for an unexpected reason: {msg}"
+            );
+            eprintln!("skipping test: XLA leg unavailable ({msg})");
+            None
+        }
+    }
+}

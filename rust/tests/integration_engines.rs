@@ -8,15 +8,13 @@ use csopt::model::LmGrads;
 use csopt::train::engine::{LmEngine, RustLmEngine, XlaLmEngine};
 use csopt::util::rng::Rng;
 
-fn runtime() -> csopt::runtime::Runtime {
-    let dir = std::env::var("CSOPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    csopt::runtime::Runtime::open(dir).expect("artifacts missing — run `make artifacts`")
-}
+mod common;
+use common::runtime_or_skip as runtime;
 
 #[test]
 fn rust_and_xla_engines_agree_on_loss_and_grads() {
     let preset = lm_preset("tiny").unwrap();
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut rng = Rng::new(0xAB);
     let mut rust_eng = RustLmEngine::new(preset, &mut rng);
     let mut rng2 = Rng::new(0xAB);
@@ -80,17 +78,18 @@ fn engines_agree_over_short_training_run() {
     // Train with both engines on the same stream; losses must stay close
     // (compounding drift would expose any systematic mismatch).
     use csopt::exp::common::corpus_for;
-    use csopt::optim::OptimKind;
-    use csopt::train::trainer::{LmTrainer, OptChoice, TrainerOptions};
+    use csopt::optim::OptimSpec;
+    use csopt::train::trainer::{LmTrainer, TrainerOptions};
 
     let preset = lm_preset("tiny").unwrap();
     let corpus = corpus_for(&preset, 24, 0x77);
     let (train, _, _) = corpus.split(0.05, 0.05);
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
 
     let mk = |engine: &str| -> LmTrainer {
-        let mut opts = TrainerOptions::new(preset, OptimKind::Adam, 1e-3);
-        opts.emb_opt = OptChoice::Sketch;
+        let emb = OptimSpec::parse("cs-adam").unwrap();
+        let mut opts = TrainerOptions::new(preset, emb, 1e-3);
+        opts.sm = emb.as_dense();
         opts.seed = 9;
         let mut rng = Rng::new(9);
         let eng: Box<dyn LmEngine> = if engine == "rust" {

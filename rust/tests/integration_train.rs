@@ -4,16 +4,15 @@
 use csopt::config::lm_preset;
 use csopt::data::corpus::SyntheticCorpus;
 use csopt::exp::common::corpus_for;
-use csopt::optim::OptimKind;
+use csopt::optim::OptimSpec;
 use csopt::train::engine::RustLmEngine;
-use csopt::train::trainer::{LmTrainer, OptChoice, TrainerOptions};
+use csopt::train::trainer::{LmTrainer, TrainerOptions};
 use csopt::util::rng::Rng;
 
-fn trainer(emb_opt: OptChoice, sm_opt: OptChoice, optim: OptimKind, lr: f32, seed: u64) -> LmTrainer {
+fn trainer(emb: &str, sm: &str, lr: f32, seed: u64) -> LmTrainer {
     let preset = lm_preset("tiny").unwrap();
-    let mut opts = TrainerOptions::new(preset, optim, lr);
-    opts.emb_opt = emb_opt;
-    opts.sm_opt = sm_opt;
+    let mut opts = TrainerOptions::new(preset, OptimSpec::parse(emb).unwrap(), lr);
+    opts.sm = OptimSpec::parse(sm).unwrap();
     opts.seed = seed;
     let mut rng = Rng::new(seed);
     LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap()
@@ -24,23 +23,24 @@ fn every_optimizer_variant_reduces_loss() {
     let corpus = SyntheticCorpus::generate(512, 30_000, 1.05, 0.6, 3);
     let (train, _, _) = corpus.split(0.05, 0.05);
     let cases = [
-        (OptChoice::Dense, OptimKind::Adam, 1e-3),
-        (OptChoice::Sketch, OptimKind::Adam, 1e-3),
-        (OptChoice::SketchV, OptimKind::Adam, 1e-3),
-        (OptChoice::LowRank, OptimKind::Adam, 1e-3),
-        (OptChoice::Dense, OptimKind::Momentum, 0.2),
-        (OptChoice::Sketch, OptimKind::Momentum, 0.2),
-        (OptChoice::Dense, OptimKind::Adagrad, 0.1),
-        (OptChoice::Sketch, OptimKind::Adagrad, 0.1),
-        (OptChoice::Sketch, OptimKind::AdamV, 1e-3),
+        ("adam", 1e-3f32),
+        ("cs-adam", 1e-3),
+        ("csv-adam", 1e-3),
+        ("nmf-adam", 1e-3),
+        ("momentum", 0.2),
+        ("cs-momentum", 0.2),
+        ("adagrad", 0.1),
+        ("cs-adagrad", 0.1),
+        ("cs-adam-v", 1e-3),
     ];
-    for (choice, optim, lr) in cases {
-        let mut tr = trainer(choice, OptChoice::Dense, optim, lr, 1);
+    for (emb, lr) in cases {
+        let sm = OptimSpec::parse(emb).unwrap().as_dense().to_string();
+        let mut tr = trainer(emb, &sm, lr, 1);
         let first = tr.train_epoch(train, 30).mean_loss;
         let second = tr.train_epoch(train, 30).mean_loss;
         assert!(
             second < first,
-            "{choice:?}/{optim:?}: loss did not decrease ({first} -> {second})"
+            "{emb}: loss did not decrease ({first} -> {second})"
         );
     }
 }
@@ -49,8 +49,8 @@ fn every_optimizer_variant_reduces_loss() {
 fn sketch_uses_less_memory_dense_same_quality_tiny() {
     let corpus = SyntheticCorpus::generate(512, 40_000, 1.05, 0.6, 5);
     let (train, _, test) = corpus.split(0.05, 0.08);
-    let mut dense = trainer(OptChoice::Dense, OptChoice::Dense, OptimKind::Adam, 1e-3, 2);
-    let mut sketch = trainer(OptChoice::Sketch, OptChoice::Dense, OptimKind::Adam, 1e-3, 2);
+    let mut dense = trainer("adam", "adam", 1e-3, 2);
+    let mut sketch = trainer("cs-adam", "adam", 1e-3, 2);
     for _ in 0..2 {
         dense.train_epoch(train, 100);
         sketch.train_epoch(train, 100);
@@ -67,7 +67,7 @@ fn sketch_uses_less_memory_dense_same_quality_tiny() {
 fn recurrent_state_carries_across_windows() {
     let corpus = SyntheticCorpus::generate(512, 10_000, 1.05, 0.9, 6);
     let (train, _, _) = corpus.split(0.05, 0.05);
-    let mut tr = trainer(OptChoice::Dense, OptChoice::Dense, OptimKind::Adam, 1e-3, 3);
+    let mut tr = trainer("adam", "adam", 1e-3, 3);
     // strongly sequential corpus (q=0.9): training should push loss well
     // below the unigram entropy, which is only possible with context
     let unigram = corpus.unigram_entropy();
@@ -86,7 +86,7 @@ fn checkpoint_roundtrip_preserves_training_state() {
     use csopt::train::checkpoint::Checkpoint;
     let corpus = SyntheticCorpus::generate(512, 8_000, 1.05, 0.5, 7);
     let (train, _, test) = corpus.split(0.05, 0.08);
-    let mut tr = trainer(OptChoice::Dense, OptChoice::Dense, OptimKind::Adam, 1e-3, 4);
+    let mut tr = trainer("adam", "adam", 1e-3, 4);
     tr.train_epoch(train, 20);
     let ppl_before = tr.eval_ppl(test, 4);
 
@@ -103,7 +103,7 @@ fn checkpoint_roundtrip_preserves_training_state() {
 
     // restore into a fresh trainer
     let back = Checkpoint::load(&path).unwrap();
-    let mut tr2 = trainer(OptChoice::Dense, OptChoice::Dense, OptimKind::Adam, 1e-3, 999);
+    let mut tr2 = trainer("adam", "adam", 1e-3, 999);
     tr2.emb.params.copy_from_slice(back.blob("emb").unwrap());
     tr2.sm.params.copy_from_slice(back.blob("sm").unwrap());
     tr2.sm_bias.params.copy_from_slice(back.blob("smb").unwrap());
@@ -120,7 +120,7 @@ fn checkpoint_roundtrip_preserves_training_state() {
 fn plateau_schedule_reduces_lr_during_training() {
     use csopt::optim::LrSchedule;
     let preset = lm_preset("tiny").unwrap();
-    let mut opts = TrainerOptions::new(preset, OptimKind::Momentum, 0.0);
+    let mut opts = TrainerOptions::new(preset, OptimSpec::parse("momentum").unwrap(), 0.0);
     opts.schedule = LrSchedule::plateau(1.0, 0.25, 1);
     let mut rng = Rng::new(11);
     let mut tr = LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap();
@@ -134,13 +134,12 @@ fn plateau_schedule_reduces_lr_during_training() {
 
 #[test]
 fn cleaning_policy_threads_through_trainer() {
-    use csopt::sketch::CleaningPolicy;
     let preset = lm_preset("tiny").unwrap();
     let corpus = corpus_for(&preset, 16, 9);
     let (train, _, _) = corpus.split(0.05, 0.05);
-    let mut opts = TrainerOptions::new(preset, OptimKind::Adagrad, 0.1);
-    opts.emb_opt = OptChoice::Sketch;
-    opts.cleaning = CleaningPolicy { every: 5, alpha: 0.5 };
+    let mut opts =
+        TrainerOptions::new(preset, OptimSpec::parse("cs-adagrad@clean=0.5/5").unwrap(), 0.1);
+    opts.sm = OptimSpec::parse("adagrad").unwrap();
     let mut rng = Rng::new(12);
     let mut tr = LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap();
     let r = tr.train_epoch(train, 12);

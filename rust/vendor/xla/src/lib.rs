@@ -1,0 +1,144 @@
+//! Stub of the `xla-rs` PJRT API surface that `csopt::runtime` compiles
+//! against.
+//!
+//! The real crate links the PJRT C API and is unavailable in this offline
+//! environment, so this stub keeps the whole crate buildable while making
+//! every execution path fail fast with an explanatory error:
+//! [`PjRtClient::cpu`] returns `Err`, so `csopt::runtime::Runtime::open`
+//! fails before any artifact is touched and callers fall back to the
+//! pure-Rust engine/optimizers. To enable `--engine xla` and the
+//! `xla-cs-*` optimizers, replace this directory with the real `xla`
+//! crate (same API) and rebuild.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: every runtime entry point produces one of these.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error(
+        "XLA/PJRT backend unavailable: csopt was built with the vendored stub \
+         `xla` crate (rust/vendor/xla); swap in the real xla crate to enable it"
+            .to_string(),
+    )
+}
+
+/// Element types the typed literal accessors accept.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u64 {}
+
+/// Host tensor handle (stub: carries no data).
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal
+    }
+
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    pub fn copy_raw_to<T: NativeType>(&self, _dst: &mut [T]) -> Result<()> {
+        Err(unavailable())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer returned by an execution (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// A computation ready for compilation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable (stub: cannot be constructed through the public API).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("vendored stub"));
+    }
+}
