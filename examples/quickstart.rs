@@ -12,6 +12,7 @@
 //! | `adam`                 | dense Adam baseline (also `momentum`, `adagrad`, `adam-v`, `sgd`) |
 //! | `cs-adam`              | both Adam moments in count-sketches (Alg. 2/4)  |
 //! | `cs-adam@v=3,w=4096`   | … with explicit sketch depth/width              |
+//! | `cs-adam@shard=4`      | … sketch kernels on 4 parallel shards (bit-identical results) |
 //! | `cs-momentum`          | signed momentum buffer in a count-sketch        |
 //! | `cs-adagrad@clean=0.5/1000` | count-min accumulator, cleaned every 1000 steps |
 //! | `cs-adam-v`            | Adam-V: β₁=0, CMS 2nd moment only               |

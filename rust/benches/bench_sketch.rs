@@ -1,5 +1,7 @@
-//! Hot-path microbenches: count-sketch UPDATE/QUERY and the fused
-//! optimizer steps, at paper-like shapes. Feeds EXPERIMENTS.md §Perf.
+//! Hot-path microbenches: count-sketch UPDATE/QUERY (rehash vs planned),
+//! the fused optimizer steps and their shard scaling, at paper-like
+//! shapes. Feeds the DESIGN.md §Perf ledger (`results/bench.csv` +
+//! `results/bench.json`).
 
 use csopt::optim::{OptimSpec, RowOptimizer, RowShape};
 use csopt::sketch::{CountMinSketch, CountSketch};
@@ -29,6 +31,16 @@ fn main() {
             cs.query(&ids, &mut out);
             black_box(&out);
         });
+        // planned counterparts: hash once, replay (DESIGN.md §2)
+        let plan = cs.plan(&ids);
+        b.bench(&format!("cs_update_planned/k{k}.d{d}.w{w}"), || {
+            cs.update_with(&plan, &grads);
+            black_box(&cs);
+        });
+        b.bench(&format!("cs_query_planned/k{k}.d{d}.w{w}"), || {
+            cs.query_with(&plan, &mut out);
+            black_box(&out);
+        });
         let mut cms = CountMinSketch::new(3, w, d, 7);
         b.bench(&format!("cms_update/k{k}.d{d}.w{w}"), || {
             cms.update(&ids, &grads);
@@ -37,6 +49,11 @@ fn main() {
         b.bench(&format!("cms_query/k{k}.d{d}.w{w}"), || {
             cms.query(&ids, &mut out);
             black_box(&out);
+        });
+        let plan = cms.plan(&ids);
+        b.bench(&format!("cms_update_planned/k{k}.d{d}.w{w}"), || {
+            cms.update_with(&plan, &grads);
+            black_box(&cms);
         });
     }
 
@@ -50,13 +67,57 @@ fn main() {
         OptimSpec::parse(s).unwrap().build_row(&shape, None).unwrap()
     };
 
-    let mut cs_adam = build("cs-adam@seed=7");
-    let mut t = 0usize;
-    b.bench("step/cs_adam.k1152.d256", || {
-        t += 1;
-        cs_adam.step_rows(&ids, &mut rows, &grads, 1e-3, t);
-        black_box(&rows);
-    });
+    // rehash baseline: the same QUERY → Δ → UPDATE → re-QUERY sequence as
+    // cs-adam's step, but through the id-based entry points, i.e. six hash
+    // passes per step instead of one (the pre-plan execution profile)
+    {
+        let mut sk_m = CountSketch::new(3, w, d, 7);
+        let mut sk_v = CountMinSketch::new(3, w, d, 7);
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let mut est_m = vec![0.0f32; k * d];
+        let mut est_v = vec![0.0f32; k * d];
+        let mut delta = vec![0.0f32; k * d];
+        let mut t = 0usize;
+        b.bench("step/cs_adam_rehash.k1152.d256", || {
+            t += 1;
+            sk_m.query(&ids, &mut est_m);
+            for i in 0..k * d {
+                delta[i] = (1.0 - b1) * (grads[i] - est_m[i]);
+            }
+            sk_m.update(&ids, &delta);
+            sk_m.query(&ids, &mut est_m);
+            sk_v.query(&ids, &mut est_v);
+            for i in 0..k * d {
+                delta[i] = (1.0 - b2) * (grads[i] * grads[i] - est_v[i]);
+            }
+            sk_v.update(&ids, &delta);
+            sk_v.query(&ids, &mut est_v);
+            let bc1 = 1.0 - b1.powi(t as i32);
+            let bc2 = 1.0 - b2.powi(t as i32);
+            for i in 0..k * d {
+                let m_hat = est_m[i] / bc1;
+                let v_hat = est_v[i].max(0.0) / bc2;
+                rows[i] -= 1e-3 * m_hat / (v_hat.sqrt() + eps);
+            }
+            black_box(&rows);
+        });
+    }
+
+    // planned single-threaded step (must beat the rehash row above), then
+    // shard scaling at the same shape (DESIGN.md §5)
+    for spec in ["cs-adam@seed=7", "cs-adam@seed=7,shard=2", "cs-adam@seed=7,shard=4"] {
+        let mut opt = build(spec);
+        let label = match OptimSpec::parse(spec).unwrap().shards {
+            None => "step/cs_adam.k1152.d256".to_string(),
+            Some(s) => format!("step/cs_adam.k1152.d256.shard{s}"),
+        };
+        let mut t = 0usize;
+        b.bench(&label, || {
+            t += 1;
+            opt.step_rows(&ids, &mut rows, &grads, 1e-3, t);
+            black_box(&rows);
+        });
+    }
 
     let mut dense_adam = build("adam");
     let mut t = 0usize;

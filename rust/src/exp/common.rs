@@ -24,6 +24,10 @@ pub fn corpus_for(p: &LmPreset, min_windows: usize, seed: u64) -> SyntheticCorpu
 
 /// Build a trainer for the given per-layer optimizer specs (see
 /// [`OptimSpec::parse`] for the string grammar the drivers use).
+///
+/// `--shards N` applies a default shard count to every sketched layer
+/// spec that does not carry its own `shard=` key (dense/low-rank/AOT
+/// specs are left untouched; see [`OptimSpec::or_shards`]).
 pub fn build_trainer(
     preset_name: &str,
     emb: OptimSpec,
@@ -32,6 +36,8 @@ pub fn build_trainer(
     args: &Args,
 ) -> Result<LmTrainer> {
     let preset = lm_preset(preset_name)?;
+    let shards = args.get_parse("shards", 0usize)?;
+    let (emb, sm) = (emb.or_shards(shards), sm.or_shards(shards));
     let mut opts = TrainerOptions::new(preset, emb, lr);
     opts.sm = sm;
     opts.clip = args.get_parse("clip", 1.0f32)?;

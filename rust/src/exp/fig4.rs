@@ -16,7 +16,7 @@ use crate::data::prefetch::PrefetchedBatches;
 use crate::exp::common::{build_trainer, corpus_for, out_dir, spec};
 use crate::metrics::CsvWriter;
 use crate::optim::lowrank::{L2Rank1, Rank1Factors};
-use crate::sketch::{CountMinSketch, CountSketch};
+use crate::sketch::{CountMinSketch, CountSketch, SketchPlan};
 use crate::util::cli::Args;
 
 fn l2_err(a: &[f32], b: &[f32]) -> f64 {
@@ -55,6 +55,10 @@ pub fn run(args: &Args) -> Result<()> {
     let pre = PrefetchedBatches::start(train.to_vec(), p.batch, p.bptt, 4);
     let mut step = 0usize;
     let mut delta = vec![0.0f32; 0];
+    // hash-once plans per hash family, rebuilt per batch (the two sketches
+    // are seeded differently here, so they cannot share one plan)
+    let mut m_plan = SketchPlan::new();
+    let mut v_plan = SketchPlan::new();
     let l2_every = args.get_parse("l2-every", 25usize)?;
     while let Some(b) = pre.next() {
         tr.train_step(&b.x, &b.y);
@@ -80,7 +84,8 @@ pub fn run(args: &Args) -> Result<()> {
             }
         }
         m_cs.tensor_mut().scale(gamma);
-        m_cs.update(ids, grads);
+        m_plan.rebuild(m_cs.hasher(), ids);
+        m_cs.update_with(&m_plan, grads);
         m_nmf.track(ids, grads, gamma);
         // ℓ2 rank-1: exact linear update then truncate (expensive; the
         // paper calls it "extremely slow" — we truncate every l2_every
@@ -105,7 +110,8 @@ pub fn run(args: &Args) -> Result<()> {
             let g = grads[i];
             delta[i] = (1.0 - beta2) * g * g;
         }
-        v_cms.update(ids, &delta);
+        v_plan.rebuild(v_cms.hasher(), ids);
+        v_cms.update_with(&v_plan, &delta);
         v_nmf.track(ids, &delta, beta2);
 
         if step % l2_every == 0 {

@@ -83,6 +83,9 @@ pub fn run(args: &Args) -> Result<()> {
     let recall_queries = args.get_parse("recall-queries", 100usize)?;
     let base_batch = args.get_parse("batch", 192usize)?;
     let big_batch = (base_batch as f64 * 3.5) as usize; // paper's 750 → 2600
+    // optional sharded sketch kernels for the CS-V variant (bit-identical
+    // results, so the recall column is unaffected — only s/epoch moves)
+    let shards = args.get_parse("shards", 0usize)?;
 
     let ds = ExtremeDataset::new(classes, din, 24, 1.1, 5);
     // CMS 2nd moment at ~1% of [b_meta, hd] per member (paper: [3,266,1024]
@@ -96,7 +99,7 @@ pub fn run(args: &Args) -> Result<()> {
     )?;
     let cs = run_variant(
         "cs-v",
-        spec(&format!("cs-adam-v@v=3,w={w}")),
+        spec(&format!("cs-adam-v@v=3,w={w}")).or_shards(shards),
         &ds, b_meta, hd, big_batch, samples, epochs, recall_queries,
     )?;
 

@@ -16,8 +16,10 @@
 //!   crates.io access beyond the vendored `xla`/`anyhow`): RNG, JSON,
 //!   CLI parsing, thread pool, timers, a property-testing helper.
 //! * [`sketch`] — the paper's core data structure: Count-Sketch and
-//!   Count-Min-Sketch tensors with batched update/query, periodic cleaning
-//!   (§4) and fold-in-half shrinking (§5).
+//!   Count-Min-Sketch tensors with batched update/query through hash-once
+//!   `SketchPlan`s and an optional sharded parallel execution path
+//!   (DESIGN.md §2/§5), periodic cleaning (paper §4) and fold-in-half
+//!   shrinking (paper §5).
 //! * [`optim`] — dense baselines, the sketched optimizers (Algorithms 2–4)
 //!   and the low-rank comparators (NMF rank-1 / ℓ2 rank-1).
 //! * [`data`] — synthetic Zipf corpora, vocab, BPTT batching, threaded

@@ -26,7 +26,9 @@ pub struct MachOptions {
     /// Output-layer optimizer spec — this is where Dense Adam vs
     /// CMS-Adam-V plugs in. Its `hyper` is the single hyper source for
     /// the whole member (the dense-Adam trunk reuses it); each member
-    /// hashes with `spec seed ⊕ member`.
+    /// hashes with `spec seed ⊕ member`. A `shard=N` key on the spec runs
+    /// each member's sketch kernels across N parallel shards
+    /// (bit-identical results).
     pub out_opt: OptimSpec,
 }
 
@@ -229,5 +231,22 @@ mod tests {
         let ens = MachEnsemble::new(opts).unwrap();
         // CMS 2nd moment only: 3 members × [3, 4, 32] floats
         assert_eq!(ens.optimizer_bytes(), 3 * 3 * 4 * 32 * 4);
+    }
+
+    #[test]
+    fn sharded_output_layer_trains_bit_identically() {
+        let ds = ExtremeDataset::new(200, 64, 8, 1.1, 4);
+        let mut seq_opts = small_opts();
+        seq_opts.out_opt = OptimSpec::parse("cs-adam-v@v=3,w=8").unwrap();
+        let mut par_opts = small_opts();
+        par_opts.out_opt = OptimSpec::parse("cs-adam-v@v=3,w=8,shard=4").unwrap();
+        let mut seq = MachEnsemble::new(seq_opts).unwrap();
+        let mut par = MachEnsemble::new(par_opts).unwrap();
+        for step in 0..5 {
+            let b = ds.sample(32, step);
+            let ls = seq.train_batch(&b.x, &b.y, 32);
+            let lp = par.train_batch(&b.x, &b.y, 32);
+            assert_eq!(ls.to_bits(), lp.to_bits(), "step {step}");
+        }
     }
 }

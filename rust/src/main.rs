@@ -29,7 +29,7 @@ csopt — Compressing Gradient Optimizers via Count-Sketches (ICML 2019)
 USAGE:
   csopt train [--preset tiny|wt2|wt103|lm1b] [--optim SPEC] [--sm-optim SPEC]
               [--engine rust|xla] [--epochs N] [--steps N] [--lr X]
-              [--checkpoint PATH]
+              [--shards N] [--checkpoint PATH]
   csopt exp <fig1|fig2|fig4|fig5|t3|t4|t5|t6|t7|t8|all> [--steps N] [--epochs N]
   csopt sketch-demo [--width W] [--depth V] [--items N]
   csopt runtime-info
@@ -40,8 +40,11 @@ OPTIMIZER SPECS ([comp-]rule[@k=v,...]; rules: sgd momentum adagrad adam adam-v)
   csv-adam[-v]                                   dense 1st + CMS 2nd moment
   xla-cs-*                                       sketch stepped by AOT artifact
   nmf-*                                          NMF rank-1 comparator
-  params: v=depth w=width clean=alpha/every seed=N b1= b2= eps= gamma=
-  example: --optim cs-adam@v=3,w=4096,clean=0.5/1000
+  params: v=depth w=width clean=alpha/every seed=N shard=N b1= b2= eps= gamma=
+  example: --optim cs-adam@v=3,w=4096,clean=0.5/1000,shard=4
+  shard=N runs the sketch update/query kernels across N parallel shards
+  (bit-identical results); --shards N applies it to every sketched layer
+  spec that has no shard= of its own.
   NOTE --optim with a BARE rule keeps its pre-spec CLI meaning: sketched
   embedding state + dense softmax (`--optim adam` == `--optim cs-adam`);
   use `dense-<rule>` for the dense baseline. Bare rules also combine with

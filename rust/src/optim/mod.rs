@@ -9,7 +9,7 @@
 //! × state compression × sketch geometry × cleaning × hypers:
 //!
 //! ```text
-//! <head>[@v=..,w=..,clean=α/C,seed=..,b1=..,b2=..,eps=..,gamma=..]
+//! <head>[@v=..,w=..,clean=α/C,seed=..,shard=..,b1=..,b2=..,eps=..,gamma=..]
 //! ```
 //!
 //! | head | auxiliary state | implementation |
@@ -24,9 +24,15 @@
 //! `OptimSpec::parse("cs-adam@w=4096")` → [`OptimSpec::build_row`] /
 //! [`OptimSpec::build_flat`] produce ready optimizers; invalid
 //! combinations (`cs-sgd`, `csv-momentum`, cleaning on dense state,
-//! `xla-cs-*` without a runtime) return actionable errors. New variants
-//! plug in by extending [`Rule`]/[`Comp`] and the two `build_*` matches —
-//! no trainer, CLI or experiment edits required.
+//! `xla-cs-*` without a runtime, `shard=` on state without sketch
+//! kernels) return actionable errors. New variants plug in by extending
+//! [`Rule`]/[`Comp`] and the two `build_*` matches — no trainer, CLI or
+//! experiment edits required.
+//!
+//! `shard=N` (pure-Rust `cs-`/`csv-` heads only) runs the sketch
+//! update/query kernels of every step across N parallel shards via the
+//! hash-once [`SketchPlan`](crate::sketch::SketchPlan) execution core —
+//! results are bit-identical to sequential execution (DESIGN.md §2/§5).
 //!
 //! # Calling conventions
 //!

@@ -5,8 +5,16 @@
 //! kernels: QUERY → Δ → UPDATE → re-QUERY → apply. The re-query folds
 //! within-batch collisions into the estimates, so all three
 //! implementations agree numerically.
+//!
+//! Every `step_rows` hashes the batch **once** into a [`SketchPlan`]
+//! (DESIGN.md §2) and replays it across the whole
+//! QUERY → UPDATE → re-QUERY sequence — [`CsAdam`] even shares the plan
+//! between its two same-seeded m/v sketches. Sketch work optionally runs
+//! across parallel shards ([`with_shards`](CsAdam::with_shards),
+//! DESIGN.md §5); both optimizations leave every numeric result
+//! bit-identical to the scalar path.
 
-use crate::sketch::{CleaningPolicy, CountMinSketch, CountSketch};
+use crate::sketch::{CleaningPolicy, CountMinSketch, CountSketch, SketchPlan};
 
 use super::RowOptimizer;
 
@@ -17,13 +25,26 @@ pub struct CsMomentum {
     sk: CountSketch,
     gamma: f32,
     // scratch (no allocation on the hot path)
+    plan: SketchPlan,
     est: Vec<f32>,
     delta: Vec<f32>,
 }
 
 impl CsMomentum {
     pub fn new(depth: usize, width: usize, dim: usize, seed: u64, gamma: f32) -> CsMomentum {
-        CsMomentum { sk: CountSketch::new(depth, width, dim, seed), gamma, est: Vec::new(), delta: Vec::new() }
+        CsMomentum {
+            sk: CountSketch::new(depth, width, dim, seed),
+            gamma,
+            plan: SketchPlan::new(),
+            est: Vec::new(),
+            delta: Vec::new(),
+        }
+    }
+
+    /// Shard sketch update/query across `n` parallel shards (1 = off).
+    pub fn with_shards(mut self, n: usize) -> CsMomentum {
+        self.sk.set_shards(n);
+        self
     }
 
     pub fn sketch(&self) -> &CountSketch {
@@ -37,14 +58,15 @@ impl RowOptimizer for CsMomentum {
         let kd = ids.len() * d;
         self.est.resize(kd, 0.0);
         self.delta.resize(kd, 0.0);
+        self.plan.rebuild(self.sk.hasher(), ids);
         // Δ = (γ−1)·m̂ + g
-        self.sk.query(ids, &mut self.est);
+        self.sk.query_with(&self.plan, &mut self.est);
         for i in 0..kd {
             self.delta[i] = (self.gamma - 1.0) * self.est[i] + grads[i];
         }
-        self.sk.update(ids, &self.delta);
+        self.sk.update_with(&self.plan, &self.delta);
         // m_t = post-update query; x ← x − η·m_t
-        self.sk.query(ids, &mut self.est);
+        self.sk.query_with(&self.plan, &mut self.est);
         for i in 0..kd {
             rows[i] -= lr * self.est[i];
         }
@@ -72,6 +94,7 @@ pub struct CmsAdagrad {
     sk: CountMinSketch,
     eps: f32,
     pub cleaning: CleaningPolicy,
+    plan: SketchPlan,
     est: Vec<f32>,
     delta: Vec<f32>,
 }
@@ -82,6 +105,7 @@ impl CmsAdagrad {
             sk: CountMinSketch::new(depth, width, dim, seed),
             eps,
             cleaning: CleaningPolicy::none(),
+            plan: SketchPlan::new(),
             est: Vec::new(),
             delta: Vec::new(),
         }
@@ -89,6 +113,12 @@ impl CmsAdagrad {
 
     pub fn with_cleaning(mut self, policy: CleaningPolicy) -> CmsAdagrad {
         self.cleaning = policy;
+        self
+    }
+
+    /// Shard sketch update/query across `n` parallel shards (1 = off).
+    pub fn with_shards(mut self, n: usize) -> CmsAdagrad {
+        self.sk.set_shards(n);
         self
     }
 
@@ -103,11 +133,12 @@ impl RowOptimizer for CmsAdagrad {
         let kd = ids.len() * d;
         self.est.resize(kd, 0.0);
         self.delta.resize(kd, 0.0);
+        self.plan.rebuild(self.sk.hasher(), ids);
         for i in 0..kd {
             self.delta[i] = grads[i] * grads[i];
         }
-        self.sk.update(ids, &self.delta);
-        self.sk.query(ids, &mut self.est);
+        self.sk.update_with(&self.plan, &self.delta);
+        self.sk.query_with(&self.plan, &mut self.est);
         for i in 0..kd {
             let v = self.est[i].max(0.0);
             rows[i] -= lr * grads[i] / (v.sqrt() + self.eps);
@@ -133,7 +164,9 @@ impl RowOptimizer for CmsAdagrad {
 }
 
 /// Algorithm 4 — Count-Sketch Adam: CS for the 1st moment (signed, median),
-/// CMS for the 2nd moment (min), both in `x += Δ` rewrite form.
+/// CMS for the 2nd moment (min), both in `x += Δ` rewrite form. The two
+/// sketches share one hash family by design (the AOT graphs feed one `idx`
+/// tensor to both), so one plan drives all six sketch passes of a step.
 pub struct CsAdam {
     sk_m: CountSketch,
     sk_v: CountMinSketch,
@@ -141,6 +174,7 @@ pub struct CsAdam {
     beta2: f32,
     eps: f32,
     pub cleaning: CleaningPolicy,
+    plan: SketchPlan,
     est_m: Vec<f32>,
     est_v: Vec<f32>,
     delta: Vec<f32>,
@@ -157,6 +191,7 @@ impl CsAdam {
             beta2,
             eps,
             cleaning: CleaningPolicy::none(),
+            plan: SketchPlan::new(),
             est_m: Vec::new(),
             est_v: Vec::new(),
             delta: Vec::new(),
@@ -165,6 +200,13 @@ impl CsAdam {
 
     pub fn with_cleaning(mut self, policy: CleaningPolicy) -> CsAdam {
         self.cleaning = policy;
+        self
+    }
+
+    /// Shard sketch update/query across `n` parallel shards (1 = off).
+    pub fn with_shards(mut self, n: usize) -> CsAdam {
+        self.sk_m.set_shards(n);
+        self.sk_v.set_shards(n);
         self
     }
 
@@ -184,22 +226,24 @@ impl RowOptimizer for CsAdam {
         self.est_m.resize(kd, 0.0);
         self.est_v.resize(kd, 0.0);
         self.delta.resize(kd, 0.0);
+        // one plan serves both sketches: same depth/width/seed family
+        self.plan.rebuild(self.sk_m.hasher(), ids);
 
         // 1st moment: m += (1−β1)(g − m̂)
-        self.sk_m.query(ids, &mut self.est_m);
+        self.sk_m.query_with(&self.plan, &mut self.est_m);
         for i in 0..kd {
             self.delta[i] = (1.0 - self.beta1) * (grads[i] - self.est_m[i]);
         }
-        self.sk_m.update(ids, &self.delta);
-        self.sk_m.query(ids, &mut self.est_m);
+        self.sk_m.update_with(&self.plan, &self.delta);
+        self.sk_m.query_with(&self.plan, &mut self.est_m);
 
         // 2nd moment: v += (1−β2)(g² − v̂)
-        self.sk_v.query(ids, &mut self.est_v);
+        self.sk_v.query_with(&self.plan, &mut self.est_v);
         for i in 0..kd {
             self.delta[i] = (1.0 - self.beta2) * (grads[i] * grads[i] - self.est_v[i]);
         }
-        self.sk_v.update(ids, &self.delta);
-        self.sk_v.query(ids, &mut self.est_v);
+        self.sk_v.update_with(&self.plan, &self.delta);
+        self.sk_v.query_with(&self.plan, &mut self.est_v);
 
         let bc1 = 1.0 - self.beta1.powi(t as i32);
         let bc2 = 1.0 - self.beta2.powi(t as i32);
@@ -237,6 +281,7 @@ pub struct CmsAdamV {
     beta2: f32,
     eps: f32,
     pub cleaning: CleaningPolicy,
+    plan: SketchPlan,
     est_v: Vec<f32>,
     delta: Vec<f32>,
 }
@@ -248,6 +293,7 @@ impl CmsAdamV {
             beta2,
             eps,
             cleaning: CleaningPolicy::none(),
+            plan: SketchPlan::new(),
             est_v: Vec::new(),
             delta: Vec::new(),
         }
@@ -255,6 +301,12 @@ impl CmsAdamV {
 
     pub fn with_cleaning(mut self, policy: CleaningPolicy) -> CmsAdamV {
         self.cleaning = policy;
+        self
+    }
+
+    /// Shard sketch update/query across `n` parallel shards (1 = off).
+    pub fn with_shards(mut self, n: usize) -> CmsAdamV {
+        self.sk_v.set_shards(n);
         self
     }
 
@@ -269,13 +321,14 @@ impl RowOptimizer for CmsAdamV {
         let kd = ids.len() * d;
         self.est_v.resize(kd, 0.0);
         self.delta.resize(kd, 0.0);
+        self.plan.rebuild(self.sk_v.hasher(), ids);
 
-        self.sk_v.query(ids, &mut self.est_v);
+        self.sk_v.query_with(&self.plan, &mut self.est_v);
         for i in 0..kd {
             self.delta[i] = (1.0 - self.beta2) * (grads[i] * grads[i] - self.est_v[i]);
         }
-        self.sk_v.update(ids, &self.delta);
-        self.sk_v.query(ids, &mut self.est_v);
+        self.sk_v.update_with(&self.plan, &self.delta);
+        self.sk_v.query_with(&self.plan, &mut self.est_v);
 
         let bc2 = 1.0 - self.beta2.powi(t as i32);
         for i in 0..kd {
@@ -313,6 +366,7 @@ pub struct HybridAdamV {
     beta2: f32,
     eps: f32,
     pub cleaning: CleaningPolicy,
+    plan: SketchPlan,
     est_v: Vec<f32>,
     delta: Vec<f32>,
 }
@@ -328,6 +382,7 @@ impl HybridAdamV {
             beta2,
             eps,
             cleaning: CleaningPolicy::none(),
+            plan: SketchPlan::new(),
             est_v: Vec::new(),
             delta: Vec::new(),
         }
@@ -335,6 +390,12 @@ impl HybridAdamV {
 
     pub fn with_cleaning(mut self, policy: CleaningPolicy) -> HybridAdamV {
         self.cleaning = policy;
+        self
+    }
+
+    /// Shard sketch update/query across `n` parallel shards (1 = off).
+    pub fn with_shards(mut self, n: usize) -> HybridAdamV {
+        self.sk_v.set_shards(n);
         self
     }
 }
@@ -345,13 +406,14 @@ impl RowOptimizer for HybridAdamV {
         let kd = ids.len() * d;
         self.est_v.resize(kd, 0.0);
         self.delta.resize(kd, 0.0);
+        self.plan.rebuild(self.sk_v.hasher(), ids);
 
-        self.sk_v.query(ids, &mut self.est_v);
+        self.sk_v.query_with(&self.plan, &mut self.est_v);
         for i in 0..kd {
             self.delta[i] = (1.0 - self.beta2) * (grads[i] * grads[i] - self.est_v[i]);
         }
-        self.sk_v.update(ids, &self.delta);
-        self.sk_v.query(ids, &mut self.est_v);
+        self.sk_v.update_with(&self.plan, &self.delta);
+        self.sk_v.query_with(&self.plan, &mut self.est_v);
 
         let bc1 = 1.0 - self.beta1.powi(t as i32);
         let bc2 = 1.0 - self.beta2.powi(t as i32);
@@ -516,5 +578,51 @@ mod tests {
         opt.step_rows(&ids, &mut rows, &[0.0], 0.0, 2);
         let after = opt.sk.query_one(1)[0];
         assert!((after - 0.5 * before).abs() < 1e-6, "{after} vs {}", 0.5 * before);
+    }
+
+    /// Sharded optimizer steps are bit-identical to sequential ones, for
+    /// every sketched optimizer and several shard counts.
+    #[test]
+    fn sharded_steps_match_sequential_bitwise() {
+        let (v, w, d) = (3usize, 37usize, 5usize);
+        let build_pairs = |shards: usize| -> Vec<(Box<dyn RowOptimizer>, Box<dyn RowOptimizer>)> {
+            vec![
+                (
+                    Box::new(CsMomentum::new(v, w, d, 7, 0.9)),
+                    Box::new(CsMomentum::new(v, w, d, 7, 0.9).with_shards(shards)),
+                ),
+                (
+                    Box::new(CmsAdagrad::new(v, w, d, 7, 1e-10)),
+                    Box::new(CmsAdagrad::new(v, w, d, 7, 1e-10).with_shards(shards)),
+                ),
+                (
+                    Box::new(CsAdam::new(v, w, d, 7, 0.9, 0.999, 1e-8)),
+                    Box::new(CsAdam::new(v, w, d, 7, 0.9, 0.999, 1e-8).with_shards(shards)),
+                ),
+                (
+                    Box::new(CmsAdamV::new(v, w, d, 7, 0.999, 1e-8)),
+                    Box::new(CmsAdamV::new(v, w, d, 7, 0.999, 1e-8).with_shards(shards)),
+                ),
+                (
+                    Box::new(HybridAdamV::new(512, v, w, d, 7, 0.9, 0.999, 1e-8)),
+                    Box::new(HybridAdamV::new(512, v, w, d, 7, 0.9, 0.999, 1e-8).with_shards(shards)),
+                ),
+            ]
+        };
+        for shards in [2usize, 4, 7] {
+            for (mut seq, mut par) in build_pairs(shards) {
+                let mut rng = Rng::new(shards as u64);
+                let mut rows_seq = vec![0.25f32; 16 * d];
+                let mut rows_par = rows_seq.clone();
+                for t in 1..=6 {
+                    let ids: Vec<u64> =
+                        rng.sample_distinct(512, 16).into_iter().map(|x| x as u64).collect();
+                    let g: Vec<f32> = (0..16 * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    seq.step_rows(&ids, &mut rows_seq, &g, 1e-2, t);
+                    par.step_rows(&ids, &mut rows_par, &g, 1e-2, t);
+                    assert_eq!(rows_seq, rows_par, "{} shards={shards} t={t}", seq.name());
+                }
+            }
+        }
     }
 }

@@ -19,7 +19,8 @@
 //!          | "xla-cs-" sketched state stepped by the AOT Pallas artifact
 //!          | "nmf-"    NMF rank-1 factors (Shazeer & Stern comparator)
 //! param   := "v=" depth | "w=" width | "clean=" alpha "/" every
-//!          | "seed=" u64 | "b1=" f32 | "b2=" f32 | "eps=" f32 | "gamma=" f32
+//!          | "seed=" u64 | "shard=" n
+//!          | "b1=" f32 | "b2=" f32 | "eps=" f32 | "gamma=" f32
 //! ```
 //!
 //! `parse` ∘ `Display` is the identity on canonical strings
@@ -30,8 +31,12 @@
 //! to the canonical head. `eps` maps to the eps of the rule it modifies
 //! (`adagrad_eps` for adagrad, `adam_eps` otherwise); hyper fields not
 //! reachable from the rule are not part of the string form. `v=`/`w=`/
-//! `seed=` describe sketch geometry/hashing and are rejected on dense and
-//! rank-1 heads, where they would be silent no-ops.
+//! `seed=`/`shard=` describe sketch geometry/hashing/execution and are
+//! rejected on dense and rank-1 heads, where they would be silent no-ops.
+//! `shard=N` runs the sketch update/query kernels across N parallel
+//! shards (bit-identical to sequential, DESIGN.md §5); it applies to the
+//! pure-Rust `cs-`/`csv-` paths only — the `xla-cs-*` artifacts schedule
+//! their own parallelism.
 //!
 //! Invalid combinations fail with actionable messages — at `parse` time
 //! for CLI/config ergonomics and again in [`OptimSpec::build_row`] for
@@ -191,6 +196,9 @@ pub struct OptimSpec {
     pub cleaning: CleaningPolicy,
     /// Hash-seed override (`seed=`); falls back to `hyper.hash_seed`.
     pub seed: Option<u64>,
+    /// Parallel shard count for sketch update/query (`shard=`); `None`
+    /// and `Some(1)` both run sequentially.
+    pub shards: Option<usize>,
     /// Rule hyper-parameters (`b1=`, `b2=`, `eps=`, `gamma=`).
     pub hyper: Hyper,
 }
@@ -205,6 +213,7 @@ impl OptimSpec {
             w: None,
             cleaning: CleaningPolicy::none(),
             seed: None,
+            shards: None,
             hyper: Hyper::DEFAULT,
         }
     }
@@ -241,6 +250,11 @@ impl OptimSpec {
         self
     }
 
+    pub fn with_shards(mut self, shards: usize) -> OptimSpec {
+        self.shards = Some(shards);
+        self
+    }
+
     pub fn with_hyper(mut self, hyper: Hyper) -> OptimSpec {
         self.hyper = hyper;
         self
@@ -252,9 +266,29 @@ impl OptimSpec {
         self
     }
 
+    /// Set the shard count only if the spec does not already carry one,
+    /// and only where sharding applies (the pure-Rust sketched paths) —
+    /// so a trainer-wide `--shards` default can be applied to any layer
+    /// spec without invalidating dense/low-rank/AOT ones. `shards == 0`
+    /// (the CLI's "flag absent" default) is a no-op, never `Some(0)`.
+    pub fn or_shards(mut self, shards: usize) -> OptimSpec {
+        if shards > 0 && matches!(self.comp, Comp::Sketch | Comp::SketchV) {
+            self.shards.get_or_insert(shards);
+        }
+        self
+    }
+
     /// The dense counterpart: same rule and hypers, no compression state.
     pub fn as_dense(&self) -> OptimSpec {
-        OptimSpec { comp: Comp::Dense, v: None, w: None, cleaning: CleaningPolicy::none(), seed: None, ..*self }
+        OptimSpec {
+            comp: Comp::Dense,
+            v: None,
+            w: None,
+            cleaning: CleaningPolicy::none(),
+            seed: None,
+            shards: None,
+            ..*self
+        }
     }
 
     /// Does building this spec need a PJRT [`Runtime`](crate::runtime::Runtime)?
@@ -290,7 +324,10 @@ impl OptimSpec {
     ///   degenerate geometry (`v=0`/`w=0`), or a cleaning factor outside
     ///   `0 ≤ α < 1`;
     /// * `clean=` on dense/low-rank state, on the signed `cs-momentum`
-    ///   sketch, or on the (cleaning-less) `xla-cs-*` artifacts.
+    ///   sketch, or on the (cleaning-less) `xla-cs-*` artifacts;
+    /// * `shard=` on dense/rank-1 state (no sketch kernels to shard),
+    ///   `shard=0`, or on the `xla-cs-*` artifacts (the AOT graphs
+    ///   schedule their own parallelism).
     pub fn validate(&self) -> Result<()> {
         let head = self.head();
         if self.rule == Rule::Sgd && self.comp != Comp::Dense {
@@ -312,6 +349,24 @@ impl OptimSpec {
         }
         if self.w == Some(0) {
             bail!("`{head}`: sketch width w=0 is invalid — use w ≥ 1");
+        }
+        if self.shards.is_some() {
+            match self.comp {
+                Comp::Dense | Comp::LowRank => bail!(
+                    "`{head}`: shard= parallelizes the sketch update/query kernels, \
+                     which {} state does not have — drop it or use a `cs-`/`csv-` spec",
+                    if self.comp == Comp::Dense { "dense" } else { "rank-1" }
+                ),
+                Comp::SketchXla => bail!(
+                    "`{head}`: the AOT xla-cs-* artifacts schedule their own \
+                     parallelism — drop shard= or use the pure-Rust `cs-{}` path",
+                    self.rule
+                ),
+                _ => {}
+            }
+        }
+        if self.shards == Some(0) {
+            bail!("`{head}`: shard=0 is invalid — use shard ≥ 1 (1 = sequential)");
         }
         if self.cleaning.every > 0 && !(0.0..1.0).contains(&self.cleaning.alpha) {
             bail!(
@@ -398,6 +453,7 @@ impl OptimSpec {
                     "v" => spec.v = Some(parse_val(key, val)?),
                     "w" => spec.w = Some(parse_val(key, val)?),
                     "seed" => spec.seed = Some(parse_val(key, val)?),
+                    "shard" | "shards" => spec.shards = Some(parse_val("shard", val)?),
                     "clean" => {
                         let Some((alpha, every)) = val.split_once('/') else {
                             bail!("clean= wants alpha/every (e.g. clean=0.5/1000), got {val:?}");
@@ -433,7 +489,7 @@ impl OptimSpec {
                     }
                     _ => bail!(
                         "unknown spec parameter {key:?} (valid: v, w, clean=α/C, seed, \
-                         b1, b2, eps, gamma)"
+                         shard, b1, b2, eps, gamma)"
                     ),
                 }
             }
@@ -488,6 +544,7 @@ impl OptimSpec {
         let v = self.v.unwrap_or(shape.v);
         let w = self.w.unwrap_or(shape.w);
         let seed = self.seed.unwrap_or(h.hash_seed);
+        let shards = self.shards.unwrap_or(1);
         Ok(match (self.comp, self.rule) {
             (Comp::Dense, Rule::Sgd) => Box::new(SparseSgd),
             (Comp::Dense, Rule::Momentum) => Box::new(DenseMomentum::new(n, d, h.momentum_gamma)),
@@ -499,22 +556,27 @@ impl OptimSpec {
                 Box::new(DenseAdam::new(n, d, 0.0, h.adam_beta2, h.adam_eps))
             }
             (Comp::Sketch, Rule::Momentum) => {
-                Box::new(CsMomentum::new(v, w, d, seed, h.momentum_gamma))
+                Box::new(CsMomentum::new(v, w, d, seed, h.momentum_gamma).with_shards(shards))
             }
-            (Comp::Sketch, Rule::Adagrad) => {
-                Box::new(CmsAdagrad::new(v, w, d, seed, h.adagrad_eps).with_cleaning(self.cleaning))
-            }
+            (Comp::Sketch, Rule::Adagrad) => Box::new(
+                CmsAdagrad::new(v, w, d, seed, h.adagrad_eps)
+                    .with_cleaning(self.cleaning)
+                    .with_shards(shards),
+            ),
             (Comp::Sketch, Rule::Adam) => Box::new(
                 CsAdam::new(v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
-                    .with_cleaning(self.cleaning),
+                    .with_cleaning(self.cleaning)
+                    .with_shards(shards),
             ),
             (Comp::Sketch, Rule::AdamV) => Box::new(
                 CmsAdamV::new(v, w, d, seed, h.adam_beta2, h.adam_eps)
-                    .with_cleaning(self.cleaning),
+                    .with_cleaning(self.cleaning)
+                    .with_shards(shards),
             ),
             (Comp::SketchV, Rule::Adam | Rule::AdamV) => Box::new(
                 HybridAdamV::new(n, v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
-                    .with_cleaning(self.cleaning),
+                    .with_cleaning(self.cleaning)
+                    .with_shards(shards),
             ),
             (Comp::SketchXla, rule) => {
                 let Some(rt) = rt else {
@@ -596,6 +658,9 @@ impl fmt::Display for OptimSpec {
         if let Some(seed) = self.seed {
             params.push(format!("seed={seed}"));
         }
+        if let Some(shards) = self.shards {
+            params.push(format!("shard={shards}"));
+        }
         // only rule-applicable hyper keys are emitted, mirroring `parse`,
         // so Display output is always re-parseable
         if hyper_key_applies(self.rule, "b1") && self.hyper.adam_beta1 != defaults.adam_beta1 {
@@ -651,6 +716,9 @@ mod tests {
             "csv-adam@v=4,w=64,b1=0.95,b2=0.99,eps=0.001",
             "cs-momentum@seed=7,gamma=0.85",
             "adagrad@eps=0.005",
+            "cs-adam@shard=4",
+            "cs-adam@v=3,w=6554,clean=0.5/1000,seed=9,shard=4",
+            "csv-adam-v@shard=2,b2=0.99",
         ] {
             let spec = OptimSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e:#}"));
             assert_eq!(spec.to_string(), s, "canonical round trip of {s:?}");
@@ -668,6 +736,7 @@ mod tests {
             ("dense-adam", "adam"),
             ("adamv", "adam-v"),
             ("cs-adamv", "cs-adam-v"),
+            ("cs-adam@shards=4", "cs-adam@shard=4"),
         ] {
             assert_eq!(OptimSpec::parse(alias).unwrap().to_string(), canonical);
         }
@@ -690,6 +759,10 @@ mod tests {
             }
             if sketchy && rng.f32() < 0.5 {
                 spec = spec.with_seed(rng.next_u64());
+            }
+            // shard= only exists for the pure-Rust sketched paths
+            if matches!(spec.comp, Comp::Sketch | Comp::SketchV) && rng.f32() < 0.5 {
+                spec = spec.with_shards(1 + rng.below(16));
             }
             // cleaning only where validate() admits it
             let cleanable = matches!(
@@ -808,6 +881,10 @@ mod tests {
             ("adam@seed=7", "sketch hashing"),
             ("adam@gamma=0.5", "does not apply"),
             ("cs-momentum@b2=0.9", "does not apply"),
+            ("adam@shard=4", "sketch update/query kernels"),
+            ("nmf-adam@shard=4", "sketch update/query kernels"),
+            ("xla-cs-adam@shard=4", "schedule their own parallelism"),
+            ("cs-adam@shard=0", "shard=0 is invalid"),
         ] {
             let e = OptimSpec::parse(input).unwrap_err().to_string();
             assert!(e.contains(needle), "{input:?}: {e}");
@@ -839,11 +916,51 @@ mod tests {
 
     #[test]
     fn as_dense_and_seed_helpers() {
-        let spec = OptimSpec::parse("cs-adam@w=128,seed=9").unwrap();
+        let spec = OptimSpec::parse("cs-adam@w=128,seed=9,shard=4").unwrap();
         assert_eq!(spec.as_dense().to_string(), "adam");
         assert_eq!(spec.or_seed(3).seed, Some(9));
         assert_eq!(OptimSpec::parse("cs-adam").unwrap().or_seed(3).seed, Some(3));
         assert!(!spec.requires_runtime());
         assert!(OptimSpec::parse("xla-cs-adam").unwrap().requires_runtime());
+    }
+
+    #[test]
+    fn or_shards_applies_only_where_sharding_exists() {
+        // explicit shard= wins over the trainer-wide default
+        assert_eq!(OptimSpec::parse("cs-adam@shard=2").unwrap().or_shards(8).shards, Some(2));
+        assert_eq!(OptimSpec::parse("cs-adam").unwrap().or_shards(8).shards, Some(8));
+        assert_eq!(OptimSpec::parse("csv-adam").unwrap().or_shards(8).shards, Some(8));
+        // dense/low-rank/AOT specs must stay valid after a blanket or_shards
+        for s in ["adam", "nmf-adagrad", "xla-cs-adam", "sgd"] {
+            let spec = OptimSpec::parse(s).unwrap().or_shards(8);
+            assert_eq!(spec.shards, None, "{s}");
+            assert!(spec.validate().is_ok(), "{s}");
+        }
+        // 0 is the CLI's "flag absent" default: a no-op, never Some(0)
+        let spec = OptimSpec::parse("cs-adam").unwrap().or_shards(0);
+        assert_eq!(spec.shards, None);
+        assert!(spec.validate().is_ok());
+    }
+
+    #[test]
+    fn sharded_specs_build_and_match_sequential() {
+        let shape = RowShape::new(256, 4);
+        for head in ["cs-momentum", "cs-adagrad", "cs-adam", "cs-adam-v", "csv-adam"] {
+            let mut seq =
+                OptimSpec::parse(head).unwrap().build_row(&shape, None).unwrap();
+            let mut par = OptimSpec::parse(&format!("{head}@shard=4"))
+                .unwrap()
+                .build_row(&shape, None)
+                .unwrap();
+            let ids = [3u64, 77, 200];
+            let grads: Vec<f32> = (0..3 * shape.d).map(|i| (i as f32 - 5.0) * 0.1).collect();
+            let mut rows_seq = vec![0.5f32; 3 * shape.d];
+            let mut rows_par = rows_seq.clone();
+            for t in 1..=4 {
+                seq.step_rows(&ids, &mut rows_seq, &grads, 0.1, t);
+                par.step_rows(&ids, &mut rows_par, &grads, 0.1, t);
+            }
+            assert_eq!(rows_seq, rows_par, "{head}");
+        }
     }
 }

@@ -2,7 +2,7 @@
 //! and execute them from the coordinator's hot path.
 //!
 //! Pipeline per artifact: `HloModuleProto::from_text_file` (HLO **text** —
-//! see DESIGN.md on why not serialized protos) → `XlaComputation` →
+//! see DESIGN.md §6 on why not serialized protos) → `XlaComputation` →
 //! `PjRtClient::compile` (cached) → `execute` with typed, shape-validated
 //! literals.
 

@@ -6,8 +6,16 @@
 //! CMS while still querying with MIN; estimates can therefore dip below the
 //! true value transiently, and the optimizer clamps at zero before the
 //! square root (same as the reference implementation).
+//!
+//! Like [`super::count_sketch::CountSketch`], the hot path is plan-based
+//! ([`CountMinSketch::update_with`] / [`CountMinSketch::query_with`],
+//! DESIGN.md §2) with optional sharded parallel execution (§5); the
+//! id-based methods are thin wrappers. A CMS plan carries signs too — the
+//! CMS simply ignores them, which is what lets CsAdam share one plan
+//! between its CS/CMS pair.
 
 use super::hash::SketchHasher;
+use super::plan::{query_rows, update_rows, SketchPlan, MATERIALIZE_CHUNK};
 use super::tensor::SketchTensor;
 
 /// Count-min sketch over `R^{n,d}` rows compressed to `[v, w, d]`.
@@ -15,15 +23,35 @@ use super::tensor::SketchTensor;
 pub struct CountMinSketch {
     tensor: SketchTensor,
     hasher: SketchHasher,
+    shards: usize,
 }
 
 impl CountMinSketch {
-    /// Zero-initialized sketch.
+    /// Zero-initialized sketch (sequential execution; see
+    /// [`Self::with_shards`]).
     pub fn new(depth: usize, width: usize, dim: usize, seed: u64) -> CountMinSketch {
         CountMinSketch {
             tensor: SketchTensor::zeros(depth, width, dim),
             hasher: SketchHasher::new(depth, width, seed),
+            shards: 1,
         }
+    }
+
+    /// Run plan-based update/query across `shards` parallel shards
+    /// (1 = sequential). Sharded execution is bit-identical to sequential
+    /// (DESIGN.md §5).
+    pub fn with_shards(mut self, shards: usize) -> CountMinSketch {
+        self.set_shards(shards);
+        self
+    }
+
+    /// See [`Self::with_shards`].
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     pub fn tensor(&self) -> &SketchTensor {
@@ -46,43 +74,43 @@ impl CountMinSketch {
         self.tensor.memory_bytes()
     }
 
+    /// Build the `[depth, k]` plan for `ids` under this sketch's family.
+    pub fn plan(&self, ids: &[u64]) -> SketchPlan {
+        SketchPlan::build(&self.hasher, ids)
+    }
+
     /// UPDATE: add `Δ_i` (no sign) to row `h_j(i)` for every depth/item.
     pub fn update(&mut self, ids: &[u64], deltas: &[f32]) {
+        self.update_with(&self.plan(ids), deltas);
+    }
+
+    /// UPDATE via a prebuilt plan (the hash-once hot path).
+    pub fn update_with(&mut self, plan: &SketchPlan, deltas: &[f32]) {
         let d = self.tensor.dim();
-        assert_eq!(deltas.len(), ids.len() * d);
-        for j in 0..self.hasher.depth() {
-            for (t, &id) in ids.iter().enumerate() {
-                let b = self.hasher.bucket(j, id);
-                let row = self.tensor.row_mut(j, b);
-                let delta = &deltas[t * d..(t + 1) * d];
-                for (r, &x) in row.iter_mut().zip(delta) {
-                    *r += x;
-                }
+        assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
+        assert_eq!(deltas.len(), plan.k() * d);
+        update_rows(&mut self.tensor, plan, self.shards, |_j, t, row| {
+            let delta = &deltas[t * d..(t + 1) * d];
+            for (r, &x) in row.iter_mut().zip(delta) {
+                *r += x;
             }
-        }
+        });
     }
 
     /// QUERY: elementwise min over depth. Writes `[k, d]` into `out`.
     pub fn query(&self, ids: &[u64], out: &mut [f32]) {
+        self.query_with(&self.plan(ids), out);
+    }
+
+    /// QUERY via a prebuilt plan (the hash-once hot path).
+    pub fn query_with(&self, plan: &SketchPlan, out: &mut [f32]) {
         let d = self.tensor.dim();
-        let v = self.hasher.depth();
-        let w = self.tensor.width();
-        assert_eq!(out.len(), ids.len() * d);
-        let data = self.tensor.data();
-        for (t, &id) in ids.iter().enumerate() {
-            let dst = &mut out[t * d..(t + 1) * d];
-            let b0 = self.hasher.bucket(0, id);
-            dst.copy_from_slice(&data[b0 * d..b0 * d + d]);
-            for j in 1..v {
-                let b = j * w + self.hasher.bucket(j, id);
-                let row = &data[b * d..b * d + d];
-                for (o, &x) in dst.iter_mut().zip(row) {
-                    if x < *o {
-                        *o = x;
-                    }
-                }
-            }
-        }
+        assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
+        assert_eq!(out.len(), plan.k() * d);
+        let tensor = &self.tensor;
+        query_rows(out, d, plan.k(), self.shards, |t0, t1, span| {
+            cms_query_span(tensor, plan, t0, t1, span);
+        });
     }
 
     /// Convenience: query a single id into a fresh vector.
@@ -92,11 +120,23 @@ impl CountMinSketch {
         out
     }
 
-    /// Decompress the full `[n, d]` estimate (diagnostics).
+    /// Decompress the full `[n, d]` estimate (diagnostics). Queries in
+    /// fixed-size chunks through one reused plan instead of hashing a
+    /// materialized `0..n` id vector in one go.
     pub fn materialize(&self, n: usize) -> Vec<f32> {
-        let ids: Vec<u64> = (0..n as u64).collect();
-        let mut out = vec![0.0; n * self.dim()];
-        self.query(&ids, &mut out);
+        let d = self.dim();
+        let mut out = vec![0.0; n * d];
+        let mut ids: Vec<u64> = Vec::with_capacity(MATERIALIZE_CHUNK.min(n));
+        let mut plan = SketchPlan::new();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + MATERIALIZE_CHUNK).min(n);
+            ids.clear();
+            ids.extend(lo as u64..hi as u64);
+            plan.rebuild(&self.hasher, &ids);
+            self.query_with(&plan, &mut out[lo * d..hi * d]);
+            lo = hi;
+        }
         out
     }
 
@@ -105,10 +145,34 @@ impl CountMinSketch {
         self.tensor.scale(alpha);
     }
 
-    /// Fold the sketch in half (paper §5); the hasher follows.
+    /// Fold the sketch in half (paper §5); the hasher follows. Plans built
+    /// before the fold no longer [`SketchPlan::compatible`] with it.
     pub fn fold_half(&mut self) {
         self.tensor.fold_half();
         self.hasher = self.hasher.halved();
+    }
+}
+
+/// Min-query items `[t0, t1)` of `plan` into `out` (`[t1-t0, d]`).
+fn cms_query_span(tensor: &SketchTensor, plan: &SketchPlan, t0: usize, t1: usize, out: &mut [f32]) {
+    let d = tensor.dim();
+    let w = tensor.width();
+    let v = plan.depth();
+    let data = tensor.data();
+    debug_assert_eq!(out.len(), (t1 - t0) * d);
+    for t in t0..t1 {
+        let dst = &mut out[(t - t0) * d..(t - t0 + 1) * d];
+        let b0 = plan.bucket(0, t);
+        dst.copy_from_slice(&data[b0 * d..b0 * d + d]);
+        for j in 1..v {
+            let b = j * w + plan.bucket(j, t);
+            let row = &data[b * d..b * d + d];
+            for (o, &x) in dst.iter_mut().zip(row) {
+                if x < *o {
+                    *o = x;
+                }
+            }
+        }
     }
 }
 
@@ -180,5 +244,32 @@ mod tests {
         cms.tensor_mut().row_mut(0, b0)[0] = 7.0;
         cms.tensor_mut().row_mut(1, b1)[0] = 3.0;
         assert_eq!(cms.query_one(5), vec![3.0]);
+    }
+
+    #[test]
+    fn planned_and_sharded_paths_are_bit_identical() {
+        check("cms-plan-shard-equiv", 10, 0xC14, |rng| {
+            let (v, w, d, k) =
+                (1 + rng.below(4), 1 + rng.below(24), 1 + rng.below(5), 1 + rng.below(48));
+            let shards = 2 + rng.below(5);
+            let ids: Vec<u64> = (0..k).map(|_| rng.below(512) as u64).collect();
+            let xs: Vec<f32> = (0..k * d).map(|_| rng.f32().abs()).collect();
+            let mut by_id = CountMinSketch::new(v, w, d, 21);
+            by_id.update(&ids, &xs);
+            let mut par = CountMinSketch::new(v, w, d, 21).with_shards(shards);
+            let plan = par.plan(&ids);
+            par.update_with(&plan, &xs);
+            if by_id.tensor().data() != par.tensor().data() {
+                return Err(format!("sharded/planned update differs (shards={shards})"));
+            }
+            let mut out_id = vec![0.0f32; k * d];
+            by_id.query(&ids, &mut out_id);
+            let mut out_par = vec![0.0f32; k * d];
+            par.query_with(&plan, &mut out_par);
+            if out_id != out_par {
+                return Err(format!("sharded/planned query differs (shards={shards})"));
+            }
+            Ok(())
+        });
     }
 }

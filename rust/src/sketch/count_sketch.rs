@@ -7,8 +7,15 @@
 //! reads the current state; an optimizer step is
 //! query → Δ → update → re-query → apply, with within-batch collisions
 //! folded in by the re-query.
+//!
+//! The hot-path entry points are [`CountSketch::update_with`] /
+//! [`CountSketch::query_with`], which replay a prebuilt [`SketchPlan`]
+//! (hash once per batch, DESIGN.md §2) and run sharded in parallel when
+//! [`CountSketch::with_shards`] asks for it (DESIGN.md §5). The id-based
+//! `update`/`query` remain as thin wrappers that build a throwaway plan.
 
 use super::hash::SketchHasher;
+use super::plan::{query_rows, update_rows, SketchPlan, MATERIALIZE_CHUNK};
 use super::tensor::SketchTensor;
 
 /// Count-sketch over `R^{n,d}` rows compressed to `[v, w, d]`.
@@ -16,15 +23,35 @@ use super::tensor::SketchTensor;
 pub struct CountSketch {
     tensor: SketchTensor,
     hasher: SketchHasher,
+    shards: usize,
 }
 
 impl CountSketch {
-    /// Zero-initialized sketch.
+    /// Zero-initialized sketch (sequential execution; see
+    /// [`Self::with_shards`]).
     pub fn new(depth: usize, width: usize, dim: usize, seed: u64) -> CountSketch {
         CountSketch {
             tensor: SketchTensor::zeros(depth, width, dim),
             hasher: SketchHasher::new(depth, width, seed),
+            shards: 1,
         }
+    }
+
+    /// Run plan-based update/query across `shards` parallel shards
+    /// (1 = sequential). Sharded execution is bit-identical to sequential
+    /// (DESIGN.md §5).
+    pub fn with_shards(mut self, shards: usize) -> CountSketch {
+        self.set_shards(shards);
+        self
+    }
+
+    /// See [`Self::with_shards`].
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     pub fn tensor(&self) -> &SketchTensor {
@@ -47,45 +74,50 @@ impl CountSketch {
         self.tensor.memory_bytes()
     }
 
+    /// Build the `[depth, k]` plan for `ids` under this sketch's family.
+    pub fn plan(&self, ids: &[u64]) -> SketchPlan {
+        SketchPlan::build(&self.hasher, ids)
+    }
+
     /// UPDATE: add `s_j(i)·Δ_i` to row `h_j(i)` for every depth and item.
     /// `deltas` is `[k, d]` row-major.
     pub fn update(&mut self, ids: &[u64], deltas: &[f32]) {
+        self.update_with(&self.plan(ids), deltas);
+    }
+
+    /// UPDATE via a prebuilt plan (the hash-once hot path).
+    pub fn update_with(&mut self, plan: &SketchPlan, deltas: &[f32]) {
         let d = self.tensor.dim();
-        assert_eq!(deltas.len(), ids.len() * d);
-        for j in 0..self.hasher.depth() {
-            for (t, &id) in ids.iter().enumerate() {
-                let (b, s) = self.hasher.bucket_sign(j, id);
-                let row = self.tensor.row_mut(j, b);
-                let delta = &deltas[t * d..(t + 1) * d];
-                if s >= 0.0 {
-                    for (r, &x) in row.iter_mut().zip(delta) {
-                        *r += x;
-                    }
-                } else {
-                    for (r, &x) in row.iter_mut().zip(delta) {
-                        *r -= x;
-                    }
+        assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
+        assert_eq!(deltas.len(), plan.k() * d);
+        update_rows(&mut self.tensor, plan, self.shards, |j, t, row| {
+            let delta = &deltas[t * d..(t + 1) * d];
+            if plan.sign(j, t) >= 0.0 {
+                for (r, &x) in row.iter_mut().zip(delta) {
+                    *r += x;
+                }
+            } else {
+                for (r, &x) in row.iter_mut().zip(delta) {
+                    *r -= x;
                 }
             }
-        }
+        });
     }
 
     /// QUERY: signed median over depth. Writes `[k, d]` into `out`.
     pub fn query(&self, ids: &[u64], out: &mut [f32]) {
+        self.query_with(&self.plan(ids), out);
+    }
+
+    /// QUERY via a prebuilt plan (the hash-once hot path).
+    pub fn query_with(&self, plan: &SketchPlan, out: &mut [f32]) {
         let d = self.tensor.dim();
-        let v = self.hasher.depth();
-        assert_eq!(out.len(), ids.len() * d);
-        // Per-item signed rows, then an elementwise median over v.
-        let mut signed: Vec<(usize, f32)> = Vec::with_capacity(v);
-        for (t, &id) in ids.iter().enumerate() {
-            signed.clear();
-            for j in 0..v {
-                let (b, s) = self.hasher.bucket_sign(j, id);
-                signed.push((j * self.tensor.width() + b, s));
-            }
-            let dst = &mut out[t * d..(t + 1) * d];
-            median_rows(&self.tensor, &signed, dst);
-        }
+        assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
+        assert_eq!(out.len(), plan.k() * d);
+        let tensor = &self.tensor;
+        query_rows(out, d, plan.k(), self.shards, |t0, t1, span| {
+            cs_query_span(tensor, plan, t0, t1, span);
+        });
     }
 
     /// Convenience: query a single id into a fresh vector.
@@ -96,17 +128,60 @@ impl CountSketch {
     }
 
     /// Decompress the full `[n, d]` estimate (diagnostics / Fig. 4 error).
+    /// Queries in fixed-size chunks through one reused plan instead of
+    /// hashing a materialized `0..n` id vector in one go.
     pub fn materialize(&self, n: usize) -> Vec<f32> {
-        let ids: Vec<u64> = (0..n as u64).collect();
-        let mut out = vec![0.0; n * self.dim()];
-        self.query(&ids, &mut out);
+        let d = self.dim();
+        let mut out = vec![0.0; n * d];
+        let mut ids: Vec<u64> = Vec::with_capacity(MATERIALIZE_CHUNK.min(n));
+        let mut plan = SketchPlan::new();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + MATERIALIZE_CHUNK).min(n);
+            ids.clear();
+            ids.extend(lo as u64..hi as u64);
+            plan.rebuild(&self.hasher, &ids);
+            self.query_with(&plan, &mut out[lo * d..hi * d]);
+            lo = hi;
+        }
         out
     }
 
-    /// Fold the sketch in half (paper §5); the hasher follows.
+    /// Fold the sketch in half (paper §5); the hasher follows. Plans built
+    /// before the fold no longer [`SketchPlan::compatible`] with it.
     pub fn fold_half(&mut self) {
         self.tensor.fold_half();
         self.hasher = self.hasher.halved();
+    }
+}
+
+/// Median-query items `[t0, t1)` of `plan` into `out` (`[t1-t0, d]`).
+/// All scratch lives on the stack for the paper's depths (v ≤ 8); deeper
+/// sketches use one heap scratch per *span*, never per item.
+fn cs_query_span(tensor: &SketchTensor, plan: &SketchPlan, t0: usize, t1: usize, out: &mut [f32]) {
+    let d = tensor.dim();
+    let w = tensor.width();
+    let v = plan.depth();
+    let data = tensor.data();
+    debug_assert_eq!(out.len(), (t1 - t0) * d);
+    const INLINE: usize = 8;
+    let mut inline_rows = [(0usize, 0.0f32); INLINE];
+    let mut heap_rows: Vec<(usize, f32)> = Vec::new();
+    let mut median_buf: Vec<f32> = if v > 3 { vec![0.0; v] } else { Vec::new() };
+    for t in t0..t1 {
+        let dst = &mut out[(t - t0) * d..(t - t0 + 1) * d];
+        if v <= INLINE {
+            for (j, slot) in inline_rows[..v].iter_mut().enumerate() {
+                *slot = (j * w + plan.bucket(j, t), plan.sign(j, t));
+            }
+            median_rows(data, d, &inline_rows[..v], &mut median_buf, dst);
+        } else {
+            heap_rows.clear();
+            for j in 0..v {
+                heap_rows.push((j * w + plan.bucket(j, t), plan.sign(j, t)));
+            }
+            median_rows(data, d, &heap_rows, &mut median_buf, dst);
+        }
     }
 }
 
@@ -114,11 +189,10 @@ impl CountSketch {
 /// (`(flat_bucket_index, sign)`), written to `dst`.
 ///
 /// v ≤ 3 uses branch-free min/max networks (the hot path: the paper uses
-/// depth 3–5); larger depths sort a small per-column buffer. Even depths
-/// average the two central order statistics, matching `jnp.median`.
-fn median_rows(tensor: &SketchTensor, rows: &[(usize, f32)], dst: &mut [f32]) {
-    let d = tensor.dim();
-    let data = tensor.data();
+/// depth 3–5); larger depths sort the caller's `buf` scratch (length v)
+/// per column. Even depths average the two central order statistics,
+/// matching `jnp.median`.
+fn median_rows(data: &[f32], d: usize, rows: &[(usize, f32)], buf: &mut [f32], dst: &mut [f32]) {
     match rows {
         [(b, s)] => {
             let r = &data[b * d..b * d + d];
@@ -146,7 +220,7 @@ fn median_rows(tensor: &SketchTensor, rows: &[(usize, f32)], dst: &mut [f32]) {
         }
         _ => {
             let v = rows.len();
-            let mut buf = vec![0.0f32; v];
+            debug_assert_eq!(buf.len(), v);
             for i in 0..d {
                 for (jj, (b, s)) in rows.iter().enumerate() {
                     buf[jj] = s * data[b * d + i];
@@ -287,5 +361,78 @@ mod tests {
             }
         }
         assert!(bad < n / 20, "bad={bad} bound={bound}");
+    }
+
+    #[test]
+    fn planned_path_is_bit_identical_to_id_path() {
+        check("cs-plan-equiv", 12, 0x91A, |rng| {
+            let (v, w, d, k) = (1 + rng.below(5), 1 + rng.below(32), 1 + rng.below(6), 1 + rng.below(40));
+            let ids: Vec<u64> = (0..k).map(|_| rng.below(4096) as u64).collect();
+            let deltas: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut by_id = CountSketch::new(v, w, d, 31);
+            by_id.update(&ids, &deltas);
+            let mut by_plan = CountSketch::new(v, w, d, 31);
+            let plan = by_plan.plan(&ids);
+            by_plan.update_with(&plan, &deltas);
+            if by_id.tensor().data() != by_plan.tensor().data() {
+                return Err("planned update differs from id update".into());
+            }
+            let mut out_id = vec![0.0f32; k * d];
+            by_id.query(&ids, &mut out_id);
+            let mut out_plan = vec![0.0f32; k * d];
+            by_plan.query_with(&plan, &mut out_plan);
+            if out_id != out_plan {
+                return Err("planned query differs from id query".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sharded_path_is_bit_identical_to_sequential() {
+        check("cs-shard-equiv", 8, 0x5A4D, |rng| {
+            let (v, w, d, k) = (1 + rng.below(4), 1 + rng.below(24), 1 + rng.below(5), 1 + rng.below(64));
+            let shards = 2 + rng.below(6);
+            let ids: Vec<u64> = (0..k).map(|_| rng.below(512) as u64).collect();
+            let deltas: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut seq = CountSketch::new(v, w, d, 13);
+            let mut par = CountSketch::new(v, w, d, 13).with_shards(shards);
+            let plan = seq.plan(&ids);
+            seq.update_with(&plan, &deltas);
+            par.update_with(&plan, &deltas);
+            if seq.tensor().data() != par.tensor().data() {
+                return Err(format!("sharded update differs (shards={shards})"));
+            }
+            let mut out_seq = vec![0.0f32; k * d];
+            let mut out_par = vec![0.0f32; k * d];
+            seq.query_with(&plan, &mut out_seq);
+            par.query_with(&plan, &mut out_par);
+            if out_seq != out_par {
+                return Err(format!("sharded query differs (shards={shards})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn materialize_matches_full_query() {
+        let mut cs = CountSketch::new(3, 32, 2, 5);
+        let ids: Vec<u64> = (0..300).collect();
+        let xs: Vec<f32> = (0..600).map(|x| (x % 13) as f32 - 6.0).collect();
+        cs.update(&ids, &xs);
+        let n = 300usize;
+        let mut full = vec![0.0f32; n * 2];
+        cs.query(&ids, &mut full);
+        assert_eq!(cs.materialize(n), full);
+    }
+
+    #[test]
+    #[should_panic(expected = "different hash family")]
+    fn incompatible_plan_is_rejected() {
+        let cs = CountSketch::new(3, 64, 2, 1);
+        let other = CountSketch::new(3, 64, 2, 2);
+        let plan = other.plan(&[1, 2, 3]);
+        let mut out = vec![0.0f32; 3 * 2];
+        cs.query_with(&plan, &mut out);
     }
 }

@@ -76,9 +76,21 @@ impl SketchHasher {
     /// Batched buckets/signs laid out `[depth, k]` (row-major), matching the
     /// `idx`/`sign` inputs of the AOT kernels.
     pub fn buckets_and_signs(&self, ids: &[u64]) -> (Vec<i32>, Vec<f32>) {
+        let mut idx = Vec::new();
+        let mut sign = Vec::new();
+        self.buckets_and_signs_into(ids, &mut idx, &mut sign);
+        (idx, sign)
+    }
+
+    /// [`Self::buckets_and_signs`] into caller-owned buffers (resized to
+    /// `[depth, k]`), so per-batch [`super::plan::SketchPlan`] rebuilds do
+    /// not allocate on the hot path.
+    pub fn buckets_and_signs_into(&self, ids: &[u64], idx: &mut Vec<i32>, sign: &mut Vec<f32>) {
         let k = ids.len();
-        let mut idx = vec![0i32; self.depth * k];
-        let mut sign = vec![0f32; self.depth * k];
+        idx.clear();
+        idx.resize(self.depth * k, 0);
+        sign.clear();
+        sign.resize(self.depth * k, 0.0);
         for j in 0..self.depth {
             let row_i = &mut idx[j * k..(j + 1) * k];
             let row_s = &mut sign[j * k..(j + 1) * k];
@@ -88,7 +100,6 @@ impl SketchHasher {
                 row_s[t] = s;
             }
         }
-        (idx, sign)
     }
 
     /// A hasher for the same seed/depth but half the width — valid after a

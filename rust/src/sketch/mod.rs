@@ -10,6 +10,9 @@
 //!   `python/compile/kernels/hashing.py` (golden-vector pinned).
 //! * [`tensor`] — the `[v, w, d]` storage: scaling (cleaning), fold-in-half
 //!   shrinking (paper §5 / Matusevych et al.), memory accounting.
+//! * [`plan`] — hash-once [`SketchPlan`] execution plans (`[depth, k]`
+//!   buckets+signs built once per batch, DESIGN.md §2) and the sharded
+//!   parallel update/query executor (DESIGN.md §5).
 //! * [`count_sketch`] — signed median-of-depth estimator (UPDATE/QUERY).
 //! * [`count_min`] — unsigned min-of-depth estimator (UPDATE/QUERY).
 //! * [`clean`] — the periodic cleaning heuristic for CMS overestimates
@@ -19,10 +22,12 @@ pub mod clean;
 pub mod count_min;
 pub mod count_sketch;
 pub mod hash;
+pub mod plan;
 pub mod tensor;
 
 pub use clean::CleaningPolicy;
 pub use count_min::CountMinSketch;
 pub use count_sketch::CountSketch;
 pub use hash::SketchHasher;
+pub use plan::SketchPlan;
 pub use tensor::SketchTensor;

@@ -1,0 +1,295 @@
+//! `SketchPlan` — hash-once execution plans for batched sketch operations,
+//! plus the sharded parallel executor built on top of them (DESIGN.md §2
+//! and §5).
+//!
+//! An optimizer step touches the same id batch up to three times per sketch
+//! (QUERY → Δ → UPDATE → re-QUERY), and CsAdam runs *two* same-seeded
+//! sketches; hashing per call therefore recomputes identical `bucket_sign`
+//! values 5+ times. A plan precomputes the `[depth, k]` bucket/sign tables
+//! once per batch per hash family — the exact `idx`/`sign` tensors the AOT
+//! kernels consume — and every `*_with` sketch method replays them.
+//!
+//! Sharding invariants (DESIGN.md §5): depth row `j` owns the contiguous
+//! tensor slice `data[j·w·d .. (j+1)·w·d]`, and a width range `[lo, hi)`
+//! within it owns `data[(j·w+lo)·d .. (j·w+hi)·d]` — so a (depth × width
+//! range) tiling partitions the buffer into disjoint `&mut` slices and the
+//! shards run lock-free. Each shard scans the batch in the original item
+//! order and applies only the items whose bucket lands in its range, so
+//! every cell sees the same additions in the same order as the sequential
+//! path: the sharded result is bit-identical, not merely close.
+
+use crate::util::threadpool::parallel_map;
+
+use super::hash::SketchHasher;
+use super::tensor::SketchTensor;
+
+/// Id chunk size for `materialize`-style full decompressions: large enough
+/// to amortize the span setup, small enough that the chunk's plan and ids
+/// stay cache-resident.
+pub(crate) const MATERIALIZE_CHUNK: usize = 1024;
+
+/// Precomputed `[depth, k]` buckets and signs for one id batch under one
+/// hash family. Reusable across every UPDATE/QUERY of the batch and across
+/// all sketches sharing the family (e.g. CsAdam's m/v pair).
+#[derive(Clone, Debug, Default)]
+pub struct SketchPlan {
+    depth: usize,
+    width: usize,
+    seed: u64,
+    k: usize,
+    /// `[depth, k]` bucket indices, row-major (AOT `idx` layout, i32).
+    idx: Vec<i32>,
+    /// `[depth, k]` signs ∈ {+1, −1} (AOT `sign` layout).
+    sign: Vec<f32>,
+}
+
+impl SketchPlan {
+    /// Empty plan (scratch placeholder; [`SketchPlan::rebuild`] fills it).
+    pub fn new() -> SketchPlan {
+        SketchPlan::default()
+    }
+
+    /// Build a plan for `ids` under `hasher`'s family.
+    pub fn build(hasher: &SketchHasher, ids: &[u64]) -> SketchPlan {
+        let mut plan = SketchPlan::new();
+        plan.rebuild(hasher, ids);
+        plan
+    }
+
+    /// Re-hash `ids` into this plan, reusing its buffers (no allocation
+    /// once the high-water batch size has been seen).
+    pub fn rebuild(&mut self, hasher: &SketchHasher, ids: &[u64]) {
+        self.depth = hasher.depth();
+        self.width = hasher.width();
+        self.seed = hasher.seed();
+        self.k = ids.len();
+        hasher.buckets_and_signs_into(ids, &mut self.idx, &mut self.sign);
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Bucket of item `t` at depth `j`.
+    #[inline(always)]
+    pub fn bucket(&self, j: usize, t: usize) -> usize {
+        debug_assert!(j < self.depth && t < self.k);
+        self.idx[j * self.k + t] as usize
+    }
+
+    /// Sign of item `t` at depth `j`.
+    #[inline(always)]
+    pub fn sign(&self, j: usize, t: usize) -> f32 {
+        debug_assert!(j < self.depth && t < self.k);
+        self.sign[j * self.k + t]
+    }
+
+    /// Flat `[depth, k]` bucket table (the AOT `idx` tensor).
+    pub fn idx(&self) -> &[i32] {
+        &self.idx
+    }
+
+    /// Flat `[depth, k]` sign table (the AOT `sign` tensor).
+    pub fn signs(&self) -> &[f32] {
+        &self.sign
+    }
+
+    /// Was this plan built under `hasher`'s exact family? A plan is only
+    /// replayable on sketches with the same depth, width and seed (a
+    /// `fold_half` invalidates plans built before it).
+    pub fn compatible(&self, hasher: &SketchHasher) -> bool {
+        self.depth == hasher.depth()
+            && self.width == hasher.width()
+            && self.seed == hasher.seed()
+    }
+}
+
+/// The (depth, width-range) shard tiling: `shards` target tasks over a
+/// `[v, w, ·]` tensor. Depth rows are the natural disjoint slices; when
+/// `v < shards` each depth is further split into `ceil(shards / v)`
+/// balanced width ranges so every core gets work (DESIGN.md §5).
+/// Ranges are emitted in (depth asc, lo asc) order so they tile the
+/// backing buffer contiguously.
+pub(crate) fn shard_ranges(depth: usize, width: usize, shards: usize) -> Vec<(usize, usize, usize)> {
+    let per_depth = ((shards + depth - 1) / depth).min(width).max(1);
+    let base = width / per_depth;
+    let rem = width % per_depth;
+    let mut ranges = Vec::with_capacity(depth * per_depth);
+    for j in 0..depth {
+        let mut lo = 0usize;
+        for r in 0..per_depth {
+            let len = base + usize::from(r < rem);
+            ranges.push((j, lo, lo + len));
+            lo += len;
+        }
+        debug_assert_eq!(lo, width);
+    }
+    ranges
+}
+
+/// Shared UPDATE executor: apply `apply(j, t, row)` for every depth `j`
+/// and item `t`, where `row` is the bucket row `(j, plan.bucket(j, t))`.
+/// `shards == 1` runs the sequential loop; `shards > 1` tiles the tensor
+/// into disjoint (depth × width-range) slices and replays the same item
+/// order inside each, so the result is bit-identical either way.
+///
+/// `parallel_map` uses scoped threads (spawn + join per call, which is
+/// what lets the shards borrow the tensor without `'static` bounds), so
+/// each sharded call pays a thread-spawn cost of tens of microseconds.
+/// That amortizes at the paper's shapes — one wt103 update moves
+/// k·v·d ≈ 0.9M f32 adds — but makes `shard>1` a net loss on tiny
+/// sketches; callers pick the shard count, and 1 is always safe.
+pub(crate) fn update_rows<F>(tensor: &mut SketchTensor, plan: &SketchPlan, shards: usize, apply: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let d = tensor.dim();
+    let (v, k) = (plan.depth(), plan.k());
+    if shards <= 1 || k == 0 {
+        for j in 0..v {
+            for t in 0..k {
+                apply(j, t, tensor.row_mut(j, plan.bucket(j, t)));
+            }
+        }
+        return;
+    }
+    let w = tensor.width();
+    let ranges = shard_ranges(v, w, shards);
+    // Tile the backing buffer into one disjoint &mut slice per shard. The
+    // Mutex wrappers exist only to make the slices Sync-shareable across
+    // the pool's closures; each slice is locked by exactly one task, so
+    // every acquisition is uncontended.
+    let mut slices = Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f32] = tensor.data_mut();
+    for &(_, lo, hi) in &ranges {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * d);
+        slices.push(std::sync::Mutex::new(head));
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty());
+    parallel_map(ranges.len(), shards, |i| {
+        let (j, lo, hi) = ranges[i];
+        let mut guard = slices[i].lock().unwrap();
+        let slice: &mut [f32] = &mut **guard;
+        for t in 0..k {
+            let b = plan.bucket(j, t);
+            if b >= lo && b < hi {
+                let off = (b - lo) * d;
+                apply(j, t, &mut slice[off..off + d]);
+            }
+        }
+    });
+}
+
+/// Shared QUERY executor: `span(t0, t1, out_span)` fills estimates for
+/// items `[t0, t1)` into the matching `[.., d]` output span. Queries are
+/// read-only and per-item independent, so sharding splits the batch into
+/// contiguous item chunks — trivially bit-identical to the sequential
+/// pass.
+pub(crate) fn query_rows<F>(out: &mut [f32], d: usize, k: usize, shards: usize, span: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), k * d);
+    if shards <= 1 || k < 2 * shards {
+        span(0, k, out);
+        return;
+    }
+    let chunk = (k + shards - 1) / shards;
+    let slices: Vec<std::sync::Mutex<&mut [f32]>> =
+        out.chunks_mut(chunk * d).map(std::sync::Mutex::new).collect();
+    parallel_map(slices.len(), shards, |c| {
+        let t0 = c * chunk;
+        let t1 = (t0 + chunk).min(k);
+        let mut guard = slices[c].lock().unwrap();
+        span(t0, t1, &mut **guard);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Guard on the Python/AOT interchange: a plan's tables must be the
+    /// exact `buckets_and_signs` output (which is itself golden-pinned to
+    /// `python/compile/kernels/hashing.py`).
+    #[test]
+    fn plan_matches_buckets_and_signs_golden() {
+        let h = SketchHasher::new(2, 16, 7);
+        let plan = SketchPlan::build(&h, &[0, 1, 2, 3]);
+        let (idx, sign) = h.buckets_and_signs(&[0, 1, 2, 3]);
+        assert_eq!(plan.idx(), &idx[..]);
+        assert_eq!(plan.signs(), &sign[..]);
+        // and the pinned Python golden vectors transitively
+        assert_eq!(plan.idx(), &[4, 6, 5, 1, 6, 6, 0, 12]);
+        assert_eq!(plan.signs(), &[-1.0, -1.0, 1.0, -1.0, -1.0, -1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn plan_accessors_match_scalar_hashing() {
+        let h = SketchHasher::new(4, 23, 99);
+        let ids: Vec<u64> = (0..57).map(|i| i * 3 + 1).collect();
+        let plan = SketchPlan::build(&h, &ids);
+        assert_eq!((plan.depth(), plan.width(), plan.k()), (4, 23, ids.len()));
+        for j in 0..4 {
+            for (t, &id) in ids.iter().enumerate() {
+                assert_eq!(plan.bucket(j, t), h.bucket(j, id));
+                assert_eq!(plan.sign(j, t), h.sign(j, id));
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_and_tracks_family() {
+        let h1 = SketchHasher::new(3, 64, 1);
+        let h2 = SketchHasher::new(2, 32, 9);
+        let mut plan = SketchPlan::build(&h1, &[1, 2, 3, 4]);
+        assert!(plan.compatible(&h1));
+        assert!(!plan.compatible(&h2));
+        plan.rebuild(&h2, &[5, 6]);
+        assert!(plan.compatible(&h2));
+        assert_eq!(plan.k(), 2);
+        assert_eq!(plan.idx().len(), 2 * 2);
+        let fresh = SketchPlan::build(&h2, &[5, 6]);
+        assert_eq!(plan.idx(), fresh.idx());
+        assert_eq!(plan.signs(), fresh.signs());
+    }
+
+    #[test]
+    fn fold_half_invalidates_plans() {
+        let h = SketchHasher::new(3, 64, 11);
+        let plan = SketchPlan::build(&h, &[1, 2]);
+        assert!(plan.compatible(&h));
+        assert!(!plan.compatible(&h.halved()));
+    }
+
+    #[test]
+    fn shard_ranges_tile_each_depth() {
+        for (v, w, shards) in [(3, 10, 4), (1, 7, 8), (5, 3, 16), (3, 6554, 4), (2, 1, 3)] {
+            let ranges = shard_ranges(v, w, shards);
+            let mut expect_j = 0usize;
+            let mut expect_lo = 0usize;
+            for &(j, lo, hi) in &ranges {
+                if j != expect_j {
+                    assert_eq!(expect_lo, w, "depth {expect_j} did not tile [0,{w})");
+                    expect_j = j;
+                    expect_lo = 0;
+                }
+                assert_eq!(lo, expect_lo);
+                assert!(hi >= lo && hi <= w);
+                expect_lo = hi;
+            }
+            assert_eq!(expect_j, v - 1);
+            assert_eq!(expect_lo, w);
+            assert!(ranges.len() >= shards.min(v * w), "{v}x{w} shards={shards}");
+        }
+    }
+}

@@ -407,6 +407,20 @@ mod tests {
     }
 
     #[test]
+    fn sharded_sketch_trainer_matches_sequential_bitwise() {
+        // shard= only parallelizes execution (DESIGN.md §5): the full
+        // training trajectory must be bit-identical to the sequential run
+        let corpus = SyntheticCorpus::generate(512, 8_000, 1.05, 0.5, 4);
+        let (train, _, _) = corpus.split(0.1, 0.05);
+        let mut seq = tiny_trainer("cs-adam");
+        let mut par = tiny_trainer("cs-adam@shard=4");
+        let rs = seq.train_epoch(train, 15);
+        let rp = par.train_epoch(train, 15);
+        assert_eq!(rs.mean_loss.to_bits(), rp.mean_loss.to_bits());
+        assert_eq!(seq.emb.params, par.emb.params);
+    }
+
+    #[test]
     fn spec_geometry_overrides_preset_defaults() {
         // tiny preset default emb width is 103; a w= override must shrink
         // the sketch state accordingly (2 sketches × v·w·d floats)

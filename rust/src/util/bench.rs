@@ -11,12 +11,14 @@
 //! Each benchmark is warmed up, then timed over adaptively-chosen batch
 //! sizes until the target measurement time is reached; mean / stddev /
 //! min / p50 of per-iteration wall time are reported and appended to
-//! `results/bench.csv` for the EXPERIMENTS.md §Perf ledger.
+//! `results/bench.csv` *and*, as JSON lines, to `results/bench.json` —
+//! the machine-readable perf trajectory of DESIGN.md §Perf.
 
 use std::hint::black_box as std_black_box;
 use std::io::Write;
 use std::time::Instant;
 
+use super::json::{num, obj, s, Json};
 use super::timer::Stats;
 
 /// Re-export of `std::hint::black_box` so benches do not depend on nightly.
@@ -42,12 +44,15 @@ pub struct Bench {
     results: Vec<BenchResult>,
     filter: Option<String>,
     csv_path: Option<String>,
+    json_path: Option<String>,
 }
 
 impl Bench {
-    /// Create a group; honours `CSOPT_BENCH_FILTER` (substring match),
-    /// `CSOPT_BENCH_FAST=1` (short timings for CI) and writes CSV rows to
-    /// `results/bench.csv` unless `CSOPT_BENCH_NO_CSV=1`.
+    /// Create a group; honours `CSOPT_BENCH_FILTER` (substring match) and
+    /// `CSOPT_BENCH_FAST=1` (short timings for CI). Rows are appended to
+    /// `results/bench.csv` unless `CSOPT_BENCH_NO_CSV=1` and, as JSON
+    /// lines, to `results/bench.json` unless `CSOPT_BENCH_NO_JSON=1`
+    /// (override the path with `CSOPT_BENCH_JSON=...`).
     pub fn from_env(group: &str) -> Bench {
         let fast = std::env::var("CSOPT_BENCH_FAST").ok().as_deref() == Some("1");
         let (warmup_secs, measure_secs) = if fast { (0.05, 0.2) } else { (0.3, 1.0) };
@@ -56,6 +61,14 @@ impl Bench {
         } else {
             Some("results/bench.csv".to_string())
         };
+        let json_path = if std::env::var("CSOPT_BENCH_NO_JSON").ok().as_deref() == Some("1") {
+            None
+        } else {
+            Some(
+                std::env::var("CSOPT_BENCH_JSON")
+                    .unwrap_or_else(|_| "results/bench.json".to_string()),
+            )
+        };
         Bench {
             group: group.to_string(),
             warmup_secs,
@@ -63,6 +76,7 @@ impl Bench {
             results: Vec::new(),
             filter: std::env::var("CSOPT_BENCH_FILTER").ok(),
             csv_path,
+            json_path,
         }
     }
 
@@ -114,7 +128,7 @@ impl Bench {
         self.results.push(r);
     }
 
-    /// Print summary and append CSV rows.
+    /// Print summary and append CSV + JSON-lines rows.
     pub fn finish(self) {
         if let Some(path) = &self.csv_path {
             if let Some(dir) = std::path::Path::new(path).parent() {
@@ -134,6 +148,29 @@ impl Bench {
                 }
             }
         }
+        if let Some(path) = &self.json_path {
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Ok(mut fh) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+                for r in &self.results {
+                    let _ = writeln!(fh, "{}", r.to_json().to_string());
+                }
+            }
+        }
+    }
+}
+
+impl BenchResult {
+    /// One JSON object per row (the `results/bench.json` line format).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("mean_ns", num(self.mean_ns)),
+            ("std_ns", num(self.std_ns)),
+            ("min_ns", num(self.min_ns)),
+            ("iters", num(self.iters as f64)),
+        ])
     }
 }
 
