@@ -42,11 +42,11 @@ fn main() -> anyhow::Result<()> {
         let corpus = corpus_for(&p, steps + 8, 42);
         let (train, valid, test) = corpus.split(0.08, 0.08);
         for e in 1..=epochs {
-            let r = tr.train_epoch(train, steps);
+            let r = tr.train_epoch(train, steps)?;
             for &(s, l) in &r.curve {
                 csv.row(&[&engine, &s, &format!("{l:.4}")])?;
             }
-            let vppl = tr.eval_ppl(valid, 8);
+            let vppl = tr.eval_ppl(valid, 8)?;
             println!(
                 "epoch {e}: mean loss {:.4} (ppl {:.1}), valid ppl {:.1}, {:.1} steps/s",
                 r.mean_loss,
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
                 r.steps as f64 / r.secs
             );
         }
-        println!("test ppl: {:.2}", tr.eval_ppl(test, 8));
+        println!("test ppl: {:.2}", tr.eval_ppl(test, 8)?);
     }
     csv.flush()?;
     println!("\nloss curves written to results/train_lm_loss_curve.csv");

@@ -4,7 +4,7 @@
 
 use csopt::config::lm_preset;
 use csopt::exp::common::corpus_for;
-use csopt::optim::OptimSpec;
+use csopt::optim::{OptimPolicy, OptimSpec};
 use csopt::runtime::{Arg, Runtime};
 use csopt::train::engine::{LmEngine, RustLmEngine, XlaLmEngine};
 use csopt::train::trainer::{LmTrainer, TrainerOptions};
@@ -40,8 +40,8 @@ fn main() {
         ("train_step/xla+sketch-xla", "xla", "xla-cs-adam"),
     ] {
         let emb = OptimSpec::parse(emb).unwrap();
-        let mut opts = TrainerOptions::new(preset, emb, 1e-3);
-        opts.sm = emb.as_dense();
+        let opts =
+            TrainerOptions::with_policy(preset, OptimPolicy::pair(emb, emb.as_dense()), 1e-3);
         let mut rng = Rng::new(1);
         let eng: Box<dyn LmEngine> = if engine == "rust" {
             Box::new(RustLmEngine::new(preset, &mut rng))
@@ -50,7 +50,7 @@ fn main() {
         };
         let mut tr = LmTrainer::new(opts, eng, Some(&rt)).unwrap();
         b.bench(label, || {
-            let loss = tr.train_step(&batch.x, &batch.y);
+            let loss = tr.train_step(&batch.x, &batch.y).unwrap();
             black_box(loss);
         });
     }

@@ -1,14 +1,18 @@
 //! Shared plumbing for the experiment drivers.
+//!
+//! Every driver describes its runs as [`RunSpec`]s ([`run_spec`] builds
+//! the shared skeleton from the CLI args) and constructs them through
+//! [`Session`] — no driver wires `TrainerOptions`/engines by hand
+//! (DESIGN.md §8).
 
 use anyhow::Result;
 
-use crate::config::{lm_preset, LmPreset};
+use crate::config::LmPreset;
 use crate::data::corpus::SyntheticCorpus;
-use crate::optim::{LrSchedule, OptimSpec};
-use crate::train::engine::{LmEngine, RustLmEngine, XlaLmEngine};
-use crate::train::trainer::{LmTrainer, TrainerOptions};
+use crate::optim::OptimSpec;
+use crate::train::session::{RunSpec, Session};
+use crate::train::trainer::LmTrainer;
 use crate::util::cli::Args;
-use crate::util::rng::Rng;
 
 /// Results directory from `--out` (default `results/`).
 pub fn out_dir(args: &Args) -> String {
@@ -18,12 +22,40 @@ pub fn out_dir(args: &Args) -> String {
 /// Synthetic corpus sized for a preset: ≥ `min_windows` BPTT windows per
 /// epoch with Zipf(1.05) tokens and a 60% bigram backbone.
 pub fn corpus_for(p: &LmPreset, min_windows: usize, seed: u64) -> SyntheticCorpus {
-    let need = p.batch * (p.bptt * min_windows + 1) * 10 / 8; // +val/test slack
-    SyntheticCorpus::generate(p.vocab, need, 1.05, 0.6, seed)
+    crate::train::session::corpus_for(p, min_windows, seed)
 }
 
-/// Build a trainer for the given per-layer optimizer specs (see
-/// [`OptimSpec::parse`] for the string grammar the drivers use).
+/// The drivers' shared [`RunSpec`] skeleton: preset + an `emb`/`sm`
+/// policy pair + constant lr, with engine/clip/seed/`--shards`/`--out`
+/// taken from the CLI args. Drivers then set epochs/steps/data seeds and
+/// schedule before building a [`Session`].
+pub fn run_spec(
+    preset: &str,
+    emb: OptimSpec,
+    sm: OptimSpec,
+    lr: f32,
+    args: &Args,
+) -> Result<RunSpec> {
+    let mut rs = RunSpec {
+        preset: preset.to_string(),
+        engine: args.get_or("engine", "rust"),
+        lr,
+        clip: args.get_parse("clip", 1.0f32)?,
+        seed: args.get_parse("seed", 42u64)?,
+        shards: args.get_parse("shards", 0usize)?,
+        out: out_dir(args),
+        ..RunSpec::default()
+    };
+    rs.policy.push("emb", emb)?;
+    rs.policy.push("sm", sm)?;
+    Ok(rs)
+}
+
+/// Build a bare trainer for the given per-layer optimizer specs (see
+/// [`OptimSpec::parse`] for the string grammar the drivers use) — the
+/// legacy `(emb, sm)` construction shape, routed through
+/// [`Session::build_trainer`] so it is bit-identical to the config-file
+/// path.
 ///
 /// `--shards N` applies a default shard count to every sketched layer
 /// spec that does not carry its own `shard=` key (dense/low-rank/AOT
@@ -35,40 +67,7 @@ pub fn build_trainer(
     lr: f32,
     args: &Args,
 ) -> Result<LmTrainer> {
-    let preset = lm_preset(preset_name)?;
-    let shards = args.get_parse("shards", 0usize)?;
-    let (emb, sm) = (emb.or_shards(shards), sm.or_shards(shards));
-    let mut opts = TrainerOptions::new(preset, emb, lr);
-    opts.sm = sm;
-    opts.clip = args.get_parse("clip", 1.0f32)?;
-    opts.seed = args.get_parse("seed", 42u64)?;
-    let engine_name = args.get_or("engine", "rust");
-    let needs_rt = engine_name == "xla" || emb.requires_runtime() || sm.requires_runtime();
-    let rt = if needs_rt {
-        Some(crate::runtime::Runtime::open_default()?)
-    } else {
-        None
-    };
-    let mut rng = Rng::new(opts.seed ^ 0xE11);
-    let engine: Box<dyn LmEngine> = match engine_name.as_str() {
-        "rust" => Box::new(RustLmEngine::new(preset, &mut rng)),
-        "xla" => Box::new(XlaLmEngine::new(preset, rt.as_ref().unwrap(), &mut rng)?),
-        other => anyhow::bail!("unknown engine {other:?} (rust|xla)"),
-    };
-    LmTrainer::new(opts, engine, rt.as_ref())
-}
-
-/// Same, with a schedule instead of a constant lr.
-pub fn build_trainer_sched(
-    preset_name: &str,
-    emb: OptimSpec,
-    sm: OptimSpec,
-    sched: LrSchedule,
-    args: &Args,
-) -> Result<LmTrainer> {
-    let mut tr = build_trainer(preset_name, emb, sm, 0.0, args)?;
-    tr.opts.schedule = sched;
-    Ok(tr)
+    Session::build_trainer(&run_spec(preset_name, emb, sm, lr, args)?)
 }
 
 /// Parse a spec string, panicking with a clear message on failure —

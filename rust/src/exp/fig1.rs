@@ -8,17 +8,21 @@
 use anyhow::Result;
 
 use crate::data::prefetch::PrefetchedBatches;
-use crate::exp::common::{build_trainer, corpus_for, midpoint_threshold, out_dir, spec};
+use crate::exp::common::{midpoint_threshold, out_dir, run_spec, spec};
 use crate::metrics::CsvWriter;
+use crate::train::session::Session;
 use crate::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<()> {
     let steps = args.get_parse("steps", 300usize)?;
     let preset = args.get_or("preset", "tiny");
-    let mut tr = build_trainer(&preset, spec("adam"), spec("adam"), 1e-3, args)?;
-    let p = tr.opts.preset;
-    let corpus = corpus_for(&p, steps + 8, 1);
-    let (train, _, _) = corpus.split(0.05, 0.05);
+    let mut rs = run_spec(&preset, spec("adam"), spec("adam"), 1e-3, args)?;
+    rs.steps = steps;
+    rs.data_seed = Some(1);
+    rs.val_frac = 0.05;
+    rs.test_frac = 0.05;
+    let mut s = Session::build(&rs)?;
+    let p = s.trainer.opts.preset;
 
     let mut csv = CsvWriter::create(
         format!("{}/fig1_midpoint.csv", out_dir(args)),
@@ -28,21 +32,21 @@ pub fn run(args: &Args) -> Result<()> {
     let ids: Vec<u64> = (0..p.vocab as u64).collect();
     let mut m_buf = vec![0.0f32; p.vocab * p.de];
     let mut v_buf = vec![0.0f32; p.vocab * p.de];
-    let pre = PrefetchedBatches::start(train.to_vec(), p.batch, p.bptt, 4);
+    let pre = PrefetchedBatches::start(s.train.clone(), p.batch, p.bptt, 4);
     let mut n = 0usize;
     let mut maxes = (0.0f64, 0.0f64, 0.0f64);
     let mut sums = (0.0f64, 0.0f64, 0.0f64);
     let mut count = 0usize;
     while let Some(b) = pre.next() {
-        tr.train_step(&b.x, &b.y);
+        s.trainer.train_step(&b.x, &b.y)?;
         n += 1;
         if n % 10 == 0 {
-            let plan = tr.last_plan.clone().unwrap();
+            let plan = s.trainer.last_plan.clone().unwrap();
             let live = plan.live;
             let grad_mid =
-                midpoint_threshold(&tr.last_grads().d_emb_rows[..live * p.de]);
-            assert!(tr.emb.opt.estimate_rows(0, &ids, &mut m_buf));
-            assert!(tr.emb.opt.estimate_rows(1, &ids, &mut v_buf));
+                midpoint_threshold(&s.trainer.last_grads().d_emb_rows[..live * p.de]);
+            assert!(s.trainer.emb.opt.estimate_rows(0, &ids, &mut m_buf));
+            assert!(s.trainer.emb.opt.estimate_rows(1, &ids, &mut v_buf));
             let m_mid = midpoint_threshold(&m_buf);
             let v_mid = midpoint_threshold(&v_buf);
             csv.row_f64(&[n as f64, grad_mid, m_mid, v_mid])?;

@@ -6,18 +6,22 @@
 use anyhow::Result;
 
 use crate::data::prefetch::PrefetchedBatches;
-use crate::exp::common::{build_trainer, corpus_for, out_dir, spec};
+use crate::exp::common::{out_dir, run_spec, spec};
 use crate::metrics::CsvWriter;
+use crate::train::session::Session;
 use crate::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<()> {
     let steps_per_epoch = args.get_parse("steps", 100usize)?;
     let epochs = [1usize, 4, 8]; // scaled stand-ins for the paper's 5/20/40
     let preset = args.get_or("preset", "tiny");
-    let mut tr = build_trainer(&preset, spec("adam"), spec("adam"), 1e-3, args)?;
-    let p = tr.opts.preset;
-    let corpus = corpus_for(&p, steps_per_epoch + 8, 2);
-    let (train, _, _) = corpus.split(0.05, 0.05);
+    let mut rs = run_spec(&preset, spec("adam"), spec("adam"), 1e-3, args)?;
+    rs.steps = steps_per_epoch;
+    rs.data_seed = Some(2);
+    rs.val_frac = 0.05;
+    rs.test_frac = 0.05;
+    let mut s = Session::build(&rs)?;
+    let p = s.trainer.opts.preset;
 
     let ids: Vec<u64> = (0..p.vocab as u64).collect();
     let mut m_buf = vec![0.0f32; p.vocab * p.de];
@@ -35,10 +39,10 @@ pub fn run(args: &Args) -> Result<()> {
     let max_epoch = *epochs.iter().max().unwrap();
     let mut v_buf = vec![0.0f32; p.vocab * p.de];
     for epoch in 1..=max_epoch {
-        let pre = PrefetchedBatches::start(train.to_vec(), p.batch, p.bptt, 4);
+        let pre = PrefetchedBatches::start(s.train.clone(), p.batch, p.bptt, 4);
         let mut n = 0;
         while let Some(b) = pre.next() {
-            tr.train_step(&b.x, &b.y);
+            s.trainer.train_step(&b.x, &b.y)?;
             n += 1;
             if n >= steps_per_epoch {
                 break;
@@ -47,8 +51,8 @@ pub fn run(args: &Args) -> Result<()> {
         if !epochs.contains(&epoch) {
             continue;
         }
-        assert!(tr.emb.opt.estimate_rows(0, &ids, &mut m_buf));
-        assert!(tr.emb.opt.estimate_rows(1, &ids, &mut v_buf));
+        assert!(s.trainer.emb.opt.estimate_rows(0, &ids, &mut m_buf));
+        assert!(s.trainer.emb.opt.estimate_rows(1, &ids, &mut v_buf));
         // per-row L2 norms of the 1st moment
         let row_norms: Vec<f32> = (0..p.vocab)
             .map(|r| {

@@ -13,10 +13,11 @@
 use anyhow::Result;
 
 use crate::data::prefetch::PrefetchedBatches;
-use crate::exp::common::{build_trainer, corpus_for, out_dir, spec};
+use crate::exp::common::{out_dir, run_spec, spec};
 use crate::metrics::CsvWriter;
 use crate::optim::lowrank::{L2Rank1, Rank1Factors};
 use crate::sketch::{CountMinSketch, CountSketch, SketchPlan};
+use crate::train::session::Session;
 use crate::util::cli::Args;
 
 fn l2_err(a: &[f32], b: &[f32]) -> f64 {
@@ -26,16 +27,20 @@ fn l2_err(a: &[f32], b: &[f32]) -> f64 {
 pub fn run(args: &Args) -> Result<()> {
     let steps = args.get_parse("steps", 400usize)?;
     let preset = args.get_or("preset", "tiny");
-    let mut tr = build_trainer(&preset, spec("adam"), spec("adam"), 1e-3, args)?;
-    let p = tr.opts.preset;
+    let mut rs = run_spec(&preset, spec("adam"), spec("adam"), 1e-3, args)?;
+    rs.steps = steps;
+    rs.data_seed = Some(3);
+    rs.val_frac = 0.05;
+    rs.test_frac = 0.05;
+    let mut s = Session::build(&rs)?;
+    let p = s.trainer.opts.preset;
     let (n, d) = (p.vocab, p.de);
-    let corpus = corpus_for(&p, steps + 8, 3);
-    let (train, _, _) = corpus.split(0.05, 0.05);
 
     // budget-matched approximators (sketch [3, w, d] with 3·w ≈ n/10)
     let w = (n / 30).max(4);
-    let gamma = tr.opts.emb.hyper.momentum_gamma;
-    let beta2 = tr.opts.emb.hyper.adam_beta2;
+    let hyper = s.trainer.opts.policy.require("emb")?.hyper;
+    let gamma = hyper.momentum_gamma;
+    let beta2 = hyper.adam_beta2;
     // momentum trackers
     let mut m_truth = vec![0.0f32; n * d];
     let mut m_cs = CountSketch::new(3, w, d, 0x5EED);
@@ -52,7 +57,7 @@ pub fn run(args: &Args) -> Result<()> {
         &["step", "m_cs", "m_nmf", "m_l2rank1", "m_norm", "v_cms", "v_nmf", "v_norm"],
     )?;
 
-    let pre = PrefetchedBatches::start(train.to_vec(), p.batch, p.bptt, 4);
+    let pre = PrefetchedBatches::start(s.train.clone(), p.batch, p.bptt, 4);
     let mut step = 0usize;
     let mut delta = vec![0.0f32; 0];
     // hash-once plans per hash family, rebuilt per batch (the two sketches
@@ -61,12 +66,12 @@ pub fn run(args: &Args) -> Result<()> {
     let mut v_plan = SketchPlan::new();
     let l2_every = args.get_parse("l2-every", 25usize)?;
     while let Some(b) = pre.next() {
-        tr.train_step(&b.x, &b.y);
+        s.trainer.train_step(&b.x, &b.y)?;
         step += 1;
-        let plan = tr.last_plan.clone().unwrap();
+        let plan = s.trainer.last_plan.clone().unwrap();
         let live = plan.live;
         let ids = &plan.uniq[..live];
-        let grads = &tr.last_grads().d_emb_rows[..live * d];
+        let grads = &s.trainer.last_grads().d_emb_rows[..live * d];
 
         // --- momentum with standard (dense) semantics: m ← γ·m + g_sparse.
         // The global γ-decay is a *linear* operator, so every tracker

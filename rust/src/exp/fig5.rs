@@ -4,6 +4,8 @@
 //!
 //! Setup mirrors the paper: CMS at 20% of the dense variable's size;
 //! cleaning every 125 iterations with α = 0.2 (Adam) / 0.5 (Adagrad).
+//! Each variant is described as a [`RunSpec`] whose policy `out` rule
+//! selects the classifier's output-layer optimizer.
 
 use anyhow::Result;
 
@@ -12,6 +14,7 @@ use crate::exp::common::{out_dir, print_table, spec};
 use crate::metrics::CsvWriter;
 use crate::model::{MlpGrads, MlpModel};
 use crate::optim::{FlatAdam, FlatOptimizer, RowShape, SparseLayer};
+use crate::train::session::RunSpec;
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
 
@@ -23,17 +26,16 @@ struct RunResult {
 
 fn run_variant(
     label: &str,
-    optim_spec: &str,
+    rs: &RunSpec,
     gm: &GaussianMixture,
     steps: usize,
     batch: usize,
     hd: usize,
-    lr: f32,
-) -> RunResult {
+) -> Result<RunResult> {
     let ncls = gm.classes;
-    let opt = spec(optim_spec)
-        .build_row(&RowShape::new(ncls, hd), None)
-        .unwrap_or_else(|e| panic!("{optim_spec}: {e:#}"));
+    let lr = rs.lr;
+    let out_spec = *rs.policy.require("out")?;
+    let opt = out_spec.build_row(&RowShape::new(ncls, hd), None)?;
     let mut rng = Rng::new(11);
     let mut mlp = MlpModel::new(gm.din, hd, &mut rng);
     let mut out = SparseLayer::new(ncls, hd, 0.05, opt, &mut rng);
@@ -99,11 +101,11 @@ fn run_variant(
             curve.push((t, loss, acc, v_err));
         }
     }
-    RunResult {
+    Ok(RunResult {
         label: label.to_string(),
         final_acc: curve.last().unwrap().2,
         curve,
-    }
+    })
 }
 
 pub fn run(args: &Args) -> Result<()> {
@@ -117,31 +119,21 @@ pub fn run(args: &Args) -> Result<()> {
     let v = 3usize;
     let w = (ncls / 5 / v).max(4);
 
-    // spec strings: CMS at 20% of dense size; the paper's cleaning settings
-    // (α=0.2/C=125 for Adam, α=0.5/C=125 for Adagrad) ride in `clean=`
+    // one RunSpec per variant: CMS at 20% of dense size; the paper's
+    // cleaning settings (α=0.2/C=125 for Adam, α=0.5/C=125 for Adagrad)
+    // ride in the policy rule's `clean=` key
+    let variant = |label: &str, optim: &str, lr: f32| -> Result<RunResult> {
+        let mut rs = RunSpec { lr, ..RunSpec::default() };
+        rs.policy.push("out", spec(optim))?;
+        run_variant(label, &rs, &gm, steps, batch, hd)
+    };
     let variants: Vec<RunResult> = vec![
-        run_variant("adam-dense", "adam", &gm, steps, batch, hd, 1e-3),
-        run_variant(
-            "adam-cms-noclean",
-            &format!("csv-adam@v={v},w={w},seed=1"),
-            &gm, steps, batch, hd, 1e-3,
-        ),
-        run_variant(
-            "adam-cms-clean",
-            &format!("csv-adam@v={v},w={w},clean=0.2/125,seed=1"),
-            &gm, steps, batch, hd, 1e-3,
-        ),
-        run_variant("adagrad-dense", "adagrad", &gm, steps, batch, hd, 0.05),
-        run_variant(
-            "adagrad-cms-noclean",
-            &format!("cs-adagrad@v={v},w={w},seed=1"),
-            &gm, steps, batch, hd, 0.05,
-        ),
-        run_variant(
-            "adagrad-cms-clean",
-            &format!("cs-adagrad@v={v},w={w},clean=0.5/125,seed=1"),
-            &gm, steps, batch, hd, 0.05,
-        ),
+        variant("adam-dense", "adam", 1e-3)?,
+        variant("adam-cms-noclean", &format!("csv-adam@v={v},w={w},seed=1"), 1e-3)?,
+        variant("adam-cms-clean", &format!("csv-adam@v={v},w={w},clean=0.2/125,seed=1"), 1e-3)?,
+        variant("adagrad-dense", "adagrad", 0.05)?,
+        variant("adagrad-cms-noclean", &format!("cs-adagrad@v={v},w={w},seed=1"), 0.05)?,
+        variant("adagrad-cms-clean", &format!("cs-adagrad@v={v},w={w},clean=0.5/125,seed=1"), 0.05)?,
     ];
 
     let dir = out_dir(args);

@@ -9,8 +9,9 @@
 
 use anyhow::Result;
 
-use crate::exp::common::{build_trainer, corpus_for, out_dir, print_table, spec};
+use crate::exp::common::{out_dir, print_table, run_spec, spec};
 use crate::metrics::CsvWriter;
+use crate::train::session::Session;
 use crate::util::cli::Args;
 
 pub fn run(args: &Args) -> Result<()> {
@@ -27,19 +28,20 @@ pub fn run(args: &Args) -> Result<()> {
         ("cs", "cs-momentum"),
         ("lr-nmf", "nmf-momentum"),
     ] {
-        let mut tr = build_trainer(&preset, spec(emb), spec("momentum"), lr, args)?;
-        let p = tr.opts.preset;
-        let corpus = corpus_for(&p, steps + 8, 0xE3);
-        let (train, valid, test) = corpus.split(0.08, 0.08);
+        let mut rs = run_spec(&preset, spec(emb), spec("momentum"), lr, args)?;
+        rs.epochs = epochs;
+        rs.steps = steps;
+        rs.data_seed = Some(0xE3);
+        let mut s = Session::build(&rs)?;
         let mut ppl = f64::INFINITY;
         for e in 1..=epochs {
-            tr.train_epoch(train, steps);
-            let vppl = tr.eval_ppl(valid, 8);
-            tr.report_metric(vppl.ln());
-            ppl = tr.eval_ppl(test, 8);
+            s.epoch()?;
+            let vppl = s.valid_ppl()?;
+            s.trainer.report_metric(vppl.ln());
+            ppl = s.test_ppl()?;
             csv.row(&[&label, &e, &format!("{ppl:.2}")])?;
         }
-        let opt_mb = tr.memory_ledger().total_mb("optimizer");
+        let opt_mb = s.trainer.memory_ledger().total_mb("optimizer");
         results.push((label.to_string(), ppl, opt_mb));
     }
     csv.flush()?;

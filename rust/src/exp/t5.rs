@@ -7,9 +7,9 @@
 
 use anyhow::Result;
 
-use crate::exp::common::{build_trainer_sched, corpus_for, out_dir, print_table, spec};
+use crate::exp::common::{out_dir, print_table, run_spec, spec};
 use crate::metrics::CsvWriter;
-use crate::optim::LrSchedule;
+use crate::train::session::{SchedSpec, Session};
 use crate::util::cli::Args;
 use crate::util::timer::Timer;
 
@@ -21,9 +21,6 @@ pub fn run(args: &Args) -> Result<()> {
     // epochs; at our few-hundred-step scale the equivalent stable setting
     // is a lower peak lr with the same 0.1 clip.
     let lr0 = args.get_parse("lr", 0.1f32)?;
-    let mut args = args.clone();
-    args.options.entry("clip".to_string()).or_insert_with(|| "0.1".to_string());
-    let args = &args;
 
     let mut results = Vec::new();
     let dir = out_dir(args);
@@ -36,18 +33,25 @@ pub fn run(args: &Args) -> Result<()> {
         ("cs", "cs-adagrad"),
         ("lr-nmf", "nmf-adagrad"),
     ] {
-        let sched = LrSchedule::linear(lr0, epochs * steps);
-        let mut tr = build_trainer_sched(&preset, spec(variant), spec(variant), sched, args)?;
-        let p = tr.opts.preset;
-        let corpus = corpus_for(&p, steps + 6, 0xE5);
-        let (train, _, test) = corpus.split(0.05, 0.08);
+        let mut rs = run_spec(&preset, spec(variant), spec(variant), lr0, args)?;
+        rs.epochs = epochs;
+        rs.steps = steps;
+        rs.sched = SchedSpec::Linear;
+        if args.get("clip").is_none() {
+            rs.clip = 0.1;
+        }
+        rs.data_seed = Some(0xE5);
+        rs.windows = Some(steps + 6);
+        rs.val_frac = 0.05;
+        rs.eval_windows = 6;
+        let mut s = Session::build(&rs)?;
         let timer = Timer::start();
         for _ in 0..epochs {
-            tr.train_epoch(train, steps);
+            s.epoch()?;
         }
         let secs = timer.secs() / epochs as f64;
-        let ppl = tr.eval_ppl(test, 6);
-        let ledger = tr.memory_ledger();
+        let ppl = s.test_ppl()?;
+        let ledger = s.trainer.memory_ledger();
         let opt_mb = ledger.total_mb("optimizer");
         let total_mb = ledger.total_mb("");
         csv.row(&[

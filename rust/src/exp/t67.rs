@@ -7,9 +7,9 @@
 
 use anyhow::Result;
 
-use crate::exp::common::{build_trainer_sched, corpus_for, out_dir, print_table, spec};
+use crate::exp::common::{out_dir, print_table, run_spec, spec};
 use crate::metrics::CsvWriter;
-use crate::optim::LrSchedule;
+use crate::train::session::{SchedSpec, Session};
 use crate::util::cli::Args;
 use crate::util::timer::Timer;
 
@@ -34,21 +34,25 @@ pub fn run(args: &Args) -> Result<()> {
         ("cs-v", "csv-adam"),
         ("lr-nmf-v", "nmf-adam"),
     ] {
-        let sched = LrSchedule::linear(lr0, epochs * steps);
-        let mut tr = build_trainer_sched(&preset, spec(variant), spec(variant), sched, args)?;
-        let p = tr.opts.preset;
-        let corpus = corpus_for(&p, steps + 6, 0xE6);
-        let (train, _, test) = corpus.split(0.05, 0.08);
+        let mut rs = run_spec(&preset, spec(variant), spec(variant), lr0, args)?;
+        rs.epochs = epochs;
+        rs.steps = steps;
+        rs.sched = SchedSpec::Linear;
+        rs.data_seed = Some(0xE6);
+        rs.windows = Some(steps + 6);
+        rs.val_frac = 0.05;
+        rs.eval_windows = 4;
+        let mut s = Session::build(&rs)?;
         let timer = Timer::start();
         let mut ppls = Vec::new();
         for e in 1..=epochs {
-            tr.train_epoch(train, steps);
-            let ppl = tr.eval_ppl(test, 4);
+            s.epoch()?;
+            let ppl = s.test_ppl()?;
             t7.row(&[&label, &e, &format!("{ppl:.2}")])?;
             ppls.push(ppl);
         }
         let secs = timer.secs() / epochs as f64;
-        let ledger = tr.memory_ledger();
+        let ledger = s.trainer.memory_ledger();
         let (opt_mb, total_mb) = (ledger.total_mb("optimizer"), ledger.total_mb(""));
         t6.row(&[&label, &format!("{secs:.2}"), &format!("{opt_mb:.1}"), &format!("{total_mb:.1}")])?;
         sum_rows.push(vec![

@@ -9,14 +9,17 @@
 //! at smaller scale: per-step costs that do not scale with batch size
 //! (full-output-layer optimizer update + step overhead) are paid fewer
 //! times per epoch, and the CMS update itself touches ~1% of the state.
+//!
+//! Each variant is a [`RunSpec`] with a `[mach]` section and an `out`
+//! policy rule, built through [`build_mach`] — the same construction
+//! `csopt run` uses for MACH configs.
 
 use anyhow::Result;
 
 use crate::data::classif::ExtremeDataset;
 use crate::exp::common::{out_dir, print_table, spec};
-use crate::mach::{MachEnsemble, MachOptions};
 use crate::metrics::CsvWriter;
-use crate::optim::OptimSpec;
+use crate::train::session::{build_mach, MachParams, RunSpec};
 use crate::util::cli::Args;
 use crate::util::timer::Timer;
 
@@ -29,43 +32,22 @@ struct Row {
     param_mb: f64,
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_variant(
-    label: &str,
-    out_opt: OptimSpec,
-    ds: &ExtremeDataset,
-    b_meta: usize,
-    hd: usize,
-    batch: usize,
-    samples_per_epoch: usize,
-    epochs: usize,
-    recall_queries: usize,
-) -> Result<Row> {
-    let opts = MachOptions {
-        r: 4,
-        b_meta,
-        din: ds.din,
-        hd,
-        seed: 9,
-        // linear lr scaling with batch size (Goyal et al.), as the paper
-        // does when growing the batch 8× on LM1B
-        lr: 2e-3 * (batch as f32 / 192.0),
-        out_opt,
-    };
-    let mut ens = MachEnsemble::new(opts)?;
-    let steps = (samples_per_epoch / batch).max(1);
+fn run_variant(label: &str, rs: &RunSpec, ds: &ExtremeDataset) -> Result<Row> {
+    let m = rs.mach.unwrap();
+    let mut ens = build_mach(rs)?;
+    let steps = (m.samples / m.batch).max(1);
     let timer = Timer::start();
-    for e in 0..epochs {
+    for e in 0..rs.epochs {
         for s in 0..steps {
-            let b = ds.sample(batch, (e * steps + s) as u64 + 1);
-            ens.train_batch(&b.x, &b.y, batch);
+            let b = ds.sample(m.batch, (e * steps + s) as u64 + 1);
+            ens.train_batch(&b.x, &b.y, m.batch);
         }
     }
-    let secs_per_epoch = timer.secs() / epochs as f64;
-    let recall = ens.recall_at_k(ds, recall_queries, 1000, 100, 3);
+    let secs_per_epoch = timer.secs() / rs.epochs as f64;
+    let recall = ens.recall_at_k(ds, m.recall_queries, 1000, 100, 3);
     Ok(Row {
         label: label.to_string(),
-        batch,
+        batch: m.batch,
         secs_per_epoch,
         recall,
         opt_mb: ens.optimizer_bytes() as f64 / (1 << 20) as f64,
@@ -92,15 +74,35 @@ pub fn run(args: &Args) -> Result<()> {
     // vs [20000,1024])
     let w = (b_meta / 100 / 3).max(4) * 4;
 
-    let dense = run_variant(
-        "adam",
-        spec("adam"),
-        &ds, b_meta, hd, base_batch, samples, epochs, recall_queries,
-    )?;
+    // the shared [mach] geometry; each variant overrides batch/policy/lr
+    // (linear lr scaling with batch size — Goyal et al. — as the paper
+    // does when growing the batch 8× on LM1B)
+    let mach_rs = |batch: usize, out: &str, shards: usize| -> Result<RunSpec> {
+        let mut rs = RunSpec {
+            epochs,
+            seed: 9,
+            lr: 2e-3 * (batch as f32 / 192.0),
+            shards,
+            mach: Some(MachParams {
+                r: 4,
+                b_meta,
+                hd,
+                din,
+                classes,
+                batch,
+                samples,
+                recall_queries,
+            }),
+            ..RunSpec::default()
+        };
+        rs.policy.push("out", spec(out))?;
+        Ok(rs)
+    };
+    let dense = run_variant("adam", &mach_rs(base_batch, "adam", 0)?, &ds)?;
     let cs = run_variant(
         "cs-v",
-        spec(&format!("cs-adam-v@v=3,w={w}")).or_shards(shards),
-        &ds, b_meta, hd, big_batch, samples, epochs, recall_queries,
+        &mach_rs(big_batch, &format!("cs-adam-v@v=3,w={w}"), shards)?,
+        &ds,
     )?;
 
     let dir = out_dir(args);

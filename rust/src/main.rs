@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!
+//! * `run <config>` — train a declarative run config (`RunSpec`) with
+//!   per-layer optimizer policies and `--set` overrides
 //! * `train`   — train an LM preset with a chosen optimizer spec
 //! * `exp <id>` — regenerate a paper table/figure (fig1 fig2 fig4 fig5
 //!   t3 t4 t5 t6 t7 t8, or `all`)
@@ -13,13 +15,17 @@
 //! `--sm-optim` overrides the softmax layer (default: dense state with
 //! the same rule). The pre-spec triplet `--optim <rule>` +
 //! `--emb-opt`/`--sm-opt <compression>` still works as a back-compat
-//! alias.
+//! alias. Both paths build the same `RunSpec` a config file describes,
+//! so `csopt train` and `csopt run` are bit-identical for equivalent
+//! settings.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use csopt::data::classif::ExtremeDataset;
 use csopt::exp;
 use csopt::optim::{OptimSpec, Rule};
 use csopt::sketch::CountSketch;
+use csopt::train::session::{build_mach, RunSpec, Session};
 use csopt::util::cli::Args;
 use csopt::util::rng::Rng;
 
@@ -27,12 +33,29 @@ const USAGE: &str = "\
 csopt — Compressing Gradient Optimizers via Count-Sketches (ICML 2019)
 
 USAGE:
+  csopt run <config.conf> [--set k=v[,k=v...]]...
   csopt train [--preset tiny|wt2|wt103|lm1b] [--optim SPEC] [--sm-optim SPEC]
               [--engine rust|xla] [--epochs N] [--steps N] [--lr X]
               [--shards N] [--checkpoint PATH]
   csopt exp <fig1|fig2|fig4|fig5|t3|t4|t5|t6|t7|t8|all> [--steps N] [--epochs N]
   csopt sketch-demo [--width W] [--depth V] [--items N]
   csopt runtime-info
+
+RUN CONFIGS (key = value lines; see examples/configs/):
+  preset engine epochs steps lr schedule clip seed shards out metrics
+  checkpoint resume data.seed data.windows data.val data.test eval.windows
+  An [optim] section maps layer-name globs to optimizer specs, first
+  match wins (layers: emb sm bias trunk, MACH: out):
+    [optim]
+    emb = \"cs-adam@v=3,w=16384\"
+    sm  = \"dense-adam\"
+    *   = \"sgd\"
+  An [mach] section (r b-meta hd din classes batch samples
+  recall-queries) switches the run to the MACH extreme-classification
+  workload; its epoch length is samples/batch (the LM `steps` key does
+  not apply). `--set` overrides any key after parsing (`--set steps=5`
+  or `--set optim.emb=cs-adam@v=3,w=64` — commas inside optimizer specs
+  are kept). A `resume` checkpoint warns, not fails, on a spec mismatch.
 
 OPTIMIZER SPECS ([comp-]rule[@k=v,...]; rules: sgd momentum adagrad adam adam-v):
   dense-<rule> | sgd                             dense auxiliary state
@@ -66,6 +89,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         return Ok(());
     };
     match cmd {
+        "run" => cmd_run(&args),
         "train" => cmd_train(&args),
         "exp" => {
             let Some(id) = args.positional.get(1) else {
@@ -122,52 +146,72 @@ fn optim_specs(args: &Args) -> Result<(OptimSpec, OptimSpec)> {
     Ok((emb, sm))
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let preset = args.get_or("preset", "tiny");
-    let (emb, sm) = optim_specs(args)?;
-    let lr = args.get_parse("lr", 1e-3f32)?;
-    let epochs = args.get_parse("epochs", 2usize)?;
-    let steps = args.get_parse("steps", 200usize)?;
+/// `csopt run <config>`: load, apply `--set` overrides, dispatch on the
+/// task kind, train.
+fn cmd_run(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("run needs a config file path (see examples/configs/ for starters)");
+    };
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading run config {path}"))?;
+    let mut spec = RunSpec::parse(&text).with_context(|| format!("parsing run config {path}"))?;
+    for sets in args.get_all("set") {
+        spec.apply_sets(sets).with_context(|| format!("applying --set {sets}"))?;
+    }
+    spec.validate()?;
+    println!("# resolved run spec ({path})");
+    print!("{spec}");
+    println!();
+    if spec.mach.is_some() {
+        return cmd_run_mach(&spec);
+    }
+    let mut session = Session::build(&spec)?;
+    session.run()?;
+    Ok(())
+}
 
-    let mut tr = exp::common::build_trainer(&preset, emb, sm, lr, args)?;
-    let p = tr.opts.preset;
+/// MACH leg of `csopt run`: the `[mach]` section's workload. Epoch
+/// length comes from the mach geometry (`samples / batch`), not the LM
+/// `steps` key — shrink `samples` to shorten a smoke run.
+fn cmd_run_mach(spec: &RunSpec) -> Result<()> {
+    let m = spec.mach.unwrap();
+    let mut ens = build_mach(spec)?;
+    let ds = ExtremeDataset::new(m.classes, m.din, 24, 1.1, spec.data_seed.unwrap_or(spec.seed));
+    let steps = (m.samples / m.batch).max(1);
     println!(
-        "training preset={} engine={} emb-optim={emb} sm-optim={sm}",
-        p.name,
-        tr.engine.name(),
+        "training MACH r={} b_meta={} classes={} batch={} policy=[{}]",
+        m.r, m.b_meta, m.classes, m.batch, spec.policy
     );
-    println!("{}", tr.memory_ledger().render());
-
-    let corpus = exp::common::corpus_for(&p, steps + 8, args.get_parse("seed", 42u64)?);
-    let (train, valid, test) = corpus.split(0.08, 0.08);
-    for e in 1..=epochs {
-        let r = tr.train_epoch(train, steps);
-        let vppl = tr.eval_ppl(valid, 8);
-        tr.report_metric(vppl.ln());
-        println!(
-            "epoch {e}: {} steps, mean loss {:.4}, train ppl {:.2}, valid ppl {:.2}, {:.1}s ({:.1} steps/s)",
-            r.steps,
-            r.mean_loss,
-            r.train_ppl,
-            vppl,
-            r.secs,
-            r.steps as f64 / r.secs
-        );
+    println!(
+        "  output-layer optimizer {:.2} MB, params {:.2} MB",
+        ens.optimizer_bytes() as f64 / (1 << 20) as f64,
+        ens.param_bytes() as f64 / (1 << 20) as f64
+    );
+    for e in 1..=spec.epochs {
+        let mut total = 0.0f64;
+        for s in 0..steps {
+            let b = ds.sample(m.batch, ((e - 1) * steps + s) as u64 + 1);
+            total += ens.train_batch(&b.x, &b.y, m.batch);
+        }
+        println!("epoch {e}: {steps} steps, mean member loss {:.4}", total / steps as f64);
     }
-    let test_ppl = tr.eval_ppl(test, 8);
-    println!("final test ppl: {test_ppl:.2}");
+    let recall = ens.recall_at_k(&ds, m.recall_queries, 1000, 100, 3);
+    println!("recall@100 over 1000-candidate sets: {recall:.4}");
+    Ok(())
+}
 
-    if let Some(path) = args.get("checkpoint") {
-        let mut ck = csopt::train::checkpoint::Checkpoint::new();
-        ck.set_scalar("step", tr.step as u64);
-        ck.set_blob("emb.params", &tr.emb.params);
-        ck.set_blob("sm.params", &tr.sm.params);
-        let mut flat = Vec::new();
-        tr.engine.pack_flat(&mut flat);
-        ck.set_blob("trunk.params", &flat);
-        ck.save(path)?;
-        println!("checkpoint written to {path}");
-    }
+fn cmd_train(args: &Args) -> Result<()> {
+    let (emb, sm) = optim_specs(args)?;
+    let preset = args.get_or("preset", "tiny");
+    let lr = args.get_parse("lr", 1e-3f32)?;
+    // the same CLI→RunSpec skeleton the exp drivers use (engine, clip,
+    // seed, shards, out + the emb/sm policy pair)
+    let mut spec = exp::common::run_spec(&preset, emb, sm, lr, args)?;
+    spec.epochs = args.get_parse("epochs", 2usize)?;
+    spec.steps = args.get_parse("steps", 200usize)?;
+    spec.checkpoint = args.get("checkpoint").map(str::to_string);
+    let mut session = Session::build(&spec)?;
+    session.run()?;
     Ok(())
 }
 

@@ -34,6 +34,12 @@
 //! hash-once [`SketchPlan`](crate::sketch::SketchPlan) execution core —
 //! results are bit-identical to sequential execution (DESIGN.md §2/§5).
 //!
+//! *Which layer* gets *which* spec is declarative too: an [`OptimPolicy`]
+//! is an ordered map of layer-name globs to specs (`emb = cs-adam@w=4096`,
+//! `* = sgd`; first match wins, DESIGN.md §8) consumed by the trainer,
+//! the MACH ensemble and [`RunSpec`](crate::train::session::RunSpec)
+//! config files.
+//!
 //! # Calling conventions
 //!
 //! Two traits mirror the model split:
@@ -51,6 +57,7 @@
 
 pub mod dense;
 pub mod lowrank;
+pub mod policy;
 pub mod schedule;
 pub mod sketched;
 pub mod spec;
@@ -60,6 +67,7 @@ pub use dense::{
     SparseSgd,
 };
 pub use lowrank::{L2Rank1, NmfAdagrad, NmfAdamV, NmfMomentum};
+pub use policy::{glob_match, OptimPolicy, PolicyRule};
 pub use schedule::LrSchedule;
 pub use sketched::{CmsAdagrad, CmsAdamV, CsAdam, CsMomentum, HybridAdamV};
 pub use spec::{Comp, OptimSpec, RowShape, Rule};
@@ -95,6 +103,12 @@ pub trait RowOptimizer {
     }
 }
 
+impl std::fmt::Debug for dyn RowOptimizer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RowOptimizer({})", self.name())
+    }
+}
+
 /// Optimizer over a flat dense parameter vector.
 pub trait FlatOptimizer {
     /// Apply one step to `params` given `grads`.
@@ -105,6 +119,12 @@ pub trait FlatOptimizer {
 
     /// Short display name.
     fn name(&self) -> &'static str;
+}
+
+impl std::fmt::Debug for dyn FlatOptimizer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "FlatOptimizer({})", self.name())
+    }
 }
 
 /// A sparse layer: `[n, d]` parameters + a row optimizer.

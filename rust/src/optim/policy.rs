@@ -1,0 +1,297 @@
+//! `OptimPolicy` — ordered per-layer optimizer rules.
+//!
+//! The paper's central claim is *per-layer*: compress the auxiliary state
+//! of the sparse Embedding and Softmax layers while the dense trunk stays
+//! exact. A policy makes that selection declarative instead of a
+//! hard-coded `(emb, sm)` pair: an **ordered** list of
+//! `layer-pattern = optimizer-spec` rules, resolved by name with
+//! **first glob match wins** semantics:
+//!
+//! ```text
+//! emb = cs-adam@v=3,w=16384     # the paper's sketched embedding state
+//! sm  = dense-adam              # exact softmax state
+//! *   = sgd                     # everything else (trunk, bias) stateless
+//! ```
+//!
+//! Patterns are globs over layer names: `*` matches any run of
+//! characters, `?` exactly one; everything else is literal. Layer names
+//! in this crate: `emb`, `sm`, `bias`, `trunk` (LM trainer) and `out`
+//! (MACH ensemble / MLP classifiers). Specs are plain
+//! [`OptimSpec`](super::OptimSpec) strings, resolved through
+//! `OptimSpec::parse` unchanged.
+//!
+//! The single-line string form round-trips (`parse` ∘ `Display` is the
+//! identity): rules joined by `"; "`, e.g. `emb=cs-adam; *=sgd`. The
+//! config-file form ([`RunSpec`](crate::train::session::RunSpec)'s
+//! `[optim]` section) is one rule per line.
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::spec::OptimSpec;
+
+/// One `pattern = spec` policy rule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyRule {
+    /// Glob over layer names (`*` any run, `?` one char, rest literal).
+    pub pattern: String,
+    pub spec: OptimSpec,
+}
+
+/// Ordered per-layer optimizer rules; first matching pattern wins.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OptimPolicy {
+    rules: Vec<PolicyRule>,
+}
+
+/// Glob match: `*` matches any (possibly empty) run of characters, `?`
+/// exactly one, everything else literally.
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    let p: Vec<char> = pattern.chars().collect();
+    let n: Vec<char> = name.chars().collect();
+    let (mut pi, mut ni) = (0usize, 0usize);
+    let (mut star, mut mark) = (usize::MAX, 0usize);
+    while ni < n.len() {
+        if pi < p.len() && (p[pi] == '?' || p[pi] == n[ni]) {
+            pi += 1;
+            ni += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star = pi;
+            mark = ni;
+            pi += 1;
+        } else if star != usize::MAX {
+            // backtrack: let the last `*` swallow one more character
+            pi = star + 1;
+            mark += 1;
+            ni = mark;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+fn validate_pattern(pattern: &str) -> Result<()> {
+    if pattern.is_empty() {
+        bail!("empty layer pattern — use a layer name (emb, sm, bias, trunk, out) or a glob");
+    }
+    if let Some(c) = pattern
+        .chars()
+        .find(|c| !(c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.' | '*' | '?')))
+    {
+        bail!(
+            "layer pattern {pattern:?} contains {c:?}: patterns are globs over layer \
+             names (alphanumerics, '_', '-', '.', with '*'/'?' wildcards)"
+        );
+    }
+    Ok(())
+}
+
+impl OptimPolicy {
+    /// An empty policy (matches nothing).
+    pub fn new() -> OptimPolicy {
+        OptimPolicy::default()
+    }
+
+    /// A single `* = spec` rule: every layer gets `spec`.
+    pub fn uniform(spec: OptimSpec) -> OptimPolicy {
+        OptimPolicy { rules: vec![PolicyRule { pattern: "*".to_string(), spec }] }
+    }
+
+    /// The legacy CLI shape: an `emb` rule and an `sm` rule, nothing else
+    /// (so `bias`/`trunk` take the trainer's embedding-derived fallback).
+    pub fn pair(emb: OptimSpec, sm: OptimSpec) -> OptimPolicy {
+        OptimPolicy {
+            rules: vec![
+                PolicyRule { pattern: "emb".to_string(), spec: emb },
+                PolicyRule { pattern: "sm".to_string(), spec: sm },
+            ],
+        }
+    }
+
+    /// The rules, in match order.
+    pub fn rules(&self) -> &[PolicyRule] {
+        &self.rules
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Append a rule (keeps insertion order — earlier rules win).
+    pub fn push(&mut self, pattern: &str, spec: OptimSpec) -> Result<()> {
+        validate_pattern(pattern)?;
+        self.rules.push(PolicyRule { pattern: pattern.to_string(), spec });
+        Ok(())
+    }
+
+    /// Replace the rule with this exact pattern in place, or append a new
+    /// one — the `--set optim.<pattern>=<spec>` override semantics: an
+    /// override keeps the original rule's priority.
+    pub fn set(&mut self, pattern: &str, spec: OptimSpec) -> Result<()> {
+        validate_pattern(pattern)?;
+        if let Some(rule) = self.rules.iter_mut().find(|r| r.pattern == pattern) {
+            rule.spec = spec;
+            return Ok(());
+        }
+        self.rules.push(PolicyRule { pattern: pattern.to_string(), spec });
+        Ok(())
+    }
+
+    /// First rule whose pattern matches `layer`, if any.
+    pub fn resolve(&self, layer: &str) -> Option<&OptimSpec> {
+        self.rules.iter().find(|r| glob_match(&r.pattern, layer)).map(|r| &r.spec)
+    }
+
+    /// Like [`resolve`](OptimPolicy::resolve), but an unmatched layer is
+    /// an actionable error naming the layer and the rules that exist.
+    pub fn require(&self, layer: &str) -> Result<&OptimSpec> {
+        self.resolve(layer).ok_or_else(|| {
+            let rules = self.to_string();
+            anyhow!(
+                "no optimizer policy rule matches layer {layer:?} (rules: [{rules}]) — \
+                 add an `{layer} = <spec>` rule or a `* = <spec>` fallback"
+            )
+        })
+    }
+
+    /// Apply a run-wide default shard count to every rule (a no-op on
+    /// specs that carry their own `shard=` or have no sketch kernels;
+    /// see [`OptimSpec::or_shards`]).
+    pub fn or_shards(mut self, shards: usize) -> OptimPolicy {
+        for rule in &mut self.rules {
+            rule.spec = rule.spec.or_shards(shards);
+        }
+        self
+    }
+
+    /// Does any rule need a PJRT runtime (`xla-cs-*`)?
+    pub fn requires_runtime(&self) -> bool {
+        self.rules.iter().any(|r| r.spec.requires_runtime())
+    }
+
+    /// Parse the single-line form: `pattern=spec` rules joined by `;`.
+    /// The empty string is the empty policy.
+    pub fn parse(s: &str) -> Result<OptimPolicy> {
+        let mut policy = OptimPolicy::new();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((pattern, spec)) = part.split_once('=') else {
+                bail!("policy rule {part:?} is not of the form pattern=spec");
+            };
+            let spec = OptimSpec::parse(spec.trim())
+                .map_err(|e| anyhow!("policy rule for {:?}: {e:#}", pattern.trim()))?;
+            policy.push(pattern.trim(), spec)?;
+        }
+        Ok(policy)
+    }
+}
+
+impl fmt::Display for OptimPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, rule) in self.rules.iter().enumerate() {
+            if i > 0 {
+                f.write_str("; ")?;
+            }
+            write!(f, "{}={}", rule.pattern, rule.spec)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Rule;
+
+    fn spec(s: &str) -> OptimSpec {
+        OptimSpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn glob_semantics() {
+        assert!(glob_match("emb", "emb"));
+        assert!(!glob_match("emb", "emb2"));
+        assert!(glob_match("emb*", "emb2"));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("*", ""));
+        assert!(glob_match("s?", "sm"));
+        assert!(!glob_match("s?", "smx"));
+        assert!(glob_match("*.opt", "emb.opt"));
+        assert!(!glob_match("*.opt", "emb.opt2"));
+        assert!(glob_match("a*b*c", "a-x-b-y-c"));
+        assert!(!glob_match("a*b*c", "a-x-c"));
+    }
+
+    #[test]
+    fn first_match_wins() {
+        let p = OptimPolicy::parse("emb*=cs-adam; *=sgd").unwrap();
+        assert_eq!(p.resolve("emb").unwrap().to_string(), "cs-adam");
+        assert_eq!(p.resolve("emb_b").unwrap().to_string(), "cs-adam");
+        assert_eq!(p.resolve("sm").unwrap().to_string(), "sgd");
+        // a broad rule listed first shadows later specific ones
+        let q = OptimPolicy::parse("*=sgd; emb=cs-adam").unwrap();
+        assert_eq!(q.resolve("emb").unwrap().to_string(), "sgd");
+    }
+
+    #[test]
+    fn unknown_layer_resolution() {
+        let p = OptimPolicy::pair(spec("cs-adam"), spec("adam"));
+        assert!(p.resolve("trunk").is_none());
+        let e = p.require("trunk").unwrap_err().to_string();
+        assert!(e.contains("\"trunk\""), "{e}");
+        assert!(e.contains("fallback"), "{e}");
+        assert!(OptimPolicy::new().require("emb").is_err());
+    }
+
+    #[test]
+    fn round_trips() {
+        for s in [
+            "",
+            "emb=cs-adam",
+            "emb=cs-adam@v=3,w=4096,clean=0.5/1000; sm=adam; *=sgd",
+            "emb*=csv-adam@shard=2; s?=nmf-adagrad",
+        ] {
+            let p = OptimPolicy::parse(s).unwrap();
+            assert_eq!(p.to_string(), s, "round trip of {s:?}");
+            assert_eq!(OptimPolicy::parse(&p.to_string()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn set_overrides_in_place() {
+        let mut p = OptimPolicy::parse("emb=cs-adam; *=sgd").unwrap();
+        p.set("emb", spec("csv-adam")).unwrap();
+        // priority preserved: emb rule still comes before the fallback
+        assert_eq!(p.to_string(), "emb=csv-adam; *=sgd");
+        p.set("sm", spec("adam")).unwrap();
+        assert_eq!(p.to_string(), "emb=csv-adam; *=sgd; sm=adam");
+        // ... so a freshly appended pattern can be shadowed by `*`
+        assert_eq!(p.resolve("sm").unwrap().to_string(), "sgd");
+    }
+
+    #[test]
+    fn invalid_rules_are_rejected() {
+        assert!(OptimPolicy::parse("emb").is_err());
+        assert!(OptimPolicy::parse("emb=frobnicate").is_err());
+        assert!(OptimPolicy::new().push("", spec("sgd")).is_err());
+        assert!(OptimPolicy::new().push("a b", spec("sgd")).is_err());
+    }
+
+    #[test]
+    fn or_shards_and_runtime_propagate() {
+        let p = OptimPolicy::parse("emb=cs-adam; sm=adam").unwrap().or_shards(4);
+        assert_eq!(p.resolve("emb").unwrap().shards, Some(4));
+        assert_eq!(p.resolve("sm").unwrap().shards, None);
+        assert!(!p.requires_runtime());
+        assert!(OptimPolicy::uniform(OptimSpec::new(Rule::Adam, crate::optim::Comp::SketchXla))
+            .requires_runtime());
+    }
+}

@@ -1,5 +1,11 @@
 //! Checkpointing: a simple self-describing binary container of named f32
-//! blobs + u64 scalars (magic `CSOP`, version 1, little-endian).
+//! blobs, u64 scalars and UTF-8 strings (magic `CSOP`, little-endian).
+//!
+//! Version history: v1 had scalars + blobs; v2 adds a string section —
+//! used by [`Session`](crate::train::session::Session) to record the
+//! originating canonical `RunSpec` under the `"runspec"` key, so a resume
+//! can warn when the spec it is restoring into differs from the one that
+//! produced the checkpoint. v1 files still load (no strings).
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -8,13 +14,14 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 const MAGIC: &[u8; 4] = b"CSOP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// In-memory checkpoint contents.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Checkpoint {
     pub scalars: BTreeMap<String, u64>,
     pub blobs: BTreeMap<String, Vec<f32>>,
+    pub strings: BTreeMap<String, String>,
 }
 
 impl Checkpoint {
@@ -30,12 +37,21 @@ impl Checkpoint {
         self.blobs.insert(name.to_string(), v.to_vec());
     }
 
+    pub fn set_str(&mut self, name: &str, v: &str) {
+        self.strings.insert(name.to_string(), v.to_string());
+    }
+
     pub fn scalar(&self, name: &str) -> Result<u64> {
         self.scalars.get(name).copied().with_context(|| format!("scalar {name:?} missing"))
     }
 
     pub fn blob(&self, name: &str) -> Result<&[f32]> {
         self.blobs.get(name).map(|v| v.as_slice()).with_context(|| format!("blob {name:?} missing"))
+    }
+
+    /// A recorded string, if present (v1 checkpoints have none).
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.strings.get(name).map(|s| s.as_str())
     }
 
     /// Serialize to a file (atomic via temp + rename).
@@ -51,6 +67,7 @@ impl Checkpoint {
             w.write_all(&VERSION.to_le_bytes())?;
             w.write_all(&(self.scalars.len() as u32).to_le_bytes())?;
             w.write_all(&(self.blobs.len() as u32).to_le_bytes())?;
+            w.write_all(&(self.strings.len() as u32).to_le_bytes())?;
             for (k, v) in &self.scalars {
                 write_str(&mut w, k)?;
                 w.write_all(&v.to_le_bytes())?;
@@ -64,13 +81,17 @@ impl Checkpoint {
                 };
                 w.write_all(bytes)?;
             }
+            for (k, v) in &self.strings {
+                write_str(&mut w, k)?;
+                write_str(&mut w, v)?;
+            }
             w.flush()?;
         }
         std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
-    /// Load from a file.
+    /// Load from a file (v1 and v2 containers).
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut r = std::io::BufReader::new(std::fs::File::open(path.as_ref())?);
         let mut magic = [0u8; 4];
@@ -79,11 +100,12 @@ impl Checkpoint {
             bail!("not a csopt checkpoint");
         }
         let version = read_u32(&mut r)?;
-        if version != VERSION {
+        if version == 0 || version > VERSION {
             bail!("unsupported checkpoint version {version}");
         }
         let n_scalars = read_u32(&mut r)? as usize;
         let n_blobs = read_u32(&mut r)? as usize;
+        let n_strings = if version >= 2 { read_u32(&mut r)? as usize } else { 0 };
         let mut ck = Checkpoint::new();
         for _ in 0..n_scalars {
             let k = read_str(&mut r)?;
@@ -102,6 +124,11 @@ impl Checkpoint {
             };
             r.read_exact(bytes)?;
             ck.blobs.insert(k, v);
+        }
+        for _ in 0..n_strings {
+            let k = read_str(&mut r)?;
+            let v = read_str(&mut r)?;
+            ck.strings.insert(k, v);
         }
         Ok(ck)
     }
@@ -139,12 +166,34 @@ mod tests {
         ck.set_scalar("step", 1234);
         ck.set_blob("emb", &[1.0, -2.5, 3.25]);
         ck.set_blob("sketch.m", &vec![0.5; 100]);
+        ck.set_str("runspec", "preset = tiny\n\n[optim]\nemb = \"cs-adam\"\n");
         let path = std::env::temp_dir().join(format!("csopt_ck_{}.bin", std::process::id()));
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, ck);
         assert_eq!(back.scalar("step").unwrap(), 1234);
         assert_eq!(back.blob("emb").unwrap(), &[1.0, -2.5, 3.25]);
+        assert_eq!(back.str_opt("runspec"), ck.str_opt("runspec"));
+        assert_eq!(back.str_opt("missing"), None);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn loads_v1_container_without_strings() {
+        // hand-craft a v1 file: magic, version 1, 1 scalar, 0 blobs
+        let path = std::env::temp_dir().join(format!("csopt_v1_{}.bin", std::process::id()));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"CSOP");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_scalars
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // n_blobs
+        bytes.extend_from_slice(&4u32.to_le_bytes()); // key len
+        bytes.extend_from_slice(b"step");
+        bytes.extend_from_slice(&77u64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.scalar("step").unwrap(), 77);
+        assert!(ck.strings.is_empty());
         let _ = std::fs::remove_file(path);
     }
 
@@ -153,6 +202,7 @@ mod tests {
         let ck = Checkpoint::new();
         assert!(ck.scalar("x").is_err());
         assert!(ck.blob("y").is_err());
+        assert_eq!(ck.str_opt("z"), None);
     }
 
     #[test]

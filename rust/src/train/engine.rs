@@ -6,11 +6,14 @@
 //!   Pallas kernels lowered inside).
 //!
 //! Both expose identical semantics; the integration tests hold them to
-//! numerical agreement on the same batch.
+//! numerical agreement on the same batch. Step methods return `Result`:
+//! an XLA execution or output-transfer failure surfaces as a
+//! context-carrying error naming the artifact and the output being read,
+//! not a panic.
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::LmPreset;
 use crate::model::{LmGrads, LmModel, LmStepOut};
@@ -32,7 +35,7 @@ pub trait LmEngine {
         h0: &[f32],
         c0: &[f32],
         grads: &mut LmGrads,
-    ) -> LmStepOut;
+    ) -> Result<LmStepOut>;
 
     #[allow(clippy::too_many_arguments)]
     fn eval_step(
@@ -44,7 +47,7 @@ pub trait LmEngine {
         ytgt: &[i32],
         h0: &[f32],
         c0: &[f32],
-    ) -> LmStepOut;
+    ) -> Result<LmStepOut>;
 
     /// Dense trunk parameters, packed `[w_ih, w_hh, b_g, w_p, b_p]`.
     fn pack_flat(&self, out: &mut Vec<f32>);
@@ -77,11 +80,11 @@ impl LmEngine for RustLmEngine {
         h0: &[f32],
         c0: &[f32],
         grads: &mut LmGrads,
-    ) -> LmStepOut {
+    ) -> Result<LmStepOut> {
         let p = &self.preset;
-        self.model.train_step(
+        Ok(self.model.train_step(
             emb_rows, p.k, sm_rows, sm_bias, p.nc, xslot, ytgt, p.batch, p.bptt, h0, c0, grads,
-        )
+        ))
     }
 
     fn eval_step(
@@ -93,10 +96,11 @@ impl LmEngine for RustLmEngine {
         ytgt: &[i32],
         h0: &[f32],
         c0: &[f32],
-    ) -> LmStepOut {
+    ) -> Result<LmStepOut> {
         let p = &self.preset;
-        self.model
-            .eval_step(emb_rows, sm_rows, sm_bias, p.nc, xslot, ytgt, p.batch, p.bptt, h0, c0)
+        Ok(self
+            .model
+            .eval_step(emb_rows, sm_rows, sm_bias, p.nc, xslot, ytgt, p.batch, p.bptt, h0, c0))
     }
 
     fn pack_flat(&self, out: &mut Vec<f32>) {
@@ -114,6 +118,19 @@ impl LmEngine for RustLmEngine {
     fn name(&self) -> &'static str {
         "rust"
     }
+}
+
+/// Read the scalar f32 output `what` of an artifact call.
+fn read_scalar(lit: &xla::Literal, artifact: &str, what: &str) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .with_context(|| format!("{artifact}: reading scalar output {what:?}"))
+}
+
+/// Copy the `[len]` f32 output `what` of an artifact call into `dst`.
+fn read_into(lit: &xla::Literal, len: usize, dst: &mut Vec<f32>, artifact: &str, what: &str) -> Result<()> {
+    dst.resize(len, 0.0);
+    lit.copy_raw_to(dst)
+        .with_context(|| format!("{artifact}: copying output {what:?} ({len} f32s) to host"))
 }
 
 /// PJRT engine executing the AOT LM graphs.
@@ -174,32 +191,29 @@ impl LmEngine for XlaLmEngine {
         h0: &[f32],
         c0: &[f32],
         grads: &mut LmGrads,
-    ) -> LmStepOut {
+    ) -> Result<LmStepOut> {
         let p = self.preset;
+        let artifact = format!("{}.lm_step", p.name);
         let outs = self
             .step_exe
             .call(&self.args(emb_rows, sm_rows, sm_bias, xslot, ytgt, h0, c0))
-            .expect("lm_step failed");
+            .with_context(|| format!("{artifact}: artifact execution failed"))?;
         // outputs: loss, d_emb, d_w_ih, d_w_hh, d_b_g, d_w_p, d_b_p,
         //          d_sm_rows, d_sm_bias, h_t, c_t
-        let loss = outs[0].get_first_element::<f32>().unwrap() as f64;
-        let read = |i: usize, len: usize, dst: &mut Vec<f32>| {
-            dst.resize(len, 0.0);
-            outs[i].copy_raw_to(dst).unwrap();
-        };
-        read(1, p.k * p.de, &mut grads.d_emb_rows);
-        read(2, p.de * 4 * p.hd, &mut grads.d_w_ih);
-        read(3, p.hd * 4 * p.hd, &mut grads.d_w_hh);
-        read(4, 4 * p.hd, &mut grads.d_b_g);
-        read(5, p.hd * p.de, &mut grads.d_w_p);
-        read(6, p.de, &mut grads.d_b_p);
-        read(7, p.nc * p.de, &mut grads.d_sm_rows);
-        read(8, p.nc, &mut grads.d_sm_bias);
-        let mut h_t = vec![0.0f32; p.batch * p.hd];
-        let mut c_t = vec![0.0f32; p.batch * p.hd];
-        outs[9].copy_raw_to(&mut h_t).unwrap();
-        outs[10].copy_raw_to(&mut c_t).unwrap();
-        LmStepOut { loss, h_t, c_t }
+        let loss = read_scalar(&outs[0], &artifact, "loss")? as f64;
+        read_into(&outs[1], p.k * p.de, &mut grads.d_emb_rows, &artifact, "d_emb_rows")?;
+        read_into(&outs[2], p.de * 4 * p.hd, &mut grads.d_w_ih, &artifact, "d_w_ih")?;
+        read_into(&outs[3], p.hd * 4 * p.hd, &mut grads.d_w_hh, &artifact, "d_w_hh")?;
+        read_into(&outs[4], 4 * p.hd, &mut grads.d_b_g, &artifact, "d_b_g")?;
+        read_into(&outs[5], p.hd * p.de, &mut grads.d_w_p, &artifact, "d_w_p")?;
+        read_into(&outs[6], p.de, &mut grads.d_b_p, &artifact, "d_b_p")?;
+        read_into(&outs[7], p.nc * p.de, &mut grads.d_sm_rows, &artifact, "d_sm_rows")?;
+        read_into(&outs[8], p.nc, &mut grads.d_sm_bias, &artifact, "d_sm_bias")?;
+        let mut h_t = Vec::new();
+        let mut c_t = Vec::new();
+        read_into(&outs[9], p.batch * p.hd, &mut h_t, &artifact, "h_t")?;
+        read_into(&outs[10], p.batch * p.hd, &mut c_t, &artifact, "c_t")?;
+        Ok(LmStepOut { loss, h_t, c_t })
     }
 
     fn eval_step(
@@ -211,18 +225,19 @@ impl LmEngine for XlaLmEngine {
         ytgt: &[i32],
         h0: &[f32],
         c0: &[f32],
-    ) -> LmStepOut {
+    ) -> Result<LmStepOut> {
         let p = self.preset;
+        let artifact = format!("{}.lm_eval", p.name);
         let outs = self
             .eval_exe
             .call(&self.args(emb_rows, sm_rows, sm_bias, xslot, ytgt, h0, c0))
-            .expect("lm_eval failed");
-        let loss = outs[0].get_first_element::<f32>().unwrap() as f64;
-        let mut h_t = vec![0.0f32; p.batch * p.hd];
-        let mut c_t = vec![0.0f32; p.batch * p.hd];
-        outs[1].copy_raw_to(&mut h_t).unwrap();
-        outs[2].copy_raw_to(&mut c_t).unwrap();
-        LmStepOut { loss, h_t, c_t }
+            .with_context(|| format!("{artifact}: artifact execution failed"))?;
+        let loss = read_scalar(&outs[0], &artifact, "loss")? as f64;
+        let mut h_t = Vec::new();
+        let mut c_t = Vec::new();
+        read_into(&outs[1], p.batch * p.hd, &mut h_t, &artifact, "h_t")?;
+        read_into(&outs[2], p.batch * p.hd, &mut c_t, &artifact, "c_t")?;
+        Ok(LmStepOut { loss, h_t, c_t })
     }
 
     fn pack_flat(&self, out: &mut Vec<f32>) {

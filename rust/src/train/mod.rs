@@ -1,14 +1,17 @@
-//! Training orchestration: the LM trainer (both compute engines), softmax
-//! candidate sampling, XLA-backed sketched optimizers, perplexity
-//! evaluation and checkpointing.
+//! Training orchestration: declarative run construction (`RunSpec` →
+//! `Session`), the LM trainer (both compute engines), softmax candidate
+//! sampling, XLA-backed sketched optimizers, perplexity evaluation and
+//! checkpointing.
 
 pub mod checkpoint;
 pub mod engine;
 pub mod sampler;
+pub mod session;
 pub mod trainer;
 pub mod xla_opt;
 
 pub use engine::{LmEngine, RustLmEngine, XlaLmEngine};
 pub use sampler::CandidateSampler;
+pub use session::{build_mach, MachParams, RunSpec, RunSummary, SchedSpec, Session};
 pub use trainer::{LmTrainer, TrainReport, TrainerOptions};
 pub use xla_opt::XlaRowOptimizer;

@@ -1,0 +1,1047 @@
+//! `RunSpec` → `Session`: declarative run construction (DESIGN.md §8).
+//!
+//! [`RunSpec`] does for whole training runs what
+//! [`OptimSpec`](crate::optim::OptimSpec) does for single optimizers: one
+//! typed, file-loadable value describing a run — preset, engine,
+//! epochs/steps, lr schedule, clip, shards, data source/seed, metrics
+//! sinks, checkpoint/resume paths, and an ordered per-layer
+//! [`OptimPolicy`] — with a round-trip `parse`/`Display` config-file
+//! string form:
+//!
+//! ```text
+//! # csopt run examples/configs/paper-cs-adam.conf --set steps=5,epochs=1
+//! preset = tiny
+//! epochs = 2
+//! steps = 200
+//! lr = 0.001
+//!
+//! [optim]
+//! emb = "cs-adam@v=3,w=103"
+//! sm  = "cs-adam@v=3,w=32"
+//! ```
+//!
+//! Grammar: one `key = value` per line, `#` comments, blank lines
+//! ignored, values optionally quoted. Two sections: `[optim]` holds the
+//! ordered `layer-pattern = "optim-spec"` policy rules (first glob match
+//! wins, resolved through `OptimSpec::parse` unchanged); `[mach]` opts a
+//! spec into the MACH extreme-classification workload. Top-level keys:
+//! `preset engine epochs steps lr schedule clip seed shards out metrics
+//! checkpoint resume data.seed data.windows data.val data.test
+//! eval.windows`. `schedule` is `constant`, `linear` (decay to zero over
+//! `epochs·steps`) or `plateau:FACTOR/PATIENCE`.
+//!
+//! [`Session::build`] is the **single** place that turns a spec into
+//! running state: it validates, opens the PJRT runtime when any resolved
+//! optimizer or the engine needs one, builds the engine, applies the
+//! run-wide `shards` default to the policy, constructs the
+//! [`LmTrainer`], synthesizes the corpus from the data seed, and
+//! restores a `resume` checkpoint (warning — not failing — when the
+//! recorded `RunSpec` differs). [`build_mach`] does the same for
+//! [`MachEnsemble`] runs. CLI overrides compose through
+//! [`RunSpec::apply_sets`] (`--set k=v[,k=v...]`), which edits the spec
+//! *after* parsing, so override precedence is by construction.
+//!
+//! A `RunSpec` is deliberately serializable: it is the unit a future
+//! multi-trainer scale-out ships to worker processes (ROADMAP).
+
+use std::fmt;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{lm_preset, LmPreset};
+use crate::data::corpus::SyntheticCorpus;
+use crate::mach::{MachEnsemble, MachOptions};
+use crate::metrics::CsvWriter;
+use crate::optim::{LrSchedule, OptimPolicy, OptimSpec};
+use crate::train::checkpoint::Checkpoint;
+use crate::train::engine::{LmEngine, RustLmEngine, XlaLmEngine};
+use crate::train::trainer::{LmTrainer, TrainReport, TrainerOptions};
+use crate::util::rng::Rng;
+
+/// Learning-rate schedule selector (the file-form counterpart of
+/// [`LrSchedule`], which carries runtime state and step counts).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SchedSpec {
+    /// Fixed lr.
+    Constant,
+    /// Linear decay from `lr` to zero over `epochs · steps`.
+    Linear,
+    /// Multiply by `factor` after `patience` non-improving validations.
+    Plateau { factor: f32, patience: usize },
+}
+
+impl SchedSpec {
+    pub fn parse(s: &str) -> Result<SchedSpec> {
+        match s {
+            "constant" => Ok(SchedSpec::Constant),
+            "linear" => Ok(SchedSpec::Linear),
+            _ => {
+                if let Some(rest) = s.strip_prefix("plateau:") {
+                    let Some((factor, patience)) = rest.split_once('/') else {
+                        bail!(
+                            "plateau schedule wants plateau:FACTOR/PATIENCE \
+                             (e.g. plateau:0.25/2), got {s:?}"
+                        );
+                    };
+                    return Ok(SchedSpec::Plateau {
+                        factor: parse_num("schedule(factor)", factor)?,
+                        patience: parse_num("schedule(patience)", patience)?,
+                    });
+                }
+                bail!(
+                    "unknown schedule {s:?} (constant | linear | plateau:FACTOR/PATIENCE, \
+                     e.g. plateau:0.25/2)"
+                )
+            }
+        }
+    }
+
+    /// Materialize the runtime schedule.
+    pub fn to_schedule(self, lr: f32, total_steps: usize) -> LrSchedule {
+        match self {
+            SchedSpec::Constant => LrSchedule::constant(lr),
+            SchedSpec::Linear => LrSchedule::linear(lr, total_steps),
+            SchedSpec::Plateau { factor, patience } => LrSchedule::plateau(lr, factor, patience),
+        }
+    }
+}
+
+impl fmt::Display for SchedSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchedSpec::Constant => f.write_str("constant"),
+            SchedSpec::Linear => f.write_str("linear"),
+            SchedSpec::Plateau { factor, patience } => write!(f, "plateau:{factor}/{patience}"),
+        }
+    }
+}
+
+/// `[mach]` section: geometry of a MACH extreme-classification run
+/// (defaults mirror the Table 8 driver).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MachParams {
+    /// Meta-classifier count.
+    pub r: usize,
+    /// Meta-classes per classifier.
+    pub b_meta: usize,
+    pub hd: usize,
+    pub din: usize,
+    /// True class count of the synthetic extreme dataset.
+    pub classes: usize,
+    pub batch: usize,
+    /// Samples per epoch.
+    pub samples: usize,
+    /// Queries for the recall@k evaluation.
+    pub recall_queries: usize,
+}
+
+impl Default for MachParams {
+    fn default() -> MachParams {
+        MachParams {
+            r: 4,
+            b_meta: 1024,
+            hd: 256,
+            din: 1024,
+            classes: 200_000,
+            batch: 192,
+            samples: 24_576,
+            recall_queries: 100,
+        }
+    }
+}
+
+/// A declarative run description. See the module docs for the grammar;
+/// `parse` ∘ `Display` is the identity (Display emits non-default keys
+/// in a fixed order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSpec {
+    /// LM preset name (`tiny`, `wt2`, `wt103`, `lm1b`).
+    pub preset: String,
+    /// Compute engine: `rust` or `xla`.
+    pub engine: String,
+    pub epochs: usize,
+    /// Max train windows per epoch (0 = the whole stream).
+    pub steps: usize,
+    /// Peak/constant learning rate (interpreted by `sched`).
+    pub lr: f32,
+    pub sched: SchedSpec,
+    /// Global gradient-norm clip (0 = off).
+    pub clip: f32,
+    /// Trainer seed (init, candidate sampling, engine init).
+    pub seed: u64,
+    /// Run-wide default shard count applied to every sketched policy rule
+    /// without its own `shard=` (0 = none; see `OptimSpec::or_shards`).
+    pub shards: usize,
+    /// Results directory for driver CSVs.
+    pub out: String,
+    /// Epoch-metrics CSV path (a metrics sink; `None` = off).
+    pub metrics: Option<String>,
+    /// Checkpoint save path (written after the final epoch).
+    pub checkpoint: Option<String>,
+    /// Checkpoint to restore before training (warns on spec mismatch).
+    pub resume: Option<String>,
+    /// Synthetic-corpus seed (`None` → `seed`).
+    pub data_seed: Option<u64>,
+    /// Min BPTT windows per epoch in the corpus (`None` → `steps + 8`).
+    pub windows: Option<usize>,
+    pub val_frac: f32,
+    pub test_frac: f32,
+    /// Eval window cap for the valid/test perplexities.
+    pub eval_windows: usize,
+    /// Ordered per-layer optimizer rules (`[optim]` section).
+    pub policy: OptimPolicy,
+    /// MACH workload geometry (`[mach]` section; `None` = LM run).
+    pub mach: Option<MachParams>,
+}
+
+impl Default for RunSpec {
+    fn default() -> RunSpec {
+        RunSpec {
+            preset: "tiny".to_string(),
+            engine: "rust".to_string(),
+            epochs: 2,
+            steps: 200,
+            lr: 1e-3,
+            sched: SchedSpec::Constant,
+            clip: 1.0,
+            seed: 42,
+            shards: 0,
+            out: "results".to_string(),
+            metrics: None,
+            checkpoint: None,
+            resume: None,
+            data_seed: None,
+            windows: None,
+            val_frac: 0.08,
+            test_frac: 0.08,
+            eval_windows: 8,
+            policy: OptimPolicy::new(),
+            mach: None,
+        }
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T>
+where
+    T::Err: fmt::Display,
+{
+    val.parse::<T>().map_err(|e| anyhow!("bad value {val:?} for run-spec key {key}: {e}"))
+}
+
+/// Strip one layer of matching single or double quotes.
+fn unquote(v: &str) -> &str {
+    let v = v.trim();
+    if v.len() >= 2
+        && ((v.starts_with('"') && v.ends_with('"')) || (v.starts_with('\'') && v.ends_with('\'')))
+    {
+        &v[1..v.len() - 1]
+    } else {
+        v
+    }
+}
+
+const TOP_KEYS: &[&str] = &[
+    "preset", "engine", "epochs", "steps", "lr", "schedule", "clip", "seed", "shards", "out",
+    "metrics", "checkpoint", "resume", "data.seed", "data.windows", "data.val", "data.test",
+    "eval.windows",
+];
+
+impl RunSpec {
+    /// Is `key` addressable through [`set`](RunSpec::set)? (Used to
+    /// disambiguate commas in `--set` lists: a `k=v` segment whose key is
+    /// unknown is a continuation of the previous value — optimizer specs
+    /// contain commas.)
+    pub fn known_key(key: &str) -> bool {
+        TOP_KEYS.contains(&key) || key.starts_with("optim.") || key.starts_with("mach.")
+    }
+
+    /// Set one key (the same paths the config-file parser uses, so CLI
+    /// overrides and file keys cannot drift): top-level keys by name,
+    /// policy rules as `optim.<pattern>`, MACH geometry as `mach.<key>`.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        if let Some(pattern) = key.strip_prefix("optim.") {
+            let spec = OptimSpec::parse(value)
+                .with_context(|| format!("optimizer spec for layer pattern {pattern:?}"))?;
+            return self.policy.set(pattern, spec);
+        }
+        if let Some(mk) = key.strip_prefix("mach.") {
+            let m = self.mach.get_or_insert_with(MachParams::default);
+            match mk {
+                "r" => m.r = parse_num(key, value)?,
+                "b-meta" | "b_meta" => m.b_meta = parse_num(key, value)?,
+                "hd" => m.hd = parse_num(key, value)?,
+                "din" => m.din = parse_num(key, value)?,
+                "classes" => m.classes = parse_num(key, value)?,
+                "batch" => m.batch = parse_num(key, value)?,
+                "samples" => m.samples = parse_num(key, value)?,
+                "recall-queries" | "recall_queries" => m.recall_queries = parse_num(key, value)?,
+                other => bail!(
+                    "unknown [mach] key {other:?} (valid: r, b-meta, hd, din, classes, \
+                     batch, samples, recall-queries)"
+                ),
+            }
+            return Ok(());
+        }
+        match key {
+            "preset" => self.preset = value.to_string(),
+            "engine" => self.engine = value.to_string(),
+            "epochs" => self.epochs = parse_num(key, value)?,
+            "steps" => self.steps = parse_num(key, value)?,
+            "lr" => self.lr = parse_num(key, value)?,
+            "schedule" => self.sched = SchedSpec::parse(value)?,
+            "clip" => self.clip = parse_num(key, value)?,
+            "seed" => self.seed = parse_num(key, value)?,
+            "shards" => self.shards = parse_num(key, value)?,
+            "out" => self.out = value.to_string(),
+            "metrics" => self.metrics = Some(value.to_string()),
+            "checkpoint" => self.checkpoint = Some(value.to_string()),
+            "resume" => self.resume = Some(value.to_string()),
+            "data.seed" => self.data_seed = Some(parse_num(key, value)?),
+            "data.windows" => self.windows = Some(parse_num(key, value)?),
+            "data.val" => self.val_frac = parse_num(key, value)?,
+            "data.test" => self.test_frac = parse_num(key, value)?,
+            "eval.windows" => self.eval_windows = parse_num(key, value)?,
+            other => bail!(
+                "unknown run-spec key {other:?} (valid: {}, optim.<pattern>, mach.<key>)",
+                TOP_KEYS.join(", ")
+            ),
+        }
+        Ok(())
+    }
+
+    /// Apply a `--set` override list: comma-separated `key=value`
+    /// assignments. A segment whose key is not a run-spec key continues
+    /// the previous value, so optimizer specs keep their commas:
+    /// `--set steps=5,optim.emb=cs-adam@v=3,w=64,epochs=1` assigns
+    /// `steps`, `optim.emb` (= `cs-adam@v=3,w=64`) and `epochs`.
+    ///
+    /// Two names (`seed`, `shards`) are both run-spec keys and optimizer
+    /// spec parameters; while an `optim.<pattern>` assignment is pending
+    /// they continue the spec (`optim.emb=cs-adam@w=64,seed=9` keeps the
+    /// hash seed in the spec). To set the run-level key too, put it
+    /// *before* the policy rule or use a separate `--set`.
+    pub fn apply_sets(&mut self, sets: &str) -> Result<()> {
+        const OPTIM_PARAM_KEYS: &[&str] =
+            &["v", "w", "clean", "seed", "shard", "shards", "b1", "b2", "eps", "gamma"];
+        let mut pending: Option<(String, String)> = None;
+        for seg in sets.split(',') {
+            let in_optim_value =
+                pending.as_ref().is_some_and(|(k, _)| k.starts_with("optim."));
+            let starts_new = seg.split_once('=').is_some_and(|(k, _)| {
+                let k = k.trim();
+                RunSpec::known_key(k) && !(in_optim_value && OPTIM_PARAM_KEYS.contains(&k))
+            });
+            if starts_new {
+                if let Some((k, v)) = pending.take() {
+                    self.set(&k, unquote(&v))?;
+                }
+                let (k, v) = seg.split_once('=').unwrap();
+                pending = Some((k.trim().to_string(), v.to_string()));
+            } else if let Some((_, v)) = pending.as_mut() {
+                v.push(',');
+                v.push_str(seg);
+            } else {
+                bail!(
+                    "--set segment {seg:?} is not of the form key=value \
+                     (valid keys: {}, optim.<pattern>, mach.<key>)",
+                    TOP_KEYS.join(", ")
+                );
+            }
+        }
+        if let Some((k, v)) = pending {
+            self.set(&k, unquote(&v))?;
+        }
+        Ok(())
+    }
+
+    /// Parse the config-file form. Full-line `#` comments, blank lines
+    /// and quoted values are allowed; section headers `[optim]` /
+    /// `[mach]` switch key interpretation. The result is validated.
+    pub fn parse(text: &str) -> Result<RunSpec> {
+        #[derive(Clone, Copy)]
+        enum Section {
+            Top,
+            Optim,
+            Mach,
+        }
+        let mut spec = RunSpec::default();
+        let mut section = Section::Top;
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line.starts_with('[') {
+                section = match line {
+                    "[optim]" => Section::Optim,
+                    "[mach]" => {
+                        spec.mach.get_or_insert_with(MachParams::default);
+                        Section::Mach
+                    }
+                    other => {
+                        bail!("line {}: unknown section {other:?} (have [optim], [mach])", i + 1)
+                    }
+                };
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("line {}: {line:?} is not of the form key = value", i + 1);
+            };
+            let (key, value) = (key.trim(), unquote(value));
+            let full = match section {
+                Section::Top => key.to_string(),
+                Section::Optim => format!("optim.{key}"),
+                Section::Mach => format!("mach.{key}"),
+            };
+            spec.set(&full, value).with_context(|| format!("line {}", i + 1))?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Check the run-level invariants (policy rules validate themselves
+    /// at `OptimSpec::parse` time).
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.engine.as_str(), "rust" | "xla") {
+            bail!("unknown engine {:?} (rust|xla)", self.engine);
+        }
+        if self.epochs == 0 {
+            bail!("epochs = 0 would train nothing — use epochs ≥ 1");
+        }
+        if self.sched == SchedSpec::Linear && self.steps == 0 {
+            bail!(
+                "schedule = linear decays over epochs·steps, but steps = 0 (whole stream) \
+                 leaves the decay horizon undefined — set steps ≥ 1 or use schedule = constant"
+            );
+        }
+        let frac_ok = |f: f32| (0.0..0.5).contains(&f);
+        if !frac_ok(self.val_frac) || !frac_ok(self.test_frac) {
+            bail!(
+                "data.val/data.test must be fractions in [0, 0.5), got {}/{}",
+                self.val_frac,
+                self.test_frac
+            );
+        }
+        Ok(())
+    }
+
+    /// The canonical form recorded in checkpoints and compared at
+    /// resume: I/O-path keys (out, metrics, checkpoint, resume) are
+    /// stripped, since moving files around does not change what was
+    /// trained.
+    pub fn trained_form(&self) -> String {
+        let mut s = self.clone();
+        s.out = RunSpec::default().out;
+        s.metrics = None;
+        s.checkpoint = None;
+        s.resume = None;
+        s.to_string()
+    }
+}
+
+impl fmt::Display for RunSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let d = RunSpec::default();
+        writeln!(f, "preset = {}", self.preset)?;
+        if self.engine != d.engine {
+            writeln!(f, "engine = {}", self.engine)?;
+        }
+        if self.epochs != d.epochs {
+            writeln!(f, "epochs = {}", self.epochs)?;
+        }
+        if self.steps != d.steps {
+            writeln!(f, "steps = {}", self.steps)?;
+        }
+        if self.lr != d.lr {
+            writeln!(f, "lr = {}", self.lr)?;
+        }
+        if self.sched != d.sched {
+            writeln!(f, "schedule = {}", self.sched)?;
+        }
+        if self.clip != d.clip {
+            writeln!(f, "clip = {}", self.clip)?;
+        }
+        if self.seed != d.seed {
+            writeln!(f, "seed = {}", self.seed)?;
+        }
+        if self.shards != d.shards {
+            writeln!(f, "shards = {}", self.shards)?;
+        }
+        if self.out != d.out {
+            writeln!(f, "out = {}", self.out)?;
+        }
+        if let Some(x) = &self.metrics {
+            writeln!(f, "metrics = {x}")?;
+        }
+        if let Some(x) = &self.checkpoint {
+            writeln!(f, "checkpoint = {x}")?;
+        }
+        if let Some(x) = &self.resume {
+            writeln!(f, "resume = {x}")?;
+        }
+        if let Some(x) = self.data_seed {
+            writeln!(f, "data.seed = {x}")?;
+        }
+        if let Some(x) = self.windows {
+            writeln!(f, "data.windows = {x}")?;
+        }
+        if self.val_frac != d.val_frac {
+            writeln!(f, "data.val = {}", self.val_frac)?;
+        }
+        if self.test_frac != d.test_frac {
+            writeln!(f, "data.test = {}", self.test_frac)?;
+        }
+        if self.eval_windows != d.eval_windows {
+            writeln!(f, "eval.windows = {}", self.eval_windows)?;
+        }
+        if !self.policy.is_empty() {
+            writeln!(f, "\n[optim]")?;
+            for rule in self.policy.rules() {
+                writeln!(f, "{} = \"{}\"", rule.pattern, rule.spec)?;
+            }
+        }
+        if let Some(m) = &self.mach {
+            writeln!(f, "\n[mach]")?;
+            let md = MachParams::default();
+            if m.r != md.r {
+                writeln!(f, "r = {}", m.r)?;
+            }
+            if m.b_meta != md.b_meta {
+                writeln!(f, "b-meta = {}", m.b_meta)?;
+            }
+            if m.hd != md.hd {
+                writeln!(f, "hd = {}", m.hd)?;
+            }
+            if m.din != md.din {
+                writeln!(f, "din = {}", m.din)?;
+            }
+            if m.classes != md.classes {
+                writeln!(f, "classes = {}", m.classes)?;
+            }
+            if m.batch != md.batch {
+                writeln!(f, "batch = {}", m.batch)?;
+            }
+            if m.samples != md.samples {
+                writeln!(f, "samples = {}", m.samples)?;
+            }
+            if m.recall_queries != md.recall_queries {
+                writeln!(f, "recall-queries = {}", m.recall_queries)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Synthetic corpus sized for a preset: ≥ `min_windows` BPTT windows per
+/// epoch with Zipf(1.05) tokens and a 60% bigram backbone.
+pub fn corpus_for(p: &LmPreset, min_windows: usize, seed: u64) -> SyntheticCorpus {
+    let need = p.batch * (p.bptt * min_windows + 1) * 10 / 8; // +val/test slack
+    SyntheticCorpus::generate(p.vocab, need, 1.05, 0.6, seed)
+}
+
+/// Summary returned by [`Session::run`].
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub epochs: Vec<TrainReport>,
+    pub valid_ppl: Vec<f64>,
+    pub test_ppl: f64,
+}
+
+/// A built run: trainer plus its data splits. Construct with
+/// [`Session::build`]; drive with [`Session::run`] (the full epoch loop
+/// with metrics/checkpointing) or manually through the public fields
+/// (the diagnostic drivers step batch-by-batch).
+pub struct Session {
+    pub spec: RunSpec,
+    pub trainer: LmTrainer,
+    pub train: Vec<u32>,
+    pub valid: Vec<u32>,
+    pub test: Vec<u32>,
+}
+
+impl Session {
+    /// Build the trainer described by `spec` — the single construction
+    /// path for every run in the crate: resolves the policy (with the
+    /// run-wide `shards` default), opens the PJRT runtime only when the
+    /// engine or a resolved optimizer needs it, and builds the engine +
+    /// [`LmTrainer`].
+    pub fn build_trainer(spec: &RunSpec) -> Result<LmTrainer> {
+        spec.validate()?;
+        if spec.mach.is_some() {
+            bail!(
+                "this run spec has a [mach] section — build it with \
+                 train::session::build_mach (or `csopt run`, which dispatches on it)"
+            );
+        }
+        let preset = lm_preset(&spec.preset)?;
+        let policy = spec.policy.clone().or_shards(spec.shards);
+        let opts = TrainerOptions {
+            preset,
+            policy,
+            schedule: spec.sched.to_schedule(spec.lr, spec.epochs * spec.steps),
+            clip: spec.clip,
+            seed: spec.seed,
+        };
+        let needs_rt = spec.engine == "xla" || opts.policy.requires_runtime();
+        let rt = if needs_rt {
+            Some(crate::runtime::Runtime::open_default()?)
+        } else {
+            None
+        };
+        let mut rng = Rng::new(opts.seed ^ 0xE11);
+        let engine: Box<dyn LmEngine> = match spec.engine.as_str() {
+            "rust" => Box::new(RustLmEngine::new(preset, &mut rng)),
+            "xla" => Box::new(XlaLmEngine::new(preset, rt.as_ref().unwrap(), &mut rng)?),
+            other => bail!("unknown engine {other:?} (rust|xla)"),
+        };
+        LmTrainer::new(opts, engine, rt.as_ref())
+    }
+
+    /// Build the full session: trainer plus the synthetic corpus splits,
+    /// with the `resume` checkpoint (if any) restored.
+    pub fn build(spec: &RunSpec) -> Result<Session> {
+        let trainer = Session::build_trainer(spec)?;
+        let p = trainer.opts.preset;
+        let windows = spec.windows.unwrap_or(spec.steps + 8);
+        let corpus = corpus_for(&p, windows, spec.data_seed.unwrap_or(spec.seed));
+        let (train, valid, test) = corpus.split(spec.val_frac as f64, spec.test_frac as f64);
+        let mut session = Session {
+            spec: spec.clone(),
+            trainer,
+            train: train.to_vec(),
+            valid: valid.to_vec(),
+            test: test.to_vec(),
+        };
+        session.maybe_resume()?;
+        Ok(session)
+    }
+
+    fn maybe_resume(&mut self) -> Result<()> {
+        let Some(path) = self.spec.resume.clone() else {
+            return Ok(());
+        };
+        let ck = Checkpoint::load(&path)
+            .with_context(|| format!("loading resume checkpoint {path}"))?;
+        let here = self.spec.trained_form();
+        match ck.str_opt("runspec") {
+            Some(recorded) if recorded != here => eprintln!(
+                "warning: checkpoint {path} was written by a different run spec — resuming \
+                 anyway (parameters restore; optimizer state starts fresh)\n\
+                 --- checkpoint spec ---\n{recorded}--- current spec ---\n{here}"
+            ),
+            None => eprintln!(
+                "warning: checkpoint {path} records no run spec (pre-RunSpec container) — \
+                 resuming anyway"
+            ),
+            _ => {}
+        }
+        self.trainer.step = ck.scalar("step")? as usize;
+        let restore = |dst: &mut [f32], name: &str| -> Result<()> {
+            let blob = ck.blob(name)?;
+            if blob.len() != dst.len() {
+                bail!(
+                    "checkpoint blob {name:?} has {} f32s, this run needs {} — preset or \
+                     geometry mismatch",
+                    blob.len(),
+                    dst.len()
+                );
+            }
+            dst.copy_from_slice(blob);
+            Ok(())
+        };
+        restore(&mut self.trainer.emb.params, "emb.params")?;
+        restore(&mut self.trainer.sm.params, "sm.params")?;
+        // older checkpoints have no bias blob; keep the fresh init then
+        if ck.blob("sm_bias.params").is_ok() {
+            restore(&mut self.trainer.sm_bias.params, "sm_bias.params")?;
+        }
+        let trunk = ck.blob("trunk.params")?;
+        if trunk.len() != self.trainer.engine.flat_len() {
+            bail!(
+                "checkpoint trunk has {} f32s, engine wants {}",
+                trunk.len(),
+                self.trainer.engine.flat_len()
+            );
+        }
+        self.trainer.engine.unpack_flat(trunk);
+        Ok(())
+    }
+
+    /// Train one epoch over the train split (the spec's `steps` cap).
+    pub fn epoch(&mut self) -> Result<TrainReport> {
+        self.trainer.train_epoch(&self.train, self.spec.steps)
+    }
+
+    /// Validation perplexity (the spec's `eval.windows` cap).
+    pub fn valid_ppl(&mut self) -> Result<f64> {
+        self.trainer.eval_ppl(&self.valid, self.spec.eval_windows)
+    }
+
+    /// Test perplexity (the spec's `eval.windows` cap).
+    pub fn test_ppl(&mut self) -> Result<f64> {
+        self.trainer.eval_ppl(&self.test, self.spec.eval_windows)
+    }
+
+    /// The full run: epochs × (train → validate → report), a final test
+    /// perplexity, the `metrics` CSV sink, and the `checkpoint` save
+    /// (recording the canonical spec for resume-time comparison).
+    pub fn run(&mut self) -> Result<RunSummary> {
+        println!(
+            "training preset={} engine={} policy=[{}]",
+            self.spec.preset,
+            self.trainer.engine.name(),
+            self.trainer.opts.policy
+        );
+        println!("{}", self.trainer.memory_ledger().render());
+        let mut metrics = match &self.spec.metrics {
+            Some(path) => Some(CsvWriter::create(
+                path,
+                &["epoch", "steps", "mean_loss", "train_ppl", "valid_ppl", "secs"],
+            )?),
+            None => None,
+        };
+        let mut summary =
+            RunSummary { epochs: Vec::new(), valid_ppl: Vec::new(), test_ppl: f64::NAN };
+        for e in 1..=self.spec.epochs {
+            let r = self.epoch()?;
+            let vppl = self.valid_ppl()?;
+            self.trainer.report_metric(vppl.ln());
+            println!(
+                "epoch {e}: {} steps, mean loss {:.4}, train ppl {:.2}, valid ppl {:.2}, \
+                 {:.1}s ({:.1} steps/s)",
+                r.steps,
+                r.mean_loss,
+                r.train_ppl,
+                vppl,
+                r.secs,
+                r.steps as f64 / r.secs
+            );
+            if let Some(csv) = metrics.as_mut() {
+                csv.row(&[
+                    &e,
+                    &r.steps,
+                    &format!("{:.6}", r.mean_loss),
+                    &format!("{:.4}", r.train_ppl),
+                    &format!("{vppl:.4}"),
+                    &format!("{:.3}", r.secs),
+                ])?;
+            }
+            summary.epochs.push(r);
+            summary.valid_ppl.push(vppl);
+        }
+        summary.test_ppl = self.test_ppl()?;
+        println!("final test ppl: {:.2}", summary.test_ppl);
+        if let Some(csv) = metrics.as_mut() {
+            csv.flush()?;
+        }
+        if let Some(path) = self.spec.checkpoint.clone() {
+            self.save_checkpoint(&path)?;
+            println!("checkpoint written to {path}");
+        }
+        Ok(summary)
+    }
+
+    /// Save the training state plus the canonical originating spec.
+    pub fn save_checkpoint(&mut self, path: &str) -> Result<()> {
+        let mut ck = Checkpoint::new();
+        ck.set_scalar("step", self.trainer.step as u64);
+        ck.set_blob("emb.params", &self.trainer.emb.params);
+        ck.set_blob("sm.params", &self.trainer.sm.params);
+        ck.set_blob("sm_bias.params", &self.trainer.sm_bias.params);
+        let mut flat = Vec::new();
+        self.trainer.engine.pack_flat(&mut flat);
+        ck.set_blob("trunk.params", &flat);
+        ck.set_str("runspec", &self.spec.trained_form());
+        ck.save(path)
+    }
+}
+
+/// Build the MACH ensemble described by a spec with a `[mach]` section:
+/// the output layer's optimizer comes from the policy's `"out"` rule
+/// (with the run-wide `shards` default applied), lr/seed from the
+/// top-level keys.
+pub fn build_mach(spec: &RunSpec) -> Result<MachEnsemble> {
+    spec.validate()?;
+    let Some(m) = &spec.mach else {
+        bail!("run spec has no [mach] section — add one, or build an LM run via Session::build");
+    };
+    let out = *spec
+        .policy
+        .require("out")
+        .context("resolving the MACH output layer")?;
+    MachEnsemble::new(MachOptions {
+        r: m.r,
+        b_meta: m.b_meta,
+        din: m.din,
+        hd: m.hd,
+        seed: spec.seed,
+        lr: spec.lr,
+        out_opt: out.or_shards(spec.shards),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn default_spec_round_trips() {
+        let d = RunSpec::default();
+        assert_eq!(d.to_string(), "preset = tiny\n");
+        assert_eq!(RunSpec::parse(&d.to_string()).unwrap(), d);
+    }
+
+    #[test]
+    fn config_text_round_trips() {
+        let text = "\
+preset = wt2
+engine = xla
+epochs = 3
+steps = 120
+lr = 0.5
+schedule = plateau:0.25/2
+clip = 0.1
+seed = 7
+shards = 4
+metrics = results/run.csv
+checkpoint = results/run.ck
+data.seed = 227
+data.val = 0.05
+eval.windows = 6
+
+[optim]
+emb = \"cs-adam@v=3,w=4096,clean=0.5/1000\"
+sm = \"adam\"
+* = \"sgd\"
+";
+        let spec = RunSpec::parse(text).unwrap();
+        assert_eq!(spec.to_string(), text);
+        assert_eq!(RunSpec::parse(&spec.to_string()).unwrap(), spec);
+        assert_eq!(spec.policy.resolve("emb").unwrap().to_string(), "cs-adam@v=3,w=4096,clean=0.5/1000");
+        assert_eq!(spec.policy.resolve("trunk").unwrap().to_string(), "sgd");
+    }
+
+    #[test]
+    fn comments_quotes_and_blank_lines_are_tolerated() {
+        let text = "\
+# a run
+preset = tiny
+lr = '0.01'
+
+[optim]
+# sketch the embedding
+emb = \"cs-adam\"
+sm = cs-adam
+";
+        let spec = RunSpec::parse(text).unwrap();
+        assert_eq!(spec.lr, 0.01);
+        assert_eq!(spec.policy.rules().len(), 2);
+        assert_eq!(spec.policy.resolve("sm").unwrap().to_string(), "cs-adam");
+    }
+
+    #[test]
+    fn mach_section_round_trips() {
+        let text = "preset = tiny\nlr = 0.002\nseed = 9\n\n[optim]\nout = \"cs-adam-v@v=3,w=12\"\n\n[mach]\nb-meta = 512\nbatch = 64\n";
+        let spec = RunSpec::parse(text).unwrap();
+        let m = spec.mach.unwrap();
+        assert_eq!(m.b_meta, 512);
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.r, MachParams::default().r);
+        assert_eq!(spec.to_string(), text);
+        // an all-default [mach] section still marks the spec as a MACH run
+        let bare = RunSpec::parse("preset = tiny\n\n[mach]\n").unwrap();
+        assert_eq!(bare.mach, Some(MachParams::default()));
+        assert_eq!(RunSpec::parse(&bare.to_string()).unwrap(), bare);
+    }
+
+    #[test]
+    fn parse_errors_are_actionable() {
+        for (text, needle) in [
+            ("preset", "key = value"),
+            ("frob = 1", "unknown run-spec key"),
+            ("[weird]\n", "unknown section"),
+            ("epochs = 0\n", "epochs ≥ 1"),
+            ("engine = gpu\n", "rust|xla"),
+            ("schedule = cosine\n", "unknown schedule"),
+            ("schedule = plateau:0.5\n", "FACTOR/PATIENCE"),
+            ("data.val = 0.9\n", "fractions"),
+            ("steps = abc\n", "bad value"),
+            ("[optim]\nemb = frobnicate\n", "unknown optimizer spec head"),
+            ("[mach]\nzap = 1\n", "unknown [mach] key"),
+        ] {
+            let e = format!("{:#}", RunSpec::parse(text).unwrap_err());
+            assert!(e.contains(needle), "{text:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn set_overrides_take_precedence_and_keep_spec_commas() {
+        let mut spec = RunSpec::parse(
+            "preset = tiny\nsteps = 200\n\n[optim]\nemb = \"cs-adam\"\nsm = \"adam\"\n",
+        )
+        .unwrap();
+        spec.apply_sets("steps=5,optim.emb=cs-adam@v=2,w=16,epochs=1,lr=0.01").unwrap();
+        assert_eq!(spec.steps, 5);
+        assert_eq!(spec.epochs, 1);
+        assert_eq!(spec.lr, 0.01);
+        // the w=16 segment folded into the optim.emb value (w is not a
+        // run-spec key), and the override kept the rule's priority slot
+        assert_eq!(spec.policy.rules()[0].pattern, "emb");
+        assert_eq!(spec.policy.resolve("emb").unwrap().to_string(), "cs-adam@v=2,w=16");
+        assert_eq!(spec.policy.resolve("sm").unwrap().to_string(), "adam");
+        // bad leading segment
+        assert!(spec.apply_sets("w=16").is_err());
+        assert!(spec.apply_sets("steps=zzz").is_err());
+    }
+
+    #[test]
+    fn ambiguous_seed_key_stays_inside_a_pending_optim_spec() {
+        let mut spec = RunSpec::default();
+        // while an optim.* assignment is pending, seed= continues the
+        // optimizer spec (it is a sketch-hash parameter there) …
+        spec.apply_sets("optim.emb=csv-adam@v=3,w=64,seed=9,shard=2").unwrap();
+        assert_eq!(spec.seed, RunSpec::default().seed);
+        assert_eq!(spec.shards, 0);
+        assert_eq!(
+            spec.policy.resolve("emb").unwrap().to_string(),
+            "csv-adam@v=3,w=64,seed=9,shard=2"
+        );
+        // … but before any policy rule it is the run-level key
+        let mut spec2 = RunSpec::default();
+        spec2.apply_sets("seed=7,optim.emb=cs-adam").unwrap();
+        assert_eq!(spec2.seed, 7);
+        assert_eq!(spec2.policy.resolve("emb").unwrap().to_string(), "cs-adam");
+    }
+
+    #[test]
+    fn linear_schedule_requires_a_finite_step_horizon() {
+        let e = format!(
+            "{:#}",
+            RunSpec::parse("preset = tiny\nschedule = linear\nsteps = 0\n").unwrap_err()
+        );
+        assert!(e.contains("decay horizon"), "{e}");
+        assert!(RunSpec::parse("preset = tiny\nschedule = linear\nsteps = 10\n").is_ok());
+    }
+
+    #[test]
+    fn trained_form_strips_io_paths() {
+        let mut spec = RunSpec::parse("preset = tiny\n\n[optim]\nemb = \"adam\"\nsm = \"adam\"\n")
+            .unwrap();
+        let base = spec.trained_form();
+        spec.checkpoint = Some("a.ck".into());
+        spec.resume = Some("b.ck".into());
+        spec.metrics = Some("m.csv".into());
+        spec.out = "elsewhere".into();
+        assert_eq!(spec.trained_form(), base);
+        spec.steps = 7;
+        assert_ne!(spec.trained_form(), base);
+    }
+
+    #[test]
+    fn runspec_round_trip_property() {
+        let specs = ["cs-adam", "adam", "cs-adagrad@clean=0.5/100", "csv-adam@v=2,w=64", "sgd"];
+        let presets = ["tiny", "wt2", "wt103", "lm1b"];
+        let patterns = ["emb", "sm", "tr*", "*"];
+        check("runspec-roundtrip", 150, 0x5E55, |rng| {
+            let mut s = RunSpec {
+                preset: presets[rng.below(presets.len())].to_string(),
+                epochs: 1 + rng.below(6),
+                steps: rng.below(500),
+                lr: 0.001 * (1 + rng.below(100)) as f32,
+                sched: match rng.below(3) {
+                    0 => SchedSpec::Constant,
+                    1 => SchedSpec::Linear,
+                    _ => SchedSpec::Plateau { factor: 0.25, patience: 1 + rng.below(4) },
+                },
+                clip: 0.1 * rng.below(20) as f32,
+                seed: rng.next_u64(),
+                shards: rng.below(5),
+                ..RunSpec::default()
+            };
+            if s.sched == SchedSpec::Linear && s.steps == 0 {
+                s.steps = 1; // linear × steps=0 is rejected by validate()
+            }
+            if rng.f32() < 0.3 {
+                s.engine = "xla".to_string();
+            }
+            if rng.f32() < 0.3 {
+                s.metrics = Some("results/m.csv".to_string());
+            }
+            if rng.f32() < 0.3 {
+                s.checkpoint = Some("results/run.ck".to_string());
+            }
+            if rng.f32() < 0.3 {
+                s.data_seed = Some(rng.next_u64());
+            }
+            if rng.f32() < 0.3 {
+                s.windows = Some(1 + rng.below(100));
+            }
+            if rng.f32() < 0.3 {
+                s.val_frac = 0.05;
+            }
+            if rng.f32() < 0.3 {
+                s.eval_windows = 1 + rng.below(16);
+            }
+            for pattern in patterns.iter().take(rng.below(patterns.len() + 1)) {
+                s.policy
+                    .push(pattern, OptimSpec::parse(specs[rng.below(specs.len())]).unwrap())
+                    .map_err(|e| format!("push: {e:#}"))?;
+            }
+            if rng.f32() < 0.4 {
+                s.mach = Some(MachParams {
+                    r: 1 + rng.below(8),
+                    batch: 1 + rng.below(512),
+                    ..MachParams::default()
+                });
+            }
+            let text = s.to_string();
+            let back = RunSpec::parse(&text).map_err(|e| format!("parse({text:?}): {e:#}"))?;
+            if back != s {
+                return Err(format!("{text:?} parsed back as a different spec"));
+            }
+            if back.to_string() != text {
+                return Err(format!("display not stable for {text:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn schedspec_materializes() {
+        assert_eq!(SchedSpec::parse("constant").unwrap(), SchedSpec::Constant);
+        let lin = SchedSpec::parse("linear").unwrap().to_schedule(0.4, 100);
+        assert!((lin.at(1) - 0.4).abs() < 1e-6);
+        assert!(lin.at(100) < 0.005);
+        let mut plat = SchedSpec::parse("plateau:0.25/1").unwrap().to_schedule(1.0, 0);
+        plat.report_metric(5.0);
+        assert!(plat.report_metric(5.0));
+        assert!((plat.at(1) - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn build_rejects_mismatched_task_kinds() {
+        let lm = RunSpec::parse("preset = tiny\n\n[optim]\nemb = \"adam\"\nsm = \"adam\"\n")
+            .unwrap();
+        assert!(format!("{:#}", build_mach(&lm).err().unwrap()).contains("[mach]"));
+        let mach = RunSpec::parse("preset = tiny\n\n[optim]\nout = \"adam\"\n\n[mach]\n")
+            .unwrap();
+        assert!(format!("{:#}", Session::build(&mach).err().unwrap()).contains("build_mach"));
+    }
+
+    #[test]
+    fn build_mach_resolves_out_layer_policy() {
+        let spec = RunSpec::parse(
+            "preset = tiny\nlr = 0.005\nseed = 5\n\n[optim]\nout = \"cs-adam-v@v=3,w=4\"\n\n\
+             [mach]\nr = 3\nb-meta = 32\nhd = 32\ndin = 64\nclasses = 500\n",
+        )
+        .unwrap();
+        let ens = build_mach(&spec).unwrap();
+        // CMS 2nd moment only: 3 members × [3, 4, 32] floats
+        assert_eq!(ens.optimizer_bytes(), 3 * 3 * 4 * 32 * 4);
+        // missing `out` rule is actionable
+        let none = RunSpec::parse("preset = tiny\n\n[mach]\n").unwrap();
+        let e = format!("{:#}", build_mach(&none).err().unwrap());
+        assert!(e.contains("\"out\""), "{e}");
+    }
+}

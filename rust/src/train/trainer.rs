@@ -1,7 +1,7 @@
 //! The LM trainer: wires data pipeline → engine → optimizers and produces
 //! the loss curves / perplexities / memory ledgers the experiments report.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::LmPreset;
 use crate::data::batcher::BatchPlan;
@@ -9,23 +9,27 @@ use crate::data::prefetch::PrefetchedBatches;
 use crate::metrics::MemoryLedger;
 use crate::model::linalg::clip_global_norm;
 use crate::model::LmGrads;
-use crate::optim::{FlatOptimizer, LrSchedule, OptimSpec, RowShape, SparseLayer};
+use crate::optim::{FlatOptimizer, LrSchedule, OptimPolicy, OptimSpec, RowShape, SparseLayer};
 use crate::train::engine::LmEngine;
 use crate::train::sampler::CandidateSampler;
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
-/// Trainer configuration. Per-layer optimizer selection is a pair of
-/// [`OptimSpec`]s — rule, compression, sketch geometry, cleaning and
-/// hyper-parameters all live inside the specs.
+/// Trainer configuration. Per-layer optimizer selection is an ordered
+/// [`OptimPolicy`] resolved by layer name (first glob match wins):
+///
+/// * `"emb"` and `"sm"` **must** resolve — they are the sparse layers the
+///   paper compresses;
+/// * `"bias"` (softmax bias, an `[n, 1]` sparse layer) and `"trunk"` (the
+///   dense LSTM parameter vector) use their matching rule when one
+///   exists, and otherwise fall back to the embedding spec's dense
+///   counterpart — the paper's setup and the legacy `(emb, sm)` CLI
+///   behaviour.
 #[derive(Clone, Debug)]
 pub struct TrainerOptions {
     pub preset: LmPreset,
-    /// Embedding-layer optimizer spec.
-    pub emb: OptimSpec,
-    /// Softmax-layer optimizer spec. The dense trunk and the softmax bias
-    /// follow the embedding spec's rule (dense state, as in the paper).
-    pub sm: OptimSpec,
+    /// Per-layer optimizer policy (layers: emb, sm, bias, trunk).
+    pub policy: OptimPolicy,
     pub schedule: LrSchedule,
     /// Global gradient-norm clip (0 = off).
     pub clip: f32,
@@ -33,16 +37,15 @@ pub struct TrainerOptions {
 }
 
 impl TrainerOptions {
-    /// Options applying `spec` to both sparse layers with a constant lr.
+    /// Options applying `spec` to both sparse layers with a constant lr
+    /// (an `emb`/`sm` rule pair; bias/trunk take the dense fallback).
     pub fn new(preset: LmPreset, spec: OptimSpec, lr: f32) -> TrainerOptions {
-        TrainerOptions {
-            preset,
-            emb: spec,
-            sm: spec,
-            schedule: LrSchedule::constant(lr),
-            clip: 1.0,
-            seed: 42,
-        }
+        TrainerOptions::with_policy(preset, OptimPolicy::pair(spec, spec), lr)
+    }
+
+    /// Options with an explicit per-layer policy and a constant lr.
+    pub fn with_policy(preset: LmPreset, policy: OptimPolicy, lr: f32) -> TrainerOptions {
+        TrainerOptions { preset, policy, schedule: LrSchedule::constant(lr), clip: 1.0, seed: 42 }
     }
 }
 
@@ -83,8 +86,9 @@ pub struct LmTrainer {
 }
 
 impl LmTrainer {
-    /// Build a trainer. `rt` is required for `--engine xla` /
-    /// `xla-cs-*` optimizers.
+    /// Build a trainer, resolving each layer's optimizer through
+    /// `opts.policy`. `rt` is required for `--engine xla` / `xla-cs-*`
+    /// optimizers.
     pub fn new(
         opts: TrainerOptions,
         engine: Box<dyn LmEngine>,
@@ -92,18 +96,29 @@ impl LmTrainer {
     ) -> Result<LmTrainer> {
         let p = opts.preset;
         let mut rng = Rng::new(opts.seed);
+        let emb_spec = *opts.policy.require("emb").context("resolving the embedding layer")?;
+        let sm_spec = *opts.policy.require("sm").context("resolving the softmax layer")?;
         // preset geometry (spec v=/w=/seed= overrides win when present);
         // the two layers hash with decorrelated default seeds
         let emb_shape = RowShape::new(p.vocab, p.de).with_sketch(p.v, p.w_emb).with_slots(p.k);
         let sm_shape = RowShape::new(p.vocab, p.de).with_sketch(p.v, p.w_sm).with_slots(p.nc);
-        let emb_opt = opts.emb.or_seed(opts.emb.hyper.hash_seed).build_row(&emb_shape, rt)?;
-        let sm_opt = opts.sm.or_seed(opts.sm.hyper.hash_seed ^ 0xBEEF).build_row(&sm_shape, rt)?;
+        let emb_opt = emb_spec.or_seed(emb_spec.hyper.hash_seed).build_row(&emb_shape, rt)?;
+        let sm_opt = sm_spec.or_seed(sm_spec.hyper.hash_seed ^ 0xBEEF).build_row(&sm_shape, rt)?;
         let emb = SparseLayer::new(p.vocab, p.de, 0.1, emb_opt, &mut rng);
         let sm = SparseLayer::new(p.vocab, p.de, 0.1, sm_opt, &mut rng);
-        let bias_opt = opts.emb.as_dense().build_row(&RowShape::new(p.vocab, 1), None)?;
+        let bias_opt = match opts.policy.resolve("bias").copied() {
+            Some(s) => s
+                .or_seed(s.hyper.hash_seed ^ 0xB1A5)
+                .build_row(&RowShape::new(p.vocab, 1), rt)
+                .context("building the bias layer optimizer")?,
+            None => emb_spec.as_dense().build_row(&RowShape::new(p.vocab, 1), None)?,
+        };
         let mut sm_bias = SparseLayer::new(p.vocab, 1, 0.0, bias_opt, &mut rng);
         sm_bias.params.iter_mut().for_each(|x| *x = 0.0);
-        let flat_opt = opts.emb.build_flat(engine.flat_len());
+        let flat_opt = match opts.policy.resolve("trunk") {
+            Some(s) => s.build_flat(engine.flat_len()),
+            None => emb_spec.build_flat(engine.flat_len()),
+        };
         let sampler = CandidateSampler::new(p.vocab, p.nc, opts.seed ^ 0xCAFE);
         Ok(LmTrainer {
             opts,
@@ -134,7 +149,7 @@ impl LmTrainer {
     }
 
     /// One training step on a `[b, T]` window. Returns the batch loss.
-    pub fn train_step(&mut self, x: &[u32], y: &[u32]) -> f64 {
+    pub fn train_step(&mut self, x: &[u32], y: &[u32]) -> Result<f64> {
         let p = self.opts.preset;
         self.step += 1;
         let t = self.step;
@@ -157,7 +172,7 @@ impl LmTrainer {
         let out = self.engine.train_step(
             &self.emb_rows, &self.sm_rows, &self.sm_bias_rows, &xslot, &cands.ytgt,
             &h0, &c0, &mut self.grads,
-        );
+        )?;
         self.h = out.h_t;
         self.c = out.c_t;
 
@@ -199,7 +214,7 @@ impl LmTrainer {
         self.flat_params = flat;
         self.last_plan = Some(plan);
 
-        out.loss
+        Ok(out.loss)
     }
 
     /// Gradients of the most recent step (diagnostics).
@@ -209,7 +224,7 @@ impl LmTrainer {
 
     /// Train one epoch over `stream` (at most `max_steps` windows, 0 = all),
     /// with prefetching. Returns the report.
-    pub fn train_epoch(&mut self, stream: &[u32], max_steps: usize) -> TrainReport {
+    pub fn train_epoch(&mut self, stream: &[u32], max_steps: usize) -> Result<TrainReport> {
         let p = self.opts.preset;
         self.reset_state();
         let pre = PrefetchedBatches::start(stream.to_vec(), p.batch, p.bptt, 4);
@@ -221,7 +236,7 @@ impl LmTrainer {
         let mut window_acc = 0.0f64;
         let mut window_n = 0usize;
         while let Some(batch) = pre.next() {
-            let loss = self.train_step(&batch.x, &batch.y);
+            let loss = self.train_step(&batch.x, &batch.y)?;
             losses += loss;
             steps += 1;
             window_acc += loss;
@@ -239,19 +254,19 @@ impl LmTrainer {
             curve.push((self.step, window_acc / window_n as f64));
         }
         let mean_loss = losses / steps.max(1) as f64;
-        TrainReport {
+        Ok(TrainReport {
             steps,
             mean_loss,
             train_ppl: mean_loss.exp(),
             secs: timer.secs(),
             curve,
-        }
+        })
     }
 
     /// Evaluate perplexity over a held-out stream (at most `max_steps`
     /// windows, 0 = all). Uses a *fresh, fixed-seed* candidate sampler so
     /// evaluations are deterministic and comparable across trainers.
-    pub fn eval_ppl(&mut self, stream: &[u32], max_steps: usize) -> f64 {
+    pub fn eval_ppl(&mut self, stream: &[u32], max_steps: usize) -> Result<f64> {
         let p = self.opts.preset;
         let mut eval_sampler = CandidateSampler::new(p.vocab, p.nc, 0xE7A1);
         let mut batcher = crate::data::batcher::BpttBatcher::new(stream, p.batch, p.bptt);
@@ -268,7 +283,7 @@ impl LmTrainer {
             let out = self.engine.eval_step(
                 &self.emb_rows, &self.sm_rows, &self.sm_bias_rows, &plan.slots, &cands.ytgt,
                 &h, &c,
-            );
+            )?;
             h = out.h_t;
             c = out.c_t;
             total += out.loss;
@@ -277,7 +292,7 @@ impl LmTrainer {
                 break;
             }
         }
-        (total / n.max(1) as f64).exp()
+        Ok((total / n.max(1) as f64).exp())
     }
 
     /// Report a validation metric to plateau schedules.
@@ -349,10 +364,10 @@ mod tests {
         let corpus = SyntheticCorpus::generate(512, 20_000, 1.05, 0.6, 1);
         let (train, valid, _) = corpus.split(0.1, 0.05);
         let mut tr = tiny_trainer("adam");
-        let r1 = tr.train_epoch(train, 60);
-        let r2 = tr.train_epoch(train, 60);
+        let r1 = tr.train_epoch(train, 60).unwrap();
+        let r2 = tr.train_epoch(train, 60).unwrap();
         assert!(r2.mean_loss < r1.mean_loss, "{} -> {}", r1.mean_loss, r2.mean_loss);
-        let ppl = tr.eval_ppl(valid, 10);
+        let ppl = tr.eval_ppl(valid, 10).unwrap();
         assert!(ppl < 512.0, "ppl={ppl}");
         assert!(!r1.curve.is_empty());
     }
@@ -363,8 +378,8 @@ mod tests {
         let (train, _, _) = corpus.split(0.1, 0.05);
         let mut dense = tiny_trainer("adam");
         let mut sketch = tiny_trainer("cs-adam");
-        let rd = dense.train_epoch(train, 80);
-        let rs = sketch.train_epoch(train, 80);
+        let rd = dense.train_epoch(train, 80).unwrap();
+        let rs = sketch.train_epoch(train, 80).unwrap();
         // within 15% mean loss of the dense baseline after one pass
         assert!(
             rs.mean_loss < rd.mean_loss * 1.15,
@@ -382,7 +397,7 @@ mod tests {
         let (train, _, _) = corpus.split(0.1, 0.05);
         for spec in ["cs-momentum", "cs-adagrad", "cs-adam-v"] {
             let mut tr = tiny_trainer(spec);
-            let r = tr.train_epoch(train, 20);
+            let r = tr.train_epoch(train, 20).unwrap();
             assert!(r.mean_loss.is_finite(), "{spec}");
         }
     }
@@ -392,7 +407,7 @@ mod tests {
         let corpus = SyntheticCorpus::generate(512, 8_000, 1.05, 0.5, 3);
         let (train, _, _) = corpus.split(0.1, 0.05);
         let mut tr = tiny_trainer("nmf-adagrad");
-        let r = tr.train_epoch(train, 20);
+        let r = tr.train_epoch(train, 20).unwrap();
         assert!(r.mean_loss.is_finite());
     }
 
@@ -414,8 +429,8 @@ mod tests {
         let (train, _, _) = corpus.split(0.1, 0.05);
         let mut seq = tiny_trainer("cs-adam");
         let mut par = tiny_trainer("cs-adam@shard=4");
-        let rs = seq.train_epoch(train, 15);
-        let rp = par.train_epoch(train, 15);
+        let rs = seq.train_epoch(train, 15).unwrap();
+        let rp = par.train_epoch(train, 15).unwrap();
         assert_eq!(rs.mean_loss.to_bits(), rp.mean_loss.to_bits());
         assert_eq!(seq.emb.params, par.emb.params);
     }
@@ -428,5 +443,58 @@ mod tests {
         assert_eq!(small.emb.opt.memory_bytes(), 2 * 3 * 8 * 32 * 4);
         let preset_default = tiny_trainer("cs-adam");
         assert_eq!(preset_default.emb.opt.memory_bytes(), 2 * 3 * 103 * 32 * 4);
+    }
+
+    #[test]
+    fn policy_pair_matches_legacy_emb_sm_construction() {
+        // the legacy (emb, sm) pair expressed as a policy must resolve to
+        // the exact same per-layer optimizers (bias/trunk dense fallback)
+        let preset = lm_preset("tiny").unwrap();
+        let emb = OptimSpec::parse("cs-adam").unwrap();
+        let sm = OptimSpec::parse("adam").unwrap();
+        let opts = TrainerOptions::with_policy(preset, OptimPolicy::pair(emb, sm), 0.01);
+        let mut rng = Rng::new(7);
+        let tr =
+            LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap();
+        assert_eq!(tr.emb.opt.name(), "cs-adam");
+        assert_eq!(tr.sm.opt.name(), "adam");
+        // bias follows the embedding rule with dense state
+        assert!(tr.sm_bias.opt.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn policy_star_fallback_covers_bias_and_trunk() {
+        let preset = lm_preset("tiny").unwrap();
+        let mut policy = OptimPolicy::pair(
+            OptimSpec::parse("cs-adam").unwrap(),
+            OptimSpec::parse("adam").unwrap(),
+        );
+        policy.push("*", OptimSpec::parse("sgd").unwrap()).unwrap();
+        let opts = TrainerOptions::with_policy(preset, policy, 0.01);
+        let mut rng = Rng::new(7);
+        let tr =
+            LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap();
+        // bias and trunk matched the `*` rule → sgd keeps no aux state
+        assert_eq!(tr.sm_bias.opt.memory_bytes(), 0);
+        let ledger = tr.memory_ledger();
+        assert_eq!(
+            ledger.total("optimizer"),
+            tr.emb.opt.memory_bytes() + tr.sm.opt.memory_bytes()
+        );
+    }
+
+    #[test]
+    fn missing_layer_rule_is_actionable() {
+        let preset = lm_preset("tiny").unwrap();
+        let mut policy = OptimPolicy::new();
+        policy.push("emb", OptimSpec::parse("adam").unwrap()).unwrap();
+        let opts = TrainerOptions::with_policy(preset, policy, 0.01);
+        let mut rng = Rng::new(7);
+        let err = LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None)
+            .map(|_| ())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("\"sm\""), "{msg}");
+        assert!(msg.contains("fallback"), "{msg}");
     }
 }

@@ -10,8 +10,11 @@ use anyhow::{anyhow, bail, Result};
 pub struct Args {
     /// Positional arguments, in order.
     pub positional: Vec<String>,
-    /// `--key value` / `--key=value` options.
+    /// `--key value` / `--key=value` options (last occurrence wins).
     pub options: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in order — for options that may
+    /// repeat, like `csopt run`'s `--set` (see [`Args::get_all`]).
+    pub multi: Vec<(String, String)>,
     /// Bare `--flag`s.
     pub flags: Vec<String>,
 }
@@ -28,6 +31,7 @@ impl Args {
                     bail!("bare `--` is not supported");
                 }
                 if let Some((k, v)) = body.split_once('=') {
+                    out.multi.push((k.to_string(), v.to_string()));
                     out.options.insert(k.to_string(), v.to_string());
                 } else if bool_flags.contains(&body) {
                     out.flags.push(body.to_string());
@@ -35,6 +39,7 @@ impl Args {
                     let v = it
                         .next()
                         .ok_or_else(|| anyhow!("option --{body} needs a value"))?;
+                    out.multi.push((body.to_string(), v.clone()));
                     out.options.insert(body.to_string(), v);
                 }
             } else {
@@ -47,6 +52,11 @@ impl Args {
     /// Option value as string.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Every value given for a repeatable option, in order.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.multi.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
     }
 
     /// Option with default.
@@ -91,6 +101,15 @@ mod tests {
         assert!(a.has("verbose"));
         assert_eq!(a.get_parse("steps", 0usize).unwrap(), 100);
         assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn repeated_options_are_kept_in_order() {
+        let a = Args::parse(argv("run f.conf --set steps=5 --set lr=0.1"), &[]).unwrap();
+        // options keeps the last value; multi keeps all of them
+        assert_eq!(a.get("set"), Some("lr=0.1"));
+        assert_eq!(a.get_all("set"), vec!["steps=5", "lr=0.1"]);
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]

@@ -40,8 +40,8 @@ fn rust_and_xla_engines_agree_on_loss_and_grads() {
 
     let mut ga = LmGrads::default();
     let mut gb = LmGrads::default();
-    let oa = rust_eng.train_step(&emb, &sm, &smb, &xslot, &ytgt, &h0, &c0, &mut ga);
-    let ob = xla_eng.train_step(&emb, &sm, &smb, &xslot, &ytgt, &h0, &c0, &mut gb);
+    let oa = rust_eng.train_step(&emb, &sm, &smb, &xslot, &ytgt, &h0, &c0, &mut ga).unwrap();
+    let ob = xla_eng.train_step(&emb, &sm, &smb, &xslot, &ytgt, &h0, &c0, &mut gb).unwrap();
 
     assert!(
         (oa.loss - ob.loss).abs() < 1e-4 * (1.0 + oa.loss.abs()),
@@ -78,7 +78,7 @@ fn engines_agree_over_short_training_run() {
     // Train with both engines on the same stream; losses must stay close
     // (compounding drift would expose any systematic mismatch).
     use csopt::exp::common::corpus_for;
-    use csopt::optim::OptimSpec;
+    use csopt::optim::{OptimPolicy, OptimSpec};
     use csopt::train::trainer::{LmTrainer, TrainerOptions};
 
     let preset = lm_preset("tiny").unwrap();
@@ -88,8 +88,8 @@ fn engines_agree_over_short_training_run() {
 
     let mk = |engine: &str| -> LmTrainer {
         let emb = OptimSpec::parse("cs-adam").unwrap();
-        let mut opts = TrainerOptions::new(preset, emb, 1e-3);
-        opts.sm = emb.as_dense();
+        let mut opts =
+            TrainerOptions::with_policy(preset, OptimPolicy::pair(emb, emb.as_dense()), 1e-3);
         opts.seed = 9;
         let mut rng = Rng::new(9);
         let eng: Box<dyn LmEngine> = if engine == "rust" {
@@ -101,8 +101,8 @@ fn engines_agree_over_short_training_run() {
     };
     let mut tr_rust = mk("rust");
     let mut tr_xla = mk("xla");
-    let ra = tr_rust.train_epoch(train, 16);
-    let rb = tr_xla.train_epoch(train, 16);
+    let ra = tr_rust.train_epoch(train, 16).unwrap();
+    let rb = tr_xla.train_epoch(train, 16).unwrap();
     assert!(
         (ra.mean_loss - rb.mean_loss).abs() < 0.05 * ra.mean_loss,
         "rust {} vs xla {}",

@@ -1,0 +1,169 @@
+//! RunSpec/Session integration: the config-file path must be
+//! bit-identical to the legacy `(emb, sm)` CLI construction, `--set`
+//! overrides must take precedence, and checkpoints must record the
+//! originating spec for resume-time comparison.
+
+use csopt::config::lm_preset;
+use csopt::exp::common::{build_trainer, corpus_for};
+use csopt::optim::OptimSpec;
+use csopt::train::checkpoint::Checkpoint;
+use csopt::train::session::{RunSpec, Session};
+use csopt::util::cli::Args;
+
+fn no_args() -> Args {
+    Args::parse(Vec::<String>::new(), &[]).unwrap()
+}
+
+#[test]
+fn config_policy_matches_legacy_cli_pair_bitwise() {
+    // legacy path: the (emb, sm) pair the CLI flags produce
+    let emb = OptimSpec::parse("cs-adam@v=3,w=64").unwrap();
+    let sm = OptimSpec::parse("adam").unwrap();
+    let mut legacy = build_trainer("tiny", emb, sm, 1e-3, &no_args()).unwrap();
+
+    // config path: the same run as a policy map in config-file text
+    let config = "\
+preset = tiny
+epochs = 2
+steps = 30
+
+[optim]
+emb = \"cs-adam@v=3,w=64\"
+sm = \"adam\"
+";
+    let spec = RunSpec::parse(config).unwrap();
+    let mut s = Session::build(&spec).unwrap();
+
+    // identical corpora by construction (data.seed defaults to seed=42,
+    // windows to steps+8, splits to 0.08/0.08 — the legacy cmd_train setup)
+    let corpus = corpus_for(&lm_preset("tiny").unwrap(), 30 + 8, 42);
+    let (train, valid, _) = corpus.split(0.08, 0.08);
+    assert_eq!(train, &s.train[..]);
+    assert_eq!(valid, &s.valid[..]);
+
+    for epoch in 0..2 {
+        let rl = legacy.train_epoch(train, 30).unwrap();
+        let rc = s.epoch().unwrap();
+        assert_eq!(
+            rl.mean_loss.to_bits(),
+            rc.mean_loss.to_bits(),
+            "epoch {epoch}: legacy {} vs config {}",
+            rl.mean_loss,
+            rc.mean_loss
+        );
+    }
+    assert_eq!(legacy.emb.params, s.trainer.emb.params);
+    assert_eq!(legacy.sm.params, s.trainer.sm.params);
+    assert_eq!(legacy.sm_bias.params, s.trainer.sm_bias.params);
+    let vl = legacy.eval_ppl(valid, 8).unwrap();
+    let vc = s.valid_ppl().unwrap();
+    assert_eq!(vl.to_bits(), vc.to_bits());
+}
+
+#[test]
+fn set_overrides_beat_config_file_values() {
+    let config = "\
+preset = tiny
+epochs = 9
+steps = 200
+lr = 0.5
+
+[optim]
+emb = \"cs-adam\"
+sm = \"adam\"
+";
+    let mut spec = RunSpec::parse(config).unwrap();
+    spec.apply_sets("steps=5,epochs=1").unwrap();
+    spec.apply_sets("optim.emb=cs-adam@v=2,w=16,lr=0.001").unwrap();
+    assert_eq!(spec.steps, 5);
+    assert_eq!(spec.epochs, 1);
+    assert_eq!(spec.lr, 0.001);
+    assert_eq!(spec.policy.resolve("emb").unwrap().to_string(), "cs-adam@v=2,w=16");
+    // the overridden spec still builds and trains end-to-end
+    let mut s = Session::build(&spec).unwrap();
+    let summary = s.run().unwrap();
+    assert_eq!(summary.epochs.len(), 1);
+    assert_eq!(summary.epochs[0].steps, 5);
+    assert!(summary.test_ppl.is_finite());
+}
+
+#[test]
+fn policy_resolution_governs_session_layers() {
+    let spec = RunSpec::parse(
+        "preset = tiny\nsteps = 5\nepochs = 1\n\n[optim]\nemb = \"cs-adam\"\n* = \"sgd\"\n",
+    )
+    .unwrap();
+    let s = Session::build(&spec).unwrap();
+    // first match wins: emb gets the sketch, sm falls through to `*`
+    assert_eq!(s.trainer.emb.opt.name(), "cs-adam");
+    assert_eq!(s.trainer.sm.opt.name(), "sgd");
+    assert_eq!(s.trainer.sm_bias.opt.memory_bytes(), 0);
+
+    // unknown layer: no rule matches sm → actionable error
+    let bad = RunSpec::parse("preset = tiny\n\n[optim]\nemb = \"cs-adam\"\n").unwrap();
+    let err = format!("{:#}", Session::build(&bad).err().unwrap());
+    assert!(err.contains("\"sm\""), "{err}");
+}
+
+#[test]
+fn checkpoint_records_spec_and_resume_restores_state() {
+    let dir = std::env::temp_dir().join(format!("csopt_runspec_{}", std::process::id()));
+    let ck_path = dir.join("run.ck").display().to_string();
+    let config = format!(
+        "preset = tiny\nepochs = 1\nsteps = 8\ncheckpoint = {ck_path}\n\n\
+         [optim]\nemb = \"adam\"\nsm = \"adam\"\n"
+    );
+    let spec = RunSpec::parse(&config).unwrap();
+    let mut s = Session::build(&spec).unwrap();
+    s.run().unwrap();
+
+    // the canonical originating spec rides in the checkpoint
+    let ck = Checkpoint::load(&ck_path).unwrap();
+    assert_eq!(ck.str_opt("runspec"), Some(spec.trained_form().as_str()));
+    assert_eq!(ck.scalar("step").unwrap(), 8);
+
+    // resuming restores parameters and the step counter; a same-spec
+    // resume round-trips without touching the trained state
+    let mut resumed_spec = spec.clone();
+    resumed_spec.checkpoint = None;
+    resumed_spec.resume = Some(ck_path.clone());
+    let mut resumed = Session::build(&resumed_spec).unwrap();
+    assert_eq!(resumed.trainer.step, s.trainer.step);
+    assert_eq!(resumed.trainer.emb.params, s.trainer.emb.params);
+    assert_eq!(resumed.trainer.sm.params, s.trainer.sm.params);
+    assert_eq!(resumed.trainer.sm_bias.params, s.trainer.sm_bias.params);
+    let a = resumed.test_ppl().unwrap();
+    let b = s.test_ppl().unwrap();
+    assert_eq!(a.to_bits(), b.to_bits());
+
+    // a mismatched spec must still resume (warn-only), not fail
+    let mut drifted = resumed_spec.clone();
+    drifted.lr = 0.9;
+    let drifted_session = Session::build(&drifted).unwrap();
+    assert_eq!(drifted_session.trainer.step, s.trainer.step);
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn session_rejects_wrong_geometry_resume() {
+    let dir = std::env::temp_dir().join(format!("csopt_runspec_geo_{}", std::process::id()));
+    let ck_path = dir.join("run.ck").display().to_string();
+    let config = format!(
+        "preset = tiny\nepochs = 1\nsteps = 4\ncheckpoint = {ck_path}\n\n\
+         [optim]\nemb = \"adam\"\nsm = \"adam\"\n"
+    );
+    let spec = RunSpec::parse(&config).unwrap();
+    Session::build(&spec).unwrap().run().unwrap();
+
+    // resuming a tiny checkpoint into a wt2-sized run is a hard error
+    // (parameter shapes cannot transfer), with the blob named
+    let mut wrong = spec.clone();
+    wrong.preset = "wt2".to_string();
+    wrong.checkpoint = None;
+    wrong.resume = Some(ck_path);
+    let err = format!("{:#}", Session::build(&wrong).err().unwrap());
+    assert!(err.contains("emb.params"), "{err}");
+
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -4,15 +4,16 @@
 use csopt::config::lm_preset;
 use csopt::data::corpus::SyntheticCorpus;
 use csopt::exp::common::corpus_for;
-use csopt::optim::OptimSpec;
+use csopt::optim::{OptimPolicy, OptimSpec};
 use csopt::train::engine::RustLmEngine;
 use csopt::train::trainer::{LmTrainer, TrainerOptions};
 use csopt::util::rng::Rng;
 
 fn trainer(emb: &str, sm: &str, lr: f32, seed: u64) -> LmTrainer {
     let preset = lm_preset("tiny").unwrap();
-    let mut opts = TrainerOptions::new(preset, OptimSpec::parse(emb).unwrap(), lr);
-    opts.sm = OptimSpec::parse(sm).unwrap();
+    let policy =
+        OptimPolicy::pair(OptimSpec::parse(emb).unwrap(), OptimSpec::parse(sm).unwrap());
+    let mut opts = TrainerOptions::with_policy(preset, policy, lr);
     opts.seed = seed;
     let mut rng = Rng::new(seed);
     LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap()
@@ -36,8 +37,8 @@ fn every_optimizer_variant_reduces_loss() {
     for (emb, lr) in cases {
         let sm = OptimSpec::parse(emb).unwrap().as_dense().to_string();
         let mut tr = trainer(emb, &sm, lr, 1);
-        let first = tr.train_epoch(train, 30).mean_loss;
-        let second = tr.train_epoch(train, 30).mean_loss;
+        let first = tr.train_epoch(train, 30).unwrap().mean_loss;
+        let second = tr.train_epoch(train, 30).unwrap().mean_loss;
         assert!(
             second < first,
             "{emb}: loss did not decrease ({first} -> {second})"
@@ -52,11 +53,11 @@ fn sketch_uses_less_memory_dense_same_quality_tiny() {
     let mut dense = trainer("adam", "adam", 1e-3, 2);
     let mut sketch = trainer("cs-adam", "adam", 1e-3, 2);
     for _ in 0..2 {
-        dense.train_epoch(train, 100);
-        sketch.train_epoch(train, 100);
+        dense.train_epoch(train, 100).unwrap();
+        sketch.train_epoch(train, 100).unwrap();
     }
-    let pd = dense.eval_ppl(test, 8);
-    let ps = sketch.eval_ppl(test, 8);
+    let pd = dense.eval_ppl(test, 8).unwrap();
+    let ps = sketch.eval_ppl(test, 8).unwrap();
     // paper shape: CS within a few percent of dense
     assert!(ps < pd * 1.2, "sketch ppl {ps} vs dense {pd}");
     // tiny preset: [3, 103, 32] ×2 sketches vs [512, 32] ×2 dense states
@@ -73,7 +74,7 @@ fn recurrent_state_carries_across_windows() {
     let unigram = corpus.unigram_entropy();
     let mut last = f64::INFINITY;
     for _ in 0..4 {
-        last = tr.train_epoch(train, 60).mean_loss;
+        last = tr.train_epoch(train, 60).unwrap().mean_loss;
     }
     assert!(
         last < unigram,
@@ -87,8 +88,8 @@ fn checkpoint_roundtrip_preserves_training_state() {
     let corpus = SyntheticCorpus::generate(512, 8_000, 1.05, 0.5, 7);
     let (train, _, test) = corpus.split(0.05, 0.08);
     let mut tr = trainer("adam", "adam", 1e-3, 4);
-    tr.train_epoch(train, 20);
-    let ppl_before = tr.eval_ppl(test, 4);
+    tr.train_epoch(train, 20).unwrap();
+    let ppl_before = tr.eval_ppl(test, 4).unwrap();
 
     let mut ck = Checkpoint::new();
     ck.set_scalar("step", tr.step as u64);
@@ -108,7 +109,7 @@ fn checkpoint_roundtrip_preserves_training_state() {
     tr2.sm.params.copy_from_slice(back.blob("sm").unwrap());
     tr2.sm_bias.params.copy_from_slice(back.blob("smb").unwrap());
     tr2.engine.unpack_flat(back.blob("trunk").unwrap());
-    let ppl_after = tr2.eval_ppl(test, 4);
+    let ppl_after = tr2.eval_ppl(test, 4).unwrap();
     assert!(
         (ppl_before - ppl_after).abs() < 1e-6 * ppl_before.max(1.0),
         "{ppl_before} vs {ppl_after}"
@@ -137,11 +138,13 @@ fn cleaning_policy_threads_through_trainer() {
     let preset = lm_preset("tiny").unwrap();
     let corpus = corpus_for(&preset, 16, 9);
     let (train, _, _) = corpus.split(0.05, 0.05);
-    let mut opts =
-        TrainerOptions::new(preset, OptimSpec::parse("cs-adagrad@clean=0.5/5").unwrap(), 0.1);
-    opts.sm = OptimSpec::parse("adagrad").unwrap();
+    let policy = OptimPolicy::pair(
+        OptimSpec::parse("cs-adagrad@clean=0.5/5").unwrap(),
+        OptimSpec::parse("adagrad").unwrap(),
+    );
+    let opts = TrainerOptions::with_policy(preset, policy, 0.1);
     let mut rng = Rng::new(12);
     let mut tr = LmTrainer::new(opts, Box::new(RustLmEngine::new(preset, &mut rng)), None).unwrap();
-    let r = tr.train_epoch(train, 12);
+    let r = tr.train_epoch(train, 12).unwrap();
     assert!(r.mean_loss.is_finite());
 }
