@@ -139,6 +139,28 @@ fn main() {
         black_box(&rows);
     });
 
+    // small-sketch shard scaling: with the persistent `parallel_map` pool
+    // (no spawn+join per call) shard>1 must track the sequential row at
+    // this size instead of losing tens of µs to thread spawns — the
+    // regression guard for DESIGN.md §Perf's "small-sketch sharding" row
+    {
+        let (k, d, w) = (256usize, 32usize, 512usize);
+        let (ids, grads) = ids_and_grads(4096, k, d, 3);
+        for shards in [1usize, 2, 4] {
+            let mut cs = CountSketch::new(3, w, d, 7).with_shards(shards);
+            let plan = cs.plan(&ids);
+            b.bench(&format!("cs_update_small/k{k}.d{d}.w{w}.shard{shards}"), || {
+                cs.update_with(&plan, &grads);
+                black_box(&cs);
+            });
+            let mut out = vec![0.0f32; k * d];
+            b.bench(&format!("cs_query_small/k{k}.d{d}.w{w}.shard{shards}"), || {
+                cs.query_with(&plan, &mut out);
+                black_box(&out);
+            });
+        }
+    }
+
     // fold + clean maintenance ops
     let mut cs = CountSketch::new(3, 8192, 256, 9);
     b.bench("maintenance/clean.w8192.d256", || {

@@ -1,0 +1,168 @@
+//! In-memory [`Transport`]: all ranks live in one process (test threads).
+//!
+//! Deterministic by construction — ranks enter each collective in rank
+//! order (rank r waits until the r ranks below it have contributed), so
+//! the accumulation order matches the UDS coordinator's and every rank
+//! leaves with identical bits. A generation counter lets a fast rank
+//! start the next collective only after the previous one fully drained.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::Transport;
+
+struct MemState {
+    generation: u64,
+    entered: usize,
+    left: usize,
+    buf: Vec<f32>,
+}
+
+struct MemShared {
+    m: Mutex<MemState>,
+    cv: Condvar,
+    world: usize,
+}
+
+/// One rank's endpoint of an in-memory world (see [`mem_world`]).
+pub struct MemComm {
+    shared: Arc<MemShared>,
+    rank: usize,
+    generation: u64,
+}
+
+/// Create the `world` connected endpoints of an in-memory transport.
+pub fn mem_world(world: usize) -> Vec<MemComm> {
+    assert!(world >= 1);
+    let shared = Arc::new(MemShared {
+        m: Mutex::new(MemState { generation: 0, entered: 0, left: 0, buf: Vec::new() }),
+        cv: Condvar::new(),
+        world,
+    });
+    (0..world)
+        .map(|rank| MemComm { shared: Arc::clone(&shared), rank, generation: 0 })
+        .collect()
+}
+
+impl MemComm {
+    fn collective(&mut self, buf: &mut [f32]) -> Result<()> {
+        let shared = &self.shared;
+        let mut g = shared.m.lock().unwrap();
+        // wait for this generation and for my rank-order turn to add
+        while g.generation != self.generation || g.entered != self.rank {
+            g = shared.cv.wait(g).unwrap();
+        }
+        if g.entered == 0 {
+            g.buf.clear();
+            g.buf.extend_from_slice(buf);
+        } else {
+            if g.buf.len() != buf.len() {
+                bail!(
+                    "rank {} joined a collective with {} f32s, others sent {} — \
+                     the ranks' op sequences diverged",
+                    self.rank,
+                    buf.len(),
+                    g.buf.len()
+                );
+            }
+            for (acc, &x) in g.buf.iter_mut().zip(buf.iter()) {
+                *acc += x;
+            }
+        }
+        g.entered += 1;
+        shared.cv.notify_all();
+        // wait for everyone, take the reduction
+        while g.entered < shared.world {
+            g = shared.cv.wait(g).unwrap();
+        }
+        buf.copy_from_slice(&g.buf);
+        g.left += 1;
+        if g.left == shared.world {
+            g.entered = 0;
+            g.left = 0;
+            g.generation += 1;
+        }
+        shared.cv.notify_all();
+        self.generation += 1;
+        Ok(())
+    }
+}
+
+impl Transport for MemComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.shared.world
+    }
+
+    fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        self.collective(buf)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.collective(&mut [])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        let world = 4usize;
+        let endpoints = mem_world(world);
+        let outs: Vec<Vec<f32>> = thread::scope(|s| {
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    s.spawn(move || {
+                        let r = ep.rank() as f32;
+                        let mut buf = vec![r, 10.0 * r, 1.0];
+                        for _ in 0..3 {
+                            ep.all_reduce_sum(&mut buf).unwrap();
+                        }
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // 3 chained reductions: first gives (6, 60, 4); each further one
+        // multiplies by world
+        let expect = vec![6.0 * 16.0, 60.0 * 16.0, 4.0 * 16.0];
+        for out in outs {
+            assert_eq!(out, expect);
+        }
+    }
+
+    #[test]
+    fn barrier_and_single_rank_are_noops() {
+        let mut solo = mem_world(1).pop().unwrap();
+        solo.barrier().unwrap();
+        let mut buf = vec![3.0f32];
+        solo.all_reduce_sum(&mut buf).unwrap();
+        assert_eq!(buf, vec![3.0]);
+    }
+
+    #[test]
+    fn mismatched_lengths_error() {
+        let mut eps = mem_world(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t = thread::spawn(move || {
+            let mut buf = vec![1.0f32, 2.0];
+            a.all_reduce_sum(&mut buf)
+        });
+        let mut buf = vec![1.0f32];
+        let r = b.all_reduce_sum(&mut buf);
+        // one of the two ranks reports the divergence (rank 1 here: rank 0
+        // contributed first)
+        assert!(r.is_err(), "second rank should detect the length mismatch");
+        drop(t); // rank 0 stays blocked; detach the thread
+    }
+}

@@ -1,0 +1,98 @@
+//! Cross-process communication for width-partitioned sketch state
+//! (DESIGN.md §9).
+//!
+//! A distributed run replicates the model and data pipeline in every
+//! rank (they are deterministic, so replicas stay bit-identical for
+//! free) and partitions only the **sketch state** — the memory the paper
+//! is about. Because count-sketches are linear and each `[v, w, d]` cell
+//! has exactly one owner under the width partition, the only collective
+//! a QUERY needs is an **all-reduce by addition** of the gathered
+//! per-(item, depth) bucket rows: every unowned contribution is an exact
+//! `0.0`, so the sum reconstructs each row bit-for-bit and the
+//! distributed run matches the single-process one exactly.
+//!
+//! * [`Transport`] — the collective surface ranks speak
+//!   (`all_reduce_sum` + `barrier`).
+//! * [`mem`] — in-memory impl for same-process multi-rank tests.
+//! * [`uds`] — unix-domain-socket impl for real worker processes
+//!   (length-prefixed frames with a JSON header, `util/json.rs`).
+//! * [`partitioned`] — the [`SketchStore`](crate::sketch::SketchStore)
+//!   impl owning one rank's width slice.
+//! * [`DistCtx`] — rank + world + shared transport; the
+//!   [`StoreBuilder`](crate::sketch::StoreBuilder) the trainer passes
+//!   down so every sketch lands on a partitioned store.
+
+pub mod mem;
+pub mod partitioned;
+#[cfg(unix)]
+pub mod uds;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::sketch::{SketchStore, StoreBuilder};
+
+pub use mem::{mem_world, MemComm};
+pub use partitioned::PartitionedStore;
+#[cfg(unix)]
+pub use uds::UdsTransport;
+
+/// Collective operations between the ranks of one run.
+///
+/// Implementations synchronize by **call order**: every rank must issue
+/// the same sequence of collectives with the same buffer lengths (the
+/// training loop is identical in every rank, so this holds by
+/// construction). `all_reduce_sum` accumulates contributions in rank
+/// order, so the result is deterministic.
+pub trait Transport: Send {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+
+    /// Elementwise sum of `buf` across all ranks; every rank's `buf`
+    /// holds the reduced result on return.
+    fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<()>;
+
+    /// Block until every rank reaches the barrier.
+    fn barrier(&mut self) -> Result<()>;
+}
+
+/// One rank's view of a distributed run: identity plus the shared
+/// transport every partitioned sketch store in this process reduces
+/// over. All layers (embedding, softmax, CsAdam's m/v pair) share the
+/// single connection; the deterministic step sequence keeps their
+/// collectives aligned across ranks.
+#[derive(Clone)]
+pub struct DistCtx {
+    pub rank: usize,
+    pub world: usize,
+    comm: Arc<Mutex<dyn Transport>>,
+}
+
+impl DistCtx {
+    pub fn new<T: Transport + 'static>(rank: usize, world: usize, transport: T) -> DistCtx {
+        DistCtx { rank, world, comm: Arc::new(Mutex::new(transport)) }
+    }
+
+    /// The shared transport handle.
+    pub fn comm(&self) -> Arc<Mutex<dyn Transport>> {
+        Arc::clone(&self.comm)
+    }
+
+    /// Run a barrier across all ranks (end-of-run synchronization).
+    pub fn barrier(&self) -> Result<()> {
+        self.comm.lock().unwrap().barrier()
+    }
+}
+
+impl std::fmt::Debug for DistCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DistCtx {{ rank: {}, world: {} }}", self.rank, self.world)
+    }
+}
+
+impl StoreBuilder for DistCtx {
+    fn build(&self, depth: usize, width: usize, dim: usize) -> Box<dyn SketchStore> {
+        Box::new(PartitionedStore::new(depth, width, dim, self.rank, self.world, self.comm()))
+    }
+}

@@ -1,0 +1,354 @@
+//! [`PartitionedStore`] — one rank's width slice of a `[v, w, d]` sketch
+//! (DESIGN.md §9).
+//!
+//! The width axis `[0, w)` is split into `world` contiguous balanced
+//! ranges (`sketch::plan::width_partition`, the same arithmetic the §5
+//! in-process shard tiling uses); rank `r` materializes only
+//! `[v, hi−lo, d]` floats. **Ownership invariant:** bucket `(j, b)` lives
+//! on exactly one rank — the one whose range contains `b` — for every
+//! depth `j`.
+//!
+//! * UPDATE scans the whole plan in item order and applies only in-range
+//!   buckets, so each owned cell sees the same additions in the same
+//!   order as the single-process path: partition state is bit-identical
+//!   to the matching slice of a local tensor.
+//! * QUERY gathers a `[v, k, d]` buffer of the plan's bucket rows —
+//!   owned rows copied, unowned rows exact `0.0` — and all-reduces it by
+//!   addition over the shared [`Transport`]. One owner per cell means
+//!   the sum reconstructs every row exactly, and the local
+//!   median/min reduction (the same `store::median_rows` / min loop the
+//!   local path runs) yields bit-identical estimates on every rank.
+//!
+//! "Exactly" carries one IEEE footnote: an owned cell holding `-0.0`
+//! comes back as `+0.0` (`-0.0 + 0.0 == +0.0`). The two compare equal,
+//! every downstream use (`x - ±0`, `±0 * s`, `sqrt(±0) + eps`, min/median
+//! selection) is sign-of-zero-insensitive, and a zero can never become a
+//! nonzero difference — so parameters, losses and checkpoints still
+//! match the single-process run under numeric equality, which is what
+//! the equivalence suite asserts.
+//!
+//! The dense gather is also deliberately simple: every rank ships the
+//! full `[v, k, d]` buffer even though it owns ~1/world of it. Sparse
+//! owned-rows frames (or a reduce-scatter) and overlapping this exchange
+//! with compute are the named next seam (DESIGN.md §9).
+
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+
+use crate::sketch::plan::width_partition;
+use crate::sketch::store::{median_rows, min_into, Reduce, SketchStore};
+use crate::sketch::{SketchPlan, SketchTensor};
+
+use super::Transport;
+
+/// One rank's width partition of a sketch tensor.
+pub struct PartitionedStore {
+    depth: usize,
+    width: usize,
+    dim: usize,
+    /// Owned width range `[lo, hi)` (identical for every depth row).
+    lo: usize,
+    hi: usize,
+    rank: usize,
+    world: usize,
+    /// `[depth, hi-lo, dim]` row-major slice of the conceptual tensor.
+    data: Vec<f32>,
+    comm: Arc<Mutex<dyn Transport>>,
+    /// Reused `[v, k, d]` gather buffer for queries (the per-step hot
+    /// path must not reallocate; `query` takes `&self`, hence the cell).
+    gather: RefCell<Vec<f32>>,
+}
+
+impl PartitionedStore {
+    pub fn new(
+        depth: usize,
+        width: usize,
+        dim: usize,
+        rank: usize,
+        world: usize,
+        comm: Arc<Mutex<dyn Transport>>,
+    ) -> PartitionedStore {
+        assert!(depth >= 1 && width >= 1 && dim >= 1 && world >= 1 && rank < world);
+        let (lo, hi) = width_partition(width, world, rank);
+        PartitionedStore {
+            depth,
+            width,
+            dim,
+            lo,
+            hi,
+            rank,
+            world,
+            data: vec![0.0; depth * (hi - lo) * dim],
+            comm,
+            gather: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// The owned width range `[lo, hi)`.
+    pub fn range(&self) -> (usize, usize) {
+        (self.lo, self.hi)
+    }
+
+    /// Partition width (`hi - lo`).
+    fn pw(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Mutable owned row `(j, b)` (caller guarantees `lo ≤ b < hi`).
+    #[inline(always)]
+    fn row_mut(&mut self, j: usize, b: usize) -> &mut [f32] {
+        debug_assert!(j < self.depth && b >= self.lo && b < self.hi);
+        let off = (j * self.pw() + (b - self.lo)) * self.dim;
+        &mut self.data[off..off + self.dim]
+    }
+
+    /// Owned row `(j, b)`.
+    #[inline(always)]
+    fn row(&self, j: usize, b: usize) -> &[f32] {
+        debug_assert!(j < self.depth && b >= self.lo && b < self.hi);
+        let off = (j * self.pw() + (b - self.lo)) * self.dim;
+        &self.data[off..off + self.dim]
+    }
+}
+
+impl std::fmt::Debug for PartitionedStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "PartitionedStore {{ [{}, {}, {}], rank {}/{}, width range [{}, {}) }}",
+            self.depth, self.width, self.dim, self.rank, self.world, self.lo, self.hi
+        )
+    }
+}
+
+impl SketchStore for PartitionedStore {
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    fn shards(&self) -> usize {
+        1
+    }
+
+    fn set_shards(&mut self, _n: usize) {
+        // the cross-process partition *is* the sharding; in-partition
+        // parallel execution is the §Perf "next" seam
+    }
+
+    fn update(&mut self, plan: &SketchPlan, deltas: &[f32], signed: bool) {
+        let d = self.dim;
+        let (v, k) = (plan.depth(), plan.k());
+        debug_assert_eq!(deltas.len(), k * d);
+        let (lo, hi) = (self.lo, self.hi);
+        for j in 0..v {
+            for t in 0..k {
+                let b = plan.bucket(j, t);
+                if b < lo || b >= hi {
+                    continue;
+                }
+                let delta = &deltas[t * d..(t + 1) * d];
+                let row = self.row_mut(j, b);
+                if signed && plan.sign(j, t) < 0.0 {
+                    for (r, &x) in row.iter_mut().zip(delta) {
+                        *r -= x;
+                    }
+                } else {
+                    for (r, &x) in row.iter_mut().zip(delta) {
+                        *r += x;
+                    }
+                }
+            }
+        }
+    }
+
+    fn query(&self, plan: &SketchPlan, reduce: Reduce, out: &mut [f32]) {
+        let d = self.dim;
+        let (v, k) = (plan.depth(), plan.k());
+        debug_assert_eq!(out.len(), k * d);
+        // partial gather: row (j, t) at [(j·k + t)·d ..]; unowned rows
+        // stay exact 0.0 so the sum below reconstructs them bit-for-bit
+        let mut gather = self.gather.borrow_mut();
+        gather.clear();
+        gather.resize(v * k * d, 0.0);
+        for j in 0..v {
+            for t in 0..k {
+                let b = plan.bucket(j, t);
+                if b >= self.lo && b < self.hi {
+                    gather[(j * k + t) * d..(j * k + t + 1) * d].copy_from_slice(self.row(j, b));
+                }
+            }
+        }
+        self.comm
+            .lock()
+            .unwrap()
+            .all_reduce_sum(&mut gather)
+            .expect("sketch query all-reduce failed");
+        // local depth reduction over the now-complete rows — the same
+        // reducers the local store runs
+        match reduce {
+            Reduce::SignedMedian => {
+                const INLINE: usize = 8;
+                let mut inline_rows = [(0usize, 0.0f32); INLINE];
+                let mut heap_rows: Vec<(usize, f32)> = Vec::new();
+                let mut median_buf: Vec<f32> = if v > 3 { vec![0.0; v] } else { Vec::new() };
+                for t in 0..k {
+                    let dst = &mut out[t * d..(t + 1) * d];
+                    if v <= INLINE {
+                        for (j, slot) in inline_rows[..v].iter_mut().enumerate() {
+                            *slot = (j * k + t, plan.sign(j, t));
+                        }
+                        median_rows(&gather, d, &inline_rows[..v], &mut median_buf, dst);
+                    } else {
+                        heap_rows.clear();
+                        for j in 0..v {
+                            heap_rows.push((j * k + t, plan.sign(j, t)));
+                        }
+                        median_rows(&gather, d, &heap_rows, &mut median_buf, dst);
+                    }
+                }
+            }
+            Reduce::Min => {
+                for t in 0..k {
+                    let dst = &mut out[t * d..(t + 1) * d];
+                    dst.copy_from_slice(&gather[t * d..(t + 1) * d]);
+                    for j in 1..v {
+                        let off = (j * k + t) * d;
+                        min_into(dst, &gather[off..off + d]);
+                    }
+                }
+            }
+        }
+    }
+
+    fn scale(&mut self, alpha: f32) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    fn tensor(&self) -> Option<&SketchTensor> {
+        None
+    }
+
+    fn tensor_mut(&mut self) -> Option<&mut SketchTensor> {
+        None
+    }
+
+    fn fold_half(&mut self) {
+        panic!(
+            "fold_half changes the hash family mid-run, which a width-partitioned \
+             distributed sketch does not support — fold before launching, or run \
+             single-process"
+        );
+    }
+
+    fn clone_box(&self) -> Box<dyn SketchStore> {
+        Box::new(PartitionedStore {
+            depth: self.depth,
+            width: self.width,
+            dim: self.dim,
+            lo: self.lo,
+            hi: self.hi,
+            rank: self.rank,
+            world: self.world,
+            data: self.data.clone(),
+            comm: Arc::clone(&self.comm),
+            gather: RefCell::new(Vec::new()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::mem::mem_world;
+    use crate::sketch::store::LocalStore;
+    use crate::sketch::SketchHasher;
+    use crate::util::rng::Rng;
+    use std::thread;
+
+    /// Partitioned update/query across 1..4 mem-transport ranks must be
+    /// bit-identical to a whole-tensor local store — the §9 ownership
+    /// invariant at the store level.
+    #[test]
+    fn partitioned_matches_local_bitwise() {
+        for world in [1usize, 2, 3, 4] {
+            let (v, w, d, k) = (3usize, 37usize, 4usize, 24usize);
+            let h = SketchHasher::new(v, w, 11);
+            let mut rng = Rng::new(world as u64);
+            let ids: Vec<u64> = (0..k).map(|_| rng.below(512) as u64).collect();
+            let deltas: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let plan = SketchPlan::build(&h, &ids);
+
+            let mut local = LocalStore::zeros(v, w, d);
+            local.update(&plan, &deltas, true);
+            let mut expect_med = vec![0.0f32; k * d];
+            local.query(&plan, Reduce::SignedMedian, &mut expect_med);
+            let mut expect_min = vec![0.0f32; k * d];
+            local.query(&plan, Reduce::Min, &mut expect_min);
+
+            let outs: Vec<(Vec<f32>, Vec<f32>)> = thread::scope(|s| {
+                let handles: Vec<_> = mem_world(world)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, ep)| {
+                        let (plan, deltas) = (plan.clone(), deltas.clone());
+                        s.spawn(move || {
+                            let comm: Arc<Mutex<dyn Transport>> = Arc::new(Mutex::new(ep));
+                            let mut store = PartitionedStore::new(v, w, d, rank, world, comm);
+                            store.update(&plan, &deltas, true);
+                            let mut med = vec![0.0f32; k * d];
+                            store.query(&plan, Reduce::SignedMedian, &mut med);
+                            let mut min = vec![0.0f32; k * d];
+                            store.query(&plan, Reduce::Min, &mut min);
+                            (med, min)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (rank, (med, min)) in outs.iter().enumerate() {
+                assert_eq!(med, &expect_med, "median world={world} rank={rank}");
+                assert_eq!(min, &expect_min, "min world={world} rank={rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn partition_memory_is_the_ranks_share() {
+        let comm: Arc<Mutex<dyn Transport>> =
+            Arc::new(Mutex::new(mem_world(1).pop().unwrap()));
+        let full = LocalStore::zeros(3, 100, 8).memory_bytes();
+        let part = PartitionedStore::new(3, 100, 8, 0, 4, Arc::clone(&comm));
+        assert_eq!(part.memory_bytes(), full / 4);
+        assert_eq!(part.range(), (0, 25));
+    }
+
+    #[test]
+    #[should_panic(expected = "fold_half")]
+    fn fold_half_is_rejected() {
+        let comm: Arc<Mutex<dyn Transport>> =
+            Arc::new(Mutex::new(mem_world(1).pop().unwrap()));
+        PartitionedStore::new(2, 8, 1, 0, 1, comm).fold_half();
+    }
+}

@@ -1,0 +1,343 @@
+//! Unix-domain-socket [`Transport`] for real worker processes.
+//!
+//! Star topology: rank 0 listens on the socket path, ranks 1..N connect
+//! and identify themselves with a `hello` frame. Collectives run through
+//! the coordinator: workers send their partial, rank 0 accumulates in
+//! rank order (its own contribution first, then ranks 1..N), and sends
+//! the reduction back — so every rank receives bit-identical results.
+//!
+//! Wire format (little-endian), one frame per message:
+//!
+//! ```text
+//! u32 header_len | header (JSON, util/json.rs) | payload (header.n × f32)
+//! ```
+//!
+//! The header is a small JSON object — `{"op":"allreduce","n":1024}`,
+//! `{"op":"barrier","n":0}`, `{"op":"hello","rank":2,"world":4,"n":0}` —
+//! parsed with the crate's own [`Json`]; the payload is raw f32 bytes
+//! (JSON-encoding megabytes of floats would be slow and lossy).
+
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+use super::Transport;
+
+/// How long listen/connect/read/write wait before declaring a peer dead
+/// (write matters too: a wedged peer that stops draining its socket
+/// would otherwise block a large result broadcast forever).
+const IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// One rank's endpoint of a socket-backed world.
+pub struct UdsTransport {
+    rank: usize,
+    world: usize,
+    /// Rank 0: stream to rank `r` at `peers[r - 1]`. Workers: one stream
+    /// to rank 0.
+    peers: Vec<UnixStream>,
+    scratch: Vec<f32>,
+}
+
+fn write_frame(stream: &mut UnixStream, op: &str, extra: Vec<(&str, Json)>, payload: &[f32]) -> Result<()> {
+    let mut fields = vec![("op", s(op)), ("n", num(payload.len() as f64))];
+    fields.extend(extra);
+    let header = obj(fields).to_string();
+    stream.write_all(&(header.len() as u32).to_le_bytes())?;
+    stream.write_all(header.as_bytes())?;
+    if !payload.is_empty() {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(payload.as_ptr() as *const u8, payload.len() * 4)
+        };
+        stream.write_all(bytes)?;
+    }
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one frame; the payload lands in `payload` (resized to header.n).
+/// `max_n` bounds the wire-supplied element count — a desynced or
+/// corrupt peer must surface as the diagnosable divergence error below,
+/// not as a giant allocation.
+fn read_frame(stream: &mut UnixStream, payload: &mut Vec<f32>, max_n: usize) -> Result<Json> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4).context("reading frame header length")?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    if hlen > 1 << 16 {
+        bail!("implausible frame header length {hlen}");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    stream.read_exact(&mut hbuf).context("reading frame header")?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)
+        .context("parsing frame header JSON")?;
+    let n = header.req("n")?.as_usize().ok_or_else(|| anyhow!("frame header n not a number"))?;
+    if n > max_n {
+        bail!(
+            "frame payload of {n} f32s exceeds the expected {max_n} — the peer's op \
+             sequence diverged (or the stream is corrupt)"
+        );
+    }
+    payload.resize(n, 0.0);
+    if n > 0 {
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(payload.as_mut_ptr() as *mut u8, n * 4)
+        };
+        stream.read_exact(bytes).context("reading frame payload")?;
+    }
+    Ok(header)
+}
+
+fn frame_op(header: &Json) -> Result<String> {
+    Ok(header
+        .req("op")?
+        .as_str()
+        .ok_or_else(|| anyhow!("frame header op not a string"))?
+        .to_string())
+}
+
+impl UdsTransport {
+    /// Rank 0: bind `path` and wait for ranks `1..world` to connect and
+    /// say hello. Call **before** spawning workers is not required — they
+    /// retry until the socket exists — but the stale-file unlink here
+    /// means the path must not be shared between concurrent runs.
+    pub fn listen(path: &str, world: usize) -> Result<UdsTransport> {
+        use std::os::unix::fs::FileTypeExt;
+        assert!(world >= 2, "a 1-process run needs no transport");
+        // reclaim only a stale *socket*; anything else at the path is a
+        // user mistake we must not delete
+        if let Ok(meta) = std::fs::symlink_metadata(path) {
+            if meta.file_type().is_socket() {
+                let _ = std::fs::remove_file(path);
+            } else {
+                bail!(
+                    "socket path {path} exists and is not a socket — refusing to \
+                     overwrite it; pick another --socket path"
+                );
+            }
+        }
+        let listener = UnixListener::bind(path)
+            .with_context(|| format!("binding coordinator socket {path}"))?;
+        let mut peers: Vec<Option<UnixStream>> = (1..world).map(|_| None).collect();
+        let deadline = Instant::now() + IO_TIMEOUT;
+        let mut payload = Vec::new();
+        // non-blocking accept loop bounds the wait, so a dead worker fails
+        // the run instead of hanging it
+        listener.set_nonblocking(true)?;
+        for _ in 1..world {
+            let mut stream = loop {
+                match listener.accept() {
+                    Ok((stream, _)) => break stream,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if Instant::now() > deadline {
+                            bail!("timed out waiting for workers to connect to {path}");
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e).context("accepting worker connection"),
+                }
+            };
+            stream.set_nonblocking(false)?;
+            stream.set_read_timeout(Some(IO_TIMEOUT))?;
+            stream.set_write_timeout(Some(IO_TIMEOUT))?;
+            let header = read_frame(&mut stream, &mut payload, 0)?;
+            if frame_op(&header)? != "hello" {
+                bail!("worker spoke {header:?} before hello");
+            }
+            let rank = header.req("rank")?.as_usize().ok_or_else(|| anyhow!("bad hello rank"))?;
+            let peer_world =
+                header.req("world")?.as_usize().ok_or_else(|| anyhow!("bad hello world"))?;
+            if peer_world != world {
+                bail!("worker rank {rank} was launched for world {peer_world}, this is {world}");
+            }
+            if rank == 0 || rank >= world {
+                bail!("hello from invalid rank {rank} (world {world})");
+            }
+            if peers[rank - 1].replace(stream).is_some() {
+                bail!("two workers claimed rank {rank}");
+            }
+        }
+        Ok(UdsTransport {
+            rank: 0,
+            world,
+            peers: peers.into_iter().map(|p| p.unwrap()).collect(),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Ranks 1..world: connect to rank 0's socket (retrying while it
+    /// appears) and say hello.
+    pub fn connect(path: &str, rank: usize, world: usize) -> Result<UdsTransport> {
+        assert!(rank >= 1 && rank < world, "connect is for worker ranks (got {rank}/{world})");
+        let deadline = Instant::now() + IO_TIMEOUT;
+        let mut stream = loop {
+            match UnixStream::connect(path) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() > deadline {
+                        return Err(e).with_context(|| {
+                            format!("rank {rank}: coordinator socket {path} never came up")
+                        });
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        write_frame(
+            &mut stream,
+            "hello",
+            vec![("rank", num(rank as f64)), ("world", num(world as f64))],
+            &[],
+        )?;
+        Ok(UdsTransport { rank, world, peers: vec![stream], scratch: Vec::new() })
+    }
+
+    fn collective(&mut self, op: &str, buf: &mut [f32]) -> Result<()> {
+        let mut payload = std::mem::take(&mut self.scratch);
+        let result = self.collective_inner(op, buf, &mut payload);
+        self.scratch = payload;
+        result
+    }
+
+    fn collective_inner(&mut self, op: &str, buf: &mut [f32], payload: &mut Vec<f32>) -> Result<()> {
+        if self.rank == 0 {
+            // accumulate in rank order: own partial is already in buf
+            for r in 1..self.world {
+                let stream = &mut self.peers[r - 1];
+                let header = read_frame(stream, payload, buf.len())
+                    .with_context(|| format!("receiving {op} partial from rank {r}"))?;
+                let got = frame_op(&header)?;
+                if got != op || payload.len() != buf.len() {
+                    bail!(
+                        "rank {r} sent op {got:?} ({} f32s) while coordinator runs {op:?} \
+                         ({} f32s) — the ranks' op sequences diverged",
+                        payload.len(),
+                        buf.len()
+                    );
+                }
+                for (acc, &x) in buf.iter_mut().zip(payload.iter()) {
+                    *acc += x;
+                }
+            }
+            for r in 1..self.world {
+                write_frame(&mut self.peers[r - 1], op, vec![], buf)
+                    .with_context(|| format!("sending {op} result to rank {r}"))?;
+            }
+        } else {
+            let stream = &mut self.peers[0];
+            write_frame(stream, op, vec![], buf)
+                .with_context(|| format!("rank {}: sending {op} partial", self.rank))?;
+            let header = read_frame(stream, payload, buf.len())
+                .with_context(|| format!("rank {}: receiving {op} result", self.rank))?;
+            let got = frame_op(&header)?;
+            if got != op || payload.len() != buf.len() {
+                bail!(
+                    "rank {}: coordinator answered {op:?} with op {got:?} ({} f32s, wanted {})",
+                    self.rank,
+                    payload.len(),
+                    buf.len()
+                );
+            }
+            buf.copy_from_slice(payload);
+        }
+        Ok(())
+    }
+
+    /// Remove a coordinator socket file (best-effort cleanup after a run).
+    pub fn cleanup(path: &str) {
+        if Path::new(path).exists() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+impl Transport for UdsTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        self.collective("allreduce", buf)
+    }
+
+    fn barrier(&mut self) -> Result<()> {
+        self.collective("barrier", &mut [])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn sock_path(tag: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("csopt-uds-test-{tag}-{}.sock", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    #[test]
+    fn three_rank_all_reduce_over_sockets() {
+        let path = sock_path("ar3");
+        let world = 3usize;
+        let outs: Vec<Vec<f32>> = thread::scope(|s| {
+            let mut handles = Vec::new();
+            for rank in 1..world {
+                let p = path.clone();
+                handles.push(s.spawn(move || {
+                    let mut t = UdsTransport::connect(&p, rank, world).unwrap();
+                    let mut buf = vec![rank as f32; 5];
+                    t.all_reduce_sum(&mut buf).unwrap();
+                    t.barrier().unwrap();
+                    buf
+                }));
+            }
+            let mut t0 = UdsTransport::listen(&path, world).unwrap();
+            let mut buf = vec![0.0f32; 5];
+            t0.all_reduce_sum(&mut buf).unwrap();
+            t0.barrier().unwrap();
+            let mut outs = vec![buf];
+            outs.extend(handles.into_iter().map(|h| h.join().unwrap()));
+            outs
+        });
+        UdsTransport::cleanup(&path);
+        for out in outs {
+            assert_eq!(out, vec![3.0f32; 5]);
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_preserves_bits() {
+        let path = sock_path("frame");
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let p2 = path.clone();
+        let h = thread::spawn(move || {
+            let mut s = UnixStream::connect(&p2).unwrap();
+            let payload = vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-40];
+            write_frame(&mut s, "allreduce", vec![("tag", num(7.0))], &payload).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let mut payload = Vec::new();
+        let header = read_frame(&mut stream, &mut payload, 4).unwrap();
+        h.join().unwrap();
+        assert_eq!(frame_op(&header).unwrap(), "allreduce");
+        assert_eq!(header.req("tag").unwrap().as_f64(), Some(7.0));
+        let expect = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-40];
+        assert_eq!(payload.len(), 4);
+        for (a, b) in payload.iter().zip(expect.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

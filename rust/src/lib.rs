@@ -26,11 +26,15 @@
 //!   prefetch, classification dataset generators.
 //! * [`model`] — pure-Rust LSTM/MLP engine (test oracle + `--engine rust`).
 //! * [`runtime`] — PJRT client, artifact registry, typed executor.
+//! * [`comm`] — cross-process transport (in-memory + unix sockets) and
+//!   the width-partitioned sketch store for `csopt launch` runs
+//!   (DESIGN.md §9).
 //! * [`train`] — trainer orchestration, eval, checkpointing, memory ledger.
 //! * [`mach`] — Merged-Average Classifiers via Hashing (§7.3 substrate).
 //! * [`metrics`] — CSV/JSON logging, timing aggregation.
 //! * [`exp`] — one driver per paper table/figure (`csopt exp <id>`).
 
+pub mod comm;
 pub mod config;
 pub mod data;
 pub mod exp;

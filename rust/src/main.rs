@@ -25,7 +25,7 @@ use csopt::data::classif::ExtremeDataset;
 use csopt::exp;
 use csopt::optim::{OptimSpec, Rule};
 use csopt::sketch::CountSketch;
-use csopt::train::session::{build_mach, RunSpec, Session};
+use csopt::train::session::{build_mach, DistParams, RunSpec, Session};
 use csopt::util::cli::Args;
 use csopt::util::rng::Rng;
 
@@ -34,12 +34,19 @@ csopt — Compressing Gradient Optimizers via Count-Sketches (ICML 2019)
 
 USAGE:
   csopt run <config.conf> [--set k=v[,k=v...]]...
+  csopt launch <config.conf> --workers N [--socket PATH] [--set k=v[,k=v...]]...
+  csopt worker            (internal: launched by `csopt launch`, spec on stdin)
   csopt train [--preset tiny|wt2|wt103|lm1b] [--optim SPEC] [--sm-optim SPEC]
               [--engine rust|xla] [--epochs N] [--steps N] [--lr X]
               [--shards N] [--checkpoint PATH]
   csopt exp <fig1|fig2|fig4|fig5|t3|t4|t5|t6|t7|t8|all> [--steps N] [--epochs N]
   csopt sketch-demo [--width W] [--depth V] [--items N]
   csopt runtime-info
+
+  `launch` trains one config across N OS processes: every rank replicates
+  the model/data (deterministic, so replicas agree) and owns one width
+  partition of every sketch; queries all-reduce over a unix socket. The
+  result is bit-identical to the same config run single-process.
 
 RUN CONFIGS (key = value lines; see examples/configs/):
   preset engine epochs steps lr schedule clip seed shards out metrics
@@ -90,6 +97,8 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     };
     match cmd {
         "run" => cmd_run(&args),
+        "launch" => cmd_launch(&args),
+        "worker" => cmd_worker(&args),
         "train" => cmd_train(&args),
         "exp" => {
             let Some(id) = args.positional.get(1) else {
@@ -159,11 +168,147 @@ fn cmd_run(args: &Args) -> Result<()> {
         spec.apply_sets(sets).with_context(|| format!("applying --set {sets}"))?;
     }
     spec.validate()?;
+    if let Some(d) = &spec.dist {
+        if d.workers > 1 {
+            bail!(
+                "this spec's [dist] section asks for {} processes — `csopt run` is \
+                 single-process; use `csopt launch` (which writes [dist] itself), or \
+                 drop the section",
+                d.workers
+            );
+        }
+    }
     println!("# resolved run spec ({path})");
     print!("{spec}");
     println!();
     if spec.mach.is_some() {
         return cmd_run_mach(&spec);
+    }
+    let mut session = Session::build(&spec)?;
+    session.run()?;
+    Ok(())
+}
+
+/// `csopt launch <config> --workers N`: fork rank 0 (this process) plus
+/// N−1 `csopt worker` children, ship each the serialized `RunSpec`
+/// extended with its `[dist]` section, and train — bit-identical to the
+/// single-process run of the same config (DESIGN.md §9).
+fn cmd_launch(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("launch needs a config file path (see examples/configs/ for starters)");
+    };
+    let Some(workers) = args.get("workers") else {
+        bail!("launch needs --workers N (the process count, e.g. --workers 2)");
+    };
+    let workers: usize = workers
+        .parse()
+        .map_err(|e| anyhow!("bad value for --workers: {e}"))?;
+    if workers == 0 {
+        bail!("--workers 0 trains in no process at all — use --workers ≥ 1");
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading run config {path}"))?;
+    let mut spec = RunSpec::parse(&text).with_context(|| format!("parsing run config {path}"))?;
+    for sets in args.get_all("set") {
+        spec.apply_sets(sets).with_context(|| format!("applying --set {sets}"))?;
+    }
+    if workers == 1 {
+        // degenerate launch: plain single-process run
+        spec.dist = None;
+        spec.validate()?;
+        let mut session = Session::build(&spec)?;
+        session.run()?;
+        return Ok(());
+    }
+    let socket = match args.get("socket") {
+        Some(s) => s.to_string(),
+        None => std::env::temp_dir()
+            .join(format!("csopt-launch-{}.sock", std::process::id()))
+            .to_string_lossy()
+            .into_owned(),
+    };
+    spec.dist = Some(DistParams { rank: 0, workers, socket: socket.clone() });
+    spec.validate()?;
+    println!("# resolved run spec ({path}), launching {workers} processes");
+    print!("{spec}");
+    println!();
+
+    let exe = std::env::current_exe().context("locating the csopt binary for workers")?;
+    let mut children = Vec::new();
+    let spawn_all = (1..workers).try_for_each(|rank| -> Result<()> {
+        let mut child_spec = spec.clone();
+        child_spec.dist = Some(DistParams { rank, workers, socket: socket.clone() });
+        let mut child = std::process::Command::new(&exe)
+            .arg("worker")
+            .stdin(std::process::Stdio::piped())
+            .spawn()
+            .with_context(|| format!("spawning worker rank {rank}"))?;
+        use std::io::Write;
+        let mut stdin = child.stdin.take().expect("piped stdin");
+        // register the child for kill/reap *before* anything can fail
+        children.push((rank, child));
+        stdin
+            .write_all(child_spec.to_string().as_bytes())
+            .with_context(|| format!("shipping the run spec to worker rank {rank}"))?;
+        drop(stdin); // closes the pipe → worker sees EOF and parses
+        Ok(())
+    });
+
+    // rank 0 runs in-process; on any failure — including a panic (e.g. a
+    // transport error surfacing mid-query) — reap the children before
+    // reporting so a broken launch cannot leak orphan workers
+    let run_result = spawn_all.and_then(|()| {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| -> Result<()> {
+            let mut session = Session::build(&spec)?;
+            session.run().map(|_| ())
+        })) {
+            Ok(r) => r,
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .map(String::as_str)
+                    .or_else(|| payload.downcast_ref::<&str>().copied())
+                    .unwrap_or("non-string panic payload");
+                Err(anyhow!("rank 0 panicked: {msg}"))
+            }
+        }
+    });
+    let mut failures = Vec::new();
+    for (rank, mut child) in children {
+        if run_result.is_err() {
+            let _ = child.kill();
+        }
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("worker rank {rank} exited with {status}")),
+            Err(e) => failures.push(format!("worker rank {rank} could not be reaped: {e}")),
+        }
+    }
+    #[cfg(unix)]
+    csopt::comm::UdsTransport::cleanup(&socket);
+    run_result?;
+    if !failures.is_empty() {
+        bail!("{}", failures.join("; "));
+    }
+    Ok(())
+}
+
+/// `csopt worker`: one rank of a `csopt launch` run. Reads the serialized
+/// `RunSpec` (with its `[dist]` section) from stdin and runs the same
+/// `Session::build` → `run` loop as rank 0, silently.
+fn cmd_worker(_args: &Args) -> Result<()> {
+    use std::io::Read;
+    let mut text = String::new();
+    std::io::stdin().read_to_string(&mut text).context("reading the run spec from stdin")?;
+    if text.trim().is_empty() {
+        bail!("worker expects a serialized run spec on stdin (it is launched by `csopt launch`)");
+    }
+    let spec = RunSpec::parse(&text).context("parsing the shipped run spec")?;
+    let Some(d) = &spec.dist else {
+        bail!("worker spec has no [dist] section — did you mean `csopt run`?");
+    };
+    if d.rank == 0 {
+        bail!("rank 0 is the launcher itself — workers are ranks 1..workers");
     }
     let mut session = Session::build(&spec)?;
     session.run()?;

@@ -14,7 +14,7 @@
 //! DESIGN.md §5); both optimizations leave every numeric result
 //! bit-identical to the scalar path.
 
-use crate::sketch::{CleaningPolicy, CountMinSketch, CountSketch, SketchPlan};
+use crate::sketch::{CleaningPolicy, CountMinSketch, CountSketch, SketchPlan, StoreBuilder};
 
 use super::RowOptimizer;
 
@@ -44,6 +44,13 @@ impl CsMomentum {
     /// Shard sketch update/query across `n` parallel shards (1 = off).
     pub fn with_shards(mut self, n: usize) -> CsMomentum {
         self.sk.set_shards(n);
+        self
+    }
+
+    /// Rebuild the sketch state on the store `builder` produces (e.g. a
+    /// width-partitioned distributed store, DESIGN.md §9).
+    pub fn with_store(mut self, builder: &dyn StoreBuilder) -> CsMomentum {
+        self.sk.set_store(builder);
         self
     }
 
@@ -122,6 +129,13 @@ impl CmsAdagrad {
         self
     }
 
+    /// Rebuild the sketch state on the store `builder` produces (e.g. a
+    /// width-partitioned distributed store, DESIGN.md §9).
+    pub fn with_store(mut self, builder: &dyn StoreBuilder) -> CmsAdagrad {
+        self.sk.set_store(builder);
+        self
+    }
+
     pub fn sketch(&self) -> &CountMinSketch {
         &self.sk
     }
@@ -143,7 +157,8 @@ impl RowOptimizer for CmsAdagrad {
             let v = self.est[i].max(0.0);
             rows[i] -= lr * grads[i] / (v.sqrt() + self.eps);
         }
-        self.cleaning.maybe_clean(self.sk.tensor_mut(), t);
+        let cleaning = self.cleaning;
+        self.sk.clean_at(&cleaning, t);
     }
 
     fn memory_bytes(&self) -> usize {
@@ -210,6 +225,14 @@ impl CsAdam {
         self
     }
 
+    /// Rebuild both sketches' state on stores from `builder` (e.g.
+    /// width-partitioned distributed stores, DESIGN.md §9).
+    pub fn with_store(mut self, builder: &dyn StoreBuilder) -> CsAdam {
+        self.sk_m.set_store(builder);
+        self.sk_v.set_store(builder);
+        self
+    }
+
     pub fn sketch_m(&self) -> &CountSketch {
         &self.sk_m
     }
@@ -252,7 +275,8 @@ impl RowOptimizer for CsAdam {
             let v_hat = self.est_v[i].max(0.0) / bc2;
             rows[i] -= lr * m_hat / (v_hat.sqrt() + self.eps);
         }
-        self.cleaning.maybe_clean(self.sk_v.tensor_mut(), t);
+        let cleaning = self.cleaning;
+        self.sk_v.clean_at(&cleaning, t);
     }
 
     fn memory_bytes(&self) -> usize {
@@ -310,6 +334,13 @@ impl CmsAdamV {
         self
     }
 
+    /// Rebuild the sketch state on the store `builder` produces (e.g. a
+    /// width-partitioned distributed store, DESIGN.md §9).
+    pub fn with_store(mut self, builder: &dyn StoreBuilder) -> CmsAdamV {
+        self.sk_v.set_store(builder);
+        self
+    }
+
     pub fn sketch_v(&self) -> &CountMinSketch {
         &self.sk_v
     }
@@ -335,7 +366,8 @@ impl RowOptimizer for CmsAdamV {
             let v_hat = self.est_v[i].max(0.0) / bc2;
             rows[i] -= lr * grads[i] / (v_hat.sqrt() + self.eps);
         }
-        self.cleaning.maybe_clean(self.sk_v.tensor_mut(), t);
+        let cleaning = self.cleaning;
+        self.sk_v.clean_at(&cleaning, t);
     }
 
     fn memory_bytes(&self) -> usize {
@@ -398,6 +430,14 @@ impl HybridAdamV {
         self.sk_v.set_shards(n);
         self
     }
+
+    /// Rebuild the CMS 2nd-moment state on the store `builder` produces;
+    /// the dense 1st moment stays replicated per process (it is exact,
+    /// so replicas remain bit-identical; DESIGN.md §9).
+    pub fn with_store(mut self, builder: &dyn StoreBuilder) -> HybridAdamV {
+        self.sk_v.set_store(builder);
+        self
+    }
 }
 
 impl RowOptimizer for HybridAdamV {
@@ -427,7 +467,8 @@ impl RowOptimizer for HybridAdamV {
                 rows[ti * d + i] -= lr * m_hat / (v_hat.sqrt() + self.eps);
             }
         }
-        self.cleaning.maybe_clean(self.sk_v.tensor_mut(), t);
+        let cleaning = self.cleaning;
+        self.sk_v.clean_at(&cleaning, t);
     }
 
     fn memory_bytes(&self) -> usize {

@@ -532,11 +532,29 @@ impl OptimSpec {
     /// Build a row optimizer for a sparse layer of the given shape.
     ///
     /// `rt` is only consulted for `xla-cs-*` specs; passing `None` there
-    /// returns the documented "needs a PJRT runtime" error.
+    /// returns the documented "needs a PJRT runtime" error. Sketch state
+    /// lands on the default in-process store; distributed runs go through
+    /// [`OptimSpec::build_row_dist`].
     pub fn build_row(
         &self,
         shape: &RowShape,
         rt: Option<&crate::runtime::Runtime>,
+    ) -> Result<Box<dyn RowOptimizer>> {
+        self.build_row_dist(shape, rt, None)
+    }
+
+    /// Like [`OptimSpec::build_row`], but with an optional
+    /// [`StoreBuilder`] that places every sketch's state — the injection
+    /// point distributed runs use to give each worker process one width
+    /// partition of every sketch (DESIGN.md §9). Dense and rank-1 state
+    /// is exact, so it stays replicated per process and the builder does
+    /// not apply; `xla-cs-*` artifacts own their state device-side and
+    /// reject a store override.
+    pub fn build_row_dist(
+        &self,
+        shape: &RowShape,
+        rt: Option<&crate::runtime::Runtime>,
+        store: Option<&dyn crate::sketch::StoreBuilder>,
     ) -> Result<Box<dyn RowOptimizer>> {
         self.validate()?;
         let h = &self.hyper;
@@ -545,6 +563,14 @@ impl OptimSpec {
         let w = self.w.unwrap_or(shape.w);
         let seed = self.seed.unwrap_or(h.hash_seed);
         let shards = self.shards.unwrap_or(1);
+        if store.is_some() && self.comp == Comp::SketchXla {
+            bail!(
+                "`{self}` cannot run width-partitioned: the AOT artifacts own their \
+                 sketch state device-side — use the pure-Rust `cs-{}` path for \
+                 distributed runs",
+                self.rule
+            );
+        }
         Ok(match (self.comp, self.rule) {
             (Comp::Dense, Rule::Sgd) => Box::new(SparseSgd),
             (Comp::Dense, Rule::Momentum) => Box::new(DenseMomentum::new(n, d, h.momentum_gamma)),
@@ -556,28 +582,49 @@ impl OptimSpec {
                 Box::new(DenseAdam::new(n, d, 0.0, h.adam_beta2, h.adam_eps))
             }
             (Comp::Sketch, Rule::Momentum) => {
-                Box::new(CsMomentum::new(v, w, d, seed, h.momentum_gamma).with_shards(shards))
+                let mut o = CsMomentum::new(v, w, d, seed, h.momentum_gamma).with_shards(shards);
+                if let Some(b) = store {
+                    o = o.with_store(b);
+                }
+                Box::new(o)
             }
-            (Comp::Sketch, Rule::Adagrad) => Box::new(
-                CmsAdagrad::new(v, w, d, seed, h.adagrad_eps)
+            (Comp::Sketch, Rule::Adagrad) => {
+                let mut o = CmsAdagrad::new(v, w, d, seed, h.adagrad_eps)
                     .with_cleaning(self.cleaning)
-                    .with_shards(shards),
-            ),
-            (Comp::Sketch, Rule::Adam) => Box::new(
-                CsAdam::new(v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
+                    .with_shards(shards);
+                if let Some(b) = store {
+                    o = o.with_store(b);
+                }
+                Box::new(o)
+            }
+            (Comp::Sketch, Rule::Adam) => {
+                let mut o = CsAdam::new(v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
                     .with_cleaning(self.cleaning)
-                    .with_shards(shards),
-            ),
-            (Comp::Sketch, Rule::AdamV) => Box::new(
-                CmsAdamV::new(v, w, d, seed, h.adam_beta2, h.adam_eps)
+                    .with_shards(shards);
+                if let Some(b) = store {
+                    o = o.with_store(b);
+                }
+                Box::new(o)
+            }
+            (Comp::Sketch, Rule::AdamV) => {
+                let mut o = CmsAdamV::new(v, w, d, seed, h.adam_beta2, h.adam_eps)
                     .with_cleaning(self.cleaning)
-                    .with_shards(shards),
-            ),
-            (Comp::SketchV, Rule::Adam | Rule::AdamV) => Box::new(
-                HybridAdamV::new(n, v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
-                    .with_cleaning(self.cleaning)
-                    .with_shards(shards),
-            ),
+                    .with_shards(shards);
+                if let Some(b) = store {
+                    o = o.with_store(b);
+                }
+                Box::new(o)
+            }
+            (Comp::SketchV, Rule::Adam | Rule::AdamV) => {
+                let mut o =
+                    HybridAdamV::new(n, v, w, d, seed, h.adam_beta1, h.adam_beta2, h.adam_eps)
+                        .with_cleaning(self.cleaning)
+                        .with_shards(shards);
+                if let Some(b) = store {
+                    o = o.with_store(b);
+                }
+                Box::new(o)
+            }
             (Comp::SketchXla, rule) => {
                 let Some(rt) = rt else {
                     bail!(

@@ -39,10 +39,18 @@ impl CleaningPolicy {
         self.every > 0 && self.alpha < 1.0
     }
 
+    /// Is step `t` (1-based) a cleaning step under this policy?
+    pub fn due(&self, t: usize) -> bool {
+        self.enabled() && t > 0 && t % self.every == 0
+    }
+
     /// Apply to `tensor` if step `t` (1-based) is a cleaning step.
-    /// Returns true when a cleaning was performed.
+    /// Returns true when a cleaning was performed. (Sketches route
+    /// cleaning through their store via `clean_at`, so it also reaches
+    /// partitioned state; this tensor-level entry point serves the raw
+    /// diagnostics.)
     pub fn maybe_clean(&self, tensor: &mut SketchTensor, t: usize) -> bool {
-        if self.enabled() && t > 0 && t % self.every == 0 {
+        if self.due(t) {
             tensor.scale(self.alpha);
             true
         } else {

@@ -9,31 +9,32 @@
 //!
 //! Like [`super::count_sketch::CountSketch`], the hot path is plan-based
 //! ([`CountMinSketch::update_with`] / [`CountMinSketch::query_with`],
-//! DESIGN.md §2) with optional sharded parallel execution (§5); the
-//! id-based methods are thin wrappers. A CMS plan carries signs too — the
-//! CMS simply ignores them, which is what lets CsAdam share one plan
-//! between its CS/CMS pair.
+//! DESIGN.md §2) against a pluggable [`SketchStore`] — in-process by
+//! default (optionally sharded, §5), width-partitioned across worker
+//! processes in distributed runs (§9); the id-based methods are thin
+//! wrappers. A CMS plan carries signs too — the CMS simply ignores them,
+//! which is what lets CsAdam share one plan between its CS/CMS pair.
 
+use super::clean::CleaningPolicy;
 use super::hash::SketchHasher;
-use super::plan::{query_rows, update_rows, SketchPlan, MATERIALIZE_CHUNK};
+use super::plan::{SketchPlan, MATERIALIZE_CHUNK};
+use super::store::{LocalStore, Reduce, SketchStore, StoreBuilder};
 use super::tensor::SketchTensor;
 
 /// Count-min sketch over `R^{n,d}` rows compressed to `[v, w, d]`.
 #[derive(Clone, Debug)]
 pub struct CountMinSketch {
-    tensor: SketchTensor,
+    store: Box<dyn SketchStore>,
     hasher: SketchHasher,
-    shards: usize,
 }
 
 impl CountMinSketch {
-    /// Zero-initialized sketch (sequential execution; see
-    /// [`Self::with_shards`]).
+    /// Zero-initialized sketch with in-process state (sequential
+    /// execution; see [`Self::with_shards`]).
     pub fn new(depth: usize, width: usize, dim: usize, seed: u64) -> CountMinSketch {
         CountMinSketch {
-            tensor: SketchTensor::zeros(depth, width, dim),
+            store: Box::new(LocalStore::zeros(depth, width, dim)),
             hasher: SketchHasher::new(depth, width, seed),
-            shards: 1,
         }
     }
 
@@ -47,19 +48,39 @@ impl CountMinSketch {
 
     /// See [`Self::with_shards`].
     pub fn set_shards(&mut self, shards: usize) {
-        self.shards = shards.max(1);
+        self.store.set_shards(shards.max(1));
     }
 
     pub fn shards(&self) -> usize {
-        self.shards
+        self.store.shards()
     }
 
+    /// Replace the backing store with one built by `builder` for the same
+    /// geometry (state restarts at zero; see
+    /// [`CountSketch::set_store`](super::CountSketch::set_store)).
+    pub fn set_store(&mut self, builder: &dyn StoreBuilder) {
+        let shards = self.store.shards();
+        let mut store = builder.build(self.store.depth(), self.store.width(), self.store.dim());
+        store.set_shards(shards);
+        self.store = store;
+    }
+
+    /// The backing store.
+    pub fn store(&self) -> &dyn SketchStore {
+        self.store.as_ref()
+    }
+
+    /// The whole backing tensor. Panics when the state is partitioned
+    /// across worker processes (single-process diagnostics only).
     pub fn tensor(&self) -> &SketchTensor {
-        &self.tensor
+        self.store.tensor().expect("sketch state is partitioned across workers (no local tensor)")
     }
 
+    /// See [`Self::tensor`].
     pub fn tensor_mut(&mut self) -> &mut SketchTensor {
-        &mut self.tensor
+        self.store
+            .tensor_mut()
+            .expect("sketch state is partitioned across workers (no local tensor)")
     }
 
     pub fn hasher(&self) -> &SketchHasher {
@@ -67,11 +88,13 @@ impl CountMinSketch {
     }
 
     pub fn dim(&self) -> usize {
-        self.tensor.dim()
+        self.store.dim()
     }
 
+    /// Heap bytes of sketch state held by this process (a partitioned
+    /// store reports only its rank's share).
     pub fn memory_bytes(&self) -> usize {
-        self.tensor.memory_bytes()
+        self.store.memory_bytes()
     }
 
     /// Build the `[depth, k]` plan for `ids` under this sketch's family.
@@ -86,15 +109,9 @@ impl CountMinSketch {
 
     /// UPDATE via a prebuilt plan (the hash-once hot path).
     pub fn update_with(&mut self, plan: &SketchPlan, deltas: &[f32]) {
-        let d = self.tensor.dim();
         assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
-        assert_eq!(deltas.len(), plan.k() * d);
-        update_rows(&mut self.tensor, plan, self.shards, |_j, t, row| {
-            let delta = &deltas[t * d..(t + 1) * d];
-            for (r, &x) in row.iter_mut().zip(delta) {
-                *r += x;
-            }
-        });
+        assert_eq!(deltas.len(), plan.k() * self.store.dim());
+        self.store.update(plan, deltas, false);
     }
 
     /// QUERY: elementwise min over depth. Writes `[k, d]` into `out`.
@@ -104,13 +121,9 @@ impl CountMinSketch {
 
     /// QUERY via a prebuilt plan (the hash-once hot path).
     pub fn query_with(&self, plan: &SketchPlan, out: &mut [f32]) {
-        let d = self.tensor.dim();
         assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
-        assert_eq!(out.len(), plan.k() * d);
-        let tensor = &self.tensor;
-        query_rows(out, d, plan.k(), self.shards, |t0, t1, span| {
-            cms_query_span(tensor, plan, t0, t1, span);
-        });
+        assert_eq!(out.len(), plan.k() * self.store.dim());
+        self.store.query(plan, Reduce::Min, out);
     }
 
     /// Convenience: query a single id into a fresh vector.
@@ -142,37 +155,27 @@ impl CountMinSketch {
 
     /// Periodic cleaning (paper §4): multiply all cells by `alpha`.
     pub fn clean(&mut self, alpha: f32) {
-        self.tensor.scale(alpha);
+        self.store.scale(alpha);
+    }
+
+    /// Apply `policy` at step `t` (store-routed so it works on local and
+    /// partitioned state alike — every rank scales its share at the same
+    /// step). Returns true when a cleaning was performed.
+    pub fn clean_at(&mut self, policy: &CleaningPolicy, t: usize) -> bool {
+        if policy.due(t) {
+            self.store.scale(policy.alpha);
+            true
+        } else {
+            false
+        }
     }
 
     /// Fold the sketch in half (paper §5); the hasher follows. Plans built
     /// before the fold no longer [`SketchPlan::compatible`] with it.
+    /// Local stores only.
     pub fn fold_half(&mut self) {
-        self.tensor.fold_half();
+        self.store.fold_half();
         self.hasher = self.hasher.halved();
-    }
-}
-
-/// Min-query items `[t0, t1)` of `plan` into `out` (`[t1-t0, d]`).
-fn cms_query_span(tensor: &SketchTensor, plan: &SketchPlan, t0: usize, t1: usize, out: &mut [f32]) {
-    let d = tensor.dim();
-    let w = tensor.width();
-    let v = plan.depth();
-    let data = tensor.data();
-    debug_assert_eq!(out.len(), (t1 - t0) * d);
-    for t in t0..t1 {
-        let dst = &mut out[(t - t0) * d..(t - t0 + 1) * d];
-        let b0 = plan.bucket(0, t);
-        dst.copy_from_slice(&data[b0 * d..b0 * d + d]);
-        for j in 1..v {
-            let b = j * w + plan.bucket(j, t);
-            let row = &data[b * d..b * d + d];
-            for (o, &x) in dst.iter_mut().zip(row) {
-                if x < *o {
-                    *o = x;
-                }
-            }
-        }
     }
 }
 

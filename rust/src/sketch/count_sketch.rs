@@ -10,30 +10,33 @@
 //!
 //! The hot-path entry points are [`CountSketch::update_with`] /
 //! [`CountSketch::query_with`], which replay a prebuilt [`SketchPlan`]
-//! (hash once per batch, DESIGN.md §2) and run sharded in parallel when
-//! [`CountSketch::with_shards`] asks for it (DESIGN.md §5). The id-based
-//! `update`/`query` remain as thin wrappers that build a throwaway plan.
+//! (hash once per batch, DESIGN.md §2) against the sketch's
+//! [`SketchStore`] — by default the in-process [`LocalStore`] (optionally
+//! sharded via [`CountSketch::with_shards`], DESIGN.md §5), or a
+//! width-partitioned store spanning worker processes (DESIGN.md §9). The
+//! id-based `update`/`query` remain as thin wrappers that build a
+//! throwaway plan.
 
+use super::clean::CleaningPolicy;
 use super::hash::SketchHasher;
-use super::plan::{query_rows, update_rows, SketchPlan, MATERIALIZE_CHUNK};
+use super::plan::{SketchPlan, MATERIALIZE_CHUNK};
+use super::store::{LocalStore, Reduce, SketchStore, StoreBuilder};
 use super::tensor::SketchTensor;
 
 /// Count-sketch over `R^{n,d}` rows compressed to `[v, w, d]`.
 #[derive(Clone, Debug)]
 pub struct CountSketch {
-    tensor: SketchTensor,
+    store: Box<dyn SketchStore>,
     hasher: SketchHasher,
-    shards: usize,
 }
 
 impl CountSketch {
-    /// Zero-initialized sketch (sequential execution; see
-    /// [`Self::with_shards`]).
+    /// Zero-initialized sketch with in-process state (sequential
+    /// execution; see [`Self::with_shards`]).
     pub fn new(depth: usize, width: usize, dim: usize, seed: u64) -> CountSketch {
         CountSketch {
-            tensor: SketchTensor::zeros(depth, width, dim),
+            store: Box::new(LocalStore::zeros(depth, width, dim)),
             hasher: SketchHasher::new(depth, width, seed),
-            shards: 1,
         }
     }
 
@@ -47,19 +50,40 @@ impl CountSketch {
 
     /// See [`Self::with_shards`].
     pub fn set_shards(&mut self, shards: usize) {
-        self.shards = shards.max(1);
+        self.store.set_shards(shards.max(1));
     }
 
     pub fn shards(&self) -> usize {
-        self.shards
+        self.store.shards()
     }
 
+    /// Replace the backing store with one built by `builder` for the same
+    /// geometry (state restarts at zero). This is how a trainer moves a
+    /// sketch onto a width-partitioned distributed store (DESIGN.md §9).
+    pub fn set_store(&mut self, builder: &dyn StoreBuilder) {
+        let shards = self.store.shards();
+        let mut store = builder.build(self.store.depth(), self.store.width(), self.store.dim());
+        store.set_shards(shards);
+        self.store = store;
+    }
+
+    /// The backing store.
+    pub fn store(&self) -> &dyn SketchStore {
+        self.store.as_ref()
+    }
+
+    /// The whole backing tensor. Panics when the state is partitioned
+    /// across worker processes — diagnostics that need the raw tensor
+    /// (Fig. 4 error curves, fold-in-half) are single-process tools.
     pub fn tensor(&self) -> &SketchTensor {
-        &self.tensor
+        self.store.tensor().expect("sketch state is partitioned across workers (no local tensor)")
     }
 
+    /// See [`Self::tensor`].
     pub fn tensor_mut(&mut self) -> &mut SketchTensor {
-        &mut self.tensor
+        self.store
+            .tensor_mut()
+            .expect("sketch state is partitioned across workers (no local tensor)")
     }
 
     pub fn hasher(&self) -> &SketchHasher {
@@ -67,11 +91,13 @@ impl CountSketch {
     }
 
     pub fn dim(&self) -> usize {
-        self.tensor.dim()
+        self.store.dim()
     }
 
+    /// Heap bytes of sketch state held by this process (a partitioned
+    /// store reports only its rank's share).
     pub fn memory_bytes(&self) -> usize {
-        self.tensor.memory_bytes()
+        self.store.memory_bytes()
     }
 
     /// Build the `[depth, k]` plan for `ids` under this sketch's family.
@@ -87,21 +113,9 @@ impl CountSketch {
 
     /// UPDATE via a prebuilt plan (the hash-once hot path).
     pub fn update_with(&mut self, plan: &SketchPlan, deltas: &[f32]) {
-        let d = self.tensor.dim();
         assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
-        assert_eq!(deltas.len(), plan.k() * d);
-        update_rows(&mut self.tensor, plan, self.shards, |j, t, row| {
-            let delta = &deltas[t * d..(t + 1) * d];
-            if plan.sign(j, t) >= 0.0 {
-                for (r, &x) in row.iter_mut().zip(delta) {
-                    *r += x;
-                }
-            } else {
-                for (r, &x) in row.iter_mut().zip(delta) {
-                    *r -= x;
-                }
-            }
-        });
+        assert_eq!(deltas.len(), plan.k() * self.store.dim());
+        self.store.update(plan, deltas, true);
     }
 
     /// QUERY: signed median over depth. Writes `[k, d]` into `out`.
@@ -111,13 +125,9 @@ impl CountSketch {
 
     /// QUERY via a prebuilt plan (the hash-once hot path).
     pub fn query_with(&self, plan: &SketchPlan, out: &mut [f32]) {
-        let d = self.tensor.dim();
         assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
-        assert_eq!(out.len(), plan.k() * d);
-        let tensor = &self.tensor;
-        query_rows(out, d, plan.k(), self.shards, |t0, t1, span| {
-            cs_query_span(tensor, plan, t0, t1, span);
-        });
+        assert_eq!(out.len(), plan.k() * self.store.dim());
+        self.store.query(plan, Reduce::SignedMedian, out);
     }
 
     /// Convenience: query a single id into a fresh vector.
@@ -147,92 +157,24 @@ impl CountSketch {
         out
     }
 
+    /// Apply `policy` at step `t` (store-routed so it works on local and
+    /// partitioned state alike — every rank scales its share at the same
+    /// step). Returns true when a cleaning was performed.
+    pub fn clean_at(&mut self, policy: &CleaningPolicy, t: usize) -> bool {
+        if policy.due(t) {
+            self.store.scale(policy.alpha);
+            true
+        } else {
+            false
+        }
+    }
+
     /// Fold the sketch in half (paper §5); the hasher follows. Plans built
     /// before the fold no longer [`SketchPlan::compatible`] with it.
+    /// Local stores only.
     pub fn fold_half(&mut self) {
-        self.tensor.fold_half();
+        self.store.fold_half();
         self.hasher = self.hasher.halved();
-    }
-}
-
-/// Median-query items `[t0, t1)` of `plan` into `out` (`[t1-t0, d]`).
-/// All scratch lives on the stack for the paper's depths (v ≤ 8); deeper
-/// sketches use one heap scratch per *span*, never per item.
-fn cs_query_span(tensor: &SketchTensor, plan: &SketchPlan, t0: usize, t1: usize, out: &mut [f32]) {
-    let d = tensor.dim();
-    let w = tensor.width();
-    let v = plan.depth();
-    let data = tensor.data();
-    debug_assert_eq!(out.len(), (t1 - t0) * d);
-    const INLINE: usize = 8;
-    let mut inline_rows = [(0usize, 0.0f32); INLINE];
-    let mut heap_rows: Vec<(usize, f32)> = Vec::new();
-    let mut median_buf: Vec<f32> = if v > 3 { vec![0.0; v] } else { Vec::new() };
-    for t in t0..t1 {
-        let dst = &mut out[(t - t0) * d..(t - t0 + 1) * d];
-        if v <= INLINE {
-            for (j, slot) in inline_rows[..v].iter_mut().enumerate() {
-                *slot = (j * w + plan.bucket(j, t), plan.sign(j, t));
-            }
-            median_rows(data, d, &inline_rows[..v], &mut median_buf, dst);
-        } else {
-            heap_rows.clear();
-            for j in 0..v {
-                heap_rows.push((j * w + plan.bucket(j, t), plan.sign(j, t)));
-            }
-            median_rows(data, d, &heap_rows, &mut median_buf, dst);
-        }
-    }
-}
-
-/// Elementwise median over the signed bucket rows listed in `rows`
-/// (`(flat_bucket_index, sign)`), written to `dst`.
-///
-/// v ≤ 3 uses branch-free min/max networks (the hot path: the paper uses
-/// depth 3–5); larger depths sort the caller's `buf` scratch (length v)
-/// per column. Even depths average the two central order statistics,
-/// matching `jnp.median`.
-fn median_rows(data: &[f32], d: usize, rows: &[(usize, f32)], buf: &mut [f32], dst: &mut [f32]) {
-    match rows {
-        [(b, s)] => {
-            let r = &data[b * d..b * d + d];
-            for (o, &x) in dst.iter_mut().zip(r) {
-                *o = s * x;
-            }
-        }
-        [(b0, s0), (b1, s1)] => {
-            let r0 = &data[b0 * d..b0 * d + d];
-            let r1 = &data[b1 * d..b1 * d + d];
-            for i in 0..d {
-                dst[i] = 0.5 * (s0 * r0[i] + s1 * r1[i]);
-            }
-        }
-        [(b0, s0), (b1, s1), (b2, s2)] => {
-            let r0 = &data[b0 * d..b0 * d + d];
-            let r1 = &data[b1 * d..b1 * d + d];
-            let r2 = &data[b2 * d..b2 * d + d];
-            for i in 0..d {
-                let a = s0 * r0[i];
-                let b = s1 * r1[i];
-                let c = s2 * r2[i];
-                dst[i] = a.min(b).max(a.max(b).min(c));
-            }
-        }
-        _ => {
-            let v = rows.len();
-            debug_assert_eq!(buf.len(), v);
-            for i in 0..d {
-                for (jj, (b, s)) in rows.iter().enumerate() {
-                    buf[jj] = s * data[b * d + i];
-                }
-                buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
-                dst[i] = if v % 2 == 1 {
-                    buf[v / 2]
-                } else {
-                    0.5 * (buf[v / 2 - 1] + buf[v / 2])
-                };
-            }
-        }
     }
 }
 
@@ -424,6 +366,17 @@ mod tests {
         let mut full = vec![0.0f32; n * 2];
         cs.query(&ids, &mut full);
         assert_eq!(cs.materialize(n), full);
+    }
+
+    #[test]
+    fn clean_at_scales_on_schedule() {
+        let mut cs = CountSketch::new(2, 64, 1, 4);
+        cs.update(&[9], &[8.0]);
+        let policy = CleaningPolicy { every: 2, alpha: 0.5 };
+        assert!(!cs.clean_at(&policy, 1));
+        assert!(cs.clean_at(&policy, 2));
+        let est = cs.query_one(9);
+        assert!((est[0] - 4.0).abs() < 1e-6, "{est:?}");
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //! * [`plan`] — hash-once [`SketchPlan`] execution plans (`[depth, k]`
 //!   buckets+signs built once per batch, DESIGN.md §2) and the sharded
 //!   parallel update/query executor (DESIGN.md §5).
+//! * [`store`] — the [`SketchStore`] layer between sketches and their
+//!   tensor: whole-tensor in-process state ([`store::LocalStore`]) or one
+//!   width partition of an N-process run (`comm::PartitionedStore`,
+//!   DESIGN.md §9).
 //! * [`count_sketch`] — signed median-of-depth estimator (UPDATE/QUERY).
 //! * [`count_min`] — unsigned min-of-depth estimator (UPDATE/QUERY).
 //! * [`clean`] — the periodic cleaning heuristic for CMS overestimates
@@ -23,6 +27,7 @@ pub mod count_min;
 pub mod count_sketch;
 pub mod hash;
 pub mod plan;
+pub mod store;
 pub mod tensor;
 
 pub use clean::CleaningPolicy;
@@ -30,4 +35,5 @@ pub use count_min::CountMinSketch;
 pub use count_sketch::CountSketch;
 pub use hash::SketchHasher;
 pub use plan::SketchPlan;
+pub use store::{Reduce, SketchStore, StoreBuilder};
 pub use tensor::SketchTensor;

@@ -135,18 +135,34 @@ pub(crate) fn shard_ranges(depth: usize, width: usize, shards: usize) -> Vec<(us
     ranges
 }
 
+/// The rank's contiguous width range `[lo, hi)` in a `world`-process
+/// partitioned run (DESIGN.md §9): the same balanced split
+/// [`shard_ranges`] emits for one depth row, applied identically to
+/// *every* depth row, so rank `r` owns `data[(j·w + lo)·d .. (j·w + hi)·d]`
+/// for all `j`. Ranks beyond the width own the empty range.
+pub(crate) fn width_partition(width: usize, world: usize, rank: usize) -> (usize, usize) {
+    debug_assert!(rank < world);
+    let ranges = shard_ranges(1, width, world);
+    match ranges.get(rank) {
+        Some(&(_, lo, hi)) => (lo, hi),
+        None => (width, width),
+    }
+}
+
 /// Shared UPDATE executor: apply `apply(j, t, row)` for every depth `j`
 /// and item `t`, where `row` is the bucket row `(j, plan.bucket(j, t))`.
 /// `shards == 1` runs the sequential loop; `shards > 1` tiles the tensor
 /// into disjoint (depth × width-range) slices and replays the same item
 /// order inside each, so the result is bit-identical either way.
 ///
-/// `parallel_map` uses scoped threads (spawn + join per call, which is
-/// what lets the shards borrow the tensor without `'static` bounds), so
-/// each sharded call pays a thread-spawn cost of tens of microseconds.
-/// That amortizes at the paper's shapes — one wt103 update moves
-/// k·v·d ≈ 0.9M f32 adds — but makes `shard>1` a net loss on tiny
-/// sketches; callers pick the shard count, and 1 is always safe.
+/// `parallel_map` runs on a persistent worker pool that still accepts
+/// borrowed closures (no thread spawn per call — the dispatch cost is a
+/// queue push plus a condvar wake, single-digit microseconds, and the
+/// caller always executes work itself while helpers join). Sharding
+/// therefore degrades gracefully on tiny sketches instead of paying the
+/// old tens-of-µs spawn+join tax; `bench_sketch`'s `cs_update_small`
+/// rows track exactly this. Callers pick the shard count, and 1 is
+/// always safe.
 pub(crate) fn update_rows<F>(tensor: &mut SketchTensor, plan: &SketchPlan, shards: usize, apply: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
@@ -290,6 +306,24 @@ mod tests {
             assert_eq!(expect_j, v - 1);
             assert_eq!(expect_lo, w);
             assert!(ranges.len() >= shards.min(v * w), "{v}x{w} shards={shards}");
+        }
+    }
+
+    #[test]
+    fn width_partition_tiles_exactly_once() {
+        for (w, world) in [(10usize, 3usize), (7, 7), (3, 8), (6554, 4), (1, 2)] {
+            let mut expect_lo = 0usize;
+            for rank in 0..world {
+                let (lo, hi) = width_partition(w, world, rank);
+                if lo == w {
+                    assert_eq!((lo, hi), (w, w), "overflow ranks own the empty range");
+                    continue;
+                }
+                assert_eq!(lo, expect_lo, "w={w} world={world} rank={rank}");
+                assert!(hi > lo && hi <= w);
+                expect_lo = hi;
+            }
+            assert_eq!(expect_lo, w, "w={w} world={world} did not tile [0,{w})");
         }
     }
 }

@@ -1,0 +1,397 @@
+//! `SketchStore` — the storage/execution layer between the sketched
+//! optimizers and the `[v, w, d]` tensor (DESIGN.md §9).
+//!
+//! [`CountSketch`](super::CountSketch) / [`CountMinSketch`](super::CountMinSketch)
+//! no longer own a [`SketchTensor`] directly: they own a `Box<dyn
+//! SketchStore>` and express every UPDATE/QUERY against it. Two
+//! implementations exist:
+//!
+//! * [`LocalStore`] (here) — the whole `[v, w, d]` tensor in this
+//!   process, executed through the hash-once plans and the sharded
+//!   parallel executor of [`super::plan`]. This is the default and is
+//!   bit-identical to the pre-store code path.
+//! * `PartitionedStore` ([`crate::comm::partitioned`]) — one contiguous
+//!   width range `[lo, hi)` of every depth row, owned by one rank of an
+//!   N-process run. UPDATEs apply only in-range; QUERYs gather partial
+//!   per-(item, depth) rows and all-reduce them over a
+//!   [`crate::comm::Transport`]. Because count-sketches are linear and
+//!   every cell has exactly one owner, the reduced estimates are exact —
+//!   the distributed run is bit-identical to the single-process one.
+//!
+//! The sign (count-sketch) vs no-sign (count-min) UPDATE semantics and
+//! the median vs min QUERY reductions stay with the sketch types; the
+//! store only distinguishes `signed` updates and the [`Reduce`] mode, so
+//! both sketch flavors drive either store implementation.
+
+use super::plan::{query_rows, update_rows, SketchPlan};
+use super::tensor::SketchTensor;
+
+/// Depth-reduction mode of a QUERY.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reduce {
+    /// Signed median over depth (count-sketch).
+    SignedMedian,
+    /// Elementwise min over depth (count-min sketch).
+    Min,
+}
+
+/// Storage + execution backend for one `[v, w, d]` sketch tensor.
+///
+/// All methods take prebuilt [`SketchPlan`]s; plan/hasher compatibility
+/// is checked by the owning sketch before the store is reached.
+pub trait SketchStore: Send + std::fmt::Debug {
+    fn depth(&self) -> usize;
+    fn width(&self) -> usize;
+    fn dim(&self) -> usize;
+
+    /// Heap bytes of sketch state held by **this** store (a partitioned
+    /// store reports only its rank's share — that is the point).
+    fn memory_bytes(&self) -> usize;
+
+    /// Intra-process parallel shard count (1 = sequential execution).
+    fn shards(&self) -> usize;
+
+    /// See [`SketchStore::shards`]. No-op where sharding does not apply.
+    fn set_shards(&mut self, n: usize);
+
+    /// UPDATE: add `deltas` (`[k, d]` row-major) into the bucket rows of
+    /// `plan`, multiplied by the plan's per-(depth, item) sign when
+    /// `signed` (count-sketch) and raw otherwise (count-min).
+    fn update(&mut self, plan: &SketchPlan, deltas: &[f32], signed: bool);
+
+    /// QUERY: fill `out` (`[k, d]`) with per-item estimates under the
+    /// given depth reduction.
+    fn query(&self, plan: &SketchPlan, reduce: Reduce, out: &mut [f32]);
+
+    /// Multiply every cell by `alpha` (the §4 cleaning primitive).
+    fn scale(&mut self, alpha: f32);
+
+    /// Zero everything.
+    fn reset(&mut self);
+
+    /// Squared Frobenius norm of the state held by this store (rank-local
+    /// for a partitioned store).
+    fn sq_norm(&self) -> f64;
+
+    /// The backing tensor, when the whole tensor lives in this process.
+    fn tensor(&self) -> Option<&SketchTensor>;
+
+    /// See [`SketchStore::tensor`].
+    fn tensor_mut(&mut self) -> Option<&mut SketchTensor>;
+
+    /// Fold the tensor in half along the bucket axis (paper §5). Only a
+    /// local store can fold; partitioned stores panic with a clear
+    /// message (fold changes the hash family mid-run, which a
+    /// distributed run does not support).
+    fn fold_half(&mut self);
+
+    fn clone_box(&self) -> Box<dyn SketchStore>;
+}
+
+impl Clone for Box<dyn SketchStore> {
+    fn clone(&self) -> Box<dyn SketchStore> {
+        self.clone_box()
+    }
+}
+
+/// Builds the store for a sketch of the given geometry — the injection
+/// point [`OptimSpec::build_row_dist`](crate::optim::OptimSpec::build_row_dist)
+/// uses to place sketch state locally or across worker processes.
+pub trait StoreBuilder {
+    fn build(&self, depth: usize, width: usize, dim: usize) -> Box<dyn SketchStore>;
+}
+
+/// The default builder: whole-tensor in-process state.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LocalBuilder;
+
+impl StoreBuilder for LocalBuilder {
+    fn build(&self, depth: usize, width: usize, dim: usize) -> Box<dyn SketchStore> {
+        Box::new(LocalStore::zeros(depth, width, dim))
+    }
+}
+
+/// Whole-tensor in-process store: the pre-store `SketchTensor` execution
+/// path, unchanged (plans + optional sharded parallel kernels).
+#[derive(Clone, Debug)]
+pub struct LocalStore {
+    tensor: SketchTensor,
+    shards: usize,
+}
+
+impl LocalStore {
+    pub fn zeros(depth: usize, width: usize, dim: usize) -> LocalStore {
+        LocalStore { tensor: SketchTensor::zeros(depth, width, dim), shards: 1 }
+    }
+}
+
+impl SketchStore for LocalStore {
+    fn depth(&self) -> usize {
+        self.tensor.depth()
+    }
+
+    fn width(&self) -> usize {
+        self.tensor.width()
+    }
+
+    fn dim(&self) -> usize {
+        self.tensor.dim()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.tensor.memory_bytes()
+    }
+
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn set_shards(&mut self, n: usize) {
+        self.shards = n.max(1);
+    }
+
+    fn update(&mut self, plan: &SketchPlan, deltas: &[f32], signed: bool) {
+        let d = self.tensor.dim();
+        debug_assert_eq!(deltas.len(), plan.k() * d);
+        if signed {
+            update_rows(&mut self.tensor, plan, self.shards, |j, t, row| {
+                let delta = &deltas[t * d..(t + 1) * d];
+                if plan.sign(j, t) >= 0.0 {
+                    for (r, &x) in row.iter_mut().zip(delta) {
+                        *r += x;
+                    }
+                } else {
+                    for (r, &x) in row.iter_mut().zip(delta) {
+                        *r -= x;
+                    }
+                }
+            });
+        } else {
+            update_rows(&mut self.tensor, plan, self.shards, |_j, t, row| {
+                let delta = &deltas[t * d..(t + 1) * d];
+                for (r, &x) in row.iter_mut().zip(delta) {
+                    *r += x;
+                }
+            });
+        }
+    }
+
+    fn query(&self, plan: &SketchPlan, reduce: Reduce, out: &mut [f32]) {
+        let d = self.tensor.dim();
+        let tensor = &self.tensor;
+        match reduce {
+            Reduce::SignedMedian => query_rows(out, d, plan.k(), self.shards, |t0, t1, span| {
+                cs_query_span(tensor, plan, t0, t1, span);
+            }),
+            Reduce::Min => query_rows(out, d, plan.k(), self.shards, |t0, t1, span| {
+                cms_query_span(tensor, plan, t0, t1, span);
+            }),
+        }
+    }
+
+    fn scale(&mut self, alpha: f32) {
+        self.tensor.scale(alpha);
+    }
+
+    fn reset(&mut self) {
+        self.tensor.reset();
+    }
+
+    fn sq_norm(&self) -> f64 {
+        self.tensor.sq_norm()
+    }
+
+    fn tensor(&self) -> Option<&SketchTensor> {
+        Some(&self.tensor)
+    }
+
+    fn tensor_mut(&mut self) -> Option<&mut SketchTensor> {
+        Some(&mut self.tensor)
+    }
+
+    fn fold_half(&mut self) {
+        self.tensor.fold_half();
+    }
+
+    fn clone_box(&self) -> Box<dyn SketchStore> {
+        Box::new(self.clone())
+    }
+}
+
+/// Median-query items `[t0, t1)` of `plan` against a whole-tensor store
+/// into `out` (`[t1-t0, d]`). All scratch lives on the stack for the
+/// paper's depths (v ≤ 8); deeper sketches use one heap scratch per
+/// *span*, never per item.
+fn cs_query_span(tensor: &SketchTensor, plan: &SketchPlan, t0: usize, t1: usize, out: &mut [f32]) {
+    let d = tensor.dim();
+    let w = tensor.width();
+    let v = plan.depth();
+    let data = tensor.data();
+    debug_assert_eq!(out.len(), (t1 - t0) * d);
+    const INLINE: usize = 8;
+    let mut inline_rows = [(0usize, 0.0f32); INLINE];
+    let mut heap_rows: Vec<(usize, f32)> = Vec::new();
+    let mut median_buf: Vec<f32> = if v > 3 { vec![0.0; v] } else { Vec::new() };
+    for t in t0..t1 {
+        let dst = &mut out[(t - t0) * d..(t - t0 + 1) * d];
+        if v <= INLINE {
+            for (j, slot) in inline_rows[..v].iter_mut().enumerate() {
+                *slot = (j * w + plan.bucket(j, t), plan.sign(j, t));
+            }
+            median_rows(data, d, &inline_rows[..v], &mut median_buf, dst);
+        } else {
+            heap_rows.clear();
+            for j in 0..v {
+                heap_rows.push((j * w + plan.bucket(j, t), plan.sign(j, t)));
+            }
+            median_rows(data, d, &heap_rows, &mut median_buf, dst);
+        }
+    }
+}
+
+/// Min-query items `[t0, t1)` of `plan` against a whole-tensor store
+/// into `out` (`[t1-t0, d]`).
+fn cms_query_span(tensor: &SketchTensor, plan: &SketchPlan, t0: usize, t1: usize, out: &mut [f32]) {
+    let d = tensor.dim();
+    let w = tensor.width();
+    let v = plan.depth();
+    let data = tensor.data();
+    debug_assert_eq!(out.len(), (t1 - t0) * d);
+    for t in t0..t1 {
+        let dst = &mut out[(t - t0) * d..(t - t0 + 1) * d];
+        let b0 = plan.bucket(0, t);
+        dst.copy_from_slice(&data[b0 * d..b0 * d + d]);
+        for j in 1..v {
+            let b = j * w + plan.bucket(j, t);
+            min_into(dst, &data[b * d..b * d + d]);
+        }
+    }
+}
+
+/// `dst[i] = min(dst[i], row[i])` — the exact comparison the min
+/// reduction uses everywhere (local spans and distributed combines must
+/// share it so they stay bit-identical).
+#[inline(always)]
+pub(crate) fn min_into(dst: &mut [f32], row: &[f32]) {
+    for (o, &x) in dst.iter_mut().zip(row) {
+        if x < *o {
+            *o = x;
+        }
+    }
+}
+
+/// Elementwise median over the signed bucket rows listed in `rows`
+/// (`(flat_row_index, sign)` into `data`, row stride `d`), written to
+/// `dst`. Shared by the local span path (rows indexed `j·w + bucket`)
+/// and the distributed combine (rows indexed `j·k + t` into the gathered
+/// buffer) — one implementation, so the two paths are bit-identical.
+///
+/// v ≤ 3 uses branch-free min/max networks (the hot path: the paper uses
+/// depth 3–5); larger depths sort the caller's `buf` scratch (length v)
+/// per column. Even depths average the two central order statistics,
+/// matching `jnp.median`.
+pub(crate) fn median_rows(
+    data: &[f32],
+    d: usize,
+    rows: &[(usize, f32)],
+    buf: &mut [f32],
+    dst: &mut [f32],
+) {
+    match rows {
+        [(b, s)] => {
+            let r = &data[b * d..b * d + d];
+            for (o, &x) in dst.iter_mut().zip(r) {
+                *o = s * x;
+            }
+        }
+        [(b0, s0), (b1, s1)] => {
+            let r0 = &data[b0 * d..b0 * d + d];
+            let r1 = &data[b1 * d..b1 * d + d];
+            for i in 0..d {
+                dst[i] = 0.5 * (s0 * r0[i] + s1 * r1[i]);
+            }
+        }
+        [(b0, s0), (b1, s1), (b2, s2)] => {
+            let r0 = &data[b0 * d..b0 * d + d];
+            let r1 = &data[b1 * d..b1 * d + d];
+            let r2 = &data[b2 * d..b2 * d + d];
+            for i in 0..d {
+                let a = s0 * r0[i];
+                let b = s1 * r1[i];
+                let c = s2 * r2[i];
+                dst[i] = a.min(b).max(a.max(b).min(c));
+            }
+        }
+        _ => {
+            let v = rows.len();
+            debug_assert_eq!(buf.len(), v);
+            for i in 0..d {
+                for (jj, (b, s)) in rows.iter().enumerate() {
+                    buf[jj] = s * data[b * d + i];
+                }
+                buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                dst[i] = if v % 2 == 1 {
+                    buf[v / 2]
+                } else {
+                    0.5 * (buf[v / 2 - 1] + buf[v / 2])
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::hash::SketchHasher;
+    use super::*;
+
+    #[test]
+    fn local_store_update_query_roundtrip() {
+        let h = SketchHasher::new(3, 4096, 5);
+        let mut store = LocalStore::zeros(3, 4096, 2);
+        let ids = [4u64, 9, 700];
+        let plan = SketchPlan::build(&h, &ids);
+        let deltas = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        store.update(&plan, &deltas, true);
+        let mut out = vec![0.0f32; 6];
+        store.query(&plan, Reduce::SignedMedian, &mut out);
+        // wide sketch, 3 distinct ids → exact recovery unless a freak
+        // collision; assert closeness, which also exercises the reducer
+        for (a, b) in out.iter().zip(&deltas) {
+            assert!((a - b).abs() < 1e-5, "{out:?}");
+        }
+    }
+
+    #[test]
+    fn min_into_matches_scalar_min() {
+        let mut dst = [3.0f32, -1.0, 0.5];
+        min_into(&mut dst, &[2.0, 0.0, 0.75]);
+        assert_eq!(dst, [2.0, -1.0, 0.5]);
+    }
+
+    #[test]
+    fn median_rows_even_depth_averages() {
+        // four rows of width 1 holding 1, 2, 3, 4 → median = 2.5
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let rows = [(0usize, 1.0f32), (1, 1.0), (2, 1.0), (3, 1.0)];
+        let mut buf = vec![0.0f32; 4];
+        let mut dst = [0.0f32];
+        median_rows(&data, 1, &rows, &mut buf, &mut dst);
+        assert_eq!(dst, [2.5]);
+    }
+
+    #[test]
+    fn scale_reset_and_norm_route_through_store() {
+        let h = SketchHasher::new(2, 16, 3);
+        let mut store = LocalStore::zeros(2, 16, 1);
+        let plan = SketchPlan::build(&h, &[1]);
+        store.update(&plan, &[4.0], false);
+        assert!(store.sq_norm() > 0.0);
+        store.scale(0.5);
+        let mut out = vec![0.0f32; 1];
+        store.query(&plan, Reduce::Min, &mut out);
+        assert_eq!(out, vec![2.0]);
+        store.reset();
+        assert_eq!(store.sq_norm(), 0.0);
+    }
+}

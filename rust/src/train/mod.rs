@@ -12,6 +12,6 @@ pub mod xla_opt;
 
 pub use engine::{LmEngine, RustLmEngine, XlaLmEngine};
 pub use sampler::CandidateSampler;
-pub use session::{build_mach, MachParams, RunSpec, RunSummary, SchedSpec, Session};
+pub use session::{build_mach, DistParams, MachParams, RunSpec, RunSummary, SchedSpec, Session};
 pub use trainer::{LmTrainer, TrainReport, TrainerOptions};
 pub use xla_opt::XlaRowOptimizer;

@@ -21,10 +21,12 @@
 //! ```
 //!
 //! Grammar: one `key = value` per line, `#` comments, blank lines
-//! ignored, values optionally quoted. Two sections: `[optim]` holds the
-//! ordered `layer-pattern = "optim-spec"` policy rules (first glob match
-//! wins, resolved through `OptimSpec::parse` unchanged); `[mach]` opts a
-//! spec into the MACH extreme-classification workload. Top-level keys:
+//! ignored, values optionally quoted. Three sections: `[optim]` holds
+//! the ordered `layer-pattern = "optim-spec"` policy rules (first glob
+//! match wins, resolved through `OptimSpec::parse` unchanged); `[mach]`
+//! opts a spec into the MACH extreme-classification workload; `[dist]`
+//! (rank/workers/socket) places the process in a `csopt launch`
+//! cross-process run (DESIGN.md §9). Top-level keys:
 //! `preset engine epochs steps lr schedule clip seed shards out metrics
 //! checkpoint resume data.seed data.windows data.val data.test
 //! eval.windows`. `schedule` is `constant`, `linear` (decay to zero over
@@ -41,13 +43,16 @@
 //! [`RunSpec::apply_sets`] (`--set k=v[,k=v...]`), which edits the spec
 //! *after* parsing, so override precedence is by construction.
 //!
-//! A `RunSpec` is deliberately serializable: it is the unit a future
-//! multi-trainer scale-out ships to worker processes (ROADMAP).
+//! A `RunSpec` is deliberately serializable: `csopt launch` ships one
+//! per rank (extended with its `[dist]` section) to `csopt worker`
+//! processes over stdin, exactly as the cross-process scale-out design
+//! anticipated (DESIGN.md §9).
 
 use std::fmt;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::comm::DistCtx;
 use crate::config::{lm_preset, LmPreset};
 use crate::data::corpus::SyntheticCorpus;
 use crate::mach::{MachEnsemble, MachOptions};
@@ -150,6 +155,27 @@ impl Default for MachParams {
     }
 }
 
+/// `[dist]` section: this process's place in a cross-process run
+/// (DESIGN.md §9). `csopt launch` writes one per rank and ships the
+/// serialized spec to each worker; a spec without the section (or with
+/// `workers = 1`) is an ordinary single-process run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistParams {
+    /// This process's rank (0 = coordinator).
+    pub rank: usize,
+    /// Total process count.
+    pub workers: usize,
+    /// Coordinator's unix-domain-socket path (rank 0 listens, workers
+    /// connect).
+    pub socket: String,
+}
+
+impl Default for DistParams {
+    fn default() -> DistParams {
+        DistParams { rank: 0, workers: 1, socket: String::new() }
+    }
+}
+
 /// A declarative run description. See the module docs for the grammar;
 /// `parse` ∘ `Display` is the identity (Display emits non-default keys
 /// in a fixed order).
@@ -192,6 +218,9 @@ pub struct RunSpec {
     pub policy: OptimPolicy,
     /// MACH workload geometry (`[mach]` section; `None` = LM run).
     pub mach: Option<MachParams>,
+    /// Cross-process run placement (`[dist]` section; `None` =
+    /// single-process).
+    pub dist: Option<DistParams>,
 }
 
 impl Default for RunSpec {
@@ -217,6 +246,7 @@ impl Default for RunSpec {
             eval_windows: 8,
             policy: OptimPolicy::new(),
             mach: None,
+            dist: None,
         }
     }
 }
@@ -246,13 +276,62 @@ const TOP_KEYS: &[&str] = &[
     "eval.windows",
 ];
 
+const MACH_KEYS: &[&str] =
+    &["r", "b-meta", "hd", "din", "classes", "batch", "samples", "recall-queries"];
+
+const DIST_KEYS: &[&str] = &["rank", "workers", "socket"];
+
+/// Levenshtein distance (small strings — run-spec keys).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The closest known key, when it is close enough to be a plausible typo
+/// (distance ≤ 2, or ≤ a third of the key's length for long keys).
+fn nearest_key<'a>(key: &str, known: impl IntoIterator<Item = &'a str>) -> Option<&'a str> {
+    let (mut best, mut best_d) = (None, usize::MAX);
+    for cand in known {
+        let d = edit_distance(key, cand);
+        if d < best_d {
+            best = Some(cand);
+            best_d = d;
+        }
+    }
+    let tolerance = 2usize.max(key.chars().count() / 3);
+    best.filter(|_| best_d > 0 && best_d <= tolerance)
+}
+
+/// ` — did you mean "…"?` fragment for unknown-key errors (empty when no
+/// candidate is close).
+fn suggest<'a>(key: &str, known: impl IntoIterator<Item = &'a str>) -> String {
+    match nearest_key(key, known) {
+        Some(k) => format!(" — did you mean {k:?}?"),
+        None => String::new(),
+    }
+}
+
 impl RunSpec {
     /// Is `key` addressable through [`set`](RunSpec::set)? (Used to
     /// disambiguate commas in `--set` lists: a `k=v` segment whose key is
     /// unknown is a continuation of the previous value — optimizer specs
     /// contain commas.)
     pub fn known_key(key: &str) -> bool {
-        TOP_KEYS.contains(&key) || key.starts_with("optim.") || key.starts_with("mach.")
+        TOP_KEYS.contains(&key)
+            || key.starts_with("optim.")
+            || key.starts_with("mach.")
+            || key.starts_with("dist.")
     }
 
     /// Set one key (the same paths the config-file parser uses, so CLI
@@ -276,8 +355,22 @@ impl RunSpec {
                 "samples" => m.samples = parse_num(key, value)?,
                 "recall-queries" | "recall_queries" => m.recall_queries = parse_num(key, value)?,
                 other => bail!(
-                    "unknown [mach] key {other:?} (valid: r, b-meta, hd, din, classes, \
-                     batch, samples, recall-queries)"
+                    "unknown [mach] key {other:?}{} (valid: r, b-meta, hd, din, classes, \
+                     batch, samples, recall-queries)",
+                    suggest(other, MACH_KEYS.iter().copied())
+                ),
+            }
+            return Ok(());
+        }
+        if let Some(dk) = key.strip_prefix("dist.") {
+            let d = self.dist.get_or_insert_with(DistParams::default);
+            match dk {
+                "rank" => d.rank = parse_num(key, value)?,
+                "workers" => d.workers = parse_num(key, value)?,
+                "socket" => d.socket = value.to_string(),
+                other => bail!(
+                    "unknown [dist] key {other:?}{} (valid: rank, workers, socket)",
+                    suggest(other, DIST_KEYS.iter().copied())
                 ),
             }
             return Ok(());
@@ -302,7 +395,16 @@ impl RunSpec {
             "data.test" => self.test_frac = parse_num(key, value)?,
             "eval.windows" => self.eval_windows = parse_num(key, value)?,
             other => bail!(
-                "unknown run-spec key {other:?} (valid: {}, optim.<pattern>, mach.<key>)",
+                "unknown run-spec key {other:?}{} (valid: {}, optim.<pattern>, mach.<key>, \
+                 dist.<key>)",
+                suggest(
+                    other,
+                    TOP_KEYS.iter().copied().chain([
+                        "dist.rank",
+                        "dist.workers",
+                        "dist.socket"
+                    ])
+                ),
                 TOP_KEYS.join(", ")
             ),
         }
@@ -363,6 +465,7 @@ impl RunSpec {
             Top,
             Optim,
             Mach,
+            Dist,
         }
         let mut spec = RunSpec::default();
         let mut section = Section::Top;
@@ -378,8 +481,15 @@ impl RunSpec {
                         spec.mach.get_or_insert_with(MachParams::default);
                         Section::Mach
                     }
+                    "[dist]" => {
+                        spec.dist.get_or_insert_with(DistParams::default);
+                        Section::Dist
+                    }
                     other => {
-                        bail!("line {}: unknown section {other:?} (have [optim], [mach])", i + 1)
+                        bail!(
+                            "line {}: unknown section {other:?} (have [optim], [mach], [dist])",
+                            i + 1
+                        )
                     }
                 };
                 continue;
@@ -392,6 +502,7 @@ impl RunSpec {
                 Section::Top => key.to_string(),
                 Section::Optim => format!("optim.{key}"),
                 Section::Mach => format!("mach.{key}"),
+                Section::Dist => format!("dist.{key}"),
             };
             spec.set(&full, value).with_context(|| format!("line {}", i + 1))?;
         }
@@ -422,19 +533,45 @@ impl RunSpec {
                 self.test_frac
             );
         }
+        if let Some(d) = &self.dist {
+            if d.workers == 0 {
+                bail!("dist.workers = 0 trains in no process at all — use workers ≥ 1");
+            }
+            if d.rank >= d.workers {
+                bail!("dist.rank = {} is outside a {}-worker run", d.rank, d.workers);
+            }
+            if d.workers > 1 {
+                if self.engine != "rust" {
+                    bail!(
+                        "cross-process runs need engine = rust (the xla engine owns \
+                         device state that cannot be replicated per rank yet)"
+                    );
+                }
+                if self.mach.is_some() {
+                    bail!(
+                        "cross-process runs do not cover the [mach] workload yet — \
+                         drop the [dist] section or run the LM task"
+                    );
+                }
+            }
+        }
         Ok(())
     }
 
     /// The canonical form recorded in checkpoints and compared at
     /// resume: I/O-path keys (out, metrics, checkpoint, resume) are
     /// stripped, since moving files around does not change what was
-    /// trained.
+    /// trained — and so is the `[dist]` section, because a distributed
+    /// run is bit-identical to the single-process run of the same spec
+    /// (DESIGN.md §9), so the process layout does not change what was
+    /// trained either.
     pub fn trained_form(&self) -> String {
         let mut s = self.clone();
         s.out = RunSpec::default().out;
         s.metrics = None;
         s.checkpoint = None;
         s.resume = None;
+        s.dist = None;
         s.to_string()
     }
 }
@@ -528,6 +665,19 @@ impl fmt::Display for RunSpec {
                 writeln!(f, "recall-queries = {}", m.recall_queries)?;
             }
         }
+        if let Some(dp) = &self.dist {
+            writeln!(f, "\n[dist]")?;
+            let dd = DistParams::default();
+            if dp.rank != dd.rank {
+                writeln!(f, "rank = {}", dp.rank)?;
+            }
+            if dp.workers != dd.workers {
+                writeln!(f, "workers = {}", dp.workers)?;
+            }
+            if dp.socket != dd.socket {
+                writeln!(f, "socket = {}", dp.socket)?;
+            }
+        }
         Ok(())
     }
 }
@@ -557,15 +707,52 @@ pub struct Session {
     pub train: Vec<u32>,
     pub valid: Vec<u32>,
     pub test: Vec<u32>,
+    /// Cross-process context (`[dist]` runs with `workers > 1` only).
+    pub dist: Option<DistCtx>,
 }
 
 impl Session {
+    /// Open the transport for a `[dist]` spec with `workers > 1`: rank 0
+    /// listens on the socket, workers connect. Blocks until the whole
+    /// world is wired (bounded by the transport's I/O timeout). Returns
+    /// `None` for single-process specs.
+    pub fn open_dist(spec: &RunSpec) -> Result<Option<DistCtx>> {
+        let Some(d) = &spec.dist else { return Ok(None) };
+        if d.workers <= 1 {
+            return Ok(None);
+        }
+        if d.socket.is_empty() {
+            bail!("[dist] with workers = {} needs a socket path", d.workers);
+        }
+        #[cfg(unix)]
+        {
+            let transport = if d.rank == 0 {
+                crate::comm::UdsTransport::listen(&d.socket, d.workers)?
+            } else {
+                crate::comm::UdsTransport::connect(&d.socket, d.rank, d.workers)?
+            };
+            Ok(Some(DistCtx::new(d.rank, d.workers, transport)))
+        }
+        #[cfg(not(unix))]
+        {
+            bail!("cross-process runs use unix-domain sockets, unavailable on this platform")
+        }
+    }
+
     /// Build the trainer described by `spec` — the single construction
     /// path for every run in the crate: resolves the policy (with the
     /// run-wide `shards` default), opens the PJRT runtime only when the
     /// engine or a resolved optimizer needs it, and builds the engine +
-    /// [`LmTrainer`].
+    /// [`LmTrainer`]. Single-process only; distributed callers thread
+    /// their [`DistCtx`] through [`Session::build_trainer_dist`].
     pub fn build_trainer(spec: &RunSpec) -> Result<LmTrainer> {
+        Session::build_trainer_dist(spec, None)
+    }
+
+    /// [`Session::build_trainer`] with this process's distributed
+    /// context: every sketched layer's state lands on a width-partitioned
+    /// store reducing over the context's transport (DESIGN.md §9).
+    pub fn build_trainer_dist(spec: &RunSpec, dist: Option<&DistCtx>) -> Result<LmTrainer> {
         spec.validate()?;
         if spec.mach.is_some() {
             bail!(
@@ -594,13 +781,22 @@ impl Session {
             "xla" => Box::new(XlaLmEngine::new(preset, rt.as_ref().unwrap(), &mut rng)?),
             other => bail!("unknown engine {other:?} (rust|xla)"),
         };
-        LmTrainer::new(opts, engine, rt.as_ref())
+        LmTrainer::new_dist(
+            opts,
+            engine,
+            rt.as_ref(),
+            dist.map(|c| c as &dyn crate::sketch::StoreBuilder),
+        )
     }
 
-    /// Build the full session: trainer plus the synthetic corpus splits,
-    /// with the `resume` checkpoint (if any) restored.
+    /// Build the full session: transport (for `[dist]` specs), trainer,
+    /// the synthetic corpus splits, and the `resume` checkpoint (if any)
+    /// restored. Every rank of a distributed run builds the identical
+    /// session — model, data and dense state are replicated; only sketch
+    /// state is partitioned.
     pub fn build(spec: &RunSpec) -> Result<Session> {
-        let trainer = Session::build_trainer(spec)?;
+        let dist = Session::open_dist(spec)?;
+        let trainer = Session::build_trainer_dist(spec, dist.as_ref())?;
         let p = trainer.opts.preset;
         let windows = spec.windows.unwrap_or(spec.steps + 8);
         let corpus = corpus_for(&p, windows, spec.data_seed.unwrap_or(spec.seed));
@@ -611,9 +807,21 @@ impl Session {
             train: train.to_vec(),
             valid: valid.to_vec(),
             test: test.to_vec(),
+            dist,
         };
         session.maybe_resume()?;
         Ok(session)
+    }
+
+    /// Is this process the reporting rank? True for single-process runs
+    /// and for rank 0 of a distributed run; workers train silently and
+    /// skip the metrics/checkpoint sinks (their state is bit-identical
+    /// to rank 0's, so writing it twice would be wasted I/O).
+    pub fn is_lead(&self) -> bool {
+        match &self.spec.dist {
+            Some(d) => d.rank == 0,
+            None => true,
+        }
     }
 
     fn maybe_resume(&mut self) -> Result<()> {
@@ -686,19 +894,26 @@ impl Session {
     /// perplexity, the `metrics` CSV sink, and the `checkpoint` save
     /// (recording the canonical spec for resume-time comparison).
     pub fn run(&mut self) -> Result<RunSummary> {
-        println!(
-            "training preset={} engine={} policy=[{}]",
-            self.spec.preset,
-            self.trainer.engine.name(),
-            self.trainer.opts.policy
-        );
-        println!("{}", self.trainer.memory_ledger().render());
-        let mut metrics = match &self.spec.metrics {
-            Some(path) => Some(CsvWriter::create(
+        let lead = self.is_lead();
+        if lead {
+            println!(
+                "training preset={} engine={} policy=[{}]{}",
+                self.spec.preset,
+                self.trainer.engine.name(),
+                self.trainer.opts.policy,
+                match &self.spec.dist {
+                    Some(d) if d.workers > 1 => format!(" workers={}", d.workers),
+                    _ => String::new(),
+                }
+            );
+            println!("{}", self.trainer.memory_ledger().render());
+        }
+        let mut metrics = match (&self.spec.metrics, lead) {
+            (Some(path), true) => Some(CsvWriter::create(
                 path,
                 &["epoch", "steps", "mean_loss", "train_ppl", "valid_ppl", "secs"],
             )?),
-            None => None,
+            _ => None,
         };
         let mut summary =
             RunSummary { epochs: Vec::new(), valid_ppl: Vec::new(), test_ppl: f64::NAN };
@@ -706,16 +921,18 @@ impl Session {
             let r = self.epoch()?;
             let vppl = self.valid_ppl()?;
             self.trainer.report_metric(vppl.ln());
-            println!(
-                "epoch {e}: {} steps, mean loss {:.4}, train ppl {:.2}, valid ppl {:.2}, \
-                 {:.1}s ({:.1} steps/s)",
-                r.steps,
-                r.mean_loss,
-                r.train_ppl,
-                vppl,
-                r.secs,
-                r.steps as f64 / r.secs
-            );
+            if lead {
+                println!(
+                    "epoch {e}: {} steps, mean loss {:.4}, train ppl {:.2}, valid ppl {:.2}, \
+                     {:.1}s ({:.1} steps/s)",
+                    r.steps,
+                    r.mean_loss,
+                    r.train_ppl,
+                    vppl,
+                    r.secs,
+                    r.steps as f64 / r.secs
+                );
+            }
             if let Some(csv) = metrics.as_mut() {
                 csv.row(&[
                     &e,
@@ -730,13 +947,22 @@ impl Session {
             summary.valid_ppl.push(vppl);
         }
         summary.test_ppl = self.test_ppl()?;
-        println!("final test ppl: {:.2}", summary.test_ppl);
+        if lead {
+            println!("final test ppl: {:.2}", summary.test_ppl);
+        }
         if let Some(csv) = metrics.as_mut() {
             csv.flush()?;
         }
+        // distributed runs: all ranks drain their collectives before the
+        // coordinator writes artifacts and tears the sockets down
+        if let Some(ctx) = &self.dist {
+            ctx.barrier()?;
+        }
         if let Some(path) = self.spec.checkpoint.clone() {
-            self.save_checkpoint(&path)?;
-            println!("checkpoint written to {path}");
+            if lead {
+                self.save_checkpoint(&path)?;
+                println!("checkpoint written to {path}");
+            }
         }
         Ok(summary)
     }
@@ -853,6 +1079,78 @@ sm = cs-adam
         let bare = RunSpec::parse("preset = tiny\n\n[mach]\n").unwrap();
         assert_eq!(bare.mach, Some(MachParams::default()));
         assert_eq!(RunSpec::parse(&bare.to_string()).unwrap(), bare);
+    }
+
+    #[test]
+    fn dist_section_round_trips() {
+        let text = "preset = tiny\n\n[optim]\nemb = \"cs-adam\"\nsm = \"cs-adam\"\n\n\
+                    [dist]\nrank = 1\nworkers = 2\nsocket = /tmp/csopt.sock\n";
+        let spec = RunSpec::parse(text).unwrap();
+        let d = spec.dist.as_ref().unwrap();
+        assert_eq!((d.rank, d.workers, d.socket.as_str()), (1, 2, "/tmp/csopt.sock"));
+        assert_eq!(spec.to_string(), text);
+        assert_eq!(RunSpec::parse(&spec.to_string()).unwrap(), spec);
+        // a bare [dist] section is the single-process default
+        let bare = RunSpec::parse("preset = tiny\n\n[dist]\n").unwrap();
+        assert_eq!(bare.dist, Some(DistParams::default()));
+        assert_eq!(RunSpec::parse(&bare.to_string()).unwrap(), bare);
+    }
+
+    #[test]
+    fn dist_validation_is_actionable() {
+        for (text, needle) in [
+            ("preset = tiny\n\n[dist]\nworkers = 0\n", "workers ≥ 1"),
+            ("preset = tiny\n\n[dist]\nrank = 2\nworkers = 2\n", "outside"),
+            (
+                "preset = tiny\nengine = xla\n\n[dist]\nworkers = 2\nsocket = /tmp/x\n",
+                "engine = rust",
+            ),
+            (
+                "preset = tiny\n\n[mach]\n\n[dist]\nworkers = 2\nsocket = /tmp/x\n",
+                "[mach]",
+            ),
+        ] {
+            let e = format!("{:#}", RunSpec::parse(text).unwrap_err());
+            assert!(e.contains(needle), "{text:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn unknown_keys_suggest_the_nearest_known_key() {
+        let mut spec = RunSpec::default();
+        // top-level typo
+        let e = format!("{:#}", spec.set("epocs", "3").unwrap_err());
+        assert!(e.contains("unknown run-spec key"), "{e}");
+        assert!(e.contains("did you mean \"epochs\"?"), "{e}");
+        // section typos route to the section's key list
+        let e = format!("{:#}", spec.set("mach.clases", "10").unwrap_err());
+        assert!(e.contains("did you mean \"classes\"?"), "{e}");
+        let e = format!("{:#}", spec.set("dist.worker", "2").unwrap_err());
+        assert!(e.contains("did you mean \"workers\"?"), "{e}");
+        // nothing plausible → no suggestion, but still actionable
+        let e = format!("{:#}", spec.set("zzqqxx", "1").unwrap_err());
+        assert!(e.contains("unknown run-spec key"), "{e}");
+        assert!(!e.contains("did you mean"), "{e}");
+    }
+
+    #[test]
+    fn trained_form_strips_dist_placement() {
+        let mut spec = RunSpec::parse("preset = tiny\n\n[optim]\nemb = \"adam\"\nsm = \"adam\"\n")
+            .unwrap();
+        let base = spec.trained_form();
+        spec.dist =
+            Some(DistParams { rank: 1, workers: 2, socket: "/tmp/csopt.sock".to_string() });
+        assert_eq!(spec.trained_form(), base);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("epochs", "epochs"), 0);
+        assert_eq!(edit_distance("epocs", "epochs"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(nearest_key("stpes", TOP_KEYS.iter().copied()), Some("steps"));
+        assert_eq!(nearest_key("zzqqxx", TOP_KEYS.iter().copied()), None);
     }
 
     #[test]
@@ -993,6 +1291,14 @@ sm = cs-adam
                     r: 1 + rng.below(8),
                     batch: 1 + rng.below(512),
                     ..MachParams::default()
+                });
+            }
+            if s.engine == "rust" && s.mach.is_none() && rng.f32() < 0.3 {
+                let workers = 1 + rng.below(4);
+                s.dist = Some(DistParams {
+                    rank: rng.below(workers),
+                    workers,
+                    socket: if workers > 1 { "/tmp/csopt-prop.sock".to_string() } else { String::new() },
                 });
             }
             let text = s.to_string();

@@ -94,6 +94,21 @@ impl LmTrainer {
         engine: Box<dyn LmEngine>,
         rt: Option<&crate::runtime::Runtime>,
     ) -> Result<LmTrainer> {
+        LmTrainer::new_dist(opts, engine, rt, None)
+    }
+
+    /// [`LmTrainer::new`] with an optional sketch [`StoreBuilder`]: when
+    /// present (a `csopt launch` worker's `DistCtx`), every sketched
+    /// layer's state lands on the store it builds — one width partition
+    /// per rank — while dense layers and the trunk stay replicated
+    /// (DESIGN.md §9). All sketch construction routes through the store
+    /// either way, so the single-process path is unchanged.
+    pub fn new_dist(
+        opts: TrainerOptions,
+        engine: Box<dyn LmEngine>,
+        rt: Option<&crate::runtime::Runtime>,
+        store: Option<&dyn crate::sketch::StoreBuilder>,
+    ) -> Result<LmTrainer> {
         let p = opts.preset;
         let mut rng = Rng::new(opts.seed);
         let emb_spec = *opts.policy.require("emb").context("resolving the embedding layer")?;
@@ -102,14 +117,17 @@ impl LmTrainer {
         // the two layers hash with decorrelated default seeds
         let emb_shape = RowShape::new(p.vocab, p.de).with_sketch(p.v, p.w_emb).with_slots(p.k);
         let sm_shape = RowShape::new(p.vocab, p.de).with_sketch(p.v, p.w_sm).with_slots(p.nc);
-        let emb_opt = emb_spec.or_seed(emb_spec.hyper.hash_seed).build_row(&emb_shape, rt)?;
-        let sm_opt = sm_spec.or_seed(sm_spec.hyper.hash_seed ^ 0xBEEF).build_row(&sm_shape, rt)?;
+        let emb_opt =
+            emb_spec.or_seed(emb_spec.hyper.hash_seed).build_row_dist(&emb_shape, rt, store)?;
+        let sm_opt = sm_spec
+            .or_seed(sm_spec.hyper.hash_seed ^ 0xBEEF)
+            .build_row_dist(&sm_shape, rt, store)?;
         let emb = SparseLayer::new(p.vocab, p.de, 0.1, emb_opt, &mut rng);
         let sm = SparseLayer::new(p.vocab, p.de, 0.1, sm_opt, &mut rng);
         let bias_opt = match opts.policy.resolve("bias").copied() {
             Some(s) => s
                 .or_seed(s.hyper.hash_seed ^ 0xB1A5)
-                .build_row(&RowShape::new(p.vocab, 1), rt)
+                .build_row_dist(&RowShape::new(p.vocab, 1), rt, store)
                 .context("building the bias layer optimizer")?,
             None => emb_spec.as_dense().build_row(&RowShape::new(p.vocab, 1), None)?,
         };

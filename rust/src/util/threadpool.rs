@@ -1,9 +1,22 @@
 //! Fixed-size thread pool with a bounded work queue (backpressure), plus a
 //! `scope`-style parallel-for. Replaces rayon/tokio for the data-pipeline
 //! prefetcher and the parallel experiment sweeps.
+//!
+//! [`parallel_map`] runs on a **persistent** worker pool that still
+//! accepts borrowed (non-`'static`) closures: callers publish a
+//! type-erased task descriptor, idle pool workers join in to claim
+//! indices, the caller claims indices itself, and the caller blocks until
+//! every index has finished executing — which is exactly the guarantee
+//! that makes handing a borrowed closure to long-lived threads sound.
+//! Dispatch is a queue push plus a condvar wake (single-digit µs), not
+//! the tens-of-µs spawn+join per call the old scoped-thread version paid,
+//! so sharded sketch kernels no longer lose money on small batches
+//! (DESIGN.md §Perf, `bench_sketch`'s `cs_update_small` rows).
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -145,29 +158,180 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Run `f(i)` for every `i ∈ [0, n)` across `workers` threads; results are
-/// returned in index order. Panics in `f` propagate.
+/// One `parallel_map` call, type-erased for the persistent pool.
+///
+/// `f` is a raw pointer to the caller's **borrowed** closure; soundness
+/// rests on two facts checked below: (1) an executor dereferences `f`
+/// only after claiming an index `i < n`, and (2) the caller returns only
+/// once `finished == n`, i.e. after the last such dereference completed.
+/// Once all indices are claimed, `next` stays ≥ `n` forever, so no new
+/// dereference can begin after the caller unblocks.
+struct ParallelTask {
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    /// Pool workers allowed to join (the caller participates on top).
+    helpers_max: usize,
+    next: AtomicUsize,
+    helpers: AtomicUsize,
+    finished: AtomicUsize,
+    /// First caught panic payload, re-raised by the caller so the
+    /// original message survives (as it did under scoped threads).
+    panicked: Mutex<Option<Box<dyn Any + Send>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// The raw closure pointer is only dereferenced under the completion
+// protocol above; everything else in the struct is Sync.
+unsafe impl Send for ParallelTask {}
+unsafe impl Sync for ParallelTask {}
+
+impl ParallelTask {
+    fn has_work(&self) -> bool {
+        self.next.load(Ordering::Relaxed) < self.n
+    }
+
+    fn claimable(&self) -> bool {
+        self.has_work() && self.helpers.load(Ordering::Relaxed) < self.helpers_max
+    }
+
+    /// Claim and execute indices until none remain. Panics in `f` are
+    /// caught and recorded so pool workers survive and the caller can
+    /// re-raise; every claimed index counts as finished either way.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return;
+            }
+            // deref only after claiming a live index: a claimed i < n
+            // means the caller is still blocked in wait(), so the
+            // borrowed closure is alive
+            let f = unsafe { &*self.f };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+                let mut first = self.panicked.lock().unwrap();
+                if first.is_none() {
+                    *first = Some(payload);
+                }
+            }
+            if self.finished.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+                *self.done.lock().unwrap() = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    /// Block until every index has finished executing.
+    fn wait(&self) {
+        let mut g = self.done.lock().unwrap();
+        while !*g {
+            g = self.done_cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// The shared state pool workers watch: every submitted, still-claimable
+/// task. Tasks are pruned once their indices are all claimed.
+struct MapPool {
+    tasks: Mutex<Vec<Arc<ParallelTask>>>,
+    cv: Condvar,
+}
+
+impl MapPool {
+    fn submit(&self, task: Arc<ParallelTask>) {
+        self.tasks.lock().unwrap().push(task);
+        self.cv.notify_all();
+    }
+
+    fn retire(&self, task: &Arc<ParallelTask>) {
+        self.tasks.lock().unwrap().retain(|t| !Arc::ptr_eq(t, task));
+    }
+
+    fn worker_loop(&self) {
+        let mut g = self.tasks.lock().unwrap();
+        loop {
+            if let Some(task) = g.iter().find(|t| t.claimable()).cloned() {
+                drop(g);
+                // re-check under the claim counter: lost races just return
+                if task.helpers.fetch_add(1, Ordering::Relaxed) < task.helpers_max {
+                    task.drain();
+                }
+                g = self.tasks.lock().unwrap();
+                g.retain(|t| t.has_work());
+            } else {
+                g = self.cv.wait(g).unwrap();
+            }
+        }
+    }
+}
+
+/// The process-wide pool behind [`parallel_map`]: `default_workers()`
+/// daemon threads, spawned on first use, alive for the process lifetime.
+fn map_pool() -> &'static MapPool {
+    static POOL: OnceLock<&'static MapPool> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        let pool: &'static MapPool =
+            Box::leak(Box::new(MapPool { tasks: Mutex::new(Vec::new()), cv: Condvar::new() }));
+        for i in 0..ThreadPool::default_workers() {
+            thread::Builder::new()
+                .name(format!("csopt-map-{i}"))
+                .spawn(move || pool.worker_loop())
+                .expect("spawning pool worker");
+        }
+        pool
+    })
+}
+
+/// Run `f(i)` for every `i ∈ [0, n)` across up to `workers` threads (the
+/// caller plus `workers − 1` persistent pool helpers); results are
+/// returned in index order. Panics in `f` propagate. Safe to nest: the
+/// caller always executes work itself, so an inner call completes even
+/// when every pool worker is busy.
 pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, workers: usize, f: F) -> Vec<T> {
     if n == 0 {
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
-    let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
-    thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
+    {
+        let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+        let work = |i: usize| {
+            let v = f(i);
+            **slots[i].lock().unwrap() = Some(v);
+        };
+        if workers == 1 {
+            for i in 0..n {
+                work(i);
+            }
+        } else {
+            let work_ref: &(dyn Fn(usize) + Sync) = &work;
+            // erase the borrow lifetime (an `as` cast cannot extend a trait
+            // object's lifetime bound); `task.wait()` below restores the
+            // guarantee the borrow checker can no longer see
+            #[allow(clippy::transmutes_expressible_as_ptr_casts)]
+            let f_ptr: *const (dyn Fn(usize) + Sync) =
+                unsafe { std::mem::transmute(work_ref) };
+            let task = Arc::new(ParallelTask {
+                f: f_ptr,
+                n,
+                helpers_max: workers - 1,
+                next: AtomicUsize::new(0),
+                helpers: AtomicUsize::new(0),
+                finished: AtomicUsize::new(0),
+                panicked: Mutex::new(None),
+                done: Mutex::new(false),
+                done_cv: Condvar::new(),
             });
+            let pool = map_pool();
+            pool.submit(Arc::clone(&task));
+            task.drain();
+            task.wait();
+            pool.retire(&task);
+            if let Some(payload) = task.panicked.lock().unwrap().take() {
+                resume_unwind(payload);
+            }
         }
-    });
-    drop(slots);
+    }
     out.into_iter().map(|o| o.expect("worker panicked")).collect()
 }
 
@@ -237,6 +401,50 @@ mod tests {
     fn parallel_map_ordered() {
         let out = parallel_map(100, 8, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_borrows_caller_data() {
+        // the whole point of the persistent-pool design: non-'static
+        // closures still work, repeatedly, without a spawn per call
+        let data: Vec<u64> = (0..512).collect();
+        for _ in 0..50 {
+            let out = parallel_map(data.len(), 4, |i| data[i] * 2);
+            assert_eq!(out[511], 1022);
+        }
+    }
+
+    #[test]
+    fn parallel_map_nests_without_deadlock() {
+        // inner calls run even when every pool helper is busy with the
+        // outer level — the caller always executes its own work
+        let out = parallel_map(8, 8, |i| parallel_map(8, 8, move |j| i * 8 + j));
+        for (i, inner) in out.iter().enumerate() {
+            assert_eq!(inner, &(0..8).map(|j| i * 8 + j).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn parallel_map_propagates_panics_and_pool_survives() {
+        let boom = std::panic::catch_unwind(|| {
+            parallel_map(16, 4, |i| {
+                if i == 7 {
+                    panic!("intentional test panic");
+                }
+                i
+            })
+        });
+        assert!(boom.is_err(), "panic in f must propagate to the caller");
+        // the pool workers caught the panic and keep serving
+        let out = parallel_map(32, 4, |i| i + 1);
+        assert_eq!(out[31], 32);
+    }
+
+    #[test]
+    fn parallel_map_single_worker_is_sequential() {
+        let order = Mutex::new(Vec::new());
+        parallel_map(10, 1, |i| order.lock().unwrap().push(i));
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! Cross-process sharded training equivalence suite (DESIGN.md §9) —
+//! the PR 2 sharding-equivalence guarantees extended across process
+//! boundaries.
+//!
+//! * In-process legs drive real multi-rank worlds over the in-memory
+//!   transport (threads), comparing full training trajectories bitwise
+//!   against the single-process path.
+//! * The subprocess leg runs the actual `csopt launch` CLI (rank 0 +
+//!   forked workers over unix sockets) and proves the acceptance
+//!   criterion: a 2-worker launch is bit-identical (final params + valid
+//!   ppl) to the same config run single-process with `shard=2`.
+//! * Checkpoint legs prove shard- and worker-count independence of
+//!   save/resume: a checkpoint written under one layout resumes under
+//!   any other with bit-identical subsequent steps.
+
+use std::thread;
+
+use csopt::comm::{mem_world, DistCtx};
+use csopt::data::corpus::SyntheticCorpus;
+use csopt::train::checkpoint::Checkpoint;
+use csopt::train::session::{RunSpec, Session};
+
+fn lm_spec(extra: &str) -> RunSpec {
+    let text = format!(
+        "preset = tiny\nepochs = 1\nsteps = 8\neval.windows = 2\n{extra}\n\
+         [optim]\nemb = \"cs-adam@v=2,w=48,clean=0.5/4\"\nsm = \"cs-adagrad@w=32\"\n"
+    );
+    RunSpec::parse(&text).unwrap()
+}
+
+/// Full LmTrainer trajectories over 1/2/3 mem-transport ranks must be
+/// bit-identical to the single-process trainer — every rank, not just
+/// rank 0, because replicated compute is what keeps the partition sound.
+#[test]
+fn distributed_trainer_matches_single_process_bitwise() {
+    let spec = lm_spec("");
+    let corpus = SyntheticCorpus::generate(512, 16_000, 1.05, 0.6, 9);
+    let (train, _, _) = corpus.split(0.1, 0.05);
+
+    let mut seq = Session::build_trainer(&spec).unwrap();
+    let r_seq = seq.train_epoch(train, 8).unwrap();
+    let seq_sketch_bytes = seq.emb.opt.memory_bytes() + seq.sm.opt.memory_bytes();
+
+    for world in [1usize, 2, 3] {
+        let outs: Vec<(f64, Vec<f32>, Vec<f32>, usize)> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(world)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    let spec = spec.clone();
+                    s.spawn(move || {
+                        let ctx = DistCtx::new(rank, world, ep);
+                        let mut tr =
+                            Session::build_trainer_dist(&spec, Some(&ctx)).unwrap();
+                        let r = tr.train_epoch(train, 8).unwrap();
+                        let sketch_bytes =
+                            tr.emb.opt.memory_bytes() + tr.sm.opt.memory_bytes();
+                        (r.mean_loss, tr.emb.params.clone(), tr.sm.params.clone(), sketch_bytes)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut total_sketch_bytes = 0usize;
+        for (rank, (loss, emb, sm, sketch_bytes)) in outs.iter().enumerate() {
+            assert_eq!(
+                loss.to_bits(),
+                r_seq.mean_loss.to_bits(),
+                "mean loss diverged (world={world} rank={rank})"
+            );
+            assert_eq!(emb, &seq.emb.params, "emb params diverged (world={world} rank={rank})");
+            assert_eq!(sm, &seq.sm.params, "sm params diverged (world={world} rank={rank})");
+            total_sketch_bytes += sketch_bytes;
+        }
+        // the width partition tiles the sketch exactly once: per-rank
+        // shares sum to the single-process footprint (the paper's memory
+        // claim, now divided by N processes)
+        assert_eq!(total_sketch_bytes, seq_sketch_bytes, "world={world}");
+    }
+}
+
+/// A checkpoint written under `shard=4` resumed with `shards = 1` (and
+/// with `shards = 4`) must produce bit-identical subsequent steps —
+/// shard count is execution layout, not trained state.
+#[test]
+fn checkpoint_resumes_across_shard_counts() {
+    let dir = std::env::temp_dir().join(format!("csopt_dist_shard_ck_{}", std::process::id()));
+    let ck = dir.join("sharded.ck").display().to_string();
+
+    let mut spec = lm_spec("shards = 4\n");
+    spec.checkpoint = Some(ck.clone());
+    Session::build(&spec).unwrap().run().unwrap();
+
+    let mut resumed: Vec<(f64, Vec<f32>)> = Vec::new();
+    for shards in [1usize, 4] {
+        let mut rspec = lm_spec(&format!("shards = {shards}\n"));
+        rspec.resume = Some(ck.clone());
+        let mut session = Session::build(&rspec).unwrap();
+        let r = session.epoch().unwrap();
+        resumed.push((r.mean_loss, session.trainer.emb.params.clone()));
+    }
+    assert_eq!(resumed[0].0.to_bits(), resumed[1].0.to_bits(), "post-resume loss diverged");
+    assert_eq!(resumed[0].1, resumed[1].1, "post-resume emb params diverged");
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Same independence across *worker* counts, in-process: a checkpoint
+/// from a 2-rank mem-transport run resumed single-process continues
+/// bit-identically to the single-process checkpoint's continuation.
+#[test]
+fn checkpoint_resumes_across_worker_counts() {
+    let dir = std::env::temp_dir().join(format!("csopt_dist_worker_ck_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck_single = dir.join("single.ck").display().to_string();
+    let ck_dist = dir.join("dist.ck").display().to_string();
+    let spec = lm_spec("");
+    let corpus = SyntheticCorpus::generate(512, 16_000, 1.05, 0.6, 9);
+    let (train, _, _) = corpus.split(0.1, 0.05);
+
+    // single-process reference checkpoint (params + step only — aux
+    // optimizer state intentionally restarts on resume, which is what
+    // makes layout-independent resumes exact)
+    {
+        let mut tr = Session::build_trainer(&spec).unwrap();
+        tr.train_epoch(train, 8).unwrap();
+        let mut s = Session::build(&spec).unwrap();
+        s.trainer = tr;
+        s.save_checkpoint(&ck_single).unwrap();
+    }
+    // 2-rank world writes rank 0's view of the same run
+    let world = 2usize;
+    thread::scope(|scope| {
+        let handles: Vec<_> = mem_world(world)
+            .into_iter()
+            .enumerate()
+            .map(|(rank, ep)| {
+                let spec = spec.clone();
+                let ck_dist = ck_dist.clone();
+                scope.spawn(move || {
+                    let ctx = DistCtx::new(rank, world, ep);
+                    let mut tr = Session::build_trainer_dist(&spec, Some(&ctx)).unwrap();
+                    tr.train_epoch(train, 8).unwrap();
+                    if rank == 0 {
+                        let mut s = Session::build(&spec).unwrap();
+                        s.trainer = tr;
+                        s.save_checkpoint(&ck_dist).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let a = Checkpoint::load(&ck_single).unwrap();
+    let b = Checkpoint::load(&ck_dist).unwrap();
+    assert_eq!(a.blobs, b.blobs, "2-rank checkpoint differs from single-process");
+    assert_eq!(a.scalar("step").unwrap(), b.scalar("step").unwrap());
+
+    // resume the 2-rank checkpoint single-process and the single-process
+    // checkpoint single-process: continuations must match bitwise
+    let mut conts: Vec<(f64, Vec<f32>)> = Vec::new();
+    for ck in [&ck_dist, &ck_single] {
+        let mut rspec = spec.clone();
+        rspec.resume = Some(ck.clone());
+        let mut session = Session::build(&rspec).unwrap();
+        let r = session.epoch().unwrap();
+        conts.push((r.mean_loss, session.trainer.emb.params.clone()));
+    }
+    assert_eq!(conts[0].0.to_bits(), conts[1].0.to_bits());
+    assert_eq!(conts[0].1, conts[1].1);
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Pull the `valid ppl <x>` / `final test ppl: <x>` readings out of a
+/// run's stdout (timing fields vary run to run, the ppl numbers must
+/// not).
+fn ppl_readings(stdout: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in stdout.lines() {
+        if let Some(ix) = line.find("valid ppl ") {
+            let rest = &line[ix + "valid ppl ".len()..];
+            out.push(rest.split(',').next().unwrap().trim().to_string());
+        }
+        if let Some(rest) = line.strip_prefix("final test ppl: ") {
+            out.push(rest.trim().to_string());
+        }
+    }
+    out
+}
+
+fn run_csopt(args: &[&str]) -> (String, String) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_csopt"))
+        .args(args)
+        .output()
+        .expect("running csopt");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(out.status.success(), "csopt {args:?} failed:\n{stdout}\n{stderr}");
+    (stdout, stderr)
+}
+
+/// The acceptance criterion, end to end through the real CLI: a 2-worker
+/// `csopt launch` run (rank 0 + one forked worker over a unix socket) is
+/// bit-identical — final params and valid/test perplexities — to the
+/// same config run single-process with `shard=2`; and its checkpoint
+/// resumes single-process with bit-identical subsequent steps.
+#[cfg(unix)]
+#[test]
+fn launch_cli_matches_single_process_shard2() {
+    let dir = std::env::temp_dir().join(format!("csopt_dist_launch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("run.conf");
+    std::fs::write(
+        &cfg,
+        "preset = tiny\nepochs = 1\nsteps = 6\neval.windows = 2\n\n\
+         [optim]\nemb = \"cs-adam@v=2,w=48,clean=0.5/4\"\nsm = \"cs-adagrad@w=32\"\n",
+    )
+    .unwrap();
+    let cfg = cfg.display().to_string();
+    let ck_single = dir.join("single.ck").display().to_string();
+    let ck_launch = dir.join("launch.ck").display().to_string();
+    let socket = dir.join("launch.sock").display().to_string();
+
+    let (out_single, _) =
+        run_csopt(&["run", &cfg, "--set", &format!("shards=2,checkpoint={ck_single}")]);
+    let (out_launch, _) = run_csopt(&[
+        "launch",
+        &cfg,
+        "--workers",
+        "2",
+        "--socket",
+        &socket,
+        "--set",
+        &format!("checkpoint={ck_launch}"),
+    ]);
+
+    // identical perplexity trajectory ...
+    let ppl_single = ppl_readings(&out_single);
+    let ppl_launch = ppl_readings(&out_launch);
+    assert!(!ppl_single.is_empty(), "no ppl readings in:\n{out_single}");
+    assert_eq!(ppl_single, ppl_launch, "\n--- run ---\n{out_single}\n--- launch ---\n{out_launch}");
+
+    // ... and bit-identical final parameters
+    let a = Checkpoint::load(&ck_single).unwrap();
+    let b = Checkpoint::load(&ck_launch).unwrap();
+    assert_eq!(a.scalar("step").unwrap(), b.scalar("step").unwrap());
+    assert_eq!(a.blobs.keys().collect::<Vec<_>>(), b.blobs.keys().collect::<Vec<_>>());
+    for (name, blob) in &a.blobs {
+        assert_eq!(blob, &b.blobs[name], "checkpoint blob {name} differs");
+    }
+
+    // satellite: the 2-worker checkpoint resumed single-process continues
+    // exactly like the single-process checkpoint does
+    let ck_cont_a = dir.join("cont_a.ck").display().to_string();
+    let ck_cont_b = dir.join("cont_b.ck").display().to_string();
+    let (cont_a, _) = run_csopt(&[
+        "run",
+        &cfg,
+        "--set",
+        &format!("resume={ck_launch},checkpoint={ck_cont_a}"),
+    ]);
+    let (cont_b, _) = run_csopt(&[
+        "run",
+        &cfg,
+        "--set",
+        &format!("resume={ck_single},checkpoint={ck_cont_b},shards=2"),
+    ]);
+    assert_eq!(ppl_readings(&cont_a), ppl_readings(&cont_b));
+    let ca = Checkpoint::load(&ck_cont_a).unwrap();
+    let cb = Checkpoint::load(&ck_cont_b).unwrap();
+    assert_eq!(ca.blobs, cb.blobs, "post-resume checkpoints differ");
+
+    let _ = std::fs::remove_dir_all(dir);
+}
