@@ -21,6 +21,12 @@
 //! * [`DistCtx`] — rank + world + shared transport; the
 //!   [`StoreBuilder`](crate::sketch::StoreBuilder) the trainer passes
 //!   down so every sketch lands on a partitioned store.
+//! * [`exchange_sum`] / [`average_replica_segments`] — the data-parallel
+//!   gradient reduction (DESIGN.md §10): per-replica gradient segments
+//!   all-reduced over the same transport, then averaged in replica
+//!   order, so distinct-batch training composes with (or replaces) the
+//!   sketch partition while staying bit-identical to the single-process
+//!   global-batch run.
 
 pub mod mem;
 pub mod partitioned;
@@ -94,5 +100,129 @@ impl std::fmt::Debug for DistCtx {
 impl StoreBuilder for DistCtx {
     fn build(&self, depth: usize, width: usize, dim: usize) -> Box<dyn SketchStore> {
         Box::new(PartitionedStore::new(depth, width, dim, self.rank, self.world, self.comm()))
+    }
+}
+
+/// Complete a data-parallel gradient exchange (DESIGN.md §10): sum `buf`
+/// element-wise across all ranks. Each rank contributes its own
+/// replicas' segments and exact `0.0` everywhere else, so — exactly as
+/// in the §9 width partition — the rank-ordered sum reconstructs every
+/// segment bit-for-bit (one owner per element; the lone IEEE footnote is
+/// `-0.0 + 0.0 == +0.0`, which compares equal everywhere downstream).
+///
+/// `comm = None` is the single-process global-batch layout: the buffer
+/// already holds every replica's segment, so the exchange is the
+/// identity. Routing both layouts through this helper is what makes
+/// N-worker runs bitwise-equivalent to the 1-process reference.
+pub fn exchange_sum(comm: Option<&Arc<Mutex<dyn Transport>>>, buf: &mut [f32]) -> Result<()> {
+    if let Some(comm) = comm {
+        comm.lock().unwrap().all_reduce_sum(buf)?;
+    }
+    Ok(())
+}
+
+/// Average the `replicas` equal `seg_len` segments of
+/// `buf[.. replicas * seg_len]` element-wise into `out` (resized to
+/// `seg_len`), accumulating **in replica order** — `(seg₀ + seg₁ + …) /
+/// R`, the same order on every rank and in the single-process reference,
+/// so the averaged global gradient is deterministic and bit-identical
+/// across layouts (DESIGN.md §10: averaging, not summing, keeps the
+/// effective step size independent of the replica count).
+pub fn average_replica_segments(buf: &[f32], replicas: usize, seg_len: usize, out: &mut Vec<f32>) {
+    assert!(replicas >= 1, "averaging over zero replicas");
+    assert!(
+        buf.len() >= replicas * seg_len,
+        "exchange buffer holds {} f32s, {replicas} segments of {seg_len} need {}",
+        buf.len(),
+        replicas * seg_len
+    );
+    out.clear();
+    out.extend_from_slice(&buf[..seg_len]);
+    for r in 1..replicas {
+        let seg = &buf[r * seg_len..(r + 1) * seg_len];
+        for (acc, &x) in out.iter_mut().zip(seg) {
+            *acc += x;
+        }
+    }
+    let inv = replicas as f32;
+    for x in out.iter_mut() {
+        *x /= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn average_accumulates_in_replica_order() {
+        // 3 replicas × 2 elements; the mean is exact in f32 here
+        let buf = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = Vec::new();
+        average_replica_segments(&buf, 3, 2, &mut out);
+        assert_eq!(out, vec![3.0, 4.0]);
+        // one replica: identity
+        average_replica_segments(&buf[..2], 1, 2, &mut out);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn exchange_none_is_identity() {
+        let mut buf = vec![1.5f32, -2.25, 0.0];
+        let before = buf.clone();
+        exchange_sum(None, &mut buf).unwrap();
+        assert_eq!(buf, before);
+    }
+
+    /// The §10 ownership argument at helper level: ranks holding disjoint
+    /// segments (zeros elsewhere) exchange + average to the same bits as
+    /// one process holding all segments locally.
+    #[test]
+    fn exchange_reconstructs_segments_bitwise() {
+        let (replicas, seg_len) = (4usize, 5usize);
+        let mut rng = crate::util::rng::Rng::new(0x5EC5);
+        let full: Vec<f32> =
+            (0..replicas * seg_len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut local_avg = Vec::new();
+        average_replica_segments(&full, replicas, seg_len, &mut local_avg);
+
+        for world in [1usize, 2, 4] {
+            let outs: Vec<(Vec<f32>, Vec<f32>)> = thread::scope(|s| {
+                let handles: Vec<_> = mem_world(world)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, ep)| {
+                        let full = full.clone();
+                        s.spawn(move || {
+                            let comm: Arc<Mutex<dyn Transport>> = Arc::new(Mutex::new(ep));
+                            // rank owns replicas [lo, hi)
+                            let per = replicas / world;
+                            let (lo, hi) = (rank * per, (rank + 1) * per);
+                            let mut buf = vec![0.0f32; replicas * seg_len];
+                            buf[lo * seg_len..hi * seg_len]
+                                .copy_from_slice(&full[lo * seg_len..hi * seg_len]);
+                            exchange_sum(Some(&comm), &mut buf).unwrap();
+                            let mut avg = Vec::new();
+                            average_replica_segments(&buf, replicas, seg_len, &mut avg);
+                            (buf, avg)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (rank, (buf, avg)) in outs.iter().enumerate() {
+                for (i, (a, b)) in buf.iter().zip(&full).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "world={world} rank={rank} element {i}"
+                    );
+                }
+                for (i, (a, b)) in avg.iter().zip(&local_avg).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "avg world={world} rank={rank} at {i}");
+                }
+            }
+        }
     }
 }

@@ -105,6 +105,19 @@ impl UdsTransport {
     /// retry until the socket exists — but the stale-file unlink here
     /// means the path must not be shared between concurrent runs.
     pub fn listen(path: &str, world: usize) -> Result<UdsTransport> {
+        UdsTransport::listen_with_timeout(path, world, IO_TIMEOUT)
+    }
+
+    /// [`UdsTransport::listen`] with an explicit I/O timeout governing
+    /// the handshake wait and every subsequent read/write. Production
+    /// callers use [`listen`](UdsTransport::listen); the fault-injection
+    /// suite shrinks the timeout so misbehaving-peer scenarios fail in
+    /// milliseconds instead of minutes.
+    pub fn listen_with_timeout(
+        path: &str,
+        world: usize,
+        timeout: Duration,
+    ) -> Result<UdsTransport> {
         use std::os::unix::fs::FileTypeExt;
         assert!(world >= 2, "a 1-process run needs no transport");
         // reclaim only a stale *socket*; anything else at the path is a
@@ -122,7 +135,7 @@ impl UdsTransport {
         let listener = UnixListener::bind(path)
             .with_context(|| format!("binding coordinator socket {path}"))?;
         let mut peers: Vec<Option<UnixStream>> = (1..world).map(|_| None).collect();
-        let deadline = Instant::now() + IO_TIMEOUT;
+        let deadline = Instant::now() + timeout;
         let mut payload = Vec::new();
         // non-blocking accept loop bounds the wait, so a dead worker fails
         // the run instead of hanging it
@@ -141,8 +154,8 @@ impl UdsTransport {
                 }
             };
             stream.set_nonblocking(false)?;
-            stream.set_read_timeout(Some(IO_TIMEOUT))?;
-            stream.set_write_timeout(Some(IO_TIMEOUT))?;
+            stream.set_read_timeout(Some(timeout))?;
+            stream.set_write_timeout(Some(timeout))?;
             let header = read_frame(&mut stream, &mut payload, 0)?;
             if frame_op(&header)? != "hello" {
                 bail!("worker spoke {header:?} before hello");
@@ -171,8 +184,19 @@ impl UdsTransport {
     /// Ranks 1..world: connect to rank 0's socket (retrying while it
     /// appears) and say hello.
     pub fn connect(path: &str, rank: usize, world: usize) -> Result<UdsTransport> {
+        UdsTransport::connect_with_timeout(path, rank, world, IO_TIMEOUT)
+    }
+
+    /// [`UdsTransport::connect`] with an explicit I/O timeout (see
+    /// [`listen_with_timeout`](UdsTransport::listen_with_timeout)).
+    pub fn connect_with_timeout(
+        path: &str,
+        rank: usize,
+        world: usize,
+        timeout: Duration,
+    ) -> Result<UdsTransport> {
         assert!(rank >= 1 && rank < world, "connect is for worker ranks (got {rank}/{world})");
-        let deadline = Instant::now() + IO_TIMEOUT;
+        let deadline = Instant::now() + timeout;
         let mut stream = loop {
             match UnixStream::connect(path) {
                 Ok(s) => break s,
@@ -186,8 +210,8 @@ impl UdsTransport {
                 }
             }
         };
-        stream.set_read_timeout(Some(IO_TIMEOUT))?;
-        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
         write_frame(
             &mut stream,
             "hello",

@@ -26,9 +26,9 @@
 //!   prefetch, classification dataset generators.
 //! * [`model`] — pure-Rust LSTM/MLP engine (test oracle + `--engine rust`).
 //! * [`runtime`] — PJRT client, artifact registry, typed executor.
-//! * [`comm`] — cross-process transport (in-memory + unix sockets) and
-//!   the width-partitioned sketch store for `csopt launch` runs
-//!   (DESIGN.md §9).
+//! * [`comm`] — cross-process transport (in-memory + unix sockets), the
+//!   width-partitioned sketch store for `csopt launch` runs (DESIGN.md
+//!   §9), and the data-parallel gradient reduction (DESIGN.md §10).
 //! * [`train`] — trainer orchestration, eval, checkpointing, memory ledger.
 //! * [`mach`] — Merged-Average Classifiers via Hashing (§7.3 substrate).
 //! * [`metrics`] — CSV/JSON logging, timing aggregation.

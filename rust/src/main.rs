@@ -25,7 +25,7 @@ use csopt::data::classif::ExtremeDataset;
 use csopt::exp;
 use csopt::optim::{OptimSpec, Rule};
 use csopt::sketch::CountSketch;
-use csopt::train::session::{build_mach, DistParams, RunSpec, Session};
+use csopt::train::session::{build_mach, DistMode, DistParams, RunSpec, Session};
 use csopt::util::cli::Args;
 use csopt::util::rng::Rng;
 
@@ -34,7 +34,8 @@ csopt — Compressing Gradient Optimizers via Count-Sketches (ICML 2019)
 
 USAGE:
   csopt run <config.conf> [--set k=v[,k=v...]]...
-  csopt launch <config.conf> --workers N [--socket PATH] [--set k=v[,k=v...]]...
+  csopt launch <config.conf> --workers N [--mode sketch|data|hybrid]
+              [--replicas R] [--socket PATH] [--set k=v[,k=v...]]...
   csopt worker            (internal: launched by `csopt launch`, spec on stdin)
   csopt train [--preset tiny|wt2|wt103|lm1b] [--optim SPEC] [--sm-optim SPEC]
               [--engine rust|xla] [--epochs N] [--steps N] [--lr X]
@@ -43,10 +44,20 @@ USAGE:
   csopt sketch-demo [--width W] [--depth V] [--items N]
   csopt runtime-info
 
-  `launch` trains one config across N OS processes: every rank replicates
-  the model/data (deterministic, so replicas agree) and owns one width
-  partition of every sketch; queries all-reduce over a unix socket. The
-  result is bit-identical to the same config run single-process.
+  `launch` trains one config across N OS processes; what is distributed
+  is --mode (or the config's [dist] mode):
+    sketch (default)  every rank replicates the model/data and owns one
+                      width partition of every sketch; queries all-reduce
+                      over a unix socket. Bit-identical to the same
+                      config run single-process.
+    data              each rank trains a distinct stripe of the token
+                      stream (--replicas R stripes, default one per
+                      worker) and gradients all-reduce before every
+                      optimizer step. Bit-identical to the single-process
+                      global-batch run (`launch --workers 1 --mode data
+                      --replicas R`, or a [dist] section saying so).
+    hybrid            both at once: distinct batches AND width-partitioned
+                      sketches — the paper's large-batch deployment shape.
 
 RUN CONFIGS (key = value lines; see examples/configs/):
   preset engine epochs steps lr schedule clip seed shards out metrics
@@ -212,9 +223,41 @@ fn cmd_launch(args: &Args) -> Result<()> {
     for sets in args.get_all("set") {
         spec.apply_sets(sets).with_context(|| format!("applying --set {sets}"))?;
     }
+    // distribution shape: the config's [dist] section (if any) supplies
+    // defaults, --mode/--replicas override, launch owns the placement
+    let mut dist = spec.dist.clone().unwrap_or_default();
+    if let Some(mode) = args.get("mode") {
+        dist.mode = DistMode::parse(mode)?;
+    }
+    if let Some(replicas) = args.get("replicas") {
+        dist.replicas =
+            replicas.parse().map_err(|e| anyhow!("bad value for --replicas: {e}"))?;
+    }
     if workers == 1 {
-        // degenerate launch: plain single-process run
-        spec.dist = None;
+        // degenerate launch: single-process — a plain run for sketch
+        // mode, the global-batch reference layout for data/hybrid
+        spec.dist = if dist.mode == DistMode::Sketch {
+            if dist.replicas != 0 {
+                // the multi-worker path rejects this combination through
+                // validate(); dropping the section here must not let the
+                // flag vanish silently
+                bail!(
+                    "--replicas {} is a data/hybrid-mode knob, but this launch resolves \
+                     to mode = sketch — add --mode data (or --mode hybrid with \
+                     --workers ≥ 2), or drop --replicas",
+                    dist.replicas
+                );
+            }
+            None
+        } else {
+            Some(DistParams {
+                mode: dist.mode,
+                rank: 0,
+                workers: 1,
+                socket: String::new(),
+                replicas: dist.replicas,
+            })
+        };
         spec.validate()?;
         let mut session = Session::build(&spec)?;
         session.run()?;
@@ -227,7 +270,13 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .to_string_lossy()
             .into_owned(),
     };
-    spec.dist = Some(DistParams { rank: 0, workers, socket: socket.clone() });
+    spec.dist = Some(DistParams {
+        mode: dist.mode,
+        rank: 0,
+        workers,
+        socket: socket.clone(),
+        replicas: dist.replicas,
+    });
     spec.validate()?;
     println!("# resolved run spec ({path}), launching {workers} processes");
     print!("{spec}");
@@ -237,7 +286,13 @@ fn cmd_launch(args: &Args) -> Result<()> {
     let mut children = Vec::new();
     let spawn_all = (1..workers).try_for_each(|rank| -> Result<()> {
         let mut child_spec = spec.clone();
-        child_spec.dist = Some(DistParams { rank, workers, socket: socket.clone() });
+        child_spec.dist = Some(DistParams {
+            mode: dist.mode,
+            rank,
+            workers,
+            socket: socket.clone(),
+            replicas: dist.replicas,
+        });
         let mut child = std::process::Command::new(&exe)
             .arg("worker")
             .stdin(std::process::Stdio::piped())

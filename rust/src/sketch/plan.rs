@@ -140,7 +140,12 @@ pub(crate) fn shard_ranges(depth: usize, width: usize, shards: usize) -> Vec<(us
 /// [`shard_ranges`] emits for one depth row, applied identically to
 /// *every* depth row, so rank `r` owns `data[(j·w + lo)·d .. (j·w + hi)·d]`
 /// for all `j`. Ranks beyond the width own the empty range.
-pub(crate) fn width_partition(width: usize, world: usize, rank: usize) -> (usize, usize) {
+///
+/// Public because the same balanced-partition arithmetic also stripes
+/// the token stream across data-parallel replicas
+/// (`train::sampler::stream_stripe`, DESIGN.md §10) and is
+/// property-tested at the integration level.
+pub fn width_partition(width: usize, world: usize, rank: usize) -> (usize, usize) {
     debug_assert!(rank < world);
     let ranges = shard_ranges(1, width, world);
     match ranges.get(rank) {

@@ -11,7 +11,9 @@ pub mod trainer;
 pub mod xla_opt;
 
 pub use engine::{LmEngine, RustLmEngine, XlaLmEngine};
-pub use sampler::CandidateSampler;
-pub use session::{build_mach, DistParams, MachParams, RunSpec, RunSummary, SchedSpec, Session};
+pub use sampler::{stream_stripe, CandidateSampler};
+pub use session::{
+    build_mach, DistMode, DistParams, MachParams, RunSpec, RunSummary, SchedSpec, Session,
+};
 pub use trainer::{LmTrainer, TrainReport, TrainerOptions};
 pub use xla_opt::XlaRowOptimizer;

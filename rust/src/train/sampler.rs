@@ -6,10 +6,29 @@
 //! Targets are remapped to their slot inside the candidate list — exactly
 //! the `ytgt`/`sm_rows` convention of the AOT graphs. With `nc == vocab`
 //! the sampler degenerates to the identity (full softmax).
+//!
+//! Data-parallel runs (DESIGN.md §10) stride both the token stream and
+//! the sampler across replicas: [`stream_stripe`] hands replica `r` of
+//! `world` one contiguous balanced stripe of the stream (disjoint,
+//! exhaustive, `world = 1` ≡ the whole stream), and
+//! [`CandidateSampler::for_replica`] decorrelates the negative-sampling
+//! RNG per replica while keeping replica 0 bit-identical to the legacy
+//! single-stream sampler.
 
 use std::collections::HashMap;
 
-use crate::util::rng::Rng;
+use crate::sketch::plan::width_partition;
+use crate::util::rng::{splitmix64, Rng};
+
+/// The contiguous stripe `[lo, hi)` of a `len`-token stream owned by
+/// data-parallel replica `r` of `world` (DESIGN.md §10). The same
+/// balanced-partition arithmetic as the §9 sketch width partition:
+/// stripes are disjoint, exhaustive (they tile `[0, len)` exactly once),
+/// their sizes differ by at most one, and `world = 1` returns
+/// `(0, len)` — the legacy whole-stream path.
+pub fn stream_stripe(len: usize, world: usize, r: usize) -> (usize, usize) {
+    width_partition(len, world, r)
+}
 
 /// Per-batch candidate plan.
 #[derive(Clone, Debug)]
@@ -33,6 +52,22 @@ impl CandidateSampler {
         assert!(nc <= vocab, "nc {nc} > vocab {vocab}");
         let full_ids = if nc == vocab { (0..vocab as u64).collect() } else { Vec::new() };
         CandidateSampler { vocab, nc, rng: Rng::new(seed), full_ids }
+    }
+
+    /// The sampler of data-parallel replica `replica` (DESIGN.md §10):
+    /// replica 0 keeps the legacy stream bit-for-bit (so a 1-replica
+    /// data run samples exactly like a plain run), replicas `r > 0`
+    /// stride onto decorrelated RNG streams. Every layout that owns
+    /// replica `r` derives the identical sampler, which is what keeps
+    /// N-worker runs bitwise equal to the single-process global-batch
+    /// run.
+    pub fn for_replica(vocab: usize, nc: usize, seed: u64, replica: usize) -> CandidateSampler {
+        let seed = if replica == 0 {
+            seed
+        } else {
+            seed ^ splitmix64(replica as u64 ^ 0xDA7A_5717_A1E5_EED5)
+        };
+        CandidateSampler::new(vocab, nc, seed)
     }
 
     /// Build the candidate set for one batch of targets.
@@ -110,5 +145,43 @@ mod tests {
         let a = s.sample(&[1]);
         let b = s.sample(&[1]);
         assert_ne!(a.ids, b.ids);
+    }
+
+    #[test]
+    fn replica_zero_sampler_is_the_legacy_sampler() {
+        let mut legacy = CandidateSampler::new(10_000, 32, 7);
+        let mut r0 = CandidateSampler::for_replica(10_000, 32, 7, 0);
+        for _ in 0..5 {
+            let a = legacy.sample(&[3, 9, 3]);
+            let b = r0.sample(&[3, 9, 3]);
+            assert_eq!(a.ids, b.ids);
+            assert_eq!(a.ytgt, b.ytgt);
+        }
+    }
+
+    #[test]
+    fn replica_samplers_decorrelate() {
+        let mut r0 = CandidateSampler::for_replica(10_000, 32, 7, 0);
+        let mut r1 = CandidateSampler::for_replica(10_000, 32, 7, 1);
+        let mut r2 = CandidateSampler::for_replica(10_000, 32, 7, 2);
+        let (a, b, c) = (r0.sample(&[1]), r1.sample(&[1]), r2.sample(&[1]));
+        assert_ne!(a.ids, b.ids);
+        assert_ne!(a.ids, c.ids);
+        assert_ne!(b.ids, c.ids);
+    }
+
+    #[test]
+    fn stream_stripes_tile_the_stream() {
+        for (len, world) in [(100usize, 1usize), (100, 3), (7, 7), (64, 4)] {
+            let mut cursor = 0usize;
+            for r in 0..world {
+                let (lo, hi) = stream_stripe(len, world, r);
+                assert_eq!(lo, cursor, "len={len} world={world} r={r}");
+                assert!(hi >= lo && hi <= len);
+                cursor = hi;
+            }
+            assert_eq!(cursor, len, "stripes must be exhaustive (len={len} world={world})");
+        }
+        assert_eq!(stream_stripe(123, 1, 0), (0, 123));
     }
 }

@@ -25,8 +25,11 @@
 //! the ordered `layer-pattern = "optim-spec"` policy rules (first glob
 //! match wins, resolved through `OptimSpec::parse` unchanged); `[mach]`
 //! opts a spec into the MACH extreme-classification workload; `[dist]`
-//! (rank/workers/socket) places the process in a `csopt launch`
-//! cross-process run (DESIGN.md §9). Top-level keys:
+//! (mode/rank/workers/socket/replicas) places the process in a `csopt
+//! launch` cross-process run — `mode = sketch` width-partitions sketch
+//! state (DESIGN.md §9), `mode = data` stripes distinct batches per
+//! replica with gradient all-reduce, and `mode = hybrid` composes both
+//! (DESIGN.md §10). Top-level keys:
 //! `preset engine epochs steps lr schedule clip seed shards out metrics
 //! checkpoint resume data.seed data.windows data.val data.test
 //! eval.windows`. `schedule` is `constant`, `linear` (decay to zero over
@@ -155,12 +158,54 @@ impl Default for MachParams {
     }
 }
 
+/// What a multi-process run distributes (DESIGN.md §9/§10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistMode {
+    /// Replicate every batch to all ranks; width-partition the sketch
+    /// state (§9 — the PR 4 behaviour, and the default).
+    Sketch,
+    /// Distinct batches per rank with gradient all-reduce; sketch state
+    /// replicated (§10 data parallelism).
+    Data,
+    /// Both seams at once: distinct batches *and* width-partitioned
+    /// sketches — the paper's large-batch deployment shape (§10).
+    Hybrid,
+}
+
+impl DistMode {
+    pub fn parse(s: &str) -> Result<DistMode> {
+        match s {
+            "sketch" => Ok(DistMode::Sketch),
+            "data" => Ok(DistMode::Data),
+            "hybrid" => Ok(DistMode::Hybrid),
+            other => bail!("unknown [dist] mode {other:?} (sketch | data | hybrid)"),
+        }
+    }
+}
+
+impl fmt::Display for DistMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DistMode::Sketch => "sketch",
+            DistMode::Data => "data",
+            DistMode::Hybrid => "hybrid",
+        })
+    }
+}
+
 /// `[dist]` section: this process's place in a cross-process run
-/// (DESIGN.md §9). `csopt launch` writes one per rank and ships the
+/// (DESIGN.md §9/§10). `csopt launch` writes one per rank and ships the
 /// serialized spec to each worker; a spec without the section (or with
-/// `workers = 1`) is an ordinary single-process run.
+/// `workers = 1` and `mode = sketch`) is an ordinary single-process run.
+/// `mode = data | hybrid` with `workers = 1` is the single-process
+/// *global-batch* run: one process trains all `replicas` stripes — the
+/// bitwise reference every multi-worker layout must reproduce.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DistParams {
+    /// What the run distributes (`sketch` replicates batches and
+    /// partitions sketches; `data` stripes batches and replicates
+    /// sketches; `hybrid` does both).
+    pub mode: DistMode,
     /// This process's rank (0 = coordinator).
     pub rank: usize,
     /// Total process count.
@@ -168,11 +213,33 @@ pub struct DistParams {
     /// Coordinator's unix-domain-socket path (rank 0 listens, workers
     /// connect).
     pub socket: String,
+    /// Data-parallel replica count — the global batch is `replicas`
+    /// micro-batches per step (`data`/`hybrid` only; 0 = one replica per
+    /// worker).
+    pub replicas: usize,
 }
 
 impl Default for DistParams {
     fn default() -> DistParams {
-        DistParams { rank: 0, workers: 1, socket: String::new() }
+        DistParams {
+            mode: DistMode::Sketch,
+            rank: 0,
+            workers: 1,
+            socket: String::new(),
+            replicas: 0,
+        }
+    }
+}
+
+impl DistParams {
+    /// The effective data-parallel replica count: the explicit
+    /// `replicas` key, defaulting to one replica per worker.
+    pub fn replicas_resolved(&self) -> usize {
+        if self.replicas == 0 {
+            self.workers.max(1)
+        } else {
+            self.replicas
+        }
     }
 }
 
@@ -279,7 +346,7 @@ const TOP_KEYS: &[&str] = &[
 const MACH_KEYS: &[&str] =
     &["r", "b-meta", "hd", "din", "classes", "batch", "samples", "recall-queries"];
 
-const DIST_KEYS: &[&str] = &["rank", "workers", "socket"];
+const DIST_KEYS: &[&str] = &["mode", "rank", "workers", "socket", "replicas"];
 
 /// Levenshtein distance (small strings — run-spec keys).
 fn edit_distance(a: &str, b: &str) -> usize {
@@ -365,11 +432,14 @@ impl RunSpec {
         if let Some(dk) = key.strip_prefix("dist.") {
             let d = self.dist.get_or_insert_with(DistParams::default);
             match dk {
+                "mode" => d.mode = DistMode::parse(value)?,
                 "rank" => d.rank = parse_num(key, value)?,
                 "workers" => d.workers = parse_num(key, value)?,
                 "socket" => d.socket = value.to_string(),
+                "replicas" => d.replicas = parse_num(key, value)?,
                 other => bail!(
-                    "unknown [dist] key {other:?}{} (valid: rank, workers, socket)",
+                    "unknown [dist] key {other:?}{} (valid: mode, rank, workers, socket, \
+                     replicas)",
                     suggest(other, DIST_KEYS.iter().copied())
                 ),
             }
@@ -400,9 +470,11 @@ impl RunSpec {
                 suggest(
                     other,
                     TOP_KEYS.iter().copied().chain([
+                        "dist.mode",
                         "dist.rank",
                         "dist.workers",
-                        "dist.socket"
+                        "dist.socket",
+                        "dist.replicas",
                     ])
                 ),
                 TOP_KEYS.join(", ")
@@ -554,6 +626,54 @@ impl RunSpec {
                     );
                 }
             }
+            match d.mode {
+                DistMode::Sketch => {
+                    if d.replicas != 0 {
+                        bail!(
+                            "dist.replicas = {} is a data/hybrid-mode knob, but mode = sketch \
+                             replicates every batch to all workers (there is exactly one \
+                             replica stream) — drop replicas, or set mode = data | hybrid",
+                            d.replicas
+                        );
+                    }
+                }
+                DistMode::Data | DistMode::Hybrid => {
+                    if self.engine != "rust" {
+                        bail!(
+                            "mode = {} trains per-replica micro-batches through the rust \
+                             engine's data-parallel loop — engine = {} is not supported; \
+                             set engine = rust",
+                            d.mode,
+                            self.engine
+                        );
+                    }
+                    if self.mach.is_some() {
+                        bail!(
+                            "mode = {} does not cover the [mach] workload yet — drop the \
+                             [dist] section or run the LM task",
+                            d.mode
+                        );
+                    }
+                    if d.replicas != 0 && d.replicas < d.workers {
+                        bail!(
+                            "mode = {} with replicas = {} but workers = {} leaves \
+                             {} worker(s) with no batch stripe to train — use replicas ≥ \
+                             workers (or drop replicas for one replica per worker)",
+                            d.mode,
+                            d.replicas,
+                            d.workers,
+                            d.workers - d.replicas
+                        );
+                    }
+                    if d.mode == DistMode::Hybrid && d.workers == 1 {
+                        bail!(
+                            "mode = hybrid width-partitions sketch state across workers, but \
+                             workers = 1 partitions nothing — use mode = data for the \
+                             single-process global-batch run, or launch with --workers ≥ 2"
+                        );
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -561,17 +681,29 @@ impl RunSpec {
     /// The canonical form recorded in checkpoints and compared at
     /// resume: I/O-path keys (out, metrics, checkpoint, resume) are
     /// stripped, since moving files around does not change what was
-    /// trained — and so is the `[dist]` section, because a distributed
-    /// run is bit-identical to the single-process run of the same spec
-    /// (DESIGN.md §9), so the process layout does not change what was
-    /// trained either.
+    /// trained — and so is the process *placement* (rank, workers,
+    /// socket), because a distributed run is bit-identical to the
+    /// single-process run of the same spec (DESIGN.md §9/§10). What a
+    /// `data`/`hybrid` run **does** train differently is the global
+    /// batch, so the resolved replica count is kept, normalized to the
+    /// 1-process `mode = data` layout — hybrid's sketch partition is
+    /// placement too (it trains the identical trajectory), so `hybrid`
+    /// records as `data`. Resuming under any layout of the same global
+    /// batch is silent; a genuine trajectory change still warns.
     pub fn trained_form(&self) -> String {
         let mut s = self.clone();
         s.out = RunSpec::default().out;
         s.metrics = None;
         s.checkpoint = None;
         s.resume = None;
-        s.dist = None;
+        s.dist = match &self.dist {
+            Some(d) if d.mode != DistMode::Sketch => Some(DistParams {
+                mode: DistMode::Data,
+                replicas: d.replicas_resolved(),
+                ..DistParams::default()
+            }),
+            _ => None,
+        };
         s.to_string()
     }
 }
@@ -668,6 +800,9 @@ impl fmt::Display for RunSpec {
         if let Some(dp) = &self.dist {
             writeln!(f, "\n[dist]")?;
             let dd = DistParams::default();
+            if dp.mode != dd.mode {
+                writeln!(f, "mode = {}", dp.mode)?;
+            }
             if dp.rank != dd.rank {
                 writeln!(f, "rank = {}", dp.rank)?;
             }
@@ -676,6 +811,9 @@ impl fmt::Display for RunSpec {
             }
             if dp.socket != dd.socket {
                 writeln!(f, "socket = {}", dp.socket)?;
+            }
+            if dp.replicas != dd.replicas {
+                writeln!(f, "replicas = {}", dp.replicas)?;
             }
         }
         Ok(())
@@ -750,8 +888,18 @@ impl Session {
     }
 
     /// [`Session::build_trainer`] with this process's distributed
-    /// context: every sketched layer's state lands on a width-partitioned
-    /// store reducing over the context's transport (DESIGN.md §9).
+    /// context. What the context is *for* depends on the `[dist]` mode
+    /// (DESIGN.md §9/§10):
+    ///
+    /// * `sketch` — every sketched layer's state lands on a
+    ///   width-partitioned store reducing over the context's transport;
+    /// * `data` — sketch state stays replicated (local stores) and the
+    ///   trainer runs the data-parallel loop, exchanging gradients over
+    ///   the transport; with `workers = 1` no transport exists and the
+    ///   trainer owns every replica — the global-batch reference layout;
+    /// * `hybrid` — both: partitioned stores *and* the data-parallel
+    ///   loop over one shared transport (the collectives interleave in
+    ///   the same deterministic order on every rank).
     pub fn build_trainer_dist(spec: &RunSpec, dist: Option<&DistCtx>) -> Result<LmTrainer> {
         spec.validate()?;
         if spec.mach.is_some() {
@@ -781,12 +929,32 @@ impl Session {
             "xla" => Box::new(XlaLmEngine::new(preset, rt.as_ref().unwrap(), &mut rng)?),
             other => bail!("unknown engine {other:?} (rust|xla)"),
         };
-        LmTrainer::new_dist(
-            opts,
-            engine,
-            rt.as_ref(),
-            dist.map(|c| c as &dyn crate::sketch::StoreBuilder),
-        )
+        let mode = spec.dist.as_ref().map_or(DistMode::Sketch, |d| d.mode);
+        // data mode replicates the sketches; sketch/hybrid partition them
+        let store = match mode {
+            DistMode::Data => None,
+            DistMode::Sketch | DistMode::Hybrid => {
+                dist.map(|c| c as &dyn crate::sketch::StoreBuilder)
+            }
+        };
+        let mut trainer = LmTrainer::new_dist(opts, engine, rt.as_ref(), store)?;
+        if let Some(d) = &spec.dist {
+            if d.mode != DistMode::Sketch {
+                if d.workers > 1 && dist.is_none() {
+                    bail!(
+                        "a {}-worker mode = {} run needs an open transport — construct it \
+                         through Session::build (or pass the DistCtx)",
+                        d.workers,
+                        d.mode
+                    );
+                }
+                let replicas = d.replicas_resolved();
+                let (lo, hi) =
+                    crate::sketch::plan::width_partition(replicas, d.workers, d.rank);
+                trainer.enable_data_parallel(replicas, lo, hi, dist.map(|c| c.comm()))?;
+            }
+        }
+        Ok(trainer)
     }
 
     /// Build the full session: transport (for `[dist]` specs), trainer,
@@ -798,7 +966,14 @@ impl Session {
         let dist = Session::open_dist(spec)?;
         let trainer = Session::build_trainer_dist(spec, dist.as_ref())?;
         let p = trainer.opts.preset;
-        let windows = spec.windows.unwrap_or(spec.steps + 8);
+        // data/hybrid runs consume `replicas` windows per global step, so
+        // the default corpus sizing scales with the replica count (an
+        // explicit data.windows wins either way)
+        let replicas = spec
+            .dist
+            .as_ref()
+            .map_or(1, |d| if d.mode == DistMode::Sketch { 1 } else { d.replicas_resolved() });
+        let windows = spec.windows.unwrap_or((spec.steps + 8) * replicas);
         let corpus = corpus_for(&p, windows, spec.data_seed.unwrap_or(spec.seed));
         let (train, valid, test) = corpus.split(spec.val_frac as f64, spec.test_frac as f64);
         let mut session = Session {
@@ -902,6 +1077,12 @@ impl Session {
                 self.trainer.engine.name(),
                 self.trainer.opts.policy,
                 match &self.spec.dist {
+                    Some(d) if d.mode != DistMode::Sketch => format!(
+                        " mode={} workers={} replicas={}",
+                        d.mode,
+                        d.workers,
+                        d.replicas_resolved()
+                    ),
                     Some(d) if d.workers > 1 => format!(" workers={}", d.workers),
                     _ => String::new(),
                 }
@@ -1116,6 +1297,67 @@ sm = cs-adam
     }
 
     #[test]
+    fn dist_mode_round_trips() {
+        let text = "preset = tiny\n\n[dist]\nmode = data\nworkers = 2\n\
+                    socket = /tmp/csopt.sock\nreplicas = 4\n";
+        let spec = RunSpec::parse(text).unwrap();
+        let d = spec.dist.as_ref().unwrap();
+        assert_eq!(d.mode, DistMode::Data);
+        assert_eq!(d.replicas_resolved(), 4);
+        assert_eq!(spec.to_string(), text);
+        assert_eq!(RunSpec::parse(&spec.to_string()).unwrap(), spec);
+        // replicas defaults to one stripe per worker
+        let auto =
+            RunSpec::parse("preset = tiny\n\n[dist]\nmode = hybrid\nworkers = 3\nsocket = /tmp/x\n")
+                .unwrap();
+        assert_eq!(auto.dist.as_ref().unwrap().replicas_resolved(), 3);
+        // single-process global-batch reference layout parses too
+        let reference =
+            RunSpec::parse("preset = tiny\n\n[dist]\nmode = data\nreplicas = 2\n").unwrap();
+        assert_eq!(reference.dist.as_ref().unwrap().replicas_resolved(), 2);
+        assert_eq!(RunSpec::parse(&reference.to_string()).unwrap(), reference);
+    }
+
+    /// The incoherent `[dist]` combos `mode` introduces must be rejected
+    /// with actionable errors (not silently trained).
+    #[test]
+    fn dist_mode_validation_rejects_incoherent_combos() {
+        for (text, needle) in [
+            // unknown mode value
+            ("preset = tiny\n\n[dist]\nmode = warp\n", "sketch | data | hybrid"),
+            // replicas is meaningless when batches are replicated
+            ("preset = tiny\n\n[dist]\nreplicas = 2\n", "data/hybrid-mode knob"),
+            // more workers than replica stripes leaves idle workers
+            (
+                "preset = tiny\n\n[dist]\nmode = data\nworkers = 2\nsocket = /tmp/x\n\
+                 replicas = 1\n",
+                "no batch stripe",
+            ),
+            // hybrid across one process partitions nothing
+            ("preset = tiny\n\n[dist]\nmode = hybrid\n", "partitions nothing"),
+            // the data-parallel loop is rust-engine only (any worker count)
+            ("preset = tiny\nengine = xla\n\n[dist]\nmode = data\n", "engine = rust"),
+            // and does not cover the MACH workload
+            (
+                "preset = tiny\n\n[optim]\nout = \"adam\"\n\n[mach]\n\n[dist]\nmode = data\n",
+                "[mach]",
+            ),
+        ] {
+            let e = format!("{:#}", RunSpec::parse(text).unwrap_err());
+            assert!(e.contains(needle), "{text:?}: {e}");
+        }
+        // coherent data/hybrid shapes pass
+        for text in [
+            "preset = tiny\n\n[dist]\nmode = data\n",
+            "preset = tiny\n\n[dist]\nmode = data\nreplicas = 4\n",
+            "preset = tiny\n\n[dist]\nmode = data\nworkers = 2\nsocket = /tmp/x\nreplicas = 4\n",
+            "preset = tiny\n\n[dist]\nmode = hybrid\nworkers = 2\nsocket = /tmp/x\n",
+        ] {
+            assert!(RunSpec::parse(text).is_ok(), "{text:?} should validate");
+        }
+    }
+
+    #[test]
     fn unknown_keys_suggest_the_nearest_known_key() {
         let mut spec = RunSpec::default();
         // top-level typo
@@ -1127,6 +1369,11 @@ sm = cs-adam
         assert!(e.contains("did you mean \"classes\"?"), "{e}");
         let e = format!("{:#}", spec.set("dist.worker", "2").unwrap_err());
         assert!(e.contains("did you mean \"workers\"?"), "{e}");
+        // the mode-era [dist] keys are covered too
+        let e = format!("{:#}", spec.set("dist.mod", "data").unwrap_err());
+        assert!(e.contains("did you mean \"mode\"?"), "{e}");
+        let e = format!("{:#}", spec.set("dist.replica", "2").unwrap_err());
+        assert!(e.contains("did you mean \"replicas\"?"), "{e}");
         // nothing plausible → no suggestion, but still actionable
         let e = format!("{:#}", spec.set("zzqqxx", "1").unwrap_err());
         assert!(e.contains("unknown run-spec key"), "{e}");
@@ -1138,9 +1385,49 @@ sm = cs-adam
         let mut spec = RunSpec::parse("preset = tiny\n\n[optim]\nemb = \"adam\"\nsm = \"adam\"\n")
             .unwrap();
         let base = spec.trained_form();
-        spec.dist =
-            Some(DistParams { rank: 1, workers: 2, socket: "/tmp/csopt.sock".to_string() });
+        spec.dist = Some(DistParams {
+            rank: 1,
+            workers: 2,
+            socket: "/tmp/csopt.sock".to_string(),
+            ..DistParams::default()
+        });
         assert_eq!(spec.trained_form(), base);
+        // data/hybrid placement strips too, but mode + resolved replicas
+        // stay — they change the trained trajectory (the global batch)
+        spec.dist = Some(DistParams {
+            mode: DistMode::Data,
+            rank: 1,
+            workers: 2,
+            socket: "/tmp/csopt.sock".to_string(),
+            replicas: 0,
+        });
+        let data_form = spec.trained_form();
+        assert_ne!(data_form, base);
+        assert!(data_form.contains("mode = data"), "{data_form}");
+        assert!(data_form.contains("replicas = 2"), "{data_form}");
+        assert!(!data_form.contains("workers"), "{data_form}");
+        assert!(!data_form.contains("socket"), "{data_form}");
+        // … and the resolved replica count is layout-independent: the
+        // 1-process global-batch layout records the identical form
+        spec.dist = Some(DistParams {
+            mode: DistMode::Data,
+            rank: 0,
+            workers: 1,
+            socket: String::new(),
+            replicas: 2,
+        });
+        assert_eq!(spec.trained_form(), data_form);
+        // hybrid trains the same trajectory as data (its sketch partition
+        // is placement) — it records as data, so cross-mode resumes stay
+        // silent
+        spec.dist = Some(DistParams {
+            mode: DistMode::Hybrid,
+            rank: 0,
+            workers: 2,
+            socket: "/tmp/csopt.sock".to_string(),
+            replicas: 2,
+        });
+        assert_eq!(spec.trained_form(), data_form);
     }
 
     #[test]
@@ -1295,10 +1582,28 @@ sm = cs-adam
             }
             if s.engine == "rust" && s.mach.is_none() && rng.f32() < 0.3 {
                 let workers = 1 + rng.below(4);
+                let mode = match rng.below(3) {
+                    0 => DistMode::Sketch,
+                    1 => DistMode::Data,
+                    // hybrid needs a real partition (workers ≥ 2)
+                    _ if workers > 1 => DistMode::Hybrid,
+                    _ => DistMode::Data,
+                };
+                let replicas = if mode == DistMode::Sketch {
+                    0 // a data/hybrid-only knob — validate() rejects it here
+                } else {
+                    // 0 = one per worker, or any explicit count ≥ workers
+                    match rng.below(3) {
+                        0 => 0,
+                        _ => workers + rng.below(3),
+                    }
+                };
                 s.dist = Some(DistParams {
+                    mode,
                     rank: rng.below(workers),
                     workers,
                     socket: if workers > 1 { "/tmp/csopt-prop.sock".to_string() } else { String::new() },
+                    replicas,
                 });
             }
             let text = s.to_string();

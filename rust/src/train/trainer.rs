@@ -1,17 +1,31 @@
 //! The LM trainer: wires data pipeline → engine → optimizers and produces
 //! the loss curves / perplexities / memory ledgers the experiments report.
+//!
+//! Besides the single-stream path, the trainer carries the data-parallel
+//! mode (DESIGN.md §10): [`LmTrainer::enable_data_parallel`] gives it `R`
+//! replica slots — each with its own stream stripe, recurrent state and
+//! candidate sampler — and `train_epoch` then runs the
+//! forward/backward → gradient all-reduce → identical global optimizer
+//! step loop instead of the per-window loop. The same code path serves
+//! every layout: `N` worker processes owning `R/N` replicas each are
+//! bitwise-identical to one process owning all `R` (the global-batch
+//! reference), because the exchange buffer gives every replica's
+//! gradient exactly one owner and the averaging order is fixed.
 
-use anyhow::{Context, Result};
+use std::sync::{Arc, Mutex};
 
+use anyhow::{bail, Context, Result};
+
+use crate::comm::{self, Transport};
 use crate::config::LmPreset;
-use crate::data::batcher::BatchPlan;
+use crate::data::batcher::{BatchPlan, BpttBatcher};
 use crate::data::prefetch::PrefetchedBatches;
 use crate::metrics::MemoryLedger;
 use crate::model::linalg::clip_global_norm;
 use crate::model::LmGrads;
 use crate::optim::{FlatOptimizer, LrSchedule, OptimPolicy, OptimSpec, RowShape, SparseLayer};
 use crate::train::engine::LmEngine;
-use crate::train::sampler::CandidateSampler;
+use crate::train::sampler::{stream_stripe, CandidateSampler};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -60,6 +74,105 @@ pub struct TrainReport {
     pub curve: Vec<(usize, f64)>,
 }
 
+/// Data-parallel replica state (DESIGN.md §10). One global optimizer
+/// step consumes one BPTT window from **every** replica's stream stripe;
+/// this process owns replicas `[lo, hi)` and exchanges gradients with
+/// the other ranks through `comm` (`None` = single-process global-batch
+/// layout, where `[lo, hi) = [0, replicas)` and the exchange is the
+/// identity).
+///
+/// The exchange buffer is `replicas` equal segments followed by two
+/// `[vocab]` row-activity masks. Each segment is one replica's
+/// contribution, laid out `[loss | emb [vocab, de] | sm [vocab, de] |
+/// bias [vocab] | trunk [flat_len]]` — sparse-layer gradients scattered
+/// into dense per-row form so `all_reduce_sum` is the only collective
+/// needed. After the exchange every rank averages the segments in
+/// replica order and applies one identical optimizer step over the
+/// ascending union of active rows (the masks' `> 0` entries), so
+/// parameters and replicated optimizer state stay bit-identical across
+/// ranks — and across process layouts.
+struct DataParallel {
+    replicas: usize,
+    /// Locally-owned global replica range `[lo, hi)`.
+    lo: usize,
+    hi: usize,
+    comm: Option<Arc<Mutex<dyn Transport>>>,
+    // per-local-replica recurrent state + candidate sampler
+    h: Vec<Vec<f32>>,
+    c: Vec<Vec<f32>>,
+    samplers: Vec<CandidateSampler>,
+    /// `[replicas · seg_len + 2 · vocab]` exchange buffer.
+    buf: Vec<f32>,
+    /// `[seg_len]` replica-order average of the segments.
+    avg: Vec<f32>,
+    // scratch for the union-row step
+    ids: Vec<u64>,
+    grad_rows: Vec<f32>,
+    // segment layout
+    seg_len: usize,
+    off_emb: usize,
+    off_sm: usize,
+    off_bias: usize,
+    off_flat: usize,
+    flat_len: usize,
+}
+
+/// Loss-curve / report accumulation shared by the single-stream and
+/// data-parallel epoch loops, so both emit identically windowed curves
+/// and reports.
+struct EpochAcc {
+    timer: Timer,
+    losses: f64,
+    steps: usize,
+    curve: Vec<(usize, f64)>,
+    window_acc: f64,
+    window_n: usize,
+}
+
+impl EpochAcc {
+    /// Curve granularity: one mean-loss point per this many steps.
+    const CURVE_EVERY: usize = 25;
+
+    fn start() -> EpochAcc {
+        EpochAcc {
+            timer: Timer::start(),
+            losses: 0.0,
+            steps: 0,
+            curve: Vec::new(),
+            window_acc: 0.0,
+            window_n: 0,
+        }
+    }
+
+    /// Record one step's loss (`step` = the trainer's global step count).
+    fn push(&mut self, step: usize, loss: f64) {
+        self.losses += loss;
+        self.steps += 1;
+        self.window_acc += loss;
+        self.window_n += 1;
+        if self.window_n == EpochAcc::CURVE_EVERY {
+            self.curve.push((step, self.window_acc / self.window_n as f64));
+            self.window_acc = 0.0;
+            self.window_n = 0;
+        }
+    }
+
+    /// Close the trailing partial window and build the report.
+    fn finish(mut self, final_step: usize) -> TrainReport {
+        if self.window_n > 0 {
+            self.curve.push((final_step, self.window_acc / self.window_n as f64));
+        }
+        let mean_loss = self.losses / self.steps.max(1) as f64;
+        TrainReport {
+            steps: self.steps,
+            mean_loss,
+            train_ppl: mean_loss.exp(),
+            secs: self.timer.secs(),
+            curve: self.curve,
+        }
+    }
+}
+
 /// The trainer.
 pub struct LmTrainer {
     pub opts: TrainerOptions,
@@ -75,6 +188,8 @@ pub struct LmTrainer {
     pub last_plan: Option<BatchPlan>,
     h: Vec<f32>,
     c: Vec<f32>,
+    /// Data-parallel replica state (`None` = the single-stream path).
+    dp: Option<DataParallel>,
     // scratch
     grads: LmGrads,
     emb_rows: Vec<f32>,
@@ -150,6 +265,7 @@ impl LmTrainer {
             last_plan: None,
             h: vec![0.0; p.batch * p.hd],
             c: vec![0.0; p.batch * p.hd],
+            dp: None,
             grads: LmGrads::default(),
             emb_rows: Vec::new(),
             sm_rows: Vec::new(),
@@ -164,6 +280,80 @@ impl LmTrainer {
     pub fn reset_state(&mut self) {
         self.h.iter_mut().for_each(|x| *x = 0.0);
         self.c.iter_mut().for_each(|x| *x = 0.0);
+        if let Some(dp) = self.dp.as_mut() {
+            for h in dp.h.iter_mut() {
+                h.iter_mut().for_each(|x| *x = 0.0);
+            }
+            for c in dp.c.iter_mut() {
+                c.iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+    }
+
+    /// Switch this trainer into data-parallel mode (DESIGN.md §10): `R`
+    /// replicas draw distinct stream stripes, this process owns replicas
+    /// `[lo, hi)`, and gradients are exchanged over `comm` before each
+    /// (now global) optimizer step. `comm = None` is the single-process
+    /// global-batch layout — pass `[0, R)` there so the process owns
+    /// every replica; that run is the bitwise reference every
+    /// multi-worker layout must reproduce.
+    pub fn enable_data_parallel(
+        &mut self,
+        replicas: usize,
+        lo: usize,
+        hi: usize,
+        comm: Option<Arc<Mutex<dyn Transport>>>,
+    ) -> Result<()> {
+        let p = self.opts.preset;
+        if replicas == 0 {
+            bail!("data-parallel mode needs replicas ≥ 1");
+        }
+        if lo >= hi || hi > replicas {
+            bail!(
+                "local replica range [{lo}, {hi}) is not a non-empty slice of \
+                 0..{replicas} — every rank must own at least one replica stripe"
+            );
+        }
+        if comm.is_none() && (lo, hi) != (0, replicas) {
+            bail!(
+                "without a transport this process is the whole world — it must own \
+                 all {replicas} replicas, not [{lo}, {hi})"
+            );
+        }
+        let off_emb = 1; // segment slot 0 carries the replica's loss
+        let off_sm = off_emb + p.vocab * p.de;
+        let off_bias = off_sm + p.vocab * p.de;
+        let off_flat = off_bias + p.vocab;
+        let flat_len = self.engine.flat_len();
+        let seg_len = off_flat + flat_len;
+        let local = hi - lo;
+        self.dp = Some(DataParallel {
+            replicas,
+            lo,
+            hi,
+            comm,
+            h: vec![vec![0.0; p.batch * p.hd]; local],
+            c: vec![vec![0.0; p.batch * p.hd]; local],
+            samplers: (lo..hi)
+                .map(|r| CandidateSampler::for_replica(p.vocab, p.nc, self.opts.seed ^ 0xCAFE, r))
+                .collect(),
+            buf: vec![0.0; replicas * seg_len + 2 * p.vocab],
+            avg: Vec::new(),
+            ids: Vec::new(),
+            grad_rows: Vec::new(),
+            seg_len,
+            off_emb,
+            off_sm,
+            off_bias,
+            off_flat,
+            flat_len,
+        });
+        Ok(())
+    }
+
+    /// Is this trainer in data-parallel mode?
+    pub fn is_data_parallel(&self) -> bool {
+        self.dp.is_some()
     }
 
     /// One training step on a `[b, T]` window. Returns the batch loss.
@@ -242,43 +432,210 @@ impl LmTrainer {
 
     /// Train one epoch over `stream` (at most `max_steps` windows, 0 = all),
     /// with prefetching. Returns the report.
+    ///
+    /// In data-parallel mode a "step" is one **global** optimizer step —
+    /// every replica contributes one window of its own stripe — so
+    /// `max_steps` caps global steps and each consumes `replicas`
+    /// windows of data.
     pub fn train_epoch(&mut self, stream: &[u32], max_steps: usize) -> Result<TrainReport> {
+        if self.dp.is_some() {
+            // take the replica state out so the step borrows stay disjoint
+            let mut dp = self.dp.take().unwrap();
+            let out = self.train_epoch_data(&mut dp, stream, max_steps);
+            self.dp = Some(dp);
+            return out;
+        }
         let p = self.opts.preset;
         self.reset_state();
         let pre = PrefetchedBatches::start(stream.to_vec(), p.batch, p.bptt, 4);
-        let timer = Timer::start();
-        let mut losses = 0.0f64;
-        let mut steps = 0usize;
-        let mut curve = Vec::new();
-        let curve_every = 25usize;
-        let mut window_acc = 0.0f64;
-        let mut window_n = 0usize;
+        let mut acc = EpochAcc::start();
         while let Some(batch) = pre.next() {
             let loss = self.train_step(&batch.x, &batch.y)?;
-            losses += loss;
-            steps += 1;
-            window_acc += loss;
-            window_n += 1;
-            if window_n == curve_every {
-                curve.push((self.step, window_acc / window_n as f64));
-                window_acc = 0.0;
-                window_n = 0;
-            }
-            if max_steps > 0 && steps >= max_steps {
+            acc.push(self.step, loss);
+            if max_steps > 0 && acc.steps >= max_steps {
                 break;
             }
         }
-        if window_n > 0 {
-            curve.push((self.step, window_acc / window_n as f64));
+        Ok(acc.finish(self.step))
+    }
+
+    /// The data-parallel epoch (DESIGN.md §10): stripe the stream across
+    /// replicas, then run `steps` global optimizer steps. The step
+    /// budget is the *minimum* window count over all `R` stripes —
+    /// computed from the stripe arithmetic alone, so every rank derives
+    /// the identical budget without communicating.
+    fn train_epoch_data(
+        &mut self,
+        dp: &mut DataParallel,
+        stream: &[u32],
+        max_steps: usize,
+    ) -> Result<TrainReport> {
+        let p = self.opts.preset;
+        for h in dp.h.iter_mut() {
+            h.iter_mut().for_each(|x| *x = 0.0);
         }
-        let mean_loss = losses / steps.max(1) as f64;
-        Ok(TrainReport {
-            steps,
-            mean_loss,
-            train_ppl: mean_loss.exp(),
-            secs: timer.secs(),
-            curve,
-        })
+        for c in dp.c.iter_mut() {
+            c.iter_mut().for_each(|x| *x = 0.0);
+        }
+        let windows_of = |len: usize| -> usize {
+            let lane = len / p.batch;
+            if lane > p.bptt {
+                (lane - 1) / p.bptt
+            } else {
+                0
+            }
+        };
+        let avail = (0..dp.replicas)
+            .map(|r| {
+                let (lo, hi) = stream_stripe(stream.len(), dp.replicas, r);
+                windows_of(hi - lo)
+            })
+            .min()
+            .unwrap_or(0);
+        if avail == 0 {
+            bail!(
+                "stream of {} tokens is too short for {} data-parallel replica stripes \
+                 (every stripe needs more than batch·(bptt+1) = {} tokens) — raise \
+                 data.windows or lower the replica count",
+                stream.len(),
+                dp.replicas,
+                p.batch * (p.bptt + 1)
+            );
+        }
+        let steps = if max_steps > 0 { avail.min(max_steps) } else { avail };
+        let mut batchers: Vec<BpttBatcher> = (dp.lo..dp.hi)
+            .map(|r| {
+                let (s, e) = stream_stripe(stream.len(), dp.replicas, r);
+                BpttBatcher::new(&stream[s..e], p.batch, p.bptt)
+            })
+            .collect();
+        let mut acc = EpochAcc::start();
+        for _ in 0..steps {
+            let step_loss = self.global_step(dp, &mut batchers)?;
+            acc.push(self.step, step_loss);
+        }
+        Ok(acc.finish(self.step))
+    }
+
+    /// One global data-parallel step: forward/backward every locally
+    /// owned replica, scatter losses + gradients into the owned segments
+    /// of the exchange buffer, all-reduce, average in replica order,
+    /// clip the averaged global gradient, and apply one optimizer step
+    /// over the ascending union of active rows — identical on every
+    /// rank. Returns the global-batch loss (mean over replicas).
+    fn global_step(&mut self, dp: &mut DataParallel, batchers: &mut [BpttBatcher]) -> Result<f64> {
+        let p = self.opts.preset;
+        let (vocab, de) = (p.vocab, p.de);
+        let mask_base = dp.replicas * dp.seg_len;
+        dp.buf.iter_mut().for_each(|x| *x = 0.0);
+
+        // --- local replicas: forward/backward + scatter
+        for (i, batcher) in batchers.iter_mut().enumerate() {
+            let r = dp.lo + i;
+            let batch = batcher.next_batch().with_context(|| {
+                format!("replica {r}'s stripe ran out of windows before the step budget")
+            })?;
+            let plan = BatchPlan::build(&batch.x, p.k, 0);
+            let cands = dp.samplers[i].sample(&batch.y);
+            self.emb.gather(&plan.uniq, &mut self.emb_rows);
+            self.sm.gather(&cands.ids, &mut self.sm_rows);
+            self.sm_bias.gather(&cands.ids, &mut self.sm_bias_rows);
+            let h0 = std::mem::take(&mut dp.h[i]);
+            let c0 = std::mem::take(&mut dp.c[i]);
+            let out = self.engine.train_step(
+                &self.emb_rows, &self.sm_rows, &self.sm_bias_rows, &plan.slots, &cands.ytgt,
+                &h0, &c0, &mut self.grads,
+            )?;
+            dp.h[i] = out.h_t;
+            dp.c[i] = out.c_t;
+            // scatter this replica's micro-gradient into its segment —
+            // ids are unique within a plan, so plain copies suffice
+            let seg = &mut dp.buf[r * dp.seg_len..(r + 1) * dp.seg_len];
+            seg[0] = out.loss as f32;
+            for (t, &id) in plan.uniq[..plan.live].iter().enumerate() {
+                seg[dp.off_emb + id as usize * de..][..de]
+                    .copy_from_slice(&self.grads.d_emb_rows[t * de..(t + 1) * de]);
+            }
+            for (t, &id) in cands.ids.iter().enumerate() {
+                seg[dp.off_sm + id as usize * de..][..de]
+                    .copy_from_slice(&self.grads.d_sm_rows[t * de..(t + 1) * de]);
+                seg[dp.off_bias + id as usize] = self.grads.d_sm_bias[t];
+            }
+            crate::model::LmModel::pack_grads(&self.grads, &mut self.flat_grads);
+            seg[dp.off_flat..][..dp.flat_len].copy_from_slice(&self.flat_grads);
+            // activity masks (shared tail): ranks' marks sum; > 0 = active
+            for &id in plan.live_ids() {
+                dp.buf[mask_base + id as usize] = 1.0;
+            }
+            for &id in &cands.ids {
+                dp.buf[mask_base + vocab + id as usize] = 1.0;
+            }
+        }
+
+        // --- exchange + replica-order average (DESIGN.md §10)
+        comm::exchange_sum(dp.comm.as_ref(), &mut dp.buf)?;
+        let mut loss_sum = 0.0f64;
+        for r in 0..dp.replicas {
+            loss_sum += dp.buf[r * dp.seg_len] as f64;
+        }
+        let step_loss = loss_sum / dp.replicas as f64;
+        comm::average_replica_segments(&dp.buf, dp.replicas, dp.seg_len, &mut dp.avg);
+
+        // --- clip the averaged global gradient (once per global step —
+        // the global-batch counterpart of the per-window clip)
+        if self.opts.clip > 0.0 {
+            let (head, rest) = dp.avg.split_at_mut(dp.off_sm);
+            let emb_sec = &mut head[dp.off_emb..];
+            let (sm_sec, rest) = rest.split_at_mut(dp.off_bias - dp.off_sm);
+            let (bias_sec, flat_sec) = rest.split_at_mut(dp.off_flat - dp.off_bias);
+            clip_global_norm(&mut [emb_sec, sm_sec, bias_sec, flat_sec], self.opts.clip);
+        }
+
+        // --- one identical optimizer step on every rank
+        self.step += 1;
+        let t = self.step;
+        let lr = self.opts.schedule.at(t);
+        // embedding: ascending union of every replica's active rows
+        dp.ids.clear();
+        for (id, mark) in dp.buf[mask_base..mask_base + vocab].iter().enumerate() {
+            if *mark > 0.0 {
+                dp.ids.push(id as u64);
+            }
+        }
+        dp.grad_rows.clear();
+        for &id in &dp.ids {
+            dp.grad_rows.extend_from_slice(&dp.avg[dp.off_emb + id as usize * de..][..de]);
+        }
+        self.emb.step(&dp.ids, &dp.grad_rows, lr, t);
+        // softmax + bias share the candidate-row union
+        dp.ids.clear();
+        for (id, mark) in dp.buf[mask_base + vocab..mask_base + 2 * vocab].iter().enumerate() {
+            if *mark > 0.0 {
+                dp.ids.push(id as u64);
+            }
+        }
+        dp.grad_rows.clear();
+        for &id in &dp.ids {
+            dp.grad_rows.extend_from_slice(&dp.avg[dp.off_sm + id as usize * de..][..de]);
+        }
+        self.sm.step(&dp.ids, &dp.grad_rows, lr, t);
+        dp.grad_rows.clear();
+        for &id in &dp.ids {
+            dp.grad_rows.push(dp.avg[dp.off_bias + id as usize]);
+        }
+        self.sm_bias.step(&dp.ids, &dp.grad_rows, lr, t);
+        // dense trunk
+        self.engine.pack_flat(&mut self.flat_params);
+        self.flat_opt.step(
+            &mut self.flat_params,
+            &dp.avg[dp.off_flat..][..dp.flat_len],
+            lr,
+            t,
+        );
+        let flat = std::mem::take(&mut self.flat_params);
+        self.engine.unpack_flat(&flat);
+        self.flat_params = flat;
+        Ok(step_loss)
     }
 
     /// Evaluate perplexity over a held-out stream (at most `max_steps`
@@ -451,6 +808,43 @@ mod tests {
         let rp = par.train_epoch(train, 15).unwrap();
         assert_eq!(rs.mean_loss.to_bits(), rp.mean_loss.to_bits());
         assert_eq!(seq.emb.params, par.emb.params);
+    }
+
+    #[test]
+    fn data_parallel_single_process_trains() {
+        // the 1-process global-batch layout: one trainer owns all stripes
+        let corpus = SyntheticCorpus::generate(512, 40_000, 1.05, 0.6, 5);
+        let (train, valid, _) = corpus.split(0.1, 0.05);
+        let mut tr = tiny_trainer("cs-adam");
+        tr.enable_data_parallel(2, 0, 2, None).unwrap();
+        assert!(tr.is_data_parallel());
+        let r = tr.train_epoch(train, 10).unwrap();
+        assert_eq!(r.steps, 10);
+        assert!(r.mean_loss.is_finite());
+        // a second epoch continues from the global step counter
+        let r2 = tr.train_epoch(train, 5).unwrap();
+        assert!(r2.mean_loss.is_finite());
+        assert_eq!(tr.step, 15);
+        // eval is unaffected by the mode
+        let ppl = tr.eval_ppl(valid, 4).unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0);
+    }
+
+    #[test]
+    fn data_parallel_rejects_bad_shapes() {
+        let mut tr = tiny_trainer("adam");
+        assert!(tr.enable_data_parallel(0, 0, 0, None).is_err());
+        // empty local range
+        assert!(tr.enable_data_parallel(2, 1, 1, None).is_err());
+        // range outside the replica count
+        assert!(tr.enable_data_parallel(2, 1, 3, None).is_err());
+        // no transport but not the whole world
+        assert!(tr.enable_data_parallel(2, 0, 1, None).is_err());
+        // a too-short stream is an actionable error, not a panic
+        tr.enable_data_parallel(4, 0, 4, None).unwrap();
+        let tiny_stream: Vec<u32> = (0..64u32).collect();
+        let e = format!("{:#}", tr.train_epoch(&tiny_stream, 2).unwrap_err());
+        assert!(e.contains("too short"), "{e}");
     }
 
     #[test]

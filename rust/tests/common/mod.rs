@@ -1,4 +1,98 @@
 //! Shared helpers for the integration suites.
+//!
+//! Each integration binary compiles its own copy of this module, so not
+//! every binary uses every helper.
+#![allow(dead_code)]
+
+use std::time::Duration;
+
+/// Run `f` on a worker thread and panic if it has not finished within
+/// `deadline` — the timeout guard the fault-injection suite runs under,
+/// so a regression back to hanging sockets fails the test in seconds
+/// instead of stalling the whole `cargo test` job. The hung thread is
+/// leaked (it is stuck in a syscall); the panic is what CI sees.
+pub fn with_deadline<T: Send + 'static>(
+    deadline: Duration,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    use std::sync::mpsc::RecvTimeoutError;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let name = std::thread::current().name().unwrap_or("test").to_string();
+    std::thread::Builder::new()
+        .name(format!("{name}-deadline"))
+        .spawn(move || {
+            // ignore the send error if the receiver already timed out
+            let _ = tx.send(f());
+        })
+        .expect("spawning deadline worker");
+    match rx.recv_timeout(deadline) {
+        Ok(v) => v,
+        // worker panicked before sending: the real assertion failure is
+        // in its panic output — don't misreport it as a hang
+        Err(RecvTimeoutError::Disconnected) => {
+            panic!("test body panicked — see the worker thread's panic above")
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            panic!("test body exceeded its {deadline:?} deadline — likely a hang")
+        }
+    }
+}
+
+/// A deliberately misbehaving raw-socket peer for the `comm/uds.rs`
+/// fault-injection suite: speaks just enough of the §9 wire format
+/// (`u32 header_len | JSON header | raw-f32 payload`) to get past the
+/// handshake, then violates the protocol on purpose.
+#[cfg(unix)]
+pub mod rogue {
+    use std::io::Write;
+    use std::os::unix::net::UnixStream;
+    use std::time::{Duration, Instant};
+
+    /// Connect to the coordinator socket, retrying while it appears.
+    pub fn connect(path: &str, timeout: Duration) -> UnixStream {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match UnixStream::connect(path) {
+                Ok(s) => return s,
+                Err(e) => {
+                    assert!(
+                        Instant::now() <= deadline,
+                        "rogue peer: coordinator socket {path} never came up: {e}"
+                    );
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+
+    /// Write one well-formed frame: `header` must be the JSON header
+    /// text (the real transport always includes an `"n"` field).
+    pub fn send_frame(stream: &mut UnixStream, header: &str, payload: &[f32]) {
+        stream.write_all(&(header.len() as u32).to_le_bytes()).unwrap();
+        stream.write_all(header.as_bytes()).unwrap();
+        for x in payload {
+            stream.write_all(&x.to_le_bytes()).unwrap();
+        }
+        stream.flush().unwrap();
+    }
+
+    /// A valid hello frame for `rank` of `world`.
+    pub fn send_hello(stream: &mut UnixStream, rank: usize, world: usize) {
+        send_frame(
+            stream,
+            &format!("{{\"op\":\"hello\",\"n\":0,\"rank\":{rank},\"world\":{world}}}"),
+            &[],
+        );
+    }
+
+    /// A frame whose length prefix promises `claimed` header bytes but
+    /// ships only `sent` of them (the truncated-frame fault).
+    pub fn send_truncated_header(stream: &mut UnixStream, claimed: u32, sent: usize) {
+        stream.write_all(&claimed.to_le_bytes()).unwrap();
+        stream.write_all(&vec![b'{'; sent]).unwrap();
+        stream.flush().unwrap();
+    }
+}
 
 /// Open the artifact runtime, or return `None` when the XLA leg is
 /// legitimately absent in this environment — the vendored stub `xla`

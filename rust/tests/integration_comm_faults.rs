@@ -1,0 +1,234 @@
+//! Fault-injection suite for the unix-domain-socket transport
+//! (`comm/uds.rs`). A distributed run's failure mode must be a
+//! contextual `Err` **within the I/O timeout** — never a hang: every
+//! scenario here drives a real `UdsTransport` endpoint against a
+//! deliberately misbehaving raw-socket peer (`tests/common::rogue`) and
+//! every test body runs under a `with_deadline` watchdog, so a
+//! regression back to blocking forever fails in seconds.
+#![cfg(unix)]
+
+mod common;
+
+use std::thread;
+use std::time::Duration;
+
+use csopt::comm::{Transport, UdsTransport};
+
+use common::{rogue, with_deadline};
+
+/// Socket-level I/O timeout for the faulty scenarios: long enough for
+/// loopback round-trips, short enough that timeout-path tests are fast.
+const IO: Duration = Duration::from_millis(800);
+/// Watchdog budget per test body — generous, but finite.
+const DEADLINE: Duration = Duration::from_secs(30);
+
+fn sock_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("csopt-fault-{tag}-{}.sock", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Nobody ever connects: the coordinator's handshake must time out with
+/// an actionable error instead of waiting forever.
+#[test]
+fn handshake_timeout_surfaces_err() {
+    let path = sock_path("hstimeout");
+    let err = with_deadline(DEADLINE, move || {
+        let e = UdsTransport::listen_with_timeout(&path, 2, IO).map(|_| ()).unwrap_err();
+        UdsTransport::cleanup(&path);
+        format!("{e:#}")
+    });
+    assert!(err.contains("timed out waiting for workers"), "{err}");
+}
+
+/// The coordinator never appears: a worker's connect must give up with
+/// the socket path in the error.
+#[test]
+fn connect_timeout_surfaces_err() {
+    let path = sock_path("cntimeout");
+    let err = with_deadline(DEADLINE, move || {
+        let e = UdsTransport::connect_with_timeout(&path, 1, 2, IO).map(|_| ()).unwrap_err();
+        format!("{e:#}")
+    });
+    assert!(err.contains("never came up"), "{err}");
+}
+
+/// A peer that promises a 64-byte frame header but ships 10 bytes and
+/// goes silent: the coordinator's collective read must fail within the
+/// I/O timeout, naming the rank and the op it was receiving.
+#[test]
+fn truncated_frame_surfaces_err() {
+    let path = sock_path("trunc");
+    let err = with_deadline(DEADLINE, move || {
+        let p2 = path.clone();
+        let peer = thread::spawn(move || {
+            let mut s = rogue::connect(&p2, DEADLINE);
+            rogue::send_hello(&mut s, 1, 2);
+            rogue::send_truncated_header(&mut s, 64, 10);
+            s // keep the stream open: the fault is silence, not EOF
+        });
+        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
+        let mut buf = vec![0.0f32; 4];
+        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
+        drop(peer.join().unwrap());
+        UdsTransport::cleanup(&path);
+        format!("{e:#}")
+    });
+    assert!(err.contains("receiving allreduce partial from rank 1"), "{err}");
+}
+
+/// A header whose `n` promises vastly more payload f32s than the
+/// collective's buffer holds: rejected as divergence before any giant
+/// allocation or read.
+#[test]
+fn oversized_payload_header_surfaces_err() {
+    let path = sock_path("oversize");
+    let err = with_deadline(DEADLINE, move || {
+        let p2 = path.clone();
+        let peer = thread::spawn(move || {
+            let mut s = rogue::connect(&p2, DEADLINE);
+            rogue::send_hello(&mut s, 1, 2);
+            rogue::send_frame(&mut s, "{\"op\":\"allreduce\",\"n\":1000000}", &[]);
+            s
+        });
+        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
+        let mut buf = vec![0.0f32; 4];
+        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
+        drop(peer.join().unwrap());
+        UdsTransport::cleanup(&path);
+        format!("{e:#}")
+    });
+    assert!(err.contains("exceeds the expected 4"), "{err}");
+}
+
+/// An implausible header *length* prefix (10 MB of JSON) is rejected
+/// outright — a corrupt or hostile length cannot drive the allocation.
+#[test]
+fn implausible_header_length_surfaces_err() {
+    let path = sock_path("hugehdr");
+    let err = with_deadline(DEADLINE, move || {
+        let p2 = path.clone();
+        let peer = thread::spawn(move || {
+            let mut s = rogue::connect(&p2, DEADLINE);
+            rogue::send_hello(&mut s, 1, 2);
+            rogue::send_truncated_header(&mut s, 10_000_000, 16);
+            s
+        });
+        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
+        let mut buf = vec![0.0f32; 4];
+        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
+        drop(peer.join().unwrap());
+        UdsTransport::cleanup(&path);
+        format!("{e:#}")
+    });
+    assert!(err.contains("implausible frame header length"), "{err}");
+}
+
+/// A worker that vanishes mid-collective (hello, then hangup): the
+/// coordinator's all-reduce must surface the broken stream as an error,
+/// not wedge the surviving ranks.
+#[test]
+fn worker_disconnect_mid_allreduce_surfaces_err() {
+    let path = sock_path("wdrop");
+    let err = with_deadline(DEADLINE, move || {
+        let p2 = path.clone();
+        let peer = thread::spawn(move || {
+            let mut s = rogue::connect(&p2, DEADLINE);
+            rogue::send_hello(&mut s, 1, 2);
+            // dropping the stream closes it: the coordinator sees EOF
+        });
+        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
+        peer.join().unwrap();
+        let mut buf = vec![0.0f32; 4];
+        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
+        UdsTransport::cleanup(&path);
+        format!("{e:#}")
+    });
+    assert!(err.contains("receiving allreduce partial from rank 1"), "{err}");
+}
+
+/// The coordinator dies mid-collective: the *worker* side must error
+/// within the timeout too (it is waiting for the reduced result).
+#[test]
+fn coordinator_disconnect_mid_allreduce_surfaces_err() {
+    let path = sock_path("cdrop");
+    let err = with_deadline(DEADLINE, move || {
+        use std::io::Read;
+        use std::os::unix::net::UnixListener;
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path).unwrap();
+        let p2 = path.clone();
+        let worker = thread::spawn(move || {
+            let mut t = UdsTransport::connect_with_timeout(&p2, 1, 2, IO)
+                .expect("handshake should complete before the fault");
+            let mut buf = vec![1.0f32; 4];
+            format!("{:#}", t.all_reduce_sum(&mut buf).unwrap_err())
+        });
+        // accept the worker, consume its hello frame, then hang up
+        let (mut stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(DEADLINE)).unwrap();
+        let mut len4 = [0u8; 4];
+        stream.read_exact(&mut len4).unwrap();
+        let mut hello = vec![0u8; u32::from_le_bytes(len4) as usize];
+        stream.read_exact(&mut hello).unwrap();
+        drop(stream);
+        drop(listener);
+        let e = worker.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+        e
+    });
+    // the worker fails on the partial write (broken pipe) or on reading
+    // the result (EOF/timeout) depending on kernel buffering — either
+    // way it is a contextual rank-1 allreduce error, not a hang
+    assert!(err.contains("rank 1") && err.contains("allreduce"), "{err}");
+}
+
+/// A peer whose op sequence diverges from the coordinator's (it answers
+/// the allreduce with a barrier frame) is called out as divergence.
+#[test]
+fn diverged_op_sequence_surfaces_err() {
+    let path = sock_path("diverge");
+    let err = with_deadline(DEADLINE, move || {
+        let p2 = path.clone();
+        let peer = thread::spawn(move || {
+            let mut s = rogue::connect(&p2, DEADLINE);
+            rogue::send_hello(&mut s, 1, 2);
+            rogue::send_frame(&mut s, "{\"op\":\"barrier\",\"n\":0}", &[]);
+            s
+        });
+        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
+        let mut buf = vec![0.0f32; 4];
+        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
+        drop(peer.join().unwrap());
+        UdsTransport::cleanup(&path);
+        format!("{e:#}")
+    });
+    assert!(err.contains("diverged"), "{err}");
+}
+
+/// Sanity leg: with a *well-behaved* peer the short-timeout transport
+/// still completes collectives — the fault tests above fail because of
+/// the injected faults, not because the timeout is unrealistically low.
+#[test]
+fn short_timeout_still_completes_honest_collectives() {
+    let path = sock_path("honest");
+    with_deadline(DEADLINE, move || {
+        let p2 = path.clone();
+        let worker = thread::spawn(move || {
+            let mut t = UdsTransport::connect_with_timeout(&p2, 1, 2, IO).unwrap();
+            let mut buf = vec![2.0f32; 3];
+            t.all_reduce_sum(&mut buf).unwrap();
+            t.barrier().unwrap();
+            buf
+        });
+        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
+        let mut buf = vec![1.0f32; 3];
+        t0.all_reduce_sum(&mut buf).unwrap();
+        t0.barrier().unwrap();
+        let wbuf = worker.join().unwrap();
+        UdsTransport::cleanup(&path);
+        assert_eq!(buf, vec![3.0f32; 3]);
+        assert_eq!(wbuf, vec![3.0f32; 3]);
+    });
+}

@@ -1,0 +1,506 @@
+//! Data-parallel training equivalence suite (DESIGN.md §10).
+//!
+//! The §10 claim is the same shape as §9's, one seam up: N workers
+//! training **distinct batches** with gradient all-reduce are bitwise
+//! identical — parameters, losses, perplexities, checkpoints — to one
+//! process training the N×-larger global batch (the `mode = data`,
+//! `workers = 1` layout that owns every replica stripe).
+//!
+//! * Property legs pin the striping substrate: `width_partition` /
+//!   `stream_stripe` partitions are disjoint, exhaustive and balanced
+//!   over `(len, world)` grids, and the replica-strided candidate
+//!   sampler keeps replica 0 bit-identical to the legacy sampler.
+//! * Trainer legs drive real multi-rank worlds over the in-memory
+//!   transport (threads) in `data` and `hybrid` mode, comparing full
+//!   trajectories bitwise against the single-process global-batch run.
+//! * The subprocess legs run the actual `csopt launch --mode data` /
+//!   `--mode hybrid` CLI and prove the acceptance criterion end to end,
+//!   including checkpoint resume across `{mode, workers}` layouts.
+
+use std::thread;
+
+use csopt::comm::{mem_world, DistCtx};
+use csopt::data::corpus::SyntheticCorpus;
+use csopt::sketch::plan::width_partition;
+use csopt::train::checkpoint::Checkpoint;
+use csopt::train::sampler::{stream_stripe, CandidateSampler};
+use csopt::train::session::{RunSpec, Session};
+use csopt::util::proptest::check;
+
+// ---------------------------------------------------------------------------
+// property legs (no new deps — the crate's own seeded proptest helper)
+
+/// Partitions/stripes are disjoint, exhaustive, ordered and balanced for
+/// every `(len, world)` in a randomized grid, and `world = 1` reduces to
+/// the legacy whole-range path.
+#[test]
+fn partition_and_stripe_properties() {
+    check("width-partition-grid", 300, 0xA11, |rng| {
+        let len = rng.below(4096);
+        let world = 1 + rng.below(9);
+        let mut cursor = 0usize;
+        let (mut min_sz, mut max_sz) = (usize::MAX, 0usize);
+        for r in 0..world {
+            let (wp, sp) = (width_partition(len, world, r), stream_stripe(len, world, r));
+            if wp != sp {
+                return Err(format!("stripe {sp:?} != partition {wp:?} (len={len} world={world})"));
+            }
+            let (lo, hi) = wp;
+            if lo != cursor || hi < lo || hi > len {
+                return Err(format!(
+                    "range [{lo}, {hi}) breaks the tiling at cursor {cursor} \
+                     (len={len} world={world} r={r})"
+                ));
+            }
+            min_sz = min_sz.min(hi - lo);
+            max_sz = max_sz.max(hi - lo);
+            cursor = hi;
+        }
+        if cursor != len {
+            return Err(format!("stripes cover [0, {cursor}) of [0, {len}) — not exhaustive"));
+        }
+        if max_sz - min_sz > 1 {
+            return Err(format!(
+                "unbalanced stripes: sizes span [{min_sz}, {max_sz}] (len={len} world={world})"
+            ));
+        }
+        if stream_stripe(len, 1, 0) != (0, len) {
+            return Err(format!("world=1 must be the legacy whole stream (len={len})"));
+        }
+        Ok(())
+    });
+}
+
+/// Replica 0's sampler is the legacy sampler bit-for-bit under any seed;
+/// other replicas stride onto decorrelated streams.
+#[test]
+fn sampler_striding_properties() {
+    check("sampler-replica-striding", 60, 0xB22, |rng| {
+        let seed = rng.next_u64();
+        let mut legacy = CandidateSampler::new(512, 32, seed);
+        let mut r0 = CandidateSampler::for_replica(512, 32, seed, 0);
+        for _ in 0..3 {
+            let targets: Vec<u32> = (0..4).map(|_| rng.below(512) as u32).collect();
+            let (a, b) = (legacy.sample(&targets), r0.sample(&targets));
+            if a.ids != b.ids || a.ytgt != b.ytgt {
+                return Err(format!("replica 0 diverged from legacy under seed {seed:#x}"));
+            }
+        }
+        let mut r1 = CandidateSampler::for_replica(512, 32, seed, 1);
+        let mut r2 = CandidateSampler::for_replica(512, 32, seed, 2);
+        let (a, b) = (r1.sample(&[7]), r2.sample(&[7]));
+        if a.ids == b.ids {
+            return Err(format!("replicas 1 and 2 drew identical negatives (seed {seed:#x})"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// trainer legs (in-memory transport, real multi-rank worlds)
+
+fn dp_spec(extra_dist: &str) -> RunSpec {
+    let text = format!(
+        "preset = tiny\nepochs = 1\nsteps = 8\neval.windows = 2\n\n\
+         [optim]\nemb = \"cs-adam@v=2,w=48,clean=0.5/4\"\nsm = \"cs-adagrad@w=32\"\n\n\
+         [dist]\n{extra_dist}"
+    );
+    RunSpec::parse(&text).unwrap()
+}
+
+/// One rank's full observable state after an epoch.
+#[derive(PartialEq)]
+struct Snapshot {
+    loss_bits: u64,
+    emb: Vec<f32>,
+    sm: Vec<f32>,
+    bias: Vec<f32>,
+    flat: Vec<f32>,
+    ppl_bits: u64,
+}
+
+fn run_rank(spec: &RunSpec, ctx: Option<&DistCtx>, train: &[u32], valid: &[u32]) -> Snapshot {
+    let mut tr = Session::build_trainer_dist(spec, ctx).unwrap();
+    let r = tr.train_epoch(train, 8).unwrap();
+    let ppl = tr.eval_ppl(valid, 2).unwrap();
+    let mut flat = Vec::new();
+    tr.engine.pack_flat(&mut flat);
+    Snapshot {
+        loss_bits: r.mean_loss.to_bits(),
+        emb: tr.emb.params.clone(),
+        sm: tr.sm.params.clone(),
+        bias: tr.sm_bias.params.clone(),
+        flat,
+        ppl_bits: ppl.to_bits(),
+    }
+}
+
+fn assert_snapshots_match(a: &Snapshot, b: &Snapshot, what: &str) {
+    assert_eq!(a.loss_bits, b.loss_bits, "{what}: mean loss diverged");
+    assert_eq!(a.emb, b.emb, "{what}: emb params diverged");
+    assert_eq!(a.sm, b.sm, "{what}: sm params diverged");
+    assert_eq!(a.bias, b.bias, "{what}: bias params diverged");
+    assert_eq!(a.flat, b.flat, "{what}: trunk params diverged");
+    assert_eq!(a.ppl_bits, b.ppl_bits, "{what}: valid ppl diverged");
+}
+
+/// `mode = data`: multi-worker trajectories over the mem transport are
+/// bit-identical to the single-process global-batch run — every rank,
+/// for both the `replicas == workers` and `replicas > workers`
+/// (multi-stripe-per-rank) layouts.
+#[test]
+fn data_parallel_trainer_matches_global_batch_bitwise() {
+    let corpus = SyntheticCorpus::generate(512, 60_000, 1.05, 0.6, 11);
+    let (train, valid, _) = corpus.split(0.08, 0.05);
+
+    for (workers, replicas) in [(2usize, 2usize), (2, 4), (3, 3)] {
+        let reference = run_rank(
+            &dp_spec(&format!("mode = data\nreplicas = {replicas}\n")),
+            None,
+            train,
+            valid,
+        );
+        let outs: Vec<Snapshot> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(workers)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    let mut spec = dp_spec(&format!(
+                        "mode = data\nrank = {rank}\nworkers = {workers}\n\
+                         replicas = {replicas}\n"
+                    ));
+                    spec.dist.as_mut().unwrap().rank = rank;
+                    s.spawn(move || {
+                        let ctx = DistCtx::new(rank, workers, ep);
+                        run_rank(&spec, Some(&ctx), train, valid)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, out) in outs.iter().enumerate() {
+            assert_snapshots_match(
+                out,
+                &reference,
+                &format!("data workers={workers} replicas={replicas} rank={rank}"),
+            );
+        }
+    }
+}
+
+/// `mode = hybrid`: distinct batches *and* width-partitioned sketches at
+/// once — still bit-identical to the single-process global-batch run
+/// (which uses in-process `shards = 2` execution sharding, itself
+/// equivalence-pinned by §5), and the per-rank sketch shares still tile
+/// the single-process footprint exactly once.
+#[test]
+fn hybrid_trainer_matches_global_batch_bitwise() {
+    let corpus = SyntheticCorpus::generate(512, 60_000, 1.05, 0.6, 12);
+    let (train, valid, _) = corpus.split(0.08, 0.05);
+
+    let mut ref_spec = dp_spec("mode = data\nreplicas = 2\n");
+    ref_spec.shards = 2;
+    let mut ref_tr = Session::build_trainer_dist(&ref_spec, None).unwrap();
+    let ref_sketch_bytes = ref_tr.emb.opt.memory_bytes() + ref_tr.sm.opt.memory_bytes();
+    let r = ref_tr.train_epoch(train, 8).unwrap();
+    let ref_ppl = ref_tr.eval_ppl(valid, 2).unwrap();
+
+    let workers = 2usize;
+    let outs: Vec<(Snapshot, usize)> = thread::scope(|s| {
+        let handles: Vec<_> = mem_world(workers)
+            .into_iter()
+            .enumerate()
+            .map(|(rank, ep)| {
+                let spec = {
+                    let mut spec = dp_spec(&format!(
+                        "mode = hybrid\nrank = {rank}\nworkers = {workers}\n"
+                    ));
+                    spec.dist.as_mut().unwrap().rank = rank;
+                    spec
+                };
+                s.spawn(move || {
+                    let ctx = DistCtx::new(rank, workers, ep);
+                    let mut tr = Session::build_trainer_dist(&spec, Some(&ctx)).unwrap();
+                    let sketch_bytes = tr.emb.opt.memory_bytes() + tr.sm.opt.memory_bytes();
+                    let rep = tr.train_epoch(train, 8).unwrap();
+                    let ppl = tr.eval_ppl(valid, 2).unwrap();
+                    let mut flat = Vec::new();
+                    tr.engine.pack_flat(&mut flat);
+                    (
+                        Snapshot {
+                            loss_bits: rep.mean_loss.to_bits(),
+                            emb: tr.emb.params.clone(),
+                            sm: tr.sm.params.clone(),
+                            bias: tr.sm_bias.params.clone(),
+                            flat,
+                            ppl_bits: ppl.to_bits(),
+                        },
+                        sketch_bytes,
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let reference = Snapshot {
+        loss_bits: r.mean_loss.to_bits(),
+        emb: ref_tr.emb.params.clone(),
+        sm: ref_tr.sm.params.clone(),
+        bias: ref_tr.sm_bias.params.clone(),
+        flat: {
+            let mut flat = Vec::new();
+            ref_tr.engine.pack_flat(&mut flat);
+            flat
+        },
+        ppl_bits: ref_ppl.to_bits(),
+    };
+    let mut total_sketch_bytes = 0usize;
+    for (rank, (out, sketch_bytes)) in outs.iter().enumerate() {
+        assert_snapshots_match(out, &reference, &format!("hybrid rank={rank}"));
+        total_sketch_bytes += sketch_bytes;
+    }
+    // hybrid keeps §9's memory win: per-rank sketch shares sum to the
+    // single-process footprint
+    assert_eq!(total_sketch_bytes, ref_sketch_bytes);
+}
+
+/// Checkpoints are layout-independent in data mode too: a 2-rank
+/// `mode = data` run's checkpoint is byte-identical to the 1-process
+/// global-batch run's, and both resume to bitwise-identical
+/// continuations.
+#[test]
+fn data_checkpoint_is_layout_independent() {
+    let dir = std::env::temp_dir().join(format!("csopt_dp_ck_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck_single = dir.join("single.ck").display().to_string();
+    let ck_dist = dir.join("dist.ck").display().to_string();
+    let corpus = SyntheticCorpus::generate(512, 60_000, 1.05, 0.6, 13);
+    let (train, _, _) = corpus.split(0.08, 0.05);
+
+    let ref_spec = dp_spec("mode = data\nreplicas = 2\n");
+    // 1-process global-batch checkpoint
+    {
+        let mut tr = Session::build_trainer_dist(&ref_spec, None).unwrap();
+        tr.train_epoch(train, 8).unwrap();
+        let mut s = Session::build(&ref_spec).unwrap();
+        s.trainer = tr;
+        s.save_checkpoint(&ck_single).unwrap();
+    }
+    // 2-rank world writes rank 0's view of the same run
+    let workers = 2usize;
+    thread::scope(|scope| {
+        let handles: Vec<_> = mem_world(workers)
+            .into_iter()
+            .enumerate()
+            .map(|(rank, ep)| {
+                let mut spec = dp_spec(&format!(
+                    "mode = data\nrank = {rank}\nworkers = {workers}\nreplicas = 2\n"
+                ));
+                spec.dist.as_mut().unwrap().rank = rank;
+                let (ck_dist, ref_spec) = (ck_dist.clone(), ref_spec.clone());
+                scope.spawn(move || {
+                    let ctx = DistCtx::new(rank, workers, ep);
+                    let mut tr = Session::build_trainer_dist(&spec, Some(&ctx)).unwrap();
+                    tr.train_epoch(train, 8).unwrap();
+                    if rank == 0 {
+                        // record under the reference layout's spec: the
+                        // trained_form is identical (placement stripped)
+                        let mut s = Session::build(&ref_spec).unwrap();
+                        s.trainer = tr;
+                        s.save_checkpoint(&ck_dist).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    let a = Checkpoint::load(&ck_single).unwrap();
+    let b = Checkpoint::load(&ck_dist).unwrap();
+    assert_eq!(a.scalar("step").unwrap(), b.scalar("step").unwrap());
+    assert_eq!(a.blobs, b.blobs, "2-rank data checkpoint differs from global-batch run's");
+
+    // both resume into bitwise-identical single-process continuations
+    let mut conts: Vec<(u64, Vec<f32>)> = Vec::new();
+    for ck in [&ck_dist, &ck_single] {
+        let mut rspec = dp_spec("mode = data\nreplicas = 2\n");
+        rspec.resume = Some(ck.clone());
+        let mut session = Session::build(&rspec).unwrap();
+        let r = session.epoch().unwrap();
+        conts.push((r.mean_loss.to_bits(), session.trainer.emb.params.clone()));
+    }
+    assert_eq!(conts[0].0, conts[1].0, "post-resume loss diverged");
+    assert_eq!(conts[0].1, conts[1].1, "post-resume emb params diverged");
+
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+// ---------------------------------------------------------------------------
+// CLI legs (the real `csopt launch --mode data|hybrid` binary)
+
+/// Pull the `valid ppl <x>` / `final test ppl: <x>` readings out of a
+/// run's stdout (timing fields vary run to run, the ppl numbers must
+/// not).
+fn ppl_readings(stdout: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in stdout.lines() {
+        if let Some(ix) = line.find("valid ppl ") {
+            let rest = &line[ix + "valid ppl ".len()..];
+            out.push(rest.split(',').next().unwrap().trim().to_string());
+        }
+        if let Some(rest) = line.strip_prefix("final test ppl: ") {
+            out.push(rest.trim().to_string());
+        }
+    }
+    out
+}
+
+fn run_csopt(args: &[&str]) -> (String, String) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_csopt"))
+        .args(args)
+        .output()
+        .expect("running csopt");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(out.status.success(), "csopt {args:?} failed:\n{stdout}\n{stderr}");
+    (stdout, stderr)
+}
+
+fn assert_checkpoints_equal(a_path: &str, b_path: &str, what: &str) {
+    let a = Checkpoint::load(a_path).unwrap();
+    let b = Checkpoint::load(b_path).unwrap();
+    assert_eq!(a.scalar("step").unwrap(), b.scalar("step").unwrap(), "{what}: step");
+    assert_eq!(
+        a.blobs.keys().collect::<Vec<_>>(),
+        b.blobs.keys().collect::<Vec<_>>(),
+        "{what}: blob names"
+    );
+    for (name, blob) in &a.blobs {
+        assert_eq!(blob, &b.blobs[name], "{what}: checkpoint blob {name} differs");
+    }
+}
+
+/// The acceptance criterion end to end through the real CLI: a 2-worker
+/// `csopt launch --mode data` run (rank 0 + one forked worker over a
+/// unix socket, distinct batch stripes) is bit-identical — final params
+/// and valid/test perplexities — to the single-process global-batch run
+/// of the same config; `--mode hybrid` matches the same reference with
+/// `shards = 2` execution sharding; and checkpoints resume across
+/// `{mode, workers}` layouts with bitwise-identical continuations.
+#[cfg(unix)]
+#[test]
+fn launch_cli_data_and_hybrid_match_global_batch() {
+    let dir = std::env::temp_dir().join(format!("csopt_dp_launch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("run.conf");
+    std::fs::write(
+        &cfg,
+        "preset = tiny\nepochs = 1\nsteps = 6\neval.windows = 2\n\n\
+         [optim]\nemb = \"cs-adam@v=2,w=48,clean=0.5/4\"\nsm = \"cs-adagrad@w=32\"\n",
+    )
+    .unwrap();
+    let cfg = cfg.display().to_string();
+    let path_of = |name: &str| dir.join(name).display().to_string();
+    let (ck_ref, ck_data, ck_hybrid) = (path_of("ref.ck"), path_of("data.ck"), path_of("hy.ck"));
+
+    // single-process global-batch reference (2 replica stripes, 1 process)
+    let (out_ref, _) = run_csopt(&[
+        "run",
+        &cfg,
+        "--set",
+        &format!("dist.mode=data,dist.replicas=2,checkpoint={ck_ref}"),
+    ]);
+    // 2-worker data-parallel launch of the same global batch
+    let (out_data, _) = run_csopt(&[
+        "launch",
+        &cfg,
+        "--workers",
+        "2",
+        "--mode",
+        "data",
+        "--socket",
+        &path_of("data.sock"),
+        "--set",
+        &format!("checkpoint={ck_data}"),
+    ]);
+    let ppl_ref = ppl_readings(&out_ref);
+    assert!(!ppl_ref.is_empty(), "no ppl readings in:\n{out_ref}");
+    assert_eq!(
+        ppl_ref,
+        ppl_readings(&out_data),
+        "\n--- reference ---\n{out_ref}\n--- launch data ---\n{out_data}"
+    );
+    assert_checkpoints_equal(&ck_ref, &ck_data, "data vs global-batch");
+
+    // hybrid launch vs the shards=2 global-batch reference
+    let (out_ref2, _) = run_csopt(&[
+        "run",
+        &cfg,
+        "--set",
+        &format!("shards=2,dist.mode=data,dist.replicas=2,checkpoint={}", path_of("ref2.ck")),
+    ]);
+    let (out_hybrid, _) = run_csopt(&[
+        "launch",
+        &cfg,
+        "--workers",
+        "2",
+        "--mode",
+        "hybrid",
+        "--socket",
+        &path_of("hy.sock"),
+        "--set",
+        &format!("checkpoint={ck_hybrid}"),
+    ]);
+    assert_eq!(
+        ppl_readings(&out_ref2),
+        ppl_readings(&out_hybrid),
+        "\n--- reference shards=2 ---\n{out_ref2}\n--- launch hybrid ---\n{out_hybrid}"
+    );
+    assert_checkpoints_equal(&path_of("ref2.ck"), &ck_hybrid, "hybrid vs shards=2 global-batch");
+
+    // cross-layout resume: the 2-worker checkpoint resumed in 1 process,
+    // the 1-process checkpoint resumed across 2 workers, and the data
+    // checkpoint resumed under hybrid must all continue identically
+    let (cont_a, _) = run_csopt(&[
+        "run",
+        &cfg,
+        "--set",
+        &format!(
+            "dist.mode=data,dist.replicas=2,resume={ck_data},checkpoint={}",
+            path_of("cont_a.ck")
+        ),
+    ]);
+    let (cont_b, _) = run_csopt(&[
+        "launch",
+        &cfg,
+        "--workers",
+        "2",
+        "--mode",
+        "data",
+        "--socket",
+        &path_of("cont.sock"),
+        "--set",
+        &format!("resume={ck_ref},checkpoint={}", path_of("cont_b.ck")),
+    ]);
+    let (cont_c, _) = run_csopt(&[
+        "launch",
+        &cfg,
+        "--workers",
+        "2",
+        "--mode",
+        "hybrid",
+        "--socket",
+        &path_of("cont_c.sock"),
+        "--set",
+        &format!("resume={ck_data},checkpoint={}", path_of("cont_c.ck")),
+    ]);
+    assert_eq!(ppl_readings(&cont_a), ppl_readings(&cont_b));
+    assert_eq!(ppl_readings(&cont_a), ppl_readings(&cont_c));
+    assert_checkpoints_equal(&path_of("cont_a.ck"), &path_of("cont_b.ck"), "resume a vs b");
+    assert_checkpoints_equal(&path_of("cont_a.ck"), &path_of("cont_c.ck"), "resume a vs c");
+
+    let _ = std::fs::remove_dir_all(dir);
+}
