@@ -168,5 +168,38 @@ fn main() {
         black_box(&cs);
     });
 
+    // comm-sketch wire compressor (DESIGN.md §11): per-step encode of a
+    // tiny-preset-like embedding segment (4096 live coords into a
+    // [d, w] wire sketch) and the mask-bounded top-k decode, at the
+    // default and a widened geometry
+    {
+        use csopt::comm::SegmentSketcher;
+        let mut rng = Rng::new(4);
+        let n_cand = 8192usize;
+        let cand: Vec<u64> = (0..n_cand as u64).collect();
+        let live: Vec<u64> =
+            rng.sample_distinct(n_cand, 4096).into_iter().map(|x| x as u64).collect();
+        let vals: Vec<f32> = (0..live.len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for &(w, d) in &[(1024usize, 3usize), (2048, 3)] {
+            let mut sk = SegmentSketcher::new(d, w, 11);
+            let mut wire = vec![0.0f32; sk.sketch_len()];
+            b.bench(&format!("comm_encode.w{w}.d{d}"), || {
+                wire.iter_mut().for_each(|x| *x = 0.0);
+                sk.encode(&live, &vals, &mut wire);
+                black_box(&wire);
+            });
+        }
+        for &k in &[256usize, 1024] {
+            let mut sk = SegmentSketcher::new(3, 1024, 11);
+            let mut wire = vec![0.0f32; sk.sketch_len()];
+            sk.encode(&live, &vals, &mut wire);
+            let (mut rec_ids, mut rec_vals) = (Vec::new(), Vec::new());
+            b.bench(&format!("comm_decode.k{k}"), || {
+                sk.decode(&wire, 0.9, &cand, k, &mut rec_ids, &mut rec_vals);
+                black_box(&rec_ids);
+            });
+        }
+    }
+
     b.finish();
 }

@@ -1,0 +1,488 @@
+//! Sketched gradient communication with error feedback (DESIGN.md §11):
+//! the count-sketch as a **wire compressor** for `mode = comm-sketch`.
+//!
+//! `mode = data` all-reduces dense `[vocab, d]` gradient segments every
+//! step — untenable at the paper's 800K-row lm1b scale. But the
+//! count-sketch is *linear*: the sketch of a sum is the sum of sketches,
+//! so ranks can sketch their local gradients, `all_reduce_sum` the
+//! (much smaller) sketch buffers, and recover the heavy coordinates of
+//! the **global** gradient from the aggregate — the FetchSGD recipe
+//! (Rothchild et al. 2020) built from this repo's own
+//! [`SketchHasher`]/[`SketchPlan`]/[`median_rows`] primitives.
+//!
+//! Per gradient segment (emb / sm / bias / trunk) a [`SegmentSketcher`]
+//! keeps two persistent `[depth · width]` sketches beside the per-step
+//! encode:
+//!
+//! * **momentum** — `M ← ρ·M + S(g)` accumulates the aggregated
+//!   gradient sketch in sketch space (momentum *inside* the sketch,
+//!   FetchSGD §3);
+//! * **error feedback** — `E ← E + M`, then the recovered top-k
+//!   coordinates' cells are **zeroed out** of `E`. Zeroing (rather than
+//!   subtracting the recovered estimates) removes exactly the mass the
+//!   optimizer consumed *plus* the collision noise in those cells, so
+//!   stale noise cannot recirculate — the FetchSGD stabilization.
+//!
+//! `decode` queries the error sketch at a bounded candidate set (the
+//! activity-mask row union the data-parallel exchange already computes),
+//! takes [`abs_top_k`], and emits a sparse `(ids, vals)` update for the
+//! ordinary clip + optimizer step path.
+//!
+//! **Determinism boundary.** Everything after the exchange is a pure
+//! function of the aggregated sketch bits, and the exchange itself gives
+//! every replica's slot exactly one owner (zeros elsewhere), so the sum
+//! reconstructs each slot bit-for-bit and every rank decodes identical
+//! updates from identical momentum/error state — the lossy mode is still
+//! bitwise-deterministic across process layouts. What is *lost* is only
+//! the gradient information outside the recovered top-k (kept, damped,
+//! in the error sketch).
+
+use crate::sketch::store::median_rows;
+use crate::sketch::{SketchHasher, SketchPlan};
+use crate::util::rng::splitmix64;
+
+/// Indices of the `k` largest-magnitude entries of `vals`, ties broken
+/// toward the **lower index**, returned in ascending index order. Exact
+/// zeros are never selected (a zero recovered coordinate is a no-op
+/// update), so an all-zero input yields an empty set and `k ≥ len`
+/// yields every nonzero index.
+pub fn abs_top_k(vals: &[f32], k: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..vals.len()).filter(|&i| vals[i] != 0.0).collect();
+    order.sort_by(|&a, &b| {
+        vals[b]
+            .abs()
+            .total_cmp(&vals[a].abs())
+            .then_with(|| a.cmp(&b))
+    });
+    order.truncate(k);
+    order.sort_unstable();
+    order
+}
+
+/// `[dist]` comm-sketch geometry: one knob set shared by all four
+/// segment sketchers (each caps its own width via [`segment_width`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GradSketchCfg {
+    /// Sketch depth (`comm_d`).
+    pub depth: usize,
+    /// Sketch width before the per-segment cap (`comm_w`).
+    pub width: usize,
+    /// Coordinates recovered per segment per step (`comm_k`).
+    pub k: usize,
+    /// Sketch-space momentum coefficient `ρ ∈ [0, 1)` (`comm_momentum`).
+    pub momentum: f32,
+    /// Hash-family master seed (segments decorrelate from it).
+    pub seed: u64,
+}
+
+/// The effective sketch width for a segment of `seg_len` coordinates:
+/// the configured width, capped so the sketch never exceeds **half** the
+/// dense segment (`depth · width ≤ seg_len / 2`) — compressing a segment
+/// into something larger than itself would be pure overhead.
+pub fn segment_width(width: usize, depth: usize, seg_len: usize) -> usize {
+    width.min((seg_len / (2 * depth)).max(1))
+}
+
+/// One gradient segment's compressor: a hash family for the per-step
+/// encode plus the persistent momentum and error-feedback sketches the
+/// decode folds the aggregate through. All three share the family — the
+/// error sketch accumulates in the *same* cells the encode writes, which
+/// is what makes `E ← E + M` meaningful.
+pub struct SegmentSketcher {
+    hasher: SketchHasher,
+    depth: usize,
+    width: usize,
+    /// `[depth · width]` sketch-space momentum `M`.
+    momentum: Vec<f32>,
+    /// `[depth · width]` error-feedback accumulator `E`.
+    error: Vec<f32>,
+    /// Plan scratch for ids the caller does not plan itself.
+    plan: SketchPlan,
+    /// Candidate-estimate scratch for `decode_into`.
+    est: Vec<f32>,
+    /// Median scratch (`depth > 3` only).
+    med: Vec<f32>,
+}
+
+impl SegmentSketcher {
+    pub fn new(depth: usize, width: usize, seed: u64) -> SegmentSketcher {
+        assert!(depth >= 1 && width >= 1);
+        SegmentSketcher {
+            hasher: SketchHasher::new(depth, width, seed),
+            depth,
+            width,
+            momentum: vec![0.0; depth * width],
+            error: vec![0.0; depth * width],
+            plan: SketchPlan::new(),
+            est: Vec::new(),
+            med: if depth > 3 { vec![0.0; depth] } else { Vec::new() },
+        }
+    }
+
+    /// Sketch buffer length (`depth · width`) — the segment's wire size.
+    pub fn sketch_len(&self) -> usize {
+        self.depth * self.width
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Build a reusable plan for a fixed id set under this segment's
+    /// family (e.g. the trunk's static `0..flat_len` coordinates).
+    pub fn plan_for(&self, ids: &[u64]) -> SketchPlan {
+        SketchPlan::build(&self.hasher, ids)
+    }
+
+    /// ENCODE: scatter-add `sign_j(id) · val` into `out[j·w + bucket_j(id)]`
+    /// for every depth row, replaying a prebuilt `plan` over `vals`'
+    /// coordinate ids. `out` is the segment's slice of the exchange
+    /// buffer; additive, so the caller zeroes it once per step.
+    pub fn encode_with(&self, plan: &SketchPlan, vals: &[f32], out: &mut [f32]) {
+        debug_assert!(plan.compatible(&self.hasher), "plan from a different family");
+        assert_eq!(plan.k(), vals.len());
+        assert_eq!(out.len(), self.sketch_len());
+        for j in 0..self.depth {
+            let row = &mut out[j * self.width..(j + 1) * self.width];
+            for (t, &v) in vals.iter().enumerate() {
+                row[plan.bucket(j, t)] += plan.sign(j, t) * v;
+            }
+        }
+    }
+
+    /// [`SegmentSketcher::encode_with`] over ad-hoc ids (plans them into
+    /// the internal scratch first).
+    pub fn encode(&mut self, ids: &[u64], vals: &[f32], out: &mut [f32]) {
+        let mut plan = std::mem::take(&mut self.plan);
+        plan.rebuild(&self.hasher, ids);
+        self.encode_with(&plan, vals, out);
+        self.plan = plan;
+    }
+
+    /// DECODE one aggregated (averaged) gradient sketch `agg` into a
+    /// sparse update: fold it through momentum (`M ← ρ·M + agg`) and
+    /// error feedback (`E ← E + M`), query `E` at `cand` (signed median
+    /// over depth), keep the [`abs_top_k`] candidates as
+    /// `(out_ids, out_vals)`, and zero the recovered coordinates' cells
+    /// out of `E`. Deterministic: a pure function of `agg`, the sketch
+    /// state and the candidate list — identical on every rank.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode_with(
+        &mut self,
+        agg: &[f32],
+        momentum_coef: f32,
+        plan: &SketchPlan,
+        cand: &[u64],
+        k: usize,
+        out_ids: &mut Vec<u64>,
+        out_vals: &mut Vec<f32>,
+    ) {
+        debug_assert!(plan.compatible(&self.hasher), "plan from a different family");
+        assert_eq!(agg.len(), self.sketch_len());
+        assert_eq!(plan.k(), cand.len());
+        for ((m, e), &a) in self.momentum.iter_mut().zip(self.error.iter_mut()).zip(agg) {
+            *m = momentum_coef * *m + a;
+            *e += *m;
+        }
+        self.est.clear();
+        self.est.resize(cand.len(), 0.0);
+        let mut rows = [(0usize, 0.0f32); 8];
+        for t in 0..cand.len() {
+            if self.depth <= rows.len() {
+                for (j, row) in rows[..self.depth].iter_mut().enumerate() {
+                    *row = (j * self.width + plan.bucket(j, t), plan.sign(j, t));
+                }
+                median_rows(
+                    &self.error,
+                    1,
+                    &rows[..self.depth],
+                    &mut self.med,
+                    &mut self.est[t..t + 1],
+                );
+            } else {
+                let heap: Vec<(usize, f32)> = (0..self.depth)
+                    .map(|j| (j * self.width + plan.bucket(j, t), plan.sign(j, t)))
+                    .collect();
+                median_rows(&self.error, 1, &heap, &mut self.med, &mut self.est[t..t + 1]);
+            }
+        }
+        out_ids.clear();
+        out_vals.clear();
+        for t in abs_top_k(&self.est, k) {
+            out_ids.push(cand[t]);
+            out_vals.push(self.est[t]);
+            for j in 0..self.depth {
+                self.error[j * self.width + plan.bucket(j, t)] = 0.0;
+            }
+        }
+    }
+
+    /// [`SegmentSketcher::decode_with`] over ad-hoc candidates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn decode(
+        &mut self,
+        agg: &[f32],
+        momentum_coef: f32,
+        cand: &[u64],
+        k: usize,
+        out_ids: &mut Vec<u64>,
+        out_vals: &mut Vec<f32>,
+    ) {
+        let mut plan = std::mem::take(&mut self.plan);
+        plan.rebuild(&self.hasher, cand);
+        self.decode_with(agg, momentum_coef, &plan, cand, k, out_ids, out_vals);
+        self.plan = plan;
+    }
+
+    /// Reset the persistent sketch state (tests).
+    pub fn reset(&mut self) {
+        self.momentum.iter_mut().for_each(|x| *x = 0.0);
+        self.error.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// The error-feedback sketch (diagnostics/tests).
+    pub fn error_sketch(&self) -> &[f32] {
+        &self.error
+    }
+}
+
+/// The four-segment gradient compressor `mode = comm-sketch` trains
+/// through: one [`SegmentSketcher`] per segment (emb, sm, bias, trunk),
+/// each with a decorrelated hash family and a width capped to its
+/// segment's dense length.
+pub struct GradSketcher {
+    pub segs: Vec<SegmentSketcher>,
+    cfg: GradSketchCfg,
+}
+
+impl GradSketcher {
+    /// Build one sketcher per entry of `seg_lens` (dense coordinate
+    /// counts, in segment order).
+    pub fn new(cfg: GradSketchCfg, seg_lens: &[usize]) -> GradSketcher {
+        assert!(cfg.depth >= 1 && cfg.width >= 1 && cfg.k >= 1);
+        assert!((0.0..1.0).contains(&cfg.momentum));
+        let segs = seg_lens
+            .iter()
+            .enumerate()
+            .map(|(i, &len)| {
+                let w = segment_width(cfg.width, cfg.depth, len);
+                SegmentSketcher::new(cfg.depth, w, splitmix64(cfg.seed ^ (i as u64 + 1)))
+            })
+            .collect();
+        GradSketcher { segs, cfg }
+    }
+
+    pub fn cfg(&self) -> &GradSketchCfg {
+        &self.cfg
+    }
+
+    /// Total wire size: the sum of the per-segment sketch lengths.
+    pub fn sketch_len(&self) -> usize {
+        self.segs.iter().map(|s| s.sketch_len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn abs_top_k_handles_ties_overlong_k_and_zeros() {
+        // plain selection, ascending index order
+        assert_eq!(abs_top_k(&[1.0, -5.0, 3.0, 0.5], 2), vec![1, 2]);
+        // magnitude ties break toward the lower index
+        assert_eq!(abs_top_k(&[-2.0, 2.0, 2.0], 1), vec![0]);
+        assert_eq!(abs_top_k(&[-2.0, 2.0, 2.0], 2), vec![0, 1]);
+        // k ≥ len keeps every nonzero entry
+        assert_eq!(abs_top_k(&[1.0, 0.0, -1.0], 10), vec![0, 2]);
+        // exact zeros are never recovered
+        assert_eq!(abs_top_k(&[0.0, 0.0], 2), Vec::<usize>::new());
+        assert_eq!(abs_top_k(&[], 3), Vec::<usize>::new());
+        // k = 0 selects nothing
+        assert_eq!(abs_top_k(&[4.0, 5.0], 0), Vec::<usize>::new());
+    }
+
+    /// Linearity, bitwise: on integer-valued grads (exact f32 arithmetic)
+    /// `sketch(a) + sketch(b) == sketch(a + b)` exactly, across seeds and
+    /// geometries. This is the property the wire protocol rides on.
+    #[test]
+    fn sketch_linearity_exact_on_integer_grids() {
+        check("gradsketch-linearity", 40, 0x11EA, |rng| {
+            let depth = 1 + rng.below(4);
+            let width = 8 + rng.below(120);
+            let n = 1 + rng.below(400);
+            let sk = SegmentSketcher::new(depth, width, rng.next_u64());
+            let ids: Vec<u64> = (0..n as u64).collect();
+            // integer-valued floats keep every sum exact in f32
+            let a: Vec<f32> = (0..n).map(|_| (rng.below(2001) as f32) - 1000.0).collect();
+            let b: Vec<f32> = (0..n).map(|_| (rng.below(2001) as f32) - 1000.0).collect();
+            let plan = sk.plan_for(&ids);
+            let mut sa = vec![0.0f32; sk.sketch_len()];
+            let mut sb = vec![0.0f32; sk.sketch_len()];
+            let mut sab = vec![0.0f32; sk.sketch_len()];
+            sk.encode_with(&plan, &a, &mut sa);
+            sk.encode_with(&plan, &b, &mut sb);
+            let ab: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+            sk.encode_with(&plan, &ab, &mut sab);
+            for (i, ((&x, &y), &z)) in sa.iter().zip(&sb).zip(&sab).enumerate() {
+                if (x + y).to_bits() != z.to_bits() {
+                    return Err(format!("cell {i}: {x} + {y} != {z}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Disjoint supports: when two encoders touch disjoint id sets the
+    /// sum-of-sketches equals the joint sketch bit-for-bit even for
+    /// arbitrary float values — each cell contribution is added in the
+    /// same order, and absent ids contribute exact zeros. This is the
+    /// per-replica-slot ownership argument at sketch level.
+    #[test]
+    fn sketch_sum_of_disjoint_supports_is_bitwise() {
+        check("gradsketch-disjoint", 40, 0xD15, |rng| {
+            let depth = 1 + rng.below(3);
+            let width = 16 + rng.below(64);
+            let sk = SegmentSketcher::new(depth, width, rng.next_u64());
+            let n = 2 + rng.below(200);
+            let split = 1 + rng.below(n - 1);
+            let ids: Vec<u64> = (0..n as u64).collect();
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            // joint encode in id order
+            let mut joint = vec![0.0f32; sk.sketch_len()];
+            sk.encode_with(&sk.plan_for(&ids), &vals, &mut joint);
+            // two disjoint encodes into the SAME buffer, lower ids first
+            let mut parts = vec![0.0f32; sk.sketch_len()];
+            sk.encode_with(&sk.plan_for(&ids[..split]), &vals[..split], &mut parts);
+            sk.encode_with(&sk.plan_for(&ids[split..]), &vals[split..], &mut parts);
+            for (i, (&a, &b)) in joint.iter().zip(&parts).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("cell {i}: joint {a} vs parts {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_recovers_heavy_hitters_and_zeroes_their_cells() {
+        let mut sk = SegmentSketcher::new(3, 256, 7);
+        let n = 64u64;
+        let ids: Vec<u64> = (0..n).collect();
+        // two heavy coordinates over small noise
+        let mut vals = vec![0.01f32; n as usize];
+        vals[5] = 10.0;
+        vals[40] = -8.0;
+        let mut wire = vec![0.0f32; sk.sketch_len()];
+        sk.encode(&ids, &vals, &mut wire);
+        let (mut out_ids, mut out_vals) = (Vec::new(), Vec::new());
+        sk.decode(&wire, 0.0, &ids, 2, &mut out_ids, &mut out_vals);
+        assert_eq!(out_ids, vec![5, 40]);
+        assert!((out_vals[0] - 10.0).abs() < 0.5, "{out_vals:?}");
+        assert!((out_vals[1] + 8.0).abs() < 0.5, "{out_vals:?}");
+        // recovered cells were zeroed: re-query sees ~nothing at 5/40
+        let zero = vec![0.0f32; sk.sketch_len()];
+        let (mut ids2, mut vals2) = (Vec::new(), Vec::new());
+        sk.decode(&zero, 0.0, &ids, 2, &mut ids2, &mut vals2);
+        for (id, v) in ids2.iter().zip(&vals2) {
+            assert!(
+                v.abs() < 0.5,
+                "coordinate {id} still reads {v} after its cells were zeroed"
+            );
+        }
+    }
+
+    #[test]
+    fn error_feedback_carries_unrecovered_mass_forward() {
+        let mut sk = SegmentSketcher::new(3, 512, 3);
+        let ids: Vec<u64> = (0..8).collect();
+        let mut vals = vec![0.0f32; 8];
+        vals[1] = 4.0;
+        vals[6] = 3.0;
+        let mut wire = vec![0.0f32; sk.sketch_len()];
+        sk.encode(&ids, &vals, &mut wire);
+        // k = 1: only coordinate 1 is recovered this step
+        let (mut out_ids, mut out_vals) = (Vec::new(), Vec::new());
+        sk.decode(&wire, 0.0, &ids, 1, &mut out_ids, &mut out_vals);
+        assert_eq!(out_ids, vec![1]);
+        // next step contributes nothing new, yet coordinate 6 surfaces
+        // from the error sketch — the feedback loop at work
+        let zero = vec![0.0f32; sk.sketch_len()];
+        sk.decode(&zero, 0.0, &ids, 1, &mut out_ids, &mut out_vals);
+        assert_eq!(out_ids, vec![6]);
+        assert!((out_vals[0] - 3.0).abs() < 0.5, "{out_vals:?}");
+    }
+
+    #[test]
+    fn momentum_scales_repeated_gradients() {
+        // the same sketch fed twice under ρ = 0.5 must decode to
+        // g·(1 + (1 + ρ)) worth of accumulated update mass overall;
+        // check the second decode sees the momentum-boosted value
+        let mut sk = SegmentSketcher::new(3, 256, 1);
+        let ids: Vec<u64> = (0..4).collect();
+        let vals = vec![2.0f32, 0.0, 0.0, 0.0];
+        let mut wire = vec![0.0f32; sk.sketch_len()];
+        sk.encode(&ids, &vals, &mut wire);
+        let (mut out_ids, mut out_vals) = (Vec::new(), Vec::new());
+        // step 1: M = 2, E = 2 → recover 2, zero cells
+        sk.decode(&wire, 0.5, &ids, 1, &mut out_ids, &mut out_vals);
+        assert_eq!(out_ids, vec![0]);
+        assert!((out_vals[0] - 2.0).abs() < 1e-5);
+        // step 2: M = 0.5·2 + 2 = 3, E = 0 + 3 → recover 3
+        sk.decode(&wire, 0.5, &ids, 1, &mut out_ids, &mut out_vals);
+        assert_eq!(out_ids, vec![0]);
+        assert!((out_vals[0] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn decode_is_deterministic_and_rank_independent() {
+        // two sketchers fed the identical aggregate evolve identically —
+        // the replicated-state invariant every rank relies on
+        let mk = || SegmentSketcher::new(2, 128, 99);
+        let (mut a, mut b) = (mk(), mk());
+        let ids: Vec<u64> = (0..96).collect();
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..5 {
+            let vals: Vec<f32> = (0..96).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut wire = vec![0.0f32; a.sketch_len()];
+            a.encode(&ids, &vals, &mut wire);
+            let (mut ia, mut va) = (Vec::new(), Vec::new());
+            let (mut ib, mut vb) = (Vec::new(), Vec::new());
+            a.decode(&wire, 0.9, &ids, 8, &mut ia, &mut va);
+            b.decode(&wire, 0.9, &ids, 8, &mut ib, &mut vb);
+            assert_eq!(ia, ib);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&va), bits(&vb));
+            assert_eq!(bits(a.error_sketch()), bits(b.error_sketch()));
+        }
+    }
+
+    #[test]
+    fn segment_width_caps_to_half_the_dense_length() {
+        // small segments cap: depth 3 over a 512-coordinate bias segment
+        assert_eq!(segment_width(1024, 3, 512), 85); // 512 / 6
+        // large segments keep the configured width
+        assert_eq!(segment_width(1024, 3, 26912), 1024);
+        // degenerate segments never reach width 0
+        assert_eq!(segment_width(1024, 4, 3), 1);
+    }
+
+    #[test]
+    fn grad_sketcher_builds_decorrelated_segments() {
+        let cfg = GradSketchCfg { depth: 3, width: 64, k: 8, momentum: 0.9, seed: 42 };
+        let gs = GradSketcher::new(cfg, &[16384, 16384, 512, 26912]);
+        assert_eq!(gs.segs.len(), 4);
+        assert_eq!(gs.segs[0].width(), 64);
+        assert_eq!(gs.segs[2].width(), 64); // 512/6 = 85 ≥ 64
+        assert_eq!(gs.sketch_len(), 4 * 3 * 64);
+        // same id must land in different buckets across segments (w.h.p.)
+        let p0 = gs.segs[0].plan_for(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        let p1 = gs.segs[1].plan_for(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_ne!(p0.idx(), p1.idx());
+    }
+}

@@ -30,6 +30,8 @@ pub struct MemComm {
     shared: Arc<MemShared>,
     rank: usize,
     generation: u64,
+    sent: u64,
+    received: u64,
 }
 
 /// Create the `world` connected endpoints of an in-memory transport.
@@ -41,7 +43,13 @@ pub fn mem_world(world: usize) -> Vec<MemComm> {
         world,
     });
     (0..world)
-        .map(|rank| MemComm { shared: Arc::clone(&shared), rank, generation: 0 })
+        .map(|rank| MemComm {
+            shared: Arc::clone(&shared),
+            rank,
+            generation: 0,
+            sent: 0,
+            received: 0,
+        })
         .collect()
 }
 
@@ -85,6 +93,10 @@ impl MemComm {
         }
         shared.cv.notify_all();
         self.generation += 1;
+        // no real wire, but the collective's payload volume is what a
+        // wire would carry: one contribution out, one result back
+        self.sent += 4 * buf.len() as u64;
+        self.received += 4 * buf.len() as u64;
         Ok(())
     }
 }
@@ -104,6 +116,14 @@ impl Transport for MemComm {
 
     fn barrier(&mut self) -> Result<()> {
         self.collective(&mut [])
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
     }
 }
 
@@ -147,6 +167,10 @@ mod tests {
         let mut buf = vec![3.0f32];
         solo.all_reduce_sum(&mut buf).unwrap();
         assert_eq!(buf, vec![3.0]);
+        // counters track the collective payload: a 1-f32 reduction is
+        // 4 bytes each way, the empty barrier adds nothing
+        assert_eq!(solo.bytes_sent(), 4);
+        assert_eq!(solo.bytes_received(), 4);
     }
 
     #[test]

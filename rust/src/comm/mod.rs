@@ -28,6 +28,7 @@
 //!   sketch partition while staying bit-identical to the single-process
 //!   global-batch run.
 
+pub mod gradsketch;
 pub mod mem;
 pub mod partitioned;
 #[cfg(unix)]
@@ -39,6 +40,7 @@ use anyhow::Result;
 
 use crate::sketch::{SketchStore, StoreBuilder};
 
+pub use gradsketch::{GradSketchCfg, GradSketcher, SegmentSketcher};
 pub use mem::{mem_world, MemComm};
 pub use partitioned::PartitionedStore;
 #[cfg(unix)]
@@ -61,6 +63,19 @@ pub trait Transport: Send {
 
     /// Block until every rank reaches the barrier.
     fn barrier(&mut self) -> Result<()>;
+
+    /// Payload bytes this rank has pushed onto the wire so far (frames'
+    /// f32 payloads plus headers where the transport has real frames).
+    /// Dense-vs-sketched wire volume is a *measured* number through
+    /// these, not a claim; the in-process default has no wire.
+    fn bytes_sent(&self) -> u64 {
+        0
+    }
+
+    /// Payload bytes this rank has pulled off the wire so far.
+    fn bytes_received(&self) -> u64 {
+        0
+    }
 }
 
 /// One rank's view of a distributed run: identity plus the shared
@@ -121,6 +136,34 @@ pub fn exchange_sum(comm: Option<&Arc<Mutex<dyn Transport>>>, buf: &mut [f32]) -
     Ok(())
 }
 
+/// [`exchange_sum`] over several buffers in **one** collective: packs
+/// them back-to-back into `scratch`, all-reduces once, and unpacks —
+/// one framed round-trip (one header, one handshake) instead of one per
+/// buffer, which is what the per-step hot path wants when a mode
+/// exchanges logically separate segments (comm-sketch's slot buffer +
+/// activity masks; dense data mode could batch the same way). Buffer
+/// *lengths* must agree across ranks, as with any collective; the
+/// concatenation order is the caller's argument order, identical
+/// everywhere by construction. `comm = None` is the identity.
+pub fn exchange_sum_many(
+    comm: Option<&Arc<Mutex<dyn Transport>>>,
+    bufs: &mut [&mut [f32]],
+    scratch: &mut Vec<f32>,
+) -> Result<()> {
+    let Some(comm) = comm else { return Ok(()) };
+    scratch.clear();
+    for buf in bufs.iter() {
+        scratch.extend_from_slice(buf);
+    }
+    comm.lock().unwrap().all_reduce_sum(scratch)?;
+    let mut off = 0usize;
+    for buf in bufs.iter_mut() {
+        buf.copy_from_slice(&scratch[off..off + buf.len()]);
+        off += buf.len();
+    }
+    Ok(())
+}
+
 /// Average the `replicas` equal `seg_len` segments of
 /// `buf[.. replicas * seg_len]` element-wise into `out` (resized to
 /// `seg_len`), accumulating **in replica order** — `(seg₀ + seg₁ + …) /
@@ -173,6 +216,48 @@ mod tests {
         let before = buf.clone();
         exchange_sum(None, &mut buf).unwrap();
         assert_eq!(buf, before);
+        let mut a = vec![1.0f32, 2.0];
+        let mut b = vec![3.0f32];
+        let mut scratch = Vec::new();
+        exchange_sum_many(None, &mut [&mut a, &mut b], &mut scratch).unwrap();
+        assert_eq!((a, b), (vec![1.0, 2.0], vec![3.0]));
+        assert!(scratch.is_empty());
+    }
+
+    /// Batching buffers into one collective must reduce each of them to
+    /// the same bits as reducing them one by one — and count the same
+    /// payload in ONE round-trip's worth of frames.
+    #[test]
+    fn exchange_many_matches_per_buffer_exchanges_bitwise() {
+        let world = 3usize;
+        let outs: Vec<(Vec<f32>, Vec<f32>, u64)> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(world)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    s.spawn(move || {
+                        let comm: Arc<Mutex<dyn Transport>> = Arc::new(Mutex::new(ep));
+                        let mut a: Vec<f32> = (0..5).map(|i| (rank * 10 + i) as f32).collect();
+                        let mut b: Vec<f32> = (0..3).map(|i| -((rank + i) as f32)).collect();
+                        let mut scratch = Vec::new();
+                        exchange_sum_many(Some(&comm), &mut [&mut a, &mut b], &mut scratch)
+                            .unwrap();
+                        let sent = comm.lock().unwrap().bytes_sent();
+                        (a, b, sent)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // reference: per-buffer reduction over a fresh world
+        let expect_a: Vec<f32> = (0..5).map(|i| (0..world).map(|r| (r * 10 + i) as f32).sum()).collect();
+        let expect_b: Vec<f32> = (0..3).map(|i| -((0..world).map(|r| (r + i) as f32).sum::<f32>())).collect();
+        for (rank, (a, b, sent)) in outs.iter().enumerate() {
+            assert_eq!(a, &expect_a, "rank {rank}");
+            assert_eq!(b, &expect_b, "rank {rank}");
+            // one 8-element collective: 8 · 4 bytes counted once
+            assert_eq!(*sent, 32, "rank {rank}");
+        }
     }
 
     /// The §10 ownership argument at helper level: ranks holding disjoint

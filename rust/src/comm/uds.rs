@@ -41,9 +41,21 @@ pub struct UdsTransport {
     /// to rank 0.
     peers: Vec<UnixStream>,
     scratch: Vec<f32>,
+    /// Frame bytes written / read on this endpoint (headers + payloads),
+    /// including the hello handshake — real wire volume, for the
+    /// dense-vs-sketched traffic comparison.
+    sent: u64,
+    received: u64,
 }
 
-fn write_frame(stream: &mut UnixStream, op: &str, extra: Vec<(&str, Json)>, payload: &[f32]) -> Result<()> {
+/// Write one frame; returns the frame's full byte count
+/// (`4 + header + payload`).
+fn write_frame(
+    stream: &mut UnixStream,
+    op: &str,
+    extra: Vec<(&str, Json)>,
+    payload: &[f32],
+) -> Result<usize> {
     let mut fields = vec![("op", s(op)), ("n", num(payload.len() as f64))];
     fields.extend(extra);
     let header = obj(fields).to_string();
@@ -56,14 +68,19 @@ fn write_frame(stream: &mut UnixStream, op: &str, extra: Vec<(&str, Json)>, payl
         stream.write_all(bytes)?;
     }
     stream.flush()?;
-    Ok(())
+    Ok(4 + header.len() + payload.len() * 4)
 }
 
-/// Read one frame; the payload lands in `payload` (resized to header.n).
+/// Read one frame; the payload lands in `payload` (resized to header.n)
+/// and the header comes back with the frame's full byte count.
 /// `max_n` bounds the wire-supplied element count — a desynced or
 /// corrupt peer must surface as the diagnosable divergence error below,
 /// not as a giant allocation.
-fn read_frame(stream: &mut UnixStream, payload: &mut Vec<f32>, max_n: usize) -> Result<Json> {
+fn read_frame(
+    stream: &mut UnixStream,
+    payload: &mut Vec<f32>,
+    max_n: usize,
+) -> Result<(Json, usize)> {
     let mut len4 = [0u8; 4];
     stream.read_exact(&mut len4).context("reading frame header length")?;
     let hlen = u32::from_le_bytes(len4) as usize;
@@ -88,7 +105,7 @@ fn read_frame(stream: &mut UnixStream, payload: &mut Vec<f32>, max_n: usize) -> 
         };
         stream.read_exact(bytes).context("reading frame payload")?;
     }
-    Ok(header)
+    Ok((header, 4 + hlen + n * 4))
 }
 
 fn frame_op(header: &Json) -> Result<String> {
@@ -137,6 +154,7 @@ impl UdsTransport {
         let mut peers: Vec<Option<UnixStream>> = (1..world).map(|_| None).collect();
         let deadline = Instant::now() + timeout;
         let mut payload = Vec::new();
+        let mut received = 0u64;
         // non-blocking accept loop bounds the wait, so a dead worker fails
         // the run instead of hanging it
         listener.set_nonblocking(true)?;
@@ -156,7 +174,8 @@ impl UdsTransport {
             stream.set_nonblocking(false)?;
             stream.set_read_timeout(Some(timeout))?;
             stream.set_write_timeout(Some(timeout))?;
-            let header = read_frame(&mut stream, &mut payload, 0)?;
+            let (header, nbytes) = read_frame(&mut stream, &mut payload, 0)?;
+            received += nbytes as u64;
             if frame_op(&header)? != "hello" {
                 bail!("worker spoke {header:?} before hello");
             }
@@ -178,6 +197,8 @@ impl UdsTransport {
             world,
             peers: peers.into_iter().map(|p| p.unwrap()).collect(),
             scratch: Vec::new(),
+            sent: 0,
+            received,
         })
     }
 
@@ -212,13 +233,20 @@ impl UdsTransport {
         };
         stream.set_read_timeout(Some(timeout))?;
         stream.set_write_timeout(Some(timeout))?;
-        write_frame(
+        let hello = write_frame(
             &mut stream,
             "hello",
             vec![("rank", num(rank as f64)), ("world", num(world as f64))],
             &[],
         )?;
-        Ok(UdsTransport { rank, world, peers: vec![stream], scratch: Vec::new() })
+        Ok(UdsTransport {
+            rank,
+            world,
+            peers: vec![stream],
+            scratch: Vec::new(),
+            sent: hello as u64,
+            received: 0,
+        })
     }
 
     fn collective(&mut self, op: &str, buf: &mut [f32]) -> Result<()> {
@@ -233,8 +261,9 @@ impl UdsTransport {
             // accumulate in rank order: own partial is already in buf
             for r in 1..self.world {
                 let stream = &mut self.peers[r - 1];
-                let header = read_frame(stream, payload, buf.len())
+                let (header, nbytes) = read_frame(stream, payload, buf.len())
                     .with_context(|| format!("receiving {op} partial from rank {r}"))?;
+                self.received += nbytes as u64;
                 let got = frame_op(&header)?;
                 if got != op || payload.len() != buf.len() {
                     bail!(
@@ -249,15 +278,18 @@ impl UdsTransport {
                 }
             }
             for r in 1..self.world {
-                write_frame(&mut self.peers[r - 1], op, vec![], buf)
+                let nbytes = write_frame(&mut self.peers[r - 1], op, vec![], buf)
                     .with_context(|| format!("sending {op} result to rank {r}"))?;
+                self.sent += nbytes as u64;
             }
         } else {
             let stream = &mut self.peers[0];
-            write_frame(stream, op, vec![], buf)
+            let nbytes = write_frame(stream, op, vec![], buf)
                 .with_context(|| format!("rank {}: sending {op} partial", self.rank))?;
-            let header = read_frame(stream, payload, buf.len())
+            self.sent += nbytes as u64;
+            let (header, nbytes) = read_frame(stream, payload, buf.len())
                 .with_context(|| format!("rank {}: receiving {op} result", self.rank))?;
+            self.received += nbytes as u64;
             let got = frame_op(&header)?;
             if got != op || payload.len() != buf.len() {
                 bail!(
@@ -296,6 +328,14 @@ impl Transport for UdsTransport {
     fn barrier(&mut self) -> Result<()> {
         self.collective("barrier", &mut [])
     }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
 }
 
 #[cfg(test)]
@@ -323,6 +363,9 @@ mod tests {
                     let mut buf = vec![rank as f32; 5];
                     t.all_reduce_sum(&mut buf).unwrap();
                     t.barrier().unwrap();
+                    // hello + partial + barrier out; result + barrier back
+                    assert!(t.bytes_sent() > 5 * 4, "sent {}", t.bytes_sent());
+                    assert!(t.bytes_received() > 5 * 4, "received {}", t.bytes_received());
                     buf
                 }));
             }
@@ -353,8 +396,9 @@ mod tests {
         });
         let (mut stream, _) = listener.accept().unwrap();
         let mut payload = Vec::new();
-        let header = read_frame(&mut stream, &mut payload, 4).unwrap();
+        let (header, nbytes) = read_frame(&mut stream, &mut payload, 4).unwrap();
         h.join().unwrap();
+        assert!(nbytes > 4 + 4 * 4, "frame bytes cover header + payload, got {nbytes}");
         assert_eq!(frame_op(&header).unwrap(), "allreduce");
         assert_eq!(header.req("tag").unwrap().as_f64(), Some(7.0));
         let expect = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-40];

@@ -34,7 +34,7 @@ csopt — Compressing Gradient Optimizers via Count-Sketches (ICML 2019)
 
 USAGE:
   csopt run <config.conf> [--set k=v[,k=v...]]...
-  csopt launch <config.conf> --workers N [--mode sketch|data|hybrid]
+  csopt launch <config.conf> --workers N [--mode sketch|data|hybrid|comm-sketch]
               [--replicas R] [--socket PATH] [--set k=v[,k=v...]]...
   csopt worker            (internal: launched by `csopt launch`, spec on stdin)
   csopt train [--preset tiny|wt2|wt103|lm1b] [--optim SPEC] [--sm-optim SPEC]
@@ -58,6 +58,13 @@ USAGE:
                       --replicas R`, or a [dist] section saying so).
     hybrid            both at once: distinct batches AND width-partitioned
                       sketches — the paper's large-batch deployment shape.
+    comm-sketch       data, with each rank's gradient segments compressed
+                      to count-sketches before the all-reduce; the global
+                      update is recovered from the aggregate with
+                      sketch-space momentum + error feedback ([dist] keys
+                      comm_w comm_d comm_k comm_momentum tune the wire).
+                      Lossy, but bitwise-identical across process layouts
+                      of the same replica count.
 
 RUN CONFIGS (key = value lines; see examples/configs/):
   preset engine epochs steps lr schedule clip seed shards out metrics
@@ -250,12 +257,13 @@ fn cmd_launch(args: &Args) -> Result<()> {
             }
             None
         } else {
+            // keep every non-placement [dist] key (replicas, comm_*) the
+            // config or flags resolved — only the placement is ours
             Some(DistParams {
-                mode: dist.mode,
                 rank: 0,
                 workers: 1,
                 socket: String::new(),
-                replicas: dist.replicas,
+                ..dist.clone()
             })
         };
         spec.validate()?;
@@ -271,11 +279,10 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .into_owned(),
     };
     spec.dist = Some(DistParams {
-        mode: dist.mode,
         rank: 0,
         workers,
         socket: socket.clone(),
-        replicas: dist.replicas,
+        ..dist.clone()
     });
     spec.validate()?;
     println!("# resolved run spec ({path}), launching {workers} processes");
@@ -287,11 +294,10 @@ fn cmd_launch(args: &Args) -> Result<()> {
     let spawn_all = (1..workers).try_for_each(|rank| -> Result<()> {
         let mut child_spec = spec.clone();
         child_spec.dist = Some(DistParams {
-            mode: dist.mode,
             rank,
             workers,
             socket: socket.clone(),
-            replicas: dist.replicas,
+            ..dist.clone()
         });
         let mut child = std::process::Command::new(&exe)
             .arg("worker")

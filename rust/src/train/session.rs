@@ -170,6 +170,12 @@ pub enum DistMode {
     /// Both seams at once: distinct batches *and* width-partitioned
     /// sketches — the paper's large-batch deployment shape (§10).
     Hybrid,
+    /// `data` with the gradient exchange count-sketched on the wire:
+    /// each replica's segments are compressed to per-segment sketches
+    /// before the all-reduce and the global update is recovered from the
+    /// aggregate with sketch-space momentum + error feedback (§11).
+    /// Lossy but bitwise-deterministic across process layouts.
+    CommSketch,
 }
 
 impl DistMode {
@@ -178,7 +184,8 @@ impl DistMode {
             "sketch" => Ok(DistMode::Sketch),
             "data" => Ok(DistMode::Data),
             "hybrid" => Ok(DistMode::Hybrid),
-            other => bail!("unknown [dist] mode {other:?} (sketch | data | hybrid)"),
+            "comm-sketch" | "comm_sketch" => Ok(DistMode::CommSketch),
+            other => bail!("unknown [dist] mode {other:?} (sketch | data | hybrid | comm-sketch)"),
         }
     }
 }
@@ -189,6 +196,7 @@ impl fmt::Display for DistMode {
             DistMode::Sketch => "sketch",
             DistMode::Data => "data",
             DistMode::Hybrid => "hybrid",
+            DistMode::CommSketch => "comm-sketch",
         })
     }
 }
@@ -214,9 +222,18 @@ pub struct DistParams {
     /// connect).
     pub socket: String,
     /// Data-parallel replica count — the global batch is `replicas`
-    /// micro-batches per step (`data`/`hybrid` only; 0 = one replica per
-    /// worker).
+    /// micro-batches per step (`data`/`hybrid`/`comm-sketch` only;
+    /// 0 = one replica per worker).
     pub replicas: usize,
+    /// `comm-sketch` wire width per sketch row, before the per-segment
+    /// half-the-dense-length cap (`mode = comm-sketch` only).
+    pub comm_w: usize,
+    /// `comm-sketch` sketch depth (rows per segment sketch).
+    pub comm_d: usize,
+    /// Coordinates recovered per segment per global step.
+    pub comm_k: usize,
+    /// Sketch-space momentum coefficient `ρ ∈ [0, 1)`.
+    pub comm_momentum: f32,
 }
 
 impl Default for DistParams {
@@ -227,6 +244,10 @@ impl Default for DistParams {
             workers: 1,
             socket: String::new(),
             replicas: 0,
+            comm_w: 1024,
+            comm_d: 3,
+            comm_k: 256,
+            comm_momentum: 0.9,
         }
     }
 }
@@ -346,7 +367,10 @@ const TOP_KEYS: &[&str] = &[
 const MACH_KEYS: &[&str] =
     &["r", "b-meta", "hd", "din", "classes", "batch", "samples", "recall-queries"];
 
-const DIST_KEYS: &[&str] = &["mode", "rank", "workers", "socket", "replicas"];
+const DIST_KEYS: &[&str] = &[
+    "mode", "rank", "workers", "socket", "replicas", "comm_w", "comm_d", "comm_k",
+    "comm_momentum",
+];
 
 /// Levenshtein distance (small strings — run-spec keys).
 fn edit_distance(a: &str, b: &str) -> usize {
@@ -437,9 +461,13 @@ impl RunSpec {
                 "workers" => d.workers = parse_num(key, value)?,
                 "socket" => d.socket = value.to_string(),
                 "replicas" => d.replicas = parse_num(key, value)?,
+                "comm_w" | "comm-w" => d.comm_w = parse_num(key, value)?,
+                "comm_d" | "comm-d" => d.comm_d = parse_num(key, value)?,
+                "comm_k" | "comm-k" => d.comm_k = parse_num(key, value)?,
+                "comm_momentum" | "comm-momentum" => d.comm_momentum = parse_num(key, value)?,
                 other => bail!(
                     "unknown [dist] key {other:?}{} (valid: mode, rank, workers, socket, \
-                     replicas)",
+                     replicas, comm_w, comm_d, comm_k, comm_momentum)",
                     suggest(other, DIST_KEYS.iter().copied())
                 ),
             }
@@ -475,6 +503,10 @@ impl RunSpec {
                         "dist.workers",
                         "dist.socket",
                         "dist.replicas",
+                        "dist.comm_w",
+                        "dist.comm_d",
+                        "dist.comm_k",
+                        "dist.comm_momentum",
                     ])
                 ),
                 TOP_KEYS.join(", ")
@@ -626,6 +658,36 @@ impl RunSpec {
                     );
                 }
             }
+            let dd = DistParams::default();
+            if d.mode == DistMode::CommSketch {
+                if d.comm_d == 0 || d.comm_w == 0 || d.comm_k == 0 {
+                    bail!(
+                        "mode = comm-sketch needs comm_d ≥ 1, comm_w ≥ 1 and comm_k ≥ 1 \
+                         (got d={}, w={}, k={})",
+                        d.comm_d,
+                        d.comm_w,
+                        d.comm_k
+                    );
+                }
+                if !(0.0..1.0).contains(&d.comm_momentum) {
+                    bail!(
+                        "dist.comm_momentum must lie in [0, 1), got {} — 0 disables the \
+                         sketch-space momentum, 1 would never decay it",
+                        d.comm_momentum
+                    );
+                }
+            } else if d.comm_w != dd.comm_w
+                || d.comm_d != dd.comm_d
+                || d.comm_k != dd.comm_k
+                || d.comm_momentum != dd.comm_momentum
+            {
+                bail!(
+                    "dist.comm_* keys configure the mode = comm-sketch wire compressor, but \
+                     mode = {} exchanges dense gradients — drop them, or set \
+                     mode = comm-sketch",
+                    d.mode
+                );
+            }
             match d.mode {
                 DistMode::Sketch => {
                     if d.replicas != 0 {
@@ -637,7 +699,7 @@ impl RunSpec {
                         );
                     }
                 }
-                DistMode::Data | DistMode::Hybrid => {
+                DistMode::Data | DistMode::Hybrid | DistMode::CommSketch => {
                     if self.engine != "rust" {
                         bail!(
                             "mode = {} trains per-replica micro-batches through the rust \
@@ -690,6 +752,8 @@ impl RunSpec {
     /// placement too (it trains the identical trajectory), so `hybrid`
     /// records as `data`. Resuming under any layout of the same global
     /// batch is silent; a genuine trajectory change still warns.
+    /// `comm-sketch` keeps its mode *and* wire geometry: the compressed
+    /// exchange is lossy, so those knobs shape the trajectory.
     pub fn trained_form(&self) -> String {
         let mut s = self.clone();
         s.out = RunSpec::default().out;
@@ -697,6 +761,18 @@ impl RunSpec {
         s.checkpoint = None;
         s.resume = None;
         s.dist = match &self.dist {
+            // comm-sketch is *lossy*: the wire geometry changes the
+            // trajectory, so the mode and its knobs are part of what was
+            // trained (placement still is not)
+            Some(d) if d.mode == DistMode::CommSketch => Some(DistParams {
+                mode: DistMode::CommSketch,
+                replicas: d.replicas_resolved(),
+                comm_w: d.comm_w,
+                comm_d: d.comm_d,
+                comm_k: d.comm_k,
+                comm_momentum: d.comm_momentum,
+                ..DistParams::default()
+            }),
             Some(d) if d.mode != DistMode::Sketch => Some(DistParams {
                 mode: DistMode::Data,
                 replicas: d.replicas_resolved(),
@@ -815,6 +891,18 @@ impl fmt::Display for RunSpec {
             if dp.replicas != dd.replicas {
                 writeln!(f, "replicas = {}", dp.replicas)?;
             }
+            if dp.comm_w != dd.comm_w {
+                writeln!(f, "comm_w = {}", dp.comm_w)?;
+            }
+            if dp.comm_d != dd.comm_d {
+                writeln!(f, "comm_d = {}", dp.comm_d)?;
+            }
+            if dp.comm_k != dd.comm_k {
+                writeln!(f, "comm_k = {}", dp.comm_k)?;
+            }
+            if dp.comm_momentum != dd.comm_momentum {
+                writeln!(f, "comm_momentum = {}", dp.comm_momentum)?;
+            }
         }
         Ok(())
     }
@@ -899,7 +987,11 @@ impl Session {
     ///   trainer owns every replica — the global-batch reference layout;
     /// * `hybrid` — both: partitioned stores *and* the data-parallel
     ///   loop over one shared transport (the collectives interleave in
-    ///   the same deterministic order on every rank).
+    ///   the same deterministic order on every rank);
+    /// * `comm-sketch` — `data` with the gradient exchange count-sketched
+    ///   on the wire (§11): local stores, data-parallel loop, and the
+    ///   trainer's compressor sketching each replica's segments before
+    ///   the (much smaller) all-reduce.
     pub fn build_trainer_dist(spec: &RunSpec, dist: Option<&DistCtx>) -> Result<LmTrainer> {
         spec.validate()?;
         if spec.mach.is_some() {
@@ -930,9 +1022,10 @@ impl Session {
             other => bail!("unknown engine {other:?} (rust|xla)"),
         };
         let mode = spec.dist.as_ref().map_or(DistMode::Sketch, |d| d.mode);
-        // data mode replicates the sketches; sketch/hybrid partition them
+        // data/comm-sketch modes replicate the sketches; sketch/hybrid
+        // partition them
         let store = match mode {
-            DistMode::Data => None,
+            DistMode::Data | DistMode::CommSketch => None,
             DistMode::Sketch | DistMode::Hybrid => {
                 dist.map(|c| c as &dyn crate::sketch::StoreBuilder)
             }
@@ -952,6 +1045,15 @@ impl Session {
                 let (lo, hi) =
                     crate::sketch::plan::width_partition(replicas, d.workers, d.rank);
                 trainer.enable_data_parallel(replicas, lo, hi, dist.map(|c| c.comm()))?;
+                if d.mode == DistMode::CommSketch {
+                    trainer.enable_comm_sketch(crate::comm::GradSketchCfg {
+                        depth: d.comm_d,
+                        width: d.comm_w,
+                        k: d.comm_k,
+                        momentum: d.comm_momentum,
+                        seed: spec.seed ^ 0xC0_55E7,
+                    })?;
+                }
             }
         }
         Ok(trainer)
@@ -1092,9 +1194,30 @@ impl Session {
         let mut metrics = match (&self.spec.metrics, lead) {
             (Some(path), true) => Some(CsvWriter::create(
                 path,
-                &["epoch", "steps", "mean_loss", "train_ppl", "valid_ppl", "secs"],
+                &[
+                    "epoch",
+                    "steps",
+                    "mean_loss",
+                    "train_ppl",
+                    "valid_ppl",
+                    "secs",
+                    "bytes_sent",
+                    "bytes_received",
+                ],
             )?),
             _ => None,
+        };
+        // cumulative transport byte counters (0 without a transport) —
+        // the comm-sketch acceptance metric reads these columns
+        let wire_bytes = |dist: &Option<DistCtx>| -> (u64, u64) {
+            match dist {
+                Some(c) => {
+                    let t = c.comm();
+                    let g = t.lock().unwrap();
+                    (g.bytes_sent(), g.bytes_received())
+                }
+                None => (0, 0),
+            }
         };
         let mut summary =
             RunSummary { epochs: Vec::new(), valid_ppl: Vec::new(), test_ppl: f64::NAN };
@@ -1115,6 +1238,7 @@ impl Session {
                 );
             }
             if let Some(csv) = metrics.as_mut() {
+                let (sent, received) = wire_bytes(&self.dist);
                 csv.row(&[
                     &e,
                     &r.steps,
@@ -1122,6 +1246,8 @@ impl Session {
                     &format!("{:.4}", r.train_ppl),
                     &format!("{vppl:.4}"),
                     &format!("{:.3}", r.secs),
+                    &sent,
+                    &received,
                 ])?;
             }
             summary.epochs.push(r);
@@ -1316,6 +1442,21 @@ sm = cs-adam
             RunSpec::parse("preset = tiny\n\n[dist]\nmode = data\nreplicas = 2\n").unwrap();
         assert_eq!(reference.dist.as_ref().unwrap().replicas_resolved(), 2);
         assert_eq!(RunSpec::parse(&reference.to_string()).unwrap(), reference);
+        // comm-sketch and its wire-geometry keys round-trip (both the
+        // canonical underscore and the dash alias parse)
+        let text = "preset = tiny\n\n[dist]\nmode = comm-sketch\nworkers = 2\n\
+                    socket = /tmp/csopt.sock\ncomm_w = 512\ncomm_d = 5\ncomm_k = 64\n\
+                    comm_momentum = 0.5\n";
+        let spec = RunSpec::parse(text).unwrap();
+        let d = spec.dist.as_ref().unwrap();
+        assert_eq!(d.mode, DistMode::CommSketch);
+        assert_eq!((d.comm_w, d.comm_d, d.comm_k, d.comm_momentum), (512, 5, 64, 0.5));
+        assert_eq!(spec.to_string(), text);
+        assert_eq!(RunSpec::parse(&spec.to_string()).unwrap(), spec);
+        let alias =
+            RunSpec::parse("preset = tiny\n\n[dist]\nmode = comm_sketch\ncomm-k = 64\n").unwrap();
+        assert_eq!(alias.dist.as_ref().unwrap().mode, DistMode::CommSketch);
+        assert_eq!(alias.dist.as_ref().unwrap().comm_k, 64);
     }
 
     /// The incoherent `[dist]` combos `mode` introduces must be rejected
@@ -1342,16 +1483,39 @@ sm = cs-adam
                 "preset = tiny\n\n[optim]\nout = \"adam\"\n\n[mach]\n\n[dist]\nmode = data\n",
                 "[mach]",
             ),
+            // comm-sketch geometry must be sane
+            (
+                "preset = tiny\n\n[dist]\nmode = comm-sketch\ncomm_d = 0\n",
+                "comm_d ≥ 1",
+            ),
+            (
+                "preset = tiny\n\n[dist]\nmode = comm-sketch\ncomm_momentum = 1\n",
+                "[0, 1)",
+            ),
+            // comm_* keys are comm-sketch-only
+            (
+                "preset = tiny\n\n[dist]\nmode = data\ncomm_w = 64\n",
+                "comm-sketch",
+            ),
+            ("preset = tiny\n\n[dist]\ncomm_k = 8\n", "comm-sketch"),
+            // comm-sketch shares data's engine restriction
+            (
+                "preset = tiny\nengine = xla\n\n[dist]\nmode = comm-sketch\n",
+                "engine = rust",
+            ),
         ] {
             let e = format!("{:#}", RunSpec::parse(text).unwrap_err());
             assert!(e.contains(needle), "{text:?}: {e}");
         }
-        // coherent data/hybrid shapes pass
+        // coherent data/hybrid/comm-sketch shapes pass
         for text in [
             "preset = tiny\n\n[dist]\nmode = data\n",
             "preset = tiny\n\n[dist]\nmode = data\nreplicas = 4\n",
             "preset = tiny\n\n[dist]\nmode = data\nworkers = 2\nsocket = /tmp/x\nreplicas = 4\n",
             "preset = tiny\n\n[dist]\nmode = hybrid\nworkers = 2\nsocket = /tmp/x\n",
+            "preset = tiny\n\n[dist]\nmode = comm-sketch\n",
+            "preset = tiny\n\n[dist]\nmode = comm-sketch\nreplicas = 2\ncomm_w = 256\n",
+            "preset = tiny\n\n[dist]\nmode = comm-sketch\nworkers = 2\nsocket = /tmp/x\n",
         ] {
             assert!(RunSpec::parse(text).is_ok(), "{text:?} should validate");
         }
@@ -1374,6 +1538,9 @@ sm = cs-adam
         assert!(e.contains("did you mean \"mode\"?"), "{e}");
         let e = format!("{:#}", spec.set("dist.replica", "2").unwrap_err());
         assert!(e.contains("did you mean \"replicas\"?"), "{e}");
+        // the comm-sketch wire keys are covered too
+        let e = format!("{:#}", spec.set("dist.comm_momentm", "0.5").unwrap_err());
+        assert!(e.contains("did you mean \"comm_momentum\"?"), "{e}");
         // nothing plausible → no suggestion, but still actionable
         let e = format!("{:#}", spec.set("zzqqxx", "1").unwrap_err());
         assert!(e.contains("unknown run-spec key"), "{e}");
@@ -1400,6 +1567,7 @@ sm = cs-adam
             workers: 2,
             socket: "/tmp/csopt.sock".to_string(),
             replicas: 0,
+            ..DistParams::default()
         });
         let data_form = spec.trained_form();
         assert_ne!(data_form, base);
@@ -1415,6 +1583,7 @@ sm = cs-adam
             workers: 1,
             socket: String::new(),
             replicas: 2,
+            ..DistParams::default()
         });
         assert_eq!(spec.trained_form(), data_form);
         // hybrid trains the same trajectory as data (its sketch partition
@@ -1426,8 +1595,33 @@ sm = cs-adam
             workers: 2,
             socket: "/tmp/csopt.sock".to_string(),
             replicas: 2,
+            ..DistParams::default()
         });
         assert_eq!(spec.trained_form(), data_form);
+        // comm-sketch is lossy: its mode and wire geometry stay in the
+        // trained form (still layout-independent), so a resume under a
+        // different wire geometry warns
+        spec.dist = Some(DistParams {
+            mode: DistMode::CommSketch,
+            rank: 1,
+            workers: 2,
+            socket: "/tmp/csopt.sock".to_string(),
+            replicas: 0,
+            comm_w: 512,
+            ..DistParams::default()
+        });
+        let cs_form = spec.trained_form();
+        assert_ne!(cs_form, data_form);
+        assert!(cs_form.contains("mode = comm-sketch"), "{cs_form}");
+        assert!(cs_form.contains("comm_w = 512"), "{cs_form}");
+        assert!(!cs_form.contains("workers"), "{cs_form}");
+        spec.dist = Some(DistParams {
+            mode: DistMode::CommSketch,
+            replicas: 2,
+            comm_w: 512,
+            ..DistParams::default()
+        });
+        assert_eq!(spec.trained_form(), cs_form);
     }
 
     #[test]
@@ -1582,9 +1776,10 @@ sm = cs-adam
             }
             if s.engine == "rust" && s.mach.is_none() && rng.f32() < 0.3 {
                 let workers = 1 + rng.below(4);
-                let mode = match rng.below(3) {
+                let mode = match rng.below(4) {
                     0 => DistMode::Sketch,
                     1 => DistMode::Data,
+                    2 => DistMode::CommSketch,
                     // hybrid needs a real partition (workers ≥ 2)
                     _ if workers > 1 => DistMode::Hybrid,
                     _ => DistMode::Data,
@@ -1598,13 +1793,22 @@ sm = cs-adam
                         _ => workers + rng.below(3),
                     }
                 };
-                s.dist = Some(DistParams {
+                let mut d = DistParams {
                     mode,
                     rank: rng.below(workers),
                     workers,
                     socket: if workers > 1 { "/tmp/csopt-prop.sock".to_string() } else { String::new() },
                     replicas,
-                });
+                    ..DistParams::default()
+                };
+                // wire-geometry keys only exist under comm-sketch
+                if mode == DistMode::CommSketch && rng.f32() < 0.6 {
+                    d.comm_w = 1 + rng.below(2048);
+                    d.comm_d = 1 + rng.below(7);
+                    d.comm_k = 1 + rng.below(512);
+                    d.comm_momentum = rng.below(10) as f32 / 10.0;
+                }
+                s.dist = Some(d);
             }
             let text = s.to_string();
             let back = RunSpec::parse(&text).map_err(|e| format!("parse({text:?}): {e:#}"))?;

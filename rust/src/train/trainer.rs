@@ -16,8 +16,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use crate::comm::gradsketch::{GradSketchCfg, GradSketcher};
 use crate::comm::{self, Transport};
 use crate::config::LmPreset;
+use crate::sketch::SketchPlan;
 use crate::data::batcher::{BatchPlan, BpttBatcher};
 use crate::data::prefetch::PrefetchedBatches;
 use crate::metrics::MemoryLedger;
@@ -115,6 +117,42 @@ struct DataParallel {
     off_bias: usize,
     off_flat: usize,
     flat_len: usize,
+    /// `mode = comm-sketch`: the wire compressor riding on this replica
+    /// loop (`None` = the dense exchange).
+    cs: Option<CommSketch>,
+}
+
+/// `mode = comm-sketch` state (DESIGN.md §11): dense per-replica
+/// gradient segments are replaced on the wire by per-segment count
+/// sketches. The exchange buffer becomes `replicas` slots of
+/// `slot_len = 1 + Σ sketch_len` (slot 0 carries the replica's loss)
+/// followed by the same two `[vocab]` activity masks the dense mode
+/// ships — the masks bound the decode's candidate sets. Each slot has
+/// exactly one owning rank (zeros elsewhere), so the all-reduce
+/// reconstructs every slot bit-for-bit and the replica-order average +
+/// decode is identical on every rank: the lossy mode stays
+/// bitwise-deterministic across process layouts.
+struct CommSketch {
+    gs: GradSketcher,
+    /// `[replicas · slot_len + 2 · vocab]` compressed exchange buffer.
+    buf: Vec<f32>,
+    /// `[slot_len]` replica-order average of the slots.
+    avg: Vec<f32>,
+    slot_len: usize,
+    /// Segment sketch offsets within a slot (emb, sm, bias, trunk).
+    seg_off: [usize; 4],
+    /// The trunk's coordinate set is static (`0..flat_len`), so its
+    /// encode/decode plan is hashed once and replayed every step.
+    trunk_ids: Vec<u64>,
+    trunk_plan: SketchPlan,
+    // encode/decode scratch
+    ids: Vec<u64>,
+    vals: Vec<f32>,
+    scratch: Vec<f32>,
+    rec_ids: [Vec<u64>; 4],
+    rec_vals: [Vec<f32>; 4],
+    row_ids: Vec<u64>,
+    row_grads: Vec<f32>,
 }
 
 /// Loss-curve / report accumulation shared by the single-stream and
@@ -347,6 +385,7 @@ impl LmTrainer {
             off_bias,
             off_flat,
             flat_len,
+            cs: None,
         });
         Ok(())
     }
@@ -354,6 +393,70 @@ impl LmTrainer {
     /// Is this trainer in data-parallel mode?
     pub fn is_data_parallel(&self) -> bool {
         self.dp.is_some()
+    }
+
+    /// Switch the data-parallel exchange to `mode = comm-sketch`
+    /// (DESIGN.md §11): per-replica gradient segments are count-sketched
+    /// before the all-reduce and the global update is recovered from the
+    /// aggregated sketches with sketch-space momentum + error feedback.
+    /// Must be called *after* [`LmTrainer::enable_data_parallel`] — the
+    /// compressor rides on the replica loop.
+    pub fn enable_comm_sketch(&mut self, cfg: GradSketchCfg) -> Result<()> {
+        let p = self.opts.preset;
+        let Some(dp) = self.dp.as_mut() else {
+            bail!("comm-sketch rides on the data-parallel replica loop — enable_data_parallel first");
+        };
+        if cfg.depth == 0 || cfg.width == 0 || cfg.k == 0 {
+            bail!("comm-sketch needs comm_d ≥ 1, comm_w ≥ 1, comm_k ≥ 1");
+        }
+        if !(0.0..1.0).contains(&cfg.momentum) {
+            bail!("comm_momentum must lie in [0, 1), got {}", cfg.momentum);
+        }
+        let seg_lens = [p.vocab * p.de, p.vocab * p.de, p.vocab, dp.flat_len];
+        let gs = GradSketcher::new(cfg, &seg_lens);
+        let mut seg_off = [0usize; 4];
+        let mut off = 1; // slot 0 carries the replica's loss, as in dense mode
+        for (o, s) in seg_off.iter_mut().zip(gs.segs.iter()) {
+            *o = off;
+            off += s.sketch_len();
+        }
+        let slot_len = off;
+        let trunk_ids: Vec<u64> = (0..dp.flat_len as u64).collect();
+        let trunk_plan = gs.segs[3].plan_for(&trunk_ids);
+        // the dense exchange buffer is dead weight under the compressor —
+        // at lm1b scale it is exactly the allocation this mode exists to
+        // avoid — so release it; the dense path is never entered again
+        dp.buf = Vec::new();
+        dp.cs = Some(CommSketch {
+            gs,
+            buf: vec![0.0; dp.replicas * slot_len + 2 * p.vocab],
+            avg: Vec::new(),
+            slot_len,
+            seg_off,
+            trunk_ids,
+            trunk_plan,
+            ids: Vec::new(),
+            vals: Vec::new(),
+            scratch: Vec::new(),
+            rec_ids: Default::default(),
+            rec_vals: Default::default(),
+            row_ids: Vec::new(),
+            row_grads: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Is the data-parallel exchange running through the sketch compressor?
+    pub fn is_comm_sketch(&self) -> bool {
+        self.dp.as_ref().is_some_and(|dp| dp.cs.is_some())
+    }
+
+    /// Bytes one rank ships per gradient exchange under comm-sketch
+    /// (slots + masks, 4 bytes each way per f32) — diagnostics.
+    pub fn comm_sketch_wire_f32s(&self) -> Option<usize> {
+        let dp = self.dp.as_ref()?;
+        let cs = dp.cs.as_ref()?;
+        Some(dp.replicas * cs.slot_len + 2 * self.opts.preset.vocab)
     }
 
     /// One training step on a `[b, T]` window. Returns the batch loss.
@@ -524,6 +627,14 @@ impl LmTrainer {
     /// over the ascending union of active rows — identical on every
     /// rank. Returns the global-batch loss (mean over replicas).
     fn global_step(&mut self, dp: &mut DataParallel, batchers: &mut [BpttBatcher]) -> Result<f64> {
+        if dp.cs.is_some() {
+            // comm-sketch leg: take the compressor out so its borrows
+            // stay disjoint from the replica state
+            let mut cs = dp.cs.take().unwrap();
+            let out = self.global_step_comm_sketch(dp, &mut cs, batchers);
+            dp.cs = Some(cs);
+            return out;
+        }
         let p = self.opts.preset;
         let (vocab, de) = (p.vocab, p.de);
         let mask_base = dp.replicas * dp.seg_len;
@@ -632,6 +743,234 @@ impl LmTrainer {
             lr,
             t,
         );
+        let flat = std::mem::take(&mut self.flat_params);
+        self.engine.unpack_flat(&flat);
+        self.flat_params = flat;
+        Ok(step_loss)
+    }
+
+    /// One global step under `mode = comm-sketch` (DESIGN.md §11): the
+    /// forward/backward and the activity masks are exactly the dense
+    /// path's, but each replica's gradient segments are count-sketched
+    /// into that replica's slot of the (much smaller) exchange buffer.
+    /// After the all-reduce every rank averages the slots in replica
+    /// order, folds each segment's aggregate through its momentum +
+    /// error-feedback sketches, recovers the top-`comm_k` coordinates per
+    /// segment from the mask-bounded candidate set, clips the recovered
+    /// sparse global gradient, and applies the same optimizer step —
+    /// identical bits on every rank.
+    fn global_step_comm_sketch(
+        &mut self,
+        dp: &mut DataParallel,
+        cs: &mut CommSketch,
+        batchers: &mut [BpttBatcher],
+    ) -> Result<f64> {
+        let p = self.opts.preset;
+        let (vocab, de) = (p.vocab, p.de);
+        let CommSketch {
+            gs,
+            buf,
+            avg,
+            slot_len,
+            seg_off,
+            trunk_ids,
+            trunk_plan,
+            ids,
+            vals,
+            scratch,
+            rec_ids,
+            rec_vals,
+            row_ids,
+            row_grads,
+        } = cs;
+        let slot_len = *slot_len;
+        let mask_base = dp.replicas * slot_len;
+        buf.iter_mut().for_each(|x| *x = 0.0);
+
+        // --- local replicas: forward/backward + sketch into owned slots
+        for (i, batcher) in batchers.iter_mut().enumerate() {
+            let r = dp.lo + i;
+            let batch = batcher.next_batch().with_context(|| {
+                format!("replica {r}'s stripe ran out of windows before the step budget")
+            })?;
+            let plan = BatchPlan::build(&batch.x, p.k, 0);
+            let cands = dp.samplers[i].sample(&batch.y);
+            self.emb.gather(&plan.uniq, &mut self.emb_rows);
+            self.sm.gather(&cands.ids, &mut self.sm_rows);
+            self.sm_bias.gather(&cands.ids, &mut self.sm_bias_rows);
+            let h0 = std::mem::take(&mut dp.h[i]);
+            let c0 = std::mem::take(&mut dp.c[i]);
+            let out = self.engine.train_step(
+                &self.emb_rows, &self.sm_rows, &self.sm_bias_rows, &plan.slots, &cands.ytgt,
+                &h0, &c0, &mut self.grads,
+            )?;
+            dp.h[i] = out.h_t;
+            dp.c[i] = out.c_t;
+            let slot = &mut buf[r * slot_len..(r + 1) * slot_len];
+            slot[0] = out.loss as f32;
+            // embedding: live-row gradients at flat coords row·de + c
+            ids.clear();
+            vals.clear();
+            for (t, &id) in plan.uniq[..plan.live].iter().enumerate() {
+                for c in 0..de as u64 {
+                    ids.push(id * de as u64 + c);
+                }
+                vals.extend_from_slice(&self.grads.d_emb_rows[t * de..(t + 1) * de]);
+            }
+            gs.segs[0].encode(ids, vals, &mut slot[seg_off[0]..seg_off[1]]);
+            // softmax rows
+            ids.clear();
+            for &id in &cands.ids {
+                for c in 0..de as u64 {
+                    ids.push(id * de as u64 + c);
+                }
+            }
+            gs.segs[1].encode(
+                ids,
+                &self.grads.d_sm_rows[..cands.ids.len() * de],
+                &mut slot[seg_off[1]..seg_off[2]],
+            );
+            // softmax bias: coordinate = row
+            gs.segs[2].encode(
+                &cands.ids,
+                &self.grads.d_sm_bias[..cands.ids.len()],
+                &mut slot[seg_off[2]..seg_off[3]],
+            );
+            // dense trunk: static coordinate set, prebuilt plan
+            crate::model::LmModel::pack_grads(&self.grads, &mut self.flat_grads);
+            gs.segs[3].encode_with(trunk_plan, &self.flat_grads, &mut slot[seg_off[3]..]);
+            // activity masks (shared tail, as in dense mode): they bound
+            // the decode's candidate sets identically on every rank
+            for &id in plan.live_ids() {
+                buf[mask_base + id as usize] = 1.0;
+            }
+            for &id in &cands.ids {
+                buf[mask_base + vocab + id as usize] = 1.0;
+            }
+        }
+
+        // --- one batched exchange for slots + masks, then replica-order
+        // average of the (bitwise-reconstructed) slots
+        {
+            let (slots, masks) = buf.split_at_mut(mask_base);
+            comm::exchange_sum_many(dp.comm.as_ref(), &mut [slots, masks], scratch)?;
+        }
+        let mut loss_sum = 0.0f64;
+        for r in 0..dp.replicas {
+            loss_sum += buf[r * slot_len] as f64;
+        }
+        let step_loss = loss_sum / dp.replicas as f64;
+        comm::average_replica_segments(&buf[..mask_base], dp.replicas, slot_len, avg);
+
+        // --- decode each segment's aggregate against its mask-bounded
+        // candidate set (momentum + error feedback live inside decode)
+        let cfg = *gs.cfg();
+        // embedding: candidates = union of live rows × their de coords
+        ids.clear();
+        for (row, mark) in buf[mask_base..mask_base + vocab].iter().enumerate() {
+            if *mark > 0.0 {
+                for c in 0..de as u64 {
+                    ids.push(row as u64 * de as u64 + c);
+                }
+            }
+        }
+        gs.segs[0].decode(
+            &avg[seg_off[0]..seg_off[1]],
+            cfg.momentum,
+            ids,
+            cfg.k,
+            &mut rec_ids[0],
+            &mut rec_vals[0],
+        );
+        // softmax rows + bias share the candidate-row union (`dp.ids` is
+        // the dense path's row scratch — reuse it for the bias rows)
+        ids.clear();
+        dp.ids.clear();
+        for (row, mark) in buf[mask_base + vocab..mask_base + 2 * vocab].iter().enumerate() {
+            if *mark > 0.0 {
+                dp.ids.push(row as u64);
+                for c in 0..de as u64 {
+                    ids.push(row as u64 * de as u64 + c);
+                }
+            }
+        }
+        gs.segs[1].decode(
+            &avg[seg_off[1]..seg_off[2]],
+            cfg.momentum,
+            ids,
+            cfg.k,
+            &mut rec_ids[1],
+            &mut rec_vals[1],
+        );
+        gs.segs[2].decode(
+            &avg[seg_off[2]..seg_off[3]],
+            cfg.momentum,
+            &dp.ids,
+            cfg.k,
+            &mut rec_ids[2],
+            &mut rec_vals[2],
+        );
+        // trunk: every flat coordinate is a candidate (static plan)
+        gs.segs[3].decode_with(
+            &avg[seg_off[3]..],
+            cfg.momentum,
+            trunk_plan,
+            trunk_ids,
+            cfg.k,
+            &mut rec_ids[3],
+            &mut rec_vals[3],
+        );
+
+        // --- clip the recovered sparse global gradient (the comm-sketch
+        // counterpart of the dense path's averaged-gradient clip)
+        let [rv_emb, rv_sm, rv_bias, rv_flat] = rec_vals;
+        if self.opts.clip > 0.0 {
+            clip_global_norm(
+                &mut [
+                    rv_emb.as_mut_slice(),
+                    rv_sm.as_mut_slice(),
+                    rv_bias.as_mut_slice(),
+                    rv_flat.as_mut_slice(),
+                ],
+                self.opts.clip,
+            );
+        }
+
+        // --- one identical optimizer step on every rank
+        self.step += 1;
+        let t = self.step;
+        let lr = self.opts.schedule.at(t);
+        // embedding + softmax: regroup recovered flat coords into sparse
+        // row updates (coords arrive in ascending order, so rows dedupe
+        // consecutively); unrecovered coords in a touched row stay zero
+        for (seg, rv, layer) in [
+            (0usize, &*rv_emb, &mut self.emb),
+            (1, &*rv_sm, &mut self.sm),
+        ] {
+            row_ids.clear();
+            row_grads.clear();
+            for (j, &coord) in rec_ids[seg].iter().enumerate() {
+                let row = coord / de as u64;
+                if row_ids.last() != Some(&row) {
+                    row_ids.push(row);
+                    row_grads.resize(row_ids.len() * de, 0.0);
+                }
+                let base = (row_ids.len() - 1) * de;
+                row_grads[base + (coord % de as u64) as usize] = rv[j];
+            }
+            layer.step(row_ids, row_grads, lr, t);
+        }
+        self.sm_bias.step(&rec_ids[2], rv_bias, lr, t);
+        // dense trunk: scatter the recovered coords into a zeroed flat
+        // gradient and take the ordinary dense optimizer step
+        self.flat_grads.iter_mut().for_each(|x| *x = 0.0);
+        self.flat_grads.resize(dp.flat_len, 0.0);
+        for (&c, &v) in rec_ids[3].iter().zip(rv_flat.iter()) {
+            self.flat_grads[c as usize] = v;
+        }
+        self.engine.pack_flat(&mut self.flat_params);
+        self.flat_opt
+            .step(&mut self.flat_params, &self.flat_grads, lr, t);
         let flat = std::mem::take(&mut self.flat_params);
         self.engine.unpack_flat(&flat);
         self.flat_params = flat;
@@ -845,6 +1184,64 @@ mod tests {
         let tiny_stream: Vec<u32> = (0..64u32).collect();
         let e = format!("{:#}", tr.train_epoch(&tiny_stream, 2).unwrap_err());
         assert!(e.contains("too short"), "{e}");
+    }
+
+    fn cs_cfg() -> GradSketchCfg {
+        GradSketchCfg { depth: 3, width: 1024, k: 256, momentum: 0.9, seed: 7 }
+    }
+
+    #[test]
+    fn comm_sketch_requires_data_parallel_and_sane_geometry() {
+        let mut tr = tiny_trainer("cs-adam");
+        let e = format!("{:#}", tr.enable_comm_sketch(cs_cfg()).unwrap_err());
+        assert!(e.contains("enable_data_parallel"), "{e}");
+        tr.enable_data_parallel(2, 0, 2, None).unwrap();
+        assert!(tr.enable_comm_sketch(GradSketchCfg { depth: 0, ..cs_cfg() }).is_err());
+        assert!(tr
+            .enable_comm_sketch(GradSketchCfg { momentum: 1.0, ..cs_cfg() })
+            .is_err());
+        assert!(!tr.is_comm_sketch());
+        tr.enable_comm_sketch(cs_cfg()).unwrap();
+        assert!(tr.is_comm_sketch());
+        // the wire is genuinely smaller than the dense exchange: tiny's
+        // dense seg_len is 44193 f32s per replica slot
+        let wire = tr.comm_sketch_wire_f32s().unwrap();
+        assert!(wire < 2 * 44193 / 4, "wire {wire} f32s is not a ≥4× compression");
+    }
+
+    #[test]
+    fn comm_sketch_single_process_trains_and_is_deterministic() {
+        let corpus = SyntheticCorpus::generate(512, 40_000, 1.05, 0.6, 5);
+        let (train, valid, _) = corpus.split(0.1, 0.05);
+        let run = || {
+            let mut tr = tiny_trainer("cs-adam");
+            tr.enable_data_parallel(2, 0, 2, None).unwrap();
+            tr.enable_comm_sketch(cs_cfg()).unwrap();
+            let r = tr.train_epoch(train, 10).unwrap();
+            (tr, r)
+        };
+        let (mut a, ra) = run();
+        let (b, rb) = run();
+        assert_eq!(ra.steps, 10);
+        assert!(ra.mean_loss.is_finite());
+        // lossy but deterministic: two identical runs agree bit-for-bit
+        assert_eq!(ra.mean_loss.to_bits(), rb.mean_loss.to_bits());
+        assert_eq!(a.emb.params, b.emb.params);
+        assert_eq!(a.sm.params, b.sm.params);
+        let ppl = a.eval_ppl(valid, 4).unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0);
+    }
+
+    #[test]
+    fn comm_sketch_actually_updates_parameters() {
+        let corpus = SyntheticCorpus::generate(512, 40_000, 1.05, 0.6, 6);
+        let (train, _, _) = corpus.split(0.1, 0.05);
+        let mut tr = tiny_trainer("cs-adam");
+        tr.enable_data_parallel(2, 0, 2, None).unwrap();
+        tr.enable_comm_sketch(cs_cfg()).unwrap();
+        let before = tr.emb.params.clone();
+        tr.train_epoch(train, 5).unwrap();
+        assert_ne!(before, tr.emb.params, "recovered sparse updates must move the embedding");
     }
 
     #[test]

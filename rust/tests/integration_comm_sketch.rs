@@ -1,0 +1,391 @@
+//! `mode = comm-sketch` equivalence + compression suite (DESIGN.md §11).
+//!
+//! The mode is **lossy** — the recovered top-k update is not the dense
+//! averaged gradient — so its test story differs from §9/§10's:
+//!
+//! * Property legs pin the *wire protocol's* exactness: count-sketch
+//!   linearity on integer grids, and single-owner replica slots
+//!   surviving a real multi-rank all-reduce bit-for-bit.
+//! * Trainer legs prove the determinism boundary: every multi-rank
+//!   layout decodes the identical aggregate, so the full lossy
+//!   trajectory is bitwise-equal to the `workers = 1` reference layout
+//!   of the same replica count.
+//! * A tolerance leg checks the compressed run still *trains*: its
+//!   final eval perplexity stays within a stated factor of the dense
+//!   `mode = data` run of the same config.
+//! * The CLI legs run the real `csopt launch --mode comm-sketch` and
+//!   read the metrics CSV's transport byte counters: the compressed
+//!   exchange ships ≥ 4× fewer bytes per run than `mode = data`.
+
+use std::thread;
+
+use csopt::comm::{mem_world, DistCtx, SegmentSketcher, Transport};
+use csopt::data::corpus::SyntheticCorpus;
+use csopt::train::checkpoint::Checkpoint;
+use csopt::train::session::{RunSpec, Session};
+use csopt::util::proptest::check;
+
+// ---------------------------------------------------------------------------
+// property legs: the wire protocol's exact substrate
+
+/// Linearity across a *real* collective: each rank sketches its own
+/// integer-valued gradient, the sketches all-reduce, and the aggregate
+/// equals the sketch of the summed gradient bit-for-bit.
+#[test]
+fn sketch_all_reduce_equals_sketch_of_sum() {
+    check("comm-sketch-reduce-linearity", 12, 0xC5_11, |rng| {
+        let world = 2 + rng.below(2);
+        let depth = 1 + rng.below(3);
+        let width = 16 + rng.below(64);
+        let n = 1 + rng.below(200);
+        let seed = rng.next_u64();
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let grads: Vec<Vec<f32>> = (0..world)
+            .map(|_| (0..n).map(|_| (rng.below(2001) as f32) - 1000.0).collect())
+            .collect();
+        // what the ranks produce over the transport
+        let outs: Vec<Vec<f32>> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(world)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut ep)| {
+                    let (ids, vals) = (ids.clone(), grads[rank].clone());
+                    s.spawn(move || {
+                        let mut sk = SegmentSketcher::new(depth, width, seed);
+                        let mut wire = vec![0.0f32; sk.sketch_len()];
+                        sk.encode(&ids, &vals, &mut wire);
+                        ep.all_reduce_sum(&mut wire).unwrap();
+                        wire
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // the sketch of the summed gradient (exact: integer-valued f32)
+        let mut sum = vec![0.0f32; n];
+        for g in &grads {
+            for (s, &x) in sum.iter_mut().zip(g) {
+                *s += x;
+            }
+        }
+        let mut sk = SegmentSketcher::new(depth, width, seed);
+        let mut expect = vec![0.0f32; sk.sketch_len()];
+        sk.encode(&ids, &sum, &mut expect);
+        for (rank, out) in outs.iter().enumerate() {
+            for (i, (&a, &b)) in out.iter().zip(&expect).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "rank {rank} cell {i}: reduced {a} != sketch-of-sum {b} \
+                         (world={world} depth={depth} width={width} n={n})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// trainer legs (in-memory transport, real multi-rank worlds)
+
+fn cs_spec(extra_dist: &str) -> RunSpec {
+    let text = format!(
+        "preset = tiny\nepochs = 1\nsteps = 8\neval.windows = 2\n\n\
+         [optim]\nemb = \"cs-adam@v=2,w=48,clean=0.5/4\"\nsm = \"cs-adagrad@w=32\"\n\n\
+         [dist]\nmode = comm-sketch\n{extra_dist}"
+    );
+    RunSpec::parse(&text).unwrap()
+}
+
+/// One rank's full observable state after an epoch.
+#[derive(PartialEq)]
+struct Snapshot {
+    loss_bits: u64,
+    emb: Vec<f32>,
+    sm: Vec<f32>,
+    bias: Vec<f32>,
+    flat: Vec<f32>,
+    ppl_bits: u64,
+}
+
+fn run_rank(spec: &RunSpec, ctx: Option<&DistCtx>, train: &[u32], valid: &[u32]) -> Snapshot {
+    let mut tr = Session::build_trainer_dist(spec, ctx).unwrap();
+    assert!(tr.is_comm_sketch(), "spec did not wire the compressor in");
+    let r = tr.train_epoch(train, 8).unwrap();
+    let ppl = tr.eval_ppl(valid, 2).unwrap();
+    let mut flat = Vec::new();
+    tr.engine.pack_flat(&mut flat);
+    Snapshot {
+        loss_bits: r.mean_loss.to_bits(),
+        emb: tr.emb.params.clone(),
+        sm: tr.sm.params.clone(),
+        bias: tr.sm_bias.params.clone(),
+        flat,
+        ppl_bits: ppl.to_bits(),
+    }
+}
+
+fn assert_snapshots_match(a: &Snapshot, b: &Snapshot, what: &str) {
+    assert_eq!(a.loss_bits, b.loss_bits, "{what}: mean loss diverged");
+    assert_eq!(a.emb, b.emb, "{what}: emb params diverged");
+    assert_eq!(a.sm, b.sm, "{what}: sm params diverged");
+    assert_eq!(a.bias, b.bias, "{what}: bias params diverged");
+    assert_eq!(a.flat, b.flat, "{what}: trunk params diverged");
+    assert_eq!(a.ppl_bits, b.ppl_bits, "{what}: valid ppl diverged");
+}
+
+/// The determinism boundary: multi-rank comm-sketch trajectories over the
+/// mem transport are bit-identical to the `workers = 1` reference layout
+/// — every rank, for `replicas == workers`, `replicas > workers`
+/// (multi-stripe-per-rank) and 3-rank worlds. Lossy ≠ nondeterministic.
+#[test]
+fn comm_sketch_trainer_matches_reference_layout_bitwise() {
+    let corpus = SyntheticCorpus::generate(512, 60_000, 1.05, 0.6, 21);
+    let (train, valid, _) = corpus.split(0.08, 0.05);
+
+    for (workers, replicas) in [(2usize, 2usize), (2, 4), (3, 3)] {
+        let reference = run_rank(
+            &cs_spec(&format!("replicas = {replicas}\n")),
+            None,
+            train,
+            valid,
+        );
+        let outs: Vec<Snapshot> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(workers)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    let mut spec = cs_spec(&format!(
+                        "rank = {rank}\nworkers = {workers}\nreplicas = {replicas}\n"
+                    ));
+                    spec.dist.as_mut().unwrap().rank = rank;
+                    s.spawn(move || {
+                        let ctx = DistCtx::new(rank, workers, ep);
+                        run_rank(&spec, Some(&ctx), train, valid)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, out) in outs.iter().enumerate() {
+            assert_snapshots_match(
+                out,
+                &reference,
+                &format!("comm-sketch workers={workers} replicas={replicas} rank={rank}"),
+            );
+        }
+    }
+}
+
+/// The compressed exchange is genuinely lossy — its trajectory must
+/// *differ* from dense `mode = data` (guards against the comm-sketch
+/// mode silently falling through to the dense path) — while still
+/// training: final valid/test perplexity within 1.5× of the dense run's.
+#[test]
+fn comm_sketch_trains_within_tolerance_of_dense_data_mode() {
+    let corpus = SyntheticCorpus::generate(512, 120_000, 1.05, 0.6, 22);
+    let (train, valid, _) = corpus.split(0.08, 0.05);
+
+    let dense_spec =
+        RunSpec::parse("preset = tiny\nepochs = 1\nsteps = 30\n\n[optim]\nemb = \"cs-adam\"\nsm = \"cs-adam\"\n\n[dist]\nmode = data\nreplicas = 2\n")
+            .unwrap();
+    let mut dense = Session::build_trainer_dist(&dense_spec, None).unwrap();
+    dense.train_epoch(train, 30).unwrap();
+    let dense_ppl = dense.eval_ppl(valid, 4).unwrap();
+
+    // generous wire geometry: the tolerance leg tests "still trains",
+    // the CLI leg below tests the byte savings
+    let cs_spec =
+        RunSpec::parse("preset = tiny\nepochs = 1\nsteps = 30\n\n[optim]\nemb = \"cs-adam\"\nsm = \"cs-adam\"\n\n[dist]\nmode = comm-sketch\nreplicas = 2\ncomm_w = 2048\ncomm_k = 1024\n")
+            .unwrap();
+    let mut cs = Session::build_trainer_dist(&cs_spec, None).unwrap();
+    cs.train_epoch(train, 30).unwrap();
+    let cs_ppl = cs.eval_ppl(valid, 4).unwrap();
+
+    assert_ne!(
+        dense.emb.params, cs.emb.params,
+        "comm-sketch must not silently train the dense exchange"
+    );
+    assert!(cs_ppl.is_finite() && dense_ppl.is_finite());
+    assert!(
+        cs_ppl <= dense_ppl * 1.5,
+        "compressed run diverged: comm-sketch ppl {cs_ppl:.2} vs data ppl {dense_ppl:.2}"
+    );
+}
+
+/// The mem transport's byte counters show the wire win without any
+/// subprocess machinery: the same 2-rank epoch moves ≥ 4× fewer
+/// gradient-exchange bytes under comm-sketch (default geometry) than
+/// under dense `mode = data`.
+#[test]
+fn comm_sketch_moves_at_least_4x_fewer_bytes() {
+    let corpus = SyntheticCorpus::generate(512, 60_000, 1.05, 0.6, 23);
+    let (train, _, _) = corpus.split(0.08, 0.05);
+
+    let bytes_for = |dist: &str| -> u64 {
+        let spec = {
+            let text = format!(
+                "preset = tiny\nepochs = 1\nsteps = 4\n\n\
+                 [optim]\nemb = \"cs-adam\"\nsm = \"cs-adam\"\n\n[dist]\n{dist}"
+            );
+            RunSpec::parse(&text).unwrap()
+        };
+        let workers = 2usize;
+        let sents: Vec<u64> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(workers)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    let mut spec = spec.clone();
+                    spec.dist.as_mut().unwrap().rank = rank;
+                    s.spawn(move || {
+                        let ctx = DistCtx::new(rank, workers, ep);
+                        let mut tr = Session::build_trainer_dist(&spec, Some(&ctx)).unwrap();
+                        tr.train_epoch(train, 4).unwrap();
+                        let t = ctx.comm();
+                        let sent = t.lock().unwrap().bytes_sent();
+                        drop(tr);
+                        sent
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        sents[0]
+    };
+
+    let dense = bytes_for("mode = data\nworkers = 2\n");
+    let compressed = bytes_for("mode = comm-sketch\nworkers = 2\n");
+    assert!(dense > 0 && compressed > 0);
+    assert!(
+        dense >= 4 * compressed,
+        "dense exchange {dense} bytes vs comm-sketch {compressed} bytes — less than 4×"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CLI legs (the real `csopt launch --mode comm-sketch` binary)
+
+/// Pull the `valid ppl <x>` / `final test ppl: <x>` readings out of a
+/// run's stdout.
+#[cfg(unix)]
+fn ppl_readings(stdout: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in stdout.lines() {
+        if let Some(ix) = line.find("valid ppl ") {
+            let rest = &line[ix + "valid ppl ".len()..];
+            out.push(rest.split(',').next().unwrap().trim().to_string());
+        }
+        if let Some(rest) = line.strip_prefix("final test ppl: ") {
+            out.push(rest.trim().to_string());
+        }
+    }
+    out
+}
+
+#[cfg(unix)]
+fn run_csopt(args: &[&str]) -> (String, String) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_csopt"))
+        .args(args)
+        .output()
+        .expect("running csopt");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(out.status.success(), "csopt {args:?} failed:\n{stdout}\n{stderr}");
+    (stdout, stderr)
+}
+
+/// The cumulative `bytes_sent` of a metrics CSV's final row.
+#[cfg(unix)]
+fn final_bytes_sent(csv_path: &str) -> u64 {
+    let text = std::fs::read_to_string(csv_path).unwrap();
+    let mut lines = text.lines();
+    let header: Vec<&str> = lines.next().expect("csv header").split(',').collect();
+    let col = header
+        .iter()
+        .position(|h| *h == "bytes_sent")
+        .expect("bytes_sent column in the metrics csv");
+    let last = lines.last().expect("csv data row");
+    last.split(',').nth(col).unwrap().parse().unwrap()
+}
+
+/// The acceptance criteria end to end through the real CLI: a 2-worker
+/// `csopt launch --mode comm-sketch` run over a unix socket is
+/// bit-identical (perplexities + checkpoint) to the 1-process reference
+/// layout of the same replica count, and its metrics CSV records ≥ 4×
+/// fewer gradient-exchange bytes than the same launch under
+/// `--mode data`.
+#[cfg(unix)]
+#[test]
+fn launch_cli_comm_sketch_is_deterministic_and_compressed() {
+    let dir = std::env::temp_dir().join(format!("csopt_cs_launch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("run.conf");
+    std::fs::write(
+        &cfg,
+        "preset = tiny\nepochs = 1\nsteps = 6\neval.windows = 2\n\n\
+         [optim]\nemb = \"cs-adam@v=2,w=48,clean=0.5/4\"\nsm = \"cs-adagrad@w=32\"\n",
+    )
+    .unwrap();
+    let cfg = cfg.display().to_string();
+    let path_of = |name: &str| dir.join(name).display().to_string();
+
+    // 1-process reference layout (2 replica stripes, no transport)
+    let (out_ref, _) = run_csopt(&[
+        "run",
+        &cfg,
+        "--set",
+        &format!(
+            "dist.mode=comm-sketch,dist.replicas=2,checkpoint={}",
+            path_of("ref.ck")
+        ),
+    ]);
+    // 2-worker comm-sketch launch of the same run
+    let (out_cs, _) = run_csopt(&[
+        "launch",
+        &cfg,
+        "--workers",
+        "2",
+        "--mode",
+        "comm-sketch",
+        "--socket",
+        &path_of("cs.sock"),
+        "--set",
+        &format!("checkpoint={},metrics={}", path_of("cs.ck"), path_of("cs.csv")),
+    ]);
+    let ppl_ref = ppl_readings(&out_ref);
+    assert!(!ppl_ref.is_empty(), "no ppl readings in:\n{out_ref}");
+    assert_eq!(
+        ppl_ref,
+        ppl_readings(&out_cs),
+        "\n--- reference ---\n{out_ref}\n--- launch comm-sketch ---\n{out_cs}"
+    );
+    let a = Checkpoint::load(&path_of("ref.ck")).unwrap();
+    let b = Checkpoint::load(&path_of("cs.ck")).unwrap();
+    assert_eq!(a.scalar("step").unwrap(), b.scalar("step").unwrap());
+    assert_eq!(a.blobs, b.blobs, "2-worker comm-sketch checkpoint differs from reference");
+
+    // byte criterion: the same launch under dense data mode ships ≥ 4×
+    // the gradient-exchange bytes per run
+    let (_out_data, _) = run_csopt(&[
+        "launch",
+        &cfg,
+        "--workers",
+        "2",
+        "--mode",
+        "data",
+        "--socket",
+        &path_of("data.sock"),
+        "--set",
+        &format!("metrics={}", path_of("data.csv")),
+    ]);
+    let cs_bytes = final_bytes_sent(&path_of("cs.csv"));
+    let data_bytes = final_bytes_sent(&path_of("data.csv"));
+    assert!(cs_bytes > 0, "comm-sketch run recorded no transport traffic");
+    assert!(
+        data_bytes >= 4 * cs_bytes,
+        "data mode sent {data_bytes} bytes, comm-sketch {cs_bytes} — less than 4×"
+    );
+
+    let _ = std::fs::remove_dir_all(dir);
+}
