@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Compare a fresh bench run against the committed baseline ledger.
+
+Both inputs are the JSON-lines files written by ``rust/src/util/bench.rs``
+(one object per row: ``{"name", "mean_ns", "std_ns", "min_ns", "iters"}``).
+Rows present in both files are compared by ``mean_ns``; any shared row whose
+fresh mean exceeds ``threshold`` x the baseline mean is a regression and the
+script exits non-zero. Rows that exist on only one side are reported but are
+not failures (new benches land before their baseline refresh, and retired
+rows linger in old baselines).
+
+Bench appends to its JSON file across runs, so the *last* entry per name
+wins on both sides. The ``_baseline_provenance`` marker row and any row with
+a non-positive mean are ignored.
+
+Typical use (from ``rust/``, mirroring the CI step)::
+
+    CSOPT_BENCH_FAST=1 CSOPT_BENCH_NO_CSV=1 CSOPT_BENCH_JSON=results/bench.json \
+        cargo bench --bench bench_sketch
+    python3 ../python/bench_compare.py --base ../BENCH_sketch.json \
+        --fresh results/bench.json
+
+The committed baseline (``BENCH_sketch.json``) is a reference-host seed, so
+cross-host comparisons should pass a looser ``--threshold`` than the default
+1.3 used for same-host before/after checks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, float]:
+    """Last-entry-wins map of bench name -> mean_ns, skipping marker rows."""
+    rows: dict[str, float] = {}
+    with open(path, "r", encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{lineno}: bad JSON line: {e}")
+            name = obj.get("name", "")
+            mean = obj.get("mean_ns", 0)
+            if not name or "_baseline_provenance" in name:
+                continue
+            if not isinstance(mean, (int, float)) or mean <= 0:
+                continue
+            rows[name] = float(mean)
+    return rows
+
+
+def fmt_ns(ns: float) -> str:
+    if ns >= 1e6:
+        return f"{ns / 1e6:.2f}ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.1f}us"
+    return f"{ns:.0f}ns"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--base", required=True, help="committed baseline JSON-lines file")
+    ap.add_argument("--fresh", required=True, help="freshly produced JSON-lines file")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.3,
+        help="fail when fresh mean > threshold x base mean (default: 1.3)",
+    )
+    args = ap.parse_args()
+
+    base = load_rows(args.base)
+    fresh = load_rows(args.fresh)
+    shared = sorted(set(base) & set(fresh))
+    if not shared:
+        print(f"error: no shared bench rows between {args.base} and {args.fresh}")
+        return 1
+
+    width = max(len(n) for n in shared)
+    regressions = []
+    print(f"{'bench':<{width}}  {'base':>10}  {'fresh':>10}  ratio")
+    for name in shared:
+        ratio = fresh[name] / base[name]
+        flag = ""
+        if ratio > args.threshold:
+            regressions.append((name, ratio))
+            flag = f"  REGRESSION (> {args.threshold:.2f}x)"
+        print(
+            f"{name:<{width}}  {fmt_ns(base[name]):>10}  {fmt_ns(fresh[name]):>10}"
+            f"  {ratio:5.2f}x{flag}"
+        )
+
+    for name in sorted(set(base) - set(fresh)):
+        print(f"note: baseline-only row (not compared): {name}")
+    for name in sorted(set(fresh) - set(base)):
+        print(f"note: fresh-only row (no baseline yet): {name}")
+
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) over {args.threshold:.2f}x:")
+        for name, ratio in regressions:
+            print(f"  {name}: {ratio:.2f}x")
+        return 1
+    print(f"\nok: {len(shared)} shared rows within {args.threshold:.2f}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

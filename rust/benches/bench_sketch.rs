@@ -103,6 +103,45 @@ fn main() {
         });
     }
 
+    // planned-but-unfused reference: hash once, then run the pre-fusion
+    // execution profile — six separate plan traversals (QUERY → Δ →
+    // UPDATE → re-QUERY for each of m and v). The gap between this row
+    // and step/cs_adam below is what the fused kernel (DESIGN.md §12)
+    // buys at fixed hashing cost.
+    {
+        let mut sk_m = CountSketch::new(3, w, d, 7);
+        let mut sk_v = CountMinSketch::new(3, w, d, 7);
+        let plan = sk_m.plan(&ids);
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let mut est_m = vec![0.0f32; k * d];
+        let mut est_v = vec![0.0f32; k * d];
+        let mut delta = vec![0.0f32; k * d];
+        let mut t = 0usize;
+        b.bench("step/cs_adam_unfused.k1152.d256", || {
+            t += 1;
+            sk_m.query_with(&plan, &mut est_m);
+            for i in 0..k * d {
+                delta[i] = (1.0 - b1) * (grads[i] - est_m[i]);
+            }
+            sk_m.update_with(&plan, &delta);
+            sk_m.query_with(&plan, &mut est_m);
+            sk_v.query_with(&plan, &mut est_v);
+            for i in 0..k * d {
+                delta[i] = (1.0 - b2) * (grads[i] * grads[i] - est_v[i]);
+            }
+            sk_v.update_with(&plan, &delta);
+            sk_v.query_with(&plan, &mut est_v);
+            let bc1 = 1.0 - b1.powi(t as i32);
+            let bc2 = 1.0 - b2.powi(t as i32);
+            for i in 0..k * d {
+                let m_hat = est_m[i] / bc1;
+                let v_hat = est_v[i].max(0.0) / bc2;
+                rows[i] -= 1e-3 * m_hat / (v_hat.sqrt() + eps);
+            }
+            black_box(&rows);
+        });
+    }
+
     // planned single-threaded step (must beat the rehash row above), then
     // shard scaling at the same shape (DESIGN.md §5)
     for spec in ["cs-adam@seed=7", "cs-adam@seed=7,shard=2", "cs-adam@seed=7,shard=4"] {
@@ -161,9 +200,40 @@ fn main() {
         }
     }
 
-    // fold + clean maintenance ops
+    // tiny-batch steps: k·d here is below SERIAL_MIN_KD, so the fused
+    // kernel must run its serial fast path — shard4 tracking the
+    // sequential row (instead of paying pool dispatch per phase) is the
+    // regression pin for that threshold
+    {
+        let (k, d, w, n) = (16usize, 32usize, 512usize, 4096usize);
+        let (ids, grads) = ids_and_grads(n, k, d, 5);
+        let mut rows = vec![0.5f32; k * d];
+        let shape = RowShape::new(n, d).with_sketch(3, w);
+        for spec in ["cs-adam@seed=7", "cs-adam@seed=7,shard=4"] {
+            let mut opt = OptimSpec::parse(spec).unwrap().build_row(&shape, None).unwrap();
+            let label = match OptimSpec::parse(spec).unwrap().shards {
+                None => "step/cs_adam.k16.d32".to_string(),
+                Some(s) => format!("step/cs_adam.k16.d32.shard{s}"),
+            };
+            let mut t = 0usize;
+            b.bench(&label, || {
+                t += 1;
+                opt.step_rows(&ids, &mut rows, &grads, 1e-3, t);
+                black_box(&rows);
+            });
+        }
+    }
+
+    // fold + clean maintenance ops (the decay loop is the blocked
+    // `scale_in_place` kernel; w16384 doubles the footprint to keep the
+    // row memory-bound like the training-scale clean)
     let mut cs = CountSketch::new(3, 8192, 256, 9);
     b.bench("maintenance/clean.w8192.d256", || {
+        cs.tensor_mut().scale(0.5);
+        black_box(&cs);
+    });
+    let mut cs = CountSketch::new(3, 16_384, 256, 9);
+    b.bench("maintenance/clean.w16384.d256", || {
         cs.tensor_mut().scale(0.5);
         black_box(&cs);
     });

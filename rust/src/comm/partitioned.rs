@@ -36,7 +36,8 @@ use std::cell::RefCell;
 use std::sync::{Arc, Mutex};
 
 use crate::sketch::plan::width_partition;
-use crate::sketch::store::{median_rows, min_into, Reduce, SketchStore};
+use crate::sketch::store::{axpy_sign, median_rows, min_into, Reduce, SketchStore};
+use crate::sketch::tensor::scale_in_place;
 use crate::sketch::{SketchPlan, SketchTensor};
 
 use super::Transport;
@@ -57,6 +58,9 @@ pub struct PartitionedStore {
     /// Reused `[v, k, d]` gather buffer for queries (the per-step hot
     /// path must not reallocate; `query` takes `&self`, hence the cell).
     gather: RefCell<Vec<f32>>,
+    /// Reused `[k, d]` delta buffer for the `step_fused` fall-back
+    /// decomposition (same no-realloc rule as `gather`).
+    delta_scratch: Vec<f32>,
 }
 
 impl PartitionedStore {
@@ -81,6 +85,7 @@ impl PartitionedStore {
             data: vec![0.0; depth * (hi - lo) * dim],
             comm,
             gather: RefCell::new(Vec::new()),
+            delta_scratch: Vec::new(),
         }
     }
 
@@ -158,17 +163,9 @@ impl SketchStore for PartitionedStore {
                 if b < lo || b >= hi {
                     continue;
                 }
+                let s = if signed { plan.sign(j, t) } else { 1.0 };
                 let delta = &deltas[t * d..(t + 1) * d];
-                let row = self.row_mut(j, b);
-                if signed && plan.sign(j, t) < 0.0 {
-                    for (r, &x) in row.iter_mut().zip(delta) {
-                        *r -= x;
-                    }
-                } else {
-                    for (r, &x) in row.iter_mut().zip(delta) {
-                        *r += x;
-                    }
-                }
+                axpy_sign(self.row_mut(j, b), delta, s);
             }
         }
     }
@@ -232,10 +229,42 @@ impl SketchStore for PartitionedStore {
         }
     }
 
-    fn scale(&mut self, alpha: f32) {
-        for x in &mut self.data {
-            *x *= alpha;
+    /// The fused kernel does not apply here — `step_fused` is the
+    /// **unfused decomposition**, kept as this store's implementation on
+    /// purpose (DESIGN.md §12): QUERY is a collective (`all_reduce_sum`
+    /// over the shared transport), so every rank must finish the gather
+    /// exchange before any rank knows the estimates its delta depends
+    /// on, and again after the update. The fusion window therefore
+    /// closes at each query — a single-rank pass cannot cross it without
+    /// changing the wire protocol. Because the decomposition *is* the
+    /// trait method's reference semantics, distributed runs stay
+    /// bit-identical to local fused runs for free; only the `[k, d]`
+    /// delta scratch is kept across calls so the per-step hot path does
+    /// not reallocate.
+    fn step_fused(
+        &mut self,
+        plan: &SketchPlan,
+        reduce: Reduce,
+        signed: bool,
+        pre_query: bool,
+        make_delta: &mut dyn FnMut(&[f32], &mut [f32]),
+        est: &mut [f32],
+    ) {
+        let kd = plan.k() * self.dim;
+        debug_assert_eq!(est.len(), kd);
+        let mut delta = std::mem::take(&mut self.delta_scratch);
+        delta.resize(kd, 0.0);
+        if pre_query {
+            self.query(plan, reduce, est);
         }
+        make_delta(est, &mut delta);
+        self.update(plan, &delta, signed);
+        self.query(plan, reduce, est);
+        self.delta_scratch = delta;
+    }
+
+    fn scale(&mut self, alpha: f32) {
+        scale_in_place(&mut self.data, alpha);
     }
 
     fn reset(&mut self) {
@@ -274,6 +303,7 @@ impl SketchStore for PartitionedStore {
             data: self.data.clone(),
             comm: Arc::clone(&self.comm),
             gather: RefCell::new(Vec::new()),
+            delta_scratch: Vec::new(),
         })
     }
 }

@@ -7,12 +7,16 @@
 //! implementations agree numerically.
 //!
 //! Every `step_rows` hashes the batch **once** into a [`SketchPlan`]
-//! (DESIGN.md §2) and replays it across the whole
-//! QUERY → UPDATE → re-QUERY sequence — [`CsAdam`] even shares the plan
-//! between its two same-seeded m/v sketches. Sketch work optionally runs
-//! across parallel shards ([`with_shards`](CsAdam::with_shards),
-//! DESIGN.md §5); both optimizations leave every numeric result
-//! bit-identical to the scalar path.
+//! (DESIGN.md §2) and executes the whole QUERY → Δ → UPDATE → re-QUERY
+//! sequence as a **fused** store pass (`step_fused`, DESIGN.md §12): the
+//! optimizer supplies its Δ rule as a closure over the pre-update
+//! estimates, and the store gathers each distinct touched bucket row
+//! once instead of walking the tensor per phase — [`CsAdam`] shares one
+//! plan between its two same-seeded m/v sketches, so its six traversals
+//! collapse to two fused passes. Sketch work optionally runs across
+//! parallel shards ([`with_shards`](CsAdam::with_shards), DESIGN.md §5);
+//! fusion and sharding both leave every numeric result bit-identical to
+//! the scalar path.
 
 use crate::sketch::{CleaningPolicy, CountMinSketch, CountSketch, SketchPlan, StoreBuilder};
 
@@ -24,10 +28,10 @@ use super::RowOptimizer;
 pub struct CsMomentum {
     sk: CountSketch,
     gamma: f32,
-    // scratch (no allocation on the hot path)
+    // scratch (no allocation on the hot path; the Δ buffer lives in the
+    // store's fused scratch, not here)
     plan: SketchPlan,
     est: Vec<f32>,
-    delta: Vec<f32>,
 }
 
 impl CsMomentum {
@@ -37,7 +41,6 @@ impl CsMomentum {
             gamma,
             plan: SketchPlan::new(),
             est: Vec::new(),
-            delta: Vec::new(),
         }
     }
 
@@ -64,16 +67,16 @@ impl RowOptimizer for CsMomentum {
         let d = self.sk.dim();
         let kd = ids.len() * d;
         self.est.resize(kd, 0.0);
-        self.delta.resize(kd, 0.0);
         self.plan.rebuild(self.sk.hasher(), ids);
-        // Δ = (γ−1)·m̂ + g
-        self.sk.query_with(&self.plan, &mut self.est);
-        for i in 0..kd {
-            self.delta[i] = (self.gamma - 1.0) * self.est[i] + grads[i];
-        }
-        self.sk.update_with(&self.plan, &self.delta);
+        // fused QUERY → Δ → UPDATE → re-QUERY with Δ = (γ−1)·m̂ + g
+        let gamma = self.gamma;
+        let make_delta = &mut |est: &[f32], delta: &mut [f32]| {
+            for i in 0..kd {
+                delta[i] = (gamma - 1.0) * est[i] + grads[i];
+            }
+        };
+        self.sk.step_fused(&self.plan, true, make_delta, &mut self.est);
         // m_t = post-update query; x ← x − η·m_t
-        self.sk.query_with(&self.plan, &mut self.est);
         for i in 0..kd {
             rows[i] -= lr * self.est[i];
         }
@@ -103,7 +106,6 @@ pub struct CmsAdagrad {
     pub cleaning: CleaningPolicy,
     plan: SketchPlan,
     est: Vec<f32>,
-    delta: Vec<f32>,
 }
 
 impl CmsAdagrad {
@@ -114,7 +116,6 @@ impl CmsAdagrad {
             cleaning: CleaningPolicy::none(),
             plan: SketchPlan::new(),
             est: Vec::new(),
-            delta: Vec::new(),
         }
     }
 
@@ -146,13 +147,15 @@ impl RowOptimizer for CmsAdagrad {
         let d = self.sk.dim();
         let kd = ids.len() * d;
         self.est.resize(kd, 0.0);
-        self.delta.resize(kd, 0.0);
         self.plan.rebuild(self.sk.hasher(), ids);
-        for i in 0..kd {
-            self.delta[i] = grads[i] * grads[i];
-        }
-        self.sk.update_with(&self.plan, &self.delta);
-        self.sk.query_with(&self.plan, &mut self.est);
+        // fused UPDATE → re-QUERY; no pre-query — Adagrad's Δ = g² does
+        // not depend on the current accumulator estimate
+        let make_delta = &mut |_est: &[f32], delta: &mut [f32]| {
+            for i in 0..kd {
+                delta[i] = grads[i] * grads[i];
+            }
+        };
+        self.sk.step_fused(&self.plan, false, make_delta, &mut self.est);
         for i in 0..kd {
             let v = self.est[i].max(0.0);
             rows[i] -= lr * grads[i] / (v.sqrt() + self.eps);
@@ -181,7 +184,8 @@ impl RowOptimizer for CmsAdagrad {
 /// Algorithm 4 — Count-Sketch Adam: CS for the 1st moment (signed, median),
 /// CMS for the 2nd moment (min), both in `x += Δ` rewrite form. The two
 /// sketches share one hash family by design (the AOT graphs feed one `idx`
-/// tensor to both), so one plan drives all six sketch passes of a step.
+/// tensor to both), so one plan drives both fused passes of a step (six
+/// sketch traversals pre-fusion, DESIGN.md §12).
 pub struct CsAdam {
     sk_m: CountSketch,
     sk_v: CountMinSketch,
@@ -192,7 +196,6 @@ pub struct CsAdam {
     plan: SketchPlan,
     est_m: Vec<f32>,
     est_v: Vec<f32>,
-    delta: Vec<f32>,
 }
 
 impl CsAdam {
@@ -209,7 +212,6 @@ impl CsAdam {
             plan: SketchPlan::new(),
             est_m: Vec::new(),
             est_v: Vec::new(),
-            delta: Vec::new(),
         }
     }
 
@@ -248,25 +250,26 @@ impl RowOptimizer for CsAdam {
         let kd = ids.len() * d;
         self.est_m.resize(kd, 0.0);
         self.est_v.resize(kd, 0.0);
-        self.delta.resize(kd, 0.0);
         // one plan serves both sketches: same depth/width/seed family
         self.plan.rebuild(self.sk_m.hasher(), ids);
 
-        // 1st moment: m += (1−β1)(g − m̂)
-        self.sk_m.query_with(&self.plan, &mut self.est_m);
-        for i in 0..kd {
-            self.delta[i] = (1.0 - self.beta1) * (grads[i] - self.est_m[i]);
-        }
-        self.sk_m.update_with(&self.plan, &self.delta);
-        self.sk_m.query_with(&self.plan, &mut self.est_m);
+        // 1st moment, fused: m += (1−β1)(g − m̂)
+        let b1 = self.beta1;
+        let make_m = &mut |est: &[f32], delta: &mut [f32]| {
+            for i in 0..kd {
+                delta[i] = (1.0 - b1) * (grads[i] - est[i]);
+            }
+        };
+        self.sk_m.step_fused(&self.plan, true, make_m, &mut self.est_m);
 
-        // 2nd moment: v += (1−β2)(g² − v̂)
-        self.sk_v.query_with(&self.plan, &mut self.est_v);
-        for i in 0..kd {
-            self.delta[i] = (1.0 - self.beta2) * (grads[i] * grads[i] - self.est_v[i]);
-        }
-        self.sk_v.update_with(&self.plan, &self.delta);
-        self.sk_v.query_with(&self.plan, &mut self.est_v);
+        // 2nd moment, fused: v += (1−β2)(g² − v̂)
+        let b2 = self.beta2;
+        let make_v = &mut |est: &[f32], delta: &mut [f32]| {
+            for i in 0..kd {
+                delta[i] = (1.0 - b2) * (grads[i] * grads[i] - est[i]);
+            }
+        };
+        self.sk_v.step_fused(&self.plan, true, make_v, &mut self.est_v);
 
         let bc1 = 1.0 - self.beta1.powi(t as i32);
         let bc2 = 1.0 - self.beta2.powi(t as i32);
@@ -307,7 +310,6 @@ pub struct CmsAdamV {
     pub cleaning: CleaningPolicy,
     plan: SketchPlan,
     est_v: Vec<f32>,
-    delta: Vec<f32>,
 }
 
 impl CmsAdamV {
@@ -319,7 +321,6 @@ impl CmsAdamV {
             cleaning: CleaningPolicy::none(),
             plan: SketchPlan::new(),
             est_v: Vec::new(),
-            delta: Vec::new(),
         }
     }
 
@@ -351,15 +352,16 @@ impl RowOptimizer for CmsAdamV {
         let d = self.sk_v.dim();
         let kd = ids.len() * d;
         self.est_v.resize(kd, 0.0);
-        self.delta.resize(kd, 0.0);
         self.plan.rebuild(self.sk_v.hasher(), ids);
 
-        self.sk_v.query_with(&self.plan, &mut self.est_v);
-        for i in 0..kd {
-            self.delta[i] = (1.0 - self.beta2) * (grads[i] * grads[i] - self.est_v[i]);
-        }
-        self.sk_v.update_with(&self.plan, &self.delta);
-        self.sk_v.query_with(&self.plan, &mut self.est_v);
+        // fused: v += (1−β2)(g² − v̂)
+        let b2 = self.beta2;
+        let make_v = &mut |est: &[f32], delta: &mut [f32]| {
+            for i in 0..kd {
+                delta[i] = (1.0 - b2) * (grads[i] * grads[i] - est[i]);
+            }
+        };
+        self.sk_v.step_fused(&self.plan, true, make_v, &mut self.est_v);
 
         let bc2 = 1.0 - self.beta2.powi(t as i32);
         for i in 0..kd {
@@ -400,7 +402,6 @@ pub struct HybridAdamV {
     pub cleaning: CleaningPolicy,
     plan: SketchPlan,
     est_v: Vec<f32>,
-    delta: Vec<f32>,
 }
 
 impl HybridAdamV {
@@ -416,7 +417,6 @@ impl HybridAdamV {
             cleaning: CleaningPolicy::none(),
             plan: SketchPlan::new(),
             est_v: Vec::new(),
-            delta: Vec::new(),
         }
     }
 
@@ -445,15 +445,17 @@ impl RowOptimizer for HybridAdamV {
         let d = self.d;
         let kd = ids.len() * d;
         self.est_v.resize(kd, 0.0);
-        self.delta.resize(kd, 0.0);
         self.plan.rebuild(self.sk_v.hasher(), ids);
 
-        self.sk_v.query_with(&self.plan, &mut self.est_v);
-        for i in 0..kd {
-            self.delta[i] = (1.0 - self.beta2) * (grads[i] * grads[i] - self.est_v[i]);
-        }
-        self.sk_v.update_with(&self.plan, &self.delta);
-        self.sk_v.query_with(&self.plan, &mut self.est_v);
+        // fused CMS pass for the sketched 2nd moment; the dense 1st
+        // moment stays an exact per-id loop below
+        let b2 = self.beta2;
+        let make_v = &mut |est: &[f32], delta: &mut [f32]| {
+            for i in 0..kd {
+                delta[i] = (1.0 - b2) * (grads[i] * grads[i] - est[i]);
+            }
+        };
+        self.sk_v.step_fused(&self.plan, true, make_v, &mut self.est_v);
 
         let bc1 = 1.0 - self.beta1.powi(t as i32);
         let bc2 = 1.0 - self.beta2.powi(t as i32);

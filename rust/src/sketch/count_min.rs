@@ -126,6 +126,23 @@ impl CountMinSketch {
         self.store.query(plan, Reduce::Min, out);
     }
 
+    /// Fused step (DESIGN.md §12): (optional) QUERY → Δ → UPDATE →
+    /// re-QUERY as one pass over `plan`. Deltas are applied unsigned and
+    /// queries reduce by min; otherwise identical to
+    /// [`CountSketch::step_fused`](super::CountSketch::step_fused) —
+    /// including the bitwise equivalence to the unfused sequence.
+    pub fn step_fused(
+        &mut self,
+        plan: &SketchPlan,
+        pre_query: bool,
+        make_delta: &mut dyn FnMut(&[f32], &mut [f32]),
+        est: &mut [f32],
+    ) {
+        assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
+        assert_eq!(est.len(), plan.k() * self.store.dim());
+        self.store.step_fused(plan, Reduce::Min, false, pre_query, make_delta, est);
+    }
+
     /// Convenience: query a single id into a fresh vector.
     pub fn query_one(&self, id: u64) -> Vec<f32> {
         let mut out = vec![0.0; self.dim()];

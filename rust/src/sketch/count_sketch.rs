@@ -130,6 +130,26 @@ impl CountSketch {
         self.store.query(plan, Reduce::SignedMedian, out);
     }
 
+    /// Fused step (DESIGN.md §12): QUERY → optimizer-Δ → UPDATE →
+    /// re-QUERY as **one pass** over `plan` against the store.
+    /// `make_delta(est, delta)` sees the pre-update estimates in `est`
+    /// (left untouched when `pre_query` is false) and must fill the
+    /// whole `[k, d]` delta buffer; on return `est` holds the
+    /// post-update estimates (within-batch collisions folded in).
+    /// Bitwise-identical to the unfused
+    /// `query_with → update_with → query_with` sequence on every store.
+    pub fn step_fused(
+        &mut self,
+        plan: &SketchPlan,
+        pre_query: bool,
+        make_delta: &mut dyn FnMut(&[f32], &mut [f32]),
+        est: &mut [f32],
+    ) {
+        assert!(plan.compatible(&self.hasher), "plan was built under a different hash family");
+        assert_eq!(est.len(), plan.k() * self.store.dim());
+        self.store.step_fused(plan, Reduce::SignedMedian, true, pre_query, make_delta, est);
+    }
+
     /// Convenience: query a single id into a fresh vector.
     pub fn query_one(&self, id: u64) -> Vec<f32> {
         let mut out = vec![0.0; self.dim()];

@@ -1,0 +1,431 @@
+//! Fused step kernels: QUERY → optimizer-Δ → UPDATE → re-QUERY as one
+//! pass over a [`SketchPlan`] (DESIGN.md §12).
+//!
+//! The unfused optimizer step walks the `[v, w, d]` tensor once per
+//! phase — for CsAdam that is six random traversals of a ~20 MB tensor
+//! per step, and the bucket rows a batch touches are scattered across
+//! the full width, so every phase re-misses the same cache lines. The
+//! fused kernel instead *gathers the distinct touched bucket rows once*
+//! into a compact `[n_slots, d]` work buffer (≤ `v·k` rows ≈ 3.4 MB at
+//! the paper's wt103 shape — L2/L3-resident), runs every phase against
+//! that buffer, and scatters the updated rows back in a single pass.
+//! Net: two ordered sweeps over the big tensor plus cache-hot inner
+//! phases, instead of 3–6 random sweeps.
+//!
+//! **Bitwise invariant.** The fused path must produce bit-identical
+//! results to the unfused `query → make_delta → update → query`
+//! decomposition (which `PartitionedStore` still runs — its QUERY
+//! all-reduce is a hard fusion barrier). That holds because:
+//!
+//! * gathered rows are `copy_from_slice` images of the tensor rows, so
+//!   queries read the same bits through [`median_rows`] / [`min_into`] —
+//!   the exact reducers the unfused spans use — in the same depth order;
+//! * UPDATE replays `j`-outer, `t`-inner — the unfused sequential item
+//!   order — so every bucket row receives the same additions in the
+//!   same order (the §5 argument); the sharded variant splits each
+//!   depth's contiguous *slot* range and replays all items per range,
+//!   which is the same tiling argument in slot space;
+//! * the sign is applied as a `±1.0` multiply ([`axpy_sign`]), which is
+//!   bit-equal to the branch add/sub split (`1.0·x` is exact and
+//!   `r + (−x) ≡ r − x` in IEEE-754) while keeping the inner `d`-loop
+//!   branch-free for LLVM's autovectorizer.
+//!
+//! `rust/tests/integration_sketch_plan.rs` pins the invariant across
+//! both sketch families, all five sketched optimizers, shard counts and
+//! the partitioned fall-back.
+
+use crate::util::threadpool::parallel_map;
+
+use super::plan::{query_rows, SketchPlan, SERIAL_MIN_KD};
+use super::store::{axpy_sign, median_rows, min_into, Reduce};
+use super::tensor::SketchTensor;
+
+/// Reusable scratch for [`fused_step_local`]. One per [`LocalStore`]
+/// (`super::store::LocalStore`); all buffers grow to the high-water
+/// geometry and are reused allocation-free afterwards.
+#[derive(Clone, Debug, Default)]
+pub struct FusedScratch {
+    /// Per-cell epoch stamp (`[v·w]`) for O(1) first-touch dedup.
+    stamp: Vec<u32>,
+    /// Per-cell slot index (`[v·w]`), valid where `stamp == epoch`.
+    slot: Vec<u32>,
+    /// Monotonic dedup epoch; a full `stamp` clear handles wrap-around.
+    epoch: u32,
+    /// Distinct touched cells (flat `j·w + b`), ascending after sort —
+    /// ascending cell order *is* depth-major, bucket-ascending order.
+    touched: Vec<usize>,
+    /// Per-(depth, item) slot table (`[v, k]`, plan-major like idx/sign).
+    slot_of: Vec<u32>,
+    /// Cumulative slot count per depth: slots of depth `j` are
+    /// `[depth_end[j-1], depth_end[j])` (with `depth_end[-1] = 0`).
+    depth_end: Vec<usize>,
+    /// Gathered `[n_slots, d]` work buffer the fused phases run against.
+    rows: Vec<f32>,
+    /// `[k, d]` optimizer delta, filled by the caller's closure.
+    delta: Vec<f32>,
+}
+
+impl FusedScratch {
+    /// Assign compact slots to the distinct bucket rows `plan` touches.
+    /// Slots ascend in (depth, bucket) order, so the gathered work buffer
+    /// is depth-major with each depth's slots contiguous (`depth_end`) —
+    /// the blocking geometry every fused phase below relies on. Cost is
+    /// O(v·k log(v·k)) in the touched count, independent of the width.
+    fn assign(&mut self, plan: &SketchPlan, w: usize) -> usize {
+        let (v, k) = (plan.depth(), plan.k());
+        let cells = v * w;
+        if self.stamp.len() < cells {
+            self.stamp.resize(cells, 0);
+            self.slot.resize(cells, 0);
+        }
+        if self.epoch == u32::MAX {
+            // Clear the whole array (not just `[..cells]`): a later call
+            // with a wider geometry must not see stale post-wrap stamps.
+            self.stamp.iter_mut().for_each(|x| *x = 0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+        let epoch = self.epoch;
+        // Pass 1: first-touch collection of the distinct cells.
+        self.touched.clear();
+        for j in 0..v {
+            let base = j * w;
+            for t in 0..k {
+                let cell = base + plan.bucket(j, t);
+                if self.stamp[cell] != epoch {
+                    self.stamp[cell] = epoch;
+                    self.touched.push(cell);
+                }
+            }
+        }
+        // Pass 2: ascending (depth, bucket) slot order.
+        self.touched.sort_unstable();
+        for (s, &cell) in self.touched.iter().enumerate() {
+            self.slot[cell] = s as u32;
+        }
+        self.depth_end.clear();
+        self.depth_end.resize(v, 0);
+        for &cell in &self.touched {
+            self.depth_end[cell / w] += 1;
+        }
+        for j in 1..v {
+            self.depth_end[j] += self.depth_end[j - 1];
+        }
+        // Pass 3: the per-(depth, item) slot table the phases replay.
+        self.slot_of.clear();
+        self.slot_of.reserve(v * k);
+        for j in 0..v {
+            let base = j * w;
+            for t in 0..k {
+                self.slot_of.push(self.slot[base + plan.bucket(j, t)]);
+            }
+        }
+        self.touched.len()
+    }
+}
+
+/// The fused step against a whole-tensor store: gather the distinct
+/// touched rows once, run (optional) pre-QUERY → `make_delta` → UPDATE →
+/// re-QUERY against the compact work buffer, scatter back once.
+///
+/// `make_delta(est, delta)` receives the pre-update estimates (`[k, d]`;
+/// untouched input when `pre_query` is false) and must fill the whole
+/// `[k, d]` delta buffer. On return `est` holds the post-update
+/// re-query. Bitwise-identical to the unfused decomposition — see the
+/// module docs for the argument.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_step_local(
+    tensor: &mut SketchTensor,
+    scratch: &mut FusedScratch,
+    plan: &SketchPlan,
+    reduce: Reduce,
+    signed: bool,
+    pre_query: bool,
+    shards: usize,
+    make_delta: &mut dyn FnMut(&[f32], &mut [f32]),
+    est: &mut [f32],
+) {
+    let d = tensor.dim();
+    let w = tensor.width();
+    let (v, k) = (plan.depth(), plan.k());
+    assert_eq!(est.len(), k * d);
+    if k == 0 {
+        scratch.delta.clear();
+        make_delta(est, &mut scratch.delta);
+        return;
+    }
+    let n_slots = scratch.assign(plan, w);
+    scratch.rows.resize(n_slots * d, 0.0);
+    scratch.delta.resize(k * d, 0.0);
+    // Below the serial threshold the pool dispatch costs more than the
+    // whole step; the phases then run inline (same code, shards = 1).
+    let phase_shards = if shards > 1 && k * d >= SERIAL_MIN_KD { shards } else { 1 };
+
+    let FusedScratch { touched, slot_of, depth_end, rows, delta, .. } = scratch;
+    let touched: &[usize] = touched;
+    let slot_of: &[u32] = slot_of;
+
+    gather(tensor.data(), rows, touched, d, phase_shards);
+    if pre_query {
+        fused_query(rows, d, v, k, slot_of, plan.signs(), reduce, phase_shards, est);
+    }
+    make_delta(est, delta);
+    fused_update(rows, d, v, k, slot_of, plan.signs(), signed, depth_end, delta, phase_shards);
+    fused_query(rows, d, v, k, slot_of, plan.signs(), reduce, phase_shards, est);
+    scatter(tensor.data_mut(), rows, touched, d, phase_shards);
+}
+
+/// Copy the distinct touched rows out of the tensor into the compact
+/// work buffer. `touched` ascends, so the reads sweep the tensor in
+/// address order — a near-sequential pass instead of the unfused path's
+/// random per-phase walks.
+fn gather(data: &[f32], rows: &mut [f32], touched: &[usize], d: usize, shards: usize) {
+    let n_slots = touched.len();
+    if shards <= 1 {
+        for (s, &cell) in touched.iter().enumerate() {
+            rows[s * d..(s + 1) * d].copy_from_slice(&data[cell * d..cell * d + d]);
+        }
+        return;
+    }
+    let chunk = (n_slots + shards - 1) / shards;
+    let slices: Vec<std::sync::Mutex<&mut [f32]>> =
+        rows.chunks_mut(chunk * d).map(std::sync::Mutex::new).collect();
+    parallel_map(slices.len(), shards, |c| {
+        let s0 = c * chunk;
+        let s1 = (s0 + chunk).min(n_slots);
+        let mut guard = slices[c].lock().unwrap();
+        let dst: &mut [f32] = &mut **guard;
+        for s in s0..s1 {
+            let src = touched[s] * d;
+            dst[(s - s0) * d..(s - s0 + 1) * d].copy_from_slice(&data[src..src + d]);
+        }
+    });
+}
+
+/// Write the updated work-buffer rows back to their tensor cells. The
+/// slot layout ascends in cell order, so per-chunk target regions are
+/// disjoint ascending spans of the tensor and tile it with `split_at_mut`.
+fn scatter(data: &mut [f32], rows: &[f32], touched: &[usize], d: usize, shards: usize) {
+    let n_slots = touched.len();
+    if shards <= 1 {
+        for (s, &cell) in touched.iter().enumerate() {
+            data[cell * d..cell * d + d].copy_from_slice(&rows[s * d..(s + 1) * d]);
+        }
+        return;
+    }
+    let chunk = (n_slots + shards - 1) / shards;
+    let nchunks = (n_slots + chunk - 1) / chunk;
+    let mut slices = Vec::with_capacity(nchunks);
+    let mut rest: &mut [f32] = data;
+    let mut consumed = 0usize;
+    for c in 0..nchunks {
+        let s0 = c * chunk;
+        let s1 = (s0 + chunk).min(n_slots);
+        let start = touched[s0] * d;
+        let end = (touched[s1 - 1] + 1) * d;
+        let (_gap, tail) = std::mem::take(&mut rest).split_at_mut(start - consumed);
+        let (mid, tail) = tail.split_at_mut(end - start);
+        slices.push((std::sync::Mutex::new(mid), start));
+        rest = tail;
+        consumed = end;
+    }
+    parallel_map(nchunks, shards, |c| {
+        let s0 = c * chunk;
+        let s1 = (s0 + chunk).min(n_slots);
+        let (mutex, base) = &slices[c];
+        let mut guard = mutex.lock().unwrap();
+        let dst: &mut [f32] = &mut **guard;
+        for s in s0..s1 {
+            let off = touched[s] * d - base;
+            dst[off..off + d].copy_from_slice(&rows[s * d..(s + 1) * d]);
+        }
+    });
+}
+
+/// QUERY against the gathered work buffer: the same [`median_rows`] /
+/// [`min_into`] reducers as the unfused spans, fed `(slot, sign)` pairs
+/// in the same depth order — bit-identical by construction, but every
+/// row read now hits the compact buffer instead of the full tensor.
+#[allow(clippy::too_many_arguments)]
+fn fused_query(
+    rows: &[f32],
+    d: usize,
+    v: usize,
+    k: usize,
+    slot_of: &[u32],
+    signs: &[f32],
+    reduce: Reduce,
+    shards: usize,
+    out: &mut [f32],
+) {
+    match reduce {
+        Reduce::SignedMedian => query_rows(out, d, k, shards, |t0, t1, span| {
+            const INLINE: usize = 8;
+            let mut inline_rows = [(0usize, 0.0f32); INLINE];
+            let mut heap_rows: Vec<(usize, f32)> = Vec::new();
+            let mut median_buf: Vec<f32> = if v > 3 { vec![0.0; v] } else { Vec::new() };
+            for t in t0..t1 {
+                let dst = &mut span[(t - t0) * d..(t - t0 + 1) * d];
+                if v <= INLINE {
+                    for (j, slot) in inline_rows[..v].iter_mut().enumerate() {
+                        *slot = (slot_of[j * k + t] as usize, signs[j * k + t]);
+                    }
+                    median_rows(rows, d, &inline_rows[..v], &mut median_buf, dst);
+                } else {
+                    heap_rows.clear();
+                    for j in 0..v {
+                        heap_rows.push((slot_of[j * k + t] as usize, signs[j * k + t]));
+                    }
+                    median_rows(rows, d, &heap_rows, &mut median_buf, dst);
+                }
+            }
+        }),
+        Reduce::Min => query_rows(out, d, k, shards, |t0, t1, span| {
+            for t in t0..t1 {
+                let dst = &mut span[(t - t0) * d..(t - t0 + 1) * d];
+                let s0 = slot_of[t] as usize;
+                dst.copy_from_slice(&rows[s0 * d..s0 * d + d]);
+                for j in 1..v {
+                    let s = slot_of[j * k + t] as usize;
+                    min_into(dst, &rows[s * d..s * d + d]);
+                }
+            }
+        }),
+    }
+}
+
+/// UPDATE against the gathered work buffer: `j`-outer, `t`-inner — the
+/// unfused sequential item order, so every row accumulates the same
+/// additions in the same order. The sharded variant tiles each depth's
+/// contiguous slot range into balanced sub-ranges; each task replays all
+/// `k` items of its depth and applies those whose slot lands in its
+/// range — the §5 tiling argument transplanted to slot space, so
+/// sharded == sequential bitwise.
+#[allow(clippy::too_many_arguments)]
+fn fused_update(
+    rows: &mut [f32],
+    d: usize,
+    v: usize,
+    k: usize,
+    slot_of: &[u32],
+    signs: &[f32],
+    signed: bool,
+    depth_end: &[usize],
+    delta: &[f32],
+    shards: usize,
+) {
+    if shards <= 1 {
+        for j in 0..v {
+            for t in 0..k {
+                let s = slot_of[j * k + t] as usize;
+                let sg = if signed { signs[j * k + t] } else { 1.0 };
+                axpy_sign(&mut rows[s * d..(s + 1) * d], &delta[t * d..(t + 1) * d], sg);
+            }
+        }
+        return;
+    }
+    let per_depth = ((shards + v - 1) / v).max(1);
+    let mut ranges: Vec<(usize, usize, usize)> = Vec::with_capacity(v * per_depth);
+    for j in 0..v {
+        let lo = if j == 0 { 0 } else { depth_end[j - 1] };
+        let len = depth_end[j] - lo;
+        let parts = per_depth.min(len).max(1);
+        let base = len / parts;
+        let rem = len % parts;
+        let mut s = lo;
+        for r in 0..parts {
+            let step = base + usize::from(r < rem);
+            ranges.push((j, s, s + step));
+            s += step;
+        }
+    }
+    let mut slices = Vec::with_capacity(ranges.len());
+    let mut rest: &mut [f32] = rows;
+    for &(_, lo, hi) in &ranges {
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut((hi - lo) * d);
+        slices.push(std::sync::Mutex::new(head));
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty());
+    parallel_map(ranges.len(), shards, |i| {
+        let (j, lo, hi) = ranges[i];
+        let mut guard = slices[i].lock().unwrap();
+        let slice: &mut [f32] = &mut **guard;
+        for t in 0..k {
+            let s = slot_of[j * k + t] as usize;
+            if s >= lo && s < hi {
+                let sg = if signed { signs[j * k + t] } else { 1.0 };
+                let dst = &mut slice[(s - lo) * d..(s - lo + 1) * d];
+                axpy_sign(dst, &delta[t * d..(t + 1) * d], sg);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::hash::SketchHasher;
+    use super::*;
+
+    fn plan_for(v: usize, w: usize, ids: &[u64], seed: u64) -> SketchPlan {
+        SketchPlan::build(&SketchHasher::new(v, w, seed), ids)
+    }
+
+    #[test]
+    fn assign_slots_ascend_depth_major() {
+        let (v, w, k) = (3usize, 17usize, 11usize);
+        let ids: Vec<u64> = (0..k as u64).map(|i| i % 5).collect(); // duplicate-heavy
+        let plan = plan_for(v, w, &ids, 42);
+        let mut scratch = FusedScratch::default();
+        let n = scratch.assign(&plan, w);
+        assert_eq!(n, scratch.touched.len());
+        // ascending, distinct, and depth_end tiles the slots by depth
+        for s in 1..n {
+            assert!(scratch.touched[s - 1] < scratch.touched[s]);
+        }
+        assert_eq!(scratch.depth_end[v - 1], n);
+        for (s, &cell) in scratch.touched.iter().enumerate() {
+            let j = cell / w;
+            let lo = if j == 0 { 0 } else { scratch.depth_end[j - 1] };
+            assert!(s >= lo && s < scratch.depth_end[j], "slot {s} depth {j}");
+        }
+        // slot_of round-trips to the plan's cells
+        for j in 0..v {
+            for t in 0..k {
+                let s = scratch.slot_of[j * plan.k() + t] as usize;
+                assert_eq!(scratch.touched[s], j * w + plan.bucket(j, t));
+            }
+        }
+    }
+
+    #[test]
+    fn assign_survives_epoch_wrap() {
+        let (v, w) = (2usize, 8usize);
+        let plan = plan_for(v, w, &[1, 2, 3], 7);
+        let mut scratch = FusedScratch::default();
+        let n0 = scratch.assign(&plan, w);
+        scratch.epoch = u32::MAX;
+        let n1 = scratch.assign(&plan, w);
+        assert_eq!(n0, n1);
+        assert_eq!(scratch.epoch, 1);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let d = 3usize;
+        let data: Vec<f32> = (0..30).map(|i| i as f32).collect();
+        let touched = [1usize, 4, 7, 9];
+        for shards in [1usize, 3] {
+            let mut rows = vec![0.0f32; touched.len() * d];
+            gather(&data, &mut rows, &touched, d, shards);
+            for (s, &cell) in touched.iter().enumerate() {
+                assert_eq!(&rows[s * d..(s + 1) * d], &data[cell * d..cell * d + d]);
+            }
+            let mut out = vec![-1.0f32; data.len()];
+            scatter(&mut out, &rows, &touched, d, shards);
+            for (s, &cell) in touched.iter().enumerate() {
+                assert_eq!(&out[cell * d..cell * d + d], &rows[s * d..(s + 1) * d]);
+            }
+        }
+    }
+}

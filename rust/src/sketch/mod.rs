@@ -17,6 +17,9 @@
 //!   tensor: whole-tensor in-process state ([`store::LocalStore`]) or one
 //!   width partition of an N-process run (`comm::PartitionedStore`,
 //!   DESIGN.md §9).
+//! * [`fused`] — the fused step kernel (QUERY → Δ → UPDATE → re-QUERY as
+//!   one gather/scatter pass over a plan, DESIGN.md §12); the fast path
+//!   behind [`SketchStore::step_fused`] on local stores.
 //! * [`count_sketch`] — signed median-of-depth estimator (UPDATE/QUERY).
 //! * [`count_min`] — unsigned min-of-depth estimator (UPDATE/QUERY).
 //! * [`clean`] — the periodic cleaning heuristic for CMS overestimates
@@ -25,6 +28,7 @@
 pub mod clean;
 pub mod count_min;
 pub mod count_sketch;
+pub mod fused;
 pub mod hash;
 pub mod plan;
 pub mod store;

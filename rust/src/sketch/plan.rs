@@ -28,6 +28,17 @@ use super::tensor::SketchTensor;
 /// stay cache-resident.
 pub(crate) const MATERIALIZE_CHUNK: usize = 1024;
 
+/// Below this `k·d` work volume the sharded executors (and the fused
+/// kernel) run inline regardless of the configured shard count: the
+/// pool dispatch — a queue push plus a condvar wake per task,
+/// single-digit µs — costs more than the entire kernel at tiny batches
+/// (a k=16, d=32 step is ~512 f32 ops per phase). 8192 keeps the
+/// `cs_update_small` k256·d32 bench rows on the sharded path, where the
+/// persistent pool already breaks even, while k16·d32-sized steps stay
+/// serial; the `step/cs_adam.k16.d32.shard4` bench row pins the
+/// no-regression claim.
+pub(crate) const SERIAL_MIN_KD: usize = 8192;
+
 /// Precomputed `[depth, k]` buckets and signs for one id batch under one
 /// hash family. Reusable across every UPDATE/QUERY of the batch and across
 /// all sketches sharing the family (e.g. CsAdam's m/v pair).
@@ -166,15 +177,17 @@ pub fn width_partition(width: usize, world: usize, rank: usize) -> (usize, usize
 /// caller always executes work itself while helpers join). Sharding
 /// therefore degrades gracefully on tiny sketches instead of paying the
 /// old tens-of-µs spawn+join tax; `bench_sketch`'s `cs_update_small`
-/// rows track exactly this. Callers pick the shard count, and 1 is
-/// always safe.
+/// rows track exactly this. Below [`SERIAL_MIN_KD`] even the dispatch
+/// is skipped and the call runs inline — bit-identical either way, so
+/// the threshold is purely a latency knob. Callers pick the shard
+/// count, and 1 is always safe.
 pub(crate) fn update_rows<F>(tensor: &mut SketchTensor, plan: &SketchPlan, shards: usize, apply: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {
     let d = tensor.dim();
     let (v, k) = (plan.depth(), plan.k());
-    if shards <= 1 || k == 0 {
+    if shards <= 1 || k == 0 || k * d < SERIAL_MIN_KD {
         for j in 0..v {
             for t in 0..k {
                 apply(j, t, tensor.row_mut(j, plan.bucket(j, t)));
@@ -220,7 +233,7 @@ where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {
     assert_eq!(out.len(), k * d);
-    if shards <= 1 || k < 2 * shards {
+    if shards <= 1 || k < 2 * shards || k * d < SERIAL_MIN_KD {
         span(0, k, out);
         return;
     }

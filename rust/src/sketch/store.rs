@@ -23,6 +23,7 @@
 //! store only distinguishes `signed` updates and the [`Reduce`] mode, so
 //! both sketch flavors drive either store implementation.
 
+use super::fused::{fused_step_local, FusedScratch};
 use super::plan::{query_rows, update_rows, SketchPlan};
 use super::tensor::SketchTensor;
 
@@ -62,6 +63,37 @@ pub trait SketchStore: Send + std::fmt::Debug {
     /// QUERY: fill `out` (`[k, d]`) with per-item estimates under the
     /// given depth reduction.
     fn query(&self, plan: &SketchPlan, reduce: Reduce, out: &mut [f32]);
+
+    /// Fused step: QUERY → optimizer-Δ → UPDATE → re-QUERY as one store
+    /// pass over `plan` (DESIGN.md §12). `make_delta(est, delta)`
+    /// receives the pre-update estimates (`[k, d]`; left untouched when
+    /// `pre_query` is false) and must fill the entire `[k, d]` delta
+    /// buffer (its prior contents are unspecified); on return `est`
+    /// holds the post-update re-query.
+    ///
+    /// Every implementation must stay **bitwise identical** to this
+    /// default — the unfused decomposition, which is the method's
+    /// reference semantics. [`LocalStore`] overrides it with the
+    /// gather-once fused kernel of [`super::fused`];
+    /// `PartitionedStore` keeps the decomposition because its QUERY
+    /// all-reduce is a collective no fused single-rank pass can cross.
+    fn step_fused(
+        &mut self,
+        plan: &SketchPlan,
+        reduce: Reduce,
+        signed: bool,
+        pre_query: bool,
+        make_delta: &mut dyn FnMut(&[f32], &mut [f32]),
+        est: &mut [f32],
+    ) {
+        let mut delta = vec![0.0f32; plan.k() * self.dim()];
+        if pre_query {
+            self.query(plan, reduce, est);
+        }
+        make_delta(est, &mut delta);
+        self.update(plan, &delta, signed);
+        self.query(plan, reduce, est);
+    }
 
     /// Multiply every cell by `alpha` (the §4 cleaning primitive).
     fn scale(&mut self, alpha: f32);
@@ -117,11 +149,18 @@ impl StoreBuilder for LocalBuilder {
 pub struct LocalStore {
     tensor: SketchTensor,
     shards: usize,
+    /// Scratch for the §12 fused step kernel (grows to the high-water
+    /// batch geometry, then reused allocation-free).
+    fused: FusedScratch,
 }
 
 impl LocalStore {
     pub fn zeros(depth: usize, width: usize, dim: usize) -> LocalStore {
-        LocalStore { tensor: SketchTensor::zeros(depth, width, dim), shards: 1 }
+        LocalStore {
+            tensor: SketchTensor::zeros(depth, width, dim),
+            shards: 1,
+            fused: FusedScratch::default(),
+        }
     }
 }
 
@@ -155,25 +194,35 @@ impl SketchStore for LocalStore {
         debug_assert_eq!(deltas.len(), plan.k() * d);
         if signed {
             update_rows(&mut self.tensor, plan, self.shards, |j, t, row| {
-                let delta = &deltas[t * d..(t + 1) * d];
-                if plan.sign(j, t) >= 0.0 {
-                    for (r, &x) in row.iter_mut().zip(delta) {
-                        *r += x;
-                    }
-                } else {
-                    for (r, &x) in row.iter_mut().zip(delta) {
-                        *r -= x;
-                    }
-                }
+                axpy_sign(row, &deltas[t * d..(t + 1) * d], plan.sign(j, t));
             });
         } else {
             update_rows(&mut self.tensor, plan, self.shards, |_j, t, row| {
-                let delta = &deltas[t * d..(t + 1) * d];
-                for (r, &x) in row.iter_mut().zip(delta) {
-                    *r += x;
-                }
+                axpy_sign(row, &deltas[t * d..(t + 1) * d], 1.0);
             });
         }
+    }
+
+    fn step_fused(
+        &mut self,
+        plan: &SketchPlan,
+        reduce: Reduce,
+        signed: bool,
+        pre_query: bool,
+        make_delta: &mut dyn FnMut(&[f32], &mut [f32]),
+        est: &mut [f32],
+    ) {
+        fused_step_local(
+            &mut self.tensor,
+            &mut self.fused,
+            plan,
+            reduce,
+            signed,
+            pre_query,
+            self.shards,
+            make_delta,
+            est,
+        );
     }
 
     fn query(&self, plan: &SketchPlan, reduce: Reduce, out: &mut [f32]) {
@@ -268,6 +317,28 @@ fn cms_query_span(tensor: &SketchTensor, plan: &SketchPlan, t0: usize, t1: usize
     }
 }
 
+/// `row[i] += s · delta[i]` with `s ∈ {+1.0, −1.0}` — the one UPDATE
+/// inner loop every path shares (unfused local, fused kernel,
+/// partitioned). The multiply form is bit-equal to the old add/sub
+/// branch split (`1.0·x` is exact and `r + (−x) ≡ r − x` in IEEE-754)
+/// while keeping the loop branch-free; the fixed 8-wide body is a shape
+/// LLVM reliably turns into packed FMAs on stable Rust.
+#[inline(always)]
+pub(crate) fn axpy_sign(row: &mut [f32], delta: &[f32], s: f32) {
+    debug_assert_eq!(row.len(), delta.len());
+    let n = row.len() / 8 * 8;
+    let (rh, rt) = row.split_at_mut(n);
+    let (dh, dt) = delta.split_at(n);
+    for (rc, dc) in rh.chunks_exact_mut(8).zip(dh.chunks_exact(8)) {
+        for i in 0..8 {
+            rc[i] += s * dc[i];
+        }
+    }
+    for (r, &x) in rt.iter_mut().zip(dt) {
+        *r += s * x;
+    }
+}
+
 /// `dst[i] = min(dst[i], row[i])` — the exact comparison the min
 /// reduction uses everywhere (local spans and distributed combines must
 /// share it so they stay bit-identical).
@@ -359,6 +430,63 @@ mod tests {
         // collision; assert closeness, which also exercises the reducer
         for (a, b) in out.iter().zip(&deltas) {
             assert!((a - b).abs() < 1e-5, "{out:?}");
+        }
+    }
+
+    #[test]
+    fn axpy_sign_matches_branch_split_bitwise() {
+        // 19 elements: exercises the 8-wide body and the scalar tail
+        let delta: Vec<f32> = (0..19).map(|i| 0.3 + i as f32 * 0.7).collect();
+        for s in [1.0f32, -1.0] {
+            let mut got: Vec<f32> = (0..19).map(|i| i as f32 * 0.11 - 1.0).collect();
+            let mut want = got.clone();
+            axpy_sign(&mut got, &delta, s);
+            for (r, &x) in want.iter_mut().zip(&delta) {
+                if s >= 0.0 {
+                    *r += x;
+                } else {
+                    *r -= x;
+                }
+            }
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn local_step_fused_matches_default_decomposition_bitwise() {
+        let (v, w, d) = (3usize, 29usize, 7usize);
+        let h = SketchHasher::new(v, w, 13);
+        let ids: Vec<u64> = (0..23u64).map(|i| i % 9).collect(); // collisions on purpose
+        let plan = SketchPlan::build(&h, &ids);
+        let kd = ids.len() * d;
+        let grads: Vec<f32> = (0..kd).map(|i| (i as f32 * 0.37).sin()).collect();
+        for (reduce, signed, pre_query) in
+            [(Reduce::SignedMedian, true, true), (Reduce::Min, false, false)]
+        {
+            let mut fused = LocalStore::zeros(v, w, d);
+            let mut plain = LocalStore::zeros(v, w, d);
+            let mut est_f = vec![0.0f32; kd];
+            let mut est_p = vec![0.0f32; kd];
+            for _ in 0..3 {
+                let mut mk = |est: &[f32], delta: &mut [f32]| {
+                    for i in 0..kd {
+                        delta[i] = grads[i] - 0.5 * est[i];
+                    }
+                };
+                fused.step_fused(&plan, reduce, signed, pre_query, &mut mk, &mut est_f);
+                // the trait default is the unfused reference decomposition
+                let mut delta = vec![0.0f32; kd];
+                if pre_query {
+                    plain.query(&plan, reduce, &mut est_p);
+                }
+                for i in 0..kd {
+                    delta[i] = grads[i] - 0.5 * est_p[i];
+                }
+                plain.update(&plan, &delta, signed);
+                plain.query(&plan, reduce, &mut est_p);
+                assert_eq!(est_f, est_p);
+                assert_eq!(fused.tensor.data(), plain.tensor.data());
+            }
         }
     }
 

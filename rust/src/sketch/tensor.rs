@@ -71,9 +71,7 @@ impl SketchTensor {
 
     /// Multiply every cell by `alpha` (the §4 cleaning primitive).
     pub fn scale(&mut self, alpha: f32) {
-        for x in &mut self.data {
-            *x *= alpha;
-        }
+        scale_in_place(&mut self.data, alpha);
     }
 
     /// Zero everything.
@@ -109,6 +107,27 @@ impl SketchTensor {
     }
 }
 
+/// `data[i] *= alpha` in fixed 16-wide blocks with a scalar tail. The
+/// decay is elementwise — every cell sees exactly one multiply — so the
+/// blocking cannot change results; the fixed-width body is the shape
+/// LLVM reliably turns into packed multiplies regardless of how it
+/// treats the plain iterator form. Shared by the whole-tensor store and
+/// the partitioned store's rank slice so the §4 cleaning cost profile
+/// stays uniform across store backends (`maintenance/clean.*` bench
+/// rows pin it).
+pub(crate) fn scale_in_place(data: &mut [f32], alpha: f32) {
+    let n = data.len() / 16 * 16;
+    let (head, tail) = data.split_at_mut(n);
+    for c in head.chunks_exact_mut(16) {
+        for x in c {
+            *x *= alpha;
+        }
+    }
+    for x in tail {
+        *x *= alpha;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,6 +155,16 @@ mod tests {
         assert_eq!(t.row(0, 0), &[1.0, 2.0]);
         t.reset();
         assert_eq!(t.sq_norm(), 0.0);
+    }
+
+    #[test]
+    fn scale_in_place_blocked_matches_scalar_bitwise() {
+        // 37 elements: two 16-wide blocks plus a 5-element tail
+        let src: Vec<f32> = (0..37).map(|i| (i as f32 * 0.773).cos() * 3.1).collect();
+        let mut blocked = src.clone();
+        scale_in_place(&mut blocked, 0.37);
+        let scalar: Vec<f32> = src.iter().map(|&x| x * 0.37).collect();
+        assert_eq!(blocked, scalar);
     }
 
     #[test]

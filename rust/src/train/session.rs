@@ -1203,6 +1203,7 @@ impl Session {
                     "secs",
                     "bytes_sent",
                     "bytes_received",
+                    "opt_step_ns",
                 ],
             )?),
             _ => None,
@@ -1221,6 +1222,7 @@ impl Session {
         };
         let mut summary =
             RunSummary { epochs: Vec::new(), valid_ppl: Vec::new(), test_ppl: f64::NAN };
+        let mut opt_ns_prev = self.trainer.opt_ns_total();
         for e in 1..=self.spec.epochs {
             let r = self.epoch()?;
             let vppl = self.valid_ppl()?;
@@ -1237,6 +1239,11 @@ impl Session {
                     r.steps as f64 / r.secs
                 );
             }
+            // mean optimizer-step cost this epoch (fused kernel telemetry,
+            // DESIGN.md §12/§Perf)
+            let opt_ns_now = self.trainer.opt_ns_total();
+            let opt_step_ns = (opt_ns_now - opt_ns_prev) / (r.steps as u64).max(1);
+            opt_ns_prev = opt_ns_now;
             if let Some(csv) = metrics.as_mut() {
                 let (sent, received) = wire_bytes(&self.dist);
                 csv.row(&[
@@ -1248,6 +1255,7 @@ impl Session {
                     &format!("{:.3}", r.secs),
                     &sent,
                     &received,
+                    &opt_step_ns,
                 ])?;
             }
             summary.epochs.push(r);

@@ -222,6 +222,10 @@ pub struct LmTrainer {
     flat_opt: Box<dyn FlatOptimizer>,
     sampler: CandidateSampler,
     pub step: usize,
+    /// Cumulative wall time (ns) spent applying optimizer steps — sparse
+    /// layers, bias, and trunk — across all training modes. Feeds the
+    /// per-epoch `opt_step_ns` metrics column (DESIGN.md §Perf).
+    opt_ns: u64,
     /// Dedup plan of the most recent batch (diagnostics: Fig. 1/2/4).
     pub last_plan: Option<BatchPlan>,
     h: Vec<f32>,
@@ -300,6 +304,7 @@ impl LmTrainer {
             flat_opt,
             sampler,
             step: 0,
+            opt_ns: 0,
             last_plan: None,
             h: vec![0.0; p.batch * p.hd],
             c: vec![0.0; p.batch * p.hd],
@@ -506,6 +511,7 @@ impl LmTrainer {
         }
 
         // --- sparse layer updates (live rows only)
+        let opt_t0 = std::time::Instant::now();
         let live = plan.live;
         self.emb_grad_rows.clear();
         self.emb_grad_rows
@@ -523,9 +529,17 @@ impl LmTrainer {
         let flat = std::mem::take(&mut self.flat_params);
         self.engine.unpack_flat(&flat);
         self.flat_params = flat;
+        self.opt_ns += opt_t0.elapsed().as_nanos() as u64;
         self.last_plan = Some(plan);
 
         Ok(out.loss)
+    }
+
+    /// Cumulative nanoseconds spent in optimizer steps since construction
+    /// (the `opt_step_ns` metrics column divides per-epoch deltas of this
+    /// by the epoch's step count).
+    pub fn opt_ns_total(&self) -> u64 {
+        self.opt_ns
     }
 
     /// Gradients of the most recent step (diagnostics).
@@ -706,6 +720,7 @@ impl LmTrainer {
         self.step += 1;
         let t = self.step;
         let lr = self.opts.schedule.at(t);
+        let opt_t0 = std::time::Instant::now();
         // embedding: ascending union of every replica's active rows
         dp.ids.clear();
         for (id, mark) in dp.buf[mask_base..mask_base + vocab].iter().enumerate() {
@@ -746,6 +761,7 @@ impl LmTrainer {
         let flat = std::mem::take(&mut self.flat_params);
         self.engine.unpack_flat(&flat);
         self.flat_params = flat;
+        self.opt_ns += opt_t0.elapsed().as_nanos() as u64;
         Ok(step_loss)
     }
 
@@ -940,6 +956,7 @@ impl LmTrainer {
         self.step += 1;
         let t = self.step;
         let lr = self.opts.schedule.at(t);
+        let opt_t0 = std::time::Instant::now();
         // embedding + softmax: regroup recovered flat coords into sparse
         // row updates (coords arrive in ascending order, so rows dedupe
         // consecutively); unrecovered coords in a touched row stay zero
@@ -974,6 +991,7 @@ impl LmTrainer {
         let flat = std::mem::take(&mut self.flat_params);
         self.engine.unpack_flat(&flat);
         self.flat_params = flat;
+        self.opt_ns += opt_t0.elapsed().as_nanos() as u64;
         Ok(step_loss)
     }
 

@@ -8,6 +8,10 @@
 //! and sharding are pure execution-policy changes: they must not move a
 //! single ulp.
 
+use std::thread;
+
+use csopt::comm::{mem_world, DistCtx};
+use csopt::optim::{CmsAdagrad, CmsAdamV, CsAdam, CsMomentum, HybridAdamV, RowOptimizer};
 use csopt::sketch::{CountMinSketch, CountSketch, SketchHasher, SketchPlan};
 use csopt::util::proptest::check;
 use csopt::util::rng::Rng;
@@ -102,6 +106,10 @@ fn grid() -> Vec<(usize, usize, usize, usize, usize)> {
         (5, 12, 3, 40, 16),
         (2, 3, 1, 128, 4),
         (3, 655, 16, 115, 4),
+        // k·d ≥ SERIAL_MIN_KD: large enough that sharded execution (and
+        // the sharded fused phases, DESIGN.md §12) actually engages
+        // instead of the small-batch serial fast path
+        (3, 655, 8, 1152, 4),
     ]
 }
 
@@ -287,5 +295,306 @@ fn cs_adam_step_matches_scalar_reference_bitwise() {
         opt_par.step_rows(&ids, &mut rows_par, &grads, 1e-3, t);
         assert_eq!(rows_seq, rows_ref, "planned step drifted at t={t}");
         assert_eq!(rows_par, rows_ref, "sharded step drifted at t={t}");
+    }
+}
+
+/// DESIGN.md §12 invariant at the sketch level: `step_fused` must be
+/// bit-identical to the unfused QUERY → Δ → UPDATE → re-QUERY sequence it
+/// replaces — returned estimates *and* tensor state — for both sketch
+/// families, both `pre_query` modes, every shard count, and repeated
+/// rounds over duplicate-heavy batches. The unfused twin runs sequential
+/// (shards = 1), so this also re-proves fused sharding against the
+/// already-pinned sequential semantics.
+#[test]
+fn fused_step_matches_unfused_sequence_bitwise() {
+    for (case, &(v, w, d, k, shards)) in grid().iter().enumerate() {
+        let seed = 0xF05ED ^ ((case as u64) << 4);
+        let mut rng = Rng::new(seed);
+        let kd = k * d;
+        // duplicate-heavy: ids drawn from a small universe
+        let ids: Vec<u64> = (0..k).map(|_| rng.below(1 + w / 2) as u64).collect();
+        let rounds: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..kd).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+
+        for s in [1usize, 2, shards] {
+            // count-sketch, pre-queried Δ = 0.5·m̂ + g (momentum-shaped)
+            let mut fused = CountSketch::new(v, w, d, seed).with_shards(s);
+            let mut plain = CountSketch::new(v, w, d, seed);
+            let plan = fused.plan(&ids);
+            let mut est_f = vec![0.0f32; kd];
+            let mut est_p = vec![0.0f32; kd];
+            let mut delta = vec![0.0f32; kd];
+            for g in &rounds {
+                let make = &mut |est: &[f32], out: &mut [f32]| {
+                    for i in 0..kd {
+                        out[i] = 0.5 * est[i] + g[i];
+                    }
+                };
+                fused.step_fused(&plan, true, make, &mut est_f);
+                plain.query_with(&plan, &mut est_p);
+                for i in 0..kd {
+                    delta[i] = 0.5 * est_p[i] + g[i];
+                }
+                plain.update_with(&plan, &delta);
+                plain.query_with(&plan, &mut est_p);
+                assert_eq!(est_f, est_p, "cs est, case {case} shards {s}");
+            }
+            assert_eq!(
+                fused.tensor().data(),
+                plain.tensor().data(),
+                "cs tensor, case {case} shards {s}"
+            );
+
+            // count-min, both pre-query modes: Δ = g² − 0.001·v̂
+            // (adam-v-shaped) and the estimate-free Δ = g² (adagrad-shaped)
+            for pre in [true, false] {
+                let mut fused = CountMinSketch::new(v, w, d, seed).with_shards(s);
+                let mut plain = CountMinSketch::new(v, w, d, seed);
+                for g in &rounds {
+                    let make = &mut |est: &[f32], out: &mut [f32]| {
+                        for i in 0..kd {
+                            out[i] =
+                                if pre { g[i] * g[i] - 0.001 * est[i] } else { g[i] * g[i] };
+                        }
+                    };
+                    fused.step_fused(&plan, pre, make, &mut est_f);
+                    if pre {
+                        plain.query_with(&plan, &mut est_p);
+                    }
+                    for i in 0..kd {
+                        delta[i] =
+                            if pre { g[i] * g[i] - 0.001 * est_p[i] } else { g[i] * g[i] };
+                    }
+                    plain.update_with(&plan, &delta);
+                    plain.query_with(&plan, &mut est_p);
+                    assert_eq!(est_f, est_p, "cms est, case {case} shards {s} pre {pre}");
+                }
+                assert_eq!(
+                    fused.tensor().data(),
+                    plain.tensor().data(),
+                    "cms tensor, case {case} shards {s} pre {pre}"
+                );
+            }
+        }
+    }
+}
+
+/// The acceptance criterion at the optimizer level: every sketched
+/// optimizer's fused `step_rows` must reproduce the pre-fusion unfused
+/// sequence (QUERY → Δ → UPDATE → re-QUERY → apply, driven here through
+/// the plain `query_with`/`update_with` primitives) bit-exactly, at every
+/// shard count, on duplicate-heavy batches.
+#[test]
+fn fused_optimizers_match_unfused_references_bitwise() {
+    type RefStep = Box<dyn FnMut(&[u64], &mut [f32], &[f32], f32, usize)>;
+    let (v, w, d, n, k) = (3usize, 53usize, 4usize, 96usize, 24usize);
+    let (gm, b1, b2, eps) = (0.9f32, 0.9f32, 0.999f32, 1e-8f32);
+    let seed = 11u64;
+
+    for shards in [1usize, 2, 4] {
+        let mut pairs: Vec<(Box<dyn RowOptimizer>, RefStep)> = Vec::new();
+
+        // cs-momentum: m += (γ−1)·m̂ + g; x ← x − η·m
+        let mut sk = CountSketch::new(v, w, d, seed);
+        pairs.push((
+            Box::new(CsMomentum::new(v, w, d, seed, gm).with_shards(shards)),
+            Box::new(move |ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t| {
+                let kd = ids.len() * d;
+                let plan = sk.plan(ids);
+                let (mut est, mut delta) = (vec![0.0f32; kd], vec![0.0f32; kd]);
+                sk.query_with(&plan, &mut est);
+                for i in 0..kd {
+                    delta[i] = (gm - 1.0) * est[i] + grads[i];
+                }
+                sk.update_with(&plan, &delta);
+                sk.query_with(&plan, &mut est);
+                for i in 0..kd {
+                    rows[i] -= lr * est[i];
+                }
+            }),
+        ));
+
+        // cms-adagrad: acc += g²; x ← x − η·g/(√acc + ε)
+        let mut sk = CountMinSketch::new(v, w, d, seed);
+        pairs.push((
+            Box::new(CmsAdagrad::new(v, w, d, seed, eps).with_shards(shards)),
+            Box::new(move |ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, _t| {
+                let kd = ids.len() * d;
+                let plan = sk.plan(ids);
+                let (mut est, mut delta) = (vec![0.0f32; kd], vec![0.0f32; kd]);
+                for i in 0..kd {
+                    delta[i] = grads[i] * grads[i];
+                }
+                sk.update_with(&plan, &delta);
+                sk.query_with(&plan, &mut est);
+                for i in 0..kd {
+                    rows[i] -= lr * grads[i] / (est[i].max(0.0).sqrt() + eps);
+                }
+            }),
+        ));
+
+        // cs-adam: CS m / CMS v under one shared plan
+        let mut sk_m = CountSketch::new(v, w, d, seed);
+        let mut sk_v = CountMinSketch::new(v, w, d, seed);
+        pairs.push((
+            Box::new(CsAdam::new(v, w, d, seed, b1, b2, eps).with_shards(shards)),
+            Box::new(move |ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t| {
+                let kd = ids.len() * d;
+                let plan = sk_m.plan(ids);
+                let (mut est_m, mut est_v) = (vec![0.0f32; kd], vec![0.0f32; kd]);
+                let mut delta = vec![0.0f32; kd];
+                sk_m.query_with(&plan, &mut est_m);
+                for i in 0..kd {
+                    delta[i] = (1.0 - b1) * (grads[i] - est_m[i]);
+                }
+                sk_m.update_with(&plan, &delta);
+                sk_m.query_with(&plan, &mut est_m);
+                sk_v.query_with(&plan, &mut est_v);
+                for i in 0..kd {
+                    delta[i] = (1.0 - b2) * (grads[i] * grads[i] - est_v[i]);
+                }
+                sk_v.update_with(&plan, &delta);
+                sk_v.query_with(&plan, &mut est_v);
+                let bc1 = 1.0 - b1.powi(t as i32);
+                let bc2 = 1.0 - b2.powi(t as i32);
+                for i in 0..kd {
+                    let m_hat = est_m[i] / bc1;
+                    let v_hat = est_v[i].max(0.0) / bc2;
+                    rows[i] -= lr * m_hat / (v_hat.sqrt() + eps);
+                }
+            }),
+        ));
+
+        // cms-adam-v: CMS v only
+        let mut sk_v = CountMinSketch::new(v, w, d, seed);
+        pairs.push((
+            Box::new(CmsAdamV::new(v, w, d, seed, b2, eps).with_shards(shards)),
+            Box::new(move |ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t| {
+                let kd = ids.len() * d;
+                let plan = sk_v.plan(ids);
+                let (mut est_v, mut delta) = (vec![0.0f32; kd], vec![0.0f32; kd]);
+                sk_v.query_with(&plan, &mut est_v);
+                for i in 0..kd {
+                    delta[i] = (1.0 - b2) * (grads[i] * grads[i] - est_v[i]);
+                }
+                sk_v.update_with(&plan, &delta);
+                sk_v.query_with(&plan, &mut est_v);
+                let bc2 = 1.0 - b2.powi(t as i32);
+                for i in 0..kd {
+                    let v_hat = est_v[i].max(0.0) / bc2;
+                    rows[i] -= lr * grads[i] / (v_hat.sqrt() + eps);
+                }
+            }),
+        ));
+
+        // hybrid adam-v: dense m, CMS v
+        let mut m_dense = vec![0.0f32; n * d];
+        let mut sk_v = CountMinSketch::new(v, w, d, seed);
+        pairs.push((
+            Box::new(HybridAdamV::new(n, v, w, d, seed, b1, b2, eps).with_shards(shards)),
+            Box::new(move |ids: &[u64], rows: &mut [f32], grads: &[f32], lr: f32, t| {
+                let kd = ids.len() * d;
+                let plan = sk_v.plan(ids);
+                let (mut est_v, mut delta) = (vec![0.0f32; kd], vec![0.0f32; kd]);
+                sk_v.query_with(&plan, &mut est_v);
+                for i in 0..kd {
+                    delta[i] = (1.0 - b2) * (grads[i] * grads[i] - est_v[i]);
+                }
+                sk_v.update_with(&plan, &delta);
+                sk_v.query_with(&plan, &mut est_v);
+                let bc1 = 1.0 - b1.powi(t as i32);
+                let bc2 = 1.0 - b2.powi(t as i32);
+                for (ti, &id) in ids.iter().enumerate() {
+                    let m = &mut m_dense[id as usize * d..(id as usize + 1) * d];
+                    for i in 0..d {
+                        let gi = grads[ti * d + i];
+                        m[i] = b1 * m[i] + (1.0 - b1) * gi;
+                        let m_hat = m[i] / bc1;
+                        let v_hat = est_v[ti * d + i].max(0.0) / bc2;
+                        rows[ti * d + i] -= lr * m_hat / (v_hat.sqrt() + eps);
+                    }
+                }
+            }),
+        ));
+
+        for (mut fused, mut reference) in pairs {
+            let name = fused.name();
+            let mut rng = Rng::new(0xAB ^ shards as u64);
+            let mut rows_f = vec![0.25f32; k * d];
+            let mut rows_r = rows_f.clone();
+            for t in 1..=5 {
+                // duplicate-heavy batches (small id universe)
+                let ids: Vec<u64> = (0..k).map(|_| rng.below(n) as u64).collect();
+                let g: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                fused.step_rows(&ids, &mut rows_f, &g, 1e-2, t);
+                reference(&ids, &mut rows_r, &g, 1e-2, t);
+                assert_eq!(rows_f, rows_r, "{name} shards={shards} t={t}");
+            }
+        }
+    }
+}
+
+/// The PartitionedStore leg of the §12 invariant: on a width-partitioned
+/// store `step_fused` falls back to the unfused sequence (the QUERY
+/// all-reduce is a fusion barrier), and every rank of a 2-rank
+/// mem-transport world must still match the fused local path bit-exactly.
+#[test]
+fn partitioned_fused_fallback_matches_local_bitwise() {
+    let (v, w, d, n, k) = (3usize, 48usize, 4usize, 96usize, 16usize);
+    let world = 2usize;
+
+    // shared trajectory (duplicate-heavy batches)
+    let mut rng = Rng::new(0xD157);
+    let traj: Vec<(Vec<u64>, Vec<f32>)> = (0..4)
+        .map(|_| {
+            let ids: Vec<u64> = (0..k).map(|_| rng.below(n) as u64).collect();
+            let grads: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            (ids, grads)
+        })
+        .collect();
+
+    // fused local baselines: one pre-query optimizer, one query-free
+    let run_local = |mut opts: Vec<Box<dyn RowOptimizer>>| -> Vec<Vec<f32>> {
+        let mut rows = vec![vec![0.5f32; k * d]; opts.len()];
+        for (t, (ids, grads)) in traj.iter().enumerate() {
+            for (o, r) in opts.iter_mut().zip(rows.iter_mut()) {
+                o.step_rows(ids, r, grads, 1e-2, t + 1);
+            }
+        }
+        rows
+    };
+    let rows_local = run_local(vec![
+        Box::new(CsAdam::new(v, w, d, 7, 0.9, 0.999, 1e-8)),
+        Box::new(CmsAdagrad::new(v, w, d, 7, 1e-10)),
+    ]);
+
+    let outs: Vec<Vec<Vec<f32>>> = thread::scope(|s| {
+        let handles: Vec<_> = mem_world(world)
+            .into_iter()
+            .enumerate()
+            .map(|(rank, ep)| {
+                let traj = &traj;
+                s.spawn(move || {
+                    let ctx = DistCtx::new(rank, world, ep);
+                    let mut opts: Vec<Box<dyn RowOptimizer>> = vec![
+                        Box::new(CsAdam::new(v, w, d, 7, 0.9, 0.999, 1e-8).with_store(&ctx)),
+                        Box::new(CmsAdagrad::new(v, w, d, 7, 1e-10).with_store(&ctx)),
+                    ];
+                    let mut rows = vec![vec![0.5f32; k * d]; opts.len()];
+                    for (t, (ids, grads)) in traj.iter().enumerate() {
+                        for (o, r) in opts.iter_mut().zip(rows.iter_mut()) {
+                            o.step_rows(ids, r, grads, 1e-2, t + 1);
+                        }
+                    }
+                    rows
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (rank, rows) in outs.iter().enumerate() {
+        for (oi, r) in rows.iter().enumerate() {
+            assert_eq!(r, &rows_local[oi], "optimizer {oi} diverged on rank {rank}");
+        }
     }
 }
