@@ -271,5 +271,53 @@ fn main() {
         }
     }
 
+    // serve read path (DESIGN.md §13): one full client request against a
+    // resident QueryServer — connect, frame roundtrip, answer from the
+    // published epoch snapshot — for 64 parameter rows and 64 sketch-row
+    // materializations at a wide-sketch shape. This is the per-request
+    // latency a `csopt query` client pays, socket included.
+    {
+        use csopt::optim::AuxSketch;
+        use csopt::serve::query::{client_ping, client_rows, QueryServer, ServeSnapshot};
+        let (w, d, nrows) = (4096usize, 256usize, 64usize);
+        let mut sk = CountSketch::new(3, w, d, 13);
+        let (ids, grads) = ids_and_grads(8192, 1024, d, 6);
+        sk.update(&ids, &grads);
+        let mut layers = std::collections::BTreeMap::new();
+        layers.insert("emb".to_string(), (d, vec![0.25f32; w * d]));
+        let addr = std::env::temp_dir()
+            .join(format!("csopt-bench-q-{}.sock", std::process::id()))
+            .display()
+            .to_string();
+        let server = QueryServer::start(&addr).expect("starting bench query server");
+        server.publish(ServeSnapshot {
+            epoch: 1,
+            step: 1,
+            valid_ppl: 0.0,
+            layers,
+            sketches: vec![("emb.m".to_string(), AuxSketch::Signed(sk))],
+        });
+        // publish is a channel send — wait (bounded) until the server answers
+        let mut up = false;
+        for _ in 0..1000 {
+            if client_ping(&addr).is_ok() {
+                up = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(up, "bench query server never came up on {addr}");
+        let rows: Vec<u64> = (0..nrows as u64).collect();
+        b.bench("serve_query.w4096.d256", || {
+            let r = client_rows(&addr, "query", "emb", &rows).unwrap();
+            black_box(&r);
+        });
+        b.bench("serve_materialize.w4096.d256", || {
+            let r = client_rows(&addr, "materialize", "emb.m", &rows).unwrap();
+            black_box(&r);
+        });
+        drop(server);
+    }
+
     b.finish();
 }

@@ -1,0 +1,148 @@
+//! Length-prefixed frame codec shared by every socket transport
+//! (DESIGN.md §9/§13).
+//!
+//! Wire format (little-endian), one frame per message:
+//!
+//! ```text
+//! u32 header_len | header (JSON, util/json.rs) | payload (header.n × f32)
+//! ```
+//!
+//! The header is a small JSON object — `{"op":"allreduce","n":1024}`,
+//! `{"op":"barrier","n":0}`, `{"op":"hello","rank":2,"world":4,"n":0}` —
+//! parsed with the crate's own [`Json`]; the payload is raw f32 bytes
+//! (JSON-encoding megabytes of floats would be slow and lossy).
+//!
+//! Extracted from the unix-socket transport so [`super::uds`] and
+//! [`super::tcp`] (and the `serve` read path) speak byte-identical
+//! frames: the functions are generic over [`Read`]/[`Write`], so a
+//! `UnixStream`, a `TcpStream` and an in-memory buffer all round-trip
+//! through the same code. The defensive bounds — the header-length
+//! sanity cap and the caller-supplied `max_n` payload bound — are part
+//! of the codec, not the transport: a desynced or corrupt peer must
+//! surface as a diagnosable error on every wire, never as a giant
+//! allocation or a hang.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Write one frame; returns the frame's full byte count
+/// (`4 + header + payload`).
+pub fn write_frame<W: Write + ?Sized>(
+    stream: &mut W,
+    op: &str,
+    extra: Vec<(&str, Json)>,
+    payload: &[f32],
+) -> Result<usize> {
+    let mut fields = vec![("op", s(op)), ("n", num(payload.len() as f64))];
+    fields.extend(extra);
+    let header = obj(fields).to_string();
+    stream.write_all(&(header.len() as u32).to_le_bytes())?;
+    stream.write_all(header.as_bytes())?;
+    if !payload.is_empty() {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(payload.as_ptr() as *const u8, payload.len() * 4)
+        };
+        stream.write_all(bytes)?;
+    }
+    stream.flush()?;
+    Ok(4 + header.len() + payload.len() * 4)
+}
+
+/// Read one frame; the payload lands in `payload` (resized to header.n)
+/// and the header comes back with the frame's full byte count.
+/// `max_n` bounds the wire-supplied element count — a desynced or
+/// corrupt peer must surface as the diagnosable divergence error below,
+/// not as a giant allocation.
+pub fn read_frame<R: Read + ?Sized>(
+    stream: &mut R,
+    payload: &mut Vec<f32>,
+    max_n: usize,
+) -> Result<(Json, usize)> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4).context("reading frame header length")?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    if hlen > 1 << 16 {
+        bail!("implausible frame header length {hlen}");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    stream.read_exact(&mut hbuf).context("reading frame header")?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)
+        .context("parsing frame header JSON")?;
+    let n = header.req("n")?.as_usize().ok_or_else(|| anyhow!("frame header n not a number"))?;
+    if n > max_n {
+        bail!(
+            "frame payload of {n} f32s exceeds the expected {max_n} — the peer's op \
+             sequence diverged (or the stream is corrupt)"
+        );
+    }
+    payload.resize(n, 0.0);
+    if n > 0 {
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(payload.as_mut_ptr() as *mut u8, n * 4)
+        };
+        stream.read_exact(bytes).context("reading frame payload")?;
+    }
+    Ok((header, 4 + hlen + n * 4))
+}
+
+/// The `op` field of a frame header.
+pub fn frame_op(header: &Json) -> Result<String> {
+    Ok(header
+        .req("op")?
+        .as_str()
+        .ok_or_else(|| anyhow!("frame header op not a string"))?
+        .to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    /// The codec is generic — an in-memory byte buffer exercises the
+    /// identical code a UnixStream or TcpStream runs, including the
+    /// denormal/sign-of-zero payload bit preservation.
+    #[test]
+    fn frame_roundtrip_preserves_bits() {
+        let payload = vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-40];
+        let mut wire = Vec::new();
+        let wrote =
+            write_frame(&mut wire, "allreduce", vec![("tag", num(7.0))], &payload).unwrap();
+        assert_eq!(wrote, wire.len());
+        let mut cursor = Cursor::new(wire);
+        let mut got = Vec::new();
+        let (header, nbytes) = read_frame(&mut cursor, &mut got, 4).unwrap();
+        assert_eq!(nbytes, wrote);
+        assert!(nbytes > 4 + 4 * 4, "frame bytes cover header + payload, got {nbytes}");
+        assert_eq!(frame_op(&header).unwrap(), "allreduce");
+        assert_eq!(header.req("tag").unwrap().as_f64(), Some(7.0));
+        assert_eq!(got.len(), 4);
+        for (a, b) in got.iter().zip(payload.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn oversized_payload_is_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, "allreduce", vec![], &[1.0f32; 16]).unwrap();
+        let mut got = Vec::new();
+        let e = read_frame(&mut Cursor::new(wire), &mut got, 4).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("exceeds the expected 4"), "{msg}");
+        assert!(msg.contains("diverged"), "{msg}");
+    }
+
+    #[test]
+    fn implausible_header_length_is_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        wire.extend_from_slice(&[0u8; 64]);
+        let mut got = Vec::new();
+        let e = read_frame(&mut Cursor::new(wire), &mut got, 0).unwrap_err();
+        assert!(format!("{e:#}").contains("implausible frame header length"), "{e:#}");
+    }
+}

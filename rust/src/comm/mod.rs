@@ -16,6 +16,9 @@
 //! * [`mem`] — in-memory impl for same-process multi-rank tests.
 //! * [`uds`] — unix-domain-socket impl for real worker processes
 //!   (length-prefixed frames with a JSON header, `util/json.rs`).
+//! * [`tcp`] — the same star topology over TCP for cross-host workers
+//!   and the resident `serve` service; both socket transports share the
+//!   frame codec in [`frame`] byte-for-byte.
 //! * [`partitioned`] — the [`SketchStore`](crate::sketch::SketchStore)
 //!   impl owning one rank's width slice.
 //! * [`DistCtx`] — rank + world + shared transport; the
@@ -28,9 +31,11 @@
 //!   sketch partition while staying bit-identical to the single-process
 //!   global-batch run.
 
+pub mod frame;
 pub mod gradsketch;
 pub mod mem;
 pub mod partitioned;
+pub mod tcp;
 #[cfg(unix)]
 pub mod uds;
 
@@ -43,6 +48,7 @@ use crate::sketch::{SketchStore, StoreBuilder};
 pub use gradsketch::{GradSketchCfg, GradSketcher, SegmentSketcher};
 pub use mem::{mem_world, MemComm};
 pub use partitioned::PartitionedStore;
+pub use tcp::TcpTransport;
 #[cfg(unix)]
 pub use uds::UdsTransport;
 

@@ -291,6 +291,47 @@ impl SketchStore for PartitionedStore {
         );
     }
 
+    /// **Collective**: every rank scatters its owned rows into a zeroed
+    /// full `[v·w·d]` buffer and the buffers are summed. One owner per
+    /// cell makes the sum an exact reconstruction (same argument as
+    /// `query`, same IEEE sign-of-zero footnote). All ranks must call
+    /// this in lockstep and all receive the identical full tensor.
+    fn snapshot_full(&self) -> Vec<f32> {
+        let d = self.dim;
+        let mut full = vec![0.0f32; self.depth * self.width * d];
+        for j in 0..self.depth {
+            for b in self.lo..self.hi {
+                full[(j * self.width + b) * d..(j * self.width + b + 1) * d]
+                    .copy_from_slice(self.row(j, b));
+            }
+        }
+        self.comm
+            .lock()
+            .unwrap()
+            .all_reduce_sum(&mut full)
+            .expect("sketch snapshot all-reduce failed");
+        full
+    }
+
+    /// Rank-local: copy this rank's width slice out of the full buffer.
+    /// Works for **any** partition layout, so a rank rejoining under a
+    /// different `(lo, hi)` (changed world size after a membership
+    /// event) restores the correct slice from the same snapshot.
+    fn restore_full(&mut self, full: &[f32]) {
+        let d = self.dim;
+        assert_eq!(
+            full.len(),
+            self.depth * self.width * d,
+            "restore_full: buffer geometry mismatch"
+        );
+        for j in 0..self.depth {
+            for b in self.lo..self.hi {
+                let src = &full[(j * self.width + b) * d..(j * self.width + b + 1) * d];
+                self.row_mut(j, b).copy_from_slice(src);
+            }
+        }
+    }
+
     fn clone_box(&self) -> Box<dyn SketchStore> {
         Box::new(PartitionedStore {
             depth: self.depth,
@@ -372,6 +413,72 @@ mod tests {
         let part = PartitionedStore::new(3, 100, 8, 0, 4, Arc::clone(&comm));
         assert_eq!(part.memory_bytes(), full / 4);
         assert_eq!(part.range(), (0, 25));
+    }
+
+    /// `snapshot_full` reconstructs the identical full tensor on every
+    /// rank (bit-equal to the local store's backing buffer), and
+    /// `restore_full` under a *different* world size reproduces the same
+    /// estimates — the layout independence the serve rejoin protocol
+    /// rides on (DESIGN.md §13).
+    #[test]
+    fn snapshot_restores_across_partition_layouts() {
+        let (v, w, d, k) = (3usize, 41usize, 3usize, 17usize);
+        let h = SketchHasher::new(v, w, 23);
+        let mut rng = Rng::new(7);
+        let ids: Vec<u64> = (0..k).map(|_| rng.below(256) as u64).collect();
+        let deltas: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let plan = SketchPlan::build(&h, &ids);
+
+        let mut local = LocalStore::zeros(v, w, d);
+        local.update(&plan, &deltas, true);
+        let expect_full = local.snapshot_full();
+        let mut expect_med = vec![0.0f32; k * d];
+        local.query(&plan, Reduce::SignedMedian, &mut expect_med);
+
+        // world=3 writes, snapshots
+        let snaps: Vec<Vec<f32>> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(3)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    let (plan, deltas) = (plan.clone(), deltas.clone());
+                    s.spawn(move || {
+                        let comm: Arc<Mutex<dyn Transport>> = Arc::new(Mutex::new(ep));
+                        let mut store = PartitionedStore::new(v, w, d, rank, 3, comm);
+                        store.update(&plan, &deltas, true);
+                        store.snapshot_full()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, snap) in snaps.iter().enumerate() {
+            assert_eq!(snap, &expect_full, "snapshot rank={rank}");
+        }
+
+        // world=2 restores the same snapshot under a different layout
+        let snap = snaps[0].clone();
+        let outs: Vec<Vec<f32>> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(2)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    let (plan, snap) = (plan.clone(), snap.clone());
+                    s.spawn(move || {
+                        let comm: Arc<Mutex<dyn Transport>> = Arc::new(Mutex::new(ep));
+                        let mut store = PartitionedStore::new(v, w, d, rank, 2, comm);
+                        store.restore_full(&snap);
+                        let mut med = vec![0.0f32; k * d];
+                        store.query(&plan, Reduce::SignedMedian, &mut med);
+                        med
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, med) in outs.iter().enumerate() {
+            assert_eq!(med, &expect_med, "restored median rank={rank}");
+        }
     }
 
     #[test]

@@ -1,26 +1,22 @@
-//! Unix-domain-socket [`Transport`] for real worker processes.
+//! TCP [`Transport`] — the unix-socket star topology over `TcpStream`,
+//! so workers can live on other hosts (and the `serve` service loop can
+//! span machines).
 //!
-//! Star topology: rank 0 listens on the socket path, ranks 1..N connect
-//! and identify themselves with a `hello` frame. Collectives run through
-//! the coordinator: workers send their partial, rank 0 accumulates in
-//! rank order (its own contribution first, then ranks 1..N), and sends
-//! the reduction back — so every rank receives bit-identical results.
+//! Byte-identical wire format to [`super::uds`]: the shared codec in
+//! [`super::frame`] writes `u32 header_len | JSON header | raw-f32
+//! payload` frames, workers identify themselves with a `hello` frame,
+//! and rank 0 accumulates collectives in rank order so every rank
+//! receives bit-identical results. The only transport-specific pieces
+//! are addressing (`host:port` instead of a filesystem path — `csopt`
+//! dispatches on the `:`) and lifecycle: TCP has no socket file to go
+//! stale, so [`TcpTransport::cleanup`] is a no-op kept for call-site
+//! symmetry with the UDS transport.
 //!
-//! Wire format (little-endian), one frame per message:
-//!
-//! ```text
-//! u32 header_len | header (JSON, util/json.rs) | payload (header.n × f32)
-//! ```
-//!
-//! The header is a small JSON object — `{"op":"allreduce","n":1024}`,
-//! `{"op":"barrier","n":0}`, `{"op":"hello","rank":2,"world":4,"n":0}` —
-//! parsed with the crate's own [`Json`]; the payload is raw f32 bytes
-//! (JSON-encoding megabytes of floats would be slow and lossy). The
-//! codec itself lives in [`super::frame`], shared byte-for-byte with the
-//! TCP transport ([`super::tcp`]).
+//! `TCP_NODELAY` is set on every stream: the collectives are strict
+//! request/response ping-pong, exactly the pattern Nagle's algorithm
+//! penalizes with a stalled small-frame tail.
 
-use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::Path;
+use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -31,76 +27,76 @@ use super::frame::{frame_op, read_frame, write_frame};
 use super::Transport;
 
 /// How long listen/connect/read/write wait before declaring a peer dead
-/// (write matters too: a wedged peer that stops draining its socket
-/// would otherwise block a large result broadcast forever).
+/// (same horizon as the UDS transport; the serve loop shrinks it via
+/// `heartbeat_ms` so worker loss is detected in seconds, not minutes).
 const IO_TIMEOUT: Duration = Duration::from_secs(120);
 
-/// One rank's endpoint of a socket-backed world.
-pub struct UdsTransport {
+/// One rank's endpoint of a TCP-backed world.
+pub struct TcpTransport {
     rank: usize,
     world: usize,
     /// Rank 0: stream to rank `r` at `peers[r - 1]`. Workers: one stream
     /// to rank 0.
-    peers: Vec<UnixStream>,
+    peers: Vec<TcpStream>,
     scratch: Vec<f32>,
     /// Frame bytes written / read on this endpoint (headers + payloads),
-    /// including the hello handshake — real wire volume, for the
-    /// dense-vs-sketched traffic comparison.
+    /// including the hello handshake — real wire volume, so the
+    /// metrics-CSV transport columns stay truthful in service mode.
     sent: u64,
     received: u64,
 }
 
-impl UdsTransport {
-    /// Rank 0: bind `path` and wait for ranks `1..world` to connect and
-    /// say hello. Call **before** spawning workers is not required — they
-    /// retry until the socket exists — but the stale-file unlink here
-    /// means the path must not be shared between concurrent runs.
-    pub fn listen(path: &str, world: usize) -> Result<UdsTransport> {
-        UdsTransport::listen_with_timeout(path, world, IO_TIMEOUT)
+impl TcpTransport {
+    /// Rank 0: bind `addr` (`host:port`; `host:0` picks a free port —
+    /// recover it with [`local_addr`](TcpTransport::bound_addr) before
+    /// spawning workers) and wait for ranks `1..world` to connect and
+    /// say hello.
+    pub fn listen(addr: &str, world: usize) -> Result<TcpTransport> {
+        TcpTransport::listen_with_timeout(addr, world, IO_TIMEOUT)
     }
 
-    /// [`UdsTransport::listen`] with an explicit I/O timeout governing
-    /// the handshake wait and every subsequent read/write. Production
-    /// callers use [`listen`](UdsTransport::listen); the fault-injection
-    /// suite shrinks the timeout so misbehaving-peer scenarios fail in
-    /// milliseconds instead of minutes.
+    /// [`TcpTransport::listen`] with an explicit I/O timeout governing
+    /// the handshake wait and every subsequent read/write. The
+    /// fault-injection suite and the serve heartbeat both shrink it.
     pub fn listen_with_timeout(
-        path: &str,
+        addr: &str,
         world: usize,
         timeout: Duration,
-    ) -> Result<UdsTransport> {
-        use std::os::unix::fs::FileTypeExt;
+    ) -> Result<TcpTransport> {
         assert!(world >= 2, "a 1-process run needs no transport");
-        // reclaim only a stale *socket*; anything else at the path is a
-        // user mistake we must not delete. "Stale" is probed, not
-        // assumed: an abnormal coordinator exit (SIGKILL, power loss)
-        // leaves the file behind with nobody listening — a connect then
-        // fails immediately and the file is safe to reclaim — while a
-        // *live* coordinator accepts the probe, and binding over it
-        // would silently split the world across two runs.
-        if let Ok(meta) = std::fs::symlink_metadata(path) {
-            if meta.file_type().is_socket() {
-                match UnixStream::connect(path) {
-                    Ok(_) => bail!(
-                        "socket path {path} has a live coordinator listening on it — \
-                         refusing to displace a running world; pick another --socket \
-                         path (or stop the other run first)"
-                    ),
-                    Err(_) => {
-                        // nobody home: a leftover from an abnormal exit
-                        let _ = std::fs::remove_file(path);
-                    }
+        // Retry the bind: after a crashed generation the old accepted
+        // sockets can sit in TIME_WAIT on this port, and the serve
+        // supervisor rebinds the same address on every restart.
+        let deadline = Instant::now() + timeout;
+        let listener = loop {
+            match TcpListener::bind(addr) {
+                Ok(l) => break l,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::AddrInUse
+                        && Instant::now() < deadline =>
+                {
+                    std::thread::sleep(Duration::from_millis(50));
                 }
-            } else {
-                bail!(
-                    "socket path {path} exists and is not a socket — refusing to \
-                     overwrite it; pick another --socket path"
-                );
+                Err(e) => {
+                    return Err(e)
+                        .with_context(|| format!("binding coordinator address {addr}"))
+                }
             }
-        }
-        let listener = UnixListener::bind(path)
-            .with_context(|| format!("binding coordinator socket {path}"))?;
-        let mut peers: Vec<Option<UnixStream>> = (1..world).map(|_| None).collect();
+        };
+        Self::accept_world(&listener, addr, world, timeout)
+    }
+
+    /// Accept `world - 1` hellos on an already-bound listener. Split out
+    /// so the serve loop can bind once and re-accept a fresh world after
+    /// a membership change without racing another process for the port.
+    pub fn accept_world(
+        listener: &TcpListener,
+        addr: &str,
+        world: usize,
+        timeout: Duration,
+    ) -> Result<TcpTransport> {
+        assert!(world >= 2, "a 1-process run needs no transport");
+        let mut peers: Vec<Option<TcpStream>> = (1..world).map(|_| None).collect();
         let deadline = Instant::now() + timeout;
         let mut payload = Vec::new();
         let mut received = 0u64;
@@ -113,7 +109,7 @@ impl UdsTransport {
                     Ok((stream, _)) => break stream,
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         if Instant::now() > deadline {
-                            bail!("timed out waiting for workers to connect to {path}");
+                            bail!("timed out waiting for workers to connect to {addr}");
                         }
                         std::thread::sleep(Duration::from_millis(10));
                     }
@@ -121,6 +117,7 @@ impl UdsTransport {
                 }
             };
             stream.set_nonblocking(false)?;
+            stream.set_nodelay(true)?;
             stream.set_read_timeout(Some(timeout))?;
             stream.set_write_timeout(Some(timeout))?;
             let (header, nbytes) = read_frame(&mut stream, &mut payload, 0)?;
@@ -141,7 +138,7 @@ impl UdsTransport {
                 bail!("two workers claimed rank {rank}");
             }
         }
-        Ok(UdsTransport {
+        Ok(TcpTransport {
             rank: 0,
             world,
             peers: peers.into_iter().map(|p| p.unwrap()).collect(),
@@ -151,35 +148,36 @@ impl UdsTransport {
         })
     }
 
-    /// Ranks 1..world: connect to rank 0's socket (retrying while it
-    /// appears) and say hello.
-    pub fn connect(path: &str, rank: usize, world: usize) -> Result<UdsTransport> {
-        UdsTransport::connect_with_timeout(path, rank, world, IO_TIMEOUT)
+    /// Ranks 1..world: connect to rank 0's address (retrying while it
+    /// comes up) and say hello.
+    pub fn connect(addr: &str, rank: usize, world: usize) -> Result<TcpTransport> {
+        TcpTransport::connect_with_timeout(addr, rank, world, IO_TIMEOUT)
     }
 
-    /// [`UdsTransport::connect`] with an explicit I/O timeout (see
-    /// [`listen_with_timeout`](UdsTransport::listen_with_timeout)).
+    /// [`TcpTransport::connect`] with an explicit I/O timeout (see
+    /// [`listen_with_timeout`](TcpTransport::listen_with_timeout)).
     pub fn connect_with_timeout(
-        path: &str,
+        addr: &str,
         rank: usize,
         world: usize,
         timeout: Duration,
-    ) -> Result<UdsTransport> {
+    ) -> Result<TcpTransport> {
         assert!(rank >= 1 && rank < world, "connect is for worker ranks (got {rank}/{world})");
         let deadline = Instant::now() + timeout;
         let mut stream = loop {
-            match UnixStream::connect(path) {
+            match TcpStream::connect(addr) {
                 Ok(s) => break s,
                 Err(e) => {
                     if Instant::now() > deadline {
                         return Err(e).with_context(|| {
-                            format!("rank {rank}: coordinator socket {path} never came up")
+                            format!("rank {rank}: coordinator address {addr} never came up")
                         });
                     }
                     std::thread::sleep(Duration::from_millis(20));
                 }
             }
         };
+        stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(timeout))?;
         stream.set_write_timeout(Some(timeout))?;
         let hello = write_frame(
@@ -188,7 +186,7 @@ impl UdsTransport {
             vec![("rank", num(rank as f64)), ("world", num(world as f64))],
             &[],
         )?;
-        Ok(UdsTransport {
+        Ok(TcpTransport {
             rank,
             world,
             peers: vec![stream],
@@ -253,15 +251,12 @@ impl UdsTransport {
         Ok(())
     }
 
-    /// Remove a coordinator socket file (best-effort cleanup after a run).
-    pub fn cleanup(path: &str) {
-        if Path::new(path).exists() {
-            let _ = std::fs::remove_file(path);
-        }
-    }
+    /// No socket file to remove — kept so launch/serve call sites treat
+    /// both transports uniformly.
+    pub fn cleanup(_addr: &str) {}
 }
 
-impl Transport for UdsTransport {
+impl Transport for TcpTransport {
     fn rank(&self) -> usize {
         self.rank
     }
@@ -292,23 +287,18 @@ mod tests {
     use super::*;
     use std::thread;
 
-    fn sock_path(tag: &str) -> String {
-        std::env::temp_dir()
-            .join(format!("csopt-uds-test-{tag}-{}.sock", std::process::id()))
-            .to_string_lossy()
-            .into_owned()
-    }
-
     #[test]
-    fn three_rank_all_reduce_over_sockets() {
-        let path = sock_path("ar3");
+    fn three_rank_all_reduce_over_tcp() {
+        // port 0: the OS picks a free port; workers get the real address
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
         let world = 3usize;
         let outs: Vec<Vec<f32>> = thread::scope(|s| {
             let mut handles = Vec::new();
             for rank in 1..world {
-                let p = path.clone();
+                let a = addr.clone();
                 handles.push(s.spawn(move || {
-                    let mut t = UdsTransport::connect(&p, rank, world).unwrap();
+                    let mut t = TcpTransport::connect(&a, rank, world).unwrap();
                     let mut buf = vec![rank as f32; 5];
                     t.all_reduce_sum(&mut buf).unwrap();
                     t.barrier().unwrap();
@@ -318,7 +308,9 @@ mod tests {
                     buf
                 }));
             }
-            let mut t0 = UdsTransport::listen(&path, world).unwrap();
+            let mut t0 =
+                TcpTransport::accept_world(&listener, &addr, world, Duration::from_secs(30))
+                    .unwrap();
             let mut buf = vec![0.0f32; 5];
             t0.all_reduce_sum(&mut buf).unwrap();
             t0.barrier().unwrap();
@@ -326,46 +318,8 @@ mod tests {
             outs.extend(handles.into_iter().map(|h| h.join().unwrap()));
             outs
         });
-        UdsTransport::cleanup(&path);
         for out in outs {
             assert_eq!(out, vec![3.0f32; 5]);
         }
-    }
-
-    /// A socket file left behind by a dead coordinator is reclaimed (the
-    /// pre-probe behaviour made the next launch fail with a confusing
-    /// bind error only when the file was *not* removable — worse, it
-    /// happily deleted a LIVE coordinator's socket); a live listener on
-    /// the path must be refused, not displaced.
-    #[test]
-    fn stale_socket_reclaimed_live_socket_refused() {
-        let path = sock_path("stale");
-        let world = 2usize;
-        // fabricate the abnormal-exit leftover: bind, then drop the
-        // listener without unlinking — exactly what SIGKILL leaves
-        drop(UnixListener::bind(&path).unwrap());
-        assert!(Path::new(&path).exists(), "leftover socket file expected");
-        thread::scope(|s| {
-            let p = path.clone();
-            let h = s.spawn(move || {
-                let mut t = UdsTransport::connect(&p, 1, world).unwrap();
-                t.barrier().unwrap();
-            });
-            // listen reclaims the stale file and binds cleanly
-            let mut t0 = UdsTransport::listen(&path, world).unwrap();
-            t0.barrier().unwrap();
-            h.join().unwrap();
-        });
-        UdsTransport::cleanup(&path);
-        // …but a LIVE listener on a path is refused, not displaced
-        let live_path = sock_path("live");
-        let _ = std::fs::remove_file(&live_path);
-        let live = UnixListener::bind(&live_path).unwrap();
-        let e =
-            UdsTransport::listen_with_timeout(&live_path, world, Duration::from_millis(200))
-                .unwrap_err();
-        assert!(format!("{e:#}").contains("live coordinator"), "{e:#}");
-        drop(live);
-        UdsTransport::cleanup(&live_path);
     }
 }

@@ -29,6 +29,10 @@
 //! * [`comm`] — cross-process transport (in-memory + unix sockets), the
 //!   width-partitioned sketch store for `csopt launch` runs (DESIGN.md
 //!   §9), and the data-parallel gradient reduction (DESIGN.md §10).
+//! * [`serve`] — `sketchd`, the resident fault-tolerant sketch-store
+//!   service: supervised worker generations, epoch snapshots with
+//!   stall-and-resume rejoin, and a concurrent read path (`csopt serve`
+//!   / `csopt query`, DESIGN.md §13).
 //! * [`train`] — trainer orchestration, eval, checkpointing, memory ledger.
 //! * [`mach`] — Merged-Average Classifiers via Hashing (§7.3 substrate).
 //! * [`metrics`] — CSV/JSON logging, timing aggregation.
@@ -43,6 +47,7 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod sketch;
 pub mod train;
 pub mod util;

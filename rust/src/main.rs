@@ -36,7 +36,12 @@ USAGE:
   csopt run <config.conf> [--set k=v[,k=v...]]...
   csopt launch <config.conf> --workers N [--mode sketch|data|hybrid|comm-sketch]
               [--replicas R] [--socket PATH] [--set k=v[,k=v...]]...
-  csopt worker            (internal: launched by `csopt launch`, spec on stdin)
+  csopt worker            (internal: launched by `csopt launch`/`csopt serve`,
+                           spec on stdin)
+  csopt serve <config.conf> [--workers N] [--socket ADDR] [--snapshot PATH]
+              [--query-socket ADDR] [--heartbeat-ms MS] [--set k=v[,k=v...]]...
+  csopt query --socket ADDR (--stats | --ping | --layer GLOB --rows SPEC
+              | --sketch GLOB --rows SPEC)
   csopt train [--preset tiny|wt2|wt103|lm1b] [--optim SPEC] [--sm-optim SPEC]
               [--engine rust|xla] [--epochs N] [--steps N] [--lr X]
               [--shards N] [--checkpoint PATH]
@@ -65,6 +70,18 @@ USAGE:
                       comm_w comm_d comm_k comm_momentum tune the wire).
                       Lossy, but bitwise-identical across process layouts
                       of the same replica count.
+  A socket containing `:` is a TCP host:port address (workers may live on
+  other hosts); anything else is a unix-domain-socket path.
+
+  `serve` runs a config as a resident mode=sketch service (sketchd,
+  DESIGN.md §13): after every epoch the world snapshots its state to
+  --snapshot (or [dist] snapshot); when a worker dies the whole
+  generation restarts from that snapshot — training stalls and resumes
+  instead of erroring, and the final state is bit-identical to an
+  uninterrupted run. With --query-socket set, `csopt query` reads
+  parameter rows (--layer 'emb' --rows 0..8), materializes sketched
+  optimizer moments (--sketch 'emb.m'), or dumps inventories (--stats)
+  from a consistent epoch snapshot while training continues.
 
 RUN CONFIGS (key = value lines; see examples/configs/):
   preset engine epochs steps lr schedule clip seed shards out metrics
@@ -108,7 +125,7 @@ fn main() {
 }
 
 fn dispatch(argv: Vec<String>) -> Result<()> {
-    let args = Args::parse(argv, &["help", "verbose"])?;
+    let args = Args::parse(argv, &["help", "verbose", "stats", "ping"])?;
     let Some(cmd) = args.positional.first().map(|s| s.as_str()) else {
         println!("{USAGE}");
         return Ok(());
@@ -116,6 +133,8 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     match cmd {
         "run" => cmd_run(&args),
         "launch" => cmd_launch(&args),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
         "worker" => cmd_worker(&args),
         "train" => cmd_train(&args),
         "exp" => {
@@ -354,9 +373,103 @@ fn cmd_launch(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `csopt worker`: one rank of a `csopt launch` run. Reads the serialized
-/// `RunSpec` (with its `[dist]` section) from stdin and runs the same
-/// `Session::build` → `run` loop as rank 0, silently.
+/// `csopt serve <config>`: run the config as the resident `sketchd`
+/// service (DESIGN.md §13) — epoch snapshots, stall-and-resume worker
+/// rejoin, and the concurrent `csopt query` read path.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("serve needs a config file path (see examples/configs/serve.conf)");
+    };
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading run config {path}"))?;
+    let mut spec = RunSpec::parse(&text).with_context(|| format!("parsing run config {path}"))?;
+    for sets in args.get_all("set") {
+        spec.apply_sets(sets).with_context(|| format!("applying --set {sets}"))?;
+    }
+    // the config's [dist] section supplies defaults; flags override and
+    // serve owns the placement (rank 0 = this process)
+    let mut dist = spec.dist.clone().unwrap_or_default();
+    if let Some(w) = args.get("workers") {
+        dist.workers = w.parse().map_err(|e| anyhow!("bad value for --workers: {e}"))?;
+    }
+    if dist.workers == 0 {
+        dist.workers = 1;
+    }
+    if let Some(s) = args.get("socket") {
+        dist.socket = s.to_string();
+    }
+    if let Some(s) = args.get("snapshot") {
+        dist.snapshot = s.to_string();
+    }
+    if let Some(s) = args.get("query-socket") {
+        dist.query_socket = s.to_string();
+    }
+    if let Some(h) = args.get("heartbeat-ms") {
+        dist.heartbeat_ms =
+            h.parse().map_err(|e| anyhow!("bad value for --heartbeat-ms: {e}"))?;
+    }
+    if dist.snapshot.is_empty() {
+        bail!(
+            "serve needs a snapshot path — the rejoin point every restarted generation \
+             restores; set [dist] snapshot = PATH or pass --snapshot PATH"
+        );
+    }
+    if dist.workers > 1 && dist.socket.is_empty() {
+        dist.socket = std::env::temp_dir()
+            .join(format!("csopt-serve-{}.sock", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+    }
+    dist.rank = 0;
+    spec.dist = Some(dist);
+    spec.validate()?;
+    println!("# resolved serve spec ({path})");
+    print!("{spec}");
+    println!();
+    csopt::serve::serve(&spec)
+}
+
+/// `csopt query`: one read request against a running serve's
+/// `--query-socket` — row slices of a parameter layer, materialized
+/// sketch moments, or the stats inventory.
+fn cmd_query(args: &Args) -> Result<()> {
+    use csopt::serve::query;
+    let Some(addr) = args.get("socket") else {
+        bail!("query needs --socket ADDR (the serve run's dist.query_socket)");
+    };
+    if args.has("stats") {
+        let stats = query::client_stats(addr)?;
+        println!("{}", stats.to_string());
+        return Ok(());
+    }
+    if args.has("ping") {
+        let (epoch, step) = query::client_ping(addr)?;
+        println!("epoch {epoch} step {step}");
+        return Ok(());
+    }
+    let rows = match args.get("rows") {
+        Some(spec) => query::parse_rows(spec)?,
+        None => bail!("query needs --rows SPEC (\"0,5,9\" or \"0..16\") with --layer/--sketch"),
+    };
+    let (op, name) = match (args.get("layer"), args.get("sketch")) {
+        (Some(l), None) => ("query", l),
+        (None, Some(s)) => ("materialize", s),
+        _ => bail!("query needs exactly one of --layer GLOB or --sketch GLOB (or --stats/--ping)"),
+    };
+    let (resolved, d, data) = query::client_rows(addr, op, name, &rows)?;
+    println!("# {resolved} [{} rows × {d}]", rows.len());
+    for (i, id) in rows.iter().enumerate() {
+        let row = &data[i * d..(i + 1) * d];
+        let rendered: Vec<String> = row.iter().map(|x| format!("{x:.6}")).collect();
+        println!("{id}\t{}", rendered.join(" "));
+    }
+    Ok(())
+}
+
+/// `csopt worker`: one rank of a `csopt launch` or `csopt serve` run.
+/// Reads the serialized `RunSpec` (with its `[dist]` section) from stdin
+/// and runs the same loop as rank 0, silently: `Session::run` for launch
+/// specs, the resident serve loop when the spec carries a snapshot path.
 fn cmd_worker(_args: &Args) -> Result<()> {
     use std::io::Read;
     let mut text = String::new();
@@ -370,6 +483,9 @@ fn cmd_worker(_args: &Args) -> Result<()> {
     };
     if d.rank == 0 {
         bail!("rank 0 is the launcher itself — workers are ranks 1..workers");
+    }
+    if !d.snapshot.is_empty() {
+        return csopt::serve::run_resident(&spec);
     }
     let mut session = Session::build(&spec)?;
     session.run()?;

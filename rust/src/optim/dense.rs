@@ -4,6 +4,20 @@
 
 use super::{FlatOptimizer, RowOptimizer};
 
+/// Swap `dst` for the blob `name` if present with the exact length;
+/// the shared length-check of every dense `load_state` (a mismatched
+/// blob means the snapshot came from a different geometry — refuse it
+/// rather than resume with silently-corrupt state).
+fn load_blob(get: &mut dyn FnMut(&str) -> Option<Vec<f32>>, name: &str, dst: &mut Vec<f32>) -> bool {
+    match get(name) {
+        Some(b) if b.len() == dst.len() => {
+            *dst = b;
+            true
+        }
+        _ => false,
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Row (sparse-layer) baselines
 // ---------------------------------------------------------------------------
@@ -27,6 +41,14 @@ impl RowOptimizer for SparseSgd {
 
     fn name(&self) -> &'static str {
         "sgd"
+    }
+
+    fn save_state(&self, _put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        true // stateless: snapshotting it is trivially supported
+    }
+
+    fn load_state(&mut self, _get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        true
     }
 }
 
@@ -75,6 +97,15 @@ impl RowOptimizer for DenseMomentum {
         }
         true
     }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("m", self.m.clone());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        load_blob(get, "m", &mut self.m)
+    }
 }
 
 /// Dense Adagrad over `[n, d]` rows: `v += g²; x ← x − η·g/(√v+ε)`.
@@ -121,6 +152,15 @@ impl RowOptimizer for DenseAdagrad {
                 .copy_from_slice(&self.v[id as usize * self.d..(id as usize + 1) * self.d]);
         }
         true
+    }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("v", self.v.clone());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        load_blob(get, "v", &mut self.v)
     }
 }
 
@@ -180,6 +220,16 @@ impl RowOptimizer for DenseAdam {
         }
         true
     }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("m", self.m.clone());
+        put("v", self.v.clone());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        load_blob(get, "m", &mut self.m) && load_blob(get, "v", &mut self.v)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -202,6 +252,14 @@ impl FlatOptimizer for FlatSgd {
 
     fn name(&self) -> &'static str {
         "sgd"
+    }
+
+    fn save_state(&self, _put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        true
+    }
+
+    fn load_state(&mut self, _get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        true
     }
 }
 
@@ -232,6 +290,15 @@ impl FlatOptimizer for FlatMomentum {
     fn name(&self) -> &'static str {
         "momentum"
     }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("m", self.m.clone());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        load_blob(get, "m", &mut self.m)
+    }
 }
 
 /// Flat Adagrad.
@@ -260,6 +327,15 @@ impl FlatOptimizer for FlatAdagrad {
 
     fn name(&self) -> &'static str {
         "adagrad"
+    }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("v", self.v.clone());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        load_blob(get, "v", &mut self.v)
     }
 }
 
@@ -295,6 +371,16 @@ impl FlatOptimizer for FlatAdam {
 
     fn name(&self) -> &'static str {
         "adam"
+    }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("m", self.m.clone());
+        put("v", self.v.clone());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        load_blob(get, "m", &mut self.m) && load_blob(get, "v", &mut self.v)
     }
 }
 
@@ -356,6 +442,27 @@ mod tests {
         assert_eq!(DenseMomentum::new(10, 4, 0.9).memory_bytes(), 10 * 4 * 4);
         assert_eq!(FlatSgd.memory_bytes(), 0);
         assert_eq!(SparseSgd.memory_bytes(), 0);
+    }
+
+    #[test]
+    fn save_load_state_resumes_bitwise() {
+        let ids = [0u64, 1, 2, 3];
+        let mut a = DenseAdam::new(4, 2, 0.9, 0.999, 1e-8);
+        let mut rows = vec![0.5f32; 8];
+        a.step_rows(&ids, &mut rows, &[0.1; 8], 0.01, 1);
+        let mut blobs = std::collections::BTreeMap::new();
+        assert!(a.save_state(&mut |name, data| {
+            blobs.insert(name.to_string(), data);
+        }));
+        let mut b = DenseAdam::new(4, 2, 0.9, 0.999, 1e-8);
+        assert!(b.load_state(&mut |name| blobs.get(name).cloned()));
+        let (mut ra, mut rb) = (rows.clone(), rows);
+        a.step_rows(&ids, &mut ra, &[0.2; 8], 0.01, 2);
+        b.step_rows(&ids, &mut rb, &[0.2; 8], 0.01, 2);
+        assert_eq!(ra, rb);
+        // a blob from a different geometry is refused, not mis-loaded
+        let mut c = DenseAdam::new(2, 2, 0.9, 0.999, 1e-8);
+        assert!(!c.load_state(&mut |name| blobs.get(name).cloned()));
     }
 
     #[test]

@@ -72,7 +72,42 @@ pub use schedule::LrSchedule;
 pub use sketched::{CmsAdagrad, CmsAdamV, CsAdam, CsMomentum, HybridAdamV};
 pub use spec::{Comp, OptimSpec, RowShape, Rule};
 
+use crate::sketch::{CountMinSketch, CountSketch};
 use crate::util::rng::Rng;
+
+/// A read-only view of one auxiliary sketch published by a
+/// [`RowOptimizer`] for the serve read path (DESIGN.md §13): a
+/// whole-tensor **local** clone, so query/materialize traffic never
+/// touches (or synchronizes with) the training store.
+pub enum AuxSketch {
+    /// Signed count-sketch (momentum / Adam 1st moment).
+    Signed(CountSketch),
+    /// Count-min sketch (Adagrad accumulator / Adam 2nd moment).
+    Min(CountMinSketch),
+}
+
+impl AuxSketch {
+    /// `(depth, width, dim)` of the sketch.
+    pub fn geometry(&self) -> (usize, usize, usize) {
+        match self {
+            AuxSketch::Signed(cs) => {
+                (cs.hasher().depth(), cs.hasher().width(), cs.dim())
+            }
+            AuxSketch::Min(cms) => {
+                (cms.hasher().depth(), cms.hasher().width(), cms.dim())
+            }
+        }
+    }
+
+    /// Estimate rows `ids` into `out` (`[k, d]`) under the sketch's own
+    /// reduction (signed median / min).
+    pub fn estimate_rows(&self, ids: &[u64], out: &mut [f32]) {
+        match self {
+            AuxSketch::Signed(cs) => cs.query(ids, out),
+            AuxSketch::Min(cms) => cms.query(ids, out),
+        }
+    }
+}
 
 /// Optimizer over gathered sparse rows.
 ///
@@ -101,6 +136,33 @@ pub trait RowOptimizer {
     fn estimate_rows(&self, _which: usize, _ids: &[u64], _out: &mut [f32]) -> bool {
         false
     }
+
+    /// Serialize auxiliary state as named flat blobs via `put(name, data)`
+    /// (serve snapshots, DESIGN.md §13). Sketch blobs are full `[v·w·d]`
+    /// tensors — **collective** on partitioned stores, so every rank must
+    /// call in lockstep. Returns false when the optimizer does not
+    /// support state snapshots (low-rank, XLA-backed); a false return
+    /// must leave `put` uncalled.
+    fn save_state(&self, _put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        false
+    }
+
+    /// Restore the blobs written by [`Self::save_state`] via
+    /// `get(name)`. Rank-local (each partitioned store takes its own
+    /// slice). Returns false when unsupported or when a blob is missing
+    /// or the wrong length — the caller bails with the optimizer name.
+    fn load_state(&mut self, _get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        false
+    }
+
+    /// Whole-tensor local clones of the optimizer's auxiliary sketches,
+    /// `(variable_name, sketch)` — what the serve read path publishes
+    /// for `materialize` queries. **Collective** when the backing stores
+    /// are partitioned (all ranks call in lockstep; non-lead ranks
+    /// discard the result). Dense and low-rank optimizers return empty.
+    fn read_sketches(&self) -> Vec<(&'static str, AuxSketch)> {
+        Vec::new()
+    }
 }
 
 impl std::fmt::Debug for dyn RowOptimizer {
@@ -119,6 +181,18 @@ pub trait FlatOptimizer {
 
     /// Short display name.
     fn name(&self) -> &'static str;
+
+    /// Serialize auxiliary state as named flat blobs (see
+    /// [`RowOptimizer::save_state`]).
+    fn save_state(&self, _put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        false
+    }
+
+    /// Restore the blobs written by [`Self::save_state`] (see
+    /// [`RowOptimizer::load_state`]).
+    fn load_state(&mut self, _get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        false
+    }
 }
 
 impl std::fmt::Debug for dyn FlatOptimizer {

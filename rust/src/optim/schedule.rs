@@ -41,6 +41,25 @@ impl LrSchedule {
         }
     }
 
+    /// Mutable-state snapshot `(lr, best, bad)` — only a plateau
+    /// schedule accumulates state worth checkpointing (constant/linear
+    /// are pure functions of `t`).
+    pub fn state(&self) -> Option<(f32, f64, usize)> {
+        match self {
+            LrSchedule::Plateau { lr, best, bad, .. } => Some((*lr, *best, *bad)),
+            _ => None,
+        }
+    }
+
+    /// Restore a [`Self::state`] snapshot. No-op for stateless schedules.
+    pub fn set_state(&mut self, snap: (f32, f64, usize)) {
+        if let LrSchedule::Plateau { lr, best, bad, .. } = self {
+            *lr = snap.0;
+            *best = snap.1;
+            *bad = snap.2;
+        }
+    }
+
     /// Report a validation metric (lower is better); plateau schedules may
     /// decay. Returns true if the lr changed.
     pub fn report_metric(&mut self, metric: f64) -> bool {

@@ -20,7 +20,28 @@
 
 use crate::sketch::{CleaningPolicy, CountMinSketch, CountSketch, SketchPlan, StoreBuilder};
 
-use super::RowOptimizer;
+use super::{AuxSketch, RowOptimizer};
+
+/// The blob `name` if present with exactly `len` elements — the shared
+/// geometry guard of every sketched `load_state` (a mismatched blob
+/// means the snapshot came from a different sketch geometry).
+fn take_blob(
+    get: &mut dyn FnMut(&str) -> Option<Vec<f32>>,
+    name: &str,
+    len: usize,
+) -> Option<Vec<f32>> {
+    get(name).filter(|b| b.len() == len)
+}
+
+/// Full-tensor element count of a count-sketch (`v·w·d`).
+fn cs_len(sk: &CountSketch) -> usize {
+    sk.hasher().depth() * sk.hasher().width() * sk.dim()
+}
+
+/// Full-tensor element count of a count-min sketch (`v·w·d`).
+fn cms_len(sk: &CountMinSketch) -> usize {
+    sk.hasher().depth() * sk.hasher().width() * sk.dim()
+}
 
 /// Algorithm 2 — Count-Sketch Momentum.
 ///
@@ -96,6 +117,25 @@ impl RowOptimizer for CsMomentum {
         }
         self.sk.query(ids, out);
         true
+    }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("sk", self.sk.snapshot_state());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        match take_blob(get, "sk", cs_len(&self.sk)) {
+            Some(b) => {
+                self.sk.restore_state(&b);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn read_sketches(&self) -> Vec<(&'static str, AuxSketch)> {
+        vec![("m", AuxSketch::Signed(self.sk.to_local()))]
     }
 }
 
@@ -178,6 +218,25 @@ impl RowOptimizer for CmsAdagrad {
         }
         self.sk.query(ids, out);
         true
+    }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("sk", self.sk.snapshot_state());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        match take_blob(get, "sk", cms_len(&self.sk)) {
+            Some(b) => {
+                self.sk.restore_state(&b);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn read_sketches(&self) -> Vec<(&'static str, AuxSketch)> {
+        vec![("v", AuxSketch::Min(self.sk.to_local()))]
     }
 }
 
@@ -298,6 +357,34 @@ impl RowOptimizer for CsAdam {
         }
         true
     }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        // fixed order — both snapshots are collectives on partitioned
+        // stores, so every rank must reach them in the same sequence
+        put("sk_m", self.sk_m.snapshot_state());
+        put("sk_v", self.sk_v.snapshot_state());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        let m = take_blob(get, "sk_m", cs_len(&self.sk_m));
+        let v = take_blob(get, "sk_v", cms_len(&self.sk_v));
+        match (m, v) {
+            (Some(m), Some(v)) => {
+                self.sk_m.restore_state(&m);
+                self.sk_v.restore_state(&v);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn read_sketches(&self) -> Vec<(&'static str, AuxSketch)> {
+        vec![
+            ("m", AuxSketch::Signed(self.sk_m.to_local())),
+            ("v", AuxSketch::Min(self.sk_v.to_local())),
+        ]
+    }
 }
 
 /// CMS-Adam with β1 = 0 and **no 1st-moment state at all** — the maximal
@@ -386,6 +473,25 @@ impl RowOptimizer for CmsAdamV {
         }
         self.sk_v.query(ids, out);
         true
+    }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("sk_v", self.sk_v.snapshot_state());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        match take_blob(get, "sk_v", cms_len(&self.sk_v)) {
+            Some(b) => {
+                self.sk_v.restore_state(&b);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn read_sketches(&self) -> Vec<(&'static str, AuxSketch)> {
+        vec![("v", AuxSketch::Min(self.sk_v.to_local()))]
     }
 }
 
@@ -493,6 +599,29 @@ impl RowOptimizer for HybridAdamV {
             _ => return false,
         }
         true
+    }
+
+    fn save_state(&self, put: &mut dyn FnMut(&str, Vec<f32>)) -> bool {
+        put("m", self.m.clone());
+        put("sk_v", self.sk_v.snapshot_state());
+        true
+    }
+
+    fn load_state(&mut self, get: &mut dyn FnMut(&str) -> Option<Vec<f32>>) -> bool {
+        let m = take_blob(get, "m", self.m.len());
+        let v = take_blob(get, "sk_v", cms_len(&self.sk_v));
+        match (m, v) {
+            (Some(m), Some(v)) => {
+                self.m = m;
+                self.sk_v.restore_state(&v);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn read_sketches(&self) -> Vec<(&'static str, AuxSketch)> {
+        vec![("v", AuxSketch::Min(self.sk_v.to_local()))]
     }
 }
 
@@ -621,6 +750,37 @@ mod tests {
         opt.step_rows(&ids, &mut rows, &[0.0], 0.0, 2);
         let after = opt.sk.query_one(1)[0];
         assert!((after - 0.5 * before).abs() < 1e-6, "{after} vs {}", 0.5 * before);
+    }
+
+    /// Snapshot → restore into a fresh optimizer → identical next step,
+    /// and geometry-mismatched blobs are refused (the serve snapshot
+    /// contract at the optimizer level).
+    #[test]
+    fn sketched_save_load_resumes_bitwise() {
+        let (v, w, d) = (3usize, 64usize, 4usize);
+        let ids = [3u64, 9, 200];
+        let g: Vec<f32> = (0..ids.len() * d).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut a = CsAdam::new(v, w, d, 5, 0.9, 0.999, 1e-8);
+        let mut rows = vec![0.25f32; ids.len() * d];
+        a.step_rows(&ids, &mut rows, &g, 0.01, 1);
+        let mut blobs = std::collections::BTreeMap::new();
+        assert!(a.save_state(&mut |n, b| {
+            blobs.insert(n.to_string(), b);
+        }));
+        let mut b = CsAdam::new(v, w, d, 5, 0.9, 0.999, 1e-8);
+        assert!(b.load_state(&mut |n| blobs.get(n).cloned()));
+        let (mut ra, mut rb) = (rows.clone(), rows);
+        a.step_rows(&ids, &mut ra, &g, 0.01, 2);
+        b.step_rows(&ids, &mut rb, &g, 0.01, 2);
+        assert_eq!(ra, rb);
+        // read_sketches publishes local clones with the live geometry
+        let sketches = a.read_sketches();
+        assert_eq!(sketches.len(), 2);
+        assert_eq!(sketches[0].0, "m");
+        assert_eq!(sketches[0].1.geometry(), (v, w, d));
+        // a blob from a different sketch geometry is refused
+        let mut c = CsAdam::new(v, w / 2, d, 5, 0.9, 0.999, 1e-8);
+        assert!(!c.load_state(&mut |n| blobs.get(n).cloned()));
     }
 
     /// Sharded optimizer steps are bit-identical to sequential ones, for

@@ -1,0 +1,349 @@
+//! `sketchd` — the resident sketch-store service (DESIGN.md §13).
+//!
+//! `csopt serve` promotes a `[dist] mode = sketch` world from a per-run
+//! peer group to a long-lived, fault-tolerant service:
+//!
+//! * **Supervisor** ([`serve`]): spawns ranks `1..workers` as `csopt
+//!   worker` children (spec shipped over stdin, exactly like `csopt
+//!   launch`), runs rank 0 in-process, and — when any member dies —
+//!   reaps the whole generation and restarts it from the last epoch
+//!   snapshot. Training *stalls and resumes*; it does not error.
+//! * **Resident loop** ([`run_resident`]): every rank's epoch loop.
+//!   After each epoch the world takes a collective state snapshot
+//!   ([`crate::train::trainer::LmTrainer::snapshot_state`] all-reduces
+//!   the width-partitioned sketches into full tensors), the lead rank
+//!   persists it atomically (`dist.snapshot`), and a restarted
+//!   generation restores from it — each member re-deriving *its own*
+//!   `width_partition` slice from the full-width blobs, so a rejoining
+//!   world may even have a different worker count.
+//! * **Read path** ([`query`]): the lead rank serves `csopt query`
+//!   requests (`ping`/`stats`/`query`/`materialize`) from cloned epoch
+//!   snapshots on `dist.query_socket`, so concurrent reads cannot
+//!   perturb the bitwise-deterministic write path.
+//!
+//! Membership is generation-stamped: each restart is a new membership
+//! epoch (`CSOPT_MEMBERSHIP_EPOCH` in every member's environment, the
+//! `serve.generation` scalar in the snapshot), and a stale member of a
+//! previous generation cannot rejoin because its socket endpoint was
+//! torn down with its generation.
+//!
+//! Failure model: a crash loses at most the in-flight epoch (snapshots
+//! are epoch-granular); a run interrupted anywhere and resumed from its
+//! snapshot reaches the *bit-identical* final state of an uninterrupted
+//! same-seed run, because the snapshot captures every trajectory input
+//! (params, optimizer sketches, sampler RNG, lr-schedule state).
+//! Coordinator (rank 0 / supervisor) loss is out of scope — restart
+//! `csopt serve` by hand; it resumes from the same snapshot file.
+
+pub mod query;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::CsvWriter;
+use crate::train::checkpoint::Checkpoint;
+use crate::train::session::{DistParams, RunSpec, Session};
+
+use query::{QueryServer, ServeSnapshot};
+
+/// Bounded restart budget: a world that cannot finish within this many
+/// generations has a persistent fault (bad config, flapping host) that
+/// respawning will not fix.
+pub const MAX_GENERATIONS: usize = 5;
+
+/// Chaos hook read by [`run_resident`]: `CSOPT_SERVE_ABORT_EPOCH=e`
+/// makes rank `CSOPT_SERVE_ABORT_RANK` (default 1) die right after
+/// training epoch `e`, *before* the snapshot — the worst-case loss
+/// point. The kill-and-rejoin tests and the CI smoke drive recovery
+/// with it deterministically instead of racing a SIGKILL.
+pub const ABORT_EPOCH_ENV: &str = "CSOPT_SERVE_ABORT_EPOCH";
+/// See [`ABORT_EPOCH_ENV`].
+pub const ABORT_RANK_ENV: &str = "CSOPT_SERVE_ABORT_RANK";
+/// Membership-epoch stamp in every member's environment.
+pub const MEMBERSHIP_ENV: &str = "CSOPT_MEMBERSHIP_EPOCH";
+
+/// The `csopt serve` supervisor: run `spec` as a resident service,
+/// restarting the world from its last snapshot on member loss.
+pub fn serve(spec: &RunSpec) -> Result<()> {
+    spec.validate()?;
+    let Some(d) = spec.dist.clone() else {
+        bail!("serve needs a [dist] section with snapshot = PATH (and workers/socket)");
+    };
+    if d.snapshot.is_empty() {
+        bail!("serve needs dist.snapshot = PATH — the rejoin point every generation restores");
+    }
+    if d.rank != 0 {
+        bail!("serve is the coordinator — dist.rank must be 0 (workers are spawned, not served)");
+    }
+    let exe = std::env::current_exe().context("locating the csopt binary for workers")?;
+    let mut last_err = String::new();
+    for generation in 1..=MAX_GENERATIONS {
+        if generation > 1 {
+            // the chaos hook fires once: a restarted generation must not
+            // replay the injected fault (children inherit our env)
+            std::env::remove_var(ABORT_EPOCH_ENV);
+            std::env::remove_var(ABORT_RANK_ENV);
+            // a dead generation may have left its world socket behind
+            #[cfg(unix)]
+            if !d.socket.contains(':') {
+                crate::comm::UdsTransport::cleanup(&d.socket);
+            }
+            eprintln!(
+                "serve: restarting world (generation {generation}) from snapshot {}: {last_err}",
+                d.snapshot
+            );
+        }
+        std::env::set_var(MEMBERSHIP_ENV, generation.to_string());
+
+        let mut children = Vec::new();
+        let spawn_all = (1..d.workers).try_for_each(|rank| -> Result<()> {
+            let mut child_spec = spec.clone();
+            child_spec.dist = Some(DistParams { rank, ..d.clone() });
+            let mut child = std::process::Command::new(&exe)
+                .arg("worker")
+                .stdin(std::process::Stdio::piped())
+                .spawn()
+                .with_context(|| format!("spawning worker rank {rank}"))?;
+            use std::io::Write;
+            let mut stdin = child.stdin.take().expect("piped stdin");
+            // register the child for kill/reap *before* anything can fail
+            children.push((rank, child));
+            stdin
+                .write_all(child_spec.to_string().as_bytes())
+                .with_context(|| format!("shipping the run spec to worker rank {rank}"))?;
+            drop(stdin); // closes the pipe → worker sees EOF and parses
+            Ok(())
+        });
+
+        // rank 0 runs in-process; a panic (e.g. a transport error
+        // surfacing mid-collective) is a failed generation, not a dead
+        // supervisor
+        let run_result = spawn_all.and_then(|()| {
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_resident(spec))) {
+                Ok(r) => r,
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<String>()
+                        .map(String::as_str)
+                        .or_else(|| payload.downcast_ref::<&str>().copied())
+                        .unwrap_or("non-string panic payload");
+                    Err(anyhow!("rank 0 panicked: {msg}"))
+                }
+            }
+        });
+        let mut failures = Vec::new();
+        for (rank, mut child) in children {
+            if run_result.is_err() {
+                // a half-dead world cannot make progress — tear it all
+                // down and restart the generation
+                let _ = child.kill();
+            }
+            match child.wait() {
+                Ok(status) if status.success() => {}
+                Ok(status) => failures.push(format!("worker rank {rank} exited with {status}")),
+                Err(e) => failures.push(format!("worker rank {rank} could not be reaped: {e}")),
+            }
+        }
+        match run_result {
+            Ok(()) if failures.is_empty() => {
+                if generation > 1 {
+                    eprintln!("serve: run completed after {generation} generations");
+                }
+                return Ok(());
+            }
+            Ok(()) => last_err = failures.join("; "),
+            Err(e) => {
+                last_err = format!("{e:#}");
+                if !failures.is_empty() {
+                    last_err = format!("{last_err}; {}", failures.join("; "));
+                }
+            }
+        }
+    }
+    bail!(
+        "serve gave up after {MAX_GENERATIONS} generations — the fault persists across \
+         restarts (last: {last_err})"
+    )
+}
+
+/// One member's resident epoch loop: restore the snapshot (if any),
+/// train `epochs_done+1..=epochs`, take a collective snapshot after
+/// every epoch, and — on the lead rank — persist it and publish the
+/// read-path clone.
+pub fn run_resident(spec: &RunSpec) -> Result<()> {
+    let d = spec
+        .dist
+        .clone()
+        .ok_or_else(|| anyhow!("run_resident needs a [dist] section with snapshot = PATH"))?;
+    if d.snapshot.is_empty() {
+        bail!("run_resident needs dist.snapshot = PATH");
+    }
+    let generation: usize =
+        std::env::var(MEMBERSHIP_ENV).ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+    let mut session = Session::build(spec)?;
+    let lead = session.is_lead();
+
+    // rejoin: restore the last epoch snapshot — every member reads the
+    // same full-width blobs and re-derives its own partition slice, so
+    // this works under a different worker count than the writer's
+    let mut done = 0usize;
+    if std::path::Path::new(&d.snapshot).exists() {
+        let ck = Checkpoint::load(&d.snapshot)
+            .with_context(|| format!("loading serve snapshot {}", d.snapshot))?;
+        done = ck.scalar("serve.epochs_done")? as usize;
+        session.trainer.restore_state(&ck)?;
+        if lead {
+            println!(
+                "serve: generation {generation} restored snapshot {} (epochs done {done}, \
+                 step {})",
+                d.snapshot, session.trainer.step
+            );
+        }
+    } else if lead {
+        println!("serve: generation {generation} starting fresh (no snapshot at {})", d.snapshot);
+    }
+
+    let qs = match (lead, d.query_socket.is_empty()) {
+        (true, false) => Some(QueryServer::start(&d.query_socket)?),
+        _ => None,
+    };
+    let abort_epoch: Option<usize> =
+        std::env::var(ABORT_EPOCH_ENV).ok().and_then(|v| v.parse().ok());
+    let abort_rank: usize =
+        std::env::var(ABORT_RANK_ENV).ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+
+    if lead {
+        println!(
+            "serving preset={} policy=[{}] workers={} epochs {}..={}",
+            spec.preset,
+            session.trainer.opts.policy,
+            d.workers,
+            done + 1,
+            spec.epochs
+        );
+    }
+    // Same columns as `Session::run`, so downstream metric tooling reads
+    // service runs unchanged. The file restarts with its generation: rows
+    // carry the epoch, so a resumed file is the resumed epochs.
+    let mut metrics = match (&spec.metrics, lead) {
+        (Some(path), true) => Some(CsvWriter::create(
+            path,
+            &[
+                "epoch",
+                "steps",
+                "mean_loss",
+                "train_ppl",
+                "valid_ppl",
+                "secs",
+                "bytes_sent",
+                "bytes_received",
+                "opt_step_ns",
+            ],
+        )?),
+        _ => None,
+    };
+    let mut opt_ns_prev = session.trainer.opt_ns_total();
+    for epoch in done + 1..=spec.epochs {
+        let r = session.epoch()?;
+        let vppl = session.valid_ppl()?;
+        session.trainer.report_metric(vppl.ln());
+        if lead {
+            println!(
+                "epoch {epoch}: {} steps, mean loss {:.4}, valid ppl {vppl:.2}, {:.1}s",
+                r.steps, r.mean_loss, r.secs
+            );
+        }
+        if abort_epoch == Some(epoch) && d.rank == abort_rank {
+            // chaos hook: die at the worst point — epoch trained, snapshot
+            // not yet taken, so this epoch's work must be redone
+            eprintln!(
+                "serve: rank {} aborting after epoch {epoch} ({ABORT_EPOCH_ENV} chaos hook)",
+                d.rank
+            );
+            if d.rank == 0 {
+                // rank 0 lives inside the supervisor process — fail the
+                // generation instead of killing the service
+                bail!("rank 0 chaos abort after epoch {epoch}");
+            }
+            std::process::exit(113);
+        }
+
+        // collective snapshot — every rank participates (the sketch
+        // all-reduces run in lockstep), only the lead persists
+        let mut ck = Checkpoint::new();
+        session.trainer.snapshot_state(&mut ck)?;
+        ck.set_scalar("serve.epochs_done", epoch as u64);
+        ck.set_scalar("serve.generation", generation as u64);
+        ck.set_str("runspec", &session.spec.trained_form());
+        // read-path clone: collective too (partitioned sketches gather),
+        // so it runs on all ranks in the same order; non-leads discard
+        let sketches = session.trainer.read_handles();
+        let opt_ns_now = session.trainer.opt_ns_total();
+        let opt_step_ns = (opt_ns_now - opt_ns_prev) / (r.steps as u64).max(1);
+        opt_ns_prev = opt_ns_now;
+        if lead {
+            ck.save(&d.snapshot)
+                .with_context(|| format!("persisting serve snapshot {}", d.snapshot))?;
+            if let Some(qs) = &qs {
+                qs.publish(capture(&mut session, epoch, vppl, sketches));
+            }
+            if let Some(csv) = metrics.as_mut() {
+                let (sent, received) = match &session.dist {
+                    Some(c) => {
+                        let t = c.comm();
+                        let g = t.lock().unwrap();
+                        (g.bytes_sent(), g.bytes_received())
+                    }
+                    None => (0, 0),
+                };
+                csv.row(&[
+                    &epoch,
+                    &r.steps,
+                    &format!("{:.6}", r.mean_loss),
+                    &format!("{:.4}", r.train_ppl),
+                    &format!("{vppl:.4}"),
+                    &format!("{:.3}", r.secs),
+                    &sent,
+                    &received,
+                    &opt_step_ns,
+                ])?;
+                csv.flush()?;
+            }
+        }
+    }
+    // all ranks drain their collectives before the lead writes final
+    // artifacts (same discipline as Session::run)
+    if let Some(ctx) = &session.dist {
+        ctx.barrier()?;
+    }
+    let test = session.test_ppl()?;
+    if lead {
+        println!("serve: final test ppl {test:.2}");
+        if let Some(path) = session.spec.checkpoint.clone() {
+            session.save_checkpoint(&path)?;
+            println!("checkpoint written to {path}");
+        }
+    }
+    Ok(())
+}
+
+/// Clone the lead rank's published read state for the query thread.
+fn capture(
+    session: &mut Session,
+    epoch: usize,
+    valid_ppl: f64,
+    sketches: Vec<(String, crate::optim::AuxSketch)>,
+) -> ServeSnapshot {
+    let t = &mut session.trainer;
+    let mut layers = BTreeMap::new();
+    layers.insert("emb".to_string(), (t.emb.d, t.emb.params.clone()));
+    layers.insert("sm".to_string(), (t.sm.d, t.sm.params.clone()));
+    layers.insert("bias".to_string(), (t.sm_bias.d, t.sm_bias.params.clone()));
+    let mut flat = Vec::new();
+    t.engine.pack_flat(&mut flat);
+    // the trunk is one flat vector; expose it as n rows of dim 1 so the
+    // same rows interface reads it
+    layers.insert("trunk".to_string(), (1, flat));
+    ServeSnapshot { epoch, step: t.step, valid_ppl, layers, sketches }
+}

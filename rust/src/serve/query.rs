@@ -1,0 +1,545 @@
+//! The serve read path (DESIGN.md §13): answer `ping` / `stats` /
+//! `query` / `materialize` requests against a consistent epoch snapshot
+//! while training keeps writing.
+//!
+//! Consistency is by construction, not by locking: after each epoch's
+//! collective snapshot the lead rank *clones* the published state
+//! ([`ServeSnapshot`]) and hands it to the server thread over a channel.
+//! The thread always answers from the latest complete snapshot it has
+//! received — readers never touch live optimizer state, so the
+//! bitwise-deterministic write path cannot be perturbed by query
+//! traffic, and a reader mid-request keeps a coherent epoch even while
+//! the next one is being trained.
+//!
+//! Wire format is the shared frame codec ([`crate::comm::frame`]):
+//! requests are header-only frames (`op`, plus `layer`/`sketch`/`rows`
+//! fields), replies carry the row data as the raw-f32 payload. The
+//! socket address dispatches like the transport layer: `host:port` → TCP,
+//! anything else → unix-domain socket.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::frame::{frame_op, read_frame, write_frame};
+use crate::optim::{glob_match, AuxSketch};
+use crate::util::json::{num, obj, s, Json};
+
+/// Per-request row cap: a reply is at most `MAX_QUERY_ROWS * d` f32s,
+/// which also bounds the `read_frame` guard on the client side.
+pub const MAX_QUERY_ROWS: usize = 4096;
+
+/// How long a single query connection may stall before the server drops
+/// it (a wedged reader must not pin the accept loop).
+const CONN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Client-side I/O timeout (covers connect + request + reply).
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One epoch's published read state: parameter matrices plus local
+/// clones of the auxiliary sketches (`<layer>.<var>` →
+/// [`AuxSketch`]), all owned — no aliasing into the trainer.
+pub struct ServeSnapshot {
+    /// Membership/training epoch this state was captured after.
+    pub epoch: usize,
+    /// Global optimizer step count at capture time.
+    pub step: usize,
+    /// Validation perplexity measured this epoch.
+    pub valid_ppl: f64,
+    /// Layer name → `(row dim d, row-major [n, d] data)`.
+    pub layers: BTreeMap<String, (usize, Vec<f32>)>,
+    /// `<layer>.<var>` → whole-tensor local sketch clone.
+    pub sketches: Vec<(String, AuxSketch)>,
+}
+
+/// Both stream types behind one object-safe Read+Write face.
+trait Wire: Read + Write + Send {}
+impl<T: Read + Write + Send> Wire for T {}
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(std::os::unix::net::UnixListener),
+}
+
+impl Listener {
+    fn bind(addr: &str) -> Result<Listener> {
+        if addr.contains(':') {
+            let l = TcpListener::bind(addr)
+                .with_context(|| format!("binding query address {addr}"))?;
+            l.set_nonblocking(true)?;
+            return Ok(Listener::Tcp(l));
+        }
+        #[cfg(unix)]
+        {
+            // A crashed serve run leaves its query socket file behind;
+            // unlike the world socket there is no handshake to race, so
+            // remove-then-bind is safe (two serves on one query socket
+            // is a config error either way).
+            let _ = std::fs::remove_file(addr);
+            let l = std::os::unix::net::UnixListener::bind(addr)
+                .with_context(|| format!("binding query socket {addr}"))?;
+            l.set_nonblocking(true)?;
+            Ok(Listener::Uds(l))
+        }
+        #[cfg(not(unix))]
+        {
+            bail!("unix-domain sockets are unavailable on this platform — use host:port")
+        }
+    }
+
+    /// Non-blocking accept: `Ok(None)` when no connection is pending.
+    fn accept(&self) -> Result<Option<Box<dyn Wire>>> {
+        match self {
+            Listener::Tcp(l) => match l.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(Some(CONN_TIMEOUT))?;
+                    stream.set_write_timeout(Some(CONN_TIMEOUT))?;
+                    Ok(Some(Box::new(stream)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e).context("accepting query connection"),
+            },
+            #[cfg(unix)]
+            Listener::Uds(l) => match l.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_read_timeout(Some(CONN_TIMEOUT))?;
+                    stream.set_write_timeout(Some(CONN_TIMEOUT))?;
+                    Ok(Some(Box::new(stream)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e).context("accepting query connection"),
+            },
+        }
+    }
+}
+
+/// The lead rank's resident query endpoint: a listener thread answering
+/// read requests from the latest published [`ServeSnapshot`].
+pub struct QueryServer {
+    tx: Sender<ServeSnapshot>,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    addr: String,
+}
+
+impl QueryServer {
+    /// Bind `addr` and start the server thread. Until the first
+    /// [`publish`](QueryServer::publish) every request is answered with
+    /// an `error` frame ("no snapshot published yet").
+    pub fn start(addr: &str) -> Result<QueryServer> {
+        let listener = Listener::bind(addr)?;
+        let (tx, rx) = mpsc::channel::<ServeSnapshot>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("csopt-query".into())
+            .spawn(move || serve_loop(listener, rx, stop2))
+            .context("spawning query server thread")?;
+        Ok(QueryServer { tx, stop, handle: Some(handle), addr: addr.to_string() })
+    }
+
+    /// Publish a new epoch snapshot; the server answers from the most
+    /// recent one it has drained off the channel.
+    pub fn publish(&self, snap: ServeSnapshot) {
+        let _ = self.tx.send(snap);
+    }
+}
+
+impl Drop for QueryServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        if !self.addr.contains(':') {
+            let _ = std::fs::remove_file(&self.addr);
+        }
+    }
+}
+
+fn serve_loop(listener: Listener, rx: Receiver<ServeSnapshot>, stop: Arc<AtomicBool>) {
+    let mut latest: Option<ServeSnapshot> = None;
+    while !stop.load(Ordering::SeqCst) {
+        // drain to the newest snapshot before answering anything
+        while let Ok(snap) = rx.try_recv() {
+            latest = Some(snap);
+        }
+        match listener.accept() {
+            Ok(Some(mut conn)) => {
+                // one connection at a time: requests are small and the
+                // CONN_TIMEOUT bounds a wedged peer, so a serial loop
+                // keeps the thread free of shared mutable state
+                let _ = handle_conn(conn.as_mut(), latest.as_ref());
+            }
+            Ok(None) => std::thread::sleep(Duration::from_millis(5)),
+            Err(_) => break,
+        }
+    }
+}
+
+/// Answer requests on one connection until the peer hangs up.
+fn handle_conn(conn: &mut dyn Wire, snap: Option<&ServeSnapshot>) -> Result<()> {
+    let mut payload = Vec::new();
+    loop {
+        // requests are header-only (rows ride in the JSON), hence max_n=0
+        let header = match read_frame(conn, &mut payload, 0) {
+            Ok((h, _)) => h,
+            Err(_) => return Ok(()), // EOF / timeout: peer is done
+        };
+        let op = frame_op(&header)?;
+        let reply = answer(&op, &header, snap);
+        match reply {
+            Ok((op, extra, data)) => {
+                let extra: Vec<(&str, Json)> =
+                    extra.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+                write_frame(conn, &op, extra, &data)?;
+            }
+            Err(e) => {
+                write_frame(conn, "error", vec![("msg", s(&format!("{e:#}")))], &[])?;
+            }
+        }
+    }
+}
+
+type Reply = (String, Vec<(String, Json)>, Vec<f32>);
+
+fn answer(op: &str, header: &Json, snap: Option<&ServeSnapshot>) -> Result<Reply> {
+    let snap = snap.ok_or_else(|| {
+        anyhow!("no snapshot published yet — the first epoch has not completed")
+    })?;
+    match op {
+        "ping" => Ok((
+            "pong".into(),
+            vec![
+                ("epoch".into(), num(snap.epoch as f64)),
+                ("step".into(), num(snap.step as f64)),
+            ],
+            Vec::new(),
+        )),
+        "stats" => {
+            let layers: Vec<Json> = snap
+                .layers
+                .iter()
+                .map(|(name, (d, data))| {
+                    obj(vec![
+                        ("name", s(name)),
+                        ("rows", num((data.len() / d.max(&1)) as f64)),
+                        ("dim", num(*d as f64)),
+                    ])
+                })
+                .collect();
+            let sketches: Vec<Json> = snap
+                .sketches
+                .iter()
+                .map(|(name, sk)| {
+                    let (depth, width, dim) = sk.geometry();
+                    let kind = match sk {
+                        AuxSketch::Signed(_) => "count-sketch",
+                        AuxSketch::Min(_) => "count-min",
+                    };
+                    obj(vec![
+                        ("name", s(name)),
+                        ("kind", s(kind)),
+                        ("depth", num(depth as f64)),
+                        ("width", num(width as f64)),
+                        ("dim", num(dim as f64)),
+                    ])
+                })
+                .collect();
+            Ok((
+                "stats".into(),
+                vec![
+                    ("epoch".into(), num(snap.epoch as f64)),
+                    ("step".into(), num(snap.step as f64)),
+                    ("valid_ppl".into(), num(snap.valid_ppl)),
+                    ("layers".into(), Json::Arr(layers)),
+                    ("sketches".into(), Json::Arr(sketches)),
+                ],
+                Vec::new(),
+            ))
+        }
+        "query" => {
+            let pattern = header.req("layer")?.as_str().ok_or_else(|| anyhow!("bad layer"))?;
+            let ids = header_rows(header)?;
+            let names: Vec<&String> =
+                snap.layers.keys().filter(|k| glob_match(pattern, k)).collect();
+            let name = match names.as_slice() {
+                [one] => (*one).clone(),
+                [] => bail!(
+                    "no layer matches {pattern:?} — available: {}",
+                    snap.layers.keys().cloned().collect::<Vec<_>>().join(", ")
+                ),
+                many => bail!(
+                    "layer glob {pattern:?} is ambiguous: {}",
+                    many.iter().map(|n| n.as_str()).collect::<Vec<_>>().join(", ")
+                ),
+            };
+            let (d, data) = &snap.layers[&name];
+            let d = (*d).max(1);
+            let n = data.len() / d;
+            let mut out = Vec::with_capacity(ids.len() * d);
+            for &id in &ids {
+                let id = id as usize;
+                if id >= n {
+                    bail!("row {id} out of range for layer {name} ({n} rows)");
+                }
+                out.extend_from_slice(&data[id * d..(id + 1) * d]);
+            }
+            Ok((
+                "rows".into(),
+                vec![
+                    ("name".into(), s(&name)),
+                    ("d".into(), num(d as f64)),
+                    ("epoch".into(), num(snap.epoch as f64)),
+                ],
+                out,
+            ))
+        }
+        "materialize" => {
+            let pattern =
+                header.req("sketch")?.as_str().ok_or_else(|| anyhow!("bad sketch"))?;
+            let ids = header_rows(header)?;
+            let hits: Vec<usize> = snap
+                .sketches
+                .iter()
+                .enumerate()
+                .filter(|(_, (k, _))| glob_match(pattern, k))
+                .map(|(i, _)| i)
+                .collect();
+            let i = match hits.as_slice() {
+                [one] => *one,
+                [] => bail!(
+                    "no sketch matches {pattern:?} — available: {}",
+                    snap.sketches
+                        .iter()
+                        .map(|(k, _)| k.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+                many => bail!(
+                    "sketch glob {pattern:?} is ambiguous: {}",
+                    many.iter()
+                        .map(|&i| snap.sketches[i].0.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+            };
+            let (name, sk) = &snap.sketches[i];
+            let (_, _, dim) = sk.geometry();
+            let mut out = vec![0.0f32; ids.len() * dim];
+            sk.estimate_rows(&ids, &mut out);
+            Ok((
+                "rows".into(),
+                vec![
+                    ("name".into(), s(name)),
+                    ("d".into(), num(dim as f64)),
+                    ("epoch".into(), num(snap.epoch as f64)),
+                ],
+                out,
+            ))
+        }
+        other => bail!("unknown query op {other:?} (ping, stats, query, materialize)"),
+    }
+}
+
+/// Pull the `rows` id array out of a request header, bounded by
+/// [`MAX_QUERY_ROWS`].
+fn header_rows(header: &Json) -> Result<Vec<u64>> {
+    let arr = header.req("rows")?.as_arr().ok_or_else(|| anyhow!("rows must be an array"))?;
+    if arr.is_empty() {
+        bail!("rows is empty — nothing to return");
+    }
+    if arr.len() > MAX_QUERY_ROWS {
+        bail!("{} rows requested, per-request cap is {MAX_QUERY_ROWS}", arr.len());
+    }
+    arr.iter()
+        .map(|v| v.as_usize().map(|u| u as u64).ok_or_else(|| anyhow!("bad row id {v:?}")))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// client side (cmd_query + tests)
+
+fn connect(addr: &str) -> Result<Box<dyn Wire>> {
+    if addr.contains(':') {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to query address {addr}"))?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(CLIENT_TIMEOUT))?;
+        stream.set_write_timeout(Some(CLIENT_TIMEOUT))?;
+        return Ok(Box::new(stream));
+    }
+    #[cfg(unix)]
+    {
+        let stream = std::os::unix::net::UnixStream::connect(addr)
+            .with_context(|| format!("connecting to query socket {addr}"))?;
+        stream.set_read_timeout(Some(CLIENT_TIMEOUT))?;
+        stream.set_write_timeout(Some(CLIENT_TIMEOUT))?;
+        Ok(Box::new(stream))
+    }
+    #[cfg(not(unix))]
+    {
+        bail!("unix-domain sockets are unavailable on this platform — use host:port")
+    }
+}
+
+fn roundtrip(
+    addr: &str,
+    op: &str,
+    extra: Vec<(&str, Json)>,
+    max_n: usize,
+) -> Result<(Json, Vec<f32>)> {
+    let mut conn = connect(addr)?;
+    write_frame(conn.as_mut(), op, extra, &[])?;
+    let mut payload = Vec::new();
+    let (header, _) = read_frame(conn.as_mut(), &mut payload, max_n)?;
+    if frame_op(&header)? == "error" {
+        let msg = header.req("msg")?.as_str().unwrap_or_default();
+        bail!("server refused {op}: {msg}");
+    }
+    Ok((header, payload))
+}
+
+/// `ping` → `(epoch, step)` of the latest published snapshot.
+pub fn client_ping(addr: &str) -> Result<(usize, usize)> {
+    let (header, _) = roundtrip(addr, "ping", vec![], 0)?;
+    let epoch = header.req("epoch")?.as_usize().ok_or_else(|| anyhow!("bad epoch"))?;
+    let step = header.req("step")?.as_usize().ok_or_else(|| anyhow!("bad step"))?;
+    Ok((epoch, step))
+}
+
+/// `stats` → the reply header (epoch/step/valid_ppl plus layer and
+/// sketch inventories) for the caller to render.
+pub fn client_stats(addr: &str) -> Result<Json> {
+    let (header, _) = roundtrip(addr, "stats", vec![], 0)?;
+    Ok(header)
+}
+
+/// `query`/`materialize` → `(resolved name, d, rows)` with the payload
+/// holding `rows.len() * d` f32s in request order.
+pub fn client_rows(
+    addr: &str,
+    op: &str,
+    name: &str,
+    rows: &[u64],
+) -> Result<(String, usize, Vec<f32>)> {
+    let key = if op == "materialize" { "sketch" } else { "layer" };
+    let ids: Vec<Json> = rows.iter().map(|&r| num(r as f64)).collect();
+    let extra = vec![(key, s(name)), ("rows", Json::Arr(ids))];
+    // reply bound: we asked for rows.len() rows; d is capped by the reply
+    // itself, so bound by a generous per-row width
+    let (header, payload) = roundtrip(addr, op, extra, rows.len() * (1 << 16))?;
+    let resolved = header
+        .req("name")?
+        .as_str()
+        .ok_or_else(|| anyhow!("reply without name"))?
+        .to_string();
+    let d = header.req("d")?.as_usize().ok_or_else(|| anyhow!("reply without d"))?;
+    if payload.len() != rows.len() * d {
+        bail!("reply holds {} f32s for {} rows of dim {d}", payload.len(), rows.len());
+    }
+    Ok((resolved, d, payload))
+}
+
+/// Parse a CLI rows spec: `"0,5,9"` (comma list) or `"0..16"`
+/// (half-open range).
+pub fn parse_rows(spec: &str) -> Result<Vec<u64>> {
+    if let Some((a, b)) = spec.split_once("..") {
+        let lo: u64 = a.trim().parse().with_context(|| format!("bad range start {a:?}"))?;
+        let hi: u64 = b.trim().parse().with_context(|| format!("bad range end {b:?}"))?;
+        if hi <= lo {
+            bail!("empty range {spec:?}");
+        }
+        if (hi - lo) as usize > MAX_QUERY_ROWS {
+            bail!("range {spec:?} asks for {} rows, cap is {MAX_QUERY_ROWS}", hi - lo);
+        }
+        return Ok((lo..hi).collect());
+    }
+    spec.split(',')
+        .map(|t| t.trim().parse::<u64>().with_context(|| format!("bad row id {t:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::CountSketch;
+
+    fn test_snapshot() -> ServeSnapshot {
+        let mut layers = BTreeMap::new();
+        // 3 rows × dim 2: row i = [i, 10i]
+        layers.insert(
+            "emb".to_string(),
+            (2usize, vec![0.0, 0.0, 1.0, 10.0, 2.0, 20.0]),
+        );
+        let mut cs = CountSketch::new(2, 32, 2, 7);
+        cs.update(&[3], &[1.5, -2.5]);
+        ServeSnapshot {
+            epoch: 4,
+            step: 100,
+            valid_ppl: 12.5,
+            layers,
+            sketches: vec![("emb.m".to_string(), AuxSketch::Signed(cs))],
+        }
+    }
+
+    #[test]
+    fn parse_rows_list_and_range() {
+        assert_eq!(parse_rows("0,5,9").unwrap(), vec![0, 5, 9]);
+        assert_eq!(parse_rows("2..5").unwrap(), vec![2, 3, 4]);
+        assert!(parse_rows("5..2").is_err());
+        assert!(parse_rows("abc").is_err());
+    }
+
+    #[test]
+    fn answers_over_a_socket() {
+        let dir = std::env::temp_dir().join(format!("csopt-query-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let sock = dir.join("q.sock").to_string_lossy().to_string();
+        let server = QueryServer::start(&sock).unwrap();
+
+        // before any publish: every op is refused
+        let err = client_ping(&sock).unwrap_err().to_string();
+        assert!(err.contains("no snapshot"), "{err}");
+
+        server.publish(test_snapshot());
+        // the publish lands asynchronously; retry until the server's
+        // drained it (bounded)
+        let mut pong = None;
+        for _ in 0..200 {
+            if let Ok(p) = client_ping(&sock) {
+                pong = Some(p);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(pong, Some((4, 100)));
+
+        let (name, d, rows) = client_rows(&sock, "query", "em*", &[1, 2]).unwrap();
+        assert_eq!((name.as_str(), d), ("emb", 2));
+        assert_eq!(rows, vec![1.0, 10.0, 2.0, 20.0]);
+
+        let (name, d, est) = client_rows(&sock, "materialize", "emb.m", &[3]).unwrap();
+        assert_eq!((name.as_str(), d), ("emb.m", 2));
+        assert_eq!(est, vec![1.5, -2.5]); // single id, no collisions at w=32
+
+        let err =
+            client_rows(&sock, "query", "nope", &[0]).unwrap_err().to_string();
+        assert!(err.contains("no layer matches"), "{err}");
+        let err = client_rows(&sock, "query", "emb", &[99]).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+
+        drop(server);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -194,6 +194,33 @@ impl CountMinSketch {
         self.store.fold_half();
         self.hasher = self.hasher.halved();
     }
+
+    /// Full `[v·w·d]` tensor snapshot of the sketch state, regardless of
+    /// placement. **Collective** when the store is partitioned — every
+    /// rank must call in lockstep and all receive the identical buffer
+    /// (see [`SketchStore::snapshot_full`]).
+    pub fn snapshot_state(&self) -> Vec<f32> {
+        self.store.snapshot_full()
+    }
+
+    /// Restore from a [`Self::snapshot_state`] buffer. Rank-local: each
+    /// store copies out the slice it owns under its *current* partition,
+    /// which may differ from the partition that wrote the snapshot.
+    pub fn restore_state(&mut self, full: &[f32]) {
+        self.store.restore_full(full);
+    }
+
+    /// A whole-tensor local clone of the current state under the same
+    /// hash family. **Collective** when partitioned (rides on
+    /// [`Self::snapshot_state`]) — every rank must call in lockstep; the
+    /// serve read path hands the lead rank's clone to the query listener
+    /// so concurrent reads never touch the training store.
+    pub fn to_local(&self) -> CountMinSketch {
+        let full = self.store.snapshot_full();
+        let mut store = LocalStore::zeros(self.store.depth(), self.store.width(), self.store.dim());
+        store.tensor_mut().unwrap().load(&full);
+        CountMinSketch { store: Box::new(store), hasher: self.hasher.clone() }
+    }
 }
 
 #[cfg(test)]

@@ -117,6 +117,36 @@ pub trait SketchStore: Send + std::fmt::Debug {
     /// distributed run does not support).
     fn fold_half(&mut self);
 
+    /// The full `[v·w·d]` tensor as a flat buffer, regardless of where
+    /// the state lives. For a local store this is a copy of the backing
+    /// tensor; for a partitioned store it is a **collective** (every
+    /// rank contributes its owned width slice and all-reduces — exact,
+    /// because each cell has exactly one owner), so all ranks must call
+    /// it in lockstep. This is the layout-independent serialization the
+    /// serve snapshot/rejoin protocol rides on (DESIGN.md §13).
+    fn snapshot_full(&self) -> Vec<f32> {
+        self.tensor()
+            .expect("snapshot_full: store holds no local tensor and does not override")
+            .data()
+            .to_vec()
+    }
+
+    /// Load state from a full `[v·w·d]` flat buffer (the inverse of
+    /// [`snapshot_full`](SketchStore::snapshot_full)). Rank-local even
+    /// for a partitioned store — each rank copies just its own width
+    /// slice — so a worker rejoining under a *different* partition
+    /// restores correctly from the same buffer.
+    fn restore_full(&mut self, full: &[f32]) {
+        assert_eq!(
+            full.len(),
+            self.depth() * self.width() * self.dim(),
+            "restore_full: buffer geometry mismatch"
+        );
+        self.tensor_mut()
+            .expect("restore_full: store holds no local tensor and does not override")
+            .load(full);
+    }
+
     fn clone_box(&self) -> Box<dyn SketchStore>;
 }
 

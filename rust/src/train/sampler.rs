@@ -70,6 +70,19 @@ impl CandidateSampler {
         CandidateSampler::new(vocab, nc, seed)
     }
 
+    /// The sampler's RNG state, for the serve snapshot: restoring it
+    /// resumes the negative-sampling stream exactly where the snapshot
+    /// left it, which is what keeps a resumed run bitwise-identical to
+    /// an uninterrupted one.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// See [`Self::rng_state`].
+    pub fn set_rng_state(&mut self, s: [u64; 4]) {
+        self.rng.set_state(s);
+    }
+
     /// Build the candidate set for one batch of targets.
     pub fn sample(&mut self, targets: &[u32]) -> Candidates {
         if self.nc == self.vocab {

@@ -234,6 +234,19 @@ pub struct DistParams {
     pub comm_k: usize,
     /// Sketch-space momentum coefficient `ρ ∈ [0, 1)`.
     pub comm_momentum: f32,
+    /// Serve-mode snapshot path (DESIGN.md §13): non-empty switches the
+    /// run into the resident epoch loop — every rank snapshots full
+    /// training state after each epoch, restores it on (re)start, and a
+    /// killed worker rejoins from it (`mode = sketch` only).
+    pub snapshot: String,
+    /// Serve-mode read-path listener (rank 0 only): a socket address the
+    /// `csopt query` client talks to while training runs. Empty = no
+    /// read path.
+    pub query_socket: String,
+    /// Transport I/O timeout override in milliseconds (0 = the built-in
+    /// 120 s default). The serve loop shortens it so a dead worker is
+    /// detected in seconds, not minutes.
+    pub heartbeat_ms: u64,
 }
 
 impl Default for DistParams {
@@ -248,6 +261,9 @@ impl Default for DistParams {
             comm_d: 3,
             comm_k: 256,
             comm_momentum: 0.9,
+            snapshot: String::new(),
+            query_socket: String::new(),
+            heartbeat_ms: 0,
         }
     }
 }
@@ -369,7 +385,7 @@ const MACH_KEYS: &[&str] =
 
 const DIST_KEYS: &[&str] = &[
     "mode", "rank", "workers", "socket", "replicas", "comm_w", "comm_d", "comm_k",
-    "comm_momentum",
+    "comm_momentum", "snapshot", "query_socket", "heartbeat_ms",
 ];
 
 /// Levenshtein distance (small strings — run-spec keys).
@@ -465,9 +481,13 @@ impl RunSpec {
                 "comm_d" | "comm-d" => d.comm_d = parse_num(key, value)?,
                 "comm_k" | "comm-k" => d.comm_k = parse_num(key, value)?,
                 "comm_momentum" | "comm-momentum" => d.comm_momentum = parse_num(key, value)?,
+                "snapshot" => d.snapshot = value.to_string(),
+                "query_socket" | "query-socket" => d.query_socket = value.to_string(),
+                "heartbeat_ms" | "heartbeat-ms" => d.heartbeat_ms = parse_num(key, value)?,
                 other => bail!(
                     "unknown [dist] key {other:?}{} (valid: mode, rank, workers, socket, \
-                     replicas, comm_w, comm_d, comm_k, comm_momentum)",
+                     replicas, comm_w, comm_d, comm_k, comm_momentum, snapshot, \
+                     query_socket, heartbeat_ms)",
                     suggest(other, DIST_KEYS.iter().copied())
                 ),
             }
@@ -507,6 +527,9 @@ impl RunSpec {
                         "dist.comm_d",
                         "dist.comm_k",
                         "dist.comm_momentum",
+                        "dist.snapshot",
+                        "dist.query_socket",
+                        "dist.heartbeat_ms",
                     ])
                 ),
                 TOP_KEYS.join(", ")
@@ -657,6 +680,15 @@ impl RunSpec {
                          drop the [dist] section or run the LM task"
                     );
                 }
+            }
+            if (!d.snapshot.is_empty() || !d.query_socket.is_empty())
+                && d.mode != DistMode::Sketch
+            {
+                bail!(
+                    "the serve loop (dist.snapshot / dist.query_socket) covers \
+                     mode = sketch only — data-parallel replica state is not \
+                     snapshotted yet; drop the serve keys or set mode = sketch"
+                );
             }
             let dd = DistParams::default();
             if d.mode == DistMode::CommSketch {
@@ -903,6 +935,15 @@ impl fmt::Display for RunSpec {
             if dp.comm_momentum != dd.comm_momentum {
                 writeln!(f, "comm_momentum = {}", dp.comm_momentum)?;
             }
+            if dp.snapshot != dd.snapshot {
+                writeln!(f, "snapshot = {}", dp.snapshot)?;
+            }
+            if dp.query_socket != dd.query_socket {
+                writeln!(f, "query_socket = {}", dp.query_socket)?;
+            }
+            if dp.heartbeat_ms != dd.heartbeat_ms {
+                writeln!(f, "heartbeat_ms = {}", dp.heartbeat_ms)?;
+            }
         }
         Ok(())
     }
@@ -940,28 +981,50 @@ pub struct Session {
 impl Session {
     /// Open the transport for a `[dist]` spec with `workers > 1`: rank 0
     /// listens on the socket, workers connect. Blocks until the whole
-    /// world is wired (bounded by the transport's I/O timeout). Returns
-    /// `None` for single-process specs.
+    /// world is wired (bounded by the transport's I/O timeout —
+    /// `dist.heartbeat_ms` overrides it when non-zero). A socket string
+    /// containing `:` is a TCP `host:port` address; anything else is a
+    /// unix-domain-socket path. Returns `None` for single-process specs.
     pub fn open_dist(spec: &RunSpec) -> Result<Option<DistCtx>> {
         let Some(d) = &spec.dist else { return Ok(None) };
         if d.workers <= 1 {
             return Ok(None);
         }
         if d.socket.is_empty() {
-            bail!("[dist] with workers = {} needs a socket path", d.workers);
+            bail!("[dist] with workers = {} needs a socket path (or a TCP host:port)", d.workers);
+        }
+        let timeout = if d.heartbeat_ms > 0 {
+            Some(std::time::Duration::from_millis(d.heartbeat_ms))
+        } else {
+            None
+        };
+        if d.socket.contains(':') {
+            use crate::comm::TcpTransport;
+            let transport = match (d.rank, timeout) {
+                (0, Some(t)) => TcpTransport::listen_with_timeout(&d.socket, d.workers, t)?,
+                (0, None) => TcpTransport::listen(&d.socket, d.workers)?,
+                (r, Some(t)) => TcpTransport::connect_with_timeout(&d.socket, r, d.workers, t)?,
+                (r, None) => TcpTransport::connect(&d.socket, r, d.workers)?,
+            };
+            return Ok(Some(DistCtx::new(d.rank, d.workers, transport)));
         }
         #[cfg(unix)]
         {
-            let transport = if d.rank == 0 {
-                crate::comm::UdsTransport::listen(&d.socket, d.workers)?
-            } else {
-                crate::comm::UdsTransport::connect(&d.socket, d.rank, d.workers)?
+            use crate::comm::UdsTransport;
+            let transport = match (d.rank, timeout) {
+                (0, Some(t)) => UdsTransport::listen_with_timeout(&d.socket, d.workers, t)?,
+                (0, None) => UdsTransport::listen(&d.socket, d.workers)?,
+                (r, Some(t)) => UdsTransport::connect_with_timeout(&d.socket, r, d.workers, t)?,
+                (r, None) => UdsTransport::connect(&d.socket, r, d.workers)?,
             };
             Ok(Some(DistCtx::new(d.rank, d.workers, transport)))
         }
         #[cfg(not(unix))]
         {
-            bail!("cross-process runs use unix-domain sockets, unavailable on this platform")
+            bail!(
+                "unix-domain sockets are unavailable on this platform — use a TCP \
+                 host:port as the [dist] socket instead"
+            )
         }
     }
 
@@ -1465,6 +1528,52 @@ sm = cs-adam
             RunSpec::parse("preset = tiny\n\n[dist]\nmode = comm_sketch\ncomm-k = 64\n").unwrap();
         assert_eq!(alias.dist.as_ref().unwrap().mode, DistMode::CommSketch);
         assert_eq!(alias.dist.as_ref().unwrap().comm_k, 64);
+    }
+
+    #[test]
+    fn serve_keys_round_trip_and_validate() {
+        // the serve triple round-trips in Display order (dash aliases
+        // parse to the same spec)
+        let text = "preset = tiny\n\n[dist]\nworkers = 2\nsocket = 127.0.0.1:7070\n\
+                    snapshot = /tmp/run.snap\nquery_socket = /tmp/q.sock\nheartbeat_ms = 500\n";
+        let spec = RunSpec::parse(text).unwrap();
+        let d = spec.dist.as_ref().unwrap();
+        assert_eq!(d.snapshot, "/tmp/run.snap");
+        assert_eq!(d.query_socket, "/tmp/q.sock");
+        assert_eq!(d.heartbeat_ms, 500);
+        assert_eq!(spec.to_string(), text);
+        assert_eq!(RunSpec::parse(&spec.to_string()).unwrap(), spec);
+        let alias = RunSpec::parse(
+            "preset = tiny\n\n[dist]\nquery-socket = /tmp/q\nheartbeat-ms = 250\n",
+        )
+        .unwrap();
+        let d = alias.dist.as_ref().unwrap();
+        assert_eq!((d.query_socket.as_str(), d.heartbeat_ms), ("/tmp/q", 250));
+        // serve keys are mode = sketch only (replica state is not
+        // snapshotted), and typos suggest the right key
+        for text in [
+            "preset = tiny\n\n[dist]\nmode = data\nsnapshot = /tmp/s\n",
+            "preset = tiny\n\n[dist]\nmode = comm-sketch\nquery_socket = /tmp/q\n",
+        ] {
+            let e = format!("{:#}", RunSpec::parse(text).unwrap_err());
+            assert!(e.contains("mode = sketch"), "{text:?}: {e}");
+        }
+        let mut s = RunSpec::default();
+        let e = format!("{:#}", s.set("dist.snapshto", "/tmp/s").unwrap_err());
+        assert!(e.contains("did you mean \"snapshot\"?"), "{e}");
+        // serve/placement keys never leak into the trained form
+        let mut spec = RunSpec::parse("preset = tiny\n\n[optim]\nemb = \"adam\"\nsm = \"adam\"\n")
+            .unwrap();
+        let base = spec.trained_form();
+        spec.dist = Some(DistParams {
+            workers: 2,
+            socket: "127.0.0.1:7070".to_string(),
+            snapshot: "/tmp/run.snap".to_string(),
+            query_socket: "/tmp/q.sock".to_string(),
+            heartbeat_ms: 500,
+            ..DistParams::default()
+        });
+        assert_eq!(spec.trained_form(), base);
     }
 
     /// The incoherent `[dist]` combos `mode` introduces must be rejected

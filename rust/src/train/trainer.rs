@@ -25,7 +25,8 @@ use crate::data::prefetch::PrefetchedBatches;
 use crate::metrics::MemoryLedger;
 use crate::model::linalg::clip_global_norm;
 use crate::model::LmGrads;
-use crate::optim::{FlatOptimizer, LrSchedule, OptimPolicy, OptimSpec, RowShape, SparseLayer};
+use crate::optim::{AuxSketch, FlatOptimizer, LrSchedule, OptimPolicy, OptimSpec, RowShape, SparseLayer};
+use crate::train::checkpoint::Checkpoint;
 use crate::train::engine::LmEngine;
 use crate::train::sampler::{stream_stripe, CandidateSampler};
 use crate::util::rng::Rng;
@@ -1019,6 +1020,156 @@ impl LmTrainer {
         Ok(step_loss)
     }
 
+    /// Full-state snapshot for the serve loop (DESIGN.md §13): params,
+    /// optimizer aux state, sampler RNG, plateau-schedule state and the
+    /// step counter — everything a fresh same-spec trainer needs to
+    /// resume **bitwise-identically** from an epoch boundary.
+    ///
+    /// **Collective** when any layer's sketches live on a partitioned
+    /// store: every rank must call in lockstep, and the layer order
+    /// (emb → sm → bias → trunk) is fixed for that reason. Covers
+    /// `mode = sketch` / single-process runs only — the data-parallel
+    /// replica state (per-replica samplers, recurrent state, comm-sketch
+    /// error feedback) is not snapshotted.
+    pub fn snapshot_state(&mut self, ck: &mut Checkpoint) -> Result<()> {
+        if self.dp.is_some() {
+            bail!(
+                "serve snapshots cover mode = sketch only — data-parallel replica \
+                 state (per-replica samplers, error feedback) is not snapshotted"
+            );
+        }
+        ck.set_scalar("step", self.step as u64);
+        for (i, w) in self.sampler.rng_state().iter().enumerate() {
+            ck.set_scalar(&format!("sampler.rng.{i}"), *w);
+        }
+        if let Some((lr, best, bad)) = self.opts.schedule.state() {
+            ck.set_scalar("schedule.lr", lr.to_bits() as u64);
+            ck.set_scalar("schedule.best", best.to_bits());
+            ck.set_scalar("schedule.bad", bad as u64);
+        }
+        ck.set_blob("params.emb", &self.emb.params);
+        ck.set_blob("params.sm", &self.sm.params);
+        ck.set_blob("params.bias", &self.sm_bias.params);
+        self.engine.pack_flat(&mut self.flat_params);
+        ck.set_blob("params.trunk", &self.flat_params);
+        for (layer, opt) in
+            [("emb", &self.emb.opt), ("sm", &self.sm.opt), ("bias", &self.sm_bias.opt)]
+        {
+            let mut put = |name: &str, blob: Vec<f32>| {
+                ck.blobs.insert(format!("opt.{layer}.{name}"), blob);
+            };
+            if !opt.save_state(&mut put) {
+                bail!(
+                    "optimizer {} on layer {layer} does not support state snapshots — \
+                     serve mode needs snapshot-capable optimizers",
+                    opt.name()
+                );
+            }
+        }
+        let mut put = |name: &str, blob: Vec<f32>| {
+            ck.blobs.insert(format!("opt.trunk.{name}"), blob);
+        };
+        if !self.flat_opt.save_state(&mut put) {
+            bail!(
+                "optimizer {} on the trunk does not support state snapshots — \
+                 serve mode needs snapshot-capable optimizers",
+                self.flat_opt.name()
+            );
+        }
+        Ok(())
+    }
+
+    /// Restore a [`Self::snapshot_state`] checkpoint into a fresh
+    /// same-spec trainer. Rank-local (partitioned stores each take their
+    /// own width slice, so a snapshot written under one world size
+    /// restores under any other). Recurrent state is reset — snapshots
+    /// are taken at epoch boundaries where it starts zeroed anyway.
+    pub fn restore_state(&mut self, ck: &Checkpoint) -> Result<()> {
+        if self.dp.is_some() {
+            bail!("serve snapshots cover mode = sketch only — cannot restore into a data-parallel trainer");
+        }
+        self.step = ck.scalar("step")? as usize;
+        let mut rs = [0u64; 4];
+        for (i, w) in rs.iter_mut().enumerate() {
+            *w = ck.scalar(&format!("sampler.rng.{i}"))?;
+        }
+        self.sampler.set_rng_state(rs);
+        if let Ok(lr) = ck.scalar("schedule.lr") {
+            self.opts.schedule.set_state((
+                f32::from_bits(lr as u32),
+                f64::from_bits(ck.scalar("schedule.best")?),
+                ck.scalar("schedule.bad")? as usize,
+            ));
+        }
+        for (name, params) in [
+            ("params.emb", &mut self.emb.params),
+            ("params.sm", &mut self.sm.params),
+            ("params.bias", &mut self.sm_bias.params),
+        ] {
+            let blob = ck.blob(name)?;
+            if blob.len() != params.len() {
+                bail!(
+                    "snapshot blob {name} holds {} floats but this spec's layer holds {} — \
+                     the snapshot was taken under a different preset/spec",
+                    blob.len(),
+                    params.len()
+                );
+            }
+            params.copy_from_slice(blob);
+        }
+        let trunk = ck.blob("params.trunk")?;
+        if trunk.len() != self.engine.flat_len() {
+            bail!(
+                "snapshot blob params.trunk holds {} floats but this engine's flat \
+                 vector holds {} — the snapshot was taken under a different preset/spec",
+                trunk.len(),
+                self.engine.flat_len()
+            );
+        }
+        self.engine.unpack_flat(trunk);
+        for (layer, opt) in [
+            ("emb", &mut self.emb.opt),
+            ("sm", &mut self.sm.opt),
+            ("bias", &mut self.sm_bias.opt),
+        ] {
+            let mut get =
+                |name: &str| ck.blobs.get(&format!("opt.{layer}.{name}")).cloned();
+            if !opt.load_state(&mut get) {
+                bail!(
+                    "optimizer {} on layer {layer} refused its snapshot (missing blob \
+                     or geometry mismatch) — was the snapshot taken under this spec?",
+                    opt.name()
+                );
+            }
+        }
+        let mut get = |name: &str| ck.blobs.get(&format!("opt.trunk.{name}")).cloned();
+        if !self.flat_opt.load_state(&mut get) {
+            bail!(
+                "optimizer {} on the trunk refused its snapshot (missing blob or \
+                 geometry mismatch) — was the snapshot taken under this spec?",
+                self.flat_opt.name()
+            );
+        }
+        self.reset_state();
+        Ok(())
+    }
+
+    /// The serve read path's materialize handles (DESIGN.md §13):
+    /// whole-tensor local clones of every auxiliary sketch the sparse
+    /// layers hold, keyed `"<layer>.<variable>"` (e.g. `"emb.m"`).
+    /// **Collective** when the backing stores are partitioned — call in
+    /// lockstep with [`Self::snapshot_state`], in the same fixed layer
+    /// order (emb → sm).
+    pub fn read_handles(&self) -> Vec<(String, AuxSketch)> {
+        let mut out = Vec::new();
+        for (layer, opt) in [("emb", &self.emb.opt), ("sm", &self.sm.opt)] {
+            for (var, sk) in opt.read_sketches() {
+                out.push((format!("{layer}.{var}"), sk));
+            }
+        }
+        out
+    }
+
     /// Evaluate perplexity over a held-out stream (at most `max_steps`
     /// windows, 0 = all). Uses a *fresh, fixed-seed* candidate sampler so
     /// evaluations are deterministic and comparable across trainers.
@@ -1189,6 +1340,38 @@ mod tests {
         let rp = par.train_epoch(train, 15).unwrap();
         assert_eq!(rs.mean_loss.to_bits(), rp.mean_loss.to_bits());
         assert_eq!(seq.emb.params, par.emb.params);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise() {
+        // the serve loop's recover-not-err contract in miniature: train
+        // an epoch, snapshot, restore into a fresh same-spec trainer,
+        // and the second epoch must be bit-identical to the
+        // uninterrupted run — params, loss curve and sampler stream
+        let corpus = SyntheticCorpus::generate(512, 20_000, 1.05, 0.6, 9);
+        let (train, _, _) = corpus.split(0.1, 0.05);
+        let mut a = tiny_trainer("cs-adam");
+        a.train_epoch(train, 25).unwrap();
+        let mut ck = crate::train::checkpoint::Checkpoint::new();
+        a.snapshot_state(&mut ck).unwrap();
+        let mut b = tiny_trainer("cs-adam");
+        b.restore_state(&ck).unwrap();
+        assert_eq!(b.step, a.step);
+        let ra = a.train_epoch(train, 25).unwrap();
+        let rb = b.train_epoch(train, 25).unwrap();
+        assert_eq!(ra.mean_loss.to_bits(), rb.mean_loss.to_bits());
+        assert_eq!(a.emb.params, b.emb.params);
+        assert_eq!(a.sm.params, b.sm.params);
+        assert_eq!(a.sm_bias.params, b.sm_bias.params);
+        // read handles: cs-adam publishes both moment sketches per layer
+        let handles = a.read_handles();
+        assert_eq!(handles.len(), 4);
+        assert_eq!(handles[0].0, "emb.m");
+        assert_eq!(handles[1].0, "emb.v");
+        // a wrong-spec trainer refuses the snapshot with the layer name
+        let mut c = tiny_trainer("cs-adam@w=8");
+        let e = format!("{:#}", c.restore_state(&ck).unwrap_err());
+        assert!(e.contains("emb"), "{e}");
     }
 
     #[test]

@@ -148,6 +148,20 @@ impl Rng {
     pub fn fork(&mut self) -> Rng {
         Rng::new(self.next_u64())
     }
+
+    /// The raw xoshiro256** state, for checkpointing a stream mid-run.
+    /// The cached Box–Muller spare is deliberately not part of the
+    /// state: [`Self::set_state`] clears it, and the only checkpointed
+    /// streams (candidate sampling) never draw normals.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Restore a stream from [`Self::state`].
+    pub fn set_state(&mut self, s: [u64; 4]) {
+        self.s = s;
+        self.spare_normal = None;
+    }
 }
 
 /// Zipf-distributed sampler over `{0, 1, …, n−1}` with exponent `s`

@@ -38,26 +38,64 @@ pub fn with_deadline<T: Send + 'static>(
     }
 }
 
-/// A deliberately misbehaving raw-socket peer for the `comm/uds.rs`
-/// fault-injection suite: speaks just enough of the §9 wire format
-/// (`u32 header_len | JSON header | raw-f32 payload`) to get past the
-/// handshake, then violates the protocol on purpose.
-#[cfg(unix)]
+/// A deliberately misbehaving raw-socket peer for the transport
+/// fault-injection suite (`comm/uds.rs` + `comm/tcp.rs`): speaks just
+/// enough of the §9 wire format (`u32 header_len | JSON header |
+/// raw-f32 payload`) to get past the handshake, then violates the
+/// protocol on purpose. The frame writers are generic over `Write`, so
+/// one rogue covers both socket families.
 pub mod rogue {
     use std::io::Write;
-    use std::os::unix::net::UnixStream;
+    use std::net::TcpStream;
     use std::time::{Duration, Instant};
 
-    /// Connect to the coordinator socket, retrying while it appears.
-    pub fn connect(path: &str, timeout: Duration) -> UnixStream {
+    /// One rogue connection, either socket family behind a `Write` face.
+    pub enum Conn {
+        #[cfg(unix)]
+        Uds(std::os::unix::net::UnixStream),
+        Tcp(TcpStream),
+    }
+
+    impl Write for Conn {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            match self {
+                #[cfg(unix)]
+                Conn::Uds(s) => s.write(buf),
+                Conn::Tcp(s) => s.write(buf),
+            }
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            match self {
+                #[cfg(unix)]
+                Conn::Uds(s) => s.flush(),
+                Conn::Tcp(s) => s.flush(),
+            }
+        }
+    }
+
+    /// Connect to a coordinator endpoint — `host:port` → TCP, anything
+    /// else → unix-domain socket — retrying while it comes up.
+    pub fn connect(ep: &str, timeout: Duration) -> Conn {
         let deadline = Instant::now() + timeout;
         loop {
-            match UnixStream::connect(path) {
+            let attempt: std::io::Result<Conn> = if ep.contains(':') {
+                TcpStream::connect(ep).map(Conn::Tcp)
+            } else {
+                #[cfg(unix)]
+                {
+                    std::os::unix::net::UnixStream::connect(ep).map(Conn::Uds)
+                }
+                #[cfg(not(unix))]
+                {
+                    panic!("unix-socket endpoint {ep} on a non-unix platform")
+                }
+            };
+            match attempt {
                 Ok(s) => return s,
                 Err(e) => {
                     assert!(
                         Instant::now() <= deadline,
-                        "rogue peer: coordinator socket {path} never came up: {e}"
+                        "rogue peer: coordinator endpoint {ep} never came up: {e}"
                     );
                     std::thread::sleep(Duration::from_millis(10));
                 }
@@ -67,7 +105,7 @@ pub mod rogue {
 
     /// Write one well-formed frame: `header` must be the JSON header
     /// text (the real transport always includes an `"n"` field).
-    pub fn send_frame(stream: &mut UnixStream, header: &str, payload: &[f32]) {
+    pub fn send_frame<W: Write>(stream: &mut W, header: &str, payload: &[f32]) {
         stream.write_all(&(header.len() as u32).to_le_bytes()).unwrap();
         stream.write_all(header.as_bytes()).unwrap();
         for x in payload {
@@ -77,7 +115,7 @@ pub mod rogue {
     }
 
     /// A valid hello frame for `rank` of `world`.
-    pub fn send_hello(stream: &mut UnixStream, rank: usize, world: usize) {
+    pub fn send_hello<W: Write>(stream: &mut W, rank: usize, world: usize) {
         send_frame(
             stream,
             &format!("{{\"op\":\"hello\",\"n\":0,\"rank\":{rank},\"world\":{world}}}"),
@@ -87,7 +125,7 @@ pub mod rogue {
 
     /// A frame whose length prefix promises `claimed` header bytes but
     /// ships only `sent` of them (the truncated-frame fault).
-    pub fn send_truncated_header(stream: &mut UnixStream, claimed: u32, sent: usize) {
+    pub fn send_truncated_header<W: Write>(stream: &mut W, claimed: u32, sent: usize) {
         stream.write_all(&claimed.to_le_bytes()).unwrap();
         stream.write_all(&vec![b'{'; sent]).unwrap();
         stream.flush().unwrap();

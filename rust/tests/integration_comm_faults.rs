@@ -1,18 +1,25 @@
-//! Fault-injection suite for the unix-domain-socket transport
-//! (`comm/uds.rs`). A distributed run's failure mode must be a
+//! Fault-injection suite for the socket transports (`comm/uds.rs` +
+//! `comm/tcp.rs`). A distributed run's failure mode must be a
 //! contextual `Err` **within the I/O timeout** — never a hang: every
-//! scenario here drives a real `UdsTransport` endpoint against a
-//! deliberately misbehaving raw-socket peer (`tests/common::rogue`) and
-//! every test body runs under a `with_deadline` watchdog, so a
-//! regression back to blocking forever fails in seconds.
+//! scenario drives a real transport endpoint against a deliberately
+//! misbehaving raw-socket peer (`tests/common::rogue`) and every test
+//! body runs under a `with_deadline` watchdog, so a regression back to
+//! blocking forever fails in seconds.
+//!
+//! Both transports share the frame codec (`comm/frame.rs`), so the
+//! rogue scenarios are parameterized over the wire: each fault runs
+//! once per socket family and must surface the *same* error text —
+//! the serve loop's recovery logic keys off these messages regardless
+//! of transport.
 #![cfg(unix)]
 
 mod common;
 
+use std::net::TcpListener;
 use std::thread;
 use std::time::Duration;
 
-use csopt::comm::{Transport, UdsTransport};
+use csopt::comm::{TcpTransport, Transport, UdsTransport};
 
 use common::{rogue, with_deadline};
 
@@ -29,123 +36,243 @@ fn sock_path(tag: &str) -> String {
         .into_owned()
 }
 
+#[derive(Clone, Copy, Debug)]
+enum Wire {
+    Uds,
+    Tcp,
+}
+
+/// A coordinator endpoint of either family. TCP binds eagerly (port 0 →
+/// the OS picks; rogue peers get the resolved address); UDS binds
+/// inside `accept` and the rogue's connect retry covers the gap.
+struct Coord {
+    ep: String,
+    tcp: Option<TcpListener>,
+}
+
+impl Coord {
+    fn bind(wire: Wire, tag: &str) -> Coord {
+        match wire {
+            Wire::Uds => Coord { ep: sock_path(tag), tcp: None },
+            Wire::Tcp => {
+                let l = TcpListener::bind("127.0.0.1:0").unwrap();
+                let ep = l.local_addr().unwrap().to_string();
+                Coord { ep, tcp: Some(l) }
+            }
+        }
+    }
+
+    /// Rank 0's side: wait for `world - 1` hellos under the short
+    /// timeout, behind the shared `Transport` face.
+    fn accept(&self, world: usize) -> csopt::Result<Box<dyn Transport>> {
+        match &self.tcp {
+            None => UdsTransport::listen_with_timeout(&self.ep, world, IO)
+                .map(|t| Box::new(t) as Box<dyn Transport>),
+            Some(l) => TcpTransport::accept_world(l, &self.ep, world, IO)
+                .map(|t| Box::new(t) as Box<dyn Transport>),
+        }
+    }
+
+    fn cleanup(&self) {
+        if self.tcp.is_none() {
+            UdsTransport::cleanup(&self.ep);
+        }
+    }
+}
+
+/// Run one rogue-peer scenario: `fault` drives the misbehaving side
+/// against the coordinator's 2-rank accept + allreduce, and the
+/// coordinator's error text is returned for the per-wire assertion.
+fn rogue_scenario(
+    wire: Wire,
+    tag: &str,
+    fault: impl FnOnce(&mut rogue::Conn) + Send + 'static,
+) -> String {
+    let coord = Coord::bind(wire, tag);
+    with_deadline(DEADLINE, move || {
+        let ep = coord.ep.clone();
+        let peer = thread::spawn(move || {
+            let mut s = rogue::connect(&ep, DEADLINE);
+            rogue::send_hello(&mut s, 1, 2);
+            fault(&mut s);
+            s // keep the stream alive until the coordinator has failed
+        });
+        let mut t0 = coord.accept(2).unwrap();
+        let mut buf = vec![0.0f32; 4];
+        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
+        drop(peer.join().unwrap());
+        coord.cleanup();
+        format!("{e:#}")
+    })
+}
+
 /// Nobody ever connects: the coordinator's handshake must time out with
 /// an actionable error instead of waiting forever.
-#[test]
-fn handshake_timeout_surfaces_err() {
-    let path = sock_path("hstimeout");
+fn handshake_timeout(wire: Wire) {
+    let coord = Coord::bind(wire, "hstimeout");
     let err = with_deadline(DEADLINE, move || {
-        let e = UdsTransport::listen_with_timeout(&path, 2, IO).map(|_| ()).unwrap_err();
-        UdsTransport::cleanup(&path);
+        let e = coord.accept(2).map(|_| ()).unwrap_err();
+        coord.cleanup();
         format!("{e:#}")
     });
-    assert!(err.contains("timed out waiting for workers"), "{err}");
+    assert!(err.contains("timed out waiting for workers"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn handshake_timeout_surfaces_err_uds() {
+    handshake_timeout(Wire::Uds);
+}
+
+#[test]
+fn handshake_timeout_surfaces_err_tcp() {
+    handshake_timeout(Wire::Tcp);
 }
 
 /// The coordinator never appears: a worker's connect must give up with
-/// the socket path in the error.
-#[test]
-fn connect_timeout_surfaces_err() {
-    let path = sock_path("cntimeout");
+/// the endpoint in the error. (The TCP leg binds a port and drops it, so
+/// connects are refused rather than swallowed.)
+fn connect_timeout(wire: Wire) {
+    let ep = match wire {
+        Wire::Uds => sock_path("cntimeout"),
+        Wire::Tcp => {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+            // listener drops here — the port refuses from now on
+        }
+    };
     let err = with_deadline(DEADLINE, move || {
-        let e = UdsTransport::connect_with_timeout(&path, 1, 2, IO).map(|_| ()).unwrap_err();
+        let e = match wire {
+            Wire::Uds => {
+                UdsTransport::connect_with_timeout(&ep, 1, 2, IO).map(|_| ()).unwrap_err()
+            }
+            Wire::Tcp => {
+                TcpTransport::connect_with_timeout(&ep, 1, 2, IO).map(|_| ()).unwrap_err()
+            }
+        };
         format!("{e:#}")
     });
-    assert!(err.contains("never came up"), "{err}");
+    assert!(err.contains("never came up"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn connect_timeout_surfaces_err_uds() {
+    connect_timeout(Wire::Uds);
+}
+
+#[test]
+fn connect_timeout_surfaces_err_tcp() {
+    connect_timeout(Wire::Tcp);
 }
 
 /// A peer that promises a 64-byte frame header but ships 10 bytes and
 /// goes silent: the coordinator's collective read must fail within the
 /// I/O timeout, naming the rank and the op it was receiving.
-#[test]
-fn truncated_frame_surfaces_err() {
-    let path = sock_path("trunc");
-    let err = with_deadline(DEADLINE, move || {
-        let p2 = path.clone();
-        let peer = thread::spawn(move || {
-            let mut s = rogue::connect(&p2, DEADLINE);
-            rogue::send_hello(&mut s, 1, 2);
-            rogue::send_truncated_header(&mut s, 64, 10);
-            s // keep the stream open: the fault is silence, not EOF
-        });
-        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
-        let mut buf = vec![0.0f32; 4];
-        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
-        drop(peer.join().unwrap());
-        UdsTransport::cleanup(&path);
-        format!("{e:#}")
+fn truncated_frame(wire: Wire) {
+    let err = rogue_scenario(wire, "trunc", |s| {
+        rogue::send_truncated_header(s, 64, 10);
     });
-    assert!(err.contains("receiving allreduce partial from rank 1"), "{err}");
+    assert!(err.contains("receiving allreduce partial from rank 1"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn truncated_frame_surfaces_err_uds() {
+    truncated_frame(Wire::Uds);
+}
+
+#[test]
+fn truncated_frame_surfaces_err_tcp() {
+    truncated_frame(Wire::Tcp);
 }
 
 /// A header whose `n` promises vastly more payload f32s than the
 /// collective's buffer holds: rejected as divergence before any giant
 /// allocation or read.
-#[test]
-fn oversized_payload_header_surfaces_err() {
-    let path = sock_path("oversize");
-    let err = with_deadline(DEADLINE, move || {
-        let p2 = path.clone();
-        let peer = thread::spawn(move || {
-            let mut s = rogue::connect(&p2, DEADLINE);
-            rogue::send_hello(&mut s, 1, 2);
-            rogue::send_frame(&mut s, "{\"op\":\"allreduce\",\"n\":1000000}", &[]);
-            s
-        });
-        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
-        let mut buf = vec![0.0f32; 4];
-        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
-        drop(peer.join().unwrap());
-        UdsTransport::cleanup(&path);
-        format!("{e:#}")
+fn oversized_payload_header(wire: Wire) {
+    let err = rogue_scenario(wire, "oversize", |s| {
+        rogue::send_frame(s, "{\"op\":\"allreduce\",\"n\":1000000}", &[]);
     });
-    assert!(err.contains("exceeds the expected 4"), "{err}");
+    assert!(err.contains("exceeds the expected 4"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn oversized_payload_header_surfaces_err_uds() {
+    oversized_payload_header(Wire::Uds);
+}
+
+#[test]
+fn oversized_payload_header_surfaces_err_tcp() {
+    oversized_payload_header(Wire::Tcp);
 }
 
 /// An implausible header *length* prefix (10 MB of JSON) is rejected
 /// outright — a corrupt or hostile length cannot drive the allocation.
-#[test]
-fn implausible_header_length_surfaces_err() {
-    let path = sock_path("hugehdr");
-    let err = with_deadline(DEADLINE, move || {
-        let p2 = path.clone();
-        let peer = thread::spawn(move || {
-            let mut s = rogue::connect(&p2, DEADLINE);
-            rogue::send_hello(&mut s, 1, 2);
-            rogue::send_truncated_header(&mut s, 10_000_000, 16);
-            s
-        });
-        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
-        let mut buf = vec![0.0f32; 4];
-        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
-        drop(peer.join().unwrap());
-        UdsTransport::cleanup(&path);
-        format!("{e:#}")
+fn implausible_header_length(wire: Wire) {
+    let err = rogue_scenario(wire, "hugehdr", |s| {
+        rogue::send_truncated_header(s, 10_000_000, 16);
     });
-    assert!(err.contains("implausible frame header length"), "{err}");
+    assert!(err.contains("implausible frame header length"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn implausible_header_length_surfaces_err_uds() {
+    implausible_header_length(Wire::Uds);
+}
+
+#[test]
+fn implausible_header_length_surfaces_err_tcp() {
+    implausible_header_length(Wire::Tcp);
 }
 
 /// A worker that vanishes mid-collective (hello, then hangup): the
 /// coordinator's all-reduce must surface the broken stream as an error,
-/// not wedge the surviving ranks.
-#[test]
-fn worker_disconnect_mid_allreduce_surfaces_err() {
-    let path = sock_path("wdrop");
+/// not wedge the surviving ranks. This is the exact fault the serve
+/// loop turns into a stall-and-resume restart (DESIGN.md §13).
+fn worker_disconnect_mid_allreduce(wire: Wire) {
+    let coord = Coord::bind(wire, "wdrop");
     let err = with_deadline(DEADLINE, move || {
-        let p2 = path.clone();
+        let ep = coord.ep.clone();
         let peer = thread::spawn(move || {
-            let mut s = rogue::connect(&p2, DEADLINE);
+            let mut s = rogue::connect(&ep, DEADLINE);
             rogue::send_hello(&mut s, 1, 2);
             // dropping the stream closes it: the coordinator sees EOF
         });
-        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
+        let mut t0 = coord.accept(2).unwrap();
         peer.join().unwrap();
         let mut buf = vec![0.0f32; 4];
         let e = t0.all_reduce_sum(&mut buf).unwrap_err();
-        UdsTransport::cleanup(&path);
+        coord.cleanup();
         format!("{e:#}")
     });
-    assert!(err.contains("receiving allreduce partial from rank 1"), "{err}");
+    assert!(err.contains("receiving allreduce partial from rank 1"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn worker_disconnect_mid_allreduce_surfaces_err_uds() {
+    worker_disconnect_mid_allreduce(Wire::Uds);
+}
+
+#[test]
+fn worker_disconnect_mid_allreduce_surfaces_err_tcp() {
+    worker_disconnect_mid_allreduce(Wire::Tcp);
+}
+
+/// A peer whose op sequence diverges from the coordinator's (it answers
+/// the allreduce with a barrier frame) is called out as divergence.
+fn diverged_op_sequence(wire: Wire) {
+    let err = rogue_scenario(wire, "diverge", |s| {
+        rogue::send_frame(s, "{\"op\":\"barrier\",\"n\":0}", &[]);
+    });
+    assert!(err.contains("diverged"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn diverged_op_sequence_surfaces_err_uds() {
+    diverged_op_sequence(Wire::Uds);
+}
+
+#[test]
+fn diverged_op_sequence_surfaces_err_tcp() {
+    diverged_op_sequence(Wire::Tcp);
 }
 
 /// The coordinator dies mid-collective: the *worker* side must error
@@ -184,32 +311,10 @@ fn coordinator_disconnect_mid_allreduce_surfaces_err() {
     assert!(err.contains("rank 1") && err.contains("allreduce"), "{err}");
 }
 
-/// A peer whose op sequence diverges from the coordinator's (it answers
-/// the allreduce with a barrier frame) is called out as divergence.
-#[test]
-fn diverged_op_sequence_surfaces_err() {
-    let path = sock_path("diverge");
-    let err = with_deadline(DEADLINE, move || {
-        let p2 = path.clone();
-        let peer = thread::spawn(move || {
-            let mut s = rogue::connect(&p2, DEADLINE);
-            rogue::send_hello(&mut s, 1, 2);
-            rogue::send_frame(&mut s, "{\"op\":\"barrier\",\"n\":0}", &[]);
-            s
-        });
-        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
-        let mut buf = vec![0.0f32; 4];
-        let e = t0.all_reduce_sum(&mut buf).unwrap_err();
-        drop(peer.join().unwrap());
-        UdsTransport::cleanup(&path);
-        format!("{e:#}")
-    });
-    assert!(err.contains("diverged"), "{err}");
-}
-
 /// Sanity leg: with a *well-behaved* peer the short-timeout transport
 /// still completes collectives — the fault tests above fail because of
 /// the injected faults, not because the timeout is unrealistically low.
+/// (The TCP equivalent lives in `comm/tcp.rs`'s unit tests.)
 #[test]
 fn short_timeout_still_completes_honest_collectives() {
     let path = sock_path("honest");
@@ -230,5 +335,45 @@ fn short_timeout_still_completes_honest_collectives() {
         UdsTransport::cleanup(&path);
         assert_eq!(buf, vec![3.0f32; 3]);
         assert_eq!(wbuf, vec![3.0f32; 3]);
+    });
+}
+
+/// A stale socket file from a crashed coordinator must not block a
+/// restart (remove-then-bind with a liveness probe), while a *live*
+/// coordinator on the same path is refused instead of hijacked.
+#[test]
+fn stale_socket_cleanup_vs_live_coordinator() {
+    let path = sock_path("stale");
+    with_deadline(DEADLINE, move || {
+        // a dead coordinator's leftover: bind and drop, keeping the file
+        {
+            use std::os::unix::net::UnixListener;
+            let _ = std::fs::remove_file(&path);
+            let _stale = UnixListener::bind(&path).unwrap();
+        }
+        assert!(std::path::Path::new(&path).exists(), "stale socket file should remain");
+        // restart on the same path succeeds (probe finds no listener)…
+        let p2 = path.clone();
+        let worker = thread::spawn(move || {
+            let mut t = UdsTransport::connect_with_timeout(&p2, 1, 2, IO).unwrap();
+            let mut buf = vec![1.0f32; 2];
+            t.all_reduce_sum(&mut buf).unwrap();
+        });
+        let mut t0 = UdsTransport::listen_with_timeout(&path, 2, IO).unwrap();
+        let mut buf = vec![1.0f32; 2];
+        t0.all_reduce_sum(&mut buf).unwrap();
+        worker.join().unwrap();
+        assert_eq!(buf, vec![2.0f32; 2]);
+        UdsTransport::cleanup(&path);
+
+        // …but a live listener on the path is refused, not unlinked
+        {
+            use std::os::unix::net::UnixListener;
+            let _live = UnixListener::bind(&path).unwrap();
+            let e = UdsTransport::listen_with_timeout(&path, 2, IO).map(|_| ()).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(msg.contains("live coordinator"), "{msg}");
+        }
+        let _ = std::fs::remove_file(&path);
     });
 }
