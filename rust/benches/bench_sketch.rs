@@ -319,5 +319,49 @@ fn main() {
         drop(server);
     }
 
+    // sparse collectives (DESIGN.md §14): the owned-rows frame codec at a
+    // wire-realistic shape (4096 rows × d=64 ≈ 1 MB frame) — the per-step
+    // encode/decode tax the sparse exchange pays instead of shipping the
+    // dense buffer — plus the solo-world collective entry points, which
+    // bound the transport-side bookkeeping at zero rendezvous cost.
+    {
+        use csopt::comm::frame::{read_rows_frame, write_rows_frame};
+        use csopt::comm::{mem_world, Transport};
+        use std::io::Cursor;
+        let (nrows, d, id_space) = (4096usize, 64usize, 65_536usize);
+        let mut rng = Rng::new(8);
+        let mut ids: Vec<u64> =
+            rng.sample_distinct(id_space, nrows).into_iter().map(|x| x as u64).collect();
+        ids.sort_unstable();
+        let payload: Vec<f32> = (0..nrows * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut wire = Vec::with_capacity(nrows * (8 + d * 4) + 64);
+        b.bench(&format!("comm_rows_encode.r{nrows}.d{d}"), || {
+            wire.clear();
+            write_rows_frame(&mut wire, "gatherrows", &ids, &payload, d, id_space).unwrap();
+            black_box(&wire);
+        });
+        let (mut got_ids, mut got_rows) = (Vec::new(), Vec::new());
+        b.bench(&format!("comm_rows_decode.r{nrows}.d{d}"), || {
+            let mut cur = Cursor::new(&wire[..]);
+            read_rows_frame(&mut cur, &mut got_ids, &mut got_rows, d, id_space, id_space)
+                .unwrap();
+            black_box(&got_ids);
+        });
+        let mut t = mem_world(1).pop().unwrap();
+        let mut buf = vec![1.0f32; nrows * d];
+        b.bench(&format!("comm_rs.n{}", nrows * d), || {
+            t.reduce_scatter_sum(&mut buf, d).unwrap();
+            black_box(&buf);
+        });
+        b.bench(&format!("comm_ag.n{}", nrows * d), || {
+            t.all_gather(&mut buf, d).unwrap();
+            black_box(&buf);
+        });
+        b.bench(&format!("comm_ag_rows.r{nrows}.d{d}"), || {
+            t.all_gather_rows(&ids, &payload, d, id_space, &mut got_ids, &mut got_rows).unwrap();
+            black_box(&got_ids);
+        });
+    }
+
     b.finish();
 }

@@ -88,6 +88,120 @@ pub fn read_frame<R: Read + ?Sized>(
     Ok((header, 4 + hlen + n * 4))
 }
 
+/// Write one owned-rows frame — the sparse counterpart of
+/// [`write_frame`] (DESIGN.md §14). The header carries the geometry
+/// (`rows`, `d`, `total` = the id space) alongside the usual `op` / `n`;
+/// the binary body is `rows × u64` little-endian row ids followed by the
+/// packed `rows × d` f32 payload. Row ids ride the header side of the
+/// frame, not the f32 payload — they are routing metadata, so they are
+/// never summed, averaged, or mistaken for gradient bytes. Returns the
+/// frame's full byte count.
+pub fn write_rows_frame<W: Write + ?Sized>(
+    stream: &mut W,
+    op: &str,
+    ids: &[u64],
+    payload: &[f32],
+    d: usize,
+    id_space: usize,
+) -> Result<usize> {
+    super::validate_row_ids(ids, payload.len(), d, id_space)
+        .with_context(|| format!("encoding {op} owned-rows frame"))?;
+    let header = obj(vec![
+        ("op", s(op)),
+        ("n", num(payload.len() as f64)),
+        ("rows", num(ids.len() as f64)),
+        ("d", num(d as f64)),
+        ("total", num(id_space as f64)),
+    ])
+    .to_string();
+    stream.write_all(&(header.len() as u32).to_le_bytes())?;
+    stream.write_all(header.as_bytes())?;
+    let mut id_bytes = Vec::with_capacity(ids.len() * 8);
+    for &id in ids {
+        id_bytes.extend_from_slice(&id.to_le_bytes());
+    }
+    stream.write_all(&id_bytes)?;
+    if !payload.is_empty() {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(payload.as_ptr() as *const u8, payload.len() * 4)
+        };
+        stream.write_all(bytes)?;
+    }
+    stream.flush()?;
+    Ok(4 + header.len() + ids.len() * 8 + payload.len() * 4)
+}
+
+/// Read one owned-rows frame written by [`write_rows_frame`]. The
+/// defensive bounds mirror [`read_frame`]'s and add the sparse ones: the
+/// header-length cap, a `max_rows` bound on the wire-supplied row count
+/// (checked before any allocation), the geometry (`d`, `total`)
+/// cross-checked against what this rank is running, and the id list
+/// itself re-validated — strictly ascending, in-bounds — before the
+/// payload is read. A corrupt or desynced peer surfaces as a contextual
+/// error, never a giant allocation or an out-of-bounds reconstruction.
+pub fn read_rows_frame<R: Read + ?Sized>(
+    stream: &mut R,
+    ids: &mut Vec<u64>,
+    payload: &mut Vec<f32>,
+    expect_d: usize,
+    id_space: usize,
+    max_rows: usize,
+) -> Result<(Json, usize)> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4).context("reading frame header length")?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    if hlen > 1 << 16 {
+        bail!("implausible frame header length {hlen}");
+    }
+    let mut hbuf = vec![0u8; hlen];
+    stream.read_exact(&mut hbuf).context("reading frame header")?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)
+        .context("parsing frame header JSON")?;
+    let rows = header
+        .req("rows")?
+        .as_usize()
+        .ok_or_else(|| anyhow!("owned-rows frame header rows not a number"))?;
+    if rows > max_rows {
+        bail!(
+            "owned-rows frame claims {rows} rows, more than the expected {max_rows} — \
+             the peer's op sequence diverged (or the stream is corrupt)"
+        );
+    }
+    let d = header.req("d")?.as_usize().ok_or_else(|| anyhow!("frame header d not a number"))?;
+    let total =
+        header.req("total")?.as_usize().ok_or_else(|| anyhow!("frame header total not a number"))?;
+    if d != expect_d || total != id_space {
+        bail!(
+            "owned-rows frame geometry d = {d}, total = {total} does not match this \
+             rank's d = {expect_d}, total = {id_space} — the ranks' op sequences diverged"
+        );
+    }
+    let n = header.req("n")?.as_usize().ok_or_else(|| anyhow!("frame header n not a number"))?;
+    if n != rows * d {
+        bail!(
+            "owned-rows frame header is inconsistent: n = {n} f32s for {rows} rows of \
+             d = {d} (want {})",
+            rows * d
+        );
+    }
+    let mut id_bytes = vec![0u8; rows * 8];
+    stream.read_exact(&mut id_bytes).context("reading owned-rows frame ids")?;
+    ids.clear();
+    ids.reserve(rows);
+    for chunk in id_bytes.chunks_exact(8) {
+        ids.push(u64::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    super::validate_row_ids(ids, n, d, id_space).context("validating owned-rows frame ids")?;
+    payload.resize(n, 0.0);
+    if n > 0 {
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(payload.as_mut_ptr() as *mut u8, n * 4)
+        };
+        stream.read_exact(bytes).context("reading frame payload")?;
+    }
+    Ok((header, 4 + hlen + rows * 8 + n * 4))
+}
+
 /// The `op` field of a frame header.
 pub fn frame_op(header: &Json) -> Result<String> {
     Ok(header
@@ -134,6 +248,100 @@ mod tests {
         let msg = format!("{e:#}");
         assert!(msg.contains("exceeds the expected 4"), "{msg}");
         assert!(msg.contains("diverged"), "{msg}");
+    }
+
+    #[test]
+    fn rows_frame_roundtrip_preserves_bits() {
+        let ids = vec![3u64, 7, 41];
+        let payload = vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e-40, -2.0, 0.0];
+        let mut wire = Vec::new();
+        let wrote = write_rows_frame(&mut wire, "gatherrows", &ids, &payload, 2, 64).unwrap();
+        assert_eq!(wrote, wire.len());
+        let mut got_ids = vec![99u64];
+        let mut got = vec![f32::NAN];
+        let (header, nbytes) =
+            read_rows_frame(&mut Cursor::new(wire), &mut got_ids, &mut got, 2, 64, 64).unwrap();
+        assert_eq!(nbytes, wrote);
+        assert_eq!(frame_op(&header).unwrap(), "gatherrows");
+        assert_eq!(got_ids, ids);
+        assert_eq!(got.len(), payload.len());
+        for (a, b) in got.iter().zip(payload.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// d = 0 frames carry pure id sets (the mask path): no payload
+    /// bytes at all, ids still validated and round-tripped.
+    #[test]
+    fn rows_frame_supports_empty_payload_mask_sets() {
+        let ids = vec![0u64, 2, 5, 1023];
+        let mut wire = Vec::new();
+        let wrote = write_rows_frame(&mut wire, "gatherrows", &ids, &[], 0, 1024).unwrap();
+        let mut got_ids = Vec::new();
+        let mut got = Vec::new();
+        let (_, nbytes) =
+            read_rows_frame(&mut Cursor::new(wire), &mut got_ids, &mut got, 0, 1024, 1024)
+                .unwrap();
+        assert_eq!(nbytes, wrote);
+        assert_eq!(got_ids, ids);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn rows_frame_rejects_malformed_id_lists() {
+        // The writer refuses to encode garbage in the first place...
+        let e = write_rows_frame(&mut Vec::new(), "gatherrows", &[5u64, 2], &[0.0; 2], 1, 8)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("strictly ascending"), "{e:#}");
+        // ...and the reader re-validates independently: hand-craft a
+        // frame whose header lies about geometry or whose ids are bad.
+        let craft = |ids: &[u64], n: usize, d: usize, total: usize| {
+            let mut wire = Vec::new();
+            let header = format!(
+                "{{\"op\":\"gatherrows\",\"n\":{n},\"rows\":{},\"d\":{d},\"total\":{total}}}",
+                ids.len()
+            );
+            wire.extend_from_slice(&(header.len() as u32).to_le_bytes());
+            wire.extend_from_slice(header.as_bytes());
+            for &id in ids {
+                wire.extend_from_slice(&id.to_le_bytes());
+            }
+            wire.extend_from_slice(&vec![0u8; n * 4]);
+            wire
+        };
+        let read = |wire: Vec<u8>, d: usize, total: usize, max_rows: usize| {
+            let (mut ids, mut pay) = (Vec::new(), Vec::new());
+            read_rows_frame(&mut Cursor::new(wire), &mut ids, &mut pay, d, total, max_rows)
+                .unwrap_err()
+        };
+        // Duplicate ids.
+        let e = read(craft(&[3, 3], 2, 1, 8), 1, 8, 8);
+        assert!(format!("{e:#}").contains("strictly ascending"), "{e:#}");
+        // Out-of-range id.
+        let e = read(craft(&[3, 9], 2, 1, 8), 1, 8, 8);
+        assert!(format!("{e:#}").contains("outside the id space"), "{e:#}");
+        // Geometry mismatch vs what this rank runs.
+        let e = read(craft(&[1, 2], 2, 1, 8), 4, 8, 8);
+        assert!(format!("{e:#}").contains("op sequences diverged"), "{e:#}");
+        // Row count beyond the cap — rejected before the id allocation.
+        let e = read(craft(&[1, 2], 2, 1, 8), 1, 8, 1);
+        assert!(format!("{e:#}").contains("more than the expected 1"), "{e:#}");
+        // Inconsistent n vs rows·d.
+        let e = read(craft(&[1, 2], 7, 1, 8), 1, 8, 8);
+        assert!(format!("{e:#}").contains("inconsistent"), "{e:#}");
+    }
+
+    /// A frame that stops mid-ids (peer died) errors out instead of
+    /// handing back a short read.
+    #[test]
+    fn truncated_rows_frame_errors_out() {
+        let mut wire = Vec::new();
+        write_rows_frame(&mut wire, "gatherrows", &[1u64, 2, 3], &[0.5; 3], 1, 8).unwrap();
+        wire.truncate(wire.len() - 10);
+        let (mut ids, mut pay) = (Vec::new(), Vec::new());
+        let e = read_rows_frame(&mut Cursor::new(wire), &mut ids, &mut pay, 1, 8, 8).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("reading"), "{msg}");
     }
 
     #[test]

@@ -10,13 +10,19 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{bail, Result};
 
-use super::Transport;
+use super::{merge_owned_rows, owned_span, validate_row_ids, Transport};
 
 struct MemState {
     generation: u64,
     entered: usize,
     left: usize,
     buf: Vec<f32>,
+    /// Owned-rows collective state: the merged id list riding alongside
+    /// `buf` (which then holds the packed rows), plus the geometry the
+    /// first entrant pinned so later ranks can detect divergence.
+    ids: Vec<u64>,
+    rows_d: usize,
+    rows_total: usize,
 }
 
 struct MemShared {
@@ -38,7 +44,15 @@ pub struct MemComm {
 pub fn mem_world(world: usize) -> Vec<MemComm> {
     assert!(world >= 1);
     let shared = Arc::new(MemShared {
-        m: Mutex::new(MemState { generation: 0, entered: 0, left: 0, buf: Vec::new() }),
+        m: Mutex::new(MemState {
+            generation: 0,
+            entered: 0,
+            left: 0,
+            buf: Vec::new(),
+            ids: Vec::new(),
+            rows_d: 0,
+            rows_total: 0,
+        }),
         cv: Condvar::new(),
         world,
     });
@@ -54,37 +68,31 @@ pub fn mem_world(world: usize) -> Vec<MemComm> {
 }
 
 impl MemComm {
-    fn collective(&mut self, buf: &mut [f32]) -> Result<()> {
+    /// The rank-ordered rendezvous every collective shares: wait for this
+    /// generation and for my rank-order turn, `contribute` into the
+    /// shared state, wait for the world, `collect` the result, and let
+    /// the last rank out reset for the next generation. A `contribute`
+    /// error returns before this rank counts as entered — peers stay
+    /// blocked, the same stall the socket transports produce, so tests
+    /// detach the surviving threads.
+    fn rendezvous<T, R>(
+        &mut self,
+        mut ctx: T,
+        contribute: impl FnOnce(&mut MemState, &mut T) -> Result<()>,
+        collect: impl FnOnce(&MemState, &mut T) -> R,
+    ) -> Result<R> {
         let shared = &self.shared;
         let mut g = shared.m.lock().unwrap();
-        // wait for this generation and for my rank-order turn to add
         while g.generation != self.generation || g.entered != self.rank {
             g = shared.cv.wait(g).unwrap();
         }
-        if g.entered == 0 {
-            g.buf.clear();
-            g.buf.extend_from_slice(buf);
-        } else {
-            if g.buf.len() != buf.len() {
-                bail!(
-                    "rank {} joined a collective with {} f32s, others sent {} — \
-                     the ranks' op sequences diverged",
-                    self.rank,
-                    buf.len(),
-                    g.buf.len()
-                );
-            }
-            for (acc, &x) in g.buf.iter_mut().zip(buf.iter()) {
-                *acc += x;
-            }
-        }
+        contribute(&mut g, &mut ctx)?;
         g.entered += 1;
         shared.cv.notify_all();
-        // wait for everyone, take the reduction
         while g.entered < shared.world {
             g = shared.cv.wait(g).unwrap();
         }
-        buf.copy_from_slice(&g.buf);
+        let out = collect(&g, &mut ctx);
         g.left += 1;
         if g.left == shared.world {
             g.entered = 0;
@@ -93,10 +101,40 @@ impl MemComm {
         }
         shared.cv.notify_all();
         self.generation += 1;
+        Ok(out)
+    }
+
+    fn collective(&mut self, buf: &mut [f32]) -> Result<()> {
+        let rank = self.rank;
+        let len = buf.len();
+        self.rendezvous(
+            buf,
+            |g, buf| {
+                if g.entered == 0 {
+                    g.buf.clear();
+                    g.buf.extend_from_slice(buf);
+                } else {
+                    if g.buf.len() != buf.len() {
+                        bail!(
+                            "rank {} joined a collective with {} f32s, others sent {} — \
+                             the ranks' op sequences diverged",
+                            rank,
+                            buf.len(),
+                            g.buf.len()
+                        );
+                    }
+                    for (acc, &x) in g.buf.iter_mut().zip(buf.iter()) {
+                        *acc += x;
+                    }
+                }
+                Ok(())
+            },
+            |g, buf| buf.copy_from_slice(&g.buf),
+        )?;
         // no real wire, but the collective's payload volume is what a
         // wire would carry: one contribution out, one result back
-        self.sent += 4 * buf.len() as u64;
-        self.received += 4 * buf.len() as u64;
+        self.sent += 4 * len as u64;
+        self.received += 4 * len as u64;
         Ok(())
     }
 }
@@ -112,6 +150,134 @@ impl Transport for MemComm {
 
     fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
         self.collective(buf)
+    }
+
+    /// Sum like an all-reduce, but each rank collects only its owned
+    /// span — the counters model the star wire honestly: the full
+    /// partial goes up, only `hi - lo` f32s come back.
+    fn reduce_scatter_sum(&mut self, buf: &mut [f32], granule: usize) -> Result<()> {
+        let rank = self.rank;
+        let world = self.shared.world;
+        let len = buf.len();
+        let (lo, hi) = owned_span(len, granule, world, rank)?;
+        self.rendezvous(
+            buf,
+            |g, buf| {
+                if g.entered == 0 {
+                    g.buf.clear();
+                    g.buf.extend_from_slice(buf);
+                } else {
+                    if g.buf.len() != buf.len() {
+                        bail!(
+                            "rank {} joined a collective with {} f32s, others sent {} — \
+                             the ranks' op sequences diverged",
+                            rank,
+                            buf.len(),
+                            g.buf.len()
+                        );
+                    }
+                    for (acc, &x) in g.buf.iter_mut().zip(buf.iter()) {
+                        *acc += x;
+                    }
+                }
+                Ok(())
+            },
+            |g, buf| buf[lo..hi].copy_from_slice(&g.buf[lo..hi]),
+        )?;
+        self.sent += 4 * len as u64;
+        self.received += 4 * (hi - lo) as u64;
+        Ok(())
+    }
+
+    /// Assemble the ranks' owned spans — copy semantics, like the star
+    /// coordinator, so a rank's span lands bit-identical (the default
+    /// impl's `0.0 + x` detour is equivalent everywhere except the
+    /// sign of zero; see the module note in `super`). Counters: one
+    /// span out, the full buffer back.
+    fn all_gather(&mut self, buf: &mut [f32], granule: usize) -> Result<()> {
+        let rank = self.rank;
+        let world = self.shared.world;
+        let len = buf.len();
+        let (lo, hi) = owned_span(len, granule, world, rank)?;
+        self.rendezvous(
+            buf,
+            |g, buf| {
+                if g.entered == 0 {
+                    g.buf.clear();
+                    g.buf.resize(buf.len(), 0.0);
+                } else if g.buf.len() != buf.len() {
+                    bail!(
+                        "rank {} joined a collective with {} f32s, others sent {} — \
+                         the ranks' op sequences diverged",
+                        rank,
+                        buf.len(),
+                        g.buf.len()
+                    );
+                }
+                g.buf[lo..hi].copy_from_slice(&buf[lo..hi]);
+                Ok(())
+            },
+            |g, buf| buf.copy_from_slice(&g.buf),
+        )?;
+        self.sent += 4 * (hi - lo) as u64;
+        self.received += 4 * len as u64;
+        Ok(())
+    }
+
+    /// Merge the ranks' owned-rows lists in rank order (ownership
+    /// disjointness enforced, exactly like the star coordinator) and
+    /// hand every rank the sorted union. Counters model the sparse
+    /// wire: ids are 8 bytes, payload rows 4 bytes per f32.
+    fn all_gather_rows(
+        &mut self,
+        ids: &[u64],
+        rows: &[f32],
+        d: usize,
+        id_space: usize,
+        out_ids: &mut Vec<u64>,
+        out_rows: &mut Vec<f32>,
+    ) -> Result<()> {
+        validate_row_ids(ids, rows.len(), d, id_space)?;
+        let rank = self.rank;
+        self.rendezvous(
+            (ids, rows, &mut *out_ids, &mut *out_rows),
+            |g, ctx| {
+                let (ids, rows, _, _) = ctx;
+                if g.entered == 0 {
+                    g.ids.clear();
+                    g.ids.extend_from_slice(ids);
+                    g.buf.clear();
+                    g.buf.extend_from_slice(rows);
+                    g.rows_d = d;
+                    g.rows_total = id_space;
+                } else {
+                    if g.rows_d != d || g.rows_total != id_space {
+                        bail!(
+                            "rank {rank} joined an owned-rows collective with d = {d}, \
+                             total = {id_space}, others run d = {}, total = {} — the \
+                             ranks' op sequences diverged",
+                            g.rows_d,
+                            g.rows_total
+                        );
+                    }
+                    let (mut mids, mut mrows) = (Vec::new(), Vec::new());
+                    merge_owned_rows(&g.ids, &g.buf, ids, rows, d, &mut mids, &mut mrows)?;
+                    g.ids = mids;
+                    g.buf = mrows;
+                }
+                Ok(())
+            },
+            |g, ctx| {
+                let (_, _, out_ids, out_rows) = ctx;
+                out_ids.clear();
+                out_ids.extend_from_slice(&g.ids);
+                out_rows.clear();
+                out_rows.extend_from_slice(&g.buf);
+            },
+        )?;
+        self.sent += (8 * ids.len() + 4 * rows.len()) as u64;
+        self.received += (8 * out_ids.len() + 4 * out_rows.len()) as u64;
+        Ok(())
     }
 
     fn barrier(&mut self) -> Result<()> {
@@ -171,6 +337,65 @@ mod tests {
         // 4 bytes each way, the empty barrier adds nothing
         assert_eq!(solo.bytes_sent(), 4);
         assert_eq!(solo.bytes_received(), 4);
+    }
+
+    #[test]
+    fn sparse_collectives_match_their_contracts() {
+        let world = 3usize;
+        let endpoints = mem_world(world);
+        let outs: Vec<_> = thread::scope(|s| {
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    s.spawn(move || {
+                        let rank = ep.rank();
+                        // reduce-scatter: 6 f32s, granule 2 → rank r owns [2r, 2r+2)
+                        let mut rs = vec![rank as f32 + 1.0; 6];
+                        ep.reduce_scatter_sum(&mut rs, 2).unwrap();
+                        let sent_rs = ep.bytes_sent();
+                        let recv_rs = ep.bytes_received();
+                        // all-gather: rank r publishes 10·(r+1) on its span
+                        let mut ag = vec![f32::NAN; 6];
+                        ag[rank * 2..rank * 2 + 2].fill(10.0 * (rank as f32 + 1.0));
+                        ep.all_gather(&mut ag, 2).unwrap();
+                        // rows union: rank r owns id 3r with payload [r, -r]
+                        let ids = vec![3 * rank as u64];
+                        let rows = vec![rank as f32, -(rank as f32)];
+                        let (mut uids, mut urows) = (Vec::new(), Vec::new());
+                        ep.all_gather_rows(&ids, &rows, 2, 16, &mut uids, &mut urows).unwrap();
+                        (rank, rs, ag, uids, urows, sent_rs, recv_rs)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, rs, ag, uids, urows, sent_rs, recv_rs) in outs {
+            assert_eq!(rs[rank * 2..rank * 2 + 2], [6.0, 6.0], "rank {rank} owned span");
+            assert_eq!(ag, vec![10.0, 10.0, 20.0, 20.0, 30.0, 30.0]);
+            assert_eq!(uids, vec![0, 3, 6]);
+            assert_eq!(urows, vec![0.0, 0.0, 1.0, -1.0, 2.0, -2.0]);
+            // honest asymmetric counters: full partial up (6 f32s), own
+            // span back (2 f32s)
+            assert_eq!(sent_rs, 24, "rank {rank}");
+            assert_eq!(recv_rs, 8, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn rows_collective_rejects_overlapping_ownership() {
+        let mut eps = mem_world(2);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t = thread::spawn(move || {
+            let (mut ids, mut rows) = (Vec::new(), Vec::new());
+            a.all_gather_rows(&[1, 4], &[0.0; 2], 1, 8, &mut ids, &mut rows)
+        });
+        let (mut ids, mut rows) = (Vec::new(), Vec::new());
+        // id 4 collides with rank 0's ownership claim; ranks enter in
+        // rank order, so rank 1 (here) detects the collision on merge
+        let e = b.all_gather_rows(&[4, 6], &[0.0; 2], 1, 8, &mut ids, &mut rows).unwrap_err();
+        assert!(format!("{e:#}").contains("ownership must be disjoint"), "{e:#}");
+        drop(t); // rank 0 stays blocked mid-collective; detach the thread
     }
 
     #[test]

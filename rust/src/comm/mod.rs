@@ -11,14 +11,22 @@
 //! `0.0`, so the sum reconstructs each row bit-for-bit and the
 //! distributed run matches the single-process one exactly.
 //!
-//! * [`Transport`] — the collective surface ranks speak
-//!   (`all_reduce_sum` + `barrier`).
+//! * [`Transport`] — the collective surface ranks speak:
+//!   `all_reduce_sum` + `barrier`, plus the sparsity-aware trio
+//!   (DESIGN.md §14) — `reduce_scatter_sum` / `all_gather` over the
+//!   [`owned_span`] ownership map and `all_gather_rows` for sparse
+//!   owned-rows frames. The trio has dense all-reduce fallbacks as
+//!   default impls, so growing the trait broke no transport.
 //! * [`mem`] — in-memory impl for same-process multi-rank tests.
 //! * [`uds`] — unix-domain-socket impl for real worker processes
 //!   (length-prefixed frames with a JSON header, `util/json.rs`).
 //! * [`tcp`] — the same star topology over TCP for cross-host workers
 //!   and the resident `serve` service; both socket transports share the
-//!   frame codec in [`frame`] byte-for-byte.
+//!   frame codec in [`frame`] byte-for-byte and the generic star
+//!   protocols in [`star`].
+//! * [`overlap`] — [`CommPipe`], the dedicated comm thread that lets a
+//!   trainer run step *t*'s gradient exchange while it prepares step
+//!   *t+1* (`[dist] overlap = true`, DESIGN.md §14).
 //! * [`partitioned`] — the [`SketchStore`](crate::sketch::SketchStore)
 //!   impl owning one rank's width slice.
 //! * [`DistCtx`] — rank + world + shared transport; the
@@ -34,19 +42,23 @@
 pub mod frame;
 pub mod gradsketch;
 pub mod mem;
+pub mod overlap;
 pub mod partitioned;
+pub mod star;
 pub mod tcp;
 #[cfg(unix)]
 pub mod uds;
 
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::sketch::plan::width_partition;
 use crate::sketch::{SketchStore, StoreBuilder};
 
 pub use gradsketch::{GradSketchCfg, GradSketcher, SegmentSketcher};
 pub use mem::{mem_world, MemComm};
+pub use overlap::CommPipe;
 pub use partitioned::PartitionedStore;
 pub use tcp::TcpTransport;
 #[cfg(unix)]
@@ -66,6 +78,86 @@ pub trait Transport: Send {
     /// Elementwise sum of `buf` across all ranks; every rank's `buf`
     /// holds the reduced result on return.
     fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<()>;
+
+    /// Reduce-scatter by addition: the same rank-ordered elementwise sum
+    /// as [`all_reduce_sum`](Transport::all_reduce_sum), but each rank
+    /// is only guaranteed the reduced result over its **owned span** —
+    /// the contiguous run of `granule`-sized chunks [`owned_span`]
+    /// assigns it (the `width_partition` ownership map, so collective
+    /// slices line up with partitioned sketch stores for free). Bytes
+    /// outside the span are unspecified on return. Real transports ship
+    /// each rank only its slice of the result; this default falls back
+    /// to a full all-reduce (correct, dense), so the trait change is
+    /// non-breaking for existing implementations.
+    fn reduce_scatter_sum(&mut self, buf: &mut [f32], granule: usize) -> Result<()> {
+        owned_span(buf.len(), granule, self.world(), self.rank())?;
+        self.all_reduce_sum(buf)
+    }
+
+    /// All-gather over the same ownership map: on entry each rank's
+    /// owned span (see [`owned_span`]) holds its contribution; on return
+    /// the **whole** buffer is valid and bit-identical on every rank.
+    /// Content outside the owned span on entry is ignored — the
+    /// transport overwrites it with the other ranks' spans — so callers
+    /// can hand in an un-zeroed scratch buffer. This default zeroes the
+    /// unowned region and falls back to a full all-reduce (one owner
+    /// per element, so the sum is an exact reconstruction, with the
+    /// usual `-0.0 + 0.0 == +0.0` footnote).
+    fn all_gather(&mut self, buf: &mut [f32], granule: usize) -> Result<()> {
+        let (lo, hi) = owned_span(buf.len(), granule, self.world(), self.rank())?;
+        buf[..lo].iter_mut().for_each(|x| *x = 0.0);
+        buf[hi..].iter_mut().for_each(|x| *x = 0.0);
+        self.all_reduce_sum(buf)
+    }
+
+    /// Gather sparse owned rows: each rank contributes a strictly
+    /// ascending list of row `ids` (each `< id_space`) with a packed
+    /// `[d]` payload per id; on return `out_ids` / `out_rows` hold the
+    /// ascending union across all ranks, bit-identical on every rank.
+    /// With `d > 0`, one id contributed by two ranks is a protocol error
+    /// — disjoint ownership is exactly what makes the sparse exchange an
+    /// exact reconstruction of the dense one. With `d == 0` the op is a
+    /// pure id-set union (activity masks ride the frame header side of
+    /// the wire, not the f32 payload) and duplicates merge silently.
+    /// This default densifies into an `id_space × (1 + d)` indicator +
+    /// payload buffer and all-reduces it — correct on any transport;
+    /// only the real overrides are sparse on the wire.
+    fn all_gather_rows(
+        &mut self,
+        ids: &[u64],
+        rows: &[f32],
+        d: usize,
+        id_space: usize,
+        out_ids: &mut Vec<u64>,
+        out_rows: &mut Vec<f32>,
+    ) -> Result<()> {
+        validate_row_ids(ids, rows.len(), d, id_space)?;
+        let mut dense = vec![0.0f32; id_space * (d + 1)];
+        for (i, &id) in ids.iter().enumerate() {
+            let base = id as usize * (d + 1);
+            dense[base] = 1.0;
+            dense[base + 1..base + 1 + d].copy_from_slice(&rows[i * d..(i + 1) * d]);
+        }
+        self.all_reduce_sum(&mut dense)?;
+        out_ids.clear();
+        out_rows.clear();
+        for id in 0..id_space {
+            let base = id * (d + 1);
+            let hits = dense[base];
+            if hits == 0.0 {
+                continue;
+            }
+            if d > 0 && hits > 1.0 {
+                bail!(
+                    "row {id} was contributed by {hits} ranks — owned-rows frames \
+                     require disjoint row ownership (or the ranks' op sequences diverged)"
+                );
+            }
+            out_ids.push(id as u64);
+            out_rows.extend_from_slice(&dense[base + 1..base + 1 + d]);
+        }
+        Ok(())
+    }
 
     /// Block until every rank reaches the barrier.
     fn barrier(&mut self) -> Result<()>;
@@ -170,6 +262,101 @@ pub fn exchange_sum_many(
     Ok(())
 }
 
+/// The contiguous element span of a `len`-f32 collective buffer (tiled
+/// by `granule`-sized chunks) that `rank` of `world` owns under
+/// [`width_partition`] — the same arithmetic the sketch width partition
+/// and the replica stripes use, so every cell of every collective has
+/// exactly one owner by construction. Errors when `len` is not a whole
+/// number of granules; a rank may own an empty span when there are
+/// fewer granules than ranks.
+pub fn owned_span(len: usize, granule: usize, world: usize, rank: usize) -> Result<(usize, usize)> {
+    if granule == 0 || len % granule != 0 {
+        bail!(
+            "collective buffer of {len} f32s is not a whole number of \
+             granules of {granule} — the op's geometry is wrong"
+        );
+    }
+    let (glo, ghi) = width_partition(len / granule, world, rank);
+    Ok((glo * granule, ghi * granule))
+}
+
+/// Validate one owned-rows list before it goes near a wire (and after it
+/// comes off one): ids strictly ascending — sorted with no duplicates —
+/// every id inside `[0, id_space)`, and the packed payload exactly
+/// `ids.len() * d` f32s. The codec and every transport run this, so a
+/// malformed contribution surfaces as a contextual error instead of an
+/// out-of-bounds reconstruction.
+pub fn validate_row_ids(ids: &[u64], rows_len: usize, d: usize, id_space: usize) -> Result<()> {
+    if rows_len != ids.len() * d {
+        bail!(
+            "owned-rows payload holds {rows_len} f32s for {} ids of d = {d} (want {})",
+            ids.len(),
+            ids.len() * d
+        );
+    }
+    for (i, &id) in ids.iter().enumerate() {
+        if id >= id_space as u64 {
+            bail!("owned-rows id {id} is outside the id space of {id_space}");
+        }
+        if i > 0 && ids[i - 1] >= id {
+            bail!(
+                "owned-rows ids must be strictly ascending: id {id} at index {i} \
+                 follows {}",
+                ids[i - 1]
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Merge two ascending owned-rows lists into one ascending union in
+/// `out_ids` / `out_rows` (cleared first). Payload rows are **copied**,
+/// never summed — each row has one owner, so there is nothing to reduce.
+/// `d > 0` treats an id present in both lists as a protocol error;
+/// `d == 0` (mask union) keeps one copy silently.
+pub fn merge_owned_rows(
+    a_ids: &[u64],
+    a_rows: &[f32],
+    b_ids: &[u64],
+    b_rows: &[f32],
+    d: usize,
+    out_ids: &mut Vec<u64>,
+    out_rows: &mut Vec<f32>,
+) -> Result<()> {
+    out_ids.clear();
+    out_rows.clear();
+    out_ids.reserve(a_ids.len() + b_ids.len());
+    out_rows.reserve(a_rows.len() + b_rows.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a_ids.len() || j < b_ids.len() {
+        let take_a = match (a_ids.get(i), b_ids.get(j)) {
+            (Some(&a), Some(&b)) if a == b => {
+                if d > 0 {
+                    bail!(
+                        "row {a} appears in both ranks' owned-rows frames — ownership \
+                         must be disjoint (or the ranks' op sequences diverged)"
+                    );
+                }
+                j += 1; // mask union: keep one copy
+                true
+            }
+            (Some(&a), Some(&b)) => a < b,
+            (Some(_), None) => true,
+            (None, _) => false,
+        };
+        if take_a {
+            out_ids.push(a_ids[i]);
+            out_rows.extend_from_slice(&a_rows[i * d..(i + 1) * d]);
+            i += 1;
+        } else {
+            out_ids.push(b_ids[j]);
+            out_rows.extend_from_slice(&b_rows[j * d..(j + 1) * d]);
+            j += 1;
+        }
+    }
+    Ok(())
+}
+
 /// Average the `replicas` equal `seg_len` segments of
 /// `buf[.. replicas * seg_len]` element-wise into `out` (resized to
 /// `seg_len`), accumulating **in replica order** — `(seg₀ + seg₁ + …) /
@@ -203,6 +390,143 @@ pub fn average_replica_segments(buf: &[f32], replicas: usize, seg_len: usize, ou
 mod tests {
     use super::*;
     use std::thread;
+
+    #[test]
+    fn owned_span_tiles_the_buffer_exactly_once() {
+        for world in [1usize, 2, 3, 5] {
+            for (len, granule) in [(12usize, 3usize), (8, 4), (6, 6), (0, 2), (4, 2)] {
+                let mut cover = 0usize;
+                let mut expect_lo = 0usize;
+                for rank in 0..world {
+                    let (lo, hi) = owned_span(len, granule, world, rank).unwrap();
+                    assert!(lo <= hi && hi <= len, "len={len} g={granule} w={world} r={rank}");
+                    assert_eq!(lo % granule, 0);
+                    assert_eq!(hi % granule, 0);
+                    if lo < hi {
+                        assert_eq!(lo, expect_lo, "spans must be contiguous in rank order");
+                        expect_lo = hi;
+                    }
+                    cover += hi - lo;
+                }
+                assert_eq!(cover, len, "len={len} g={granule} w={world}");
+            }
+        }
+        let e = owned_span(10, 3, 2, 0).unwrap_err();
+        assert!(format!("{e:#}").contains("whole number of granules"), "{e:#}");
+    }
+
+    #[test]
+    fn validate_row_ids_rejects_malformed_lists() {
+        validate_row_ids(&[0, 3, 9], 6, 2, 10).unwrap();
+        validate_row_ids(&[], 0, 4, 10).unwrap();
+        let unsorted = validate_row_ids(&[3, 1], 4, 2, 10).unwrap_err();
+        assert!(format!("{unsorted:#}").contains("strictly ascending"), "{unsorted:#}");
+        let dup = validate_row_ids(&[3, 3], 4, 2, 10).unwrap_err();
+        assert!(format!("{dup:#}").contains("strictly ascending"), "{dup:#}");
+        let oob = validate_row_ids(&[10], 2, 2, 10).unwrap_err();
+        assert!(format!("{oob:#}").contains("outside the id space"), "{oob:#}");
+        let arity = validate_row_ids(&[1], 3, 2, 10).unwrap_err();
+        assert!(format!("{arity:#}").contains("payload holds 3 f32s"), "{arity:#}");
+    }
+
+    #[test]
+    fn merge_owned_rows_interleaves_and_guards_ownership() {
+        let (mut ids, mut rows) = (Vec::new(), Vec::new());
+        merge_owned_rows(
+            &[1, 4],
+            &[1.0, 1.5, 4.0, 4.5],
+            &[0, 2, 7],
+            &[0.0, 0.5, 2.0, 2.5, 7.0, 7.5],
+            2,
+            &mut ids,
+            &mut rows,
+        )
+        .unwrap();
+        assert_eq!(ids, vec![0, 1, 2, 4, 7]);
+        assert_eq!(rows, vec![0.0, 0.5, 1.0, 1.5, 2.0, 2.5, 4.0, 4.5, 7.0, 7.5]);
+        // d > 0: a shared id is a broken ownership invariant
+        let e = merge_owned_rows(&[2], &[9.0], &[2], &[8.0], 1, &mut ids, &mut rows)
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("ownership"), "{e:#}");
+        // d == 0 is the mask union: duplicates collapse silently
+        merge_owned_rows(&[1, 2, 5], &[], &[2, 3], &[], 0, &mut ids, &mut rows).unwrap();
+        assert_eq!(ids, vec![1, 2, 3, 5]);
+        assert!(rows.is_empty());
+    }
+
+    /// A transport that implements only the required methods: the
+    /// default reduce-scatter / all-gather / gather-rows impls must fall
+    /// back to all-reduce and still satisfy the ops' contracts — that is
+    /// what makes the trait growth non-breaking.
+    struct MinimalTransport(MemComm);
+
+    impl Transport for MinimalTransport {
+        fn rank(&self) -> usize {
+            self.0.rank()
+        }
+        fn world(&self) -> usize {
+            self.0.world()
+        }
+        fn all_reduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+            self.0.all_reduce_sum(buf)
+        }
+        fn barrier(&mut self) -> Result<()> {
+            self.0.barrier()
+        }
+    }
+
+    #[test]
+    fn default_impls_fall_back_to_all_reduce() {
+        let world = 3usize;
+        let granule = 2usize;
+        let len = 8usize; // 4 granules over 3 ranks: spans 2/1/1 granules
+        type Out = ((usize, usize), Vec<f32>, Vec<f32>, Vec<u64>, Vec<f32>);
+        let outs: Vec<Out> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(world)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    s.spawn(move || {
+                        let mut t = MinimalTransport(ep);
+                        // reduce-scatter: contribution rank+1 everywhere
+                        let mut rs = vec![(rank + 1) as f32; len];
+                        t.reduce_scatter_sum(&mut rs, granule).unwrap();
+                        let span = owned_span(len, granule, world, rank).unwrap();
+                        // all-gather: own span holds rank-tagged values
+                        let mut ag = vec![f32::NAN; len];
+                        for x in &mut ag[span.0..span.1] {
+                            *x = (10 * (rank + 1)) as f32;
+                        }
+                        t.all_gather(&mut ag, granule).unwrap();
+                        // gather-rows: rank r owns row 2r with payload [r, -r]
+                        let ids = [2 * rank as u64];
+                        let rows = [rank as f32, -(rank as f32)];
+                        let (mut oids, mut orows) = (Vec::new(), Vec::new());
+                        t.all_gather_rows(&ids, &rows, 2, 8, &mut oids, &mut orows).unwrap();
+                        (span, rs, ag, oids, orows)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, (span, rs, ag, oids, orows)) in outs.iter().enumerate() {
+            // sum of 1 + 2 + 3 = 6 over the owned span at least
+            for x in &rs[span.0..span.1] {
+                assert_eq!(*x, 6.0, "rank {rank}");
+            }
+            // the whole all-gather buffer is valid on every rank
+            let mut expect = vec![0.0f32; len];
+            for r in 0..world {
+                let (lo, hi) = owned_span(len, granule, world, r).unwrap();
+                for x in &mut expect[lo..hi] {
+                    *x = (10 * (r + 1)) as f32;
+                }
+            }
+            assert_eq!(ag, &expect, "rank {rank}");
+            assert_eq!(oids, &vec![0u64, 2, 4], "rank {rank}");
+            assert_eq!(orows, &vec![0.0, -0.0, 1.0, -1.0, 2.0, -2.0], "rank {rank}");
+        }
+    }
 
     #[test]
     fn average_accumulates_in_replica_order() {

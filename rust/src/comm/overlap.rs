@@ -1,0 +1,146 @@
+//! [`CommPipe`] — a dedicated communication thread for compute/comm
+//! overlap (DESIGN.md §14, the `[dist] overlap = true` knob).
+//!
+//! The pipe owns one worker thread draining a FIFO job queue: `submit`
+//! hands it a closure (typically "run step t's whole gradient
+//! exchange"), returns a [`Ticket`] immediately, and the caller goes on
+//! preparing step t+1's *weight-independent* work — batch fetch, plan
+//! construction, candidate sampling — while the collective crosses the
+//! wire. `Ticket::wait` blocks until the closure's result is ready.
+//!
+//! Determinism survives because ordering is preserved at both ends: the
+//! single worker thread runs jobs strictly in submission order, so this
+//! rank's collectives hit the transport in the same sequence the
+//! synchronous path would issue them, and the caller consumes each
+//! ticket before it uses any value the exchange produced. Overlap moves
+//! *when* the wait happens, never *what* is computed — the synchronous
+//! path is the bitwise reference, and the equivalence suites hold the
+//! overlapped path to it.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Handle to an in-flight job; `wait` joins it.
+pub struct Ticket<T> {
+    rx: mpsc::Receiver<Result<T>>,
+}
+
+impl<T> Ticket<T> {
+    /// Block until the job finishes and return its result. A dead comm
+    /// thread (panicked job) surfaces as an error, not a hang.
+    pub fn wait(self) -> Result<T> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("comm thread died before delivering its result"))?
+    }
+}
+
+/// One comm thread + FIFO queue; dropping the pipe drains outstanding
+/// jobs and joins the thread.
+pub struct CommPipe {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl CommPipe {
+    pub fn new() -> CommPipe {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name("csopt-comm".into())
+            .spawn(move || {
+                for job in rx {
+                    job();
+                }
+            })
+            .expect("spawning comm thread");
+        CommPipe { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Queue `job` on the comm thread; jobs run strictly in submission
+    /// order. The closure moves its buffers in and hands them back
+    /// through the result, so no aliasing with the preparing step.
+    pub fn submit<T, F>(&self, job: F) -> Ticket<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> Result<T> + Send + 'static,
+    {
+        let (tx_r, rx_r) = mpsc::channel();
+        let boxed: Job = Box::new(move || {
+            // a dropped ticket is fine — send's error just discards
+            let _ = tx_r.send(job());
+        });
+        self.tx
+            .as_ref()
+            .expect("CommPipe already shut down")
+            .send(boxed)
+            .expect("comm thread is gone");
+        Ticket { rx: rx_r }
+    }
+}
+
+impl Default for CommPipe {
+    fn default() -> Self {
+        CommPipe::new()
+    }
+}
+
+impl Drop for CommPipe {
+    fn drop(&mut self) {
+        // closing the queue ends the worker's for-loop after it drains
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// Jobs run in submission order (the property collectives depend
+    /// on) and results route back to the matching ticket.
+    #[test]
+    fn jobs_run_fifo_and_results_match() {
+        let pipe = CommPipe::new();
+        let seq = Arc::new(AtomicUsize::new(0));
+        let tickets: Vec<_> = (0..16usize)
+            .map(|i| {
+                let seq = Arc::clone(&seq);
+                pipe.submit(move || {
+                    let turn = seq.fetch_add(1, Ordering::SeqCst);
+                    anyhow::ensure!(turn == i, "job {i} ran at turn {turn}");
+                    Ok(i * i)
+                })
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            assert_eq!(t.wait().unwrap(), i * i);
+        }
+    }
+
+    /// A job error comes back through the ticket; later jobs still run.
+    #[test]
+    fn errors_are_delivered_not_fatal() {
+        let pipe = CommPipe::new();
+        let bad = pipe.submit(|| -> Result<()> { anyhow::bail!("wire fell over") });
+        let good = pipe.submit(|| Ok(7usize));
+        assert!(format!("{:#}", bad.wait().unwrap_err()).contains("wire fell over"));
+        assert_eq!(good.wait().unwrap(), 7);
+    }
+
+    /// Dropping the pipe with an unconsumed ticket neither hangs nor
+    /// leaks the worker.
+    #[test]
+    fn drop_drains_and_joins() {
+        let pipe = CommPipe::new();
+        let _unwaited = pipe.submit(|| Ok(1usize));
+        drop(pipe);
+    }
+}

@@ -27,10 +27,16 @@
 //! match the single-process run under numeric equality, which is what
 //! the equivalence suite asserts.
 //!
-//! The dense gather is also deliberately simple: every rank ships the
-//! full `[v, k, d]` buffer even though it owns ~1/world of it. Sparse
-//! owned-rows frames (or a reduce-scatter) and overlapping this exchange
-//! with compute are the named next seam (DESIGN.md §9).
+//! QUERY's exchange is a reduce-scatter + all-gather pair (DESIGN.md
+//! §14) rather than one dense all-reduce: the gather buffer is laid out
+//! item-major so item `t`'s `v` bucket rows form one contiguous
+//! `[v·d]` granule, `reduce_scatter_sum` reconstructs each item's rows
+//! on exactly one rank, that owner runs the depth reduction for its
+//! items, and `all_gather` ships only the reduced `[k, d]` estimates
+//! back — `world×` less downstream traffic than re-broadcasting the
+//! whole `[v, k, d]` gather. Determinism is unchanged: the partial sums
+//! accumulate in the same rank order an all-reduce uses, and the owner's
+//! reduced bits are *copied* to every rank.
 
 use std::cell::RefCell;
 use std::sync::{Arc, Mutex};
@@ -174,8 +180,10 @@ impl SketchStore for PartitionedStore {
         let d = self.dim;
         let (v, k) = (plan.depth(), plan.k());
         debug_assert_eq!(out.len(), k * d);
-        // partial gather: row (j, t) at [(j·k + t)·d ..]; unowned rows
-        // stay exact 0.0 so the sum below reconstructs them bit-for-bit
+        // partial gather, *item-major*: row (j, t) at [(t·v + j)·d ..],
+        // so item t's v depth rows form one contiguous [v·d] granule the
+        // reduce-scatter can assign to a single owner. Unowned rows stay
+        // exact 0.0 so the sum reconstructs them bit-for-bit.
         let mut gather = self.gather.borrow_mut();
         gather.clear();
         gather.resize(v * k * d, 0.0);
@@ -183,50 +191,61 @@ impl SketchStore for PartitionedStore {
             for t in 0..k {
                 let b = plan.bucket(j, t);
                 if b >= self.lo && b < self.hi {
-                    gather[(j * k + t) * d..(j * k + t + 1) * d].copy_from_slice(self.row(j, b));
+                    gather[(t * v + j) * d..(t * v + j + 1) * d].copy_from_slice(self.row(j, b));
                 }
             }
         }
+        // item t ∈ [tlo, thi) lands complete on this rank only — the
+        // same balanced split the width partition uses
+        let (tlo, thi) = width_partition(k, self.world, self.rank);
         self.comm
             .lock()
             .unwrap()
-            .all_reduce_sum(&mut gather)
-            .expect("sketch query all-reduce failed");
-        // local depth reduction over the now-complete rows — the same
-        // reducers the local store runs
+            .reduce_scatter_sum(&mut gather, v * d)
+            .expect("sketch query reduce-scatter failed");
+        // owned-items depth reduction — the same reducers the local
+        // store runs, producing the same bits every rank *would* compute
+        // from the same complete rows
         match reduce {
             Reduce::SignedMedian => {
                 const INLINE: usize = 8;
                 let mut inline_rows = [(0usize, 0.0f32); INLINE];
                 let mut heap_rows: Vec<(usize, f32)> = Vec::new();
                 let mut median_buf: Vec<f32> = if v > 3 { vec![0.0; v] } else { Vec::new() };
-                for t in 0..k {
+                for t in tlo..thi {
                     let dst = &mut out[t * d..(t + 1) * d];
                     if v <= INLINE {
                         for (j, slot) in inline_rows[..v].iter_mut().enumerate() {
-                            *slot = (j * k + t, plan.sign(j, t));
+                            *slot = (t * v + j, plan.sign(j, t));
                         }
                         median_rows(&gather, d, &inline_rows[..v], &mut median_buf, dst);
                     } else {
                         heap_rows.clear();
                         for j in 0..v {
-                            heap_rows.push((j * k + t, plan.sign(j, t)));
+                            heap_rows.push((t * v + j, plan.sign(j, t)));
                         }
                         median_rows(&gather, d, &heap_rows, &mut median_buf, dst);
                     }
                 }
             }
             Reduce::Min => {
-                for t in 0..k {
+                for t in tlo..thi {
                     let dst = &mut out[t * d..(t + 1) * d];
-                    dst.copy_from_slice(&gather[t * d..(t + 1) * d]);
+                    dst.copy_from_slice(&gather[(t * v) * d..(t * v + 1) * d]);
                     for j in 1..v {
-                        let off = (j * k + t) * d;
+                        let off = (t * v + j) * d;
                         min_into(dst, &gather[off..off + d]);
                     }
                 }
             }
         }
+        // ship only the reduced [k, d] estimates — every rank receives
+        // the owner's bits verbatim
+        self.comm
+            .lock()
+            .unwrap()
+            .all_gather(out, d)
+            .expect("sketch query all-gather failed");
     }
 
     /// The fused kernel does not apply here — `step_fused` is the

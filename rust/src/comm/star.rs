@@ -1,0 +1,328 @@
+//! Star-topology protocols for the sparsity-aware collectives
+//! (DESIGN.md §14), generic over the stream type so [`super::uds`] and
+//! [`super::tcp`] share one byte-identical implementation — exactly as
+//! they already share the frame codec in [`super::frame`].
+//!
+//! Layout mirrors the dense all-reduce the socket transports run: rank 0
+//! is the coordinator holding one stream per worker (`peers[r - 1]`),
+//! workers hold one stream to rank 0. Determinism is inherited from the
+//! same two properties: the coordinator accumulates in rank order (its
+//! own contribution first, then ranks 1..N), and every byte a rank
+//! receives is a copy of coordinator state, so all ranks see identical
+//! bits. What changes is *how much* crosses the wire:
+//!
+//! - [`reduce_scatter`]: every rank sends its full partial up, but gets
+//!   back only the granule span it owns (`world×` less downstream
+//!   traffic than an all-reduce).
+//! - [`all_gather`]: every rank sends only its owned span up and the
+//!   assembled buffer comes back (`world×` less upstream traffic).
+//! - [`all_gather_rows`]: the sparse union — each rank ships only the
+//!   rows it owns as an owned-rows frame
+//!   ([`super::frame::write_rows_frame`]) and receives the merged,
+//!   still-sorted union. Ownership disjointness is enforced by
+//!   [`super::merge_owned_rows`], so a desynced peer surfaces as a
+//!   diagnosable error, not a silently double-counted gradient row.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{frame_op, read_frame, read_rows_frame, write_frame, write_rows_frame};
+use super::{merge_owned_rows, owned_span, validate_row_ids};
+
+/// Reduce-scatter over a star: full partials flow up, each rank's owned
+/// span flows back down. On return `buf[lo..hi]` (this rank's span)
+/// holds the rank-order sum; bytes outside the span are unspecified —
+/// the coordinator happens to hold the full reduction, workers keep
+/// their local partial there.
+#[allow(clippy::too_many_arguments)]
+pub fn reduce_scatter<S: Read + Write>(
+    rank: usize,
+    world: usize,
+    peers: &mut [S],
+    op: &str,
+    buf: &mut [f32],
+    granule: usize,
+    payload: &mut Vec<f32>,
+    sent: &mut u64,
+    received: &mut u64,
+) -> Result<()> {
+    let (lo, hi) = owned_span(buf.len(), granule, world, rank)?;
+    if rank == 0 {
+        // accumulate in rank order: own partial is already in buf
+        for r in 1..world {
+            let stream = &mut peers[r - 1];
+            let (header, nbytes) = read_frame(stream, payload, buf.len())
+                .with_context(|| format!("receiving {op} partial from rank {r}"))?;
+            *received += nbytes as u64;
+            let got = frame_op(&header)?;
+            if got != op || payload.len() != buf.len() {
+                bail!(
+                    "rank {r} sent op {got:?} ({} f32s) while coordinator runs {op:?} \
+                     ({} f32s) — the ranks' op sequences diverged",
+                    payload.len(),
+                    buf.len()
+                );
+            }
+            for (acc, &x) in buf.iter_mut().zip(payload.iter()) {
+                *acc += x;
+            }
+        }
+        for r in 1..world {
+            let (rlo, rhi) = owned_span(buf.len(), granule, world, r)?;
+            let nbytes = write_frame(&mut peers[r - 1], op, vec![], &buf[rlo..rhi])
+                .with_context(|| format!("sending {op} result to rank {r}"))?;
+            *sent += nbytes as u64;
+        }
+    } else {
+        let stream = &mut peers[0];
+        let nbytes = write_frame(stream, op, vec![], buf)
+            .with_context(|| format!("rank {rank}: sending {op} partial"))?;
+        *sent += nbytes as u64;
+        let (header, nbytes) = read_frame(stream, payload, hi - lo)
+            .with_context(|| format!("rank {rank}: receiving {op} result"))?;
+        *received += nbytes as u64;
+        let got = frame_op(&header)?;
+        if got != op || payload.len() != hi - lo {
+            bail!(
+                "rank {rank}: coordinator answered {op:?} with op {got:?} ({} f32s, wanted {})",
+                payload.len(),
+                hi - lo
+            );
+        }
+        buf[lo..hi].copy_from_slice(payload);
+    }
+    Ok(())
+}
+
+/// All-gather over a star: each rank sends only its owned span up, the
+/// coordinator assembles the spans in place (they tile the buffer
+/// exactly once) and broadcasts the whole buffer back.
+#[allow(clippy::too_many_arguments)]
+pub fn all_gather<S: Read + Write>(
+    rank: usize,
+    world: usize,
+    peers: &mut [S],
+    op: &str,
+    buf: &mut [f32],
+    granule: usize,
+    payload: &mut Vec<f32>,
+    sent: &mut u64,
+    received: &mut u64,
+) -> Result<()> {
+    let (lo, hi) = owned_span(buf.len(), granule, world, rank)?;
+    if rank == 0 {
+        // own span is already in place; collect the rest in rank order
+        for r in 1..world {
+            let (rlo, rhi) = owned_span(buf.len(), granule, world, r)?;
+            let stream = &mut peers[r - 1];
+            let (header, nbytes) = read_frame(stream, payload, rhi - rlo)
+                .with_context(|| format!("receiving {op} span from rank {r}"))?;
+            *received += nbytes as u64;
+            let got = frame_op(&header)?;
+            if got != op || payload.len() != rhi - rlo {
+                bail!(
+                    "rank {r} sent op {got:?} ({} f32s) while coordinator runs {op:?} \
+                     ({} f32s) — the ranks' op sequences diverged",
+                    payload.len(),
+                    rhi - rlo
+                );
+            }
+            buf[rlo..rhi].copy_from_slice(payload);
+        }
+        for r in 1..world {
+            let nbytes = write_frame(&mut peers[r - 1], op, vec![], buf)
+                .with_context(|| format!("sending {op} result to rank {r}"))?;
+            *sent += nbytes as u64;
+        }
+    } else {
+        let stream = &mut peers[0];
+        let nbytes = write_frame(stream, op, vec![], &buf[lo..hi])
+            .with_context(|| format!("rank {rank}: sending {op} span"))?;
+        *sent += nbytes as u64;
+        let (header, nbytes) = read_frame(stream, payload, buf.len())
+            .with_context(|| format!("rank {rank}: receiving {op} result"))?;
+        *received += nbytes as u64;
+        let got = frame_op(&header)?;
+        if got != op || payload.len() != buf.len() {
+            bail!(
+                "rank {rank}: coordinator answered {op:?} with op {got:?} ({} f32s, wanted {})",
+                payload.len(),
+                buf.len()
+            );
+        }
+        buf.copy_from_slice(payload);
+    }
+    Ok(())
+}
+
+/// Sparse union over a star: each rank contributes the rows it owns
+/// (sorted ids + packed `[d]` payloads), the coordinator merges them in
+/// rank order — disjointness enforced — and broadcasts the union.
+/// `out_ids`/`out_rows` receive the merged lists on every rank.
+#[allow(clippy::too_many_arguments)]
+pub fn all_gather_rows<S: Read + Write>(
+    rank: usize,
+    world: usize,
+    peers: &mut [S],
+    op: &str,
+    ids: &[u64],
+    rows: &[f32],
+    d: usize,
+    id_space: usize,
+    out_ids: &mut Vec<u64>,
+    out_rows: &mut Vec<f32>,
+    sent: &mut u64,
+    received: &mut u64,
+) -> Result<()> {
+    validate_row_ids(ids, rows.len(), d, id_space)
+        .context("validating this rank's owned-rows contribution")?;
+    if rank == 0 {
+        out_ids.clear();
+        out_ids.extend_from_slice(ids);
+        out_rows.clear();
+        out_rows.extend_from_slice(rows);
+        let (mut peer_ids, mut peer_rows) = (Vec::new(), Vec::new());
+        let (mut merged_ids, mut merged_rows) = (Vec::new(), Vec::new());
+        for r in 1..world {
+            let stream = &mut peers[r - 1];
+            let (header, nbytes) =
+                read_rows_frame(stream, &mut peer_ids, &mut peer_rows, d, id_space, id_space)
+                    .with_context(|| format!("receiving {op} rows from rank {r}"))?;
+            *received += nbytes as u64;
+            let got = frame_op(&header)?;
+            if got != op {
+                bail!(
+                    "rank {r} sent op {got:?} while coordinator runs {op:?} — the ranks' \
+                     op sequences diverged"
+                );
+            }
+            merge_owned_rows(
+                out_ids, out_rows, &peer_ids, &peer_rows, d, &mut merged_ids, &mut merged_rows,
+            )
+            .with_context(|| format!("merging {op} rows from rank {r}"))?;
+            std::mem::swap(out_ids, &mut merged_ids);
+            std::mem::swap(out_rows, &mut merged_rows);
+        }
+        for r in 1..world {
+            let nbytes =
+                write_rows_frame(&mut peers[r - 1], op, out_ids, out_rows, d, id_space)
+                    .with_context(|| format!("sending {op} union to rank {r}"))?;
+            *sent += nbytes as u64;
+        }
+    } else {
+        let stream = &mut peers[0];
+        let nbytes = write_rows_frame(stream, op, ids, rows, d, id_space)
+            .with_context(|| format!("rank {rank}: sending {op} rows"))?;
+        *sent += nbytes as u64;
+        let (header, nbytes) =
+            read_rows_frame(stream, out_ids, out_rows, d, id_space, id_space)
+                .with_context(|| format!("rank {rank}: receiving {op} union"))?;
+        *received += nbytes as u64;
+        let got = frame_op(&header)?;
+        if got != op {
+            bail!("rank {rank}: coordinator answered {op:?} with op {got:?}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::os::unix::net::UnixStream;
+    use std::thread;
+
+    /// Wire up a 3-rank star from socketpairs and drive all three
+    /// protocols end to end — the identical generic code the UDS and TCP
+    /// transports call, minus the listener handshake.
+    #[test]
+    fn star_protocols_round_trip_on_socketpairs() {
+        let world = 3usize;
+        let (c1, w1) = UnixStream::pair().unwrap();
+        let (c2, w2) = UnixStream::pair().unwrap();
+        let run = |rank: usize, mut peers: Vec<UnixStream>| {
+            move || -> (Vec<f32>, Vec<f32>, Vec<u64>, Vec<f32>, u64, u64) {
+                let (mut sent, mut received) = (0u64, 0u64);
+                let mut payload = Vec::new();
+                // reduce-scatter: 6 f32s, granule 2 → rank r owns [2r, 2r+2)
+                let mut rs = vec![rank as f32 + 1.0; 6];
+                reduce_scatter(
+                    rank, world, &mut peers, "reducescatter", &mut rs, 2, &mut payload,
+                    &mut sent, &mut received,
+                )
+                .unwrap();
+                // all-gather: rank r publishes its span as 10·(r+1)
+                let mut ag = vec![f32::NAN; 6];
+                ag[rank * 2..rank * 2 + 2].fill(10.0 * (rank as f32 + 1.0));
+                all_gather(
+                    rank, world, &mut peers, "allgather", &mut ag, 2, &mut payload, &mut sent,
+                    &mut received,
+                )
+                .unwrap();
+                // rows union: rank r owns the single id 3r with payload [r, -r]
+                let ids = vec![3 * rank as u64];
+                let rows = vec![rank as f32, -(rank as f32)];
+                let (mut out_ids, mut out_rows) = (Vec::new(), Vec::new());
+                all_gather_rows(
+                    rank, world, &mut peers, "gatherrows", &ids, &rows, 2, 16, &mut out_ids,
+                    &mut out_rows, &mut sent, &mut received,
+                )
+                .unwrap();
+                (rs, ag, out_ids, out_rows, sent, received)
+            }
+        };
+        let h1 = thread::spawn(run(1, vec![w1]));
+        let h2 = thread::spawn(run(2, vec![w2]));
+        let (rs0, ag0, uids, urows, sent0, recv0) = run(0, vec![c1, c2])();
+        let (rs1, ag1, uids1, urows1, sent1, recv1) = h1.join().unwrap();
+        let (rs2, ag2, uids2, urows2, ..) = h2.join().unwrap();
+        // every rank's owned span holds the rank-order sum 1+2+3
+        assert_eq!(rs0[0..2], [6.0, 6.0]);
+        assert_eq!(rs1[2..4], [6.0, 6.0]);
+        assert_eq!(rs2[4..6], [6.0, 6.0]);
+        let expect_ag = vec![10.0f32, 10.0, 20.0, 20.0, 30.0, 30.0];
+        assert_eq!(ag0, expect_ag);
+        assert_eq!(ag1, expect_ag);
+        assert_eq!(ag2, expect_ag);
+        let expect_ids = vec![0u64, 3, 6];
+        let expect_rows = vec![0.0f32, -0.0, 1.0, -1.0, 2.0, -2.0];
+        for (ids, rows) in [(&uids, &urows), (&uids1, &urows1), (&uids2, &urows2)] {
+            assert_eq!(ids, &expect_ids);
+            assert_eq!(rows, &expect_rows);
+        }
+        // byte accounting is honest per-endpoint wire volume: the
+        // coordinator read two full partials but sent only spans back in
+        // the reduce-scatter, so its counters are asymmetric
+        assert!(sent0 > 0 && recv0 > sent0, "coordinator sent {sent0}, received {recv0}");
+        assert!(sent1 > 0 && recv1 > 0);
+    }
+
+    /// A worker answering a reduce-scatter with the wrong op surfaces
+    /// the divergence error on the coordinator, not a hang.
+    #[test]
+    fn star_reduce_scatter_detects_op_divergence() {
+        let (c1, w1) = UnixStream::pair().unwrap();
+        let h = thread::spawn(move || {
+            let mut peers = vec![w1];
+            let (mut s, mut r) = (0u64, 0u64);
+            let mut payload = Vec::new();
+            let mut buf = vec![1.0f32; 4];
+            // rank 1 runs an all-gather while rank 0 runs a reduce-scatter
+            let _ = all_gather(
+                1, 2, &mut peers, "allgather", &mut buf, 2, &mut payload, &mut s, &mut r,
+            );
+        });
+        let mut peers = vec![c1];
+        let (mut s, mut r) = (0u64, 0u64);
+        let mut payload = Vec::new();
+        let mut buf = vec![1.0f32; 4];
+        let e = reduce_scatter(
+            0, 2, &mut peers, "reducescatter", &mut buf, 2, &mut payload, &mut s, &mut r,
+        )
+        .unwrap_err();
+        assert!(format!("{e:#}").contains("diverged"), "{e:#}");
+        drop(peers);
+        let _ = h.join();
+    }
+}

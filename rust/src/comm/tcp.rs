@@ -269,6 +269,65 @@ impl Transport for TcpTransport {
         self.collective("allreduce", buf)
     }
 
+    fn reduce_scatter_sum(&mut self, buf: &mut [f32], granule: usize) -> Result<()> {
+        let mut payload = std::mem::take(&mut self.scratch);
+        let result = super::star::reduce_scatter(
+            self.rank,
+            self.world,
+            &mut self.peers,
+            "reducescatter",
+            buf,
+            granule,
+            &mut payload,
+            &mut self.sent,
+            &mut self.received,
+        );
+        self.scratch = payload;
+        result
+    }
+
+    fn all_gather(&mut self, buf: &mut [f32], granule: usize) -> Result<()> {
+        let mut payload = std::mem::take(&mut self.scratch);
+        let result = super::star::all_gather(
+            self.rank,
+            self.world,
+            &mut self.peers,
+            "allgather",
+            buf,
+            granule,
+            &mut payload,
+            &mut self.sent,
+            &mut self.received,
+        );
+        self.scratch = payload;
+        result
+    }
+
+    fn all_gather_rows(
+        &mut self,
+        ids: &[u64],
+        rows: &[f32],
+        d: usize,
+        id_space: usize,
+        out_ids: &mut Vec<u64>,
+        out_rows: &mut Vec<f32>,
+    ) -> Result<()> {
+        super::star::all_gather_rows(
+            self.rank,
+            self.world,
+            &mut self.peers,
+            "gatherrows",
+            ids,
+            rows,
+            d,
+            id_space,
+            out_ids,
+            out_rows,
+            &mut self.sent,
+            &mut self.received,
+        )
+    }
+
     fn barrier(&mut self) -> Result<()> {
         self.collective("barrier", &mut [])
     }

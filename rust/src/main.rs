@@ -72,6 +72,12 @@ USAGE:
                       of the same replica count.
   A socket containing `:` is a TCP host:port address (workers may live on
   other hosts); anything else is a unix-domain-socket path.
+  data/hybrid wire knobs ([dist] keys, DESIGN.md §14): sparse = true
+  (default) ships only active gradient rows as owned-rows frames —
+  `--set dist.sparse=false` restores the dense reference wire; overlap =
+  true runs each step's exchange on a comm thread while the next step's
+  batch prep proceeds. Both are bitwise-neutral; the metrics CSV's
+  comm_overlap_ns column shows the per-step exchange wait they shrink.
 
   `serve` runs a config as a resident mode=sketch service (sketchd,
   DESIGN.md §13): after every epoch the world snapshots its state to

@@ -239,11 +239,13 @@ pub fn run_resident(spec: &RunSpec) -> Result<()> {
                 "bytes_sent",
                 "bytes_received",
                 "opt_step_ns",
+                "comm_overlap_ns",
             ],
         )?),
         _ => None,
     };
     let mut opt_ns_prev = session.trainer.opt_ns_total();
+    let mut comm_ns_prev = session.trainer.comm_ns_total();
     for epoch in done + 1..=spec.epochs {
         let r = session.epoch()?;
         let vppl = session.valid_ppl()?;
@@ -282,6 +284,11 @@ pub fn run_resident(spec: &RunSpec) -> Result<()> {
         let opt_ns_now = session.trainer.opt_ns_total();
         let opt_step_ns = (opt_ns_now - opt_ns_prev) / (r.steps as u64).max(1);
         opt_ns_prev = opt_ns_now;
+        // serve covers mode = sketch (no data-parallel exchange), so this
+        // stays 0 — the column is kept so the schema matches Session::run
+        let comm_ns_now = session.trainer.comm_ns_total();
+        let comm_overlap_ns = (comm_ns_now - comm_ns_prev) / (r.steps as u64).max(1);
+        comm_ns_prev = comm_ns_now;
         if lead {
             ck.save(&d.snapshot)
                 .with_context(|| format!("persisting serve snapshot {}", d.snapshot))?;
@@ -307,6 +314,7 @@ pub fn run_resident(spec: &RunSpec) -> Result<()> {
                     &sent,
                     &received,
                     &opt_step_ns,
+                    &comm_overlap_ns,
                 ])?;
                 csv.flush()?;
             }

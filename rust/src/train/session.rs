@@ -247,6 +247,16 @@ pub struct DistParams {
     /// 120 s default). The serve loop shortens it so a dead worker is
     /// detected in seconds, not minutes.
     pub heartbeat_ms: u64,
+    /// Ship only mask-active rows over owned-rows collectives instead of
+    /// dense `[vocab, d]` gradient segments (DESIGN.md §14) —
+    /// bitwise-identical to the dense exchange, at a fraction of the
+    /// bytes. `sparse = false` is the dense reference wire
+    /// (`data`/`hybrid`/`comm-sketch` only).
+    pub sparse: bool,
+    /// Run each step's gradient exchange on a comm thread while the next
+    /// step's batch prep proceeds (DESIGN.md §14). Off = the synchronous
+    /// bitwise reference path (`data`/`hybrid` only).
+    pub overlap: bool,
 }
 
 impl Default for DistParams {
@@ -264,6 +274,8 @@ impl Default for DistParams {
             snapshot: String::new(),
             query_socket: String::new(),
             heartbeat_ms: 0,
+            sparse: true,
+            overlap: false,
         }
     }
 }
@@ -385,7 +397,7 @@ const MACH_KEYS: &[&str] =
 
 const DIST_KEYS: &[&str] = &[
     "mode", "rank", "workers", "socket", "replicas", "comm_w", "comm_d", "comm_k",
-    "comm_momentum", "snapshot", "query_socket", "heartbeat_ms",
+    "comm_momentum", "snapshot", "query_socket", "heartbeat_ms", "sparse", "overlap",
 ];
 
 /// Levenshtein distance (small strings — run-spec keys).
@@ -484,10 +496,12 @@ impl RunSpec {
                 "snapshot" => d.snapshot = value.to_string(),
                 "query_socket" | "query-socket" => d.query_socket = value.to_string(),
                 "heartbeat_ms" | "heartbeat-ms" => d.heartbeat_ms = parse_num(key, value)?,
+                "sparse" => d.sparse = parse_num(key, value)?,
+                "overlap" => d.overlap = parse_num(key, value)?,
                 other => bail!(
                     "unknown [dist] key {other:?}{} (valid: mode, rank, workers, socket, \
                      replicas, comm_w, comm_d, comm_k, comm_momentum, snapshot, \
-                     query_socket, heartbeat_ms)",
+                     query_socket, heartbeat_ms, sparse, overlap)",
                     suggest(other, DIST_KEYS.iter().copied())
                 ),
             }
@@ -720,6 +734,22 @@ impl RunSpec {
                     d.mode
                 );
             }
+            if d.mode == DistMode::Sketch && d.sparse != dd.sparse {
+                bail!(
+                    "dist.sparse tunes the data-parallel gradient exchange, but mode = \
+                     sketch has none — drop it, or set mode = data | hybrid | comm-sketch"
+                );
+            }
+            if d.overlap != dd.overlap
+                && !matches!(d.mode, DistMode::Data | DistMode::Hybrid)
+            {
+                bail!(
+                    "dist.overlap pipelines the data-parallel gradient exchange behind the \
+                     next step's prep — it covers mode = data | hybrid only (mode = {} \
+                     stays synchronous); drop it, or change the mode",
+                    d.mode
+                );
+            }
             match d.mode {
                 DistMode::Sketch => {
                     if d.replicas != 0 {
@@ -786,6 +816,9 @@ impl RunSpec {
     /// batch is silent; a genuine trajectory change still warns.
     /// `comm-sketch` keeps its mode *and* wire geometry: the compressed
     /// exchange is lossy, so those knobs shape the trajectory.
+    /// `dist.sparse` / `dist.overlap` are wire-format and schedule
+    /// placement — every setting trains the identical bits
+    /// (DESIGN.md §14) — so they are stripped like rank/workers/socket.
     pub fn trained_form(&self) -> String {
         let mut s = self.clone();
         s.out = RunSpec::default().out;
@@ -943,6 +976,12 @@ impl fmt::Display for RunSpec {
             }
             if dp.heartbeat_ms != dd.heartbeat_ms {
                 writeln!(f, "heartbeat_ms = {}", dp.heartbeat_ms)?;
+            }
+            if dp.sparse != dd.sparse {
+                writeln!(f, "sparse = {}", dp.sparse)?;
+            }
+            if dp.overlap != dd.overlap {
+                writeln!(f, "overlap = {}", dp.overlap)?;
             }
         }
         Ok(())
@@ -1108,6 +1147,8 @@ impl Session {
                 let (lo, hi) =
                     crate::sketch::plan::width_partition(replicas, d.workers, d.rank);
                 trainer.enable_data_parallel(replicas, lo, hi, dist.map(|c| c.comm()))?;
+                trainer.set_sparse_exchange(d.sparse)?;
+                trainer.set_comm_overlap(d.overlap)?;
                 if d.mode == DistMode::CommSketch {
                     trainer.enable_comm_sketch(crate::comm::GradSketchCfg {
                         depth: d.comm_d,
@@ -1267,6 +1308,7 @@ impl Session {
                     "bytes_sent",
                     "bytes_received",
                     "opt_step_ns",
+                    "comm_overlap_ns",
                 ],
             )?),
             _ => None,
@@ -1286,6 +1328,7 @@ impl Session {
         let mut summary =
             RunSummary { epochs: Vec::new(), valid_ppl: Vec::new(), test_ppl: f64::NAN };
         let mut opt_ns_prev = self.trainer.opt_ns_total();
+        let mut comm_ns_prev = self.trainer.comm_ns_total();
         for e in 1..=self.spec.epochs {
             let r = self.epoch()?;
             let vppl = self.valid_ppl()?;
@@ -1307,6 +1350,12 @@ impl Session {
             let opt_ns_now = self.trainer.opt_ns_total();
             let opt_step_ns = (opt_ns_now - opt_ns_prev) / (r.steps as u64).max(1);
             opt_ns_prev = opt_ns_now;
+            // mean per-step time blocked on the gradient exchange — the
+            // wall clock `[dist] overlap = true` exists to hide
+            // (DESIGN.md §14); 0 without a data-parallel transport
+            let comm_ns_now = self.trainer.comm_ns_total();
+            let comm_overlap_ns = (comm_ns_now - comm_ns_prev) / (r.steps as u64).max(1);
+            comm_ns_prev = comm_ns_now;
             if let Some(csv) = metrics.as_mut() {
                 let (sent, received) = wire_bytes(&self.dist);
                 csv.row(&[
@@ -1319,6 +1368,7 @@ impl Session {
                     &sent,
                     &received,
                     &opt_step_ns,
+                    &comm_overlap_ns,
                 ])?;
             }
             summary.epochs.push(r);

@@ -28,7 +28,7 @@ use crate::model::LmGrads;
 use crate::optim::{AuxSketch, FlatOptimizer, LrSchedule, OptimPolicy, OptimSpec, RowShape, SparseLayer};
 use crate::train::checkpoint::Checkpoint;
 use crate::train::engine::LmEngine;
-use crate::train::sampler::{stream_stripe, CandidateSampler};
+use crate::train::sampler::{stream_stripe, CandidateSampler, Candidates};
 use crate::util::rng::Rng;
 use crate::util::timer::Timer;
 
@@ -118,9 +118,202 @@ struct DataParallel {
     off_bias: usize,
     off_flat: usize,
     flat_len: usize,
+    /// Ship only active rows over owned-rows collectives instead of the
+    /// dense `[vocab, d]` segments (DESIGN.md §14).
+    sparse: bool,
+    /// Run each step's exchange on a comm thread while the next step's
+    /// weight-independent prep proceeds (DESIGN.md §14).
+    overlap: bool,
+    /// Reusable sparse-exchange scratch; moves into the comm thread's
+    /// job under overlap and comes back with the ticket.
+    xs: ExchangeScratch,
     /// `mode = comm-sketch`: the wire compressor riding on this replica
     /// loop (`None` = the dense exchange).
     cs: Option<CommSketch>,
+}
+
+/// Scratch buffers the sparse owned-rows exchange reuses across steps.
+#[derive(Default)]
+struct ExchangeScratch {
+    /// Staging for the dense head all-reduce (losses + trunk).
+    head: Vec<f32>,
+    send_ids: Vec<u64>,
+    send_rows: Vec<f32>,
+    recv_ids: Vec<u64>,
+    recv_rows: Vec<f32>,
+}
+
+/// The exchange-buffer geometry [`run_data_exchange`] needs — `Copy`, so
+/// the overlapped path can move it into the comm thread's closure.
+#[derive(Clone, Copy)]
+struct SegGeom {
+    replicas: usize,
+    lo: usize,
+    hi: usize,
+    vocab: usize,
+    de: usize,
+    seg_len: usize,
+    off_emb: usize,
+    off_sm: usize,
+    off_bias: usize,
+    off_flat: usize,
+    flat_len: usize,
+}
+
+impl DataParallel {
+    fn geom(&self, vocab: usize, de: usize) -> SegGeom {
+        SegGeom {
+            replicas: self.replicas,
+            lo: self.lo,
+            hi: self.hi,
+            vocab,
+            de,
+            seg_len: self.seg_len,
+            off_emb: self.off_emb,
+            off_sm: self.off_sm,
+            off_bias: self.off_bias,
+            off_flat: self.off_flat,
+            flat_len: self.flat_len,
+        }
+    }
+}
+
+/// The weight-independent slice of one global step — batches fetched,
+/// dedup plans built, candidates sampled for every locally owned replica.
+/// Under overlap this is exactly the work prepared for step `t+1` while
+/// step `t`'s exchange crosses the wire; everything here depends only on
+/// the data stream and the samplers' RNG sequence, never on parameters.
+struct StepPrep {
+    plans: Vec<BatchPlan>,
+    cands: Vec<Candidates>,
+}
+
+/// Fetch + plan + sample one step's windows for the locally owned
+/// replicas. Free function (not a method) so the overlapped epoch can run
+/// it while `self`'s buffers are out on the comm thread.
+fn prep_step(
+    dp: &mut DataParallel,
+    batchers: &mut [BpttBatcher],
+    k: usize,
+) -> Result<StepPrep> {
+    let mut plans = Vec::with_capacity(batchers.len());
+    let mut cands = Vec::with_capacity(batchers.len());
+    for (i, batcher) in batchers.iter_mut().enumerate() {
+        let r = dp.lo + i;
+        let batch = batcher.next_batch().with_context(|| {
+            format!("replica {r}'s stripe ran out of windows before the step budget")
+        })?;
+        plans.push(BatchPlan::build(&batch.x, k, 0));
+        cands.push(dp.samplers[i].sample(&batch.y));
+    }
+    Ok(StepPrep { plans, cands })
+}
+
+/// One step's data-mode gradient exchange, dense or sparse — the single
+/// implementation both the synchronous path and the comm thread run, so
+/// overlap can never diverge from the bitwise reference.
+///
+/// Dense: one `all_reduce_sum` over the whole buffer (each replica
+/// segment has exactly one owner, so the sum reconstructs it exactly).
+/// Sparse (DESIGN.md §14): the per-replica heads (loss + dense trunk)
+/// still all-reduce — the trunk has nothing to sparsify — but the
+/// `[vocab, d]` embedding / softmax / bias regions ship as owned-rows
+/// frames carrying only mask-active rows. Global row id `r · vocab + row`
+/// keeps every rank's id list strictly ascending (owned replicas ascend,
+/// rows ascend within) and disjoint across ranks (each replica has one
+/// owner), so the union is a pure copy-merge: bitwise-identical to the
+/// dense reconstruction, at a fraction of the bytes. Received rows also
+/// re-mark the local activity masks, which downstream code only ever
+/// reads as `> 0` — the union of active rows is preserved exactly.
+fn run_data_exchange(
+    comm: Option<&Arc<Mutex<dyn Transport>>>,
+    g: SegGeom,
+    sparse: bool,
+    buf: &mut [f32],
+    xs: &mut ExchangeScratch,
+) -> Result<()> {
+    let Some(comm) = comm else { return Ok(()) };
+    if !sparse {
+        return comm::exchange_sum(Some(comm), buf);
+    }
+    let mask_base = g.replicas * g.seg_len;
+    // (1) losses + dense trunks: stage the owned segments' heads into a
+    // compact [replicas, 1 + flat_len] buffer and all-reduce — the
+    // per-replica layout is kept so the replica-order average downstream
+    // sums in exactly the reference order
+    let hl = 1 + g.flat_len;
+    xs.head.clear();
+    xs.head.resize(g.replicas * hl, 0.0);
+    for r in g.lo..g.hi {
+        xs.head[r * hl] = buf[r * g.seg_len];
+        xs.head[r * hl + 1..(r + 1) * hl]
+            .copy_from_slice(&buf[r * g.seg_len + g.off_flat..][..g.flat_len]);
+    }
+    comm.lock().unwrap().all_reduce_sum(&mut xs.head)?;
+    for r in 0..g.replicas {
+        buf[r * g.seg_len] = xs.head[r * hl];
+        buf[r * g.seg_len + g.off_flat..][..g.flat_len]
+            .copy_from_slice(&xs.head[r * hl + 1..(r + 1) * hl]);
+    }
+    // (2) embedding rows: for each owned replica, ship the rows the
+    // local activity mask marks (the mask is the union over this rank's
+    // replicas, so it covers every row the replica touched; extra rows
+    // ship as the zeros they hold)
+    xs.send_ids.clear();
+    xs.send_rows.clear();
+    for r in g.lo..g.hi {
+        for row in 0..g.vocab {
+            if buf[mask_base + row] > 0.0 {
+                xs.send_ids.push((r * g.vocab + row) as u64);
+                xs.send_rows
+                    .extend_from_slice(&buf[r * g.seg_len + g.off_emb + row * g.de..][..g.de]);
+            }
+        }
+    }
+    comm.lock().unwrap().all_gather_rows(
+        &xs.send_ids,
+        &xs.send_rows,
+        g.de,
+        g.replicas * g.vocab,
+        &mut xs.recv_ids,
+        &mut xs.recv_rows,
+    )?;
+    for (i, &gid) in xs.recv_ids.iter().enumerate() {
+        let (r, row) = (gid as usize / g.vocab, gid as usize % g.vocab);
+        buf[r * g.seg_len + g.off_emb + row * g.de..][..g.de]
+            .copy_from_slice(&xs.recv_rows[i * g.de..(i + 1) * g.de]);
+        buf[mask_base + row] = 1.0;
+    }
+    // (3) softmax rows + bias ride one frame: payload [de | 1] per row
+    let d = g.de + 1;
+    xs.send_ids.clear();
+    xs.send_rows.clear();
+    for r in g.lo..g.hi {
+        for row in 0..g.vocab {
+            if buf[mask_base + g.vocab + row] > 0.0 {
+                xs.send_ids.push((r * g.vocab + row) as u64);
+                xs.send_rows
+                    .extend_from_slice(&buf[r * g.seg_len + g.off_sm + row * g.de..][..g.de]);
+                xs.send_rows.push(buf[r * g.seg_len + g.off_bias + row]);
+            }
+        }
+    }
+    comm.lock().unwrap().all_gather_rows(
+        &xs.send_ids,
+        &xs.send_rows,
+        d,
+        g.replicas * g.vocab,
+        &mut xs.recv_ids,
+        &mut xs.recv_rows,
+    )?;
+    for (i, &gid) in xs.recv_ids.iter().enumerate() {
+        let (r, row) = (gid as usize / g.vocab, gid as usize % g.vocab);
+        buf[r * g.seg_len + g.off_sm + row * g.de..][..g.de]
+            .copy_from_slice(&xs.recv_rows[i * d..i * d + g.de]);
+        buf[r * g.seg_len + g.off_bias + row] = xs.recv_rows[i * d + g.de];
+        buf[mask_base + g.vocab + row] = 1.0;
+    }
+    Ok(())
 }
 
 /// `mode = comm-sketch` state (DESIGN.md §11): dense per-replica
@@ -229,6 +422,12 @@ pub struct LmTrainer {
     /// pack/unpack run outside the timed windows so the per-epoch
     /// `opt_step_ns` metrics column tracks pure step cost (DESIGN.md §Perf).
     opt_ns: u64,
+    /// Cumulative wall time (ns) this rank spent *blocked on* the gradient
+    /// exchange — around the collectives on the synchronous path, around
+    /// `Ticket::wait` under overlap — so the per-epoch `comm_overlap_ns`
+    /// metrics column shows exactly the wire time overlap hides
+    /// (DESIGN.md §14).
+    comm_ns: u64,
     /// Dedup plan of the most recent batch (diagnostics: Fig. 1/2/4).
     pub last_plan: Option<BatchPlan>,
     h: Vec<f32>,
@@ -308,6 +507,7 @@ impl LmTrainer {
             sampler,
             step: 0,
             opt_ns: 0,
+            comm_ns: 0,
             last_plan: None,
             h: vec![0.0; p.batch * p.hd],
             c: vec![0.0; p.batch * p.hd],
@@ -393,6 +593,9 @@ impl LmTrainer {
             off_bias,
             off_flat,
             flat_len,
+            sparse: false,
+            overlap: false,
+            xs: ExchangeScratch::default(),
             cs: None,
         });
         Ok(())
@@ -401,6 +604,28 @@ impl LmTrainer {
     /// Is this trainer in data-parallel mode?
     pub fn is_data_parallel(&self) -> bool {
         self.dp.is_some()
+    }
+
+    /// Ship only mask-active rows over owned-rows collectives instead of
+    /// dense `[vocab, d]` segments (`[dist] sparse`, DESIGN.md §14).
+    /// Bitwise-identical to the dense exchange; off is the reference.
+    pub fn set_sparse_exchange(&mut self, on: bool) -> Result<()> {
+        let Some(dp) = self.dp.as_mut() else {
+            bail!("the sparse exchange rides on data-parallel mode — enable_data_parallel first");
+        };
+        dp.sparse = on;
+        Ok(())
+    }
+
+    /// Run each step's gradient exchange on a comm thread while the next
+    /// step's weight-independent prep proceeds (`[dist] overlap`,
+    /// DESIGN.md §14). The synchronous path is the bitwise reference.
+    pub fn set_comm_overlap(&mut self, on: bool) -> Result<()> {
+        let Some(dp) = self.dp.as_mut() else {
+            bail!("comm overlap rides on data-parallel mode — enable_data_parallel first");
+        };
+        dp.overlap = on;
+        Ok(())
     }
 
     /// Switch the data-parallel exchange to `mode = comm-sketch`
@@ -459,8 +684,10 @@ impl LmTrainer {
         self.dp.as_ref().is_some_and(|dp| dp.cs.is_some())
     }
 
-    /// Bytes one rank ships per gradient exchange under comm-sketch
-    /// (slots + masks, 4 bytes each way per f32) — diagnostics.
+    /// f32s one rank ships per gradient exchange under comm-sketch
+    /// (slots + masks) — diagnostics. An upper bound under
+    /// `[dist] sparse`, where the masks ship as header-side id sets
+    /// covering only the active rows.
     pub fn comm_sketch_wire_f32s(&self) -> Option<usize> {
         let dp = self.dp.as_ref()?;
         let cs = dp.cs.as_ref()?;
@@ -550,6 +777,15 @@ impl LmTrainer {
         self.opt_ns
     }
 
+    /// Cumulative nanoseconds this rank was blocked on the gradient
+    /// exchange (the `comm_overlap_ns` metrics column divides per-epoch
+    /// deltas of this by the epoch's step count). Zero outside
+    /// data-parallel mode; under `overlap = true` it counts only the
+    /// residual wait, so the column directly shows what overlap hides.
+    pub fn comm_ns_total(&self) -> u64 {
+        self.comm_ns
+    }
+
     /// Gradients of the most recent step (diagnostics).
     pub fn last_grads(&self) -> &LmGrads {
         &self.grads
@@ -634,9 +870,70 @@ impl LmTrainer {
                 BpttBatcher::new(&stream[s..e], p.batch, p.bptt)
             })
             .collect();
+        if dp.overlap && dp.cs.is_none() {
+            return self.train_epoch_data_overlapped(dp, &mut batchers, steps);
+        }
         let mut acc = EpochAcc::start();
         for _ in 0..steps {
             let step_loss = self.global_step(dp, &mut batchers)?;
+            acc.push(self.step, step_loss);
+        }
+        Ok(acc.finish(self.step))
+    }
+
+    /// The overlapped data-parallel epoch (`[dist] overlap = true`,
+    /// DESIGN.md §14): step `t`'s gradient exchange runs on the
+    /// [`comm::CommPipe`] thread while this thread fetches, plans and
+    /// samples step `t+1` — the only work in a step that does not read
+    /// parameters (the averaged-gradient clip is a global-norm barrier,
+    /// so the optimizer apply itself cannot be pipelined). Bitwise
+    /// equivalence with the synchronous path holds because the exchange
+    /// is the same [`run_data_exchange`] code, jobs run in submission
+    /// order on one thread, and every ticket is consumed before its
+    /// buffer is read — overlap moves *when* the wait happens, never
+    /// *what* is computed.
+    fn train_epoch_data_overlapped(
+        &mut self,
+        dp: &mut DataParallel,
+        batchers: &mut [BpttBatcher],
+        steps: usize,
+    ) -> Result<TrainReport> {
+        let p = self.opts.preset;
+        let geom = dp.geom(p.vocab, p.de);
+        let pipe = comm::CommPipe::new();
+        let mut acc = EpochAcc::start();
+        let mut prep = prep_step(dp, batchers, p.k)?;
+        for s in 0..steps {
+            self.forward_scatter(dp, &prep)?;
+            // hand step s's exchange to the comm thread; the buffers move
+            // into the job and come back through the ticket, so nothing
+            // aliases while the next step's prep runs here
+            let ticket = match dp.comm.as_ref() {
+                Some(comm) => {
+                    let comm = Arc::clone(comm);
+                    let mut buf = std::mem::take(&mut dp.buf);
+                    let mut xs = std::mem::take(&mut dp.xs);
+                    let sparse = dp.sparse;
+                    Some(pipe.submit(move || {
+                        run_data_exchange(Some(&comm), geom, sparse, &mut buf, &mut xs)?;
+                        Ok((buf, xs))
+                    }))
+                }
+                // comm = None: the exchange is the identity — nothing to
+                // overlap, the buffer stays put
+                None => None,
+            };
+            if s + 1 < steps {
+                prep = prep_step(dp, batchers, p.k)?;
+            }
+            if let Some(t) = ticket {
+                let t0 = std::time::Instant::now();
+                let (buf, xs) = t.wait()?;
+                self.comm_ns += t0.elapsed().as_nanos() as u64;
+                dp.buf = buf;
+                dp.xs = xs;
+            }
+            let step_loss = self.apply_global_update(dp)?;
             acc.push(self.step, step_loss);
         }
         Ok(acc.finish(self.step))
@@ -658,18 +955,28 @@ impl LmTrainer {
             return out;
         }
         let p = self.opts.preset;
+        let prep = prep_step(dp, batchers, p.k)?;
+        self.forward_scatter(dp, &prep)?;
+        // --- exchange (DESIGN.md §10/§14), timed so the comm_overlap_ns
+        // column shows the full blocking cost overlap would hide
+        let geom = dp.geom(p.vocab, p.de);
+        let t0 = std::time::Instant::now();
+        run_data_exchange(dp.comm.as_ref(), geom, dp.sparse, &mut dp.buf, &mut dp.xs)?;
+        self.comm_ns += t0.elapsed().as_nanos() as u64;
+        self.apply_global_update(dp)
+    }
+
+    /// Forward/backward every locally owned replica of one prepared step
+    /// and scatter losses + gradients into the owned segments of the
+    /// (zeroed) exchange buffer, marking the shared activity masks.
+    fn forward_scatter(&mut self, dp: &mut DataParallel, prep: &StepPrep) -> Result<()> {
+        let p = self.opts.preset;
         let (vocab, de) = (p.vocab, p.de);
         let mask_base = dp.replicas * dp.seg_len;
         dp.buf.iter_mut().for_each(|x| *x = 0.0);
-
-        // --- local replicas: forward/backward + scatter
-        for (i, batcher) in batchers.iter_mut().enumerate() {
+        for i in 0..(dp.hi - dp.lo) {
             let r = dp.lo + i;
-            let batch = batcher.next_batch().with_context(|| {
-                format!("replica {r}'s stripe ran out of windows before the step budget")
-            })?;
-            let plan = BatchPlan::build(&batch.x, p.k, 0);
-            let cands = dp.samplers[i].sample(&batch.y);
+            let (plan, cands) = (&prep.plans[i], &prep.cands[i]);
             self.emb.gather(&plan.uniq, &mut self.emb_rows);
             self.sm.gather(&cands.ids, &mut self.sm_rows);
             self.sm_bias.gather(&cands.ids, &mut self.sm_bias_rows);
@@ -704,9 +1011,17 @@ impl LmTrainer {
                 dp.buf[mask_base + vocab + id as usize] = 1.0;
             }
         }
+        Ok(())
+    }
 
-        // --- exchange + replica-order average (DESIGN.md §10)
-        comm::exchange_sum(dp.comm.as_ref(), &mut dp.buf)?;
+    /// Post-exchange half of one global step: average the reconstructed
+    /// segments in replica order, clip the averaged global gradient, and
+    /// apply one identical optimizer step over the ascending union of
+    /// active rows. Returns the global-batch loss (mean over replicas).
+    fn apply_global_update(&mut self, dp: &mut DataParallel) -> Result<f64> {
+        let p = self.opts.preset;
+        let (vocab, de) = (p.vocab, p.de);
+        let mask_base = dp.replicas * dp.seg_len;
         let mut loss_sum = 0.0f64;
         for r in 0..dp.replicas {
             loss_sum += dp.buf[r * dp.seg_len] as f64;
@@ -882,12 +1197,44 @@ impl LmTrainer {
             }
         }
 
-        // --- one batched exchange for slots + masks, then replica-order
-        // average of the (bitwise-reconstructed) slots
-        {
+        // --- exchange slots + masks, then replica-order average of the
+        // (bitwise-reconstructed) slots. Under `[dist] sparse` the masks
+        // leave the f32 payload entirely: they ride an owned-rows frame
+        // as a pure id set (d = 0) in the *header-side* id lists, so mask
+        // marks are never summed with — or counted as — gradient bytes,
+        // and only the active ids cross the wire. The union semantics are
+        // identical either way (downstream reads masks only as `> 0`).
+        let comm_t0 = std::time::Instant::now();
+        if dp.sparse && dp.comm.is_some() {
+            {
+                let (slots, _) = buf.split_at_mut(mask_base);
+                comm::exchange_sum(dp.comm.as_ref(), slots)?;
+            }
+            dp.xs.send_ids.clear();
+            for (i, m) in buf[mask_base..].iter().enumerate() {
+                if *m > 0.0 {
+                    dp.xs.send_ids.push(i as u64);
+                }
+            }
+            dp.xs.send_rows.clear();
+            let comm = dp.comm.as_ref().unwrap();
+            comm.lock().unwrap().all_gather_rows(
+                &dp.xs.send_ids,
+                &dp.xs.send_rows,
+                0,
+                2 * vocab,
+                &mut dp.xs.recv_ids,
+                &mut dp.xs.recv_rows,
+            )?;
+            buf[mask_base..].iter_mut().for_each(|x| *x = 0.0);
+            for &id in &dp.xs.recv_ids {
+                buf[mask_base + id as usize] = 1.0;
+            }
+        } else {
             let (slots, masks) = buf.split_at_mut(mask_base);
             comm::exchange_sum_many(dp.comm.as_ref(), &mut [slots, masks], scratch)?;
         }
+        self.comm_ns += comm_t0.elapsed().as_nanos() as u64;
         let mut loss_sum = 0.0f64;
         for r in 0..dp.replicas {
             loss_sum += buf[r * slot_len] as f64;
@@ -1411,6 +1758,56 @@ mod tests {
         assert!(e.contains("too short"), "{e}");
     }
 
+    /// Every sparse × overlap layout must reproduce the dense
+    /// single-process reference bit-for-bit (DESIGN.md §14): the
+    /// owned-rows exchange is a pure copy-merge and overlap only moves
+    /// when the wait happens.
+    #[test]
+    fn sparse_and_overlap_exchanges_match_dense_reference_bitwise() {
+        let corpus = SyntheticCorpus::generate(512, 40_000, 1.05, 0.6, 5);
+        let (train, _, _) = corpus.split(0.1, 0.05);
+        let mut reference = tiny_trainer("cs-adam");
+        reference.enable_data_parallel(2, 0, 2, None).unwrap();
+        let rr = reference.train_epoch(train, 8).unwrap();
+        for (sparse, overlap) in [(true, false), (false, true), (true, true)] {
+            let world = crate::comm::mem::mem_world(2);
+            let mut handles = Vec::new();
+            for (rank, comm) in world.into_iter().enumerate() {
+                let train = train.to_vec();
+                handles.push(std::thread::spawn(move || {
+                    let mut tr = tiny_trainer("cs-adam");
+                    let comm: Arc<Mutex<dyn Transport>> = Arc::new(Mutex::new(comm));
+                    tr.enable_data_parallel(2, rank, rank + 1, Some(comm)).unwrap();
+                    tr.set_sparse_exchange(sparse).unwrap();
+                    tr.set_comm_overlap(overlap).unwrap();
+                    let r = tr.train_epoch(&train, 8).unwrap();
+                    (tr, r)
+                }));
+            }
+            for h in handles {
+                let (tr, r) = h.join().unwrap();
+                assert_eq!(
+                    r.mean_loss.to_bits(),
+                    rr.mean_loss.to_bits(),
+                    "loss diverged under sparse={sparse} overlap={overlap}"
+                );
+                assert_eq!(tr.emb.params, reference.emb.params, "sparse={sparse} overlap={overlap}");
+                assert_eq!(tr.sm.params, reference.sm.params, "sparse={sparse} overlap={overlap}");
+                assert_eq!(tr.sm_bias.params, reference.sm_bias.params);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_and_overlap_knobs_need_data_parallel_mode() {
+        let mut tr = tiny_trainer("adam");
+        assert!(tr.set_sparse_exchange(true).is_err());
+        assert!(tr.set_comm_overlap(true).is_err());
+        tr.enable_data_parallel(2, 0, 2, None).unwrap();
+        tr.set_sparse_exchange(true).unwrap();
+        tr.set_comm_overlap(true).unwrap();
+    }
+
     fn cs_cfg() -> GradSketchCfg {
         GradSketchCfg { depth: 3, width: 1024, k: 256, momentum: 0.9, seed: 7 }
     }
@@ -1455,6 +1852,42 @@ mod tests {
         assert_eq!(a.sm.params, b.sm.params);
         let ppl = a.eval_ppl(valid, 4).unwrap();
         assert!(ppl.is_finite() && ppl > 1.0);
+    }
+
+    /// `[dist] sparse` under comm-sketch moves the activity masks out of
+    /// the f32 payload and into owned-rows frame headers — the decoded
+    /// candidate sets (and hence the whole trajectory) must not change.
+    #[test]
+    fn comm_sketch_header_masks_match_dense_masks_bitwise() {
+        let corpus = SyntheticCorpus::generate(512, 40_000, 1.05, 0.6, 5);
+        let (train, _, _) = corpus.split(0.1, 0.05);
+        let run = |sparse: bool| {
+            let world = crate::comm::mem::mem_world(2);
+            let handles: Vec<_> = world
+                .into_iter()
+                .enumerate()
+                .map(|(rank, comm)| {
+                    let train = train.to_vec();
+                    std::thread::spawn(move || {
+                        let mut tr = tiny_trainer("cs-adam");
+                        let comm: Arc<Mutex<dyn Transport>> = Arc::new(Mutex::new(comm));
+                        tr.enable_data_parallel(2, rank, rank + 1, Some(comm)).unwrap();
+                        tr.set_sparse_exchange(sparse).unwrap();
+                        tr.enable_comm_sketch(cs_cfg()).unwrap();
+                        let r = tr.train_epoch(&train, 6).unwrap();
+                        (tr, r)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        };
+        let dense = run(false);
+        let sparse = run(true);
+        for ((td, rd), (ts, rs)) in dense.iter().zip(sparse.iter()) {
+            assert_eq!(rd.mean_loss.to_bits(), rs.mean_loss.to_bits());
+            assert_eq!(td.emb.params, ts.emb.params);
+            assert_eq!(td.sm.params, ts.sm.params);
+        }
     }
 
     #[test]

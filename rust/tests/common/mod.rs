@@ -130,6 +130,28 @@ pub mod rogue {
         stream.write_all(&vec![b'{'; sent]).unwrap();
         stream.flush().unwrap();
     }
+
+    /// A hand-crafted owned-rows frame (DESIGN.md §14 wire format):
+    /// `u64` row ids ride between the JSON header and the f32 payload.
+    /// The header text is caller-supplied so a rogue can lie about any
+    /// field — row count, geometry, payload size — independently of the
+    /// bytes it actually ships.
+    pub fn send_rows_frame<W: Write>(
+        stream: &mut W,
+        header: &str,
+        ids: &[u64],
+        payload: &[f32],
+    ) {
+        stream.write_all(&(header.len() as u32).to_le_bytes()).unwrap();
+        stream.write_all(header.as_bytes()).unwrap();
+        for &id in ids {
+            stream.write_all(&id.to_le_bytes()).unwrap();
+        }
+        for x in payload {
+            stream.write_all(&x.to_le_bytes()).unwrap();
+        }
+        stream.flush().unwrap();
+    }
 }
 
 /// Open the artifact runtime, or return `None` when the XLA leg is

@@ -275,6 +275,211 @@ fn diverged_op_sequence_surfaces_err_tcp() {
     diverged_op_sequence(Wire::Tcp);
 }
 
+// ---------------------------------------------------------------------------
+// Owned-rows codec faults (DESIGN.md §14): the sparse collective's
+// defensive bounds, exercised over *both* real wires. The codec itself
+// has Cursor-level unit tests in `comm/frame.rs`; these legs prove the
+// same rejections fire through a live socket — err, never hang — and
+// carry the rank/op context the serve loop keys off.
+// ---------------------------------------------------------------------------
+
+/// A rows-frame header for the rogue: the coordinator below always runs
+/// `all_gather_rows` with `d = 2`, `id_space = 16`.
+fn rows_header(n: usize, rows: usize, d: usize, total: usize) -> String {
+    format!("{{\"op\":\"gatherrows\",\"n\":{n},\"rows\":{rows},\"d\":{d},\"total\":{total}}}")
+}
+
+/// Like [`rogue_scenario`], but the coordinator runs the sparse
+/// collective: it contributes one owned row and waits for rank 1's
+/// owned-rows frame — which `fault` supplies, malformed.
+fn rogue_rows_scenario(
+    wire: Wire,
+    tag: &str,
+    fault: impl FnOnce(&mut rogue::Conn) + Send + 'static,
+) -> String {
+    let coord = Coord::bind(wire, tag);
+    with_deadline(DEADLINE, move || {
+        let ep = coord.ep.clone();
+        let peer = thread::spawn(move || {
+            let mut s = rogue::connect(&ep, DEADLINE);
+            rogue::send_hello(&mut s, 1, 2);
+            fault(&mut s);
+            s // keep the stream alive until the coordinator has failed
+        });
+        let mut t0 = coord.accept(2).unwrap();
+        let (mut out_ids, mut out_rows) = (Vec::new(), Vec::new());
+        let e = t0
+            .all_gather_rows(&[0u64], &[1.0, 2.0], 2, 16, &mut out_ids, &mut out_rows)
+            .unwrap_err();
+        drop(peer.join().unwrap());
+        coord.cleanup();
+        format!("{e:#}")
+    })
+}
+
+/// Duplicate (hence non-ascending) row ids: rejected by the reader's
+/// independent re-validation, with the offending rank in the context.
+fn rows_duplicate_ids(wire: Wire) {
+    let err = rogue_rows_scenario(wire, "rowsdup", |s| {
+        rogue::send_rows_frame(s, &rows_header(4, 2, 2, 16), &[5, 5], &[0.0; 4]);
+    });
+    assert!(err.contains("receiving gatherrows rows from rank 1"), "[{wire:?}] {err}");
+    assert!(err.contains("strictly ascending"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn rows_duplicate_ids_surface_err_uds() {
+    rows_duplicate_ids(Wire::Uds);
+}
+
+#[test]
+fn rows_duplicate_ids_surface_err_tcp() {
+    rows_duplicate_ids(Wire::Tcp);
+}
+
+/// A row id beyond the collective's id space: rejected before it could
+/// drive an out-of-bounds reconstruction on any rank.
+fn rows_out_of_range_id(wire: Wire) {
+    let err = rogue_rows_scenario(wire, "rowsoob", |s| {
+        rogue::send_rows_frame(s, &rows_header(2, 1, 2, 16), &[99], &[0.0; 2]);
+    });
+    assert!(err.contains("outside the id space"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn rows_out_of_range_id_surfaces_err_uds() {
+    rows_out_of_range_id(Wire::Uds);
+}
+
+#[test]
+fn rows_out_of_range_id_surfaces_err_tcp() {
+    rows_out_of_range_id(Wire::Tcp);
+}
+
+/// A peer running different geometry (`d = 3` against the coordinator's
+/// `d = 2`): called out as op-sequence divergence, not merged.
+fn rows_geometry_mismatch(wire: Wire) {
+    let err = rogue_rows_scenario(wire, "rowsgeom", |s| {
+        rogue::send_rows_frame(s, &rows_header(3, 1, 3, 16), &[1], &[0.0; 3]);
+    });
+    assert!(err.contains("op sequences diverged"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn rows_geometry_mismatch_surfaces_err_uds() {
+    rows_geometry_mismatch(Wire::Uds);
+}
+
+#[test]
+fn rows_geometry_mismatch_surfaces_err_tcp() {
+    rows_geometry_mismatch(Wire::Tcp);
+}
+
+/// A header claiming vastly more rows than the id space allows: bounded
+/// before the id-list allocation, like the dense oversize fault.
+fn rows_count_flood(wire: Wire) {
+    let err = rogue_rows_scenario(wire, "rowsflood", |s| {
+        rogue::send_rows_frame(s, &rows_header(2_000_000, 1_000_000, 2, 16), &[], &[]);
+    });
+    assert!(err.contains("more than the expected 16"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn rows_count_flood_surfaces_err_uds() {
+    rows_count_flood(Wire::Uds);
+}
+
+#[test]
+fn rows_count_flood_surfaces_err_tcp() {
+    rows_count_flood(Wire::Tcp);
+}
+
+/// A rows frame that stops mid-id-list and goes silent: the coordinator
+/// must fail within the I/O timeout — err, not hang — naming what it
+/// was reading.
+fn rows_truncated_frame(wire: Wire) {
+    let err = rogue_rows_scenario(wire, "rowstrunc", |s| {
+        // header promises 3 rows (24 id bytes + 24 payload bytes); ship
+        // one id and nothing else
+        rogue::send_rows_frame(s, &rows_header(6, 3, 2, 16), &[1], &[]);
+    });
+    assert!(err.contains("receiving gatherrows rows from rank 1"), "[{wire:?}] {err}");
+    assert!(err.contains("reading owned-rows frame ids"), "[{wire:?}] {err}");
+}
+
+#[test]
+fn rows_truncated_frame_surfaces_err_uds() {
+    rows_truncated_frame(Wire::Uds);
+}
+
+#[test]
+fn rows_truncated_frame_surfaces_err_tcp() {
+    rows_truncated_frame(Wire::Tcp);
+}
+
+/// Honest-peer leg for the sparse collectives: a real 2-rank world over
+/// each wire drives reduce-scatter + all-gather + the rows union under
+/// the same short timeout, and the results — including denormal and
+/// signed-zero payload bits — come back exact. The fault tests above
+/// fail because of the injected faults, not because the sparse ops are
+/// broken or the timeout unrealistic.
+fn drive_sparse_rank(t: &mut dyn Transport, rank: usize) -> (Vec<f32>, Vec<f32>, Vec<u64>, Vec<f32>) {
+    // reduce-scatter: 4 f32s, granule 2 → rank r owns [2r, 2r+2)
+    let mut rs = vec![rank as f32 + 1.0; 4];
+    t.reduce_scatter_sum(&mut rs, 2).unwrap();
+    // all-gather: rank r publishes 10·(r+1) in its span; the NaNs
+    // outside it must be overwritten, never shipped into the result
+    let mut ag = vec![f32::NAN; 4];
+    ag[rank * 2..rank * 2 + 2].fill(10.0 * (rank as f32 + 1.0));
+    t.all_gather(&mut ag, 2).unwrap();
+    // rows union: disjoint ids, bit-sensitive payloads
+    let ids = vec![2 * rank as u64 + 1];
+    let rows = vec![if rank == 0 { -0.0 } else { 3.25e-40 }, rank as f32];
+    let (mut out_ids, mut out_rows) = (Vec::new(), Vec::new());
+    t.all_gather_rows(&ids, &rows, 2, 8, &mut out_ids, &mut out_rows).unwrap();
+    (rs, ag, out_ids, out_rows)
+}
+
+fn sparse_collectives_roundtrip(wire: Wire) {
+    let coord = Coord::bind(wire, "sparseok");
+    let (r0, r1) = with_deadline(DEADLINE, move || {
+        let ep = coord.ep.clone();
+        let worker = thread::spawn(move || {
+            let mut t: Box<dyn Transport> = if ep.contains(':') {
+                Box::new(TcpTransport::connect_with_timeout(&ep, 1, 2, IO).unwrap())
+            } else {
+                Box::new(UdsTransport::connect_with_timeout(&ep, 1, 2, IO).unwrap())
+            };
+            drive_sparse_rank(&mut *t, 1)
+        });
+        let mut t0 = coord.accept(2).unwrap();
+        let r0 = drive_sparse_rank(&mut *t0, 0);
+        let r1 = worker.join().unwrap();
+        coord.cleanup();
+        (r0, r1)
+    });
+    // each rank's owned reduce-scatter span holds the rank-order sum
+    assert_eq!(r0.0[0..2], [3.0, 3.0], "[{wire:?}]");
+    assert_eq!(r1.0[2..4], [3.0, 3.0], "[{wire:?}]");
+    for (tag, r) in [("rank0", &r0), ("rank1", &r1)] {
+        assert_eq!(r.1, vec![10.0, 10.0, 20.0, 20.0], "[{wire:?}] {tag} all_gather");
+        assert_eq!(r.2, vec![1u64, 3], "[{wire:?}] {tag} union ids");
+        let bits: Vec<u32> = r.3.iter().map(|x| x.to_bits()).collect();
+        let want = [(-0.0f32).to_bits(), 0.0f32.to_bits(), 3.25e-40f32.to_bits(), 1.0f32.to_bits()];
+        assert_eq!(bits, want, "[{wire:?}] {tag} union payload bits");
+    }
+}
+
+#[test]
+fn sparse_collectives_roundtrip_uds() {
+    sparse_collectives_roundtrip(Wire::Uds);
+}
+
+#[test]
+fn sparse_collectives_roundtrip_tcp() {
+    sparse_collectives_roundtrip(Wire::Tcp);
+}
+
 /// The coordinator dies mid-collective: the *worker* side must error
 /// within the timeout too (it is waiting for the reduced result).
 #[test]

@@ -254,7 +254,10 @@ fn comm_sketch_moves_at_least_4x_fewer_bytes() {
         sents[0]
     };
 
-    let dense = bytes_for("mode = data\nworkers = 2\n");
+    // `sparse = false` pins the historical dense wire as the baseline —
+    // the default owned-rows exchange already shrinks mode = data
+    // (DESIGN.md §14), which would understate the compressor's 4×
+    let dense = bytes_for("mode = data\nworkers = 2\nsparse = false\n");
     let compressed = bytes_for("mode = comm-sketch\nworkers = 2\n");
     assert!(dense > 0 && compressed > 0);
     assert!(
@@ -366,7 +369,9 @@ fn launch_cli_comm_sketch_is_deterministic_and_compressed() {
     assert_eq!(a.blobs, b.blobs, "2-worker comm-sketch checkpoint differs from reference");
 
     // byte criterion: the same launch under dense data mode ships ≥ 4×
-    // the gradient-exchange bytes per run
+    // the gradient-exchange bytes per run (dist.sparse=false pins the
+    // historical dense wire — the owned-rows default already shrinks
+    // mode = data, which would understate the compressor's win)
     let (_out_data, _) = run_csopt(&[
         "launch",
         &cfg,
@@ -377,7 +382,7 @@ fn launch_cli_comm_sketch_is_deterministic_and_compressed() {
         "--socket",
         &path_of("data.sock"),
         "--set",
-        &format!("metrics={}", path_of("data.csv")),
+        &format!("dist.sparse=false,metrics={}", path_of("data.csv")),
     ]);
     let cs_bytes = final_bytes_sent(&path_of("cs.csv"));
     let data_bytes = final_bytes_sent(&path_of("data.csv"));

@@ -188,6 +188,68 @@ fn data_parallel_trainer_matches_global_batch_bitwise() {
     }
 }
 
+/// DESIGN.md §14: every `{sparse, overlap}` wire/schedule setting of a
+/// 2-rank `mode = data` world reproduces the single-process global-batch
+/// reference bit-for-bit — the owned-rows exchange is a pure copy-merge
+/// and overlap only moves when the exchange wait happens — and the
+/// default owned-rows wire ships *under half* the dense `sparse = false`
+/// bytes on tiny's activity profile (≤ 32 + 128 active rows of 512 per
+/// replica window).
+#[test]
+fn sparse_overlap_layouts_match_reference_and_shrink_wire() {
+    let corpus = SyntheticCorpus::generate(512, 60_000, 1.05, 0.6, 14);
+    let (train, valid, _) = corpus.split(0.08, 0.05);
+    let reference = run_rank(&dp_spec("mode = data\nreplicas = 2\n"), None, train, valid);
+
+    let mut sent_by_cfg: Vec<(bool, bool, u64)> = Vec::new();
+    for (sparse, overlap) in [(false, false), (true, false), (false, true), (true, true)] {
+        let workers = 2usize;
+        let outs: Vec<(Snapshot, u64)> = thread::scope(|s| {
+            let handles: Vec<_> = mem_world(workers)
+                .into_iter()
+                .enumerate()
+                .map(|(rank, ep)| {
+                    let mut spec = dp_spec(&format!(
+                        "mode = data\nrank = {rank}\nworkers = {workers}\nreplicas = 2\n\
+                         sparse = {sparse}\noverlap = {overlap}\n"
+                    ));
+                    spec.dist.as_mut().unwrap().rank = rank;
+                    s.spawn(move || {
+                        let ctx = DistCtx::new(rank, workers, ep);
+                        let snap = run_rank(&spec, Some(&ctx), train, valid);
+                        let sent = ctx.comm().lock().unwrap().bytes_sent();
+                        (snap, sent)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, (out, _)) in outs.iter().enumerate() {
+            assert_snapshots_match(
+                out,
+                &reference,
+                &format!("data sparse={sparse} overlap={overlap} rank={rank}"),
+            );
+        }
+        sent_by_cfg.push((sparse, overlap, outs[0].1));
+    }
+    let dense_sent = sent_by_cfg.iter().find(|(s, _, _)| !s).unwrap().2;
+    for &(sparse, overlap, sent) in &sent_by_cfg {
+        if sparse {
+            assert!(
+                sent * 2 < dense_sent,
+                "owned-rows wire sent {sent} bytes (overlap={overlap}) vs dense \
+                 {dense_sent} — expected under half"
+            );
+        } else {
+            assert_eq!(
+                sent, dense_sent,
+                "dense wire bytes must not depend on overlap={overlap}"
+            );
+        }
+    }
+}
+
 /// `mode = hybrid`: distinct batches *and* width-partitioned sketches at
 /// once — still bit-identical to the single-process global-batch run
 /// (which uses in-process `shards = 2` execution sharding, itself
