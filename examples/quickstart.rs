@@ -13,6 +13,7 @@
 //! | `cs-adam`              | both Adam moments in count-sketches (Alg. 2/4)  |
 //! | `cs-adam@v=3,w=4096`   | … with explicit sketch depth/width              |
 //! | `cs-adam@shard=4`      | … sketch kernels on 4 parallel shards (bit-identical results) |
+//! | `cs-adam@cells=bf16`   | … sketch cells stored bf16 (half the aux memory; also `f16`, `i8` for cs-adagrad; `cells=f32` is bitwise the default store) |
 //! | `cs-momentum`          | signed momentum buffer in a count-sketch        |
 //! | `cs-adagrad@clean=0.5/1000` | count-min accumulator, cleaned every 1000 steps |
 //! | `cs-adam-v`            | Adam-V: β₁=0, CMS 2nd moment only               |

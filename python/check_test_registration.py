@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Audit that every Rust integration suite is a registered test target.
+
+``rust/Cargo.toml`` sets ``autotests = false`` so the target list is pinned
+explicitly — which means a new ``rust/tests/integration_*.rs`` file that
+never gains a ``[[test]]`` entry silently stops compiling and running in
+CI. This script fails in both directions:
+
+* an ``integration_*.rs`` file on disk with no ``[[test]]`` path entry
+  (the silent-skip hazard), and
+* a ``[[test]]`` path entry whose file is gone (a stale target that breaks
+  ``cargo test`` for everyone).
+
+Stdlib only. Typical use (from the repository root, as in CI)::
+
+    python3 python/check_test_registration.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+
+def registered_test_paths(cargo_toml: Path) -> list[str]:
+    """The ``path = "..."`` values of every ``[[test]]`` section."""
+    paths: list[str] = []
+    section = None
+    for raw in cargo_toml.read_text().splitlines():
+        line = raw.split("#", 1)[0].strip()
+        if line.startswith("[["):
+            section = line
+            continue
+        if line.startswith("["):
+            section = line
+            continue
+        if section == "[[test]]":
+            m = re.match(r'path\s*=\s*"([^"]+)"', line)
+            if m:
+                paths.append(m.group(1))
+    return paths
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--rust-dir",
+        default="rust",
+        help="crate directory holding Cargo.toml and tests/ (default: rust)",
+    )
+    args = ap.parse_args()
+    rust = Path(args.rust_dir)
+    cargo_toml = rust / "Cargo.toml"
+    if not cargo_toml.is_file():
+        print(f"error: {cargo_toml} not found", file=sys.stderr)
+        return 2
+
+    registered = registered_test_paths(cargo_toml)
+    on_disk = sorted(
+        p.relative_to(rust).as_posix() for p in (rust / "tests").glob("integration_*.rs")
+    )
+
+    failures = []
+    for path in on_disk:
+        if path not in registered:
+            failures.append(
+                f"{rust / path} has no [[test]] entry in {cargo_toml} — with "
+                "autotests = false it will never compile or run in CI"
+            )
+    for path in registered:
+        if not (rust / path).is_file():
+            failures.append(
+                f"[[test]] entry {path!r} in {cargo_toml} points at a missing file"
+            )
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print(
+        f"ok: {len(on_disk)} integration suites on disk, "
+        f"{len(registered)} [[test]] targets registered, all matched"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -238,6 +238,49 @@ fn main() {
         black_box(&cs);
     });
 
+    // streaming clean (DESIGN.md §15): a quantized store's `scale` defers
+    // the sweep — rows pay catch-up on their next touch, and a full flush
+    // runs only every MAX_PENDING_CLEANS scales. Each iteration is one
+    // clean plus one 256-row touch; the w16384 ↔ w65536 pair shows the
+    // per-clean cost tracking the *active* rows (plus the amortized 1/32
+    // flush) instead of the full width the eager rows above sweep.
+    {
+        use csopt::sketch::{CellFormat, QuantizedStore, SketchHasher, SketchPlan, SketchStore};
+        let (k, d) = (256usize, 256usize);
+        let mut rng = Rng::new(10);
+        let deltas: Vec<f32> = (0..k * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for w in [16_384usize, 65_536] {
+            let mut st = QuantizedStore::zeros(CellFormat::Bf16, 3, w, d);
+            let hasher = SketchHasher::new(3, w, 9);
+            let ids: Vec<u64> = (0..k as u64).collect();
+            let plan = SketchPlan::build(&hasher, &ids);
+            st.update(&plan, &deltas, true);
+            b.bench(&format!("maintenance/clean_active.w{w}.d{d}"), || {
+                st.scale(0.99);
+                st.update(&plan, &deltas, true);
+                black_box(&st);
+            });
+        }
+    }
+
+    // quantized optimizer step (DESIGN.md §15): the accumulate-in-f32 /
+    // round-once-per-batch bf16 store under the full cs-adam step, at the
+    // CI-smoke shape — pins the decode/encode tax of quantized cells.
+    {
+        let (k, d, n, w) = (256usize, 64usize, 32_768usize, 2048usize);
+        let (ids, grads) = ids_and_grads(n, k, d, 11);
+        let mut rows = vec![0.5f32; k * d];
+        let shape = RowShape::new(n, d).with_sketch(3, w);
+        let mut opt =
+            OptimSpec::parse("cs-adam@seed=7,cells=bf16").unwrap().build_row(&shape, None).unwrap();
+        let mut t = 0usize;
+        b.bench("step/quant_step.bf16.k256.d64", || {
+            t += 1;
+            opt.step_rows(&ids, &mut rows, &grads, 1e-3, t);
+            black_box(&rows);
+        });
+    }
+
     // comm-sketch wire compressor (DESIGN.md §11): per-step encode of a
     // tiny-preset-like embedding segment (4096 live coords into a
     // [d, w] wire sketch) and the mask-bounded top-k decode, at the

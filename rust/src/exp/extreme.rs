@@ -1,0 +1,193 @@
+//! Extreme-vocab bounded-memory scenario (DESIGN.md §15) — the paper's
+//! motivating regime pushed past what dense aux state affords: a
+//! synthetic Zipf workload over a vocabulary of millions of rows,
+//! stepping a sketched optimizer whose cells are stored quantized
+//! (`cells=bf16|f16|i8`) so the auxiliary state fits where the f32
+//! configuration provably cannot.
+//!
+//! The driver never materializes the `[n, d]` parameter matrix — both
+//! configurations would pay that identically, and the claim under test
+//! is about *optimizer* memory. It steps the [`RowOptimizer`] directly
+//! over Zipf-sampled id batches with scratch row/grad buffers, then
+//! reports the measured aux bytes, the analytic f32-equivalent, and the
+//! process peak RSS (`VmHWM`), which CI pins under a ceiling for the
+//! quantized run that the f32 run exceeds.
+//!
+//! `VmHWM` is a lifetime high-water mark, so one invocation measures
+//! exactly one configuration; comparisons run the binary twice. A
+//! prefault pass (zero-grad steps over every id, lr=0) write-touches
+//! the sketch cells so lazily-zeroed pages count toward RSS
+//! deterministically instead of depending on which buckets Zipf happens
+//! to hit.
+//!
+//! ```text
+//! csopt exp extreme --vocab 2000000 --cells bf16 --rss-ceiling-mb 180
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::exp::common::{out_dir, print_table, spec};
+use crate::metrics::memory::{peak_rss_mb, MemoryLedger};
+use crate::metrics::CsvWriter;
+use crate::optim::{RowOptimizer, RowShape};
+use crate::util::cli::Args;
+use crate::util::rng::{Rng, ZipfRejection};
+use crate::util::timer::Timer;
+
+/// Ids per prefault chunk — bounds the scratch `[chunk, d]` buffers.
+const PREFAULT_CHUNK: usize = 4096;
+
+pub fn run(args: &Args) -> Result<()> {
+    let vocab = args.get_parse("vocab", 2_000_000usize)?;
+    let dim = args.get_parse("dim", 64usize)?;
+    let active = args.get_parse("active", 1024usize)?;
+    let steps = args.get_parse("steps", 50usize)?;
+    let zipf_s = args.get_parse("zipf-s", 1.1f64)?;
+    let seed = args.get_parse("seed", 42u64)?;
+    let cells = args.get_or("cells", "bf16");
+    let ceiling_mb = args.get_parse("rss-ceiling-mb", 0.0f64)?;
+
+    // i8 cells carry the monotone-underestimate guarantee only for the
+    // count-min Adagrad accumulator (spec::validate enforces this); every
+    // other format runs the Adam head.
+    let head = if cells == "i8" { "cs-adagrad" } else { "cs-adam" };
+    let sp = spec(&format!("{head}@clean=0.5/20,seed={seed},cells={cells}"));
+    let shape = RowShape::new(vocab, dim);
+    let mut opt = sp.build_row(&shape, None)?;
+
+    println!(
+        "extreme-vocab: n={vocab} d={dim} {head} cells={cells} \
+         (v={} w={}), {steps} steps of {active} Zipf({zipf_s}) rows",
+        shape.v, shape.w
+    );
+
+    // Prefault: one zero-gradient pass over the whole vocabulary so every
+    // sketch bucket row is write-touched and resident. lr=0 and g=0 leave
+    // the (all-zero) optimizer state unchanged, so training below starts
+    // from the same state as a cold optimizer.
+    let mut rows = vec![0.0f32; PREFAULT_CHUNK.max(active) * dim];
+    let grads = vec![0.0f32; PREFAULT_CHUNK * dim];
+    let mut ids = Vec::with_capacity(PREFAULT_CHUNK);
+    for chunk in (0..vocab).step_by(PREFAULT_CHUNK) {
+        let k = PREFAULT_CHUNK.min(vocab - chunk);
+        ids.clear();
+        ids.extend((chunk..chunk + k).map(|i| i as u64));
+        opt.step_rows(&ids, &mut rows[..k * dim], &grads[..k * dim], 0.0, 1);
+    }
+    drop(grads);
+    let prefault_peak = peak_rss_mb();
+    println!("  prefaulted {vocab} rows; peak RSS {prefault_peak:.1} MB");
+
+    // Train: Zipf-distributed active sets, scratch rows (the parameter
+    // table itself is out of scope — see the module docs).
+    let mut rng = Rng::new(seed ^ 0x5EED_E017);
+    let zipf = ZipfRejection::new(vocab, zipf_s);
+    let mut grads = vec![0.0f32; active * dim];
+    let timer = Timer::start();
+    for t in 1..=steps {
+        ids.clear();
+        while ids.len() < active {
+            ids.push(zipf.sample(&mut rng) as u64);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        let k = ids.len();
+        rows[..k * dim].fill(0.0);
+        rng.fill_normal(&mut grads[..k * dim], 1.0);
+        opt.step_rows(&ids, &mut rows[..k * dim], &grads[..k * dim], 0.01, t);
+    }
+    let secs = timer.secs();
+    let steps_per_sec = steps as f64 / secs.max(1e-9);
+
+    // Measured aux bytes vs the analytic f32-equivalent: the same
+    // geometry at 4 bytes/cell (cs-adam sketches both moments). Building
+    // the f32 twin here would inflate this process's own high-water mark,
+    // defeating the measurement — hence analytic.
+    let n_sketches = if head == "cs-adam" { 2 } else { 1 };
+    let mut ledger = MemoryLedger::new();
+    ledger.add("emb.opt", "optimizer", opt.memory_bytes());
+    let aux_mb = ledger.total_mb("optimizer");
+    let aux_f32_mb =
+        (n_sketches * shape.v * shape.w * dim * 4) as f64 / (1024.0 * 1024.0);
+    let peak_mb = peak_rss_mb();
+
+    let dir = out_dir(args);
+    let mut csv = CsvWriter::create(
+        format!("{dir}/extreme_{cells}.csv"),
+        &["vocab", "dim", "cells", "steps", "aux_mb", "aux_f32_mb", "peak_rss_mb", "steps_per_sec"],
+    )?;
+    csv.row(&[
+        &vocab.to_string(),
+        &dim.to_string(),
+        &cells,
+        &steps.to_string(),
+        &format!("{aux_mb:.1}"),
+        &format!("{aux_f32_mb:.1}"),
+        &format!("{peak_mb:.1}"),
+        &format!("{steps_per_sec:.1}"),
+    ])?;
+    csv.flush()?;
+
+    print_table(
+        "Extreme-vocab bounded-memory run",
+        &["cells", "aux_MB", "f32_equiv_MB", "peak_rss_MB", "steps/s"],
+        &[vec![
+            cells.clone(),
+            format!("{aux_mb:.1}"),
+            format!("{aux_f32_mb:.1}"),
+            format!("{peak_mb:.1}"),
+            format!("{steps_per_sec:.1}"),
+        ]],
+    );
+    println!("  wrote {dir}/extreme_{cells}.csv");
+
+    if ceiling_mb > 0.0 {
+        if peak_mb <= 0.0 {
+            bail!("--rss-ceiling-mb set but VmHWM is unavailable on this platform");
+        }
+        if peak_mb > ceiling_mb {
+            bail!(
+                "peak RSS {peak_mb:.1} MB exceeds the {ceiling_mb:.1} MB ceiling \
+                 (cells={cells}, vocab={vocab})"
+            );
+        }
+        println!("  peak RSS {peak_mb:.1} MB within the {ceiling_mb:.1} MB ceiling");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    #[test]
+    fn extreme_smoke_runs_and_reports() {
+        let dir = std::env::temp_dir().join(format!("csopt-extreme-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let argv = [
+            "--vocab", "20000", "--dim", "8", "--active", "64", "--steps", "6", "--cells",
+            "bf16", "--out", dir.as_str(),
+        ];
+        let args = Args::parse(argv.iter().map(|s| s.to_string()), &[]).unwrap();
+        run(&args).unwrap();
+        let csv = std::fs::read_to_string(format!("{dir}/extreme_bf16.csv")).unwrap();
+        assert!(csv.starts_with("vocab,"), "missing header: {csv}");
+        assert!(csv.lines().nth(1).unwrap().starts_with("20000,8,bf16,6,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn i8_cells_route_to_the_adagrad_head() {
+        let dir = std::env::temp_dir().join(format!("csopt-extreme-i8-{}", std::process::id()));
+        let dir = dir.to_str().unwrap().to_string();
+        let argv = [
+            "--vocab", "10000", "--dim", "8", "--active", "32", "--steps", "4", "--cells",
+            "i8", "--out", dir.as_str(),
+        ];
+        let args = Args::parse(argv.iter().map(|s| s.to_string()), &[]).unwrap();
+        run(&args).unwrap();
+        assert!(std::path::Path::new(&format!("{dir}/extreme_i8.csv")).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -6,6 +6,7 @@
 //! *shape* of each result (who wins, rough factors), not absolute numbers.
 
 pub mod common;
+pub mod extreme;
 pub mod fig1;
 pub mod fig2;
 pub mod fig4;
@@ -21,7 +22,8 @@ use anyhow::{bail, Result};
 use crate::util::cli::Args;
 
 /// All experiment ids.
-pub const ALL: &[&str] = &["fig1", "fig2", "fig4", "fig5", "t3", "t4", "t5", "t6", "t7", "t8"];
+pub const ALL: &[&str] =
+    &["fig1", "fig2", "fig4", "fig5", "t3", "t4", "t5", "t6", "t7", "t8", "extreme"];
 
 /// Dispatch one experiment by id.
 pub fn run(id: &str, args: &Args) -> Result<()> {
@@ -36,6 +38,9 @@ pub fn run(id: &str, args: &Args) -> Result<()> {
         // t6 (time/size) and t7 (ppl per epoch) come from the same runs
         "t6" | "t7" => t67::run(args),
         "t8" => t8::run(args),
+        "extreme" => extreme::run(args),
+        // `all` regenerates the paper tables; the extreme-vocab scenario
+        // is a standalone stress run (2M-row default) and stays opt-in.
         "all" => {
             for id in ["fig1", "fig2", "fig4", "fig5", "t3", "t4", "t5", "t6", "t8"] {
                 println!("\n=== exp {id} ===");

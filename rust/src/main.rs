@@ -6,7 +6,8 @@
 //!   per-layer optimizer policies and `--set` overrides
 //! * `train`   — train an LM preset with a chosen optimizer spec
 //! * `exp <id>` — regenerate a paper table/figure (fig1 fig2 fig4 fig5
-//!   t3 t4 t5 t6 t7 t8, or `all`)
+//!   t3 t4 t5 t6 t7 t8, or `all`), or run the extreme-vocab
+//!   bounded-memory scenario (`extreme`, DESIGN.md §15)
 //! * `sketch-demo` — quick count-sketch accuracy demonstration
 //! * `runtime-info` — PJRT platform + artifact inventory
 //!
@@ -46,6 +47,8 @@ USAGE:
               [--engine rust|xla] [--epochs N] [--steps N] [--lr X]
               [--shards N] [--checkpoint PATH]
   csopt exp <fig1|fig2|fig4|fig5|t3|t4|t5|t6|t7|t8|all> [--steps N] [--epochs N]
+  csopt exp extreme [--vocab N] [--dim D] [--active K] [--steps N]
+              [--cells f32|bf16|f16|i8] [--zipf-s S] [--rss-ceiling-mb MB]
   csopt sketch-demo [--width W] [--depth V] [--items N]
   csopt runtime-info
 
@@ -111,8 +114,12 @@ OPTIMIZER SPECS ([comp-]rule[@k=v,...]; rules: sgd momentum adagrad adam adam-v)
   csv-adam[-v]                                   dense 1st + CMS 2nd moment
   xla-cs-*                                       sketch stepped by AOT artifact
   nmf-*                                          NMF rank-1 comparator
-  params: v=depth w=width clean=alpha/every seed=N shard=N b1= b2= eps= gamma=
+  params: v=depth w=width clean=alpha/every seed=N shard=N
+          cells=f32|bf16|f16|i8 b1= b2= eps= gamma=
   example: --optim cs-adam@v=3,w=4096,clean=0.5/1000,shard=4
+  cells=FMT stores sketch cells quantized (f32 default; bf16/f16 halve aux
+  memory, i8 quarters it for cs-adagrad) with f32 accumulate-then-round
+  updates; cells=f32 is bitwise-identical to the unquantized store.
   shard=N runs the sketch update/query kernels across N parallel shards
   (bit-identical results); --shards N applies it to every sketched layer
   spec that has no shard= of its own.

@@ -70,6 +70,31 @@ impl MemoryLedger {
     }
 }
 
+/// Peak resident-set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`) — the external memory observation the
+/// extreme-vocab scenario's bounded-memory claim is asserted against
+/// (DESIGN.md §15). `None` where procfs is unavailable (non-Linux).
+///
+/// VmHWM is a process-lifetime high-water mark: it only ever grows, so
+/// comparisons between configurations must run one configuration per
+/// process.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// [`peak_rss_bytes`] in MiB, `0.0` where unavailable — the value the
+/// metrics CSV's `peak_rss_mb` column reports.
+pub fn peak_rss_mb() -> f64 {
+    peak_rss_bytes().map_or(0.0, |b| b as f64 / (1024.0 * 1024.0))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,5 +110,14 @@ mod tests {
         assert_eq!(l.total(""), 14 << 20);
         assert!((l.total_mb("optimizer") - 8.0).abs() < 1e-9);
         assert!(l.render().contains("TOTAL optimizer"));
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn peak_rss_reads_vm_hwm() {
+        let peak = peak_rss_bytes().expect("procfs should expose VmHWM on linux");
+        // any running test binary is at least a MiB resident
+        assert!(peak > 1 << 20, "implausible VmHWM: {peak}");
+        assert!(peak_rss_mb() > 1.0);
     }
 }

@@ -9,7 +9,7 @@
 //! × state compression × sketch geometry × cleaning × hypers:
 //!
 //! ```text
-//! <head>[@v=..,w=..,clean=α/C,seed=..,shard=..,b1=..,b2=..,eps=..,gamma=..]
+//! <head>[@v=..,w=..,clean=α/C,seed=..,shard=..,cells=..,b1=..,b2=..,eps=..,gamma=..]
 //! ```
 //!
 //! | head | auxiliary state | implementation |
@@ -33,6 +33,14 @@
 //! update/query kernels of every step across N parallel shards via the
 //! hash-once [`SketchPlan`](crate::sketch::SketchPlan) execution core —
 //! results are bit-identical to sequential execution (DESIGN.md §2/§5).
+//!
+//! `cells=f32|bf16|f16|i8` (same heads) stores the sketch cells in
+//! reduced precision behind a
+//! [`QuantizedStore`](crate::sketch::QuantizedStore) with f32
+//! accumulate-then-round semantics and a streaming clean whose cost
+//! follows active rows instead of width (DESIGN.md §15); `cells=f32` is
+//! bit-identical to the default store, and `cells=i8` is cs-adagrad
+//! only.
 //!
 //! *Which layer* gets *which* spec is declarative too: an [`OptimPolicy`]
 //! is an ordered map of layer-name globs to specs (`emb = cs-adam@w=4096`,

@@ -20,6 +20,7 @@
 //!          | "nmf-"    NMF rank-1 factors (Shazeer & Stern comparator)
 //! param   := "v=" depth | "w=" width | "clean=" alpha "/" every
 //!          | "seed=" u64 | "shard=" n
+//!          | "cells=" ("f32" | "bf16" | "f16" | "i8")
 //!          | "b1=" f32 | "b2=" f32 | "eps=" f32 | "gamma=" f32
 //! ```
 //!
@@ -36,7 +37,13 @@
 //! `shard=N` runs the sketch update/query kernels across N parallel
 //! shards (bit-identical to sequential, DESIGN.md §5); it applies to the
 //! pure-Rust `cs-`/`csv-` paths only — the `xla-cs-*` artifacts schedule
-//! their own parallelism.
+//! their own parallelism. `cells=` stores the sketch cells in reduced
+//! precision behind a [`QuantizedStore`](crate::sketch::QuantizedStore)
+//! (f32 accumulate-then-round, streaming clean — DESIGN.md §15);
+//! `cells=f32` is the same store with the identity codec, proven
+//! bit-identical to the default `LocalStore`, and `cells=i8` is
+//! restricted to `cs-adagrad`, the one optimizer whose count-min deltas
+//! (`Δ = g²`) keep the floor-rounded underestimate guarantee sound.
 //!
 //! Invalid combinations fail with actionable messages — at `parse` time
 //! for CLI/config ergonomics and again in [`OptimSpec::build_row`] for
@@ -47,7 +54,7 @@ use std::fmt;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::Hyper;
-use crate::sketch::CleaningPolicy;
+use crate::sketch::{CellFormat, CleaningPolicy, QuantizedBuilder};
 
 use super::dense::{
     DenseAdagrad, DenseAdam, DenseMomentum, FlatAdagrad, FlatAdam, FlatMomentum, FlatSgd,
@@ -199,6 +206,10 @@ pub struct OptimSpec {
     /// Parallel shard count for sketch update/query (`shard=`); `None`
     /// and `Some(1)` both run sequentially.
     pub shards: Option<usize>,
+    /// Sketch cell storage format (`cells=`); `None` keeps the default
+    /// f32 `LocalStore`, `Some(fmt)` routes the sketch state through a
+    /// [`QuantizedStore`](crate::sketch::QuantizedStore) (DESIGN.md §15).
+    pub cells: Option<CellFormat>,
     /// Rule hyper-parameters (`b1=`, `b2=`, `eps=`, `gamma=`).
     pub hyper: Hyper,
 }
@@ -214,6 +225,7 @@ impl OptimSpec {
             cleaning: CleaningPolicy::none(),
             seed: None,
             shards: None,
+            cells: None,
             hyper: Hyper::DEFAULT,
         }
     }
@@ -260,6 +272,11 @@ impl OptimSpec {
         self
     }
 
+    pub fn with_cells(mut self, fmt: CellFormat) -> OptimSpec {
+        self.cells = Some(fmt);
+        self
+    }
+
     /// Set the seed only if the spec does not already carry one.
     pub fn or_seed(mut self, seed: u64) -> OptimSpec {
         self.seed.get_or_insert(seed);
@@ -287,6 +304,7 @@ impl OptimSpec {
             cleaning: CleaningPolicy::none(),
             seed: None,
             shards: None,
+            cells: None,
             ..*self
         }
     }
@@ -327,7 +345,11 @@ impl OptimSpec {
     ///   sketch, or on the (cleaning-less) `xla-cs-*` artifacts;
     /// * `shard=` on dense/rank-1 state (no sketch kernels to shard),
     ///   `shard=0`, or on the `xla-cs-*` artifacts (the AOT graphs
-    ///   schedule their own parallelism).
+    ///   schedule their own parallelism);
+    /// * `cells=` on dense/rank-1 state (no sketch cells) or on the
+    ///   `xla-cs-*` artifacts (device-side f32 state), and `cells=i8`
+    ///   on anything but `cs-adagrad` (the floor-rounded non-negative
+    ///   codec is only sound for estimate-independent CMS deltas).
     pub fn validate(&self) -> Result<()> {
         let head = self.head();
         if self.rule == Rule::Sgd && self.comp != Comp::Dense {
@@ -382,6 +404,31 @@ impl OptimSpec {
                 self.rule,
                 self.rule
             );
+        }
+        if let Some(fmt) = self.cells {
+            match self.comp {
+                Comp::Dense | Comp::LowRank => bail!(
+                    "`{head}`: cells= selects the sketch cell format, which {} state \
+                     does not have — drop it or use a `cs-`/`csv-` spec",
+                    if self.comp == Comp::Dense { "dense" } else { "rank-1" }
+                ),
+                Comp::SketchXla => bail!(
+                    "`{head}`: the AOT xla-cs-* artifacts keep their sketch state \
+                     device-side in f32 — drop cells= or use the pure-Rust `cs-{}` path",
+                    self.rule
+                ),
+                _ => {}
+            }
+            if fmt == CellFormat::I8 && !(self.comp == Comp::Sketch && self.rule == Rule::Adagrad)
+            {
+                bail!(
+                    "`{head}`: cells=i8 floor-rounds non-negative CMS counters, which \
+                     is only sound for cs-adagrad's estimate-independent deltas \
+                     (Δ = g²) — signed or estimate-dependent sketch state (momentum, \
+                     adam moments) breaks the monotone-underestimate guarantee; use \
+                     cells=bf16 or cells=f16 instead"
+                );
+            }
         }
         if self.cleaning.enabled() {
             match (self.comp, self.rule) {
@@ -454,6 +501,14 @@ impl OptimSpec {
                     "w" => spec.w = Some(parse_val(key, val)?),
                     "seed" => spec.seed = Some(parse_val(key, val)?),
                     "shard" | "shards" => spec.shards = Some(parse_val("shard", val)?),
+                    "cells" => {
+                        spec.cells = Some(CellFormat::parse(val).ok_or_else(|| {
+                            anyhow!(
+                                "bad value {val:?} for spec parameter cells \
+                                 (valid: f32, bf16, f16, i8)"
+                            )
+                        })?)
+                    }
                     "clean" => {
                         let Some((alpha, every)) = val.split_once('/') else {
                             bail!("clean= wants alpha/every (e.g. clean=0.5/1000), got {val:?}");
@@ -489,7 +544,7 @@ impl OptimSpec {
                     }
                     _ => bail!(
                         "unknown spec parameter {key:?} (valid: v, w, clean=α/C, seed, \
-                         shard, b1, b2, eps, gamma)"
+                         shard, cells, b1, b2, eps, gamma)"
                     ),
                 }
             }
@@ -571,6 +626,20 @@ impl OptimSpec {
                 self.rule
             );
         }
+        if store.is_some() && self.cells.is_some() {
+            bail!(
+                "`{self}` cannot combine cells= with an injected store: quantized \
+                 cells are a local-store feature and width-partitioned stores keep \
+                 f32 cells — drop cells= for distributed sketch placement"
+            );
+        }
+        // cells= routes sketch state through the quantized store; the
+        // builder lives here so the borrow outlives the match below
+        let quant = self.cells.map(QuantizedBuilder::new);
+        let store: Option<&dyn crate::sketch::StoreBuilder> = match (&quant, store) {
+            (Some(q), _) => Some(q),
+            (None, s) => s,
+        };
         Ok(match (self.comp, self.rule) {
             (Comp::Dense, Rule::Sgd) => Box::new(SparseSgd),
             (Comp::Dense, Rule::Momentum) => Box::new(DenseMomentum::new(n, d, h.momentum_gamma)),
@@ -708,6 +777,9 @@ impl fmt::Display for OptimSpec {
         if let Some(shards) = self.shards {
             params.push(format!("shard={shards}"));
         }
+        if let Some(cells) = self.cells {
+            params.push(format!("cells={cells}"));
+        }
         // only rule-applicable hyper keys are emitted, mirroring `parse`,
         // so Display output is always re-parseable
         if hyper_key_applies(self.rule, "b1") && self.hyper.adam_beta1 != defaults.adam_beta1 {
@@ -766,6 +838,10 @@ mod tests {
             "cs-adam@shard=4",
             "cs-adam@v=3,w=6554,clean=0.5/1000,seed=9,shard=4",
             "csv-adam-v@shard=2,b2=0.99",
+            "cs-adam@cells=bf16",
+            "cs-adagrad@w=26,cells=i8",
+            "csv-adam@cells=f16,b2=0.99",
+            "cs-adam@v=3,w=6554,clean=0.5/1000,seed=9,shard=4,cells=f32",
         ] {
             let spec = OptimSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e:#}"));
             assert_eq!(spec.to_string(), s, "canonical round trip of {s:?}");
@@ -810,6 +886,16 @@ mod tests {
             // shard= only exists for the pure-Rust sketched paths
             if matches!(spec.comp, Comp::Sketch | Comp::SketchV) && rng.f32() < 0.5 {
                 spec = spec.with_shards(1 + rng.below(16));
+            }
+            // cells= only exists there too; i8 only for cs-adagrad
+            if matches!(spec.comp, Comp::Sketch | Comp::SketchV) && rng.f32() < 0.5 {
+                let fmts: &[CellFormat] =
+                    if spec.comp == Comp::Sketch && spec.rule == Rule::Adagrad {
+                        &CellFormat::ALL
+                    } else {
+                        &[CellFormat::F32, CellFormat::Bf16, CellFormat::F16]
+                    };
+                spec = spec.with_cells(fmts[rng.below(fmts.len())]);
             }
             // cleaning only where validate() admits it
             let cleanable = matches!(
@@ -932,6 +1018,12 @@ mod tests {
             ("nmf-adam@shard=4", "sketch update/query kernels"),
             ("xla-cs-adam@shard=4", "schedule their own parallelism"),
             ("cs-adam@shard=0", "shard=0 is invalid"),
+            ("adam@cells=bf16", "sketch cell format"),
+            ("nmf-adam@cells=f16", "sketch cell format"),
+            ("xla-cs-adam@cells=bf16", "device-side in f32"),
+            ("cs-adam@cells=i8", "monotone-underestimate"),
+            ("csv-adam@cells=i8", "monotone-underestimate"),
+            ("cs-adam@cells=int4", "valid: f32, bf16, f16, i8"),
         ] {
             let e = OptimSpec::parse(input).unwrap_err().to_string();
             assert!(e.contains(needle), "{input:?}: {e}");
@@ -1009,5 +1101,43 @@ mod tests {
             }
             assert_eq!(rows_seq, rows_par, "{head}");
         }
+    }
+
+    #[test]
+    fn cells_f32_builds_and_matches_default_store_bitwise() {
+        // the full store/trainer/checkpoint matrix lives in
+        // integration_quantized.rs; this pins the build_row_dist
+        // injection itself: cells=f32 must change the store type, not
+        // the arithmetic
+        let shape = RowShape::new(256, 4);
+        for head in ["cs-momentum", "cs-adagrad", "cs-adam", "cs-adam-v", "csv-adam"] {
+            let mut plain =
+                OptimSpec::parse(head).unwrap().build_row(&shape, None).unwrap();
+            let mut quant = OptimSpec::parse(&format!("{head}@cells=f32"))
+                .unwrap()
+                .build_row(&shape, None)
+                .unwrap();
+            let ids = [3u64, 77, 200];
+            let grads: Vec<f32> = (0..3 * shape.d).map(|i| (i as f32 - 5.0) * 0.1).collect();
+            let mut rows_p = vec![0.5f32; 3 * shape.d];
+            let mut rows_q = rows_p.clone();
+            for t in 1..=4 {
+                plain.step_rows(&ids, &mut rows_p, &grads, 0.1, t);
+                quant.step_rows(&ids, &mut rows_q, &grads, 0.1, t);
+            }
+            assert_eq!(rows_p, rows_q, "{head}");
+        }
+    }
+
+    #[test]
+    fn cells_with_injected_store_is_rejected() {
+        use crate::sketch::store::LocalBuilder;
+        let shape = RowShape::new(64, 4);
+        let spec = OptimSpec::parse("cs-adam@cells=bf16").unwrap();
+        let e = spec
+            .build_row_dist(&shape, None, Some(&LocalBuilder))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("cannot combine cells="), "{e}");
     }
 }

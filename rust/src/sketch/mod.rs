@@ -20,6 +20,10 @@
 //! * [`fused`] — the fused step kernel (QUERY → Δ → UPDATE → re-QUERY as
 //!   one gather/scatter pass over a plan, DESIGN.md §12); the fast path
 //!   behind [`SketchStore::step_fused`] on local stores.
+//! * [`quant`] — reduced-precision cell stores ([`QuantizedStore`]:
+//!   f32/bf16/f16/i8 cells with f32 accumulate-then-round semantics)
+//!   and the streaming clean whose cost follows active rows instead of
+//!   width (DESIGN.md §15). Selected by the `cells=` spec key.
 //! * [`count_sketch`] — signed median-of-depth estimator (UPDATE/QUERY).
 //! * [`count_min`] — unsigned min-of-depth estimator (UPDATE/QUERY).
 //! * [`clean`] — the periodic cleaning heuristic for CMS overestimates
@@ -31,6 +35,7 @@ pub mod count_sketch;
 pub mod fused;
 pub mod hash;
 pub mod plan;
+pub mod quant;
 pub mod store;
 pub mod tensor;
 
@@ -39,5 +44,6 @@ pub use count_min::CountMinSketch;
 pub use count_sketch::CountSketch;
 pub use hash::SketchHasher;
 pub use plan::SketchPlan;
+pub use quant::{CellFormat, QuantizedBuilder, QuantizedStore};
 pub use store::{Reduce, SketchStore, StoreBuilder};
 pub use tensor::SketchTensor;

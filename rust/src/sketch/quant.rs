@@ -1,0 +1,849 @@
+//! `QuantizedStore` — sketch cells stored in reduced precision behind
+//! the [`SketchStore`] trait, plus the streaming-clean bookkeeping that
+//! makes `scale` cost proportional to *active* rows (DESIGN.md §15).
+//!
+//! The paper's 49.5M-class Amazon task needs auxiliary state far beyond
+//! what f32 cells allow in bounded memory. This store keeps the `[v, w,
+//! d]` tensor in one of four cell formats:
+//!
+//! * `f32`  — identity codec; bit-identical to [`LocalStore`]
+//!   (`super::store::LocalStore`) by construction, and proven so in
+//!   `integration_quantized.rs`. It exists so the quantized execution
+//!   path itself is pinned against the reference store.
+//! * `bf16` — top 16 bits of f32, round-to-nearest-even. Same exponent
+//!   range as f32 (no overflow surprises), 8-bit mantissa.
+//! * `f16`  — IEEE 754 binary16, round-to-nearest-even. More mantissa
+//!   than bf16 but a ±65504 range; fine for the optimizers' moment
+//!   sketches, whose cells are cleaned toward zero.
+//! * `i8`   — a non-negative E5M3 mini-float, **floor**-rounded and
+//!   saturating. Floor keeps `dec(enc(x)) ≤ x` cell-by-cell, so a
+//!   count-min estimate (a min of underestimates) never exceeds the
+//!   f32 estimate — but the induction only survives updates whose
+//!   deltas do not depend on the estimate (cs-adagrad's `Δ = g²`).
+//!   [`OptimSpec::validate`](crate::optim::OptimSpec) therefore
+//!   restricts `cells=i8` to cs-adagrad.
+//!
+//! **Accumulate in f32, round once per batch.** An UPDATE gathers every
+//! distinct bucket row the plan touches (first-touch dedup in `(j, t)`
+//! order), decodes it to f32 scratch, applies *all* of the batch's
+//! deltas in exactly the `(j, t)` order the sequential [`LocalStore`]
+//! pass uses, and encodes each row back once. Rounding therefore never
+//! sits between two additions of the same batch, the result is
+//! independent of the shard count, and for `f32` cells the arithmetic
+//! is the reference arithmetic verbatim (shared [`axpy_sign`] /
+//! [`median_rows`] / [`min_into`] kernels).
+//!
+//! **Streaming clean.** `scale(α)` pushes `α` onto a pending list in
+//! O(1) instead of sweeping `v·w·d` cells. Each bucket row records how
+//! many α's are already folded into its cells; the next touch (UPDATE
+//! gather, QUERY decode, snapshot, …) replays the missed suffix —
+//! re-encoding after *each* α, exactly as an eager sweep would have —
+//! so lazily-cleaned state is bitwise-identical to the full-width
+//! sweep while its cost follows the rows the workload actually
+//! touches. A bounded pending depth ([`MAX_PENDING_CLEANS`]) caps the
+//! replay cost of cold rows by amortizing a full flush across that
+//! many cleans.
+
+use super::plan::SketchPlan;
+use super::store::{axpy_sign, median_rows, min_into, Reduce, SketchStore, StoreBuilder};
+use super::tensor::SketchTensor;
+
+/// Upper bound on the lazily-pending clean factors before a full-width
+/// flush. Cold rows replay at most this many `α` round-trips on their
+/// next touch, and the flush sweep amortizes to `1/MAX_PENDING_CLEANS`
+/// of an eager clean per `scale` call.
+pub const MAX_PENDING_CLEANS: usize = 32;
+
+/// Cell storage format of a [`QuantizedStore`] — the `cells=` key of an
+/// optimizer spec (`cs-adam@cells=bf16`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellFormat {
+    /// Identity codec (4 B/cell): the quantized execution path with
+    /// reference arithmetic — bit-identical to `LocalStore`.
+    F32,
+    /// bfloat16, round-to-nearest-even (2 B/cell).
+    Bf16,
+    /// IEEE 754 binary16, round-to-nearest-even (2 B/cell).
+    F16,
+    /// Non-negative saturating E5M3 mini-float, floor-rounded
+    /// (1 B/cell). Count-min counters only — see the module docs.
+    I8,
+}
+
+impl CellFormat {
+    pub const ALL: [CellFormat; 4] =
+        [CellFormat::F32, CellFormat::Bf16, CellFormat::F16, CellFormat::I8];
+
+    /// The spec-string token (`cells=<token>`).
+    pub fn token(self) -> &'static str {
+        match self {
+            CellFormat::F32 => "f32",
+            CellFormat::Bf16 => "bf16",
+            CellFormat::F16 => "f16",
+            CellFormat::I8 => "i8",
+        }
+    }
+
+    /// Inverse of [`CellFormat::token`].
+    pub fn parse(s: &str) -> Option<CellFormat> {
+        CellFormat::ALL.into_iter().find(|f| f.token() == s)
+    }
+
+    pub fn bytes_per_cell(self) -> usize {
+        match self {
+            CellFormat::F32 => 4,
+            CellFormat::Bf16 | CellFormat::F16 => 2,
+            CellFormat::I8 => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for CellFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.token())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cell codecs. All-zero bits decode to 0.0 in every format, so a
+// zero-filled buffer is a valid empty sketch.
+// ---------------------------------------------------------------------
+
+/// f32 → bfloat16 bits, round-to-nearest-even (NaN stays NaN).
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let b = x.to_bits();
+    if x.is_nan() {
+        // keep sign + top payload bits, force a quiet NaN
+        return ((b >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFF + ((b >> 16) & 1);
+    (b.wrapping_add(round) >> 16) as u16
+}
+
+/// bfloat16 bits → f32 (exact).
+#[inline]
+pub fn bf16_to_f32(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even; overflow → ±inf.
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xFF) as i32;
+    let man32 = bits & 0x007F_FFFF;
+    if exp32 == 0xFF {
+        // inf / NaN (NaN keeps a non-zero mantissa)
+        let man16 = if man32 == 0 { 0 } else { 0x0200 | ((man32 >> 13) as u16 & 0x03FF) };
+        return sign | 0x7C00 | man16;
+    }
+    let e = exp32 - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if e <= 0 {
+        // binary16 subnormal (or zero). Below 2^-25 everything rounds
+        // to zero; at exactly 2^-25 the tie goes to the even 0.
+        if e < -10 {
+            return sign;
+        }
+        let man = man32 | 0x0080_0000; // implicit leading 1
+        let shift = (14 - e) as u32;
+        let kept = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let kept = if rem > half || (rem == half && (kept & 1) == 1) { kept + 1 } else { kept };
+        // a carry out of the mantissa lands on exp=1, which is correct
+        return sign | kept as u16;
+    }
+    let mut man16 = (man32 >> 13) as u32;
+    let rem = man32 & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (man16 & 1) == 1) {
+        man16 += 1;
+    }
+    let mut e = e as u32;
+    if man16 == 0x400 {
+        man16 = 0;
+        e += 1;
+        if e >= 0x1F {
+            return sign | 0x7C00;
+        }
+    }
+    sign | ((e << 10) as u16) | man16 as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact).
+#[inline]
+pub fn f16_to_f32(bits: u16) -> f32 {
+    let sign = ((bits as u32) & 0x8000) << 16;
+    let exp = ((bits >> 10) & 0x1F) as u32;
+    let man = (bits & 0x03FF) as u32;
+    let word = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (man << 13)
+    } else if man == 0 {
+        sign
+    } else {
+        // subnormal: normalize into f32
+        let mut k = 0u32;
+        let mut m = man;
+        while (m & 0x400) == 0 {
+            m <<= 1;
+            k += 1;
+        }
+        sign | ((113 - k) << 23) | ((m & 0x03FF) << 13)
+    };
+    f32::from_bits(word)
+}
+
+/// f32 → non-negative E5M3 mini-float bits, **floor**-rounded and
+/// saturating at `(1 + 7/8)·2^16`. Zero, negatives and NaN encode to 0
+/// (count-min counters are non-negative). Floor keeps
+/// `q8_to_f32(f32_to_q8(x)) ≤ x` for every `x ≥ 0`, and the encoding is
+/// monotone in `x` — the two facts the count-min underestimate
+/// guarantee rides on.
+#[inline]
+pub fn f32_to_q8(x: f32) -> u8 {
+    if !(x > 0.0) {
+        return 0;
+    }
+    let b = x.to_bits();
+    let exp32 = ((b >> 23) & 0xFF) as i32 - 127;
+    if exp32 == 128 {
+        return 0xFF; // +inf saturates
+    }
+    let e = exp32 + 15;
+    if e >= 32 {
+        return 0xFF;
+    }
+    let m24 = (b & 0x007F_FFFF) | 0x0080_0000;
+    if e >= 1 {
+        ((e as u8) << 3) | ((m24 >> 20) & 7) as u8
+    } else {
+        // subnormal: floor(x / 2^-17); f32-subnormal inputs fall out
+        // through the range guard (their exponent is far below -17)
+        if exp32 < -17 {
+            return 0;
+        }
+        (m24 >> (6 - exp32)) as u8
+    }
+}
+
+/// Non-negative E5M3 mini-float bits → f32 (exact).
+#[inline]
+pub fn q8_to_f32(bits: u8) -> f32 {
+    let e = (bits >> 3) as i32;
+    let m = (bits & 7) as f32;
+    if e == 0 {
+        m * 2f32.powi(-17)
+    } else {
+        (8.0 + m) * 2f32.powi(e - 18)
+    }
+}
+
+/// One encode→decode round-trip in `fmt` — the rounding an eager store
+/// would have applied when writing the cell back.
+#[inline]
+fn requantize(fmt: CellFormat, x: f32) -> f32 {
+    match fmt {
+        CellFormat::F32 => x,
+        CellFormat::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+        CellFormat::F16 => f16_to_f32(f32_to_f16(x)),
+        CellFormat::I8 => q8_to_f32(f32_to_q8(x)),
+    }
+}
+
+/// Format-tagged cell buffer.
+#[derive(Clone, Debug)]
+enum CellBuf {
+    F32(Vec<f32>),
+    U16(Vec<u16>),
+    U8(Vec<u8>),
+}
+
+impl CellBuf {
+    fn zeros(fmt: CellFormat, n: usize) -> CellBuf {
+        match fmt {
+            CellFormat::F32 => CellBuf::F32(vec![0.0; n]),
+            CellFormat::Bf16 | CellFormat::F16 => CellBuf::U16(vec![0; n]),
+            CellFormat::I8 => CellBuf::U8(vec![0; n]),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            CellBuf::F32(v) => v.len() * 4,
+            CellBuf::U16(v) => v.len() * 2,
+            CellBuf::U8(v) => v.len(),
+        }
+    }
+
+    fn zero(&mut self) {
+        match self {
+            CellBuf::F32(v) => v.fill(0.0),
+            CellBuf::U16(v) => v.fill(0),
+            CellBuf::U8(v) => v.fill(0),
+        }
+    }
+}
+
+/// Builds [`QuantizedStore`]s — what `build_row_dist` injects when a
+/// spec carries `cells=`.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantizedBuilder {
+    fmt: CellFormat,
+}
+
+impl QuantizedBuilder {
+    pub fn new(fmt: CellFormat) -> QuantizedBuilder {
+        QuantizedBuilder { fmt }
+    }
+}
+
+impl StoreBuilder for QuantizedBuilder {
+    fn build(&self, depth: usize, width: usize, dim: usize) -> Box<dyn SketchStore> {
+        Box::new(QuantizedStore::zeros(self.fmt, depth, width, dim))
+    }
+}
+
+/// Whole-tensor in-process store with reduced-precision cells and
+/// streaming (lazy) clean. See the module docs for the semantics.
+///
+/// The `shards` knob is recorded for spec round-trips but execution is
+/// sequential: the UPDATE is already a single gather/scatter pass over
+/// deduplicated rows, and sequential application is what the bitwise
+/// `cells=f32` ≡ `LocalStore` guarantee is proven against.
+#[derive(Clone, Debug)]
+pub struct QuantizedStore {
+    fmt: CellFormat,
+    depth: usize,
+    width: usize,
+    dim: usize,
+    cells: CellBuf,
+    shards: usize,
+    /// Clean factors pushed by `scale`, oldest first; cleared on flush.
+    alphas: Vec<f32>,
+    /// Per bucket-row count of `alphas` already folded into its cells.
+    applied: Vec<u32>,
+    /// Per bucket-row epoch stamp for the UPDATE first-touch dedup.
+    stamp: Vec<u64>,
+    /// Scratch slot of a stamped row within the current UPDATE.
+    slot_of: Vec<u32>,
+    epoch: u64,
+    /// Distinct rows of the current UPDATE, in first-touch order.
+    touched: Vec<u32>,
+    /// f32 accumulation scratch, `[touched.len(), d]`.
+    gather: Vec<f32>,
+}
+
+impl QuantizedStore {
+    pub fn zeros(fmt: CellFormat, depth: usize, width: usize, dim: usize) -> QuantizedStore {
+        let rows = depth * width;
+        QuantizedStore {
+            fmt,
+            depth,
+            width,
+            dim,
+            cells: CellBuf::zeros(fmt, rows * dim),
+            shards: 1,
+            alphas: Vec::new(),
+            applied: vec![0; rows],
+            stamp: vec![0; rows],
+            slot_of: vec![0; rows],
+            epoch: 0,
+            touched: Vec::new(),
+            gather: Vec::new(),
+        }
+    }
+
+    pub fn format(&self) -> CellFormat {
+        self.fmt
+    }
+
+    /// Clean factors not yet swept into cold rows (tests/benches).
+    pub fn pending_cleans(&self) -> usize {
+        self.alphas.len()
+    }
+
+    /// Raw cell decode of bucket row `r`, **without** pending-clean
+    /// replay.
+    fn decode_row(&self, r: usize, out: &mut [f32]) {
+        let d = self.dim;
+        debug_assert_eq!(out.len(), d);
+        match &self.cells {
+            CellBuf::F32(v) => out.copy_from_slice(&v[r * d..(r + 1) * d]),
+            CellBuf::U16(v) => {
+                let src = &v[r * d..(r + 1) * d];
+                if self.fmt == CellFormat::Bf16 {
+                    for (o, &b) in out.iter_mut().zip(src) {
+                        *o = bf16_to_f32(b);
+                    }
+                } else {
+                    for (o, &b) in out.iter_mut().zip(src) {
+                        *o = f16_to_f32(b);
+                    }
+                }
+            }
+            CellBuf::U8(v) => {
+                for (o, &b) in out.iter_mut().zip(&v[r * d..(r + 1) * d]) {
+                    *o = q8_to_f32(b);
+                }
+            }
+        }
+    }
+
+    /// Encode `src` into bucket row `r` — the once-per-batch rounding.
+    fn encode_row(&mut self, r: usize, src: &[f32]) {
+        let d = self.dim;
+        debug_assert_eq!(src.len(), d);
+        match &mut self.cells {
+            CellBuf::F32(v) => v[r * d..(r + 1) * d].copy_from_slice(src),
+            CellBuf::U16(v) => {
+                let dst = &mut v[r * d..(r + 1) * d];
+                if self.fmt == CellFormat::Bf16 {
+                    for (o, &x) in dst.iter_mut().zip(src) {
+                        *o = f32_to_bf16(x);
+                    }
+                } else {
+                    for (o, &x) in dst.iter_mut().zip(src) {
+                        *o = f32_to_f16(x);
+                    }
+                }
+            }
+            CellBuf::U8(v) => {
+                for (o, &x) in v[r * d..(r + 1) * d].iter_mut().zip(src) {
+                    *o = f32_to_q8(x);
+                }
+            }
+        }
+    }
+
+    /// The current *logical* value of bucket row `r`: decoded cells with
+    /// the pending clean suffix replayed (one requantize per missed α,
+    /// exactly what an eager sweep would have stored). Pure — the
+    /// backing cells are untouched, so QUERY stays `&self`.
+    fn row_value_into(&self, r: usize, out: &mut [f32]) {
+        self.decode_row(r, out);
+        let from = self.applied[r] as usize;
+        if from < self.alphas.len() {
+            let suffix = &self.alphas[from..];
+            for x in out.iter_mut() {
+                let mut y = *x;
+                for &a in suffix {
+                    y = requantize(self.fmt, y * a);
+                }
+                *x = y;
+            }
+        }
+    }
+
+    /// Sweep every row that still has pending clean factors, then clear
+    /// the pending list. Bitwise-identical to having scaled eagerly.
+    pub fn flush_clean(&mut self) {
+        if self.alphas.is_empty() {
+            return;
+        }
+        let rows = self.depth * self.width;
+        let n = self.alphas.len() as u32;
+        let mut buf = vec![0.0f32; self.dim];
+        for r in 0..rows {
+            if self.applied[r] == n {
+                continue;
+            }
+            self.row_value_into(r, &mut buf);
+            self.encode_row(r, &buf);
+        }
+        self.alphas.clear();
+        self.applied.fill(0);
+    }
+}
+
+impl SketchStore for QuantizedStore {
+    fn depth(&self) -> usize {
+        self.depth
+    }
+
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.cells.bytes()
+            + self.applied.len() * std::mem::size_of::<u32>()
+            + self.stamp.len() * std::mem::size_of::<u64>()
+            + self.slot_of.len() * std::mem::size_of::<u32>()
+            + self.alphas.len() * std::mem::size_of::<f32>()
+    }
+
+    fn shards(&self) -> usize {
+        self.shards
+    }
+
+    fn set_shards(&mut self, n: usize) {
+        self.shards = n.max(1);
+    }
+
+    fn update(&mut self, plan: &SketchPlan, deltas: &[f32], signed: bool) {
+        let d = self.dim;
+        let (v, k) = (plan.depth(), plan.k());
+        debug_assert_eq!(v, self.depth);
+        debug_assert_eq!(deltas.len(), k * d);
+        if k == 0 {
+            return;
+        }
+        // 1. first-touch dedup of the plan's bucket rows, in (j, t) order
+        self.epoch += 1;
+        let mut touched = std::mem::take(&mut self.touched);
+        touched.clear();
+        for j in 0..v {
+            let base = j * self.width;
+            for t in 0..k {
+                let r = base + plan.bucket(j, t);
+                if self.stamp[r] != self.epoch {
+                    self.stamp[r] = self.epoch;
+                    self.slot_of[r] = touched.len() as u32;
+                    touched.push(r as u32);
+                }
+            }
+        }
+        // 2. gather to f32 scratch, replaying pending cleans on the way in
+        let mut gather = std::mem::take(&mut self.gather);
+        gather.resize(touched.len() * d, 0.0);
+        for (slot, &r) in touched.iter().enumerate() {
+            self.row_value_into(r as usize, &mut gather[slot * d..(slot + 1) * d]);
+        }
+        let n_alpha = self.alphas.len() as u32;
+        for &r in &touched {
+            self.applied[r as usize] = n_alpha;
+        }
+        // 3. apply every delta in the (j, t) order of the sequential
+        //    LocalStore pass — each row sees the same additions in the
+        //    same order, so f32 cells reproduce it bitwise
+        for j in 0..v {
+            let base = j * self.width;
+            for t in 0..k {
+                let r = base + plan.bucket(j, t);
+                let slot = self.slot_of[r] as usize;
+                let row = &mut gather[slot * d..(slot + 1) * d];
+                let s = if signed { plan.sign(j, t) } else { 1.0 };
+                axpy_sign(row, &deltas[t * d..(t + 1) * d], s);
+            }
+        }
+        // 4. round once per touched row
+        for (slot, &r) in touched.iter().enumerate() {
+            self.encode_row(r as usize, &gather[slot * d..(slot + 1) * d]);
+        }
+        self.touched = touched;
+        self.gather = gather;
+    }
+
+    fn query(&self, plan: &SketchPlan, reduce: Reduce, out: &mut [f32]) {
+        let d = self.dim;
+        let (v, k) = (plan.depth(), plan.k());
+        debug_assert_eq!(out.len(), k * d);
+        // QUERY is &self and the cells need decoding, so one small
+        // [v, d] scratch per call (the fused-step default makes two
+        // queries per optimizer step; the scratch is v·d floats, not
+        // k·d)
+        let mut rows_buf = vec![0.0f32; v * d];
+        let mut median_buf = vec![0.0f32; if v > 3 { v } else { 0 }];
+        let mut sign_rows: Vec<(usize, f32)> = Vec::with_capacity(v);
+        for t in 0..k {
+            let dst = &mut out[t * d..(t + 1) * d];
+            match reduce {
+                Reduce::SignedMedian => {
+                    sign_rows.clear();
+                    for (j, span) in rows_buf.chunks_mut(d).enumerate() {
+                        self.row_value_into(j * self.width + plan.bucket(j, t), span);
+                        sign_rows.push((j, plan.sign(j, t)));
+                    }
+                    median_rows(&rows_buf, d, &sign_rows, &mut median_buf, dst);
+                }
+                Reduce::Min => {
+                    self.row_value_into(plan.bucket(0, t), dst);
+                    for j in 1..v {
+                        self.row_value_into(
+                            j * self.width + plan.bucket(j, t),
+                            &mut rows_buf[..d],
+                        );
+                        min_into(dst, &rows_buf[..d]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// O(1): push the factor; rows replay it on their next touch. A
+    /// bounded pending depth triggers the amortized full flush.
+    fn scale(&mut self, alpha: f32) {
+        self.alphas.push(alpha);
+        if self.alphas.len() >= MAX_PENDING_CLEANS {
+            self.flush_clean();
+        }
+    }
+
+    fn reset(&mut self) {
+        self.cells.zero();
+        self.alphas.clear();
+        self.applied.fill(0);
+    }
+
+    fn sq_norm(&self) -> f64 {
+        let rows = self.depth * self.width;
+        let mut buf = vec![0.0f32; self.dim];
+        let mut acc = 0f64;
+        for r in 0..rows {
+            self.row_value_into(r, &mut buf);
+            for &x in &buf {
+                acc += (x as f64) * (x as f64);
+            }
+        }
+        acc
+    }
+
+    fn tensor(&self) -> Option<&SketchTensor> {
+        None
+    }
+
+    fn tensor_mut(&mut self) -> Option<&mut SketchTensor> {
+        None
+    }
+
+    fn fold_half(&mut self) {
+        assert!(self.width % 2 == 0, "fold_half: width {} is not even", self.width);
+        // pending α are per-cell multiplicative — they must land before
+        // pairs of cells merge, exactly as an eager store would have
+        self.flush_clean();
+        let (v, d, w) = (self.depth, self.dim, self.width);
+        let w2 = w / 2;
+        let mut out = vec![0.0f32; v * w2 * d];
+        let mut buf = vec![0.0f32; d];
+        // same (j, b ascending) accumulation order as SketchTensor::fold_half
+        for j in 0..v {
+            for b in 0..w {
+                self.decode_row(j * w + b, &mut buf);
+                let at = (j * w2 + (b % w2)) * d;
+                for (o, &x) in out[at..at + d].iter_mut().zip(&buf) {
+                    *o += x;
+                }
+            }
+        }
+        let rows = v * w2;
+        self.width = w2;
+        self.cells = CellBuf::zeros(self.fmt, rows * d);
+        self.applied = vec![0; rows];
+        self.stamp = vec![0; rows];
+        self.slot_of = vec![0; rows];
+        self.epoch = 0;
+        for (r, chunk) in out.chunks(d).enumerate() {
+            self.encode_row(r, chunk);
+        }
+    }
+
+    fn snapshot_full(&self) -> Vec<f32> {
+        let mut full = vec![0.0f32; self.depth * self.width * self.dim];
+        for (r, chunk) in full.chunks_mut(self.dim).enumerate() {
+            self.row_value_into(r, chunk);
+        }
+        full
+    }
+
+    fn restore_full(&mut self, full: &[f32]) {
+        assert_eq!(
+            full.len(),
+            self.depth * self.width * self.dim,
+            "restore_full: buffer geometry mismatch"
+        );
+        self.alphas.clear();
+        self.applied.fill(0);
+        for (r, chunk) in full.chunks(self.dim).enumerate() {
+            self.encode_row(r, chunk);
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn SketchStore> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::hash::SketchHasher;
+    use super::super::store::LocalStore;
+    use super::*;
+
+    fn is_nan_bf16(bits: u16) -> bool {
+        (bits & 0x7F80) == 0x7F80 && (bits & 0x007F) != 0
+    }
+
+    fn is_nan_f16(bits: u16) -> bool {
+        (bits & 0x7C00) == 0x7C00 && (bits & 0x03FF) != 0
+    }
+
+    #[test]
+    fn bf16_round_trips_every_representable_value() {
+        for bits in 0..=u16::MAX {
+            if is_nan_bf16(bits) {
+                continue;
+            }
+            let x = bf16_to_f32(bits);
+            assert_eq!(f32_to_bf16(x), bits, "bits={bits:#06x} x={x}");
+        }
+    }
+
+    #[test]
+    fn f16_round_trips_every_representable_value() {
+        for bits in 0..=u16::MAX {
+            if is_nan_f16(bits) {
+                continue;
+            }
+            let x = f16_to_f32(bits);
+            assert_eq!(f32_to_f16(x), bits, "bits={bits:#06x} x={x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-9 sits exactly between 1.0 and the next bf16
+        // (mantissa step 2^-8): the tie goes to the even mantissa (1.0)
+        let tie = f32::from_bits(0x3F80_8000);
+        assert_eq!(f32_to_bf16(tie), 0x3F80);
+        // one ulp above the tie rounds up
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(f32_to_bf16(above), 0x3F81);
+        // odd mantissa: the tie rounds up to the even neighbor
+        let tie_odd = f32::from_bits(0x3F81_8000);
+        assert_eq!(f32_to_bf16(tie_odd), 0x3F82);
+    }
+
+    #[test]
+    fn f16_handles_subnormals_and_overflow() {
+        // smallest binary16 subnormal
+        assert_eq!(f32_to_f16(2f32.powi(-24)), 0x0001);
+        assert_eq!(f16_to_f32(0x0001), 2f32.powi(-24));
+        // half of it ties to even zero; just above rounds up
+        assert_eq!(f32_to_f16(2f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16(2f32.powi(-25) * 1.5), 0x0001);
+        // beyond the f16 range → inf
+        assert_eq!(f32_to_f16(70000.0), 0x7C00);
+        assert_eq!(f32_to_f16(-70000.0), 0xFC00);
+    }
+
+    #[test]
+    fn q8_round_trips_and_stays_monotone() {
+        let mut prev = -1.0f32;
+        for code in 0u8..=u8::MAX {
+            let x = q8_to_f32(code);
+            assert!(x > prev, "decode must be strictly increasing: code={code}");
+            prev = x;
+            assert_eq!(f32_to_q8(x), code, "code={code:#04x} x={x}");
+        }
+    }
+
+    #[test]
+    fn q8_floor_never_overestimates() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for _ in 0..20_000 {
+            // log-uniform over the interesting range, plus the tails
+            let e = rng.f64() * 50.0 - 25.0;
+            let x = (2f64.powf(e) * (1.0 + rng.f64())) as f32;
+            let q = q8_to_f32(f32_to_q8(x));
+            assert!(q <= x, "q8 must floor: {x} -> {q}");
+            // monotone: a larger input never gets a smaller code
+            let y = x * (1.0 + rng.f64() as f32);
+            assert!(f32_to_q8(y) >= f32_to_q8(x), "{x} vs {y}");
+        }
+        assert_eq!(f32_to_q8(0.0), 0);
+        assert_eq!(f32_to_q8(-3.0), 0);
+        assert_eq!(f32_to_q8(f32::INFINITY), 0xFF);
+        assert_eq!(q8_to_f32(0), 0.0);
+    }
+
+    #[test]
+    fn f32_cells_match_local_store_bitwise_smoke() {
+        // the full matrix (shards, fused paths, trainer level) lives in
+        // integration_quantized.rs; this is the in-module sanity check
+        let (v, w, d) = (3usize, 31usize, 5usize);
+        let h = SketchHasher::new(v, w, 11);
+        let mut quant = QuantizedStore::zeros(CellFormat::F32, v, w, d);
+        let mut local = LocalStore::zeros(v, w, d);
+        let ids: Vec<u64> = (0..17u64).map(|i| i % 7).collect();
+        let plan = SketchPlan::build(&h, &ids);
+        let deltas: Vec<f32> = (0..ids.len() * d).map(|i| (i as f32 * 0.43).sin()).collect();
+        for step in 0..4 {
+            quant.update(&plan, &deltas, true);
+            local.update(&plan, &deltas, true);
+            if step == 2 {
+                quant.scale(0.5);
+                local.scale(0.5);
+            }
+            let mut a = vec![0.0f32; ids.len() * d];
+            let mut b = a.clone();
+            quant.query(&plan, Reduce::SignedMedian, &mut a);
+            local.query(&plan, Reduce::SignedMedian, &mut b);
+            assert_eq!(a, b, "step {step}");
+        }
+        assert_eq!(quant.snapshot_full(), local.snapshot_full());
+        assert_eq!(quant.sq_norm(), local.sq_norm());
+        quant.fold_half();
+        local.fold_half();
+        assert_eq!(quant.snapshot_full(), local.snapshot_full());
+    }
+
+    #[test]
+    fn streaming_clean_matches_eager_flush() {
+        let (v, w, d) = (3usize, 16usize, 4usize);
+        let h = SketchHasher::new(v, w, 3);
+        let mut lazy = QuantizedStore::zeros(CellFormat::Bf16, v, w, d);
+        let mut eager = QuantizedStore::zeros(CellFormat::Bf16, v, w, d);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for round in 0..6 {
+            let ids: Vec<u64> = (0..5).map(|_| rng.below(40) as u64).collect();
+            let plan = SketchPlan::build(&h, &ids);
+            let deltas: Vec<f32> =
+                (0..ids.len() * d).map(|_| rng.f64() as f32 - 0.4).collect();
+            lazy.update(&plan, &deltas, true);
+            eager.update(&plan, &deltas, true);
+            lazy.scale(0.75);
+            eager.scale(0.75);
+            eager.flush_clean(); // eager twin sweeps after every clean
+            assert!(lazy.pending_cleans() > 0, "round {round}");
+            assert_eq!(lazy.snapshot_full(), eager.snapshot_full(), "round {round}");
+        }
+        lazy.flush_clean();
+        assert_eq!(lazy.pending_cleans(), 0);
+        assert_eq!(lazy.snapshot_full(), eager.snapshot_full());
+    }
+
+    #[test]
+    fn pending_cleans_stay_bounded() {
+        let mut st = QuantizedStore::zeros(CellFormat::F16, 2, 8, 2);
+        for _ in 0..(3 * MAX_PENDING_CLEANS) {
+            st.scale(0.9);
+            assert!(st.pending_cleans() < MAX_PENDING_CLEANS);
+        }
+    }
+
+    #[test]
+    fn restore_full_round_trips_through_snapshot() {
+        let (v, w, d) = (2usize, 8usize, 3usize);
+        let h = SketchHasher::new(v, w, 9);
+        let mut st = QuantizedStore::zeros(CellFormat::Bf16, v, w, d);
+        let plan = SketchPlan::build(&h, &[1, 5, 9]);
+        st.update(&plan, &vec![0.25f32; 3 * d], false);
+        st.scale(0.5);
+        let snap = st.snapshot_full();
+        let mut st2 = QuantizedStore::zeros(CellFormat::Bf16, v, w, d);
+        st2.restore_full(&snap);
+        // the snapshot values are bf16-representable, so the restored
+        // store reproduces them exactly
+        assert_eq!(st2.snapshot_full(), snap);
+    }
+}

@@ -1309,6 +1309,7 @@ impl Session {
                     "bytes_received",
                     "opt_step_ns",
                     "comm_overlap_ns",
+                    "peak_rss_mb",
                 ],
             )?),
             _ => None,
@@ -1369,6 +1370,9 @@ impl Session {
                     &received,
                     &opt_step_ns,
                     &comm_overlap_ns,
+                    // process-lifetime peak RSS (VmHWM; 0 off-Linux) —
+                    // the extreme-vocab memory ceiling reads this column
+                    &format!("{:.1}", crate::metrics::memory::peak_rss_mb()),
                 ])?;
             }
             summary.epochs.push(r);

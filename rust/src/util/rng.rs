@@ -223,6 +223,58 @@ impl Zipf {
     }
 }
 
+/// Bounded-memory Zipf sampler over `{0, …, n−1}` with exponent `s > 1`:
+/// Devroye's rejection method for the zeta distribution, truncated to
+/// `n` by resampling. O(1) setup and memory versus [`Zipf`]'s O(n) CDF
+/// table — the extreme-vocab scenario (DESIGN.md §15) samples from
+/// multi-million-item supports where even the f64 CDF table (8 B/item)
+/// would eat a meaningful slice of the memory budget the scenario
+/// exists to bound. Expected ≈2–3 iterations per sample for the
+/// exponents natural-language streams use (s ≈ 1.05–1.3).
+///
+/// Same distribution *family* as [`Zipf`] but not the same normalized
+/// pmf (truncation by resampling re-normalizes the infinite-support
+/// zeta tail); the two are not interchangeable mid-experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct ZipfRejection {
+    n: usize,
+    s: f64,
+    /// Precomputed `2^(s−1)` — the constant in Devroye's acceptance test.
+    b: f64,
+}
+
+impl ZipfRejection {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "empty support");
+        assert!(s > 1.0, "the zeta rejection sampler needs s > 1 (got {s})");
+        ZipfRejection { n, s, b: 2f64.powf(s - 1.0) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Draw one item (0 = most frequent rank).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        loop {
+            let u = 1.0 - rng.f64(); // (0, 1]: keeps the powf finite
+            let v = rng.f64();
+            let x = u.powf(-1.0 / (self.s - 1.0)).floor(); // rank ≥ 1
+            if x > self.n as f64 {
+                continue; // truncate the zeta tail (also catches +inf)
+            }
+            let t = (1.0 + 1.0 / x).powf(self.s - 1.0);
+            if v * x * (t - 1.0) / (self.b - 1.0) <= t / self.b {
+                return x as usize - 1;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +342,30 @@ mod tests {
         assert!(counts[0] > 20 * counts[100].max(1));
         // cdf sanity
         assert!((z.pmf(0) / z.pmf(1) - 2.0f64.powf(1.05)).abs() < 0.01);
+    }
+
+    #[test]
+    fn zipf_rejection_is_bounded_power_law() {
+        let z = ZipfRejection::new(1000, 1.2);
+        let mut rng = Rng::new(11);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..200_000 {
+            let i = z.sample(&mut rng);
+            assert!(i < 1000);
+            counts[i] += 1;
+        }
+        // rank-1/rank-2 frequency ratio ≈ 2^s
+        let ratio = counts[0] as f64 / counts[1].max(1) as f64;
+        assert!((ratio - 2f64.powf(1.2)).abs() < 0.25, "ratio={ratio}");
+        // head dominates the mid-tail, as in the CDF sampler
+        assert!(counts[0] > 20 * counts[100].max(1));
+        // truncation actually reaches the tail of a small support
+        let z_small = ZipfRejection::new(8, 1.1);
+        let mut hit = [false; 8];
+        for _ in 0..20_000 {
+            hit[z_small.sample(&mut rng)] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "{hit:?}");
     }
 
     #[test]

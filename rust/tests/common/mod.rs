@@ -154,6 +154,96 @@ pub mod rogue {
     }
 }
 
+/// Tolerance harness shared by the lossy-compression suites (comm-sketch
+/// wire, quantized sketch cells): a single perplexity-factor gate, plus a
+/// trajectory reporter that pinpoints *where* two runs part ways instead
+/// of leaving a bare boolean failure.
+pub mod tolerance {
+    /// Assert a lossy run still trains: `got` perplexity within
+    /// `factor`× of the `reference` run's. Both must be finite — a NaN
+    /// ppl comparing `false` must fail, not pass.
+    pub fn assert_ppl_within(what: &str, got: f64, reference: f64, factor: f64) {
+        assert!(
+            got.is_finite() && reference.is_finite(),
+            "{what}: non-finite perplexity (got {got}, reference {reference})"
+        );
+        assert!(
+            got <= reference * factor,
+            "{what}: ppl {got:.3} exceeds {factor}× the reference ppl {reference:.3} \
+             (allowed ≤ {:.3})",
+            reference * factor
+        );
+    }
+
+    /// Where two per-step state trajectories diverge. `steps` are
+    /// parallel sequences of equal-length f32 snapshots (params, sketch
+    /// cells, …).
+    pub struct TrajectoryReport {
+        /// First step whose snapshots differ bitwise, if any.
+        pub first_divergent_step: Option<usize>,
+        /// Largest |a−b| across all steps.
+        pub max_abs_err: f32,
+        /// `(step, flat index)` of that largest error.
+        pub max_at: (usize, usize),
+    }
+
+    impl TrajectoryReport {
+        pub fn bitwise_identical(&self) -> bool {
+            self.first_divergent_step.is_none()
+        }
+
+        /// Human-readable one-liner for assertion messages.
+        pub fn describe(&self) -> String {
+            match self.first_divergent_step {
+                None => "trajectories bitwise-identical".to_string(),
+                Some(s) => format!(
+                    "trajectories first diverge at step {s}; max |err| {:.3e} at \
+                     step {} index {}",
+                    self.max_abs_err, self.max_at.0, self.max_at.1
+                ),
+            }
+        }
+    }
+
+    /// Compare two trajectories step by step. Panics on shape mismatch —
+    /// that is a harness bug, not a tolerance question.
+    pub fn compare_trajectories(a: &[Vec<f32>], b: &[Vec<f32>]) -> TrajectoryReport {
+        assert_eq!(a.len(), b.len(), "trajectory step counts differ");
+        let mut report = TrajectoryReport {
+            first_divergent_step: None,
+            max_abs_err: 0.0,
+            max_at: (0, 0),
+        };
+        for (step, (xa, xb)) in a.iter().zip(b).enumerate() {
+            assert_eq!(xa.len(), xb.len(), "step {step}: snapshot lengths differ");
+            let mut step_diverged = false;
+            for (i, (&va, &vb)) in xa.iter().zip(xb).enumerate() {
+                if va.to_bits() != vb.to_bits() {
+                    step_diverged = true;
+                    let err = (va - vb).abs();
+                    // NaN-vs-value divergences report as infinite error
+                    let err = if err.is_nan() { f32::INFINITY } else { err };
+                    if err > report.max_abs_err {
+                        report.max_abs_err = err;
+                        report.max_at = (step, i);
+                    }
+                }
+            }
+            if step_diverged && report.first_divergent_step.is_none() {
+                report.first_divergent_step = Some(step);
+            }
+        }
+        report
+    }
+
+    /// Assert two trajectories are bitwise-identical, reporting the first
+    /// divergence point when they are not.
+    pub fn assert_trajectories_identical(what: &str, a: &[Vec<f32>], b: &[Vec<f32>]) {
+        let report = compare_trajectories(a, b);
+        assert!(report.bitwise_identical(), "{what}: {}", report.describe());
+    }
+}
+
 /// Open the artifact runtime, or return `None` when the XLA leg is
 /// legitimately absent in this environment — the vendored stub `xla`
 /// crate, or no `make artifacts` output (missing `manifest.json`). Any

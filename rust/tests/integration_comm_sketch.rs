@@ -17,6 +17,8 @@
 //!   read the metrics CSV's transport byte counters: the compressed
 //!   exchange ships ≥ 4× fewer bytes per run than `mode = data`.
 
+mod common;
+
 use std::thread;
 
 use csopt::comm::{mem_world, DistCtx, SegmentSketcher, Transport};
@@ -206,10 +208,11 @@ fn comm_sketch_trains_within_tolerance_of_dense_data_mode() {
         dense.emb.params, cs.emb.params,
         "comm-sketch must not silently train the dense exchange"
     );
-    assert!(cs_ppl.is_finite() && dense_ppl.is_finite());
-    assert!(
-        cs_ppl <= dense_ppl * 1.5,
-        "compressed run diverged: comm-sketch ppl {cs_ppl:.2} vs data ppl {dense_ppl:.2}"
+    common::tolerance::assert_ppl_within(
+        "comm-sketch vs dense data mode",
+        cs_ppl as f64,
+        dense_ppl as f64,
+        1.5,
     );
 }
 

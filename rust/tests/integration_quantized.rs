@@ -1,0 +1,371 @@
+//! Quantized-cell store suite (DESIGN.md §15).
+//!
+//! The claims pinned here, in order of strength:
+//!
+//! * **Exactness** — `cells=f32` is a pure refactor: bitwise-identical
+//!   to [`LocalStore`] at the store level (update/query/scale/fold,
+//!   fused and unfused, shards 1/2/4, both reductions), at the trainer
+//!   level, and through a checkpoint round-trip.
+//! * **Streaming clean** — the lazily-applied per-row clean is
+//!   bitwise-identical to eagerly sweeping the full width at every
+//!   `scale`, for lossy formats too.
+//! * **Monotone underestimate** — `cells=i8` (floor-coded E5M3) never
+//!   reports a CMS estimate above the f32 store's, under interleaved
+//!   updates and cleans.
+//! * **Tolerance** — `cells=bf16` genuinely quantizes (trajectories
+//!   diverge) yet still trains: eval ppl within 1.05× of the f32 run,
+//!   via the shared tolerance harness.
+//! * **Memory** — bf16/i8 stores report roughly half / under half the
+//!   f32 store's bytes, which is the point of the feature.
+
+mod common;
+
+use csopt::data::corpus::SyntheticCorpus;
+use csopt::sketch::store::LocalBuilder;
+use csopt::sketch::{
+    CellFormat, QuantizedBuilder, QuantizedStore, Reduce, SketchHasher, SketchPlan, SketchStore,
+    StoreBuilder,
+};
+use csopt::train::checkpoint::Checkpoint;
+use csopt::train::session::{RunSpec, Session};
+use csopt::util::proptest::check;
+use csopt::util::rng::Rng;
+
+use common::tolerance;
+
+// ---------------------------------------------------------------------------
+// store-level exactness: cells=f32 vs LocalStore
+
+/// Distinct random ids and matching `[k, d]` deltas; `signed = false`
+/// callers get non-negative deltas (count-min convention).
+fn random_batch(
+    rng: &mut Rng,
+    id_space: u64,
+    k_max: usize,
+    d: usize,
+    signed: bool,
+) -> (Vec<u64>, Vec<f32>) {
+    let mut ids: Vec<u64> =
+        (0..1 + rng.below(k_max)).map(|_| rng.next_u64() % id_space).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    let deltas: Vec<f32> = (0..ids.len() * d)
+        .map(|_| {
+            let x = rng.normal_f32(0.0, 1.0);
+            if signed {
+                x
+            } else {
+                x.abs()
+            }
+        })
+        .collect();
+    (ids, deltas)
+}
+
+/// Unfused interleaving of update / query / scale / sq_norm across both
+/// reductions and shard counts 1/2/4: every observable of the f32-cell
+/// quantized store must match the reference store bit for bit.
+#[test]
+fn f32_cells_match_local_store_bitwise_unfused() {
+    check("quant-f32-unfused-bitwise", 10, 0xF32_0001, |rng| {
+        let v = 1 + rng.below(3);
+        let w = 16 + rng.below(48);
+        let d = 1 + rng.below(8);
+        let signed = rng.below(2) == 0;
+        let reduce = if signed { Reduce::SignedMedian } else { Reduce::Min };
+        let shards = [1usize, 2, 4][rng.below(3)];
+        let hasher = SketchHasher::new(v, w, rng.next_u64());
+
+        let mut reference = LocalBuilder.build(v, w, d);
+        let mut quant = QuantizedBuilder::new(CellFormat::F32).build(v, w, d);
+        reference.set_shards(shards);
+        quant.set_shards(shards);
+
+        for round in 0..8 {
+            let (ids, deltas) = random_batch(rng, 500, 24, d, signed);
+            let plan = SketchPlan::build(&hasher, &ids);
+            reference.update(&plan, &deltas, signed);
+            quant.update(&plan, &deltas, signed);
+            if round % 3 == 2 {
+                reference.scale(0.5);
+                quant.scale(0.5);
+            }
+            let mut out_a = vec![0.0f32; plan.k() * d];
+            let mut out_b = vec![0.0f32; plan.k() * d];
+            reference.query(&plan, reduce, &mut out_a);
+            quant.query(&plan, reduce, &mut out_b);
+            for (i, (&a, &b)) in out_a.iter().zip(&out_b).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "round {round} query cell {i}: local {a} vs quant {b} \
+                         (v={v} w={w} d={d} shards={shards} signed={signed})"
+                    ));
+                }
+            }
+            if reference.sq_norm().to_bits() != quant.sq_norm().to_bits() {
+                return Err(format!("round {round}: sq_norm diverged"));
+            }
+        }
+        if reference.snapshot_full() != quant.snapshot_full() {
+            return Err("final snapshots differ".into());
+        }
+        reference.fold_half();
+        quant.fold_half();
+        if reference.snapshot_full() != quant.snapshot_full() {
+            return Err("snapshots differ after fold_half".into());
+        }
+        Ok(())
+    });
+}
+
+/// Fused steps: the reference store runs its gather-once fused kernel,
+/// the quantized store the default unfused decomposition — the
+/// `step_fused` contract says both are bitwise-identical, and f32 cells
+/// must preserve that across shard counts.
+#[test]
+fn f32_cells_match_local_store_bitwise_fused() {
+    for shards in [1usize, 2, 4] {
+        let (v, w, d) = (3, 64, 8);
+        let hasher = SketchHasher::new(v, w, 0xF0_5ED + shards as u64);
+        let mut reference = LocalBuilder.build(v, w, d);
+        let mut quant = QuantizedBuilder::new(CellFormat::F32).build(v, w, d);
+        reference.set_shards(shards);
+        quant.set_shards(shards);
+
+        let mut rng = Rng::new(99 + shards as u64);
+        for round in 0..6 {
+            let (ids, grads) = random_batch(&mut rng, 400, 20, d, true);
+            let plan = SketchPlan::build(&hasher, &ids);
+            let mut est_a = vec![0.0f32; plan.k() * d];
+            let mut est_b = vec![0.0f32; plan.k() * d];
+            // an Adam-shaped delta: decay the estimate toward the gradient
+            let mut make = |est: &[f32], delta: &mut [f32]| {
+                for (i, dst) in delta.iter_mut().enumerate() {
+                    *dst = 0.1 * (grads[i] - est[i]);
+                }
+            };
+            reference.step_fused(&plan, Reduce::SignedMedian, true, true, &mut make, &mut est_a);
+            quant.step_fused(&plan, Reduce::SignedMedian, true, true, &mut make, &mut est_b);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits(&est_a),
+                bits(&est_b),
+                "shards={shards} round={round}: fused re-query diverged"
+            );
+            if round == 3 {
+                reference.scale(0.25);
+                quant.scale(0.25);
+            }
+        }
+        assert_eq!(
+            reference.snapshot_full(),
+            quant.snapshot_full(),
+            "shards={shards}: fused trajectories left different state"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// streaming clean
+
+/// Lazy per-row clean catch-up vs eagerly flushing the full width at
+/// every scale: bitwise-identical final cells, for a lossy format, with
+/// enough interleaved scales to cross the pending-clean flush cap.
+#[test]
+fn streaming_clean_matches_full_width_clean_bitwise() {
+    check("quant-streaming-clean", 8, 0xC1EA_17, |rng| {
+        let (v, w, d) = (2, 32 + rng.below(32), 1 + rng.below(6));
+        let hasher = SketchHasher::new(v, w, rng.next_u64());
+        let mut lazy = QuantizedStore::zeros(CellFormat::Bf16, v, w, d);
+        let mut eager = QuantizedStore::zeros(CellFormat::Bf16, v, w, d);
+
+        for _ in 0..40 {
+            // scale more often than update so pending cleans accumulate
+            // past MAX_PENDING_CLEANS on some rows
+            let (ids, deltas) = random_batch(rng, 300, 12, d, true);
+            let plan = SketchPlan::build(&hasher, &ids);
+            lazy.update(&plan, &deltas, true);
+            eager.update(&plan, &deltas, true);
+            for _ in 0..1 + rng.below(3) {
+                lazy.scale(0.9);
+                eager.scale(0.9);
+                eager.flush_clean();
+            }
+        }
+        let (a, b) = (lazy.snapshot_full(), eager.snapshot_full());
+        for (i, (&x, &y)) in a.iter().zip(&b).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("cell {i}: lazy {x} vs eager {y}"));
+            }
+        }
+        lazy.flush_clean();
+        if lazy.pending_cleans() != 0 {
+            return Err("flush_clean left pending cleans".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// i8 monotone underestimate
+
+/// Floor-coded i8 cells under count-min semantics: with non-negative
+/// deltas and interleaved cleans, the quantized estimate never exceeds
+/// the exact f32 estimate — the property `validate()` relies on when it
+/// admits `cells=i8` for cs-adagrad only.
+#[test]
+fn i8_cms_estimate_never_exceeds_f32() {
+    check("quant-i8-monotone", 12, 0x18_F10_0C, |rng| {
+        let (v, w, d) = (1 + rng.below(3), 16 + rng.below(48), 1 + rng.below(4));
+        let hasher = SketchHasher::new(v, w, rng.next_u64());
+        let mut exact = LocalBuilder.build(v, w, d);
+        let mut quant = QuantizedBuilder::new(CellFormat::I8).build(v, w, d);
+
+        for round in 0..10 {
+            let (ids, deltas) = random_batch(rng, 200, 16, d, false);
+            let plan = SketchPlan::build(&hasher, &ids);
+            exact.update(&plan, &deltas, false);
+            quant.update(&plan, &deltas, false);
+            if round % 4 == 3 {
+                exact.scale(0.5);
+                quant.scale(0.5);
+            }
+            let mut est_f32 = vec![0.0f32; plan.k() * d];
+            let mut est_i8 = vec![0.0f32; plan.k() * d];
+            exact.query(&plan, Reduce::Min, &mut est_f32);
+            quant.query(&plan, Reduce::Min, &mut est_i8);
+            for (i, (&e, &q)) in est_f32.iter().zip(&est_i8).enumerate() {
+                if q > e {
+                    return Err(format!(
+                        "round {round} cell {i}: i8 estimate {q} exceeds f32 {e} \
+                         (v={v} w={w} d={d})"
+                    ));
+                }
+                if q < 0.0 {
+                    return Err(format!("round {round} cell {i}: negative CMS estimate {q}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// trainer + checkpoint level
+
+fn quant_spec(cells: &str) -> RunSpec {
+    let cells = if cells.is_empty() { String::new() } else { format!(",cells={cells}") };
+    let text = format!(
+        "preset = tiny\nepochs = 1\nsteps = 8\neval.windows = 2\n\n\
+         [optim]\nemb = \"cs-adam@v=2,w=48,clean=0.5/4{cells}\"\nsm = \"cs-adagrad@w=32{cells}\"\n"
+    );
+    RunSpec::parse(&text).unwrap()
+}
+
+/// `cells=f32` through the full trainer: identical parameters, eval
+/// perplexity, and serve-style checkpoint blobs (which round-trip the
+/// quantized store's `snapshot_full`/`restore_full` overrides).
+#[test]
+fn trainer_cells_f32_is_bitwise_identical_and_checkpoints_match() {
+    let corpus = SyntheticCorpus::generate(512, 60_000, 1.05, 0.6, 31);
+    let (train, valid, _) = corpus.split(0.08, 0.05);
+
+    let mut reference = Session::build_trainer(&quant_spec("")).unwrap();
+    let mut quant = Session::build_trainer(&quant_spec("f32")).unwrap();
+    let ra = reference.train_epoch(train, 8).unwrap();
+    let rb = quant.train_epoch(train, 8).unwrap();
+    assert_eq!(
+        ra.mean_loss.to_bits(),
+        rb.mean_loss.to_bits(),
+        "cells=f32: mean loss diverged from the unquantized store"
+    );
+    assert_eq!(reference.emb.params, quant.emb.params, "emb params diverged");
+    assert_eq!(reference.sm.params, quant.sm.params, "sm params diverged");
+    let pa = reference.eval_ppl(valid, 2).unwrap();
+    let pb = quant.eval_ppl(valid, 2).unwrap();
+    assert_eq!(pa.to_bits(), pb.to_bits(), "valid ppl diverged");
+
+    // checkpoint level: identical blobs, and restoring the quantized
+    // trainer from its own checkpoint continues bitwise-identically
+    let (mut ck_a, mut ck_b) = (Checkpoint::new(), Checkpoint::new());
+    reference.snapshot_state(&mut ck_a).unwrap();
+    quant.snapshot_state(&mut ck_b).unwrap();
+    assert_eq!(ck_a.blobs, ck_b.blobs, "checkpoint blobs diverged");
+
+    let mut resumed = Session::build_trainer(&quant_spec("f32")).unwrap();
+    resumed.restore_state(&ck_b).unwrap();
+    let rc = resumed.train_epoch(train, 8).unwrap();
+    let rq = quant.train_epoch(train, 8).unwrap();
+    assert_eq!(
+        rq.mean_loss.to_bits(),
+        rc.mean_loss.to_bits(),
+        "restored cells=f32 trainer diverged from the live one"
+    );
+    assert_eq!(quant.emb.params, resumed.emb.params, "post-restore emb params diverged");
+}
+
+/// `cells=bf16` genuinely quantizes — the parameter trajectory diverges
+/// from f32 — but still trains to within 1.05× of the f32 run's eval
+/// perplexity. On failure the trajectory report pinpoints where the runs
+/// parted ways.
+#[test]
+fn trainer_cells_bf16_trains_within_tolerance_of_f32() {
+    let corpus = SyntheticCorpus::generate(512, 120_000, 1.05, 0.6, 32);
+    let (train, valid, _) = corpus.split(0.08, 0.05);
+
+    let mut f32_run = Session::build_trainer(&quant_spec("f32")).unwrap();
+    let mut bf16_run = Session::build_trainer(&quant_spec("bf16")).unwrap();
+
+    // five 6-step segments, snapshotting the embedding between segments,
+    // so a tolerance failure reports *when* the trajectories split
+    let (mut traj_f32, mut traj_bf16) = (Vec::new(), Vec::new());
+    for _ in 0..5 {
+        f32_run.train_epoch(train, 6).unwrap();
+        bf16_run.train_epoch(train, 6).unwrap();
+        traj_f32.push(f32_run.emb.params.clone());
+        traj_bf16.push(bf16_run.emb.params.clone());
+    }
+    let report = tolerance::compare_trajectories(&traj_f32, &traj_bf16);
+    assert!(
+        !report.bitwise_identical(),
+        "cells=bf16 must not silently keep f32 cells"
+    );
+
+    let ppl_f32 = f32_run.eval_ppl(valid, 4).unwrap();
+    let ppl_bf16 = bf16_run.eval_ppl(valid, 4).unwrap();
+    tolerance::assert_ppl_within(
+        &format!("cells=bf16 vs f32 ({})", report.describe()),
+        ppl_bf16,
+        ppl_f32,
+        1.05,
+    );
+}
+
+// ---------------------------------------------------------------------------
+// memory
+
+/// The reported footprint is the feature: bf16 ≈ half, i8 ≈ a quarter of
+/// the f32 cells (plus small per-row bookkeeping).
+#[test]
+fn quantized_store_memory_shrinks_as_advertised() {
+    let (v, w, d) = (3, 4096, 64);
+    let f32_bytes = QuantizedBuilder::new(CellFormat::F32).build(v, w, d).memory_bytes();
+    let bf16_bytes = QuantizedBuilder::new(CellFormat::Bf16).build(v, w, d).memory_bytes();
+    let i8_bytes = QuantizedBuilder::new(CellFormat::I8).build(v, w, d).memory_bytes();
+    let local_bytes = LocalBuilder.build(v, w, d).memory_bytes();
+
+    assert!(
+        (bf16_bytes as f64) < 0.65 * f32_bytes as f64,
+        "bf16 {bf16_bytes} vs f32 {f32_bytes}: not ~half"
+    );
+    assert!(
+        (i8_bytes as f64) < 0.45 * f32_bytes as f64,
+        "i8 {i8_bytes} vs f32 {f32_bytes}: not ~quarter"
+    );
+    // cells dominate: the quantized f32 store's bookkeeping overhead over
+    // the plain local store stays modest
+    assert!(
+        (f32_bytes as f64) < 1.25 * local_bytes as f64,
+        "quantized-f32 {f32_bytes} vs local {local_bytes}: bookkeeping too heavy"
+    );
+}
